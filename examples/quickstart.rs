@@ -1,0 +1,78 @@
+//! Quickstart: define → materialize → retrieve, in ~60 lines.
+//!
+//! ```bash
+//! make artifacts && cargo run --release --example quickstart
+//! ```
+
+use std::sync::Arc;
+
+use geofs::config::Config;
+use geofs::coordinator::{FeatureStore, OpenOptions};
+use geofs::governance::rbac::{Grant, Principal, Role};
+use geofs::metadata::assets::{EntitySpec, FeatureSetSpec, SourceSpec};
+use geofs::query::pit::PitConfig;
+use geofs::query::spec::FeatureRef;
+use geofs::source::synthetic::SyntheticSource;
+use geofs::types::time::{Granularity, DAY};
+use geofs::util::init_logging;
+
+fn main() -> anyhow::Result<()> {
+    init_logging();
+
+    // 1. Open a local ("one box", §2.1) deployment and create the store.
+    let fs = FeatureStore::open(Config::default_local(), OpenOptions::default())?;
+    fs.create_store("quickstart-fs")?;
+
+    // 2. Define assets: an entity and a 30-day rolling feature set.
+    fs.create_entity(EntitySpec::new("customer", 1, &["customer_id"]))?;
+    let spec = FeatureSetSpec::rolling(
+        "txn_30d",
+        1,
+        "customer",
+        SourceSpec::synthetic(7),
+        Granularity::daily(),
+        30,
+    );
+    let source = Arc::new(SyntheticSource::new(7, 16).with_rate(0.4));
+    let table = fs.register_feature_set(spec, source, 0)?;
+
+    // 3. Grant ourselves access.
+    let me = Principal("quickstart".into());
+    fs.rbac.grant(Grant {
+        principal: me.clone(),
+        store: "quickstart-fs".into(),
+        role: Role::Admin,
+        workspace: "dev".into(),
+        workspace_region: "local".into(),
+    });
+
+    // 4. Materialize a week of history, one scheduled tick per day.
+    for day in 1..=7 {
+        fs.clock.set(day * DAY);
+        let outcomes = fs.materialize_tick(&table)?;
+        println!("day {day}: {} job(s) materialized", outcomes.len());
+    }
+
+    // 5. Online retrieval (inference path).
+    let hit = fs.get_online(&me, &table, "cust_00003", "local")?;
+    println!(
+        "online cust_00003 → {:?} (latency {}µs)",
+        hit.record.as_ref().map(|r| r.values[0]),
+        hit.latency_us
+    );
+
+    // 6. Offline point-in-time retrieval (training path).
+    let frame = fs.get_training_frame(
+        &me,
+        None,
+        &[("cust_00003".into(), 6 * DAY), ("cust_00004".into(), 5 * DAY)],
+        &[FeatureRef::parse("txn_30d:1:720h_sum")?, FeatureRef::parse("txn_30d:1:720h_cnt")?],
+        PitConfig::default(),
+        "local",
+    )?;
+    for row in &frame.rows {
+        println!("obs@{} → {:?}", row.observation.ts, row.features);
+    }
+    println!("fill rate: {:.2}", frame.fill_rate());
+    Ok(())
+}

@@ -1,0 +1,100 @@
+"""AOT lowering: L2 graphs → HLO text artifacts + manifest.
+
+Emits HLO *text*, not ``lowered.compile().serialize()``: jax ≥ 0.5 writes
+HloModuleProto with 64-bit instruction ids which xla_extension 0.5.1 (the
+version behind the Rust ``xla`` 0.1.6 crate) rejects (``proto.id() <=
+INT_MAX``).  The text parser reassigns ids, so text round-trips cleanly.
+See /opt/xla-example/README.md.
+
+Run from ``python/``:  ``python -m compile.aot --out ../artifacts``
+(the Makefile's ``make artifacts`` target).  Python never runs again
+after this — the Rust binary loads the artifacts at startup.
+"""
+
+from __future__ import annotations
+
+import argparse
+import hashlib
+import json
+import os
+
+import jax
+import jax.numpy as jnp
+from jax._src.lib import xla_client as xc
+
+from .model import AGG_NAMES, build_fn
+
+# (name, E, T, W, entity_block).  Shapes are static in HLO; the Rust
+# runtime pads any workload up to the smallest fitting variant.
+#   small  — unit tests / tiny feature sets
+#   hourly — a week of hourly bins, 24 h (1-day) rolling window
+#   daily  — ~3 months of daily bins, 30-day window (the paper's
+#            30day_transactions_sum churn features)
+# entity_block tuning (EXPERIMENTS.md §Perf L1): the interpret-mode grid
+# loop lowers to an XLA while-loop, so fewer/larger blocks win until the
+# block stops fitting cache. Measured through the Rust PJRT runtime
+# (xla_extension 0.5.1 CPU), daily 256x96 w30: eb=8 → 5.4 ms, eb=16 →
+# 3.3 ms, eb=32 → 2.7 ms (best), eb=64 → 2.9 ms. VMEM check for a real
+# TPU (worst shape, eb=32): (4 in + 5 out) planes × 32 × 125 × 4 B ≈
+# 140 KiB ≪ 16 MiB — the same schedule is VMEM-feasible on hardware.
+SHAPES = [
+    ("small", 16, 32, 4, 16),
+    ("hourly", 64, 168, 24, 32),
+    ("daily", 256, 96, 30, 32),
+]
+VARIANTS = ("dsl", "naive")
+
+
+def to_hlo_text(lowered) -> str:
+    mlir_mod = lowered.compiler_ir("stablehlo")
+    comp = xc._xla.mlir.mlir_module_to_xla_computation(
+        str(mlir_mod), use_tuple_args=False, return_tuple=True)
+    return comp.as_hlo_text()
+
+
+def lower_variant(variant: str, e: int, t: int, w: int, eb: int) -> str:
+    fn = build_fn(variant, window=w, entity_block=eb)
+    spec = jax.ShapeDtypeStruct((e, t + w - 1), jnp.float32)
+    lowered = jax.jit(fn).lower(spec, spec, spec, spec)
+    return to_hlo_text(lowered)
+
+
+def main() -> None:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--out", default="../artifacts",
+                    help="artifact output directory")
+    args = ap.parse_args()
+    os.makedirs(args.out, exist_ok=True)
+
+    entries = []
+    for name, e, t, w, eb in SHAPES:
+        for variant in VARIANTS:
+            text = lower_variant(variant, e, t, w, eb)
+            fname = f"rolling_{name}_{variant}.hlo.txt"
+            path = os.path.join(args.out, fname)
+            with open(path, "w") as f:
+                f.write(text)
+            entries.append({
+                "name": f"{name}_{variant}",
+                "shape": name,
+                "variant": variant,
+                "file": fname,
+                "entities": e,
+                "time_bins": t,
+                "window": w,
+                "entity_block": eb,
+                "inputs": ["bin_sum", "bin_cnt", "bin_min", "bin_max"],
+                "outputs": list(AGG_NAMES),
+                "sha256": hashlib.sha256(text.encode()).hexdigest(),
+            })
+            print(f"wrote {path} ({len(text)} chars)")
+
+    manifest = {"format": 1, "dtype": "f32", "artifacts": entries}
+    mpath = os.path.join(args.out, "manifest.json")
+    with open(mpath, "w") as f:
+        json.dump(manifest, f, indent=2)
+    print(f"wrote {mpath} ({len(entries)} artifacts)")
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,46 @@
+"""Pure-numpy oracle for the rolling-window aggregation kernel.
+
+Deliberately written as the most literal possible transcription of the
+spec — an explicit python loop over output bins, each recomputing its
+window from scratch — so that any cleverness in the Pallas kernel or the
+L2 variants is checked against something with no shared structure.
+"""
+
+from __future__ import annotations
+
+import numpy as np
+
+
+def rolling_aggregate_ref(bin_sum, bin_cnt, bin_min, bin_max, *, window: int):
+    """Reference rolling (sum, cnt, mean, min, max).
+
+    Inputs: float arrays [E, T + W - 1] (left halo attached).
+    Returns a 5-tuple of float32 ndarrays [E, T].
+    """
+    bin_sum = np.asarray(bin_sum, dtype=np.float64)
+    bin_cnt = np.asarray(bin_cnt, dtype=np.float64)
+    bin_min = np.asarray(bin_min, dtype=np.float64)
+    bin_max = np.asarray(bin_max, dtype=np.float64)
+    e, t_pad = bin_sum.shape
+    out_t = t_pad - (window - 1)
+    assert out_t > 0
+
+    osum = np.zeros((e, out_t), dtype=np.float64)
+    ocnt = np.zeros((e, out_t), dtype=np.float64)
+    omean = np.zeros((e, out_t), dtype=np.float64)
+    omin = np.zeros((e, out_t), dtype=np.float64)
+    omax = np.zeros((e, out_t), dtype=np.float64)
+    for t in range(out_t):
+        w_sum = bin_sum[:, t:t + window]
+        w_cnt = bin_cnt[:, t:t + window]
+        w_min = bin_min[:, t:t + window]
+        w_max = bin_max[:, t:t + window]
+        osum[:, t] = w_sum.sum(axis=1)
+        ocnt[:, t] = w_cnt.sum(axis=1)
+        c = ocnt[:, t]
+        omean[:, t] = np.where(c > 0, osum[:, t] / np.maximum(c, 1.0), 0.0)
+        omin[:, t] = w_min.min(axis=1)
+        omax[:, t] = w_max.max(axis=1)
+    return (osum.astype(np.float32), ocnt.astype(np.float32),
+            omean.astype(np.float32), omin.astype(np.float32),
+            omax.astype(np.float32))

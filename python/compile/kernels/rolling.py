@@ -1,0 +1,100 @@
+"""Layer-1 Pallas kernel: trailing rolling-window aggregation.
+
+The compute hot-spot of the feature store (paper §3.1.6: "a common case is
+rolling window aggregation"; §1's motivating features are
+``30day_transactions_sum`` etc.).
+
+Contract
+--------
+Inputs are *per-bin partial aggregates* for ``E`` entities over
+``T + W - 1`` time bins.  The leading ``W - 1`` bins are the halo — the
+paper's ``source_lookback`` from Algorithm 1 — so that output bin ``t``
+aggregates input bins ``[t, t + W)`` on the padded axis, i.e. the trailing
+window ending at output bin ``t``.
+
+    bin_sum : f32[E, T + W - 1]   sum of event values in the bin
+    bin_cnt : f32[E, T + W - 1]   number of events in the bin
+    bin_min : f32[E, T + W - 1]   min event value (+inf when empty)
+    bin_max : f32[E, T + W - 1]   max event value (-inf when empty)
+
+Outputs, each ``f32[E, T]``:
+
+    roll_sum, roll_cnt, roll_mean, roll_min, roll_max
+
+Empty-window semantics: ``sum = 0``, ``cnt = 0``, ``mean = 0`` (masked,
+not NaN), ``min = +inf``, ``max = -inf``.  The Rust side turns
+``cnt == 0`` into "no feature value" when writing records.
+
+TPU shaping
+-----------
+Grid over entity blocks; each invocation keeps one ``[BE, T + W - 1]``
+halo slab per input in VMEM and emits ``[BE, T]`` slices.  The rolling
+reduction is a W-step shifted accumulation over static slices — pure VPU
+element-wise work, fully vectorized along T.  ``interpret=True`` is
+required on CPU PJRT (real-TPU lowering emits a Mosaic custom-call the CPU
+plugin cannot execute); the block structure is what matters for TPU.
+"""
+
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+
+def _rolling_kernel(sum_ref, cnt_ref, min_ref, max_ref,
+                    osum_ref, ocnt_ref, omean_ref, omin_ref, omax_ref,
+                    *, window: int, out_t: int):
+    """One entity block: shifted-accumulation rolling reduce.
+
+    All refs hold f32.  Input refs are [BE, T + W - 1]; output refs are
+    [BE, T].  ``window`` and ``out_t`` are compile-time constants so every
+    slice below is static — the whole body is W fused element-wise ops.
+    """
+    s = sum_ref[:, 0:out_t]
+    c = cnt_ref[:, 0:out_t]
+    mn = min_ref[:, 0:out_t]
+    mx = max_ref[:, 0:out_t]
+    for w in range(1, window):
+        s = s + sum_ref[:, w:w + out_t]
+        c = c + cnt_ref[:, w:w + out_t]
+        mn = jnp.minimum(mn, min_ref[:, w:w + out_t])
+        mx = jnp.maximum(mx, max_ref[:, w:w + out_t])
+    osum_ref[...] = s
+    ocnt_ref[...] = c
+    # Masked mean: 0 where the window is empty (cnt == 0).
+    omean_ref[...] = jnp.where(c > 0, s / jnp.maximum(c, 1.0), 0.0)
+    omin_ref[...] = mn
+    omax_ref[...] = mx
+
+
+def rolling_aggregate(bin_sum, bin_cnt, bin_min, bin_max, *,
+                      window: int, entity_block: int = 8,
+                      interpret: bool = True):
+    """Rolling (sum, cnt, mean, min, max) over trailing ``window`` bins.
+
+    Inputs are f32[E, T + W - 1] with the left halo already attached
+    (Algorithm 1's source lookback).  Returns a 5-tuple of f32[E, T].
+    """
+    e, t_pad = bin_sum.shape
+    out_t = t_pad - (window - 1)
+    if out_t <= 0:
+        raise ValueError(
+            f"padded time axis {t_pad} shorter than window halo {window - 1}")
+    if e % entity_block != 0:
+        raise ValueError(f"E={e} not divisible by entity_block={entity_block}")
+
+    kernel = functools.partial(_rolling_kernel, window=window, out_t=out_t)
+    in_spec = pl.BlockSpec((entity_block, t_pad), lambda i: (i, 0))
+    out_spec = pl.BlockSpec((entity_block, out_t), lambda i: (i, 0))
+    out_shape = jax.ShapeDtypeStruct((e, out_t), jnp.float32)
+    return pl.pallas_call(
+        kernel,
+        grid=(e // entity_block,),
+        in_specs=[in_spec] * 4,
+        out_specs=[out_spec] * 5,
+        out_shape=[out_shape] * 5,
+        interpret=interpret,
+    )(bin_sum, bin_cnt, bin_min, bin_max)

@@ -1,0 +1,78 @@
+"""Layer-2 JAX graph: the feature-set transformation compute.
+
+The paper's feature calculation (Algorithm 1) applies a transformation to
+the source window ``[feature_window_start - source_lookback,
+feature_window_end)`` and trims to the feature window.  The Rust
+coordinator does the timestamp arithmetic, event binning, and trimming;
+this module is the dense compute in the middle: per-bin partial
+aggregates in, rolling feature columns out.
+
+Two plan variants are lowered for every shape (paper §3.1.6):
+
+* ``dsl``   — the optimized plan: one fused pass via the Pallas kernel
+              (kernels/rolling.py).  This is what the feature store emits
+              when the transformation is declared in the DSL.
+* ``naive`` — the UDF-as-black-box baseline: per-output-bin recompute
+              with ``lax.map`` + ``dynamic_slice``, the plan shape you
+              get when the engine cannot see inside the transformation.
+
+Both return the same 5-tuple ``(sum, cnt, mean, min, max)`` of
+``f32[E, T]`` and are oracle-checked against ``kernels/ref.py``.
+"""
+
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+
+from .kernels.rolling import rolling_aggregate
+
+AGG_NAMES = ("sum", "cnt", "mean", "min", "max")
+
+
+def feature_graph_dsl(bin_sum, bin_cnt, bin_min, bin_max, *, window: int,
+                      entity_block: int = 8):
+    """Optimized plan: cast to f32, run the Pallas rolling kernel."""
+    f32 = functools.partial(jnp.asarray, dtype=jnp.float32)
+    return rolling_aggregate(
+        f32(bin_sum), f32(bin_cnt), f32(bin_min), f32(bin_max),
+        window=window, entity_block=entity_block)
+
+
+def feature_graph_naive(bin_sum, bin_cnt, bin_min, bin_max, *, window: int):
+    """Black-box-UDF baseline: recompute every window from scratch.
+
+    ``lax.map`` over output bins, each doing a ``dynamic_slice`` gather +
+    full reduce — O(T·W) unfusable-by-construction work, mirroring what a
+    per-row UDF costs the engine.
+    """
+    bin_sum = jnp.asarray(bin_sum, jnp.float32)
+    bin_cnt = jnp.asarray(bin_cnt, jnp.float32)
+    bin_min = jnp.asarray(bin_min, jnp.float32)
+    bin_max = jnp.asarray(bin_max, jnp.float32)
+    e, t_pad = bin_sum.shape
+    out_t = t_pad - (window - 1)
+
+    def one_bin(t):
+        s = jax.lax.dynamic_slice(bin_sum, (0, t), (e, window)).sum(axis=1)
+        c = jax.lax.dynamic_slice(bin_cnt, (0, t), (e, window)).sum(axis=1)
+        mn = jax.lax.dynamic_slice(bin_min, (0, t), (e, window)).min(axis=1)
+        mx = jax.lax.dynamic_slice(bin_max, (0, t), (e, window)).max(axis=1)
+        mean = jnp.where(c > 0, s / jnp.maximum(c, 1.0), 0.0)
+        return s, c, mean, mn, mx
+
+    cols = jax.lax.map(one_bin, jnp.arange(out_t))
+    # lax.map stacks along axis 0 → [T, E]; transpose to [E, T].
+    return tuple(col.T for col in cols)
+
+
+def build_fn(variant: str, window: int, entity_block: int = 8):
+    """Return the jit-able graph fn for a variant ('dsl' | 'naive')."""
+    if variant == "dsl":
+        return functools.partial(feature_graph_dsl, window=window,
+                                 entity_block=entity_block)
+    if variant == "naive":
+        return functools.partial(feature_graph_naive, window=window)
+    raise ValueError(f"unknown variant {variant!r}")

@@ -1,0 +1,123 @@
+"""L1 correctness: Pallas rolling kernel vs the pure-numpy oracle.
+
+Hypothesis sweeps shapes, window sizes, dtypes, and data regimes
+(including empty bins carrying the +/-inf sentinels) — the CORE
+correctness signal for the compute hot path.
+"""
+
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+
+import jax.numpy as jnp
+
+from compile.kernels.ref import rolling_aggregate_ref
+from compile.kernels.rolling import rolling_aggregate
+
+INF = np.float32(np.inf)
+
+
+def make_bins(rng, e, t_pad, density=0.7, dtype=np.float32):
+    """Random per-bin partials with some empty bins (cnt=0, ±inf sentinels)."""
+    occupied = rng.random((e, t_pad)) < density
+    cnt = np.where(occupied, rng.integers(1, 5, (e, t_pad)), 0).astype(dtype)
+    vals = rng.normal(0.0, 10.0, (e, t_pad)).astype(dtype)
+    bsum = np.where(occupied, vals * cnt, 0).astype(dtype)
+    bmin = np.where(occupied, vals - 1.0, INF).astype(dtype)
+    bmax = np.where(occupied, vals + 1.0, -INF).astype(dtype)
+    return bsum, cnt, bmin, bmax
+
+
+def check_against_ref(bsum, bcnt, bmin, bmax, window, entity_block,
+                      rtol=1e-5, atol=1e-5):
+    got = rolling_aggregate(
+        jnp.asarray(bsum, jnp.float32), jnp.asarray(bcnt, jnp.float32),
+        jnp.asarray(bmin, jnp.float32), jnp.asarray(bmax, jnp.float32),
+        window=window, entity_block=entity_block)
+    want = rolling_aggregate_ref(bsum, bcnt, bmin, bmax, window=window)
+    for name, g, w in zip(("sum", "cnt", "mean", "min", "max"), got, want):
+        np.testing.assert_allclose(
+            np.asarray(g), w, rtol=rtol, atol=atol,
+            err_msg=f"agg {name} mismatch (window={window})")
+
+
+@given(
+    e_blocks=st.integers(1, 4),
+    entity_block=st.sampled_from([1, 2, 8]),
+    out_t=st.integers(1, 40),
+    window=st.integers(1, 16),
+    density=st.floats(0.0, 1.0),
+    seed=st.integers(0, 2**32 - 1),
+)
+@settings(max_examples=40, deadline=None)
+def test_kernel_matches_ref_hypothesis(e_blocks, entity_block, out_t,
+                                       window, density, seed):
+    rng = np.random.default_rng(seed)
+    e = e_blocks * entity_block
+    t_pad = out_t + window - 1
+    bsum, bcnt, bmin, bmax = make_bins(rng, e, t_pad, density)
+    check_against_ref(bsum, bcnt, bmin, bmax, window, entity_block)
+
+
+@pytest.mark.parametrize("dtype", [np.float32, jnp.bfloat16])
+def test_kernel_dtypes(dtype):
+    rng = np.random.default_rng(7)
+    bsum, bcnt, bmin, bmax = make_bins(rng, 16, 24 + 7, dtype=np.float32)
+    # Cast inputs through the target dtype; tolerance loosened for bf16.
+    arrs = [jnp.asarray(a, dtype).astype(jnp.float32)
+            for a in (bsum, bcnt, bmin, bmax)]
+    tol = 1e-5 if dtype == np.float32 else 0.15
+    check_against_ref(*[np.asarray(a) for a in arrs], window=8,
+                      entity_block=8, rtol=tol, atol=tol)
+
+
+def test_window_one_is_identity():
+    rng = np.random.default_rng(3)
+    bsum, bcnt, bmin, bmax = make_bins(rng, 8, 16)
+    out = rolling_aggregate(
+        *(jnp.asarray(a, jnp.float32) for a in (bsum, bcnt, bmin, bmax)),
+        window=1, entity_block=8)
+    np.testing.assert_allclose(np.asarray(out[0]), bsum, rtol=1e-6)
+    np.testing.assert_allclose(np.asarray(out[1]), bcnt, rtol=1e-6)
+
+
+def test_all_empty_bins():
+    e, out_t, w = 8, 10, 4
+    t_pad = out_t + w - 1
+    z = np.zeros((e, t_pad), np.float32)
+    out = rolling_aggregate(
+        jnp.asarray(z), jnp.asarray(z),
+        jnp.full((e, t_pad), INF), jnp.full((e, t_pad), -INF),
+        window=w, entity_block=8)
+    assert np.all(np.asarray(out[0]) == 0)          # sum
+    assert np.all(np.asarray(out[1]) == 0)          # cnt
+    assert np.all(np.asarray(out[2]) == 0)          # mean masked to 0
+    assert np.all(np.isposinf(np.asarray(out[3])))  # min = +inf
+    assert np.all(np.isneginf(np.asarray(out[4])))  # max = -inf
+
+
+def test_rejects_bad_shapes():
+    z = jnp.zeros((8, 4), jnp.float32)
+    with pytest.raises(ValueError):
+        rolling_aggregate(z, z, z, z, window=8, entity_block=8)
+    z2 = jnp.zeros((6, 16), jnp.float32)
+    with pytest.raises(ValueError):
+        rolling_aggregate(z2, z2, z2, z2, window=4, entity_block=8)
+
+
+def test_halo_is_trailing_window():
+    """Output bin t must aggregate padded bins [t, t+W) — i.e. the halo is
+    *history*, and the last output bin sees the last input bin."""
+    e, out_t, w = 8, 6, 3
+    t_pad = out_t + w - 1
+    bsum = np.zeros((e, t_pad), np.float32)
+    bcnt = np.zeros((e, t_pad), np.float32)
+    bsum[:, -1] = 5.0   # single event in the newest bin
+    bcnt[:, -1] = 1.0
+    out = rolling_aggregate(
+        jnp.asarray(bsum), jnp.asarray(bcnt),
+        jnp.full((e, t_pad), INF), jnp.full((e, t_pad), -INF),
+        window=w, entity_block=8)
+    s = np.asarray(out[0])
+    assert np.all(s[:, -1] == 5.0)          # newest window includes it
+    assert np.all(s[:, :-1] == 0.0)         # earlier windows do not

@@ -1,0 +1,99 @@
+//! Experiment E5 (§3.1.6 "Optimized query execution"): the DSL-optimized
+//! plan vs the black-box baselines.
+//!
+//! Plans compared on identical binned inputs:
+//! * `dsl`    — AOT artifact of the fused Pallas one-pass program
+//! * `naive`  — AOT artifact of the per-bin `lax.map` + dynamic-slice
+//!              recompute plan (what a black-box UDF costs inside XLA)
+//! * `rust`   — the in-process Rust UDF recompute (engine bypassed)
+//!
+//! Methodology: host CPU contention drifts over a bench run by enough to
+//! flip verdicts if plans are timed in separate blocks, so the three
+//! plans are measured **interleaved** (round-robin, one execution each
+//! per round) — drift then affects all plans equally and the ratios are
+//! stable even when absolute numbers move.
+//!
+//! Expected shape (paper's claim): dsl beats naive-HLO at real sizes;
+//! the pure-Rust UDF wins only where PJRT dispatch overhead dominates —
+//! the crossover is the interesting row.
+
+use std::time::Instant;
+
+use geofs::benchkit::{fmt_ns, fmt_rate, Table};
+use geofs::dsl::udf_rolling_recompute;
+use geofs::runtime::{BinPlanes, Engine, Variant};
+use geofs::util::hist::Histogram;
+use geofs::util::rng::Rng;
+
+fn planes(seed: u64, e: usize, t_out: usize, w: usize) -> BinPlanes {
+    let mut rng = Rng::new(seed);
+    let mut b = BinPlanes::empty(e, t_out + w - 1);
+    for ei in 0..e {
+        for bi in 0..t_out + w - 1 {
+            if rng.bool(0.7) {
+                b.add_event(ei, bi, rng.f32() * 10.0);
+            }
+        }
+    }
+    b
+}
+
+fn main() {
+    let engine = Engine::load("artifacts").expect("run `make artifacts` first");
+    engine.warmup().expect("artifact warmup");
+    let rounds: usize = if std::env::var("GEOFS_BENCH_FAST").is_ok() { 30 } else { 150 };
+
+    let mut table = Table::new(
+        "E5: DSL-optimized plan vs black-box UDF plans (rolling aggregation, interleaved)",
+        &["workload", "plan", "mean", "p50", "cells/s", "vs dsl"],
+    );
+
+    // (label, E, T, W) — windows must exist in the artifact set.
+    let cases =
+        [("tiny 16x32 w4", 16, 32, 4), ("hourly 64x168 w24", 64, 168, 24), ("daily 256x96 w30", 256, 96, 30)];
+    for (label, e, t, w) in cases {
+        let p = planes(7, e, t, w);
+        let cells = (e * t) as f64;
+
+        // Warmup each plan.
+        for _ in 0..3 {
+            std::hint::black_box(engine.rolling(Variant::Dsl, &p, w).unwrap());
+            std::hint::black_box(engine.rolling(Variant::Naive, &p, w).unwrap());
+            std::hint::black_box(udf_rolling_recompute(&p, w));
+        }
+        // Interleaved measurement.
+        let mut h = [Histogram::new(), Histogram::new(), Histogram::new()];
+        for _ in 0..rounds {
+            let t0 = Instant::now();
+            std::hint::black_box(engine.rolling(Variant::Dsl, &p, w).unwrap());
+            h[0].record(t0.elapsed().as_nanos() as u64);
+            let t0 = Instant::now();
+            std::hint::black_box(engine.rolling(Variant::Naive, &p, w).unwrap());
+            h[1].record(t0.elapsed().as_nanos() as u64);
+            let t0 = Instant::now();
+            std::hint::black_box(udf_rolling_recompute(&p, w));
+            h[2].record(t0.elapsed().as_nanos() as u64);
+        }
+        // Medians are the robust statistic under drift spikes.
+        let dsl_p50 = h[0].quantile(0.5) as f64;
+        for (name, hist) in [("dsl", &h[0]), ("naive", &h[1]), ("rust-udf", &h[2])] {
+            let p50 = hist.quantile(0.5) as f64;
+            table.row(&[
+                label.to_string(),
+                name.to_string(),
+                fmt_ns(hist.mean()),
+                fmt_ns(p50),
+                fmt_rate(cells * 1e9 / p50),
+                format!("{:.2}x", p50 / dsl_p50),
+            ]);
+        }
+    }
+    table.print();
+
+    println!(
+        "\nShape check: dsl ≤ naive on p50 at every real workload; rust-udf is\n\
+         competitive only when E·T is small (PJRT dispatch overhead dominates) —\n\
+         the paper's rationale for optimizing DSL-declared transformations while\n\
+         treating UDFs as black boxes."
+    );
+}

@@ -1,0 +1,89 @@
+//! Experiment E6 (§4.1.2, Fig 4): cross-region access vs geo-replication
+//! — the latency ↔ staleness/compliance trade, per consumer region.
+
+use std::sync::Arc;
+
+use geofs::benchkit::{Bencher, Table};
+use geofs::geo::access::CrossRegionAccess;
+use geofs::geo::replication::GeoReplicator;
+use geofs::geo::topology::GeoTopology;
+use geofs::online_store::OnlineStore;
+use geofs::types::FeatureRecord;
+use geofs::util::rng::Rng;
+
+fn main() {
+    let bench = Bencher::new();
+    let topology = Arc::new(GeoTopology::default_four_region());
+    let entities = 20_000u64;
+
+    let home = Arc::new(OnlineStore::new(16));
+    let recs: Vec<FeatureRecord> =
+        (0..entities).map(|i| FeatureRecord::new(i, 1_000, 2_000, vec![i as f32])).collect();
+    home.merge("t", &recs, 2_000);
+
+    // Replicas in every non-home region, 30 s lag, fully caught up.
+    let lag = 30;
+    let replicator = Arc::new(GeoReplicator::new(
+        ["westus", "westeurope", "southeastasia"]
+            .iter()
+            .map(|r| (r.to_string(), Arc::new(OnlineStore::new(16)), lag))
+            .collect(),
+    ));
+    replicator.enqueue("t", &recs, 2_000);
+    replicator.pump(2_000 + lag);
+
+    let cross_only = CrossRegionAccess {
+        topology: topology.clone(),
+        home_region: "eastus".into(),
+        home_store: home.clone(),
+        replicator: None,
+        geo_fenced: true, // compliance: data stays home
+    };
+    let with_replicas = CrossRegionAccess {
+        topology: topology.clone(),
+        home_region: "eastus".into(),
+        home_store: home,
+        replicator: Some(replicator.clone()),
+        geo_fenced: false,
+    };
+
+    let mut table = Table::new(
+        "E6: per-consumer-region lookup — cross-region access vs geo-replication",
+        &["consumer", "mechanism", "sim latency p50", "staleness bound", "allowed if geo-fenced"],
+    );
+    for region in ["eastus", "westus", "westeurope", "southeastasia"] {
+        for (label, access) in [("cross-region", &cross_only), ("replica", &with_replicas)] {
+            let mut rng = Rng::new(4);
+            let mut latencies: Vec<u64> = Vec::new();
+            let m = bench.run(&format!("{region}/{label}"), 1.0, || {
+                let out = access.lookup(region, "t", rng.below(entities), 5_000).unwrap();
+                latencies.push(out.latency_us);
+                out
+            });
+            let _ = m;
+            latencies.sort();
+            let p50 = latencies[latencies.len() / 2];
+            let mech = access.route(region);
+            table.row(&[
+                region.to_string(),
+                format!("{mech:?}"),
+                format!("{:.1}ms", p50 as f64 / 1_000.0),
+                if mech == geofs::geo::access::AccessMechanism::Replica {
+                    format!("≤{lag}s")
+                } else {
+                    "0s".into()
+                },
+                if label == "cross-region" { "yes".into() } else { "no (data leaves region)".into() },
+            ]);
+        }
+    }
+    table.print();
+
+    println!(
+        "\nShape check (paper §4.1.2): replication wins tail latency everywhere\n\
+         outside the home region (local ~0.5ms vs 60–220ms WAN RTT) but is\n\
+         staleness-bounded and barred for geo-fenced stores; cross-region access\n\
+         keeps staleness 0 and compliance, at WAN cost — matching why AzureML\n\
+         shipped access control first and kept replication on the roadmap."
+    );
+}

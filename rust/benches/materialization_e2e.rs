@@ -1,0 +1,89 @@
+//! Experiment E10 (Alg 1, §4.2–§4.3): end-to-end materialization
+//! throughput through the full stack — source read → binning → AOT
+//! compute → dual-store merge — incremental vs one-shot backfill.
+
+use geofs::benchkit::{fmt_rate, Bencher, Table};
+use geofs::config::Config;
+use geofs::coordinator::{FeatureStore, OpenOptions};
+use geofs::sim::{ChurnWorkload, ChurnWorkloadConfig};
+use geofs::types::time::DAY;
+use geofs::types::FeatureWindow;
+
+fn open(customers: usize) -> (std::sync::Arc<FeatureStore>, ChurnWorkload) {
+    let fs = FeatureStore::open(Config::default_local(), OpenOptions::default())
+        .expect("run `make artifacts` first");
+    let w = ChurnWorkload::install(
+        &fs,
+        ChurnWorkloadConfig { customers, days: 14, seed: 11, ..Default::default() },
+    )
+    .unwrap();
+    (fs, w)
+}
+
+fn main() {
+    let bench = Bencher::new();
+
+    let mut table = Table::new(
+        "E10: end-to-end materialization (source→bin→AOT compute→dual merge)",
+        &["customers", "mode", "mean/run", "records", "records/s"],
+    );
+    for customers in [32usize, 128, 512] {
+        // Incremental: 14 daily ticks.
+        let mut recs = 0u64;
+        let mut runs = 0u64;
+        let m_inc = bench.run("incremental", 1.0, || {
+            let (fs, w) = open(customers);
+            let mut n = 0u64;
+            for day in 1..=14 {
+                fs.clock.set(day * DAY);
+                n += fs
+                    .materialize_tick(&w.txn_table)
+                    .unwrap()
+                    .iter()
+                    .map(|o| o.records)
+                    .sum::<u64>();
+            }
+            recs += n;
+            runs += 1;
+        });
+        let per_run = recs / runs.max(1);
+        table.row(&[
+            customers.to_string(),
+            "incremental (14 ticks)".into(),
+            geofs::benchkit::fmt_ns(m_inc.mean_ns()),
+            per_run.to_string(),
+            fmt_rate(per_run as f64 * 1e9 / m_inc.mean_ns()),
+        ]);
+
+        // Backfill: one request over the same span.
+        let mut recs = 0u64;
+        let mut runs = 0u64;
+        let m_bf = bench.run("backfill", 1.0, || {
+            let (fs, w) = open(customers);
+            fs.clock.set(14 * DAY);
+            let n = fs
+                .backfill(&w.txn_table, FeatureWindow::new(0, 14 * DAY))
+                .unwrap()
+                .iter()
+                .map(|o| o.records)
+                .sum::<u64>();
+            recs += n;
+            runs += 1;
+        });
+        let per_run = recs / runs.max(1);
+        table.row(&[
+            customers.to_string(),
+            "one-shot backfill".into(),
+            geofs::benchkit::fmt_ns(m_bf.mean_ns()),
+            per_run.to_string(),
+            fmt_rate(per_run as f64 * 1e9 / m_bf.mean_ns()),
+        ]);
+    }
+    table.print();
+
+    println!(
+        "\nShape check: backfill ≥ incremental throughput (fewer, larger jobs —\n\
+         §3.1.1's coalescing rationale); both scale with entity count until the\n\
+         artifact batch shape saturates."
+    );
+}

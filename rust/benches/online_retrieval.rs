@@ -1,0 +1,88 @@
+//! Experiment E9 (§2.1 SLA): online retrieval latency/throughput —
+//! point lookups across shard counts, and micro-batched lookups.
+
+use std::sync::Arc;
+
+use geofs::benchkit::{Bencher, Table};
+use geofs::online_store::OnlineStore;
+use geofs::serving::batcher::{BatcherConfig, MicroBatcher};
+use geofs::types::FeatureRecord;
+use geofs::util::rng::Rng;
+
+fn store_with(shards: usize, entities: u64) -> Arc<OnlineStore> {
+    let s = Arc::new(OnlineStore::new(shards));
+    let recs: Vec<FeatureRecord> = (0..entities)
+        .map(|i| FeatureRecord::new(i, 1_000, 2_000, vec![i as f32; 5]))
+        .collect();
+    s.merge("t", &recs, 2_000);
+    s
+}
+
+fn main() {
+    let bench = Bencher::new();
+    let entities = 100_000u64;
+
+    let mut t1 = Table::new(
+        "E9a: online point lookup vs shard count (100k entities)",
+        Table::LATENCY_HEADERS,
+    );
+    for shards in [1usize, 4, 16, 64] {
+        let store = store_with(shards, entities);
+        let mut rng = Rng::new(1);
+        let m = bench.run(&format!("{shards} shard(s)"), 1.0, || {
+            store.get("t", rng.below(entities), 3_000)
+        });
+        t1.latency_row(&m);
+    }
+    t1.print();
+
+    let mut t2 = Table::new(
+        "E9b: concurrent readers (16 shards, 8 threads hammering)",
+        Table::LATENCY_HEADERS,
+    );
+    let store = store_with(16, entities);
+    // Background load.
+    let stop = Arc::new(std::sync::atomic::AtomicBool::new(false));
+    let handles: Vec<_> = (0..8)
+        .map(|t| {
+            let store = store.clone();
+            let stop = stop.clone();
+            std::thread::spawn(move || {
+                let mut rng = Rng::new(t);
+                while !stop.load(std::sync::atomic::Ordering::Relaxed) {
+                    std::hint::black_box(store.get("t", rng.below(entities), 3_000));
+                }
+            })
+        })
+        .collect();
+    let mut rng = Rng::new(2);
+    let m = bench.run("under load", 1.0, || store.get("t", rng.below(entities), 3_000));
+    stop.store(true, std::sync::atomic::Ordering::Relaxed);
+    for h in handles {
+        h.join().unwrap();
+    }
+    t2.latency_row(&m);
+    t2.print();
+
+    let mut t3 = Table::new(
+        "E9c: micro-batched lookups (batch amortization)",
+        &["batch size", "mean/flush", "lookups/s"],
+    );
+    for batch in [1usize, 8, 64, 256] {
+        let store = store_with(16, entities);
+        let b = MicroBatcher::new(BatcherConfig { max_batch: batch, max_wait_us: 0 });
+        let mut rng = Rng::new(3);
+        let m = bench.run(&format!("batch={batch}"), batch as f64, || {
+            for _ in 0..batch {
+                b.push("t", rng.below(entities), 0);
+            }
+            b.flush(&store, 3_000, 1)
+        });
+        t3.row(&[
+            format!("{batch}"),
+            geofs::benchkit::fmt_ns(m.mean_ns()),
+            geofs::benchkit::fmt_rate(m.throughput()),
+        ]);
+    }
+    t3.print();
+}

@@ -1,0 +1,100 @@
+//! Experiment E4 (§4.4 + §2.1): point-in-time join throughput — the
+//! indexed PIT engine vs a naive per-observation full scan.
+
+use std::collections::HashMap;
+use std::sync::Arc;
+
+use geofs::benchkit::{fmt_rate, Bencher, Table};
+use geofs::metadata::assets::{FeatureSetSpec, SourceSpec};
+use geofs::offline_store::OfflineStore;
+use geofs::query::offline::{naive_training_frame, OfflineQueryEngine};
+use geofs::query::pit::{Observation, PitConfig};
+use geofs::query::spec::FeatureRef;
+use geofs::types::time::{Granularity, DAY};
+use geofs::types::FeatureRecord;
+use geofs::util::rng::Rng;
+
+fn setup(entities: u64, days: i64) -> (Arc<OfflineStore>, HashMap<String, FeatureSetSpec>) {
+    let store = Arc::new(OfflineStore::new());
+    let mut rows = Vec::new();
+    for d in 1..=days {
+        for e in 0..entities {
+            rows.push(FeatureRecord::new(
+                e,
+                d * DAY,
+                d * DAY + 600,
+                vec![d as f32, e as f32, 1.0, 0.0, 2.0],
+            ));
+        }
+    }
+    store.merge("txn:1", &rows);
+    let mut specs = HashMap::new();
+    specs.insert(
+        "txn".to_string(),
+        FeatureSetSpec::rolling("txn", 1, "customer", SourceSpec::synthetic(0), Granularity::daily(), 30),
+    );
+    (store, specs)
+}
+
+fn observations(rng: &mut Rng, n: usize, entities: u64, days: i64) -> Vec<Observation> {
+    (0..n)
+        .map(|_| Observation { entity: rng.below(entities + 2), ts: rng.range(DAY, days * DAY) })
+        .collect()
+}
+
+fn main() {
+    let bench = Bencher::new();
+    let features = vec![
+        FeatureRef::parse("txn:1:720h_sum").unwrap(),
+        FeatureRef::parse("txn:1:720h_cnt").unwrap(),
+    ];
+
+    let mut table = Table::new(
+        "E4: PIT training-frame throughput — indexed engine vs naive full-scan",
+        &["store rows", "observations", "engine", "mean", "obs rows/s", "speedup"],
+    );
+    for (entities, days, n_obs) in [(200u64, 30i64, 1_000usize), (1_000, 60, 2_000), (2_000, 90, 4_000)] {
+        let (store, specs) = setup(entities, days);
+        let engine = OfflineQueryEngine::new(store.clone());
+        let mut rng = Rng::new(9);
+        let obs = observations(&mut rng, n_obs, entities, days);
+        let rows = store.row_count("txn:1");
+
+        let m_fast = bench.run("indexed", n_obs as f64, || {
+            engine
+                .get_training_frame(&obs, &features, &specs, PitConfig::default())
+                .unwrap()
+        });
+        // Naive join is O(obs × rows); keep its case small enough to finish.
+        let naive_obs = &obs[..(n_obs / 20).max(10)];
+        let m_naive = bench.run("naive", naive_obs.len() as f64, || {
+            naive_training_frame(&store, naive_obs, &features, &specs, PitConfig::default())
+                .unwrap()
+        });
+
+        let speedup = m_naive.mean_ns() / naive_obs.len() as f64
+            / (m_fast.mean_ns() / n_obs as f64);
+        table.row(&[
+            rows.to_string(),
+            n_obs.to_string(),
+            "indexed".into(),
+            geofs::benchkit::fmt_ns(m_fast.mean_ns()),
+            fmt_rate(m_fast.throughput()),
+            String::new(),
+        ]);
+        table.row(&[
+            rows.to_string(),
+            naive_obs.len().to_string(),
+            "naive-scan".into(),
+            geofs::benchkit::fmt_ns(m_naive.mean_ns()),
+            fmt_rate(m_naive.throughput()),
+            format!("{speedup:.0}x slower/row"),
+        ]);
+    }
+    table.print();
+    println!(
+        "\nShape check: the indexed engine scales near-linearly in observations;\n\
+         the naive join degrades with store size — the reason §3.1.6/§4.4 put a\n\
+         dedicated query subsystem (not ad-hoc joins) in front of the offline store."
+    );
+}

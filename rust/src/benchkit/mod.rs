@@ -1,0 +1,221 @@
+//! Bench harness (criterion is not available offline).
+//!
+//! Each `rust/benches/*.rs` is a `harness = false` binary that uses this
+//! module: warmup, timed iterations, percentile/throughput reporting as
+//! aligned tables — one table per paper figure/claim (DESIGN.md §3).
+//!
+//! `cargo bench` runs all of them; `GEOFS_BENCH_FAST=1` shrinks budgets
+//! for smoke runs.
+
+use std::time::{Duration, Instant};
+
+use crate::util::hist::Histogram;
+
+/// Runs a closure repeatedly and collects per-iteration latency.
+pub struct Bencher {
+    warmup: Duration,
+    budget: Duration,
+    min_iters: u64,
+    max_iters: u64,
+}
+
+impl Default for Bencher {
+    fn default() -> Self {
+        let fast = std::env::var("GEOFS_BENCH_FAST").is_ok();
+        if fast {
+            Bencher {
+                warmup: Duration::from_millis(50),
+                budget: Duration::from_millis(200),
+                min_iters: 3,
+                max_iters: 10_000,
+            }
+        } else {
+            Bencher {
+                warmup: Duration::from_millis(300),
+                budget: Duration::from_secs(2),
+                min_iters: 10,
+                max_iters: 1_000_000,
+            }
+        }
+    }
+}
+
+/// Result of one benchmark case.
+#[derive(Debug, Clone)]
+pub struct Measurement {
+    pub name: String,
+    pub iters: u64,
+    pub hist: Histogram, // per-iteration wall time, ns
+    /// Work units per iteration (rows, lookups...) for throughput columns.
+    pub units_per_iter: f64,
+}
+
+impl Measurement {
+    pub fn mean_ns(&self) -> f64 {
+        self.hist.mean()
+    }
+    pub fn p50_ns(&self) -> u64 {
+        self.hist.quantile(0.5)
+    }
+    pub fn p99_ns(&self) -> u64 {
+        self.hist.quantile(0.99)
+    }
+    /// Units per second at mean latency.
+    pub fn throughput(&self) -> f64 {
+        if self.mean_ns() == 0.0 {
+            0.0
+        } else {
+            self.units_per_iter * 1e9 / self.mean_ns()
+        }
+    }
+}
+
+impl Bencher {
+    pub fn new() -> Self {
+        Self::default()
+    }
+
+    /// Time `f` under the budget. `units` scales throughput reporting.
+    pub fn run<T>(&self, name: &str, units: f64, mut f: impl FnMut() -> T) -> Measurement {
+        // Warmup.
+        let w0 = Instant::now();
+        while w0.elapsed() < self.warmup {
+            std::hint::black_box(f());
+        }
+        // Measure.
+        let mut hist = Histogram::new();
+        let start = Instant::now();
+        let mut iters = 0u64;
+        while (start.elapsed() < self.budget || iters < self.min_iters) && iters < self.max_iters
+        {
+            let t0 = Instant::now();
+            std::hint::black_box(f());
+            hist.record(t0.elapsed().as_nanos() as u64);
+            iters += 1;
+        }
+        Measurement { name: name.to_string(), iters, hist, units_per_iter: units }
+    }
+}
+
+/// Format ns as an adaptive human unit.
+pub fn fmt_ns(ns: f64) -> String {
+    if ns < 1e3 {
+        format!("{ns:.0}ns")
+    } else if ns < 1e6 {
+        format!("{:.1}µs", ns / 1e3)
+    } else if ns < 1e9 {
+        format!("{:.2}ms", ns / 1e6)
+    } else {
+        format!("{:.2}s", ns / 1e9)
+    }
+}
+
+/// Format a unit-per-second rate.
+pub fn fmt_rate(r: f64) -> String {
+    if r >= 1e9 {
+        format!("{:.2}G/s", r / 1e9)
+    } else if r >= 1e6 {
+        format!("{:.2}M/s", r / 1e6)
+    } else if r >= 1e3 {
+        format!("{:.1}k/s", r / 1e3)
+    } else {
+        format!("{r:.1}/s")
+    }
+}
+
+/// Paper-style results table printed to stdout.
+pub struct Table {
+    title: String,
+    headers: Vec<String>,
+    rows: Vec<Vec<String>>,
+}
+
+impl Table {
+    pub fn new(title: &str, headers: &[&str]) -> Self {
+        Table {
+            title: title.to_string(),
+            headers: headers.iter().map(|s| s.to_string()).collect(),
+            rows: Vec::new(),
+        }
+    }
+
+    pub fn row(&mut self, cells: &[String]) {
+        assert_eq!(cells.len(), self.headers.len(), "row arity mismatch");
+        self.rows.push(cells.to_vec());
+    }
+
+    /// Convenience: a standard latency row from a measurement.
+    pub fn latency_row(&mut self, m: &Measurement) {
+        self.row(&[
+            m.name.clone(),
+            m.iters.to_string(),
+            fmt_ns(m.mean_ns()),
+            fmt_ns(m.p50_ns() as f64),
+            fmt_ns(m.hist.quantile(0.95) as f64),
+            fmt_ns(m.p99_ns() as f64),
+            fmt_rate(m.throughput()),
+        ]);
+    }
+
+    pub const LATENCY_HEADERS: &'static [&'static str] =
+        &["case", "iters", "mean", "p50", "p95", "p99", "throughput"];
+
+    pub fn print(&self) {
+        let mut widths: Vec<usize> = self.headers.iter().map(|h| h.len()).collect();
+        for row in &self.rows {
+            for (i, c) in row.iter().enumerate() {
+                widths[i] = widths[i].max(c.len());
+            }
+        }
+        println!("\n== {} ==", self.title);
+        let fmt_row = |cells: &[String]| {
+            cells
+                .iter()
+                .enumerate()
+                .map(|(i, c)| format!("{:<w$}", c, w = widths[i]))
+                .collect::<Vec<_>>()
+                .join("  ")
+        };
+        println!("{}", fmt_row(&self.headers));
+        println!("{}", widths.iter().map(|w| "-".repeat(*w)).collect::<Vec<_>>().join("  "));
+        for row in &self.rows {
+            println!("{}", fmt_row(row));
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn bencher_measures() {
+        std::env::set_var("GEOFS_BENCH_FAST", "1");
+        let b = Bencher::new();
+        let m = b.run("noop", 1.0, || 1 + 1);
+        assert!(m.iters >= 3);
+        assert!(m.throughput() > 0.0);
+    }
+
+    #[test]
+    fn fmtters() {
+        assert_eq!(fmt_ns(500.0), "500ns");
+        assert_eq!(fmt_ns(1_500.0), "1.5µs");
+        assert_eq!(fmt_ns(2_500_000.0), "2.50ms");
+        assert!(fmt_rate(2_000_000.0).contains("M/s"));
+    }
+
+    #[test]
+    fn table_prints() {
+        let mut t = Table::new("demo", &["a", "b"]);
+        t.row(&["x".into(), "y".into()]);
+        t.print(); // smoke: no panic
+    }
+
+    #[test]
+    #[should_panic]
+    fn table_arity_checked() {
+        let mut t = Table::new("demo", &["a", "b"]);
+        t.row(&["only-one".into()]);
+    }
+}

@@ -1,0 +1,214 @@
+//! Configuration system (JSON; serde is unavailable offline).
+//!
+//! One file configures a deployment: regions + latency links, store
+//! sizing, scheduler retry policy, artifact location.  Examples and the
+//! CLI construct [`Config`] from a file or use [`Config::default_local`].
+
+use std::path::{Path, PathBuf};
+use std::sync::Arc;
+
+use crate::exec::RetryPolicy;
+use crate::geo::topology::GeoTopology;
+use crate::types::{FsError, Result};
+use crate::util::json::Json;
+
+#[derive(Debug, Clone)]
+pub struct RegionLink {
+    pub from: String,
+    pub to: String,
+    pub one_way_us: u64,
+}
+
+#[derive(Debug, Clone)]
+pub struct Config {
+    /// Region names; the first is the default home region.
+    pub regions: Vec<String>,
+    pub links: Vec<RegionLink>,
+    /// In-region lookup latency (µs) for the simulator.
+    pub local_latency_us: u64,
+    /// Online store shard count per region.
+    pub online_shards: usize,
+    /// Worker threads for the compute pool.
+    pub workers: usize,
+    /// AOT artifact directory.
+    pub artifacts_dir: PathBuf,
+    /// Directory for durable offline segments / checkpoints.
+    pub data_dir: PathBuf,
+    /// Job retry policy.
+    pub retry: RetryPolicy,
+    /// Geo-replication lag (secs) when replication is enabled.
+    pub replication_lag_secs: i64,
+    /// Deterministic seed for synthetic workloads.
+    pub seed: u64,
+}
+
+impl Config {
+    /// Single-region local development ("one box" mode, §2.1).
+    pub fn default_local() -> Config {
+        Config {
+            regions: vec!["local".into()],
+            links: vec![],
+            local_latency_us: 50,
+            online_shards: 8,
+            workers: 4,
+            artifacts_dir: PathBuf::from("artifacts"),
+            data_dir: std::env::temp_dir().join("geofs-data"),
+            retry: RetryPolicy::default(),
+            replication_lag_secs: 30,
+            seed: 42,
+        }
+    }
+
+    /// The 4-region managed deployment used by examples/benches.
+    pub fn default_geo() -> Config {
+        let topo = GeoTopology::default_four_region();
+        let regions: Vec<String> = topo.regions().to_vec();
+        let mut links = Vec::new();
+        for (i, a) in regions.iter().enumerate() {
+            for b in regions.iter().skip(i + 1) {
+                links.push(RegionLink {
+                    from: a.clone(),
+                    to: b.clone(),
+                    one_way_us: topo.one_way_us(a, b).unwrap(),
+                });
+            }
+        }
+        Config { regions, links, ..Config::default_local() }
+    }
+
+    pub fn load(path: impl AsRef<Path>) -> Result<Config> {
+        let text = std::fs::read_to_string(path.as_ref())?;
+        Self::parse(&text)
+    }
+
+    pub fn parse(text: &str) -> Result<Config> {
+        let v = Json::parse(text).map_err(|e| FsError::InvalidArg(e.to_string()))?;
+        let mut cfg = Config::default_local();
+        if let Some(regions) = v.get("regions").as_arr() {
+            cfg.regions = regions
+                .iter()
+                .filter_map(|r| r.as_str().map(str::to_string))
+                .collect();
+            if cfg.regions.is_empty() {
+                return Err(FsError::InvalidArg("config: empty regions".into()));
+            }
+        }
+        if let Some(links) = v.get("links").as_arr() {
+            cfg.links = links
+                .iter()
+                .map(|l| -> Result<RegionLink> {
+                    Ok(RegionLink {
+                        from: l
+                            .get("from")
+                            .as_str()
+                            .ok_or_else(|| FsError::InvalidArg("link missing from".into()))?
+                            .to_string(),
+                        to: l
+                            .get("to")
+                            .as_str()
+                            .ok_or_else(|| FsError::InvalidArg("link missing to".into()))?
+                            .to_string(),
+                        one_way_us: l
+                            .get("one_way_us")
+                            .as_usize()
+                            .ok_or_else(|| FsError::InvalidArg("link missing one_way_us".into()))?
+                            as u64,
+                    })
+                })
+                .collect::<Result<_>>()?;
+        }
+        if let Some(n) = v.get("online_shards").as_usize() {
+            cfg.online_shards = n.max(1);
+        }
+        if let Some(n) = v.get("workers").as_usize() {
+            cfg.workers = n.max(1);
+        }
+        if let Some(s) = v.get("artifacts_dir").as_str() {
+            cfg.artifacts_dir = PathBuf::from(s);
+        }
+        if let Some(s) = v.get("data_dir").as_str() {
+            cfg.data_dir = PathBuf::from(s);
+        }
+        if let Some(n) = v.get("local_latency_us").as_usize() {
+            cfg.local_latency_us = n as u64;
+        }
+        if let Some(n) = v.get("replication_lag_secs").as_i64() {
+            cfg.replication_lag_secs = n;
+        }
+        if let Some(n) = v.get("seed").as_i64() {
+            cfg.seed = n as u64;
+        }
+        if let Some(n) = v.get("retry_max_attempts").as_usize() {
+            cfg.retry.max_attempts = n as u32;
+        }
+        Ok(cfg)
+    }
+
+    /// Build the geo topology from this config.
+    pub fn topology(&self) -> Arc<GeoTopology> {
+        let regions: Vec<&str> = self.regions.iter().map(String::as_str).collect();
+        let links: Vec<(&str, &str, u64)> = self
+            .links
+            .iter()
+            .map(|l| (l.from.as_str(), l.to.as_str(), l.one_way_us))
+            .collect();
+        Arc::new(GeoTopology::new(&regions, &links, self.local_latency_us))
+    }
+
+    pub fn home_region(&self) -> &str {
+        &self.regions[0]
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn defaults_are_sane() {
+        let c = Config::default_local();
+        assert_eq!(c.home_region(), "local");
+        assert!(c.topology().has_region("local"));
+        let g = Config::default_geo();
+        assert_eq!(g.regions.len(), 4);
+        assert_eq!(g.links.len(), 6);
+        assert_eq!(g.topology().one_way_us("eastus", "westus").unwrap(), 30_000);
+    }
+
+    #[test]
+    fn parse_overrides_defaults() {
+        let c = Config::parse(
+            r#"{
+              "regions": ["a", "b"],
+              "links": [{"from":"a","to":"b","one_way_us":5000}],
+              "online_shards": 3,
+              "workers": 2,
+              "artifacts_dir": "/x/artifacts",
+              "seed": 7,
+              "retry_max_attempts": 9
+            }"#,
+        )
+        .unwrap();
+        assert_eq!(c.regions, vec!["a", "b"]);
+        assert_eq!(c.online_shards, 3);
+        assert_eq!(c.artifacts_dir, PathBuf::from("/x/artifacts"));
+        assert_eq!(c.seed, 7);
+        assert_eq!(c.retry.max_attempts, 9);
+        assert_eq!(c.topology().rtt_us("a", "b").unwrap(), 10_000);
+    }
+
+    #[test]
+    fn parse_rejects_bad_input() {
+        assert!(Config::parse("not json").is_err());
+        assert!(Config::parse(r#"{"regions": []}"#).is_err());
+        assert!(Config::parse(r#"{"links": [{"from":"a"}]}"#).is_err());
+    }
+
+    #[test]
+    fn load_roundtrip() {
+        let p = std::env::temp_dir().join(format!("geofs-cfg-{}.json", std::process::id()));
+        std::fs::write(&p, r#"{"workers": 6}"#).unwrap();
+        assert_eq!(Config::load(&p).unwrap().workers, 6);
+        std::fs::remove_file(&p).unwrap();
+    }
+}

@@ -1,0 +1,564 @@
+//! The coordinator: the managed feature store facade (Fig 1 + Fig 2).
+//!
+//! [`FeatureStore`] wires every subsystem together — catalog, governance,
+//! scheduler, materialization, dual stores, geo access, serving, lineage,
+//! monitoring — behind the API the paper's SDK exposes: define assets,
+//! materialize (scheduled + backfill), retrieve offline (PIT-correct)
+//! and online (low-latency), bootstrap, fail over.
+
+use std::collections::HashMap;
+use std::path::PathBuf;
+use std::sync::{Arc, RwLock};
+
+use crate::config::Config;
+use crate::exec::ThreadPool;
+use crate::geo::access::CrossRegionAccess;
+use crate::geo::replication::GeoReplicator;
+use crate::geo::topology::GeoTopology;
+use crate::governance::rbac::{Action, Principal, Rbac};
+use crate::lineage::Lineage;
+use crate::materialize::merge::{DualStoreMerger, FaultInjector};
+use crate::materialize::Materializer;
+use crate::metadata::assets::{EntitySpec, FeatureSetSpec, FeatureStoreSpec};
+use crate::metadata::catalog::Catalog;
+use crate::monitor::freshness::FreshnessTracker;
+use crate::monitor::metrics::{MetricKind, MetricsRegistry};
+use crate::offline_store::OfflineStore;
+use crate::online_store::OnlineStore;
+use crate::query::offline::{OfflineQueryEngine, TrainingFrame};
+use crate::query::pit::{Observation, PitConfig};
+use crate::query::spec::FeatureRef;
+use crate::runtime::ComputeService;
+use crate::scheduler::{JobOutcome, SchedulePolicy, Scheduler};
+use crate::serving::router::{RouteTable, ServingRouter};
+use crate::serving::service::OnlineServing;
+use crate::source::SourceConnector;
+use crate::types::{EntityInterner, FeatureWindow, FsError, Result, Timestamp};
+use crate::util::Clock;
+
+/// Options controlling how the store is opened.
+#[derive(Debug, Clone)]
+pub struct OpenOptions {
+    /// Load the PJRT engine + AOT artifacts (true for anything that
+    /// materializes via the optimized path).
+    pub with_engine: bool,
+    /// Engine threads in the compute service.
+    pub compute_threads: usize,
+    /// Enable geo-replication of the online store to all other regions.
+    pub geo_replication: bool,
+    /// Store is geo-fenced: replication disallowed (§4.1.2).
+    pub geo_fenced: bool,
+    /// Fault injection rates for the dual-store merger (tests/benches).
+    pub fault_rates: Option<(u64, f64, f64)>,
+}
+
+impl Default for OpenOptions {
+    fn default() -> Self {
+        OpenOptions {
+            with_engine: true,
+            compute_threads: 2,
+            geo_replication: false,
+            geo_fenced: false,
+            fault_rates: None,
+        }
+    }
+}
+
+struct Registration {
+    spec: FeatureSetSpec,
+    source: Arc<dyn SourceConnector>,
+    /// Start of the feature event timeline (scheduling origin).
+    origin: Timestamp,
+}
+
+/// The managed geo-distributed feature store.
+pub struct FeatureStore {
+    pub config: Config,
+    pub clock: Clock,
+    pub catalog: Arc<Catalog>,
+    pub rbac: Arc<Rbac>,
+    pub lineage: Arc<Lineage>,
+    pub metrics: Arc<MetricsRegistry>,
+    pub freshness: Arc<FreshnessTracker>,
+    pub interner: Arc<EntityInterner>,
+    pub scheduler: Arc<Scheduler>,
+    pub offline: Arc<OfflineStore>,
+    pub online: Arc<OnlineStore>,
+    pub topology: Arc<GeoTopology>,
+    pub serving: Arc<OnlineServing>,
+    pub replicator: Option<Arc<GeoReplicator>>,
+    pub merger: Arc<DualStoreMerger>,
+    materializer: Arc<Materializer>,
+    routes: Arc<RouteTable>,
+    registrations: RwLock<HashMap<String, Arc<Registration>>>,
+    /// Keeps the compute threads alive for the store's lifetime.
+    _compute: Option<ComputeService>,
+    geo_fenced: bool,
+    store_name: RwLock<Option<String>>,
+}
+
+impl FeatureStore {
+    /// Open a feature store deployment.
+    pub fn open(config: Config, opts: OpenOptions) -> Result<Arc<FeatureStore>> {
+        let clock = Clock::fixed(0);
+        let topology = config.topology();
+        let pool = Arc::new(ThreadPool::new(config.workers));
+        let interner = Arc::new(EntityInterner::new());
+        let compute = if opts.with_engine {
+            Some(ComputeService::start(&config.artifacts_dir, opts.compute_threads.max(1))?)
+        } else {
+            None
+        };
+        let engine = compute.as_ref().map(|c| c.handle());
+        let offline = Arc::new(OfflineStore::new());
+        let online = Arc::new(OnlineStore::new(config.online_shards));
+        let faults = match opts.fault_rates {
+            Some((seed, off_p, on_p)) => FaultInjector::with_rates(seed, off_p, on_p),
+            None => FaultInjector::none(),
+        };
+        let merger = Arc::new(DualStoreMerger::new(
+            offline.clone(),
+            online.clone(),
+            faults,
+            config.retry.clone(),
+            clock.clone(),
+        ));
+        let replicator = (opts.geo_replication && !opts.geo_fenced && config.regions.len() > 1)
+            .then(|| {
+                let replicas = config
+                    .regions
+                    .iter()
+                    .filter(|r| *r != config.home_region())
+                    .map(|r| {
+                        (
+                            r.clone(),
+                            Arc::new(OnlineStore::new(config.online_shards)),
+                            config.replication_lag_secs,
+                        )
+                    })
+                    .collect();
+                Arc::new(GeoReplicator::new(replicas))
+            });
+        let scheduler =
+            Arc::new(Scheduler::new(pool.clone(), clock.clone(), config.retry.clone()));
+        let metrics = Arc::new(MetricsRegistry::new());
+        let routes = Arc::new(RouteTable::new());
+        let serving = Arc::new(OnlineServing::new(
+            ServingRouter::new(routes.clone()),
+            metrics.clone(),
+        ));
+        Ok(Arc::new(FeatureStore {
+            materializer: Arc::new(Materializer::new(engine, interner.clone())),
+            config,
+            clock,
+            catalog: Arc::new(Catalog::new()),
+            rbac: Arc::new(Rbac::new()),
+            lineage: Arc::new(Lineage::new()),
+            metrics,
+            freshness: Arc::new(FreshnessTracker::new()),
+            interner,
+            scheduler,
+            offline,
+            online,
+            topology,
+            serving,
+            replicator,
+            merger,
+            routes,
+            registrations: RwLock::new(HashMap::new()),
+            _compute: compute,
+            geo_fenced: opts.geo_fenced,
+            store_name: RwLock::new(None),
+        }))
+    }
+
+    // ---- asset management (§2.1) -------------------------------------------
+
+    /// Create the feature store resource in the home region.
+    pub fn create_store(&self, name: &str) -> Result<()> {
+        self.catalog
+            .create_store(FeatureStoreSpec::new(name, self.config.home_region()))?;
+        *self.store_name.write().unwrap() = Some(name.to_string());
+        Ok(())
+    }
+
+    fn store_name(&self) -> Result<String> {
+        self.store_name
+            .read()
+            .unwrap()
+            .clone()
+            .ok_or_else(|| FsError::Other("no feature store created yet".into()))
+    }
+
+    pub fn create_entity(&self, spec: EntitySpec) -> Result<()> {
+        self.catalog.create_entity(&self.store_name()?, spec)
+    }
+
+    /// Register a feature set: catalog entry + source binding + serving
+    /// route + TTL + freshness SLA. `origin` anchors the scheduling
+    /// timeline (earliest event time to materialize).
+    pub fn register_feature_set(
+        &self,
+        spec: FeatureSetSpec,
+        source: Arc<dyn SourceConnector>,
+        origin: Timestamp,
+    ) -> Result<String> {
+        let store = self.store_name()?;
+        self.catalog.create_feature_set(&store, spec.clone())?;
+        let table = spec.reference();
+        if spec.materialization.online_enabled {
+            self.online.set_ttl(&table, spec.materialization.online_ttl_secs);
+        }
+        self.freshness.configure(
+            &table,
+            spec.source.source_delay_secs,
+            spec.materialization.schedule_interval_secs,
+        );
+        self.routes.set(
+            &table,
+            Arc::new(CrossRegionAccess {
+                topology: self.topology.clone(),
+                home_region: self.config.home_region().to_string(),
+                home_store: self.online.clone(),
+                replicator: self.replicator.clone(),
+                geo_fenced: self.geo_fenced,
+            }),
+        );
+        self.registrations.write().unwrap().insert(
+            table.clone(),
+            Arc::new(Registration { spec, source, origin }),
+        );
+        Ok(table)
+    }
+
+    fn registration(&self, table: &str) -> Result<Arc<Registration>> {
+        self.registrations
+            .read()
+            .unwrap()
+            .get(table)
+            .cloned()
+            .ok_or_else(|| FsError::NotFound(format!("registered feature set '{table}'")))
+    }
+
+    pub fn feature_set_specs(&self) -> HashMap<String, FeatureSetSpec> {
+        self.registrations
+            .read()
+            .unwrap()
+            .values()
+            .map(|r| (r.spec.name.clone(), r.spec.clone()))
+            .collect()
+    }
+
+    // ---- materialization (§4.3) -------------------------------------------
+
+    fn job_fn(&self, reg: &Arc<Registration>) -> crate::scheduler::executor::JobFn {
+        let spec = reg.spec.clone();
+        let source = reg.source.clone();
+        let materializer = self.materializer.clone();
+        let merger = self.merger.clone();
+        let clock = self.clock.clone();
+        let replicator = self.replicator.clone();
+        let metrics = self.metrics.clone();
+        let table = reg.spec.reference();
+        Arc::new(move |window: FeatureWindow, _attempt: u32| {
+            let now = clock.now();
+            let records = materializer.calculate(&spec, source.as_ref(), window, now, now)?;
+            let report = merger.merge(&table, &records, &spec.materialization, now)?;
+            if let Some(rep) = &replicator {
+                rep.enqueue(&table, &records, now);
+            }
+            metrics.inc(MetricKind::System, "materialized_records", records.len() as u64);
+            metrics.inc(MetricKind::System, "materialization_jobs", 1);
+            let _ = report; // per-sink stats are surfaced via metrics
+            Ok(records.len() as u64)
+        })
+    }
+
+    /// Run one scheduled materialization tick for a feature set.
+    pub fn materialize_tick(&self, table: &str) -> Result<Vec<JobOutcome>> {
+        let reg = self.registration(table)?;
+        let policy = SchedulePolicy::from_spec(&reg.spec);
+        let outcomes = self.scheduler.tick(table, &policy, reg.origin, self.job_fn(&reg));
+        self.after_jobs(table, &reg, &outcomes);
+        Ok(outcomes)
+    }
+
+    /// One-time backfill over a user window (§4.3).
+    pub fn backfill(&self, table: &str, window: FeatureWindow) -> Result<Vec<JobOutcome>> {
+        let reg = self.registration(table)?;
+        let policy = SchedulePolicy::from_spec(&reg.spec);
+        let outcomes = self.scheduler.backfill(table, &policy, window, self.job_fn(&reg));
+        self.after_jobs(table, &reg, &outcomes);
+        Ok(outcomes)
+    }
+
+    fn after_jobs(&self, table: &str, reg: &Arc<Registration>, outcomes: &[JobOutcome]) {
+        if outcomes.is_empty() {
+            return;
+        }
+        // Advance freshness to the contiguous high-water mark.
+        let hw = {
+            let mut hw = reg.origin;
+            for w in self.scheduler.coverage(table) {
+                if w.start <= hw && w.end > hw {
+                    hw = w.end;
+                }
+            }
+            hw
+        };
+        self.freshness.advance(table, hw);
+        // Deliver replicated data that has become visible.
+        if let Some(rep) = &self.replicator {
+            rep.pump(self.clock.now());
+        }
+    }
+
+    /// Drive replication delivery (geo examples advance the clock then
+    /// pump).
+    pub fn pump_replication(&self) {
+        if let Some(rep) = &self.replicator {
+            rep.pump(self.clock.now());
+        }
+    }
+
+    // ---- retrieval ----------------------------------------------------------
+
+    /// Online lookup by entity key from a consumer region, with RBAC.
+    pub fn get_online(
+        &self,
+        principal: &Principal,
+        table: &str,
+        entity_key: &str,
+        consumer_region: &str,
+    ) -> Result<crate::geo::access::RoutedLookup> {
+        let store = self.store_name()?;
+        self.rbac.check(principal, &store, Action::ReadFeatures, self.clock.now())?;
+        let Some(entity) = self.interner.lookup(entity_key) else {
+            // Unknown entity: legitimate miss (vs not-materialized, which
+            // the caller can distinguish via data-state).
+            return Ok(crate::geo::access::RoutedLookup {
+                record: None,
+                mechanism: crate::geo::access::AccessMechanism::Local,
+                latency_us: self.config.local_latency_us,
+                staleness_secs: 0,
+            });
+        };
+        self.serving.lookup(table, entity, consumer_region, self.clock.now())
+    }
+
+    /// Offline PIT-correct training frame (§4.4), with RBAC + lineage
+    /// recording for the requesting model.
+    #[allow(clippy::too_many_arguments)]
+    pub fn get_training_frame(
+        &self,
+        principal: &Principal,
+        model: Option<crate::lineage::ModelId>,
+        observations: &[(String, Timestamp)],
+        features: &[FeatureRef],
+        cfg: PitConfig,
+        consumer_region: &str,
+    ) -> Result<TrainingFrame> {
+        let store = self.store_name()?;
+        self.rbac.check(principal, &store, Action::ReadFeatures, self.clock.now())?;
+        let obs: Vec<Observation> = observations
+            .iter()
+            .map(|(key, ts)| Observation { entity: self.interner.intern(key), ts: *ts })
+            .collect();
+        let specs: HashMap<String, FeatureSetSpec> = self.feature_set_specs();
+        let engine = OfflineQueryEngine::new(self.offline.clone());
+        let frame = engine.get_training_frame(&obs, features, &specs, cfg)?;
+        if let Some(model) = model {
+            self.lineage.record(model, features, consumer_region, self.clock.now());
+        }
+        self.metrics.inc(MetricKind::System, "training_rows_served", frame.rows.len() as u64);
+        Ok(frame)
+    }
+
+    /// Data-state introspection (§4.3): is the window materialized?
+    pub fn is_materialized(&self, table: &str, window: FeatureWindow) -> bool {
+        self.scheduler.is_materialized(table, &window)
+    }
+
+    // ---- bootstrap (§4.5.5) --------------------------------------------------
+
+    pub fn bootstrap_online_from_offline(&self, table: &str) -> crate::offline_store::MergeStats {
+        crate::materialize::bootstrap_offline_to_online(
+            &self.offline,
+            &self.online,
+            table,
+            self.clock.now(),
+        )
+    }
+
+    pub fn bootstrap_offline_from_online(&self, table: &str) -> crate::offline_store::MergeStats {
+        crate::materialize::bootstrap_online_to_offline(
+            &self.online,
+            &self.offline,
+            table,
+            self.clock.now(),
+        )
+    }
+
+    // ---- ops ------------------------------------------------------------------
+
+    /// Persist offline segments + scheduler coverage for failover.
+    pub fn checkpoint(&self, dir: PathBuf) -> Result<crate::geo::failover::RegionCheckpoint> {
+        let fm = crate::geo::failover::FailoverManager::new(self.topology.clone());
+        fm.checkpoint(
+            self.config.home_region(),
+            &self.scheduler,
+            &self.offline,
+            dir,
+            self.clock.now(),
+        )
+    }
+
+    /// Current freshness of a table.
+    pub fn table_freshness(&self, table: &str) -> Option<crate::monitor::freshness::Freshness> {
+        self.freshness.freshness(table, self.clock.now())
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::governance::rbac::{Grant, Role};
+    use crate::metadata::assets::SourceSpec;
+    use crate::source::synthetic::SyntheticSource;
+    use crate::types::time::{Granularity, DAY, HOUR};
+
+    fn open_local() -> Arc<FeatureStore> {
+        // No engine: unit tests here exercise coordination, not compute.
+        let fs = FeatureStore::open(
+            Config::default_local(),
+            OpenOptions { with_engine: false, ..Default::default() },
+        )
+        .unwrap();
+        fs.create_store("fs-test").unwrap();
+        fs.create_entity(EntitySpec::new("customer", 1, &["customer_id"])).unwrap();
+        fs.rbac.grant(Grant {
+            principal: Principal("alice".into()),
+            store: "fs-test".into(),
+            role: Role::Admin,
+            workspace: "ws".into(),
+            workspace_region: "local".into(),
+        });
+        fs
+    }
+
+    fn register(fs: &FeatureStore, window_bins: usize) -> String {
+        let spec = FeatureSetSpec::rolling(
+            "txn",
+            1,
+            "customer",
+            SourceSpec::synthetic(5),
+            Granularity(HOUR),
+            window_bins,
+        );
+        let source = Arc::new(SyntheticSource::new(5, 30));
+        fs.register_feature_set(spec, source, 0).unwrap()
+    }
+
+    #[test]
+    fn end_to_end_tick_and_online_read() {
+        let fs = open_local();
+        let table = register(&fs, 4);
+        fs.clock.set(2 * DAY);
+        let outcomes = fs.materialize_tick(&table).unwrap();
+        // Two daily intervals due; default max_bins_per_job coalesces
+        // them into one job (§3.1.1).
+        assert_eq!(outcomes.len(), 1);
+        assert_eq!(outcomes[0].window, FeatureWindow::new(0, 2 * DAY));
+        assert!(fs.is_materialized(&table, FeatureWindow::new(0, 2 * DAY)));
+        assert!(fs.offline.row_count(&table) > 0);
+
+        let alice = Principal("alice".into());
+        let got = fs.get_online(&alice, &table, "cust_00000", "local").unwrap();
+        assert!(got.record.is_some());
+        // Unknown key → clean miss.
+        let miss = fs.get_online(&alice, &table, "ghost", "local").unwrap();
+        assert!(miss.record.is_none());
+        // RBAC enforced.
+        assert!(fs.get_online(&Principal("mallory".into()), &table, "x", "local").is_err());
+    }
+
+    #[test]
+    fn freshness_tracks_high_water() {
+        let fs = open_local();
+        let table = register(&fs, 2);
+        fs.clock.set(DAY);
+        fs.materialize_tick(&table).unwrap();
+        let f = fs.table_freshness(&table).unwrap();
+        assert_eq!(f.high_water, DAY);
+        assert!(f.within_sla);
+        fs.clock.set(4 * DAY); // fall behind
+        assert!(!fs.table_freshness(&table).unwrap().within_sla);
+    }
+
+    #[test]
+    fn backfill_then_training_frame() {
+        let fs = open_local();
+        let table = register(&fs, 4);
+        fs.clock.set(3 * DAY);
+        fs.backfill(&table, FeatureWindow::new(0, 2 * DAY)).unwrap();
+
+        let alice = Principal("alice".into());
+        let features = vec![FeatureRef::parse("txn:1:4h_sum").unwrap()];
+        // Observations after the backfill's creation time (3d): PIT must
+        // resolve to the latest record available at each observation.
+        let observations: Vec<(String, Timestamp)> = (0..10)
+            .map(|i| (format!("cust_{i:05}"), 3 * DAY + i as i64 * HOUR))
+            .collect();
+        let frame = fs
+            .get_training_frame(
+                &alice,
+                Some(crate::lineage::ModelId { name: "churn".into(), version: 1 }),
+                &observations,
+                &features,
+                PitConfig::default(),
+                "local",
+            )
+            .unwrap();
+        assert_eq!(frame.rows.len(), 10);
+        assert!(frame.fill_rate() > 0.0, "some observations must resolve");
+        // Lineage recorded.
+        assert_eq!(
+            fs.lineage
+                .features_of(&crate::lineage::ModelId { name: "churn".into(), version: 1 })
+                .len(),
+            1
+        );
+    }
+
+    #[test]
+    fn duplicate_store_and_missing_table_errors() {
+        let fs = open_local();
+        assert!(fs.create_store("fs-test").is_err());
+        assert!(fs.materialize_tick("nope:1").is_err());
+        assert!(matches!(
+            fs.backfill("nope:1", FeatureWindow::new(0, DAY)),
+            Err(FsError::NotFound(_))
+        ));
+    }
+
+    #[test]
+    fn bootstrap_paths() {
+        let fs = open_local();
+        let table = register(&fs, 2);
+        fs.clock.set(DAY);
+        fs.materialize_tick(&table).unwrap();
+        // Wipe online by bootstrapping a fresh store the other way:
+        let fresh = FeatureStore::open(
+            Config::default_local(),
+            OpenOptions { with_engine: false, ..Default::default() },
+        )
+        .unwrap();
+        // move offline data across (simulating late-enabled online store)
+        let rows = fs.offline.scan(&table, FeatureWindow::new(0, 10 * DAY));
+        fresh.offline.merge(&table, &rows);
+        let stats = fresh.bootstrap_online_from_offline(&table);
+        assert!(stats.inserted > 0);
+        let back = fresh.bootstrap_offline_from_online(&table);
+        assert_eq!(back.inserted, 0); // already complete
+    }
+}

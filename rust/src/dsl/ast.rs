@@ -1,0 +1,110 @@
+//! DSL abstract syntax.
+
+use crate::types::{FsError, Result};
+
+/// Supported rolling aggregations — the five the compute artifact emits.
+#[derive(Debug, Clone, Copy, PartialEq, Eq, Hash)]
+pub enum Agg {
+    Sum,
+    Cnt,
+    Mean,
+    Min,
+    Max,
+}
+
+impl Agg {
+    pub const ALL: [Agg; 5] = [Agg::Sum, Agg::Cnt, Agg::Mean, Agg::Min, Agg::Max];
+
+    pub fn parse(s: &str) -> Result<Agg> {
+        match s {
+            "sum" => Ok(Agg::Sum),
+            "cnt" | "count" => Ok(Agg::Cnt),
+            "mean" | "avg" => Ok(Agg::Mean),
+            "min" => Ok(Agg::Min),
+            "max" => Ok(Agg::Max),
+            other => Err(FsError::Dsl(format!("unknown aggregation '{other}'"))),
+        }
+    }
+
+    pub fn name(self) -> &'static str {
+        match self {
+            Agg::Sum => "sum",
+            Agg::Cnt => "cnt",
+            Agg::Mean => "mean",
+            Agg::Min => "min",
+            Agg::Max => "max",
+        }
+    }
+
+    /// Index of this aggregation in the artifact's output tuple.
+    pub fn output_index(self) -> usize {
+        match self {
+            Agg::Sum => 0,
+            Agg::Cnt => 1,
+            Agg::Mean => 2,
+            Agg::Min => 3,
+            Agg::Max => 4,
+        }
+    }
+}
+
+/// `rolling(<value_col>, window=<bins|Nd|Nh>, aggs=[..])`.
+#[derive(Debug, Clone, PartialEq)]
+pub struct RollingSpec {
+    pub value_col: String,
+    pub window_bins: usize,
+    pub aggs: Vec<Agg>,
+}
+
+impl RollingSpec {
+    pub fn validate(&self) -> Result<()> {
+        if self.window_bins == 0 {
+            return Err(FsError::Dsl("window must be >= 1 bin".into()));
+        }
+        if self.aggs.is_empty() {
+            return Err(FsError::Dsl("at least one aggregation required".into()));
+        }
+        let mut seen = std::collections::HashSet::new();
+        for a in &self.aggs {
+            if !seen.insert(a) {
+                return Err(FsError::Dsl(format!("duplicate aggregation '{}'", a.name())));
+            }
+        }
+        Ok(())
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn agg_parse_and_names() {
+        assert_eq!(Agg::parse("sum").unwrap(), Agg::Sum);
+        assert_eq!(Agg::parse("avg").unwrap(), Agg::Mean);
+        assert_eq!(Agg::parse("count").unwrap(), Agg::Cnt);
+        assert!(Agg::parse("median").is_err());
+        for a in Agg::ALL {
+            assert_eq!(Agg::parse(a.name()).unwrap(), a);
+        }
+    }
+
+    #[test]
+    fn output_indices_are_distinct() {
+        let mut idx: Vec<_> = Agg::ALL.iter().map(|a| a.output_index()).collect();
+        idx.sort();
+        assert_eq!(idx, vec![0, 1, 2, 3, 4]);
+    }
+
+    #[test]
+    fn rolling_validation() {
+        let ok = RollingSpec { value_col: "v".into(), window_bins: 3, aggs: vec![Agg::Sum] };
+        assert!(ok.validate().is_ok());
+        let zero = RollingSpec { window_bins: 0, ..ok.clone() };
+        assert!(zero.validate().is_err());
+        let dup = RollingSpec { aggs: vec![Agg::Sum, Agg::Sum], ..ok.clone() };
+        assert!(dup.validate().is_err());
+        let empty = RollingSpec { aggs: vec![], ..ok };
+        assert!(empty.validate().is_err());
+    }
+}

@@ -1,0 +1,18 @@
+//! Transformation DSL and query planning (paper §3.1.6).
+//!
+//! When a feature set declares its transformation in the DSL ("a common
+//! case is rolling window aggregation"), the engine understands the
+//! computation and plans it onto the optimized AOT artifact.  A UDF is a
+//! black box: the engine can only run it as-is, so it gets the naive
+//! per-window recompute plan.  `benches/dsl_vs_udf.rs` measures exactly
+//! this gap (experiment E5).
+
+pub mod ast;
+pub mod parser;
+pub mod planner;
+pub mod udf;
+
+pub use ast::{Agg, RollingSpec};
+pub use parser::parse_rolling;
+pub use planner::{plan_transform, ExecutionPlan, PlanKind};
+pub use udf::{udf_rolling_recompute, UdfRegistry};

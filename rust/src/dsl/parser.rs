@@ -1,0 +1,267 @@
+//! Recursive-descent parser for the transformation DSL.
+//!
+//! Grammar:
+//! ```text
+//! rolling    := "rolling" "(" ident "," kwargs ")"
+//! kwargs     := kwarg ("," kwarg)*
+//! kwarg      := "window" "=" duration | "aggs" "=" "[" agg ("," agg)* "]"
+//! duration   := INT | INT ("d"|"h"|"m")     -- suffixed forms need the
+//!                                              feature-set granularity
+//! ```
+
+use super::ast::{Agg, RollingSpec};
+use crate::types::time::{Granularity, DAY, HOUR, MINUTE};
+use crate::types::{FsError, Result};
+
+struct Lexer<'a> {
+    src: &'a str,
+    pos: usize,
+}
+
+#[derive(Debug, Clone, PartialEq)]
+enum Tok {
+    Ident(String),
+    Int(i64),
+    /// integer with a duration suffix, e.g. `30d`
+    Duration(i64, char),
+    LParen,
+    RParen,
+    LBracket,
+    RBracket,
+    Comma,
+    Eq,
+    End,
+}
+
+impl<'a> Lexer<'a> {
+    fn new(src: &'a str) -> Self {
+        Lexer { src, pos: 0 }
+    }
+
+    fn err(&self, msg: &str) -> FsError {
+        FsError::Dsl(format!("at byte {}: {msg}", self.pos))
+    }
+
+    fn next_tok(&mut self) -> Result<Tok> {
+        let b = self.src.as_bytes();
+        while self.pos < b.len() && (b[self.pos] as char).is_whitespace() {
+            self.pos += 1;
+        }
+        if self.pos >= b.len() {
+            return Ok(Tok::End);
+        }
+        let c = b[self.pos] as char;
+        self.pos += 1;
+        match c {
+            '(' => Ok(Tok::LParen),
+            ')' => Ok(Tok::RParen),
+            '[' => Ok(Tok::LBracket),
+            ']' => Ok(Tok::RBracket),
+            ',' => Ok(Tok::Comma),
+            '=' => Ok(Tok::Eq),
+            c if c.is_ascii_digit() => {
+                let start = self.pos - 1;
+                while self.pos < b.len() && (b[self.pos] as char).is_ascii_digit() {
+                    self.pos += 1;
+                }
+                let n: i64 = self.src[start..self.pos]
+                    .parse()
+                    .map_err(|_| self.err("bad integer"))?;
+                if self.pos < b.len() && matches!(b[self.pos] as char, 'd' | 'h' | 'm') {
+                    let suffix = b[self.pos] as char;
+                    self.pos += 1;
+                    Ok(Tok::Duration(n, suffix))
+                } else {
+                    Ok(Tok::Int(n))
+                }
+            }
+            c if c.is_ascii_alphabetic() || c == '_' => {
+                let start = self.pos - 1;
+                while self.pos < b.len()
+                    && ((b[self.pos] as char).is_ascii_alphanumeric() || b[self.pos] == b'_')
+                {
+                    self.pos += 1;
+                }
+                Ok(Tok::Ident(self.src[start..self.pos].to_string()))
+            }
+            other => Err(self.err(&format!("unexpected character '{other}'"))),
+        }
+    }
+}
+
+struct Parser<'a> {
+    lex: Lexer<'a>,
+    cur: Tok,
+}
+
+impl<'a> Parser<'a> {
+    fn new(src: &'a str) -> Result<Self> {
+        let mut lex = Lexer::new(src);
+        let cur = lex.next_tok()?;
+        Ok(Parser { lex, cur })
+    }
+
+    fn bump(&mut self) -> Result<Tok> {
+        let next = self.lex.next_tok()?;
+        Ok(std::mem::replace(&mut self.cur, next))
+    }
+
+    fn expect(&mut self, want: Tok) -> Result<()> {
+        if self.cur == want {
+            self.bump()?;
+            Ok(())
+        } else {
+            Err(FsError::Dsl(format!("expected {want:?}, found {:?}", self.cur)))
+        }
+    }
+
+    fn ident(&mut self) -> Result<String> {
+        match self.bump()? {
+            Tok::Ident(s) => Ok(s),
+            other => Err(FsError::Dsl(format!("expected identifier, found {other:?}"))),
+        }
+    }
+}
+
+/// Convert a window duration token to bins given the feature-set
+/// granularity; bare integers are already bins.
+fn to_bins(tok: Tok, g: Granularity) -> Result<usize> {
+    let secs = match tok {
+        Tok::Int(n) => return Ok(n.max(0) as usize),
+        Tok::Duration(n, 'd') => n * DAY,
+        Tok::Duration(n, 'h') => n * HOUR,
+        Tok::Duration(n, 'm') => n * MINUTE,
+        other => return Err(FsError::Dsl(format!("expected window duration, found {other:?}"))),
+    };
+    if secs % g.secs() != 0 {
+        return Err(FsError::Dsl(format!(
+            "window {secs}s is not a multiple of the feature-set granularity {}s",
+            g.secs()
+        )));
+    }
+    Ok((secs / g.secs()) as usize)
+}
+
+/// Parse `rolling(value, window=.., aggs=[..])`.
+pub fn parse_rolling(src: &str, granularity: Granularity) -> Result<RollingSpec> {
+    let mut p = Parser::new(src)?;
+    let head = p.ident()?;
+    if head != "rolling" {
+        return Err(FsError::Dsl(format!("expected 'rolling', found '{head}'")));
+    }
+    p.expect(Tok::LParen)?;
+    let value_col = p.ident()?;
+    let mut window_bins: Option<usize> = None;
+    let mut aggs: Option<Vec<Agg>> = None;
+
+    while p.cur == Tok::Comma {
+        p.bump()?;
+        let key = p.ident()?;
+        p.expect(Tok::Eq)?;
+        match key.as_str() {
+            "window" => {
+                let tok = p.bump()?;
+                window_bins = Some(to_bins(tok, granularity)?);
+            }
+            "aggs" => {
+                p.expect(Tok::LBracket)?;
+                let mut list = Vec::new();
+                loop {
+                    let name = p.ident()?;
+                    list.push(Agg::parse(&name)?);
+                    if p.cur == Tok::Comma {
+                        p.bump()?;
+                    } else {
+                        break;
+                    }
+                }
+                p.expect(Tok::RBracket)?;
+                aggs = Some(list);
+            }
+            other => return Err(FsError::Dsl(format!("unknown kwarg '{other}'"))),
+        }
+    }
+    p.expect(Tok::RParen)?;
+    if p.cur != Tok::End {
+        return Err(FsError::Dsl("trailing input after rolling(...)".into()));
+    }
+
+    let spec = RollingSpec {
+        value_col,
+        window_bins: window_bins.ok_or_else(|| FsError::Dsl("missing window=".into()))?,
+        aggs: aggs.unwrap_or_else(|| Agg::ALL.to_vec()),
+    };
+    spec.validate()?;
+    Ok(spec)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn parses_canonical_form() {
+        let s = parse_rolling(
+            "rolling(value, window=30, aggs=[sum,cnt,mean,min,max])",
+            Granularity::daily(),
+        )
+        .unwrap();
+        assert_eq!(s.value_col, "value");
+        assert_eq!(s.window_bins, 30);
+        assert_eq!(s.aggs.len(), 5);
+    }
+
+    #[test]
+    fn parses_duration_suffixes() {
+        let s = parse_rolling("rolling(v, window=30d)", Granularity::daily()).unwrap();
+        assert_eq!(s.window_bins, 30);
+        let s = parse_rolling("rolling(v, window=24h)", Granularity::hourly()).unwrap();
+        assert_eq!(s.window_bins, 24);
+        let s = parse_rolling("rolling(v, window=2d)", Granularity::hourly()).unwrap();
+        assert_eq!(s.window_bins, 48);
+        // defaults to all aggs
+        assert_eq!(s.aggs, Agg::ALL.to_vec());
+    }
+
+    #[test]
+    fn granularity_mismatch_rejected() {
+        // 90 minutes over hourly bins is not integral.
+        assert!(parse_rolling("rolling(v, window=90m)", Granularity::hourly()).is_err());
+    }
+
+    #[test]
+    fn whitespace_tolerant() {
+        let s =
+            parse_rolling("  rolling ( v , window = 7 , aggs = [ sum , max ] ) ", Granularity::daily())
+                .unwrap();
+        assert_eq!(s.window_bins, 7);
+        assert_eq!(s.aggs, vec![Agg::Sum, Agg::Max]);
+    }
+
+    #[test]
+    fn rejects_malformed() {
+        let g = Granularity::daily();
+        for bad in [
+            "scrolling(v, window=3)",
+            "rolling(v)",
+            "rolling(v, window=3, aggs=[])",
+            "rolling(v, window=3, aggs=[sum,sum])",
+            "rolling(v, window=3) trailing",
+            "rolling(v, window=)",
+            "rolling(v, wndow=3)",
+            "rolling(v, window=3, aggs=[median])",
+            "rolling(v, window=0)",
+            "rolling",
+            "",
+        ] {
+            assert!(parse_rolling(bad, g).is_err(), "should reject: {bad}");
+        }
+    }
+
+    #[test]
+    fn roundtrips_assets_constructor_format() {
+        // FeatureSetSpec::rolling emits this exact shape — keep in sync.
+        let code = "rolling(value, window=30, aggs=[sum,cnt,mean,min,max])";
+        assert!(parse_rolling(code, Granularity::daily()).is_ok());
+    }
+}

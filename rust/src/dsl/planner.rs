@@ -1,0 +1,151 @@
+//! Query planner (§3.1.6): choose the execution strategy for a
+//! feature-set transformation.
+//!
+//! * DSL rolling transform + a fitting AOT artifact → **optimized plan**
+//!   (the fused Pallas program).
+//! * DSL transform with no fitting artifact → naive-HLO plan if present,
+//!   else the in-process Rust fallback (correctness first).
+//! * UDF → black box: always the Rust row-engine recompute.
+
+use super::ast::RollingSpec;
+use super::parser::parse_rolling;
+use crate::metadata::assets::TransformSpec;
+use crate::runtime::{Manifest, Variant};
+use crate::types::time::Granularity;
+use crate::types::{FsError, Result};
+
+/// How the transformation will execute.
+#[derive(Debug, Clone, PartialEq)]
+pub enum PlanKind {
+    /// AOT artifact via PJRT, with the given plan variant.
+    Artifact(Variant),
+    /// In-process Rust evaluation (UDF black box or no-artifact fallback).
+    RustUdf,
+}
+
+#[derive(Debug, Clone, PartialEq)]
+pub struct ExecutionPlan {
+    pub kind: PlanKind,
+    pub rolling: RollingSpec,
+    /// Why this plan was chosen (surfaced in logs/monitoring).
+    pub rationale: String,
+}
+
+/// Plan a transformation against the artifact manifest.
+pub fn plan_transform(
+    transform: &TransformSpec,
+    granularity: Granularity,
+    manifest: Option<&Manifest>,
+) -> Result<ExecutionPlan> {
+    match transform {
+        TransformSpec::Dsl(code) => {
+            let rolling = parse_rolling(code, granularity)?;
+            let window = rolling.window_bins;
+            let has_artifact = manifest
+                .map(|m| m.windows().contains(&window))
+                .unwrap_or(false);
+            if has_artifact {
+                Ok(ExecutionPlan {
+                    kind: PlanKind::Artifact(Variant::Dsl),
+                    rolling,
+                    rationale: format!(
+                        "DSL rolling window={window}: optimized AOT plan (fused one-pass kernel)"
+                    ),
+                })
+            } else {
+                Ok(ExecutionPlan {
+                    kind: PlanKind::RustUdf,
+                    rolling,
+                    rationale: format!(
+                        "DSL rolling window={window}: no AOT artifact for this window; \
+                         falling back to in-process evaluation"
+                    ),
+                })
+            }
+        }
+        TransformSpec::Udf(name) => {
+            // Black box: the engine cannot see inside the UDF (§3.1.6
+            // "feature store treats the UDF as a black box"). The built-in
+            // registry resolves the name to a Rust implementation; its
+            // rolling parameters come from the feature-set spec via the
+            // registry, so here we only need a placeholder RollingSpec for
+            // the record schema.
+            if name.is_empty() {
+                return Err(FsError::Dsl("empty udf name".into()));
+            }
+            Ok(ExecutionPlan {
+                kind: PlanKind::RustUdf,
+                rolling: RollingSpec {
+                    value_col: "value".into(),
+                    window_bins: 0, // filled by the UDF registry at execution
+                    aggs: super::ast::Agg::ALL.to_vec(),
+                },
+                rationale: format!("UDF '{name}': black box, per-window recompute plan"),
+            })
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use std::path::PathBuf;
+
+    fn manifest_with_windows(ws: &[usize]) -> Manifest {
+        let arts = ws
+            .iter()
+            .map(|w| {
+                format!(
+                    r#"{{"name":"a{w}","shape":"s","variant":"dsl","file":"f","entities":8,
+                        "time_bins":16,"window":{w},"entity_block":8,"inputs":[],"outputs":[]}}"#
+                )
+            })
+            .collect::<Vec<_>>()
+            .join(",");
+        Manifest::parse(
+            &format!(r#"{{"format":1,"artifacts":[{arts}]}}"#),
+            PathBuf::new(),
+        )
+        .unwrap()
+    }
+
+    #[test]
+    fn dsl_with_artifact_gets_optimized_plan() {
+        let m = manifest_with_windows(&[4, 30]);
+        let t = TransformSpec::Dsl("rolling(value, window=30)".into());
+        let plan = plan_transform(&t, Granularity::daily(), Some(&m)).unwrap();
+        assert_eq!(plan.kind, PlanKind::Artifact(Variant::Dsl));
+        assert_eq!(plan.rolling.window_bins, 30);
+    }
+
+    #[test]
+    fn dsl_without_artifact_falls_back() {
+        let m = manifest_with_windows(&[4]);
+        let t = TransformSpec::Dsl("rolling(value, window=99)".into());
+        let plan = plan_transform(&t, Granularity::daily(), Some(&m)).unwrap();
+        assert_eq!(plan.kind, PlanKind::RustUdf);
+        assert!(plan.rationale.contains("falling back"));
+    }
+
+    #[test]
+    fn no_manifest_falls_back() {
+        let t = TransformSpec::Dsl("rolling(value, window=4)".into());
+        let plan = plan_transform(&t, Granularity::daily(), None).unwrap();
+        assert_eq!(plan.kind, PlanKind::RustUdf);
+    }
+
+    #[test]
+    fn udf_is_black_box() {
+        let m = manifest_with_windows(&[4]);
+        let t = TransformSpec::Udf("rolling_recompute".into());
+        let plan = plan_transform(&t, Granularity::daily(), Some(&m)).unwrap();
+        assert_eq!(plan.kind, PlanKind::RustUdf);
+        assert!(plan.rationale.contains("black box"));
+    }
+
+    #[test]
+    fn bad_dsl_propagates_error() {
+        let t = TransformSpec::Dsl("garbage(".into());
+        assert!(plan_transform(&t, Granularity::daily(), None).is_err());
+    }
+}

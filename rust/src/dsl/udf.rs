@@ -1,0 +1,132 @@
+//! Built-in UDF registry and the in-process rolling recompute.
+//!
+//! The paper's UDF contract is `udf(source_df, context) → feature_df`
+//! (§4.2).  Our Rust equivalent operates on the binned planes: a UDF
+//! receives the `[E, halo + T]` per-bin partials and must produce the
+//! `[E, T]` rolling planes.  `udf_rolling_recompute` is the reference
+//! black-box implementation — it recomputes every window from scratch
+//! (O(T·W)), which is precisely the cost profile the planner cannot
+//! optimize away for opaque UDFs.
+
+use std::collections::HashMap;
+use std::sync::Arc;
+
+use crate::runtime::{rolling_reference, BinPlanes, RollPlanes};
+use crate::types::{FsError, Result};
+
+/// A UDF over binned planes. `window` comes from the feature-set spec's
+/// context (the paper's `context` argument).
+pub type PlaneUdf = Arc<dyn Fn(&BinPlanes, usize) -> Result<RollPlanes> + Send + Sync>;
+
+/// Named registry of built-in UDFs (§3.1.7's SDK would let customers
+/// register their own; the registry is the extension point).
+#[derive(Clone)]
+pub struct UdfRegistry {
+    udfs: HashMap<String, PlaneUdf>,
+}
+
+impl std::fmt::Debug for UdfRegistry {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        write!(f, "UdfRegistry({:?})", self.udfs.keys().collect::<Vec<_>>())
+    }
+}
+
+impl Default for UdfRegistry {
+    fn default() -> Self {
+        let mut r = UdfRegistry { udfs: HashMap::new() };
+        r.register("rolling_recompute", Arc::new(|planes, w| Ok(udf_rolling_recompute(planes, w))));
+        r.register(
+            "rolling_recompute_2x",
+            // A deliberately heavier UDF (recomputes twice) for ablation
+            // benches: black-box cost is opaque to the planner.
+            Arc::new(|planes, w| {
+                let _ = udf_rolling_recompute(planes, w);
+                Ok(udf_rolling_recompute(planes, w))
+            }),
+        );
+        r
+    }
+}
+
+impl UdfRegistry {
+    pub fn new() -> Self {
+        Self::default()
+    }
+
+    pub fn register(&mut self, name: &str, udf: PlaneUdf) {
+        self.udfs.insert(name.to_string(), udf);
+    }
+
+    pub fn get(&self, name: &str) -> Result<PlaneUdf> {
+        self.udfs
+            .get(name)
+            .cloned()
+            .ok_or_else(|| FsError::NotFound(format!("udf '{name}'")))
+    }
+
+    pub fn names(&self) -> Vec<String> {
+        let mut n: Vec<_> = self.udfs.keys().cloned().collect();
+        n.sort();
+        n
+    }
+}
+
+/// The black-box rolling recompute: every output bin re-reduces its full
+/// window from the input planes.
+pub fn udf_rolling_recompute(planes: &BinPlanes, window: usize) -> RollPlanes {
+    rolling_reference(planes, window)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn planes() -> BinPlanes {
+        let mut b = BinPlanes::empty(2, 6);
+        b.add_event(0, 0, 1.0);
+        b.add_event(0, 3, 5.0);
+        b.add_event(1, 5, -2.0);
+        b
+    }
+
+    #[test]
+    fn registry_resolves_builtin() {
+        let r = UdfRegistry::new();
+        let udf = r.get("rolling_recompute").unwrap();
+        let out = udf(&planes(), 3).unwrap();
+        assert_eq!(out.sum.cols, 4); // 6 - (3-1)
+        assert!(r.get("nope").is_err());
+    }
+
+    #[test]
+    fn registry_lists_names() {
+        let r = UdfRegistry::new();
+        assert!(r.names().contains(&"rolling_recompute".to_string()));
+    }
+
+    #[test]
+    fn custom_registration() {
+        let mut r = UdfRegistry::new();
+        r.register(
+            "zeros",
+            Arc::new(|p, w| {
+                let out = udf_rolling_recompute(p, w);
+                Ok(RollPlanes {
+                    sum: crate::runtime::Tensor2::zeros(out.sum.rows, out.sum.cols),
+                    ..out
+                })
+            }),
+        );
+        let out = r.get("zeros").unwrap()(&planes(), 2).unwrap();
+        assert!(out.sum.data.iter().all(|&v| v == 0.0));
+    }
+
+    #[test]
+    fn recompute_matches_reference_by_construction() {
+        let p = planes();
+        let a = udf_rolling_recompute(&p, 2);
+        let b = rolling_reference(&p, 2);
+        assert_eq!(a.sum.data, b.sum.data);
+        assert_eq!(a.min.data, b.min.data);
+    }
+}

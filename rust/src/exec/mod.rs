@@ -1,0 +1,12 @@
+//! Compute substrate: thread-pool executor and retry policies.
+//!
+//! The paper's §3.1.5 "serverless" managed compute is modelled as a
+//! fixed-size worker pool executing materialization tasks; tokio is not
+//! available offline, so this is a small hand-built executor with
+//! join-handle futures and graceful shutdown.
+
+pub mod pool;
+pub mod retry;
+
+pub use pool::{JoinHandle, ThreadPool};
+pub use retry::{retry_with, RetryPolicy};

@@ -1,0 +1,227 @@
+//! Fixed-size thread pool with joinable task handles.
+
+use std::collections::VecDeque;
+use std::sync::{Arc, Condvar, Mutex};
+use std::thread;
+
+type Task = Box<dyn FnOnce() + Send + 'static>;
+
+struct Shared {
+    queue: Mutex<VecDeque<Task>>,
+    cv: Condvar,
+    shutdown: Mutex<bool>,
+}
+
+/// A fixed-size worker pool. Tasks are FIFO; `submit` returns a
+/// `JoinHandle` that can be awaited (blocking) for the task's result.
+pub struct ThreadPool {
+    shared: Arc<Shared>,
+    workers: Vec<thread::JoinHandle<()>>,
+}
+
+impl ThreadPool {
+    pub fn new(workers: usize) -> Self {
+        assert!(workers > 0);
+        let shared = Arc::new(Shared {
+            queue: Mutex::new(VecDeque::new()),
+            cv: Condvar::new(),
+            shutdown: Mutex::new(false),
+        });
+        let handles = (0..workers)
+            .map(|i| {
+                let s = shared.clone();
+                thread::Builder::new()
+                    .name(format!("geofs-worker-{i}"))
+                    .spawn(move || worker_loop(s))
+                    .expect("spawn worker")
+            })
+            .collect();
+        ThreadPool { shared, workers: handles }
+    }
+
+    pub fn worker_count(&self) -> usize {
+        self.workers.len()
+    }
+
+    /// Submit a closure; returns a handle yielding its result.
+    pub fn submit<T, F>(&self, f: F) -> JoinHandle<T>
+    where
+        T: Send + 'static,
+        F: FnOnce() -> T + Send + 'static,
+    {
+        let state = Arc::new(HandleState {
+            slot: Mutex::new(SlotState::Pending),
+            cv: Condvar::new(),
+        });
+        let s2 = state.clone();
+        let task: Task = Box::new(move || {
+            // Catch panics so a poisoned task doesn't kill the worker.
+            let result = std::panic::catch_unwind(std::panic::AssertUnwindSafe(f));
+            let mut slot = s2.slot.lock().unwrap();
+            *slot = match result {
+                Ok(v) => SlotState::Done(v),
+                Err(_) => SlotState::Panicked,
+            };
+            s2.cv.notify_all();
+        });
+        {
+            let mut q = self.shared.queue.lock().unwrap();
+            q.push_back(task);
+        }
+        self.shared.cv.notify_one();
+        JoinHandle { state }
+    }
+
+    /// Submit a batch and wait for all results (order preserved).
+    pub fn map<T, I, F>(&self, items: I, f: F) -> Vec<T>
+    where
+        T: Send + 'static,
+        I: IntoIterator,
+        I::Item: Send + 'static,
+        F: Fn(I::Item) -> T + Send + Sync + Clone + 'static,
+    {
+        let handles: Vec<_> = items
+            .into_iter()
+            .map(|item| {
+                let f = f.clone();
+                self.submit(move || f(item))
+            })
+            .collect();
+        handles.into_iter().map(|h| h.join()).collect()
+    }
+}
+
+impl Drop for ThreadPool {
+    fn drop(&mut self) {
+        *self.shared.shutdown.lock().unwrap() = true;
+        self.shared.cv.notify_all();
+        for h in self.workers.drain(..) {
+            let _ = h.join();
+        }
+    }
+}
+
+fn worker_loop(s: Arc<Shared>) {
+    loop {
+        let task = {
+            let mut q = s.queue.lock().unwrap();
+            loop {
+                if let Some(t) = q.pop_front() {
+                    break t;
+                }
+                if *s.shutdown.lock().unwrap() {
+                    return;
+                }
+                q = s.cv.wait(q).unwrap();
+            }
+        };
+        task();
+    }
+}
+
+enum SlotState<T> {
+    Pending,
+    Done(T),
+    Panicked,
+    Taken,
+}
+
+struct HandleState<T> {
+    slot: Mutex<SlotState<T>>,
+    cv: Condvar,
+}
+
+/// Blocking join handle for a submitted task.
+pub struct JoinHandle<T> {
+    state: Arc<HandleState<T>>,
+}
+
+impl<T> JoinHandle<T> {
+    /// Block until the task finishes. Panics if the task panicked
+    /// (propagating failure like `std::thread::JoinHandle`).
+    pub fn join(self) -> T {
+        let mut slot = self.state.slot.lock().unwrap();
+        loop {
+            match std::mem::replace(&mut *slot, SlotState::Taken) {
+                SlotState::Done(v) => return v,
+                SlotState::Panicked => panic!("task panicked"),
+                SlotState::Pending => {
+                    *slot = SlotState::Pending;
+                    slot = self.state.cv.wait(slot).unwrap();
+                }
+                SlotState::Taken => unreachable!("join called twice"),
+            }
+        }
+    }
+
+    /// Non-blocking check.
+    pub fn is_finished(&self) -> bool {
+        !matches!(*self.state.slot.lock().unwrap(), SlotState::Pending)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use std::sync::atomic::{AtomicUsize, Ordering};
+
+    #[test]
+    fn runs_tasks_and_returns_values() {
+        let pool = ThreadPool::new(4);
+        let h = pool.submit(|| 21 * 2);
+        assert_eq!(h.join(), 42);
+    }
+
+    #[test]
+    fn map_preserves_order() {
+        let pool = ThreadPool::new(8);
+        let out = pool.map(0..100u64, |i| i * i);
+        assert_eq!(out, (0..100u64).map(|i| i * i).collect::<Vec<_>>());
+    }
+
+    #[test]
+    fn all_workers_participate() {
+        let pool = ThreadPool::new(4);
+        let counter = Arc::new(AtomicUsize::new(0));
+        let hs: Vec<_> = (0..64)
+            .map(|_| {
+                let c = counter.clone();
+                pool.submit(move || {
+                    std::thread::sleep(std::time::Duration::from_millis(1));
+                    c.fetch_add(1, Ordering::SeqCst);
+                })
+            })
+            .collect();
+        for h in hs {
+            h.join();
+        }
+        assert_eq!(counter.load(Ordering::SeqCst), 64);
+    }
+
+    #[test]
+    fn panicked_task_does_not_kill_pool() {
+        let pool = ThreadPool::new(1);
+        let bad = pool.submit(|| panic!("boom"));
+        let good = pool.submit(|| 7);
+        assert!(std::panic::catch_unwind(std::panic::AssertUnwindSafe(|| bad.join())).is_err());
+        assert_eq!(good.join(), 7);
+    }
+
+    #[test]
+    fn shutdown_joins_cleanly() {
+        let pool = ThreadPool::new(2);
+        let h = pool.submit(|| 1);
+        assert_eq!(h.join(), 1);
+        drop(pool); // must not hang
+    }
+
+    #[test]
+    fn is_finished() {
+        let pool = ThreadPool::new(1);
+        let h = pool.submit(|| std::thread::sleep(std::time::Duration::from_millis(30)));
+        assert!(!h.is_finished());
+        std::thread::sleep(std::time::Duration::from_millis(80));
+        assert!(h.is_finished());
+        h.join();
+    }
+}

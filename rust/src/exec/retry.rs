@@ -1,0 +1,127 @@
+//! Retry with exponential backoff (§3.1.3 "retry failed actions, create
+//! alerts for non-recoverable failures").
+//!
+//! Backoff sleeps are *virtual* when a test clock is supplied — the
+//! scheduler and the geo failover tests drive time deterministically.
+
+use crate::types::Result;
+#[cfg(test)]
+use crate::types::FsError;
+use crate::util::Clock;
+
+#[derive(Debug, Clone)]
+pub struct RetryPolicy {
+    /// Maximum attempts including the first (>= 1).
+    pub max_attempts: u32,
+    /// Backoff before retry k (0-based) is `base_secs << k`, capped.
+    pub base_secs: i64,
+    pub max_backoff_secs: i64,
+    /// Only errors with `is_transient()` are retried.
+    pub retry_permanent: bool,
+}
+
+impl Default for RetryPolicy {
+    fn default() -> Self {
+        RetryPolicy { max_attempts: 4, base_secs: 1, max_backoff_secs: 60, retry_permanent: false }
+    }
+}
+
+impl RetryPolicy {
+    pub fn none() -> Self {
+        RetryPolicy { max_attempts: 1, ..Default::default() }
+    }
+
+    pub fn backoff_secs(&self, attempt: u32) -> i64 {
+        (self.base_secs << attempt.min(32)).min(self.max_backoff_secs)
+    }
+}
+
+/// Outcome of a retried operation, with attempt accounting for metrics.
+#[derive(Debug)]
+pub struct RetryOutcome<T> {
+    pub value: T,
+    pub attempts: u32,
+}
+
+/// Run `op` under `policy`, advancing `clock` by the backoff between
+/// attempts (virtual time — no OS sleep).
+pub fn retry_with<T>(
+    policy: &RetryPolicy,
+    clock: &Clock,
+    mut op: impl FnMut(u32) -> Result<T>,
+) -> Result<RetryOutcome<T>> {
+    let mut attempt = 0;
+    loop {
+        match op(attempt) {
+            Ok(value) => return Ok(RetryOutcome { value, attempts: attempt + 1 }),
+            Err(e) => {
+                let retryable = e.is_transient() || policy.retry_permanent;
+                attempt += 1;
+                if !retryable || attempt >= policy.max_attempts {
+                    return Err(e);
+                }
+                clock.advance(policy.backoff_secs(attempt - 1));
+            }
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn flaky(fail_times: u32) -> impl FnMut(u32) -> Result<u32> {
+        move |attempt| {
+            if attempt < fail_times {
+                Err(FsError::InjectedFault(format!("attempt {attempt}")))
+            } else {
+                Ok(attempt)
+            }
+        }
+    }
+
+    #[test]
+    fn succeeds_first_try() {
+        let c = Clock::fixed(0);
+        let out = retry_with(&RetryPolicy::default(), &c, flaky(0)).unwrap();
+        assert_eq!(out.attempts, 1);
+        assert_eq!(c.now(), 0); // no backoff
+    }
+
+    #[test]
+    fn retries_transient_until_success() {
+        let c = Clock::fixed(0);
+        let out = retry_with(&RetryPolicy::default(), &c, flaky(2)).unwrap();
+        assert_eq!(out.attempts, 3);
+        assert_eq!(c.now(), 1 + 2); // backoffs 1s, 2s
+    }
+
+    #[test]
+    fn gives_up_after_max_attempts() {
+        let c = Clock::fixed(0);
+        let err = retry_with(&RetryPolicy::default(), &c, flaky(10)).unwrap_err();
+        assert!(matches!(err, FsError::InjectedFault(_)));
+        assert_eq!(c.now(), 1 + 2 + 4); // 3 backoffs for 4 attempts
+    }
+
+    #[test]
+    fn permanent_errors_not_retried() {
+        let c = Clock::fixed(0);
+        let mut calls = 0;
+        let err = retry_with(&RetryPolicy::default(), &c, |_| {
+            calls += 1;
+            Err::<(), _>(FsError::NotFound("x".into()))
+        })
+        .unwrap_err();
+        assert!(matches!(err, FsError::NotFound(_)));
+        assert_eq!(calls, 1);
+    }
+
+    #[test]
+    fn backoff_capped() {
+        let p = RetryPolicy { max_attempts: 20, base_secs: 1, max_backoff_secs: 8, ..Default::default() };
+        assert_eq!(p.backoff_secs(0), 1);
+        assert_eq!(p.backoff_secs(3), 8);
+        assert_eq!(p.backoff_secs(10), 8);
+    }
+}

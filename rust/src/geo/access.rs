@@ -1,0 +1,203 @@
+//! Cross-region access vs local-replica access (§4.1.2, Fig 4).
+//!
+//! Two mechanisms for a consuming workspace in region C to read assets of
+//! a feature store homed in region H:
+//!
+//! * **CrossRegion** — data stays in H (geo-fence compliant); C pays
+//!   `rtt(C, H)` per lookup, staleness 0 relative to H.
+//! * **Replica** — reads a geo-replicated copy in C; local latency,
+//!   staleness up to the replication lag; not allowed for geo-fenced
+//!   stores.
+//!
+//! Routing prefers the mechanism the store's compliance policy allows,
+//! then the lower-latency option.
+
+use std::sync::Arc;
+
+use super::replication::GeoReplicator;
+use super::topology::GeoTopology;
+use crate::online_store::OnlineStore;
+use crate::types::{EntityId, FeatureRecord, Result, Timestamp};
+
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum AccessMechanism {
+    Local,
+    CrossRegion,
+    Replica,
+}
+
+/// Result of one routed lookup.
+#[derive(Debug, Clone)]
+pub struct RoutedLookup {
+    pub record: Option<FeatureRecord>,
+    pub mechanism: AccessMechanism,
+    /// Simulated end-to-end latency (topology WAN cost + local lookup).
+    pub latency_us: u64,
+    /// Replica staleness at read time (0 for local/cross-region).
+    pub staleness_secs: i64,
+}
+
+/// Router for online reads against a store homed in `home_region`.
+pub struct CrossRegionAccess {
+    pub topology: Arc<GeoTopology>,
+    pub home_region: String,
+    pub home_store: Arc<OnlineStore>,
+    /// Present when geo-replication is enabled for this store.
+    pub replicator: Option<Arc<GeoReplicator>>,
+    /// Geo-fenced stores must not be replicated out of region (§4.1.2
+    /// "data compliance issues").
+    pub geo_fenced: bool,
+}
+
+impl CrossRegionAccess {
+    /// Decide the mechanism for a consumer region.
+    pub fn route(&self, consumer_region: &str) -> AccessMechanism {
+        if consumer_region == self.home_region {
+            return AccessMechanism::Local;
+        }
+        if !self.geo_fenced {
+            if let Some(rep) = &self.replicator {
+                if rep.replica(consumer_region).is_some() {
+                    return AccessMechanism::Replica;
+                }
+            }
+        }
+        AccessMechanism::CrossRegion
+    }
+
+    /// Routed lookup with simulated latency accounting.
+    pub fn lookup(
+        &self,
+        consumer_region: &str,
+        table: &str,
+        entity: EntityId,
+        now: Timestamp,
+    ) -> Result<RoutedLookup> {
+        let mechanism = self.route(consumer_region);
+        match mechanism {
+            AccessMechanism::Local => {
+                let t0 = std::time::Instant::now();
+                let record = self.home_store.get(table, entity, now);
+                let compute = t0.elapsed().as_micros() as u64;
+                Ok(RoutedLookup {
+                    record,
+                    mechanism,
+                    latency_us: self.topology.rtt_us(consumer_region, consumer_region)? + compute,
+                    staleness_secs: 0,
+                })
+            }
+            AccessMechanism::CrossRegion => {
+                // Pay the WAN round trip to the home region.
+                let wan = self.topology.rtt_us(consumer_region, &self.home_region)?;
+                let t0 = std::time::Instant::now();
+                let record = self.home_store.get(table, entity, now);
+                let compute = t0.elapsed().as_micros() as u64;
+                Ok(RoutedLookup { record, mechanism, latency_us: wan + compute, staleness_secs: 0 })
+            }
+            AccessMechanism::Replica => {
+                let rep = self.replicator.as_ref().expect("routed to replica");
+                let store = rep.replica(consumer_region).expect("replica exists");
+                let t0 = std::time::Instant::now();
+                let record = store.get(table, entity, now);
+                let compute = t0.elapsed().as_micros() as u64;
+                Ok(RoutedLookup {
+                    record,
+                    mechanism,
+                    latency_us: self.topology.rtt_us(consumer_region, consumer_region)? + compute,
+                    staleness_secs: rep.staleness_secs(consumer_region, now),
+                })
+            }
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn rec(entity: u64, event: Timestamp, created: Timestamp, v: f32) -> FeatureRecord {
+        FeatureRecord::new(entity, event, created, vec![v])
+    }
+
+    fn setup(geo_fenced: bool, with_replica: bool) -> (CrossRegionAccess, Arc<OnlineStore>) {
+        let topology = Arc::new(GeoTopology::default_four_region());
+        let home = Arc::new(OnlineStore::new(2));
+        home.merge("t", &[rec(1, 100, 150, 42.0)], 150);
+        let replicator = with_replica.then(|| {
+            let eu = Arc::new(OnlineStore::new(2));
+            let r = Arc::new(GeoReplicator::new(vec![("westeurope".into(), eu, 30)]));
+            r.enqueue("t", &[rec(1, 100, 150, 42.0)], 150);
+            r.pump(1_000); // caught up
+            r
+        });
+        (
+            CrossRegionAccess {
+                topology,
+                home_region: "eastus".into(),
+                home_store: home.clone(),
+                replicator,
+                geo_fenced,
+            },
+            home,
+        )
+    }
+
+    #[test]
+    fn local_reads_are_cheap() {
+        let (a, _) = setup(false, false);
+        let out = a.lookup("eastus", "t", 1, 1_000).unwrap();
+        assert_eq!(out.mechanism, AccessMechanism::Local);
+        assert!(out.latency_us < 5_000, "local should be sub-ms-ish: {}", out.latency_us);
+        assert_eq!(out.record.unwrap().values[0], 42.0);
+    }
+
+    #[test]
+    fn cross_region_pays_wan_rtt() {
+        let (a, _) = setup(false, false);
+        let out = a.lookup("westeurope", "t", 1, 1_000).unwrap();
+        assert_eq!(out.mechanism, AccessMechanism::CrossRegion);
+        assert!(out.latency_us >= 80_000, "must include 80ms RTT: {}", out.latency_us);
+        assert_eq!(out.staleness_secs, 0);
+        assert!(out.record.is_some());
+    }
+
+    #[test]
+    fn replica_is_local_latency_but_stale() {
+        let (a, _) = setup(false, true);
+        let out = a.lookup("westeurope", "t", 1, 1_000).unwrap();
+        assert_eq!(out.mechanism, AccessMechanism::Replica);
+        assert!(out.latency_us < 5_000);
+        assert!(out.record.is_some());
+
+        // New write not yet pumped → replica still answers old data and
+        // reports staleness.
+        let rep = a.replicator.as_ref().unwrap();
+        a.home_store.merge("t", &[rec(1, 200, 250, 99.0)], 1_500);
+        rep.enqueue("t", &[rec(1, 200, 250, 99.0)], 1_500);
+        let out = a.lookup("westeurope", "t", 1, 1_510).unwrap();
+        assert_eq!(out.record.unwrap().values[0], 42.0); // stale value
+        assert_eq!(out.staleness_secs, 10);
+    }
+
+    #[test]
+    fn geo_fence_forces_cross_region() {
+        let (a, _) = setup(true, true);
+        let out = a.lookup("westeurope", "t", 1, 1_000).unwrap();
+        assert_eq!(out.mechanism, AccessMechanism::CrossRegion);
+    }
+
+    #[test]
+    fn region_without_replica_goes_cross_region() {
+        let (a, _) = setup(false, true);
+        let out = a.lookup("southeastasia", "t", 1, 1_000).unwrap();
+        assert_eq!(out.mechanism, AccessMechanism::CrossRegion);
+        assert!(out.latency_us >= 220_000);
+    }
+
+    #[test]
+    fn home_region_down_fails_cross_region_reads() {
+        let (a, _) = setup(false, false);
+        a.topology.set_down("eastus", true);
+        assert!(a.lookup("westeurope", "t", 1, 0).is_err());
+    }
+}

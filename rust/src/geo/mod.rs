@@ -1,0 +1,25 @@
+//! Geo-distribution (§2.1 "Regional presence", §3.1.2–§3.1.3, §4.1.2).
+//!
+//! The substrate here replaces Azure's regions and WAN (DESIGN.md §5): a
+//! simulated topology with a configurable inter-region latency matrix and
+//! injectable outages.  On top of it:
+//!
+//! * [`access`] — cross-region asset access (data stays in its home
+//!   region; consumers pay WAN latency) — the mechanism AzureML shipped.
+//! * [`replication`] — geo-replication with asynchronous lag (the
+//!   roadmap mechanism): local-latency reads, staleness > 0.
+//! * [`failover`] — region-down handling: restore metadata + scheduler
+//!   checkpoint in a standby region and resume without data loss.
+//!
+//! `benches/geo_access.rs` (experiment E6) quantifies the latency ↔
+//! staleness trade between the two access mechanisms.
+
+pub mod access;
+pub mod failover;
+pub mod replication;
+pub mod topology;
+
+pub use access::{AccessMechanism, CrossRegionAccess};
+pub use failover::{FailoverManager, RegionCheckpoint};
+pub use replication::GeoReplicator;
+pub use topology::GeoTopology;

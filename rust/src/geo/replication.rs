@@ -1,0 +1,171 @@
+//! Asynchronous geo-replication of online-store data (§4.1.2's
+//! geo-replication mechanism, on the paper's roadmap).
+//!
+//! The home region's merges are enqueued and become visible in each
+//! replica after the replication lag (WAN transfer + apply).  Reads in a
+//! replica region are local-latency but may be stale by up to the lag —
+//! the trade experiment E6 measures against cross-region access.
+
+use std::collections::{HashMap, VecDeque};
+use std::sync::{Arc, Mutex};
+
+use crate::online_store::OnlineStore;
+use crate::types::{FeatureRecord, Timestamp};
+
+struct Pending {
+    table: String,
+    records: Vec<FeatureRecord>,
+    visible_at: Timestamp,
+}
+
+/// Replicates online merges from a home store to replica stores.
+pub struct GeoReplicator {
+    replicas: HashMap<String, Arc<OnlineStore>>,
+    /// Per-replica apply queue.
+    queues: Mutex<HashMap<String, VecDeque<Pending>>>,
+    /// Replication lag per replica region (seconds on the processing
+    /// timeline).
+    lag_secs: HashMap<String, i64>,
+}
+
+impl GeoReplicator {
+    pub fn new(replicas: Vec<(String, Arc<OnlineStore>, i64)>) -> Self {
+        let mut map = HashMap::new();
+        let mut lag = HashMap::new();
+        let mut queues = HashMap::new();
+        for (region, store, lag_secs) in replicas {
+            map.insert(region.clone(), store);
+            lag.insert(region.clone(), lag_secs);
+            queues.insert(region, VecDeque::new());
+        }
+        GeoReplicator { replicas: map, queues: Mutex::new(queues), lag_secs: lag }
+    }
+
+    pub fn replica(&self, region: &str) -> Option<&Arc<OnlineStore>> {
+        self.replicas.get(region)
+    }
+
+    pub fn regions(&self) -> Vec<String> {
+        let mut r: Vec<_> = self.replicas.keys().cloned().collect();
+        r.sort();
+        r
+    }
+
+    /// Called after every home-region merge: enqueue for each replica.
+    pub fn enqueue(&self, table: &str, records: &[FeatureRecord], now: Timestamp) {
+        if records.is_empty() {
+            return;
+        }
+        let mut q = self.queues.lock().unwrap();
+        for (region, queue) in q.iter_mut() {
+            queue.push_back(Pending {
+                table: table.to_string(),
+                records: records.to_vec(),
+                visible_at: now + self.lag_secs[region],
+            });
+        }
+    }
+
+    /// Apply every queued batch that has become visible by `now`.
+    /// Returns records applied per region.
+    pub fn pump(&self, now: Timestamp) -> HashMap<String, u64> {
+        let mut applied = HashMap::new();
+        let mut q = self.queues.lock().unwrap();
+        for (region, queue) in q.iter_mut() {
+            let store = &self.replicas[region];
+            let mut n = 0u64;
+            while queue.front().map_or(false, |p| p.visible_at <= now) {
+                let p = queue.pop_front().unwrap();
+                let stats = store.merge(&p.table, &p.records, now);
+                n += stats.inserted + stats.skipped;
+            }
+            applied.insert(region.clone(), n);
+        }
+        applied
+    }
+
+    /// Worst-case staleness of a replica at `now`: age of its oldest
+    /// unapplied batch (0 when fully caught up).
+    pub fn staleness_secs(&self, region: &str, now: Timestamp) -> i64 {
+        let q = self.queues.lock().unwrap();
+        q.get(region)
+            .and_then(|queue| queue.front())
+            .map(|p| (now - (p.visible_at - self.lag_secs[region])).max(0))
+            .unwrap_or(0)
+    }
+
+    pub fn backlog(&self, region: &str) -> usize {
+        self.queues.lock().unwrap().get(region).map(|q| q.len()).unwrap_or(0)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn rec(entity: u64, event: Timestamp, created: Timestamp, v: f32) -> FeatureRecord {
+        FeatureRecord::new(entity, event, created, vec![v])
+    }
+
+    fn replicator(lag: i64) -> (GeoReplicator, Arc<OnlineStore>) {
+        let store = Arc::new(OnlineStore::new(2));
+        let r = GeoReplicator::new(vec![("westeurope".into(), store.clone(), lag)]);
+        (r, store)
+    }
+
+    #[test]
+    fn records_visible_after_lag() {
+        let (r, store) = replicator(60);
+        r.enqueue("t", &[rec(1, 100, 150, 1.0)], 1_000);
+        r.pump(1_030);
+        assert!(store.get("t", 1, 1_030).is_none(), "not visible before lag");
+        assert_eq!(r.backlog("westeurope"), 1);
+        r.pump(1_060);
+        assert_eq!(store.get("t", 1, 1_060).unwrap().values[0], 1.0);
+        assert_eq!(r.backlog("westeurope"), 0);
+    }
+
+    #[test]
+    fn staleness_measures_oldest_pending() {
+        let (r, _) = replicator(120);
+        assert_eq!(r.staleness_secs("westeurope", 0), 0);
+        r.enqueue("t", &[rec(1, 1, 2, 1.0)], 1_000);
+        r.enqueue("t", &[rec(2, 1, 2, 1.0)], 1_050);
+        assert_eq!(r.staleness_secs("westeurope", 1_080), 80);
+        r.pump(1_120); // first batch applies
+        assert_eq!(r.staleness_secs("westeurope", 1_130), 80); // second pending, enqueued 1050
+        r.pump(1_200);
+        assert_eq!(r.staleness_secs("westeurope", 1_300), 0);
+    }
+
+    #[test]
+    fn replication_preserves_alg2_ordering() {
+        // Batches applied in order converge replicas to the home state
+        // even when a late-arriving record was merged in between.
+        let (r, store) = replicator(10);
+        r.enqueue("t", &[rec(1, 100, 110, 1.0)], 0);
+        r.enqueue("t", &[rec(1, 100, 300, 2.0)], 5); // recompute
+        r.enqueue("t", &[rec(1, 90, 400, 0.5)], 6); // older event: no-op
+        r.pump(1_000);
+        let got = store.get("t", 1, 1_000).unwrap();
+        assert_eq!(got.version(), (100, 300));
+        assert_eq!(got.values[0], 2.0);
+    }
+
+    #[test]
+    fn multiple_replicas_independent_lag() {
+        let eu = Arc::new(OnlineStore::new(2));
+        let asia = Arc::new(OnlineStore::new(2));
+        let r = GeoReplicator::new(vec![
+            ("westeurope".into(), eu.clone(), 30),
+            ("southeastasia".into(), asia.clone(), 90),
+        ]);
+        r.enqueue("t", &[rec(1, 1, 2, 1.0)], 100);
+        r.pump(140);
+        assert!(eu.get("t", 1, 140).is_some());
+        assert!(asia.get("t", 1, 140).is_none());
+        r.pump(190);
+        assert!(asia.get("t", 1, 190).is_some());
+        assert_eq!(r.regions(), vec!["southeastasia", "westeurope"]);
+    }
+}

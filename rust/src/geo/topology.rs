@@ -1,0 +1,163 @@
+//! Region topology: names, pairwise latency, and health.
+
+use std::collections::{HashMap, HashSet};
+use std::sync::RwLock;
+
+use crate::types::{FsError, Result};
+
+/// Simulated multi-region topology.
+///
+/// Latencies are one-way microseconds; `rtt_us` doubles them. Defaults
+/// are calibrated to public cloud inter-region numbers (same-region
+/// ~0.5 ms RTT, cross-continent ~70–150 ms RTT).
+#[derive(Debug)]
+pub struct GeoTopology {
+    regions: Vec<String>,
+    one_way_us: HashMap<(String, String), u64>,
+    down: RwLock<HashSet<String>>,
+    /// Local (in-region) lookup one-way latency.
+    local_us: u64,
+}
+
+impl GeoTopology {
+    /// Build a topology from `(from, to, one_way_us)` entries; latency is
+    /// symmetrized.
+    pub fn new(regions: &[&str], links: &[(&str, &str, u64)], local_us: u64) -> Self {
+        let mut one_way = HashMap::new();
+        for (a, b, us) in links {
+            one_way.insert((a.to_string(), b.to_string()), *us);
+            one_way.insert((b.to_string(), a.to_string()), *us);
+        }
+        GeoTopology {
+            regions: regions.iter().map(|s| s.to_string()).collect(),
+            one_way_us: one_way,
+            down: RwLock::new(HashSet::new()),
+            local_us,
+        }
+    }
+
+    /// The 4-region default used by examples and benches: two US regions,
+    /// one EU, one APAC (public-cloud-like numbers).
+    pub fn default_four_region() -> Self {
+        Self::new(
+            &["eastus", "westus", "westeurope", "southeastasia"],
+            &[
+                ("eastus", "westus", 30_000),
+                ("eastus", "westeurope", 40_000),
+                ("eastus", "southeastasia", 110_000),
+                ("westus", "westeurope", 70_000),
+                ("westus", "southeastasia", 85_000),
+                ("westeurope", "southeastasia", 90_000),
+            ],
+            250,
+        )
+    }
+
+    pub fn regions(&self) -> &[String] {
+        &self.regions
+    }
+
+    pub fn has_region(&self, r: &str) -> bool {
+        self.regions.iter().any(|x| x == r)
+    }
+
+    pub fn is_up(&self, r: &str) -> bool {
+        !self.down.read().unwrap().contains(r)
+    }
+
+    /// Inject an outage (§3.1.2 "when one region is down").
+    pub fn set_down(&self, r: &str, down: bool) {
+        let mut g = self.down.write().unwrap();
+        if down {
+            g.insert(r.to_string());
+        } else {
+            g.remove(r);
+        }
+    }
+
+    fn check_up(&self, r: &str) -> Result<()> {
+        if !self.has_region(r) {
+            return Err(FsError::NotFound(format!("region '{r}'")));
+        }
+        if !self.is_up(r) {
+            return Err(FsError::RegionDown(r.to_string()));
+        }
+        Ok(())
+    }
+
+    /// One-way latency in µs between two (up) regions.
+    pub fn one_way_us(&self, from: &str, to: &str) -> Result<u64> {
+        self.check_up(from)?;
+        self.check_up(to)?;
+        if from == to {
+            return Ok(self.local_us);
+        }
+        self.one_way_us
+            .get(&(from.to_string(), to.to_string()))
+            .copied()
+            .ok_or_else(|| FsError::Other(format!("no link {from} → {to}")))
+    }
+
+    /// Round-trip latency in µs.
+    pub fn rtt_us(&self, from: &str, to: &str) -> Result<u64> {
+        Ok(self.one_way_us(from, to)? * 2)
+    }
+
+    /// Nearest *up* region to `from`, excluding `from` itself — the
+    /// failover target choice.
+    pub fn nearest_standby(&self, from: &str) -> Option<String> {
+        self.regions
+            .iter()
+            .filter(|r| *r != from && self.is_up(r))
+            .min_by_key(|r| {
+                self.one_way_us
+                    .get(&(from.to_string(), r.to_string()))
+                    .copied()
+                    .unwrap_or(u64::MAX)
+            })
+            .cloned()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn latency_symmetric_and_local() {
+        let t = GeoTopology::default_four_region();
+        assert_eq!(t.one_way_us("eastus", "westus").unwrap(), 30_000);
+        assert_eq!(t.one_way_us("westus", "eastus").unwrap(), 30_000);
+        assert_eq!(t.one_way_us("eastus", "eastus").unwrap(), 250);
+        assert_eq!(t.rtt_us("eastus", "westeurope").unwrap(), 80_000);
+    }
+
+    #[test]
+    fn outage_errors_and_recovers() {
+        let t = GeoTopology::default_four_region();
+        t.set_down("westus", true);
+        assert!(matches!(
+            t.one_way_us("eastus", "westus"),
+            Err(FsError::RegionDown(_))
+        ));
+        assert!(!t.is_up("westus"));
+        t.set_down("westus", false);
+        assert!(t.one_way_us("eastus", "westus").is_ok());
+    }
+
+    #[test]
+    fn unknown_region_not_found() {
+        let t = GeoTopology::default_four_region();
+        assert!(matches!(t.one_way_us("eastus", "mars"), Err(FsError::NotFound(_))));
+    }
+
+    #[test]
+    fn nearest_standby_picks_lowest_latency_up_region() {
+        let t = GeoTopology::default_four_region();
+        assert_eq!(t.nearest_standby("eastus").unwrap(), "westus");
+        t.set_down("westus", true);
+        assert_eq!(t.nearest_standby("eastus").unwrap(), "westeurope");
+        t.set_down("westeurope", true);
+        assert_eq!(t.nearest_standby("eastus").unwrap(), "southeastasia");
+    }
+}

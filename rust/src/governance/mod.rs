@@ -1,0 +1,10 @@
+//! Feature governance (§2.1): RBAC and audit logging.
+//!
+//! Also carries the hub-and-spoke sharing model (§4.1.1): consuming
+//! workspaces (spokes) are granted access to feature-store assets (the
+//! hub), including cross-region grants (§4.1.2's access-control
+//! mechanism, the one AzureML shipped).
+
+pub mod rbac;
+
+pub use rbac::{Action, AuditEntry, Grant, Principal, Rbac, Role};

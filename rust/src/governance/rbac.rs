@@ -1,0 +1,238 @@
+//! Role-based access control + audit log.
+
+use std::collections::HashMap;
+use std::sync::Mutex;
+
+use crate::types::{FsError, Result, Timestamp};
+
+/// Something that can be granted access.
+#[derive(Debug, Clone, PartialEq, Eq, Hash)]
+pub struct Principal(pub String);
+
+/// Built-in roles, ordered by privilege.
+#[derive(Debug, Clone, Copy, PartialEq, Eq, PartialOrd, Ord)]
+pub enum Role {
+    /// Read feature values (online/offline retrieval).
+    Consumer,
+    /// Consumer + define/materialize feature sets.
+    Producer,
+    /// Producer + manage stores, grants, policies.
+    Admin,
+}
+
+/// Actions checked against roles.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum Action {
+    ReadFeatures,
+    WriteAssets,
+    Materialize,
+    ManageStore,
+    ManageGrants,
+}
+
+impl Action {
+    fn minimum_role(self) -> Role {
+        match self {
+            Action::ReadFeatures => Role::Consumer,
+            Action::WriteAssets | Action::Materialize => Role::Producer,
+            Action::ManageStore | Action::ManageGrants => Role::Admin,
+        }
+    }
+
+    pub fn name(self) -> &'static str {
+        match self {
+            Action::ReadFeatures => "read_features",
+            Action::WriteAssets => "write_assets",
+            Action::Materialize => "materialize",
+            Action::ManageStore => "manage_store",
+            Action::ManageGrants => "manage_grants",
+        }
+    }
+}
+
+/// A grant: principal → role on a feature store, from a workspace
+/// (spoke). `workspace_region` ≠ store region ⇒ cross-region access
+/// (§4.1.2), which the geo layer routes accordingly.
+#[derive(Debug, Clone, PartialEq)]
+pub struct Grant {
+    pub principal: Principal,
+    pub store: String,
+    pub role: Role,
+    pub workspace: String,
+    pub workspace_region: String,
+}
+
+#[derive(Debug, Clone)]
+pub struct AuditEntry {
+    pub at: Timestamp,
+    pub principal: Principal,
+    pub action: &'static str,
+    pub resource: String,
+    pub allowed: bool,
+}
+
+/// The RBAC engine + audit log.
+#[derive(Debug, Default)]
+pub struct Rbac {
+    grants: Mutex<HashMap<(Principal, String), Grant>>,
+    audit: Mutex<Vec<AuditEntry>>,
+}
+
+impl Rbac {
+    pub fn new() -> Self {
+        Self::default()
+    }
+
+    pub fn grant(&self, grant: Grant) {
+        self.grants
+            .lock()
+            .unwrap()
+            .insert((grant.principal.clone(), grant.store.clone()), grant);
+    }
+
+    pub fn revoke(&self, principal: &Principal, store: &str) -> Result<()> {
+        self.grants
+            .lock()
+            .unwrap()
+            .remove(&(principal.clone(), store.to_string()))
+            .map(|_| ())
+            .ok_or_else(|| FsError::NotFound(format!("grant for {principal:?} on '{store}'")))
+    }
+
+    /// Check + audit. Returns the grant so callers can route by the
+    /// workspace region.
+    pub fn check(
+        &self,
+        principal: &Principal,
+        store: &str,
+        action: Action,
+        now: Timestamp,
+    ) -> Result<Grant> {
+        let grants = self.grants.lock().unwrap();
+        let grant = grants.get(&(principal.clone(), store.to_string()));
+        let allowed = grant.map_or(false, |g| g.role >= action.minimum_role());
+        self.audit.lock().unwrap().push(AuditEntry {
+            at: now,
+            principal: principal.clone(),
+            action: action.name(),
+            resource: store.to_string(),
+            allowed,
+        });
+        match (grant, allowed) {
+            (Some(g), true) => Ok(g.clone()),
+            _ => Err(FsError::AccessDenied {
+                principal: principal.0.clone(),
+                action: action.name().to_string(),
+                resource: store.to_string(),
+            }),
+        }
+    }
+
+    /// Spokes attached to a store (hub) — Fig 4's sharing view.
+    pub fn spokes(&self, store: &str) -> Vec<Grant> {
+        let mut out: Vec<Grant> = self
+            .grants
+            .lock()
+            .unwrap()
+            .values()
+            .filter(|g| g.store == store)
+            .cloned()
+            .collect();
+        out.sort_by(|a, b| a.workspace.cmp(&b.workspace));
+        out
+    }
+
+    pub fn audit_log(&self) -> Vec<AuditEntry> {
+        self.audit.lock().unwrap().clone()
+    }
+
+    pub fn denied_count(&self) -> usize {
+        self.audit.lock().unwrap().iter().filter(|e| !e.allowed).count()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn grant(p: &str, store: &str, role: Role, region: &str) -> Grant {
+        Grant {
+            principal: Principal(p.into()),
+            store: store.into(),
+            role,
+            workspace: format!("{p}-ws"),
+            workspace_region: region.into(),
+        }
+    }
+
+    #[test]
+    fn role_hierarchy_enforced() {
+        let r = Rbac::new();
+        r.grant(grant("alice", "fs1", Role::Consumer, "eastus"));
+        r.grant(grant("bob", "fs1", Role::Producer, "eastus"));
+        r.grant(grant("carol", "fs1", Role::Admin, "westeu"));
+
+        let p = |s: &str| Principal(s.into());
+        assert!(r.check(&p("alice"), "fs1", Action::ReadFeatures, 0).is_ok());
+        assert!(r.check(&p("alice"), "fs1", Action::Materialize, 1).is_err());
+        assert!(r.check(&p("bob"), "fs1", Action::Materialize, 2).is_ok());
+        assert!(r.check(&p("bob"), "fs1", Action::ManageGrants, 3).is_err());
+        assert!(r.check(&p("carol"), "fs1", Action::ManageGrants, 4).is_ok());
+        // No grant at all.
+        assert!(matches!(
+            r.check(&p("mallory"), "fs1", Action::ReadFeatures, 5),
+            Err(FsError::AccessDenied { .. })
+        ));
+    }
+
+    #[test]
+    fn grants_are_per_store() {
+        let r = Rbac::new();
+        r.grant(grant("alice", "fs1", Role::Admin, "eastus"));
+        assert!(r.check(&Principal("alice".into()), "fs2", Action::ReadFeatures, 0).is_err());
+    }
+
+    #[test]
+    fn revoke_removes_access() {
+        let r = Rbac::new();
+        let alice = Principal("alice".into());
+        r.grant(grant("alice", "fs1", Role::Consumer, "eastus"));
+        assert!(r.check(&alice, "fs1", Action::ReadFeatures, 0).is_ok());
+        r.revoke(&alice, "fs1").unwrap();
+        assert!(r.check(&alice, "fs1", Action::ReadFeatures, 1).is_err());
+        assert!(r.revoke(&alice, "fs1").is_err());
+    }
+
+    #[test]
+    fn audit_records_allowed_and_denied() {
+        let r = Rbac::new();
+        r.grant(grant("alice", "fs1", Role::Consumer, "eastus"));
+        let alice = Principal("alice".into());
+        let _ = r.check(&alice, "fs1", Action::ReadFeatures, 10);
+        let _ = r.check(&alice, "fs1", Action::ManageStore, 11);
+        let log = r.audit_log();
+        assert_eq!(log.len(), 2);
+        assert!(log[0].allowed && !log[1].allowed);
+        assert_eq!(r.denied_count(), 1);
+    }
+
+    #[test]
+    fn spokes_lists_cross_region_workspaces() {
+        let r = Rbac::new();
+        r.grant(grant("alice", "fs1", Role::Consumer, "eastus"));
+        r.grant(grant("bob", "fs1", Role::Consumer, "westeu"));
+        r.grant(grant("zed", "fs2", Role::Consumer, "eastus"));
+        let spokes = r.spokes("fs1");
+        assert_eq!(spokes.len(), 2);
+        assert!(spokes.iter().any(|g| g.workspace_region == "westeu"));
+    }
+
+    #[test]
+    fn grant_update_replaces_role() {
+        let r = Rbac::new();
+        let alice = Principal("alice".into());
+        r.grant(grant("alice", "fs1", Role::Consumer, "eastus"));
+        r.grant(grant("alice", "fs1", Role::Admin, "eastus"));
+        assert!(r.check(&alice, "fs1", Action::ManageStore, 0).is_ok());
+    }
+}

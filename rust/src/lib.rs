@@ -1,0 +1,46 @@
+//! # geofs — managed geo-distributed feature store
+//!
+//! Reproduction of *"Managed Geo-Distributed Feature Store: Architecture
+//! and System Design"* (Microsoft, 2023) as a three-layer Rust + JAX +
+//! Pallas system:
+//!
+//! * **Layer 3 (this crate)** — the managed control plane: asset catalog,
+//!   context-aware scheduler, materialization engine, offline/online
+//!   stores, point-in-time query engine, geo topology, serving router,
+//!   lineage, monitoring and governance.
+//! * **Layer 2 (python/compile/model.py)** — the feature transformation
+//!   graph in JAX, AOT-lowered to HLO text artifacts at build time.
+//! * **Layer 1 (python/compile/kernels/rolling.py)** — the rolling-window
+//!   aggregation Pallas kernel inside that graph.
+//!
+//! Python never runs at request time: [`runtime`] loads the AOT artifacts
+//! via PJRT and executes them from the materialization hot path.
+//!
+//! Start with [`coordinator::FeatureStore`] (see `examples/quickstart.rs`).
+
+pub mod benchkit;
+pub mod exec;
+pub mod testkit;
+pub mod types;
+pub mod util;
+
+// Modules are enabled as they are implemented (bottom-up build order).
+pub mod config;
+pub mod coordinator;
+pub mod dsl;
+pub mod geo;
+pub mod sim;
+pub mod governance;
+pub mod lineage;
+pub mod materialize;
+pub mod monitor;
+pub mod serving;
+pub mod metadata;
+pub mod query;
+pub mod scheduler;
+pub mod offline_store;
+pub mod online_store;
+pub mod runtime;
+pub mod source;
+
+pub use types::{FsError, Result};

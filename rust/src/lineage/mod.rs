@@ -1,0 +1,223 @@
+//! Feature–model lineage (§4.6).
+//!
+//! Challenges the paper calls out: scale (a model can use hundreds of
+//! features) and cross-region visibility (the store lives in one region,
+//! models deploy anywhere).  The graph keeps compact integer-interned
+//! adjacency in both directions so "features of model" and "models using
+//! feature" are O(degree), and every edge is tagged with the deployment
+//! region so a global view can be assembled per region or across all.
+
+use std::collections::{HashMap, HashSet};
+use std::sync::RwLock;
+
+use crate::query::spec::FeatureRef;
+use crate::types::Timestamp;
+
+/// One deployed model version.
+#[derive(Debug, Clone, PartialEq, Eq, Hash)]
+pub struct ModelId {
+    pub name: String,
+    pub version: u32,
+}
+
+#[derive(Debug, Clone)]
+pub struct LineageEdge {
+    pub model: ModelId,
+    pub feature: FeatureRef,
+    /// Region the model is deployed in (may differ from the store's).
+    pub region: String,
+    pub recorded_at: Timestamp,
+}
+
+#[derive(Debug, Default)]
+struct Graph {
+    models: Vec<ModelId>,
+    model_idx: HashMap<ModelId, usize>,
+    features: Vec<FeatureRef>,
+    feature_idx: HashMap<FeatureRef, usize>,
+    /// model → (feature, region, at)
+    uses: Vec<Vec<(usize, String, Timestamp)>>,
+    /// feature → models
+    used_by: Vec<Vec<usize>>,
+}
+
+/// Thread-safe lineage tracker.
+#[derive(Debug, Default)]
+pub struct Lineage {
+    g: RwLock<Graph>,
+}
+
+impl Lineage {
+    pub fn new() -> Self {
+        Self::default()
+    }
+
+    /// Record that `model` (deployed in `region`) uses `features`.
+    /// Idempotent per (model, feature).
+    pub fn record(&self, model: ModelId, features: &[FeatureRef], region: &str, at: Timestamp) {
+        let mut g = self.g.write().unwrap();
+        let mi = match g.model_idx.get(&model) {
+            Some(&i) => i,
+            None => {
+                let i = g.models.len();
+                g.models.push(model.clone());
+                g.model_idx.insert(model, i);
+                g.uses.push(Vec::new());
+                i
+            }
+        };
+        for f in features {
+            let fi = match g.feature_idx.get(f) {
+                Some(&i) => i,
+                None => {
+                    let i = g.features.len();
+                    g.features.push(f.clone());
+                    g.feature_idx.insert(f.clone(), i);
+                    g.used_by.push(Vec::new());
+                    i
+                }
+            };
+            if !g.uses[mi].iter().any(|(existing, _, _)| *existing == fi) {
+                g.uses[mi].push((fi, region.to_string(), at));
+                g.used_by[fi].push(mi);
+            }
+        }
+    }
+
+    /// Features a model depends on (avoids the paper's "manual effort to
+    /// cherry-pick features").
+    pub fn features_of(&self, model: &ModelId) -> Vec<FeatureRef> {
+        let g = self.g.read().unwrap();
+        g.model_idx
+            .get(model)
+            .map(|&mi| g.uses[mi].iter().map(|(fi, _, _)| g.features[*fi].clone()).collect())
+            .unwrap_or_default()
+    }
+
+    /// Models consuming a feature — the impact set of changing it.
+    pub fn models_using(&self, feature: &FeatureRef) -> Vec<ModelId> {
+        let g = self.g.read().unwrap();
+        g.feature_idx
+            .get(feature)
+            .map(|&fi| g.used_by[fi].iter().map(|&mi| g.models[mi].clone()).collect())
+            .unwrap_or_default()
+    }
+
+    /// Models consuming *any* feature of a feature set version — what
+    /// must be validated before deleting/deprecating it.
+    pub fn models_using_feature_set(&self, feature_set: &str, version: u32) -> Vec<ModelId> {
+        let g = self.g.read().unwrap();
+        let mut seen = HashSet::new();
+        let mut out = Vec::new();
+        for (fi, f) in g.features.iter().enumerate() {
+            if f.feature_set == feature_set && f.version == version {
+                for &mi in &g.used_by[fi] {
+                    if seen.insert(mi) {
+                        out.push(g.models[mi].clone());
+                    }
+                }
+            }
+        }
+        out
+    }
+
+    /// Global view (§4.6): per-region (models, edges) counts.
+    pub fn global_view(&self) -> Vec<(String, usize, usize)> {
+        let g = self.g.read().unwrap();
+        let mut per_region: HashMap<String, (HashSet<usize>, usize)> = HashMap::new();
+        for (mi, uses) in g.uses.iter().enumerate() {
+            for (_, region, _) in uses {
+                let e = per_region.entry(region.clone()).or_default();
+                e.0.insert(mi);
+                e.1 += 1;
+            }
+        }
+        let mut out: Vec<_> = per_region
+            .into_iter()
+            .map(|(r, (models, edges))| (r, models.len(), edges))
+            .collect();
+        out.sort();
+        out
+    }
+
+    pub fn edge_count(&self) -> usize {
+        self.g.read().unwrap().uses.iter().map(Vec::len).sum()
+    }
+
+    pub fn model_count(&self) -> usize {
+        self.g.read().unwrap().models.len()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn model(name: &str, v: u32) -> ModelId {
+        ModelId { name: name.into(), version: v }
+    }
+
+    fn fref(s: &str) -> FeatureRef {
+        FeatureRef::parse(s).unwrap()
+    }
+
+    #[test]
+    fn bidirectional_lookup() {
+        let l = Lineage::new();
+        l.record(model("churn", 1), &[fref("txn:1:sum"), fref("txn:1:mean")], "eastus", 10);
+        l.record(model("fraud", 3), &[fref("txn:1:sum")], "westeu", 20);
+
+        assert_eq!(l.features_of(&model("churn", 1)).len(), 2);
+        let users = l.models_using(&fref("txn:1:sum"));
+        assert_eq!(users.len(), 2);
+        assert!(l.models_using(&fref("txn:1:max")).is_empty());
+        assert!(l.features_of(&model("nope", 1)).is_empty());
+    }
+
+    #[test]
+    fn record_is_idempotent() {
+        let l = Lineage::new();
+        for _ in 0..3 {
+            l.record(model("m", 1), &[fref("a:1:x")], "eastus", 5);
+        }
+        assert_eq!(l.edge_count(), 1);
+        assert_eq!(l.models_using(&fref("a:1:x")).len(), 1);
+    }
+
+    #[test]
+    fn feature_set_impact_analysis() {
+        let l = Lineage::new();
+        l.record(model("m1", 1), &[fref("txn:1:sum")], "eastus", 1);
+        l.record(model("m2", 1), &[fref("txn:1:mean"), fref("txn:1:sum")], "eastus", 2);
+        l.record(model("m3", 1), &[fref("txn:2:sum")], "eastus", 3);
+        let impacted = l.models_using_feature_set("txn", 1);
+        assert_eq!(impacted.len(), 2);
+        assert_eq!(l.models_using_feature_set("txn", 2).len(), 1);
+        assert!(l.models_using_feature_set("other", 1).is_empty());
+    }
+
+    #[test]
+    fn cross_region_global_view() {
+        let l = Lineage::new();
+        l.record(model("m1", 1), &[fref("a:1:x"), fref("a:1:y")], "eastus", 1);
+        l.record(model("m2", 1), &[fref("a:1:x")], "westeu", 2);
+        let view = l.global_view();
+        assert_eq!(view.len(), 2);
+        assert!(view.contains(&("eastus".to_string(), 1, 2)));
+        assert!(view.contains(&("westeu".to_string(), 1, 1)));
+    }
+
+    #[test]
+    fn scales_to_hundreds_of_features_per_model() {
+        let l = Lineage::new();
+        let features: Vec<FeatureRef> =
+            (0..500).map(|i| fref(&format!("fs{}:1:f{i}", i % 10))).collect();
+        for m in 0..100 {
+            l.record(model(&format!("m{m}"), 1), &features, "eastus", m as i64);
+        }
+        assert_eq!(l.model_count(), 100);
+        assert_eq!(l.edge_count(), 100 * 500);
+        assert_eq!(l.models_using(&features[0]).len(), 100);
+        assert_eq!(l.features_of(&model("m42", 1)).len(), 500);
+    }
+}

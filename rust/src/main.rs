@@ -1,0 +1,307 @@
+//! `geofs` — the managed geo-distributed feature store CLI (Layer 3
+//! entrypoint).
+//!
+//! Subcommands (hand-rolled parsing; clap is unavailable offline):
+//!
+//! ```text
+//! geofs demo       [--customers N] [--days N] [--no-engine]
+//! geofs serve      [--config FILE] [--requests N]
+//! geofs materialize [--config FILE] [--days N]
+//! geofs backfill   [--days N]       one-time backfill over history
+//! geofs bootstrap  [--direction offline-to-online|online-to-offline]
+//! geofs search     <text>           asset search
+//! geofs metrics                     dump the metrics registry
+//! geofs artifacts                   list AOT artifacts
+//! ```
+
+use std::sync::Arc;
+
+use geofs::config::Config;
+use geofs::coordinator::{FeatureStore, OpenOptions};
+use geofs::metadata::catalog::SearchQuery;
+use geofs::query::pit::PitConfig;
+use geofs::sim::{ChurnWorkload, ChurnWorkloadConfig};
+use geofs::types::time::{fmt_secs, DAY};
+use geofs::types::FeatureWindow;
+use geofs::util::init_logging;
+
+struct Args {
+    cmd: String,
+    flags: std::collections::HashMap<String, String>,
+    positional: Vec<String>,
+}
+
+fn parse_args() -> Args {
+    let mut args = std::env::args().skip(1);
+    let cmd = args.next().unwrap_or_else(|| "help".to_string());
+    let mut flags = std::collections::HashMap::new();
+    let mut positional = Vec::new();
+    let rest: Vec<String> = args.collect();
+    let mut i = 0;
+    while i < rest.len() {
+        if let Some(name) = rest[i].strip_prefix("--") {
+            if i + 1 < rest.len() && !rest[i + 1].starts_with("--") {
+                flags.insert(name.to_string(), rest[i + 1].clone());
+                i += 2;
+            } else {
+                flags.insert(name.to_string(), "true".to_string());
+                i += 1;
+            }
+        } else {
+            positional.push(rest[i].clone());
+            i += 1;
+        }
+    }
+    Args { cmd, flags, positional }
+}
+
+impl Args {
+    fn usize(&self, name: &str, default: usize) -> usize {
+        self.flags.get(name).and_then(|v| v.parse().ok()).unwrap_or(default)
+    }
+    fn i64(&self, name: &str, default: i64) -> i64 {
+        self.flags.get(name).and_then(|v| v.parse().ok()).unwrap_or(default)
+    }
+    fn bool(&self, name: &str) -> bool {
+        self.flags.get(name).map(|v| v == "true").unwrap_or(false)
+    }
+    fn str(&self, name: &str) -> Option<&str> {
+        self.flags.get(name).map(String::as_str)
+    }
+}
+
+fn load_config(args: &Args) -> anyhow::Result<Config> {
+    Ok(match args.str("config") {
+        Some(path) => Config::load(path)?,
+        None => Config::default_geo(),
+    })
+}
+
+fn open_with_workload(
+    args: &Args,
+) -> anyhow::Result<(Arc<FeatureStore>, ChurnWorkload)> {
+    let config = load_config(args)?;
+    let fs = FeatureStore::open(
+        config,
+        OpenOptions { with_engine: !args.bool("no-engine"), ..Default::default() },
+    )?;
+    let workload = ChurnWorkload::install(
+        &fs,
+        ChurnWorkloadConfig {
+            customers: args.usize("customers", 64),
+            days: args.i64("days", 14),
+            seed: args.i64("seed", 42) as u64,
+            ..Default::default()
+        },
+    )?;
+    Ok((fs, workload))
+}
+
+/// Replay the deployment's life day by day: each daily tick materializes
+/// the previous day, so records carry realistic creation timestamps (a
+/// one-shot tick at the end would stamp everything "now" and PIT would
+/// correctly refuse to serve it to earlier observations).
+fn materialize_history(fs: &FeatureStore, w: &ChurnWorkload, days: i64) -> anyhow::Result<()> {
+    let mut jobs = [0usize; 2];
+    let mut records = [0u64; 2];
+    for day in 1..=days {
+        fs.clock.set(day * DAY);
+        for (i, table) in [&w.txn_table, &w.interactions_table].iter().enumerate() {
+            let outcomes = fs.materialize_tick(table)?;
+            jobs[i] += outcomes.len();
+            records[i] += outcomes.iter().map(|o| o.records).sum::<u64>();
+        }
+    }
+    for (i, table) in [&w.txn_table, &w.interactions_table].iter().enumerate() {
+        let f = fs.table_freshness(table).unwrap();
+        println!(
+            "materialized {table}: {} job(s), {} records, staleness={}, within_sla={}",
+            jobs[i],
+            records[i],
+            fmt_secs(f.staleness_secs),
+            f.within_sla
+        );
+    }
+    Ok(())
+}
+
+fn cmd_demo(args: &Args) -> anyhow::Result<()> {
+    let (fs, w) = open_with_workload(args)?;
+    let days = args.i64("days", 14);
+    println!("== geofs demo: churn workload ({} customers, {days} days) ==", w.cfg.customers);
+    materialize_history(&fs, &w, days)?;
+
+    // Online reads from every region.
+    let regions: Vec<String> = fs.config.regions.clone();
+    for (key, region) in w.serving_trace(8, &regions) {
+        let out = fs.get_online(&w.principal, &w.txn_table, &key, &region)?;
+        println!(
+            "lookup {key} from {region:<14} mechanism={:?} latency={}µs hit={}",
+            out.mechanism,
+            out.latency_us,
+            out.record.is_some()
+        );
+    }
+
+    // PIT training frame.
+    let spine = w.observation_spine(32);
+    let observations: Vec<(String, i64)> =
+        spine.iter().map(|(k, ts, _)| (k.clone(), *ts)).collect();
+    let frame = fs.get_training_frame(
+        &w.principal,
+        Some(geofs::lineage::ModelId { name: "churn".into(), version: 1 }),
+        &observations,
+        &w.model_features(),
+        PitConfig::default(),
+        fs.config.home_region(),
+    )?;
+    println!(
+        "training frame: {} rows × {} features, fill_rate={:.2}",
+        frame.rows.len(),
+        frame.columns.len(),
+        frame.fill_rate()
+    );
+    println!("\n{}", fs.metrics.render(None));
+    Ok(())
+}
+
+fn cmd_serve(args: &Args) -> anyhow::Result<()> {
+    let (fs, w) = open_with_workload(args)?;
+    let days = args.i64("days", 7);
+    materialize_history(&fs, &w, days)?;
+    let n = args.usize("requests", 10_000);
+    let regions: Vec<String> = fs.config.regions.clone();
+    let trace = w.serving_trace(n, &regions);
+    let t0 = std::time::Instant::now();
+    let mut hits = 0u64;
+    for (key, region) in &trace {
+        if fs.get_online(&w.principal, &w.txn_table, key, region)?.record.is_some() {
+            hits += 1;
+        }
+    }
+    let dt = t0.elapsed();
+    println!(
+        "served {n} lookups in {:.2?} ({:.0}/s), hit_rate={:.2}",
+        dt,
+        n as f64 / dt.as_secs_f64(),
+        hits as f64 / n as f64
+    );
+    println!("\n{}", fs.metrics.render(None));
+    Ok(())
+}
+
+fn cmd_materialize(args: &Args) -> anyhow::Result<()> {
+    let (fs, w) = open_with_workload(args)?;
+    materialize_history(&fs, &w, args.i64("days", 14))
+}
+
+fn cmd_backfill(args: &Args) -> anyhow::Result<()> {
+    let (fs, w) = open_with_workload(args)?;
+    let days = args.i64("days", 14);
+    fs.clock.set(days * DAY);
+    let window = FeatureWindow::new(0, days * DAY);
+    let outcomes = fs.backfill(&w.txn_table, window)?;
+    println!(
+        "backfill {}: {} job(s), {} records",
+        w.txn_table,
+        outcomes.len(),
+        outcomes.iter().map(|o| o.records).sum::<u64>()
+    );
+    Ok(())
+}
+
+fn cmd_bootstrap(args: &Args) -> anyhow::Result<()> {
+    let (fs, w) = open_with_workload(args)?;
+    materialize_history(&fs, &w, args.i64("days", 7))?;
+    let direction = args.str("direction").unwrap_or("offline-to-online");
+    let stats = match direction {
+        "offline-to-online" => fs.bootstrap_online_from_offline(&w.txn_table),
+        "online-to-offline" => fs.bootstrap_offline_from_online(&w.txn_table),
+        other => anyhow::bail!("unknown --direction '{other}'"),
+    };
+    println!("bootstrap {direction}: inserted={} skipped={}", stats.inserted, stats.skipped);
+    Ok(())
+}
+
+fn cmd_search(args: &Args) -> anyhow::Result<()> {
+    let (fs, _w) = open_with_workload(args)?;
+    let text = args
+        .positional
+        .first()
+        .ok_or_else(|| anyhow::anyhow!("usage: geofs search <text>"))?;
+    for hit in fs.catalog.search(&SearchQuery::text(text)) {
+        println!(
+            "{:<13} {}{} (store {})",
+            hit.kind,
+            hit.name,
+            hit.version.map(|v| format!(":{v}")).unwrap_or_default(),
+            hit.store
+        );
+    }
+    Ok(())
+}
+
+fn cmd_artifacts(args: &Args) -> anyhow::Result<()> {
+    let config = load_config(args)?;
+    let manifest = geofs::runtime::Manifest::load(&config.artifacts_dir)?;
+    println!("{} artifact(s) in {}:", manifest.artifacts.len(), manifest.dir.display());
+    for a in &manifest.artifacts {
+        println!(
+            "  {:<22} variant={:<6} shape=[{}, {}+{}] window={}",
+            a.name,
+            a.variant.as_str(),
+            a.entities,
+            a.time_bins,
+            a.window - 1,
+            a.window
+        );
+    }
+    Ok(())
+}
+
+fn cmd_metrics(args: &Args) -> anyhow::Result<()> {
+    let (fs, w) = open_with_workload(args)?;
+    materialize_history(&fs, &w, args.i64("days", 7))?;
+    println!("{}", fs.metrics.render(None));
+    Ok(())
+}
+
+fn help() {
+    println!(
+        "geofs — managed geo-distributed feature store (paper reproduction)\n\n\
+         usage: geofs <command> [flags]\n\n\
+         commands:\n  \
+         demo         end-to-end churn scenario (materialize + serve + PIT)\n  \
+         serve        materialize then serve a lookup trace\n  \
+         materialize  run scheduled materialization over history\n  \
+         backfill     one-time backfill over history\n  \
+         bootstrap    --direction offline-to-online|online-to-offline\n  \
+         search       <text>  asset search\n  \
+         artifacts    list AOT artifacts\n  \
+         metrics      run a short workload and dump metrics\n\n\
+         common flags: --config FILE --customers N --days N --seed N --no-engine"
+    );
+}
+
+fn main() {
+    init_logging();
+    let args = parse_args();
+    let out = match args.cmd.as_str() {
+        "demo" => cmd_demo(&args),
+        "serve" => cmd_serve(&args),
+        "materialize" => cmd_materialize(&args),
+        "backfill" => cmd_backfill(&args),
+        "bootstrap" => cmd_bootstrap(&args),
+        "search" => cmd_search(&args),
+        "artifacts" => cmd_artifacts(&args),
+        "metrics" => cmd_metrics(&args),
+        _ => {
+            help();
+            Ok(())
+        }
+    };
+    if let Err(e) = out {
+        eprintln!("error: {e}");
+        std::process::exit(1);
+    }
+}

@@ -1,0 +1,99 @@
+//! Store bootstrap (§4.5.5): when a second sink is enabled later, bring
+//! it to parity from the first — cheaper and more complete than
+//! re-running backfill against sources that may no longer exist.
+
+use crate::offline_store::{MergeStats, OfflineStore};
+use crate::online_store::OnlineStore;
+use crate::types::Timestamp;
+
+/// Offline → online: for each entity take the record with
+/// `max(tuple(event_ts, creation_ts))` and merge into the online store.
+pub fn bootstrap_offline_to_online(
+    offline: &OfflineStore,
+    online: &OnlineStore,
+    table: &str,
+    now: Timestamp,
+) -> MergeStats {
+    let latest = offline.latest_per_entity(table);
+    online.merge(table, &latest, now)
+}
+
+/// Online → offline: dump everything live in the online store into the
+/// offline store (Alg 2's offline branch dedupes re-merges).
+pub fn bootstrap_online_to_offline(
+    online: &OnlineStore,
+    offline: &OfflineStore,
+    table: &str,
+    now: Timestamp,
+) -> MergeStats {
+    let dump = online.dump_table(table, now);
+    offline.merge(table, &dump)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::types::FeatureRecord;
+
+    fn rec(entity: u64, event: Timestamp, created: Timestamp, v: f32) -> FeatureRecord {
+        FeatureRecord::new(entity, event, created, vec![v])
+    }
+
+    #[test]
+    fn offline_to_online_takes_latest_version() {
+        let off = OfflineStore::new();
+        let on = OnlineStore::new(2);
+        off.merge(
+            "t",
+            &[
+                rec(1, 10, 11, 0.0),
+                rec(1, 20, 21, 1.0),
+                rec(1, 20, 99, 2.0), // late recompute wins on creation_ts
+                rec(2, 5, 6, 3.0),
+            ],
+        );
+        let stats = bootstrap_offline_to_online(&off, &on, "t", 1_000);
+        assert_eq!(stats.inserted, 2);
+        let r1 = on.get("t", 1, 2_000).unwrap();
+        assert_eq!(r1.version(), (20, 99));
+        assert_eq!(r1.values[0], 2.0);
+        assert_eq!(on.get("t", 2, 2_000).unwrap().values[0], 3.0);
+    }
+
+    #[test]
+    fn online_to_offline_dumps_everything_live() {
+        let off = OfflineStore::new();
+        let on = OnlineStore::new(2);
+        on.merge("t", &[rec(1, 10, 11, 1.0), rec(2, 20, 21, 2.0)], 21);
+        let stats = bootstrap_online_to_offline(&on, &off, "t", 1_000);
+        assert_eq!(stats.inserted, 2);
+        assert_eq!(off.row_count("t"), 2);
+    }
+
+    #[test]
+    fn bootstrap_is_idempotent() {
+        let off = OfflineStore::new();
+        let on = OnlineStore::new(2);
+        off.merge("t", &[rec(1, 10, 11, 0.0)]);
+        bootstrap_offline_to_online(&off, &on, "t", 100);
+        let again = bootstrap_offline_to_online(&off, &on, "t", 200);
+        assert_eq!(again.inserted, 0);
+        assert_eq!(again.skipped, 1);
+
+        bootstrap_online_to_offline(&on, &off, "t", 300);
+        assert_eq!(off.row_count("t"), 1); // offline deduped
+    }
+
+    #[test]
+    fn roundtrip_preserves_eq2_invariant() {
+        // offline → online → offline: online state equals Eq. 2 of the
+        // original offline contents; offline never loses rows.
+        let off = OfflineStore::new();
+        let on = OnlineStore::new(4);
+        off.merge("t", &[rec(1, 10, 11, 0.0), rec(1, 30, 31, 1.0), rec(2, 20, 25, 2.0)]);
+        bootstrap_offline_to_online(&off, &on, "t", 100);
+        bootstrap_online_to_offline(&on, &off, "t", 200);
+        assert_eq!(off.row_count("t"), 3);
+        assert_eq!(on.get("t", 1, 999).unwrap().version(), (30, 31));
+    }
+}

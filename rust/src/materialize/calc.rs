@@ -1,0 +1,291 @@
+//! Algorithm 1 — feature calculation.
+//!
+//! ```text
+//! source_window_start ← feature_window_start − source_lookback
+//! df1 ← source.read(source_window)            (visible as of `as_of`)
+//! df2 ← transform(df1)                        (AOT artifact or UDF)
+//! feature_set_df ← df2 within feature window  (trim the halo)
+//! ```
+//!
+//! The transform output schema contract (§4.2) — index columns,
+//! timestamp column, all feature columns — maps here to: entity rows,
+//! bin-end event timestamps, and the aggregation planes selected by the
+//! feature set's DSL/UDF spec.
+
+use std::sync::Arc;
+
+use crate::dsl::{plan_transform, ExecutionPlan, PlanKind, UdfRegistry};
+use crate::metadata::assets::FeatureSetSpec;
+use crate::runtime::{ComputeHandle, RollPlanes};
+use crate::source::{bin_events, SourceConnector};
+use crate::types::{EntityInterner, FeatureRecord, FeatureWindow, FsError, Result, Timestamp};
+
+/// The materialization compute engine: turns (spec, window, source) into
+/// feature records. Stateless besides the shared interner and runtime.
+pub struct Materializer {
+    /// Compute service handle; `None` forces the in-process fallback
+    /// everywhere (used by tests that don't want artifact dependencies).
+    engine: Option<ComputeHandle>,
+    udfs: UdfRegistry,
+    interner: Arc<EntityInterner>,
+}
+
+impl Materializer {
+    pub fn new(engine: Option<ComputeHandle>, interner: Arc<EntityInterner>) -> Self {
+        Materializer { engine, udfs: UdfRegistry::new(), interner }
+    }
+
+    pub fn interner(&self) -> &Arc<EntityInterner> {
+        &self.interner
+    }
+
+    pub fn udfs_mut(&mut self) -> &mut UdfRegistry {
+        &mut self.udfs
+    }
+
+    /// Plan the spec's transformation against the loaded artifact set.
+    pub fn plan(&self, spec: &FeatureSetSpec) -> Result<ExecutionPlan> {
+        plan_transform(
+            &spec.transform,
+            spec.granularity,
+            self.engine.as_ref().map(|e| e.manifest()),
+        )
+    }
+
+    /// Run Algorithm 1 for one feature window.
+    ///
+    /// `as_of` is the processing-timeline read moment (drives source
+    /// visibility of late data); `creation_ts` stamps the produced
+    /// records (§4.5.1; normally = job completion time).
+    pub fn calculate(
+        &self,
+        spec: &FeatureSetSpec,
+        source: &dyn SourceConnector,
+        feature_window: FeatureWindow,
+        as_of: Timestamp,
+        creation_ts: Timestamp,
+    ) -> Result<Vec<FeatureRecord>> {
+        let g = spec.granularity;
+        if !g.aligned(feature_window.start) || !g.aligned(feature_window.end) {
+            return Err(FsError::InvalidArg(format!(
+                "feature window {feature_window} not aligned to granularity {}s",
+                g.secs()
+            )));
+        }
+        let plan = self.plan(spec)?;
+        let window_bins = if plan.rolling.window_bins > 0 {
+            plan.rolling.window_bins
+        } else {
+            spec.window_bins // UDF context: window comes from the spec
+        };
+
+        // 1. Source read over feature window + lookback halo.
+        let halo_bins = window_bins - 1;
+        let lookback = halo_bins as i64 * g.secs();
+        let source_window = feature_window.source_window(lookback);
+        let events = source.read(source_window, as_of)?;
+
+        // 2. Bin into dense planes.
+        let binned = bin_events(&events, &self.interner, feature_window, g, halo_bins);
+        if binned.row_entities.is_empty() {
+            return Ok(Vec::new()); // genuinely no data in the window
+        }
+
+        // 3. Execute the planned transformation.
+        let rolled: RollPlanes = match (&plan.kind, &self.engine) {
+            (PlanKind::Artifact(variant), Some(engine)) => {
+                engine.rolling(*variant, &binned.planes, window_bins)?
+            }
+            (PlanKind::Artifact(_), None) => {
+                return Err(FsError::Runtime(
+                    "plan requires the AOT engine but none is loaded".into(),
+                ))
+            }
+            (PlanKind::RustUdf, _) => {
+                let name = match &spec.transform {
+                    crate::metadata::assets::TransformSpec::Udf(n) => n.as_str(),
+                    // DSL fallback path uses the reference recompute.
+                    _ => "rolling_recompute",
+                };
+                self.udfs.get(name)?(&binned.planes, window_bins)?
+            }
+        };
+
+        // 4. Emit records: one per (entity, non-empty output bin).
+        let aggs = &plan.rolling.aggs;
+        let n_bins = feature_window.bins(g) as usize;
+        let mut out = Vec::new();
+        for (row, &entity) in binned.row_entities.iter().enumerate() {
+            for b in 0..n_bins {
+                let full = rolled.feature_vec(row, b);
+                if full[1] == 0.0 {
+                    // Empty rolling window: no feature value for this bin
+                    // (distinct from "not materialized" — §4.3).
+                    continue;
+                }
+                let values: Vec<f32> =
+                    aggs.iter().map(|a| full[a.output_index()]).collect();
+                let event_ts = feature_window.start + (b as i64 + 1) * g.secs();
+                out.push(FeatureRecord::new(entity, event_ts, creation_ts, values));
+            }
+        }
+        Ok(out)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::metadata::assets::{SourceSpec, TransformSpec};
+    use crate::source::synthetic::SyntheticSource;
+    use crate::source::Event;
+    use crate::types::time::{Granularity, HOUR};
+
+    /// Fixed-event source for precise assertions.
+    struct FixedSource(Vec<Event>);
+    impl SourceConnector for FixedSource {
+        fn read(&self, w: FeatureWindow, as_of: Timestamp) -> Result<Vec<Event>> {
+            Ok(self
+                .0
+                .iter()
+                .filter(|e| w.contains(e.ts) && e.ts <= as_of)
+                .cloned()
+                .collect())
+        }
+        fn describe(&self) -> String {
+            "fixed".into()
+        }
+    }
+
+    fn spec(window_bins: usize) -> FeatureSetSpec {
+        FeatureSetSpec::rolling(
+            "f",
+            1,
+            "customer",
+            SourceSpec::synthetic(0),
+            Granularity(HOUR),
+            window_bins,
+        )
+    }
+
+    fn mat() -> Materializer {
+        Materializer::new(None, Arc::new(EntityInterner::new()))
+    }
+
+    #[test]
+    fn alg1_window_math_and_values() {
+        let m = mat();
+        let s = spec(2);
+        // Events: one in the halo hour (-1h) and one in hour 0.
+        let src = FixedSource(vec![
+            Event { key: "a".into(), ts: -HOUR + 5, value: 10.0 },
+            Event { key: "a".into(), ts: 10, value: 4.0 },
+        ]);
+        let fw = FeatureWindow::new(0, 2 * HOUR);
+        let recs = m.calculate(&s, &src, fw, i64::MAX, 3 * HOUR).unwrap();
+        // bin0 ([-1h,1h) rolling): sum 14, cnt 2; bin1 ([0,2h)): sum 4.
+        assert_eq!(recs.len(), 2);
+        let r0 = &recs[0];
+        assert_eq!(r0.event_ts, HOUR); // end of bin 0
+        assert_eq!(r0.values[0], 14.0); // sum
+        assert_eq!(r0.values[1], 2.0); // cnt
+        assert_eq!(r0.values[2], 7.0); // mean
+        assert_eq!(r0.values[3], 4.0); // min
+        assert_eq!(r0.values[4], 10.0); // max
+        let r1 = &recs[1];
+        assert_eq!(r1.event_ts, 2 * HOUR);
+        assert_eq!(r1.values[0], 4.0);
+        assert_eq!(r1.creation_ts, 3 * HOUR);
+    }
+
+    #[test]
+    fn empty_windows_emit_no_records() {
+        let m = mat();
+        let s = spec(2);
+        let src = FixedSource(vec![Event { key: "a".into(), ts: 10, value: 1.0 }]);
+        // Window [2h,4h): rolling windows cover [1h,3h) and [2h,4h) — the
+        // event at 10s is outside both.
+        let recs = m
+            .calculate(&s, &src, FeatureWindow::new(2 * HOUR, 4 * HOUR), i64::MAX, 9 * HOUR)
+            .unwrap();
+        assert!(recs.is_empty());
+    }
+
+    #[test]
+    fn as_of_hides_late_events() {
+        let m = mat();
+        let s = spec(1);
+        let src = FixedSource(vec![Event { key: "a".into(), ts: HOUR + 30, value: 5.0 }]);
+        let fw = FeatureWindow::new(HOUR, 2 * HOUR);
+        // Read before the event is visible.
+        let early = m.calculate(&s, &src, fw, HOUR, 2 * HOUR).unwrap();
+        assert!(early.is_empty());
+        // Read after: record appears with a later creation_ts (Fig 5's R3
+        // late-arrival shape).
+        let late = m.calculate(&s, &src, fw, i64::MAX, 9 * HOUR).unwrap();
+        assert_eq!(late.len(), 1);
+        assert_eq!(late[0].event_ts, 2 * HOUR);
+        assert_eq!(late[0].creation_ts, 9 * HOUR);
+    }
+
+    #[test]
+    fn unaligned_window_rejected() {
+        let m = mat();
+        let s = spec(2);
+        let src = FixedSource(vec![]);
+        assert!(m
+            .calculate(&s, &src, FeatureWindow::new(5, HOUR), i64::MAX, HOUR)
+            .is_err());
+    }
+
+    #[test]
+    fn udf_transform_runs_blackbox() {
+        let m = mat();
+        let mut s = spec(3);
+        s.transform = TransformSpec::Udf("rolling_recompute".into());
+        let src = FixedSource(vec![Event { key: "a".into(), ts: 30, value: 2.0 }]);
+        let recs = m
+            .calculate(&s, &src, FeatureWindow::new(0, HOUR), i64::MAX, 2 * HOUR)
+            .unwrap();
+        assert_eq!(recs.len(), 1);
+        assert_eq!(recs[0].values[0], 2.0);
+    }
+
+    #[test]
+    fn unknown_udf_errors() {
+        let m = mat();
+        let mut s = spec(2);
+        s.transform = TransformSpec::Udf("missing_udf".into());
+        let src = FixedSource(vec![Event { key: "a".into(), ts: 30, value: 2.0 }]);
+        assert!(m
+            .calculate(&s, &src, FeatureWindow::new(0, HOUR), i64::MAX, HOUR)
+            .is_err());
+    }
+
+    #[test]
+    fn deterministic_over_synthetic_source() {
+        let m = mat();
+        let s = spec(4);
+        let src = SyntheticSource::new(11, 20);
+        let fw = FeatureWindow::new(0, 12 * HOUR);
+        let a = m.calculate(&s, &src, fw, i64::MAX, 13 * HOUR).unwrap();
+        let b = m.calculate(&s, &src, fw, i64::MAX, 13 * HOUR).unwrap();
+        assert_eq!(a, b);
+        assert!(!a.is_empty());
+    }
+
+    #[test]
+    fn entity_ids_stable_across_windows() {
+        let m = mat();
+        let s = spec(1);
+        let src = FixedSource(vec![
+            Event { key: "x".into(), ts: 5, value: 1.0 },
+            Event { key: "x".into(), ts: HOUR + 5, value: 2.0 },
+        ]);
+        let r1 = m.calculate(&s, &src, FeatureWindow::new(0, HOUR), i64::MAX, HOUR).unwrap();
+        let r2 = m
+            .calculate(&s, &src, FeatureWindow::new(HOUR, 2 * HOUR), i64::MAX, 2 * HOUR)
+            .unwrap();
+        assert_eq!(r1[0].entity, r2[0].entity);
+    }
+}

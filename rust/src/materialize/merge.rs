@@ -1,0 +1,220 @@
+//! Dual-store merge with eventual consistency (§4.5.2–§4.5.4).
+//!
+//! Every materialization job produces one table of records that must be
+//! merged into **both** enabled sinks (Algorithm 2 per store).  Merges
+//! can fail independently (the paper's §4.5.4 bullet: "Failed in one
+//! merge but not the other (and retry succeeds)"); the merger retries
+//! each sink independently and reports per-sink outcomes, so job-level
+//! retries converge both stores to the same logical state.
+//!
+//! [`FaultInjector`] provides the controlled failure source used by the
+//! consistency tests and benches (experiment E3).
+
+use std::sync::atomic::{AtomicU64, Ordering};
+use std::sync::{Arc, Mutex};
+
+use crate::exec::retry::{retry_with, RetryPolicy};
+use crate::metadata::assets::MaterializationPolicy;
+use crate::offline_store::{MergeStats, OfflineStore};
+use crate::online_store::OnlineStore;
+use crate::types::{FeatureRecord, FsError, Result, Timestamp};
+use crate::util::rng::Rng;
+use crate::util::Clock;
+
+/// Injects transient store faults with a configured probability.
+#[derive(Debug, Default)]
+pub struct FaultInjector {
+    pub offline_fail_p: f64,
+    pub online_fail_p: f64,
+    rng: Mutex<Option<Rng>>,
+    pub injected: AtomicU64,
+}
+
+impl FaultInjector {
+    pub fn none() -> Arc<Self> {
+        Arc::new(Self::default())
+    }
+
+    pub fn with_rates(seed: u64, offline_fail_p: f64, online_fail_p: f64) -> Arc<Self> {
+        Arc::new(FaultInjector {
+            offline_fail_p,
+            online_fail_p,
+            rng: Mutex::new(Some(Rng::new(seed))),
+            injected: AtomicU64::new(0),
+        })
+    }
+
+    fn roll(&self, p: f64, what: &str) -> Result<()> {
+        if p <= 0.0 {
+            return Ok(());
+        }
+        let mut g = self.rng.lock().unwrap();
+        if let Some(rng) = g.as_mut() {
+            if rng.bool(p) {
+                self.injected.fetch_add(1, Ordering::Relaxed);
+                return Err(FsError::InjectedFault(format!("{what} merge failed")));
+            }
+        }
+        Ok(())
+    }
+}
+
+/// Per-job merge report (fed into monitoring + the scheduler).
+#[derive(Debug, Clone, Default, PartialEq)]
+pub struct MergeReport {
+    pub offline: Option<MergeStats>,
+    pub online: Option<MergeStats>,
+    pub offline_attempts: u32,
+    pub online_attempts: u32,
+}
+
+impl MergeReport {
+    pub fn records_written(&self) -> u64 {
+        self.offline.map(|s| s.inserted).unwrap_or(0)
+            + self.online.map(|s| s.inserted).unwrap_or(0)
+    }
+}
+
+/// Merges job output into both sinks per the feature set's policy.
+pub struct DualStoreMerger {
+    pub offline: Arc<OfflineStore>,
+    pub online: Arc<OnlineStore>,
+    pub faults: Arc<FaultInjector>,
+    pub retry: RetryPolicy,
+    clock: Clock,
+}
+
+impl DualStoreMerger {
+    pub fn new(
+        offline: Arc<OfflineStore>,
+        online: Arc<OnlineStore>,
+        faults: Arc<FaultInjector>,
+        retry: RetryPolicy,
+        clock: Clock,
+    ) -> Self {
+        DualStoreMerger { offline, online, faults, retry, clock }
+    }
+
+    /// Merge `records` into every enabled sink. Offline first, then
+    /// online (§4.5.4's "sequence of processing the merge"); each sink
+    /// retried independently. An error after retries fails the job —
+    /// the job-level retry re-merges idempotently.
+    pub fn merge(
+        &self,
+        table: &str,
+        records: &[FeatureRecord],
+        policy: &MaterializationPolicy,
+        now: Timestamp,
+    ) -> Result<MergeReport> {
+        let mut report = MergeReport::default();
+        if policy.offline_enabled {
+            let out = retry_with(&self.retry, &self.clock, |_| {
+                self.faults.roll(self.faults.offline_fail_p, "offline")?;
+                Ok(self.offline.merge(table, records))
+            })?;
+            report.offline = Some(out.value);
+            report.offline_attempts = out.attempts;
+        }
+        if policy.online_enabled {
+            let out = retry_with(&self.retry, &self.clock, |_| {
+                self.faults.roll(self.faults.online_fail_p, "online")?;
+                Ok(self.online.merge(table, records, now))
+            })?;
+            report.online = Some(out.value);
+            report.online_attempts = out.attempts;
+        }
+        Ok(report)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn rec(entity: u64, event: Timestamp, created: Timestamp, v: f32) -> FeatureRecord {
+        FeatureRecord::new(entity, event, created, vec![v])
+    }
+
+    fn merger(faults: Arc<FaultInjector>) -> DualStoreMerger {
+        DualStoreMerger::new(
+            Arc::new(OfflineStore::new()),
+            Arc::new(OnlineStore::new(2)),
+            faults,
+            RetryPolicy { max_attempts: 10, ..Default::default() },
+            Clock::fixed(0),
+        )
+    }
+
+    #[test]
+    fn merges_both_sinks() {
+        let m = merger(FaultInjector::none());
+        let recs = vec![rec(1, 100, 150, 1.0), rec(2, 100, 150, 2.0)];
+        let rep = m.merge("t", &recs, &MaterializationPolicy::default(), 150).unwrap();
+        assert_eq!(rep.offline.unwrap().inserted, 2);
+        assert_eq!(rep.online.unwrap().inserted, 2);
+        assert_eq!(m.offline.row_count("t"), 2);
+        assert!(m.online.get("t", 1, 200).is_some());
+    }
+
+    #[test]
+    fn respects_policy_flags() {
+        let m = merger(FaultInjector::none());
+        let recs = vec![rec(1, 100, 150, 1.0)];
+        let policy = MaterializationPolicy { online_enabled: false, ..Default::default() };
+        let rep = m.merge("t", &recs, &policy, 150).unwrap();
+        assert!(rep.online.is_none());
+        assert_eq!(m.offline.row_count("t"), 1);
+        assert!(m.online.get("t", 1, 200).is_none());
+
+        let policy = MaterializationPolicy { offline_enabled: false, ..Default::default() };
+        let rep = m.merge("t2", &recs, &policy, 150).unwrap();
+        assert!(rep.offline.is_none());
+        assert!(m.online.get("t2", 1, 200).is_some());
+    }
+
+    #[test]
+    fn transient_faults_retried_to_consistency() {
+        let m = merger(FaultInjector::with_rates(7, 0.5, 0.5));
+        let recs: Vec<_> = (0..50).map(|i| rec(i, 100, 150, i as f32)).collect();
+        let rep = m.merge("t", &recs, &MaterializationPolicy::default(), 150).unwrap();
+        // With p=0.5 and 10 attempts, success is (1 - 0.5^10) — the seed
+        // used here succeeds; both stores hold the full set.
+        assert_eq!(m.offline.row_count("t"), 50);
+        assert_eq!(m.online.dump_table("t", 200).len(), 50);
+        assert!(rep.offline_attempts >= 1 && rep.online_attempts >= 1);
+        assert!(m.faults.injected.load(Ordering::Relaxed) > 0);
+    }
+
+    #[test]
+    fn job_level_retry_converges_after_partial_failure() {
+        // Force online to always fail → job errors after offline merged.
+        let faults = FaultInjector::with_rates(3, 0.0, 1.0);
+        let m = DualStoreMerger::new(
+            Arc::new(OfflineStore::new()),
+            Arc::new(OnlineStore::new(2)),
+            faults,
+            RetryPolicy { max_attempts: 2, ..Default::default() },
+            Clock::fixed(0),
+        );
+        let recs = vec![rec(1, 100, 150, 1.0)];
+        let err = m.merge("t", &recs, &MaterializationPolicy::default(), 150);
+        assert!(err.is_err());
+        // Offline got the data, online did not — the §4.5.4 divergence.
+        assert_eq!(m.offline.row_count("t"), 1);
+        assert!(m.online.get("t", 1, 200).is_none());
+
+        // "Retry succeeds": heal the fault and re-merge the same records.
+        let m2 = DualStoreMerger::new(
+            m.offline.clone(),
+            m.online.clone(),
+            FaultInjector::none(),
+            RetryPolicy::default(),
+            Clock::fixed(0),
+        );
+        let rep = m2.merge("t", &recs, &MaterializationPolicy::default(), 160).unwrap();
+        // Offline dedupes on the uniqueness key; online converges.
+        assert_eq!(rep.offline.unwrap(), MergeStats { inserted: 0, skipped: 1 });
+        assert_eq!(m.offline.row_count("t"), 1);
+        assert!(m.online.get("t", 1, 200).is_some());
+    }
+}

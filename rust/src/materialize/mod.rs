@@ -1,0 +1,16 @@
+//! Feature materialization (§4.2, §4.3, §4.5).
+//!
+//! * [`calc`] — Algorithm 1: read the source window (feature window +
+//!   lookback), bin, execute the planned transformation (AOT artifact or
+//!   UDF), trim to the feature window, emit records.
+//! * [`merge`] — Algorithm 2 applied to both sinks with retry and fault
+//!   injection; eventual consistency between offline and online.
+//! * [`bootstrap`] — §4.5.5: bring a late-enabled store up to parity.
+
+pub mod bootstrap;
+pub mod calc;
+pub mod merge;
+
+pub use bootstrap::{bootstrap_offline_to_online, bootstrap_online_to_offline};
+pub use calc::Materializer;
+pub use merge::{DualStoreMerger, FaultInjector, MergeReport};

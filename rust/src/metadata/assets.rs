@@ -1,0 +1,355 @@
+//! Asset specifications: feature stores, entities, feature sets.
+
+use crate::types::time::{Granularity, HOUR};
+use crate::types::{FsError, Result};
+use crate::util::json::Json;
+
+/// Top-level feature store resource (§3.2): a globally-addressable RESTful
+/// resource that owns assets and policies.
+#[derive(Debug, Clone)]
+pub struct FeatureStoreSpec {
+    pub name: String,
+    /// Home region (assets live where created — §4.1.2).
+    pub region: String,
+    pub description: String,
+    pub tags: Vec<String>,
+}
+
+impl FeatureStoreSpec {
+    pub fn new(name: &str, region: &str) -> Self {
+        FeatureStoreSpec {
+            name: name.to_string(),
+            region: region.to_string(),
+            description: String::new(),
+            tags: Vec::new(),
+        }
+    }
+}
+
+/// Entity (§2.2): index/key columns for feature lookup and join.
+/// Versioned; `index_columns` is immutable per version.
+#[derive(Debug, Clone, PartialEq)]
+pub struct EntitySpec {
+    pub name: String,
+    pub version: u32,
+    pub index_columns: Vec<String>,
+    pub description: String,
+    pub tags: Vec<String>,
+}
+
+impl EntitySpec {
+    pub fn new(name: &str, version: u32, index_columns: &[&str]) -> Self {
+        EntitySpec {
+            name: name.to_string(),
+            version,
+            index_columns: index_columns.iter().map(|s| s.to_string()).collect(),
+            description: String::new(),
+            tags: Vec::new(),
+        }
+    }
+
+    pub fn validate(&self) -> Result<()> {
+        if self.index_columns.is_empty() {
+            return Err(FsError::Schema(format!("entity '{}' has no index columns", self.name)));
+        }
+        Ok(())
+    }
+}
+
+/// Where the source data comes from and how late it can arrive.
+#[derive(Debug, Clone, PartialEq)]
+pub struct SourceSpec {
+    /// Connector kind: "synthetic", "jsonl", "csv".
+    pub kind: String,
+    /// Connector path / seed spec (connector-specific).
+    pub path: String,
+    /// Timestamp column in the source (documentation; connectors emit it).
+    pub timestamp_column: String,
+    /// Expected source delay (§4.4): events for time `t` may not be
+    /// complete until `t + source_delay_secs`. The PIT query engine and
+    /// the scheduler both honor this.
+    pub source_delay_secs: i64,
+}
+
+impl SourceSpec {
+    pub fn synthetic(seed: u64) -> Self {
+        SourceSpec {
+            kind: "synthetic".into(),
+            path: format!("seed://{seed}"),
+            timestamp_column: "ts".into(),
+            source_delay_secs: 0,
+        }
+    }
+}
+
+/// Transformation (§4.2): either a DSL program the engine can optimize
+/// (§3.1.6) or an opaque UDF it must treat as a black box.
+#[derive(Debug, Clone, PartialEq)]
+pub enum TransformSpec {
+    /// DSL text, e.g.
+    /// `"rolling(value, window=30d, aggs=[sum,cnt,mean,min,max])"`.
+    Dsl(String),
+    /// Named built-in UDF executed row-at-a-time by the compute layer
+    /// (black box: no plan optimization).
+    Udf(String),
+}
+
+impl TransformSpec {
+    pub fn is_dsl(&self) -> bool {
+        matches!(self, TransformSpec::Dsl(_))
+    }
+    pub fn code(&self) -> &str {
+        match self {
+            TransformSpec::Dsl(s) | TransformSpec::Udf(s) => s,
+        }
+    }
+}
+
+/// Materialization policy (§4.3) — *mutable* per version.
+#[derive(Debug, Clone, PartialEq)]
+pub struct MaterializationPolicy {
+    pub offline_enabled: bool,
+    pub online_enabled: bool,
+    /// Cadence of scheduled incremental jobs, seconds of event time per
+    /// job window.
+    pub schedule_interval_secs: i64,
+    /// Online store TTL; must exceed the refresh cadence for Eq. 2's
+    /// "assuming TTL satisfies" premise to hold.
+    pub online_ttl_secs: i64,
+    /// Max bins per job window — the context-aware partitioning unit
+    /// (§3.1.1).
+    pub max_bins_per_job: i64,
+}
+
+impl Default for MaterializationPolicy {
+    fn default() -> Self {
+        MaterializationPolicy {
+            offline_enabled: true,
+            online_enabled: true,
+            schedule_interval_secs: 24 * HOUR,
+            online_ttl_secs: 14 * 24 * HOUR,
+            max_bins_per_job: 256,
+        }
+    }
+}
+
+/// Feature set (§2.2): source + transformation + schema + policies.
+///
+/// Immutable per version: `entity`, `source`, `transform`, `granularity`,
+/// `window_bins`, `feature_names` (the transformation defines them).
+/// Mutable: `materialization`, `description`, `tags`.
+#[derive(Debug, Clone, PartialEq)]
+pub struct FeatureSetSpec {
+    pub name: String,
+    pub version: u32,
+    /// Entity asset this feature set is keyed by (name; versions of the
+    /// entity are resolved at retrieval time).
+    pub entity: String,
+    pub source: SourceSpec,
+    pub transform: TransformSpec,
+    /// Aggregation bin width.
+    pub granularity: Granularity,
+    /// Rolling window length in bins (DSL transforms).
+    pub window_bins: usize,
+    /// Output feature column names, in order.
+    pub feature_names: Vec<String>,
+    pub materialization: MaterializationPolicy,
+    pub description: String,
+    pub tags: Vec<String>,
+}
+
+impl FeatureSetSpec {
+    /// The canonical rolling feature set over a value column.
+    pub fn rolling(
+        name: &str,
+        version: u32,
+        entity: &str,
+        source: SourceSpec,
+        granularity: Granularity,
+        window_bins: usize,
+    ) -> Self {
+        let window_h = window_bins as i64 * granularity.secs() / HOUR;
+        let feature_names = ["sum", "cnt", "mean", "min", "max"]
+            .iter()
+            .map(|a| format!("{window_h}h_{a}"))
+            .collect();
+        FeatureSetSpec {
+            name: name.to_string(),
+            version,
+            entity: entity.to_string(),
+            source,
+            transform: TransformSpec::Dsl(format!(
+                "rolling(value, window={window_bins}, aggs=[sum,cnt,mean,min,max])"
+            )),
+            granularity,
+            window_bins,
+            feature_names,
+            materialization: MaterializationPolicy::default(),
+            description: String::new(),
+            tags: Vec::new(),
+        }
+    }
+
+    pub fn validate(&self) -> Result<()> {
+        if self.feature_names.is_empty() {
+            return Err(FsError::Schema(format!(
+                "feature set '{}' defines no feature columns",
+                self.name
+            )));
+        }
+        if self.window_bins == 0 {
+            return Err(FsError::Schema("window_bins must be >= 1".into()));
+        }
+        if self.granularity.secs() <= 0 {
+            return Err(FsError::Schema("granularity must be positive".into()));
+        }
+        if self.materialization.online_enabled
+            && self.materialization.online_ttl_secs
+                < self.materialization.schedule_interval_secs
+        {
+            return Err(FsError::Schema(
+                "online TTL shorter than refresh cadence breaks Eq. 2's latest-record premise"
+                    .into(),
+            ));
+        }
+        let mut seen = std::collections::HashSet::new();
+        for f in &self.feature_names {
+            if !seen.insert(f) {
+                return Err(FsError::Schema(format!("duplicate feature column '{f}'")));
+            }
+        }
+        Ok(())
+    }
+
+    /// Source lookback per Algorithm 1: enough history to fill the first
+    /// output bin's window.
+    pub fn source_lookback_secs(&self) -> i64 {
+        (self.window_bins as i64 - 1) * self.granularity.secs()
+    }
+
+    /// `name:version` asset reference.
+    pub fn reference(&self) -> String {
+        format!("{}:{}", self.name, self.version)
+    }
+
+    /// Check whether changing to `new` mutates an immutable property
+    /// (paper §4.1: requires a version bump instead).
+    pub fn immutable_violation(&self, new: &FeatureSetSpec) -> Option<&'static str> {
+        if self.entity != new.entity {
+            return Some("entity");
+        }
+        if self.source != new.source {
+            return Some("source");
+        }
+        if self.transform != new.transform {
+            return Some("transform");
+        }
+        if self.granularity != new.granularity {
+            return Some("granularity");
+        }
+        if self.window_bins != new.window_bins {
+            return Some("window_bins");
+        }
+        if self.feature_names != new.feature_names {
+            return Some("feature_names");
+        }
+        None
+    }
+
+    /// Serialize for metadata snapshots (geo failover).
+    pub fn to_json(&self) -> Json {
+        Json::obj(vec![
+            ("name", Json::str(&self.name)),
+            ("version", Json::num(self.version as f64)),
+            ("entity", Json::str(&self.entity)),
+            ("granularity", Json::num(self.granularity.secs() as f64)),
+            ("window_bins", Json::num(self.window_bins as f64)),
+            ("transform", Json::str(self.transform.code())),
+            ("is_dsl", Json::Bool(self.transform.is_dsl())),
+            (
+                "features",
+                Json::Arr(self.feature_names.iter().map(Json::str).collect()),
+            ),
+        ])
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::types::time::DAY;
+
+    fn spec() -> FeatureSetSpec {
+        FeatureSetSpec::rolling(
+            "txn_30d",
+            1,
+            "customer",
+            SourceSpec::synthetic(1),
+            Granularity::daily(),
+            30,
+        )
+    }
+
+    #[test]
+    fn rolling_constructor_names_features() {
+        let s = spec();
+        assert_eq!(s.feature_names[0], "720h_sum");
+        assert_eq!(s.feature_names.len(), 5);
+        assert!(s.transform.is_dsl());
+        assert!(s.validate().is_ok());
+        assert_eq!(s.source_lookback_secs(), 29 * DAY);
+        assert_eq!(s.reference(), "txn_30d:1");
+    }
+
+    #[test]
+    fn validation_rejects_bad_specs() {
+        let mut s = spec();
+        s.window_bins = 0;
+        assert!(s.validate().is_err());
+
+        let mut s = spec();
+        s.feature_names.clear();
+        assert!(s.validate().is_err());
+
+        let mut s = spec();
+        s.feature_names = vec!["a".into(), "a".into()];
+        assert!(s.validate().is_err());
+
+        let mut s = spec();
+        s.materialization.online_ttl_secs = 1;
+        s.materialization.schedule_interval_secs = 100;
+        assert!(s.validate().is_err());
+    }
+
+    #[test]
+    fn immutable_violation_detection() {
+        let s = spec();
+        let mut changed = s.clone();
+        changed.description = "new desc".into(); // mutable
+        assert_eq!(s.immutable_violation(&changed), None);
+        changed.materialization.schedule_interval_secs *= 2; // mutable
+        assert_eq!(s.immutable_violation(&changed), None);
+
+        let mut changed = s.clone();
+        changed.transform = TransformSpec::Udf("my_udf".into());
+        assert_eq!(s.immutable_violation(&changed), Some("transform"));
+
+        let mut changed = s.clone();
+        changed.window_bins = 7;
+        assert_eq!(s.immutable_violation(&changed), Some("window_bins"));
+    }
+
+    #[test]
+    fn entity_validation() {
+        assert!(EntitySpec::new("customer", 1, &["customer_id"]).validate().is_ok());
+        assert!(EntitySpec::new("bad", 1, &[]).validate().is_err());
+    }
+
+    #[test]
+    fn json_snapshot_contains_identity() {
+        let j = spec().to_json();
+        assert_eq!(j.get("name").as_str(), Some("txn_30d"));
+        assert_eq!(j.get("window_bins").as_usize(), Some(30));
+        assert_eq!(j.get("features").as_arr().unwrap().len(), 5);
+    }
+}

@@ -1,0 +1,411 @@
+//! The metadata store (§3.1.4): CRUD + search over versioned assets,
+//! with immutability enforcement (§4.1) and snapshotting for failover.
+
+use std::collections::BTreeMap;
+use std::sync::RwLock;
+
+use super::assets::{EntitySpec, FeatureSetSpec, FeatureStoreSpec};
+use crate::types::{FsError, Result};
+
+/// Kind tag for search results / lineage nodes.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum AssetKind {
+    FeatureStore,
+    Entity,
+    FeatureSet,
+}
+
+/// Substring + tag search over assets (§1 "Search and reuse features").
+#[derive(Debug, Default, Clone)]
+pub struct SearchQuery {
+    /// Case-insensitive substring over name + description.
+    pub text: Option<String>,
+    /// All listed tags must be present.
+    pub tags: Vec<String>,
+    pub kind: Option<AssetKind>,
+}
+
+impl SearchQuery {
+    pub fn text(s: &str) -> Self {
+        SearchQuery { text: Some(s.to_string()), ..Default::default() }
+    }
+    pub fn tag(s: &str) -> Self {
+        SearchQuery { tags: vec![s.to_string()], ..Default::default() }
+    }
+
+    fn matches(&self, name: &str, description: &str, tags: &[String], kind: AssetKind) -> bool {
+        if let Some(k) = self.kind {
+            if k != kind {
+                return false;
+            }
+        }
+        if let Some(t) = &self.text {
+            let t = t.to_lowercase();
+            if !name.to_lowercase().contains(&t) && !description.to_lowercase().contains(&t) {
+                return false;
+            }
+        }
+        self.tags.iter().all(|t| tags.contains(t))
+    }
+}
+
+/// One search hit.
+#[derive(Debug, Clone, PartialEq)]
+pub struct SearchHit {
+    pub kind: &'static str,
+    pub name: String,
+    pub version: Option<u32>,
+    pub store: String,
+}
+
+#[derive(Debug, Default)]
+struct StoreAssets {
+    spec: Option<FeatureStoreSpec>,
+    /// (name, version) → entity
+    entities: BTreeMap<(String, u32), EntitySpec>,
+    /// (name, version) → feature set
+    feature_sets: BTreeMap<(String, u32), FeatureSetSpec>,
+}
+
+/// Thread-safe metadata catalog for one region's metadata store.
+#[derive(Debug, Default)]
+pub struct Catalog {
+    stores: RwLock<BTreeMap<String, StoreAssets>>,
+}
+
+impl Catalog {
+    pub fn new() -> Self {
+        Self::default()
+    }
+
+    // ---- feature store management (§2.1) ---------------------------------
+
+    pub fn create_store(&self, spec: FeatureStoreSpec) -> Result<()> {
+        let mut g = self.stores.write().unwrap();
+        if g.contains_key(&spec.name) {
+            return Err(FsError::AlreadyExists(format!("feature store '{}'", spec.name)));
+        }
+        g.insert(spec.name.clone(), StoreAssets { spec: Some(spec), ..Default::default() });
+        Ok(())
+    }
+
+    pub fn delete_store(&self, name: &str) -> Result<()> {
+        self.stores
+            .write()
+            .unwrap()
+            .remove(name)
+            .map(|_| ())
+            .ok_or_else(|| FsError::NotFound(format!("feature store '{name}'")))
+    }
+
+    pub fn get_store(&self, name: &str) -> Result<FeatureStoreSpec> {
+        self.stores
+            .read()
+            .unwrap()
+            .get(name)
+            .and_then(|s| s.spec.clone())
+            .ok_or_else(|| FsError::NotFound(format!("feature store '{name}'")))
+    }
+
+    pub fn list_stores(&self) -> Vec<String> {
+        self.stores.read().unwrap().keys().cloned().collect()
+    }
+
+    // ---- entities ---------------------------------------------------------
+
+    pub fn create_entity(&self, store: &str, spec: EntitySpec) -> Result<()> {
+        spec.validate()?;
+        let mut g = self.stores.write().unwrap();
+        let s = g
+            .get_mut(store)
+            .ok_or_else(|| FsError::NotFound(format!("feature store '{store}'")))?;
+        let key = (spec.name.clone(), spec.version);
+        if s.entities.contains_key(&key) {
+            return Err(FsError::AlreadyExists(format!("entity '{}:{}'", key.0, key.1)));
+        }
+        s.entities.insert(key, spec);
+        Ok(())
+    }
+
+    pub fn get_entity(&self, store: &str, name: &str, version: u32) -> Result<EntitySpec> {
+        let g = self.stores.read().unwrap();
+        g.get(store)
+            .and_then(|s| s.entities.get(&(name.to_string(), version)).cloned())
+            .ok_or_else(|| FsError::NotFound(format!("entity '{name}:{version}' in '{store}'")))
+    }
+
+    /// Latest version of an entity.
+    pub fn latest_entity(&self, store: &str, name: &str) -> Result<EntitySpec> {
+        let g = self.stores.read().unwrap();
+        let s = g
+            .get(store)
+            .ok_or_else(|| FsError::NotFound(format!("feature store '{store}'")))?;
+        s.entities
+            .iter()
+            .filter(|((n, _), _)| n == name)
+            .max_by_key(|((_, v), _)| *v)
+            .map(|(_, e)| e.clone())
+            .ok_or_else(|| FsError::NotFound(format!("entity '{name}' in '{store}'")))
+    }
+
+    // ---- feature sets -----------------------------------------------------
+
+    pub fn create_feature_set(&self, store: &str, spec: FeatureSetSpec) -> Result<()> {
+        spec.validate()?;
+        let mut g = self.stores.write().unwrap();
+        let s = g
+            .get_mut(store)
+            .ok_or_else(|| FsError::NotFound(format!("feature store '{store}'")))?;
+        // The referenced entity must exist (any version).
+        if !s.entities.keys().any(|(n, _)| *n == spec.entity) {
+            return Err(FsError::NotFound(format!(
+                "entity '{}' referenced by feature set '{}'",
+                spec.entity, spec.name
+            )));
+        }
+        let key = (spec.name.clone(), spec.version);
+        if s.feature_sets.contains_key(&key) {
+            return Err(FsError::AlreadyExists(format!("feature set '{}:{}'", key.0, key.1)));
+        }
+        s.feature_sets.insert(key, spec);
+        Ok(())
+    }
+
+    pub fn get_feature_set(&self, store: &str, name: &str, version: u32) -> Result<FeatureSetSpec> {
+        let g = self.stores.read().unwrap();
+        g.get(store)
+            .and_then(|s| s.feature_sets.get(&(name.to_string(), version)).cloned())
+            .ok_or_else(|| {
+                FsError::NotFound(format!("feature set '{name}:{version}' in '{store}'"))
+            })
+    }
+
+    pub fn latest_feature_set(&self, store: &str, name: &str) -> Result<FeatureSetSpec> {
+        let g = self.stores.read().unwrap();
+        let s = g
+            .get(store)
+            .ok_or_else(|| FsError::NotFound(format!("feature store '{store}'")))?;
+        s.feature_sets
+            .iter()
+            .filter(|((n, _), _)| n == name)
+            .max_by_key(|((_, v), _)| *v)
+            .map(|(_, fs)| fs.clone())
+            .ok_or_else(|| FsError::NotFound(format!("feature set '{name}' in '{store}'")))
+    }
+
+    pub fn list_feature_sets(&self, store: &str) -> Result<Vec<FeatureSetSpec>> {
+        let g = self.stores.read().unwrap();
+        let s = g
+            .get(store)
+            .ok_or_else(|| FsError::NotFound(format!("feature store '{store}'")))?;
+        Ok(s.feature_sets.values().cloned().collect())
+    }
+
+    /// Update a feature set *in place* — allowed only for mutable
+    /// properties (§4.1). Immutable changes must go through
+    /// [`Catalog::create_feature_set`] with a bumped version.
+    pub fn update_feature_set(&self, store: &str, new: FeatureSetSpec) -> Result<()> {
+        new.validate()?;
+        let mut g = self.stores.write().unwrap();
+        let s = g
+            .get_mut(store)
+            .ok_or_else(|| FsError::NotFound(format!("feature store '{store}'")))?;
+        let key = (new.name.clone(), new.version);
+        let current = s
+            .feature_sets
+            .get(&key)
+            .ok_or_else(|| FsError::NotFound(format!("feature set '{}:{}'", key.0, key.1)))?;
+        if let Some(prop) = current.immutable_violation(&new) {
+            return Err(FsError::ImmutableProperty {
+                asset: format!("feature set '{}:{}'", key.0, key.1),
+                prop: prop.to_string(),
+            });
+        }
+        s.feature_sets.insert(key, new);
+        Ok(())
+    }
+
+    /// Create the next version of a feature set from a (possibly
+    /// immutably-changed) spec: version = latest + 1.
+    pub fn create_next_version(&self, store: &str, mut spec: FeatureSetSpec) -> Result<u32> {
+        let latest = self.latest_feature_set(store, &spec.name)?;
+        spec.version = latest.version + 1;
+        let v = spec.version;
+        self.create_feature_set(store, spec)?;
+        Ok(v)
+    }
+
+    pub fn delete_feature_set(&self, store: &str, name: &str, version: u32) -> Result<()> {
+        let mut g = self.stores.write().unwrap();
+        let s = g
+            .get_mut(store)
+            .ok_or_else(|| FsError::NotFound(format!("feature store '{store}'")))?;
+        s.feature_sets
+            .remove(&(name.to_string(), version))
+            .map(|_| ())
+            .ok_or_else(|| FsError::NotFound(format!("feature set '{name}:{version}'")))
+    }
+
+    // ---- search (§1, §2.1) -------------------------------------------------
+
+    pub fn search(&self, q: &SearchQuery) -> Vec<SearchHit> {
+        let g = self.stores.read().unwrap();
+        let mut hits = Vec::new();
+        for (store_name, s) in g.iter() {
+            if let Some(spec) = &s.spec {
+                if q.matches(&spec.name, &spec.description, &spec.tags, AssetKind::FeatureStore) {
+                    hits.push(SearchHit {
+                        kind: "feature_store",
+                        name: spec.name.clone(),
+                        version: None,
+                        store: store_name.clone(),
+                    });
+                }
+            }
+            for e in s.entities.values() {
+                if q.matches(&e.name, &e.description, &e.tags, AssetKind::Entity) {
+                    hits.push(SearchHit {
+                        kind: "entity",
+                        name: e.name.clone(),
+                        version: Some(e.version),
+                        store: store_name.clone(),
+                    });
+                }
+            }
+            for fs in s.feature_sets.values() {
+                if q.matches(&fs.name, &fs.description, &fs.tags, AssetKind::FeatureSet) {
+                    hits.push(SearchHit {
+                        kind: "feature_set",
+                        name: fs.name.clone(),
+                        version: Some(fs.version),
+                        store: store_name.clone(),
+                    });
+                }
+            }
+        }
+        hits
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::metadata::assets::{SourceSpec, TransformSpec};
+    use crate::types::time::Granularity;
+
+    fn catalog_with_store() -> Catalog {
+        let c = Catalog::new();
+        c.create_store(FeatureStoreSpec::new("fs1", "eastus")).unwrap();
+        c.create_entity("fs1", EntitySpec::new("customer", 1, &["customer_id"])).unwrap();
+        c
+    }
+
+    fn fset(name: &str, version: u32) -> FeatureSetSpec {
+        FeatureSetSpec::rolling(
+            name,
+            version,
+            "customer",
+            SourceSpec::synthetic(1),
+            Granularity::daily(),
+            30,
+        )
+    }
+
+    #[test]
+    fn store_crud() {
+        let c = catalog_with_store();
+        assert_eq!(c.get_store("fs1").unwrap().region, "eastus");
+        assert!(matches!(
+            c.create_store(FeatureStoreSpec::new("fs1", "westus")),
+            Err(FsError::AlreadyExists(_))
+        ));
+        assert_eq!(c.list_stores(), vec!["fs1"]);
+        c.delete_store("fs1").unwrap();
+        assert!(c.get_store("fs1").is_err());
+    }
+
+    #[test]
+    fn feature_set_requires_entity() {
+        let c = Catalog::new();
+        c.create_store(FeatureStoreSpec::new("fs1", "eastus")).unwrap();
+        assert!(matches!(
+            c.create_feature_set("fs1", fset("txn", 1)),
+            Err(FsError::NotFound(_))
+        ));
+    }
+
+    #[test]
+    fn versioning_and_latest() {
+        let c = catalog_with_store();
+        c.create_feature_set("fs1", fset("txn", 1)).unwrap();
+        c.create_feature_set("fs1", fset("txn", 2)).unwrap();
+        assert_eq!(c.latest_feature_set("fs1", "txn").unwrap().version, 2);
+        assert_eq!(c.get_feature_set("fs1", "txn", 1).unwrap().version, 1);
+    }
+
+    #[test]
+    fn immutable_update_rejected_mutable_allowed() {
+        let c = catalog_with_store();
+        c.create_feature_set("fs1", fset("txn", 1)).unwrap();
+
+        // mutable change: ok
+        let mut m = fset("txn", 1);
+        m.description = "desc".into();
+        m.materialization.schedule_interval_secs *= 2;
+        c.update_feature_set("fs1", m).unwrap();
+        assert_eq!(c.get_feature_set("fs1", "txn", 1).unwrap().description, "desc");
+
+        // immutable change: rejected with the property name
+        let mut im = fset("txn", 1);
+        im.transform = TransformSpec::Udf("other".into());
+        let err = c.update_feature_set("fs1", im).unwrap_err();
+        assert!(matches!(err, FsError::ImmutableProperty { ref prop, .. } if prop == "transform"));
+    }
+
+    #[test]
+    fn next_version_flow() {
+        let c = catalog_with_store();
+        c.create_feature_set("fs1", fset("txn", 1)).unwrap();
+        let mut changed = fset("txn", 0);
+        changed.transform = TransformSpec::Udf("udf2".into());
+        let v = c.create_next_version("fs1", changed).unwrap();
+        assert_eq!(v, 2);
+        assert!(c.get_feature_set("fs1", "txn", 2).unwrap().transform.code().contains("udf2"));
+    }
+
+    #[test]
+    fn duplicate_version_rejected() {
+        let c = catalog_with_store();
+        c.create_feature_set("fs1", fset("txn", 1)).unwrap();
+        assert!(matches!(
+            c.create_feature_set("fs1", fset("txn", 1)),
+            Err(FsError::AlreadyExists(_))
+        ));
+    }
+
+    #[test]
+    fn search_by_text_tag_kind() {
+        let c = catalog_with_store();
+        let mut f = fset("txn_30d", 1);
+        f.tags = vec!["churn".into()];
+        f.description = "30 day transaction aggregates".into();
+        c.create_feature_set("fs1", f).unwrap();
+
+        assert_eq!(c.search(&SearchQuery::text("transaction")).len(), 1);
+        assert_eq!(c.search(&SearchQuery::text("TXN")).len(), 1); // case-insensitive
+        assert_eq!(c.search(&SearchQuery::tag("churn")).len(), 1);
+        assert_eq!(c.search(&SearchQuery::tag("missing")).len(), 0);
+        let q = SearchQuery { kind: Some(AssetKind::Entity), ..Default::default() };
+        assert_eq!(c.search(&q).len(), 1); // just the entity
+        // empty query matches everything (store + entity + fset)
+        assert_eq!(c.search(&SearchQuery::default()).len(), 3);
+    }
+
+    #[test]
+    fn latest_entity_resolution() {
+        let c = catalog_with_store();
+        c.create_entity("fs1", EntitySpec::new("customer", 3, &["customer_id", "tenant"]))
+            .unwrap();
+        assert_eq!(c.latest_entity("fs1", "customer").unwrap().version, 3);
+    }
+}

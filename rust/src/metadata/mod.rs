@@ -1,0 +1,17 @@
+//! Asset metadata management and versioning (paper §4.1, Fig 3).
+//!
+//! A feature store contains versioned *assets* — entities and feature
+//! sets — plus store-level policies.  Asset properties are classified
+//! mutable vs immutable; changing an immutable property requires a
+//! version bump (§4.1).  The catalog provides CRUD + search (§2.1
+//! "Feature store asset management") and snapshot/restore for the geo
+//! failover path.
+
+pub mod assets;
+pub mod catalog;
+
+pub use assets::{
+    EntitySpec, FeatureSetSpec, FeatureStoreSpec, MaterializationPolicy, SourceSpec,
+    TransformSpec,
+};
+pub use catalog::{AssetKind, Catalog, SearchQuery};

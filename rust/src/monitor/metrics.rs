@@ -1,0 +1,156 @@
+//! Metrics registry: counters, gauges and latency histograms, tagged
+//! system vs custom (§3.1.2).
+
+use std::collections::BTreeMap;
+use std::sync::Mutex;
+
+use crate::util::hist::Histogram;
+
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum MetricKind {
+    /// Built-in: drives HA/SLA machinery.
+    System,
+    /// User-defined: customer insight into their feature pipelines.
+    Custom,
+}
+
+#[derive(Debug)]
+enum Metric {
+    Counter(u64),
+    Gauge(f64),
+    Latency(Histogram),
+}
+
+/// Central metrics store. Cheap enough for the hot path (one mutex per
+/// registry; the serving layer keeps its own per-shard histograms and
+/// folds them in periodically).
+#[derive(Debug, Default)]
+pub struct MetricsRegistry {
+    metrics: Mutex<BTreeMap<String, (MetricKind, Metric)>>,
+}
+
+impl MetricsRegistry {
+    pub fn new() -> Self {
+        Self::default()
+    }
+
+    pub fn inc(&self, kind: MetricKind, name: &str, by: u64) {
+        let mut g = self.metrics.lock().unwrap();
+        match g.entry(name.to_string()).or_insert((kind, Metric::Counter(0))) {
+            (_, Metric::Counter(c)) => *c += by,
+            _ => log::warn!("metric '{name}' is not a counter"),
+        }
+    }
+
+    pub fn set_gauge(&self, kind: MetricKind, name: &str, value: f64) {
+        let mut g = self.metrics.lock().unwrap();
+        g.insert(name.to_string(), (kind, Metric::Gauge(value)));
+    }
+
+    pub fn observe_latency(&self, kind: MetricKind, name: &str, nanos: u64) {
+        let mut g = self.metrics.lock().unwrap();
+        match g
+            .entry(name.to_string())
+            .or_insert((kind, Metric::Latency(Histogram::new())))
+        {
+            (_, Metric::Latency(h)) => h.record(nanos),
+            _ => log::warn!("metric '{name}' is not a latency"),
+        }
+    }
+
+    pub fn counter(&self, name: &str) -> u64 {
+        match self.metrics.lock().unwrap().get(name) {
+            Some((_, Metric::Counter(c))) => *c,
+            _ => 0,
+        }
+    }
+
+    pub fn gauge(&self, name: &str) -> Option<f64> {
+        match self.metrics.lock().unwrap().get(name) {
+            Some((_, Metric::Gauge(v))) => Some(*v),
+            _ => None,
+        }
+    }
+
+    pub fn latency_quantile(&self, name: &str, q: f64) -> Option<u64> {
+        match self.metrics.lock().unwrap().get(name) {
+            Some((_, Metric::Latency(h))) => Some(h.quantile(q)),
+            _ => None,
+        }
+    }
+
+    /// Render all metrics of a kind (dashboard / `geofs metrics`).
+    pub fn render(&self, kind: Option<MetricKind>) -> String {
+        let g = self.metrics.lock().unwrap();
+        let mut out = String::new();
+        for (name, (k, m)) in g.iter() {
+            if kind.is_some() && kind != Some(*k) {
+                continue;
+            }
+            let tag = match k {
+                MetricKind::System => "system",
+                MetricKind::Custom => "custom",
+            };
+            match m {
+                Metric::Counter(c) => out.push_str(&format!("{name}{{{tag}}} = {c}\n")),
+                Metric::Gauge(v) => out.push_str(&format!("{name}{{{tag}}} = {v:.3}\n")),
+                Metric::Latency(h) => {
+                    out.push_str(&format!("{name}{{{tag}}} {}\n", h.summary(1_000.0, "µs")))
+                }
+            }
+        }
+        out
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn counters_accumulate() {
+        let m = MetricsRegistry::new();
+        m.inc(MetricKind::System, "jobs_total", 1);
+        m.inc(MetricKind::System, "jobs_total", 2);
+        assert_eq!(m.counter("jobs_total"), 3);
+        assert_eq!(m.counter("missing"), 0);
+    }
+
+    #[test]
+    fn gauges_overwrite() {
+        let m = MetricsRegistry::new();
+        m.set_gauge(MetricKind::Custom, "fill_rate", 0.5);
+        m.set_gauge(MetricKind::Custom, "fill_rate", 0.75);
+        assert_eq!(m.gauge("fill_rate"), Some(0.75));
+    }
+
+    #[test]
+    fn latencies_quantile() {
+        let m = MetricsRegistry::new();
+        for v in [100u64, 200, 300, 400, 1000] {
+            m.observe_latency(MetricKind::System, "lookup_ns", v);
+        }
+        let p50 = m.latency_quantile("lookup_ns", 0.5).unwrap();
+        assert!((200..=300).contains(&p50), "p50={p50}");
+        assert!(m.latency_quantile("nope", 0.5).is_none());
+    }
+
+    #[test]
+    fn render_filters_by_kind() {
+        let m = MetricsRegistry::new();
+        m.inc(MetricKind::System, "sys_counter", 1);
+        m.set_gauge(MetricKind::Custom, "cust_gauge", 2.0);
+        let sys = m.render(Some(MetricKind::System));
+        assert!(sys.contains("sys_counter") && !sys.contains("cust_gauge"));
+        let all = m.render(None);
+        assert!(all.contains("sys_counter") && all.contains("cust_gauge"));
+    }
+
+    #[test]
+    fn kind_mismatch_is_tolerated() {
+        let m = MetricsRegistry::new();
+        m.inc(MetricKind::System, "x", 1);
+        m.observe_latency(MetricKind::System, "x", 5); // wrong type: warn, no panic
+        assert_eq!(m.counter("x"), 1);
+    }
+}

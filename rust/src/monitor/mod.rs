@@ -1,0 +1,13 @@
+//! Health / monitoring subsystem (§3.1.2) and freshness SLA metric
+//! (§2.1 "Data Staleness/Freshness").
+//!
+//! Metrics are classified **built-in (system)** vs **custom (user
+//! defined)**, as the paper specifies; system metrics back the SLA
+//! machinery, custom metrics surface the customer's feature-engineering
+//! insight.
+
+pub mod freshness;
+pub mod metrics;
+
+pub use freshness::FreshnessTracker;
+pub use metrics::{MetricKind, MetricsRegistry};

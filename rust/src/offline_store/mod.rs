@@ -1,0 +1,308 @@
+//! Offline store (§3.1.4): big-data sink with high-throughput retrieval.
+//!
+//! The paper materializes feature-set tables into ADLS gen2 as Delta
+//! tables; here the equivalent substrate is an append-only, day-
+//! partitioned segment store with the same contract:
+//!
+//! * Alg 2 (offline branch): insert iff the `(IDs, event_ts, creation_ts)`
+//!   uniqueness key is absent, else no-op — merges are idempotent.
+//! * Keeps **every** record version over time (Eq. 1), enabling
+//!   point-in-time reads and time travel on `creation_ts`.
+//! * Partition pruning on the event-time day for range scans.
+//! * Durable persistence with checksums (`persist`/`load`).
+
+pub mod segment;
+
+use std::collections::{BTreeMap, HashMap};
+use std::sync::RwLock;
+
+use crate::types::time::DAY;
+use crate::types::{EntityId, FeatureRecord, FeatureWindow, FsError, Result, Timestamp};
+
+pub use segment::{load_table, persist_table};
+
+/// Merge accounting (fed into monitoring).
+#[derive(Debug, Default, Clone, Copy, PartialEq, Eq)]
+pub struct MergeStats {
+    pub inserted: u64,
+    pub skipped: u64,
+}
+
+impl MergeStats {
+    pub fn add(&mut self, other: MergeStats) {
+        self.inserted += other.inserted;
+        self.skipped += other.skipped;
+    }
+}
+
+/// One feature-set table: day partitions + uniqueness index.
+#[derive(Debug, Default)]
+pub(crate) struct Table {
+    /// day index (event_ts div DAY) → records in that partition.
+    pub(crate) partitions: BTreeMap<i64, Vec<FeatureRecord>>,
+    /// Uniqueness keys (§4.5.1).
+    keys: std::collections::HashSet<(EntityId, Timestamp, Timestamp)>,
+    pub(crate) rows: u64,
+}
+
+impl Table {
+    fn merge(&mut self, records: &[FeatureRecord]) -> MergeStats {
+        let mut stats = MergeStats::default();
+        for r in records {
+            if self.keys.insert(r.unique_key()) {
+                self.partitions.entry(r.event_ts.div_euclid(DAY)).or_default().push(r.clone());
+                self.rows += 1;
+                stats.inserted += 1;
+            } else {
+                stats.skipped += 1;
+            }
+        }
+        stats
+    }
+
+    fn scan(&self, window: FeatureWindow, as_of: Option<Timestamp>) -> Vec<FeatureRecord> {
+        let day_lo = window.start.div_euclid(DAY);
+        let day_hi = window.end.div_euclid(DAY); // inclusive: end may sit inside this day
+        let mut out = Vec::new();
+        for (_, part) in self.partitions.range(day_lo..=day_hi) {
+            for r in part {
+                if window.contains(r.event_ts) && as_of.map_or(true, |t| r.creation_ts <= t) {
+                    out.push(r.clone());
+                }
+            }
+        }
+        out
+    }
+}
+
+/// The offline store: many feature-set tables.
+#[derive(Debug, Default)]
+pub struct OfflineStore {
+    tables: RwLock<HashMap<String, Table>>,
+}
+
+impl OfflineStore {
+    pub fn new() -> Self {
+        Self::default()
+    }
+
+    /// Alg 2 offline merge: idempotent insert of new record versions.
+    pub fn merge(&self, table: &str, records: &[FeatureRecord]) -> MergeStats {
+        let mut g = self.tables.write().unwrap();
+        g.entry(table.to_string()).or_default().merge(records)
+    }
+
+    /// All records with `event_ts` in `window` (every version — Eq. 1).
+    pub fn scan(&self, table: &str, window: FeatureWindow) -> Vec<FeatureRecord> {
+        self.tables
+            .read()
+            .unwrap()
+            .get(table)
+            .map(|t| t.scan(window, None))
+            .unwrap_or_default()
+    }
+
+    /// Time travel: only record versions that existed at `as_of`
+    /// (creation_ts ≤ as_of). This is what the PIT training query uses so
+    /// training reproduces what inference would have seen.
+    pub fn scan_as_of(&self, table: &str, window: FeatureWindow, as_of: Timestamp) -> Vec<FeatureRecord> {
+        self.tables
+            .read()
+            .unwrap()
+            .get(table)
+            .map(|t| t.scan(window, Some(as_of)))
+            .unwrap_or_default()
+    }
+
+    /// Latest record per entity by `(event_ts, creation_ts)` — the
+    /// offline→online bootstrap read (§4.5.5).
+    pub fn latest_per_entity(&self, table: &str) -> Vec<FeatureRecord> {
+        let g = self.tables.read().unwrap();
+        let Some(t) = g.get(table) else { return Vec::new() };
+        let mut best: HashMap<EntityId, FeatureRecord> = HashMap::new();
+        for part in t.partitions.values() {
+            for r in part {
+                match best.get(&r.entity) {
+                    Some(b) if b.version() >= r.version() => {}
+                    _ => {
+                        best.insert(r.entity, r.clone());
+                    }
+                }
+            }
+        }
+        let mut out: Vec<_> = best.into_values().collect();
+        out.sort_by_key(|r| r.entity);
+        out
+    }
+
+    pub fn row_count(&self, table: &str) -> u64 {
+        self.tables.read().unwrap().get(table).map(|t| t.rows).unwrap_or(0)
+    }
+
+    pub fn tables(&self) -> Vec<String> {
+        self.tables.read().unwrap().keys().cloned().collect()
+    }
+
+    /// Event-time coverage `[min, max_event_ts]` of a table, if nonempty.
+    pub fn event_range(&self, table: &str) -> Option<(Timestamp, Timestamp)> {
+        let g = self.tables.read().unwrap();
+        let t = g.get(table)?;
+        let mut lo = i64::MAX;
+        let mut hi = i64::MIN;
+        for part in t.partitions.values() {
+            for r in part {
+                lo = lo.min(r.event_ts);
+                hi = hi.max(r.event_ts);
+            }
+        }
+        (lo <= hi).then_some((lo, hi))
+    }
+
+    /// Persist all tables under `dir` (one file per table).
+    pub fn persist(&self, dir: &std::path::Path) -> Result<()> {
+        std::fs::create_dir_all(dir)?;
+        let g = self.tables.read().unwrap();
+        for (name, table) in g.iter() {
+            let rows: Vec<&FeatureRecord> = table.partitions.values().flatten().collect();
+            segment::persist_table(&dir.join(format!("{name}.gfseg")), &rows)?;
+        }
+        Ok(())
+    }
+
+    /// Load tables persisted by [`OfflineStore::persist`].
+    pub fn load(dir: &std::path::Path) -> Result<OfflineStore> {
+        let store = OfflineStore::new();
+        if !dir.exists() {
+            return Ok(store);
+        }
+        for entry in std::fs::read_dir(dir)? {
+            let path = entry?.path();
+            if path.extension().and_then(|e| e.to_str()) != Some("gfseg") {
+                continue;
+            }
+            let name = path
+                .file_stem()
+                .and_then(|s| s.to_str())
+                .ok_or_else(|| FsError::Other(format!("bad segment file {path:?}")))?
+                .to_string();
+            let rows = segment::load_table(&path)?;
+            store.merge(&name, &rows);
+        }
+        Ok(store)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn rec(entity: EntityId, event: Timestamp, created: Timestamp, v: f32) -> FeatureRecord {
+        FeatureRecord::new(entity, event, created, vec![v])
+    }
+
+    #[test]
+    fn merge_is_idempotent() {
+        let s = OfflineStore::new();
+        let rows = vec![rec(1, 100, 200, 1.0), rec(2, 100, 200, 2.0)];
+        let m1 = s.merge("t", &rows);
+        assert_eq!(m1, MergeStats { inserted: 2, skipped: 0 });
+        let m2 = s.merge("t", &rows);
+        assert_eq!(m2, MergeStats { inserted: 0, skipped: 2 });
+        assert_eq!(s.row_count("t"), 2);
+    }
+
+    #[test]
+    fn keeps_every_version_eq1() {
+        let s = OfflineStore::new();
+        // Same entity+event_ts, three creation timestamps (job retries /
+        // late recomputes) — all kept (Eq. 1).
+        s.merge("t", &[rec(1, 100, 200, 1.0), rec(1, 100, 300, 1.1), rec(1, 100, 400, 1.2)]);
+        assert_eq!(s.row_count("t"), 3);
+        assert_eq!(s.scan("t", FeatureWindow::new(0, 1_000)).len(), 3);
+    }
+
+    #[test]
+    fn scan_respects_window_half_open() {
+        let s = OfflineStore::new();
+        s.merge("t", &[rec(1, 100, 200, 0.0), rec(1, 200, 300, 0.0), rec(1, 300, 400, 0.0)]);
+        let got = s.scan("t", FeatureWindow::new(100, 300));
+        let evs: Vec<_> = got.iter().map(|r| r.event_ts).collect();
+        assert_eq!(evs.len(), 2);
+        assert!(evs.contains(&100) && evs.contains(&200));
+    }
+
+    #[test]
+    fn scan_prunes_partitions_across_days() {
+        let s = OfflineStore::new();
+        for d in 0..30 {
+            s.merge("t", &[rec(1, d * DAY + 10, d * DAY + 20, d as f32)]);
+        }
+        let got = s.scan("t", FeatureWindow::new(10 * DAY, 12 * DAY));
+        assert_eq!(got.len(), 2);
+    }
+
+    #[test]
+    fn time_travel_as_of() {
+        let s = OfflineStore::new();
+        s.merge("t", &[rec(1, 100, 150, 1.0), rec(1, 100, 500, 2.0)]);
+        let w = FeatureWindow::new(0, 1_000);
+        assert_eq!(s.scan_as_of("t", w, 200).len(), 1);
+        assert_eq!(s.scan_as_of("t", w, 100).len(), 0);
+        assert_eq!(s.scan_as_of("t", w, 500).len(), 2);
+    }
+
+    #[test]
+    fn latest_per_entity_matches_eq2() {
+        let s = OfflineStore::new();
+        // Fig 5's records: R1={t1,t1'}, R3={t1,t3'} late-arriving;
+        // R2={t2,t2'} has the max event_ts → R2 is the latest.
+        s.merge(
+            "t",
+            &[rec(1, 10, 11, 0.0), rec(1, 20, 21, 1.0), rec(1, 30, 31, 2.0), rec(1, 20, 99, 3.0)],
+        );
+        let latest = s.latest_per_entity("t");
+        assert_eq!(latest.len(), 1);
+        assert_eq!(latest[0].event_ts, 30);
+        assert_eq!(latest[0].creation_ts, 31);
+    }
+
+    #[test]
+    fn latest_per_entity_tie_breaks_on_creation() {
+        let s = OfflineStore::new();
+        s.merge("t", &[rec(1, 10, 11, 0.0), rec(1, 10, 50, 1.0)]);
+        let latest = s.latest_per_entity("t");
+        assert_eq!(latest[0].creation_ts, 50);
+    }
+
+    #[test]
+    fn event_range() {
+        let s = OfflineStore::new();
+        assert_eq!(s.event_range("t"), None);
+        s.merge("t", &[rec(1, 100, 150, 0.0), rec(2, 900, 950, 0.0)]);
+        assert_eq!(s.event_range("t"), Some((100, 900)));
+    }
+
+    #[test]
+    fn negative_event_ts_partitions() {
+        let s = OfflineStore::new();
+        s.merge("t", &[rec(1, -100, 0, 0.0)]);
+        assert_eq!(s.scan("t", FeatureWindow::new(-DAY, 0)).len(), 1);
+    }
+
+    #[test]
+    fn persist_and_load_roundtrip() {
+        let dir = std::env::temp_dir().join(format!("geofs-off-{}", std::process::id()));
+        let _ = std::fs::remove_dir_all(&dir);
+        let s = OfflineStore::new();
+        s.merge("alpha", &[rec(1, 100, 150, 1.5), rec(2, 200, 250, -2.5)]);
+        s.merge("beta", &[rec(3, 300, 350, 0.25)]);
+        s.persist(&dir).unwrap();
+
+        let loaded = OfflineStore::load(&dir).unwrap();
+        assert_eq!(loaded.row_count("alpha"), 2);
+        assert_eq!(loaded.row_count("beta"), 1);
+        let got = loaded.scan("alpha", FeatureWindow::new(0, 1_000));
+        assert!(got.iter().any(|r| r.values[0] == 1.5));
+        std::fs::remove_dir_all(&dir).unwrap();
+    }
+}

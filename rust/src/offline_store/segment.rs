@@ -1,0 +1,149 @@
+//! On-disk segment format for offline-store tables.
+//!
+//! Simple length-prefixed binary layout with a CRC-style checksum —
+//! enough to give the offline store real durability semantics (the geo
+//! failover test kills a region and reloads from segments) without
+//! pulling in parquet.
+//!
+//! Layout (all little-endian):
+//! ```text
+//! magic "GFSEG1\0\0" | u32 n_rows | rows... | u64 checksum
+//! row := u64 entity | i64 event_ts | i64 creation_ts
+//!        | u32 n_values | f32 * n_values
+//! ```
+
+use std::io::{Read, Write};
+use std::path::Path;
+
+use crate::types::{FeatureRecord, FsError, Result};
+
+const MAGIC: &[u8; 8] = b"GFSEG1\0\0";
+
+/// FNV-1a over the payload — cheap corruption detection.
+fn checksum(bytes: &[u8]) -> u64 {
+    let mut h: u64 = 0xcbf29ce484222325;
+    for &b in bytes {
+        h ^= b as u64;
+        h = h.wrapping_mul(0x100000001b3);
+    }
+    h
+}
+
+pub fn persist_table(path: &Path, rows: &[&FeatureRecord]) -> Result<()> {
+    let mut payload = Vec::with_capacity(rows.len() * 32);
+    payload.extend_from_slice(&(rows.len() as u32).to_le_bytes());
+    for r in rows {
+        payload.extend_from_slice(&r.entity.to_le_bytes());
+        payload.extend_from_slice(&r.event_ts.to_le_bytes());
+        payload.extend_from_slice(&r.creation_ts.to_le_bytes());
+        payload.extend_from_slice(&(r.values.len() as u32).to_le_bytes());
+        for v in r.values.iter() {
+            payload.extend_from_slice(&v.to_le_bytes());
+        }
+    }
+    let sum = checksum(&payload);
+    // Write to a temp file then rename: a crashed writer never leaves a
+    // torn segment under the real name.
+    let tmp = path.with_extension("tmp");
+    {
+        let mut f = std::fs::File::create(&tmp)?;
+        f.write_all(MAGIC)?;
+        f.write_all(&payload)?;
+        f.write_all(&sum.to_le_bytes())?;
+        f.sync_all()?;
+    }
+    std::fs::rename(&tmp, path)?;
+    Ok(())
+}
+
+pub fn load_table(path: &Path) -> Result<Vec<FeatureRecord>> {
+    let mut bytes = Vec::new();
+    std::fs::File::open(path)?.read_to_end(&mut bytes)?;
+    if bytes.len() < MAGIC.len() + 4 + 8 || &bytes[..MAGIC.len()] != MAGIC {
+        return Err(FsError::Other(format!("{path:?}: not a geofs segment")));
+    }
+    let payload = &bytes[MAGIC.len()..bytes.len() - 8];
+    let stored_sum = u64::from_le_bytes(bytes[bytes.len() - 8..].try_into().unwrap());
+    if checksum(payload) != stored_sum {
+        return Err(FsError::Other(format!("{path:?}: checksum mismatch (corrupt segment)")));
+    }
+
+    let mut pos = 0usize;
+    let take = |pos: &mut usize, n: usize| -> Result<&[u8]> {
+        if *pos + n > payload.len() {
+            return Err(FsError::Other(format!("{path:?}: truncated segment")));
+        }
+        let s = &payload[*pos..*pos + n];
+        *pos += n;
+        Ok(s)
+    };
+    let n_rows = u32::from_le_bytes(take(&mut pos, 4)?.try_into().unwrap()) as usize;
+    let mut rows = Vec::with_capacity(n_rows);
+    for _ in 0..n_rows {
+        let entity = u64::from_le_bytes(take(&mut pos, 8)?.try_into().unwrap());
+        let event_ts = i64::from_le_bytes(take(&mut pos, 8)?.try_into().unwrap());
+        let creation_ts = i64::from_le_bytes(take(&mut pos, 8)?.try_into().unwrap());
+        let n_vals = u32::from_le_bytes(take(&mut pos, 4)?.try_into().unwrap()) as usize;
+        let mut values = Vec::with_capacity(n_vals);
+        for _ in 0..n_vals {
+            values.push(f32::from_le_bytes(take(&mut pos, 4)?.try_into().unwrap()));
+        }
+        rows.push(FeatureRecord::new(entity, event_ts, creation_ts, values));
+    }
+    if pos != payload.len() {
+        return Err(FsError::Other(format!("{path:?}: trailing bytes in segment")));
+    }
+    Ok(rows)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn tmpfile(tag: &str) -> std::path::PathBuf {
+        std::env::temp_dir().join(format!("geofs-seg-{}-{tag}.gfseg", std::process::id()))
+    }
+
+    #[test]
+    fn roundtrip() {
+        let path = tmpfile("rt");
+        let rows = vec![
+            FeatureRecord::new(1, 100, 150, vec![1.0, 2.0, f32::INFINITY]),
+            FeatureRecord::new(u64::MAX, -5, 0, vec![]),
+        ];
+        persist_table(&path, &rows.iter().collect::<Vec<_>>()).unwrap();
+        let got = load_table(&path).unwrap();
+        assert_eq!(got, rows);
+        std::fs::remove_file(&path).unwrap();
+    }
+
+    #[test]
+    fn detects_corruption() {
+        let path = tmpfile("corrupt");
+        let rows = vec![FeatureRecord::new(1, 2, 3, vec![4.0])];
+        persist_table(&path, &rows.iter().collect::<Vec<_>>()).unwrap();
+        // Flip a payload byte.
+        let mut bytes = std::fs::read(&path).unwrap();
+        let mid = bytes.len() / 2;
+        bytes[mid] ^= 0xff;
+        std::fs::write(&path, &bytes).unwrap();
+        assert!(load_table(&path).is_err());
+        std::fs::remove_file(&path).unwrap();
+    }
+
+    #[test]
+    fn rejects_non_segment() {
+        let path = tmpfile("junk");
+        std::fs::write(&path, b"hello world, definitely not a segment").unwrap();
+        assert!(load_table(&path).is_err());
+        std::fs::remove_file(&path).unwrap();
+    }
+
+    #[test]
+    fn empty_table() {
+        let path = tmpfile("empty");
+        persist_table(&path, &[]).unwrap();
+        assert_eq!(load_table(&path).unwrap(), vec![]);
+        std::fs::remove_file(&path).unwrap();
+    }
+}

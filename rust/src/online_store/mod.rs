@@ -1,0 +1,349 @@
+//! Online store (§3.1.4): low-latency sink, Redis-equivalent substrate.
+//!
+//! Per Eq. 2 the online store keeps, for each entity, only the record
+//! with `max(tuple(event_ts, creation_ts))`, "assuming TTL satisfies".
+//! The merge follows Algorithm 2's online branch exactly:
+//!
+//! * key absent → insert
+//! * new event_ts > existing → override
+//! * equal event_ts and new creation_ts > existing → override
+//! * otherwise → no-op
+//!
+//! Sharded like a Redis cluster; `scale_to` rebalances shards online
+//! (§3.1.3 "scale up or down the managed resources like Redis").
+
+use std::collections::HashMap;
+use std::sync::atomic::{AtomicU64, Ordering};
+use std::sync::RwLock;
+
+use crate::offline_store::MergeStats;
+use crate::types::{EntityId, FeatureRecord, FsError, Result, Timestamp};
+
+/// Per-table entry: the single latest record (Eq. 2) + TTL bookkeeping.
+#[derive(Debug, Clone)]
+struct Entry {
+    record: FeatureRecord,
+    /// Wall-clock (processing timeline) moment this entry was last
+    /// written; TTL expiry is measured from here, like a Redis SET with
+    /// EXPIRE.
+    written_at: Timestamp,
+}
+
+type ShardMap = HashMap<(String, EntityId), Entry>;
+
+/// Sharded in-process KV store.
+#[derive(Debug)]
+pub struct OnlineStore {
+    shards: RwLock<Vec<RwLock<ShardMap>>>,
+    /// TTL per table (seconds on the processing timeline); default ∞.
+    ttls: RwLock<HashMap<String, i64>>,
+    pub hits: AtomicU64,
+    pub misses: AtomicU64,
+}
+
+impl Default for OnlineStore {
+    fn default() -> Self {
+        Self::new(8)
+    }
+}
+
+impl OnlineStore {
+    pub fn new(shards: usize) -> Self {
+        assert!(shards > 0);
+        OnlineStore {
+            shards: RwLock::new((0..shards).map(|_| RwLock::new(HashMap::new())).collect()),
+            ttls: RwLock::new(HashMap::new()),
+            hits: AtomicU64::new(0),
+            misses: AtomicU64::new(0),
+        }
+    }
+
+    pub fn shard_count(&self) -> usize {
+        self.shards.read().unwrap().len()
+    }
+
+    pub fn set_ttl(&self, table: &str, ttl_secs: i64) {
+        self.ttls.write().unwrap().insert(table.to_string(), ttl_secs);
+    }
+
+    fn shard_of(&self, entity: EntityId, n: usize) -> usize {
+        // splitmix-style avalanche so sequential ids spread.
+        let mut x = entity.wrapping_add(0x9e3779b97f4a7c15);
+        x = (x ^ (x >> 30)).wrapping_mul(0xbf58476d1ce4e5b9);
+        x = (x ^ (x >> 27)).wrapping_mul(0x94d049bb133111eb);
+        (x ^ (x >> 31)) as usize % n
+    }
+
+    /// Algorithm 2 (online branch). `now` is the processing-timeline
+    /// write moment (drives TTL).
+    pub fn merge(&self, table: &str, records: &[FeatureRecord], now: Timestamp) -> MergeStats {
+        let mut stats = MergeStats::default();
+        let shards = self.shards.read().unwrap();
+        let n = shards.len();
+        for r in records {
+            let key = (table.to_string(), r.entity);
+            let mut shard = shards[self.shard_of(r.entity, n)].write().unwrap();
+            match shard.get(&key) {
+                None => {
+                    shard.insert(key, Entry { record: r.clone(), written_at: now });
+                    stats.inserted += 1;
+                }
+                Some(e) if r.version() > e.record.version() => {
+                    shard.insert(key, Entry { record: r.clone(), written_at: now });
+                    stats.inserted += 1;
+                }
+                Some(_) => stats.skipped += 1,
+            }
+        }
+        stats
+    }
+
+    /// Low-latency point lookup. Returns `None` for absent or TTL-expired
+    /// entries — the caller distinguishes "not materialized" vs "no data"
+    /// through the scheduler's data-state (§4.3).
+    pub fn get(&self, table: &str, entity: EntityId, now: Timestamp) -> Option<FeatureRecord> {
+        let shards = self.shards.read().unwrap();
+        let n = shards.len();
+        let shard = shards[self.shard_of(entity, n)].read().unwrap();
+        let out = shard.get(&(table.to_string(), entity)).and_then(|e| {
+            let ttl = self.ttls.read().unwrap().get(table).copied().unwrap_or(i64::MAX);
+            if ttl != i64::MAX && now - e.written_at >= ttl {
+                None // expired
+            } else {
+                Some(e.record.clone())
+            }
+        });
+        match &out {
+            Some(_) => self.hits.fetch_add(1, Ordering::Relaxed),
+            None => self.misses.fetch_add(1, Ordering::Relaxed),
+        };
+        out
+    }
+
+    /// Batched lookup (the serving batcher's unit of work).
+    pub fn get_many(
+        &self,
+        table: &str,
+        entities: &[EntityId],
+        now: Timestamp,
+    ) -> Vec<Option<FeatureRecord>> {
+        entities.iter().map(|&e| self.get(table, e, now)).collect()
+    }
+
+    /// Everything currently live in a table — the online→offline
+    /// bootstrap read (§4.5.5).
+    pub fn dump_table(&self, table: &str, now: Timestamp) -> Vec<FeatureRecord> {
+        let ttl = self.ttls.read().unwrap().get(table).copied().unwrap_or(i64::MAX);
+        let shards = self.shards.read().unwrap();
+        let mut out = Vec::new();
+        for s in shards.iter() {
+            for ((t, _), e) in s.read().unwrap().iter() {
+                if t == table && (ttl == i64::MAX || now - e.written_at < ttl) {
+                    out.push(e.record.clone());
+                }
+            }
+        }
+        out.sort_by_key(|r| r.entity);
+        out
+    }
+
+    /// Drop TTL-expired entries (Redis does this lazily + actively; we
+    /// expose it so tests and the freshness monitor can force it).
+    pub fn evict_expired(&self, now: Timestamp) -> u64 {
+        let ttls = self.ttls.read().unwrap().clone();
+        let shards = self.shards.read().unwrap();
+        let mut evicted = 0;
+        for s in shards.iter() {
+            let mut g = s.write().unwrap();
+            g.retain(|(table, _), e| {
+                let ttl = ttls.get(table).copied().unwrap_or(i64::MAX);
+                let keep = ttl == i64::MAX || now - e.written_at < ttl;
+                if !keep {
+                    evicted += 1;
+                }
+                keep
+            });
+        }
+        evicted
+    }
+
+    /// Scale to `n` shards, rehashing all entries (§3.1.3). Readers are
+    /// briefly blocked by the outer write lock — the paper's "scale
+    /// up/down managed Redis" with a short rebalance pause.
+    pub fn scale_to(&self, n: usize) -> Result<()> {
+        if n == 0 {
+            return Err(FsError::InvalidArg("shard count must be > 0".into()));
+        }
+        let mut shards = self.shards.write().unwrap();
+        let mut entries: Vec<((String, EntityId), Entry)> = Vec::new();
+        for s in shards.iter() {
+            entries.extend(s.write().unwrap().drain());
+        }
+        let new: Vec<RwLock<ShardMap>> = (0..n).map(|_| RwLock::new(HashMap::new())).collect();
+        for (key, entry) in entries {
+            let idx = self.shard_of(key.1, n);
+            new[idx].write().unwrap().insert(key, entry);
+        }
+        *shards = new;
+        Ok(())
+    }
+
+    pub fn len(&self) -> usize {
+        self.shards.read().unwrap().iter().map(|s| s.read().unwrap().len()).sum()
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.len() == 0
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn rec(entity: EntityId, event: Timestamp, created: Timestamp, v: f32) -> FeatureRecord {
+        FeatureRecord::new(entity, event, created, vec![v])
+    }
+
+    #[test]
+    fn alg2_insert_override_noop() {
+        let s = OnlineStore::new(4);
+        // insert
+        s.merge("t", &[rec(1, 100, 150, 1.0)], 150);
+        assert_eq!(s.get("t", 1, 150).unwrap().values[0], 1.0);
+        // newer event_ts → override
+        s.merge("t", &[rec(1, 200, 160, 2.0)], 160);
+        assert_eq!(s.get("t", 1, 160).unwrap().values[0], 2.0);
+        // older event_ts → no-op (late merge of an old window)
+        let m = s.merge("t", &[rec(1, 100, 999, 9.0)], 999);
+        assert_eq!(m.skipped, 1);
+        assert_eq!(s.get("t", 1, 999).unwrap().values[0], 2.0);
+        // same event_ts, newer creation_ts → override (late-arriving data
+        // recompute — Fig 5's R3)
+        s.merge("t", &[rec(1, 200, 500, 3.0)], 500);
+        assert_eq!(s.get("t", 1, 500).unwrap().values[0], 3.0);
+        // same event_ts, older creation_ts → no-op
+        let m = s.merge("t", &[rec(1, 200, 170, 9.0)], 555);
+        assert_eq!(m.skipped, 1);
+        assert_eq!(s.get("t", 1, 555).unwrap().values[0], 3.0);
+    }
+
+    #[test]
+    fn merge_order_independent_converged_state() {
+        // Any delivery order of the same record set converges to the same
+        // online state (Eq. 2) — the eventual-consistency core.
+        let records = vec![
+            rec(1, 10, 11, 0.0),
+            rec(1, 20, 21, 1.0),
+            rec(1, 20, 99, 2.0),
+            rec(1, 30, 31, 3.0),
+            rec(2, 5, 6, 4.0),
+        ];
+        let mut perm = records.clone();
+        for rot in 0..perm.len() {
+            perm.rotate_left(1);
+            let s = OnlineStore::new(2);
+            for r in &perm {
+                s.merge("t", std::slice::from_ref(r), r.creation_ts);
+            }
+            assert_eq!(s.get("t", 1, 1_000).unwrap().version(), (30, 31), "rot={rot}");
+            assert_eq!(s.get("t", 2, 1_000).unwrap().version(), (5, 6));
+        }
+    }
+
+    #[test]
+    fn ttl_expiry_and_eviction() {
+        let s = OnlineStore::new(2);
+        s.set_ttl("t", 100);
+        s.merge("t", &[rec(1, 10, 20, 1.0)], 1_000);
+        assert!(s.get("t", 1, 1_050).is_some());
+        assert!(s.get("t", 1, 1_100).is_none()); // expired at exactly ttl
+        assert_eq!(s.len(), 1); // still resident until evicted
+        assert_eq!(s.evict_expired(1_100), 1);
+        assert_eq!(s.len(), 0);
+    }
+
+    #[test]
+    fn tables_are_isolated() {
+        let s = OnlineStore::new(2);
+        s.merge("a", &[rec(1, 10, 20, 1.0)], 20);
+        s.merge("b", &[rec(1, 99, 100, 2.0)], 100);
+        assert_eq!(s.get("a", 1, 200).unwrap().values[0], 1.0);
+        assert_eq!(s.get("b", 1, 200).unwrap().values[0], 2.0);
+        assert_eq!(s.dump_table("a", 200).len(), 1);
+    }
+
+    #[test]
+    fn get_many_preserves_order() {
+        let s = OnlineStore::new(4);
+        s.merge("t", &[rec(5, 10, 20, 5.0), rec(7, 10, 20, 7.0)], 20);
+        let got = s.get_many("t", &[7, 6, 5], 100);
+        assert_eq!(got[0].as_ref().unwrap().values[0], 7.0);
+        assert!(got[1].is_none());
+        assert_eq!(got[2].as_ref().unwrap().values[0], 5.0);
+    }
+
+    #[test]
+    fn scale_preserves_data() {
+        let s = OnlineStore::new(2);
+        let rows: Vec<_> = (0..500).map(|i| rec(i, 10, 20, i as f32)).collect();
+        s.merge("t", &rows, 20);
+        s.scale_to(16).unwrap();
+        assert_eq!(s.shard_count(), 16);
+        for i in 0..500 {
+            assert_eq!(s.get("t", i, 100).unwrap().values[0], i as f32);
+        }
+        s.scale_to(1).unwrap();
+        assert_eq!(s.len(), 500);
+        assert!(s.scale_to(0).is_err());
+    }
+
+    #[test]
+    fn dump_table_skips_expired() {
+        let s = OnlineStore::new(2);
+        s.set_ttl("t", 50);
+        s.merge("t", &[rec(1, 10, 20, 1.0)], 0);
+        s.merge("t", &[rec(2, 10, 20, 2.0)], 100);
+        let dump = s.dump_table("t", 120);
+        assert_eq!(dump.len(), 1);
+        assert_eq!(dump[0].entity, 2);
+    }
+
+    #[test]
+    fn hit_miss_accounting() {
+        let s = OnlineStore::new(2);
+        s.merge("t", &[rec(1, 10, 20, 1.0)], 20);
+        s.get("t", 1, 30);
+        s.get("t", 2, 30);
+        assert_eq!(s.hits.load(Ordering::Relaxed), 1);
+        assert_eq!(s.misses.load(Ordering::Relaxed), 1);
+    }
+
+    #[test]
+    fn concurrent_merges_converge() {
+        use std::sync::Arc;
+        let s = Arc::new(OnlineStore::new(8));
+        let handles: Vec<_> = (0..8u64)
+            .map(|t| {
+                let s = s.clone();
+                std::thread::spawn(move || {
+                    for i in 0..200u64 {
+                        let r = rec(i % 50, (i as i64) + 1, (i as i64) + 2 + t as i64, t as f32);
+                        s.merge("t", &[r], 1_000);
+                    }
+                })
+            })
+            .collect();
+        for h in handles {
+            h.join().unwrap();
+        }
+        // Every entity holds the max-version record written for it.
+        for e in 0..50u64 {
+            let got = s.get("t", e, 10_000).unwrap();
+            // max i with i%50==e is 150+e → event_ts 151+e, creation from
+            // the thread with largest t.
+            assert_eq!(got.event_ts, 151 + e as i64);
+            assert_eq!(got.creation_ts, 151 + e as i64 + 1 + 7);
+        }
+    }
+}

@@ -1,0 +1,16 @@
+//! Query subsystem: point-in-time correct feature retrieval (§4.4).
+//!
+//! * [`pit`] — the leakage-prevention join: for an observation at time
+//!   `ts₀`, return feature values strictly from the past of `ts₀`,
+//!   nearest-past first, honoring the expected source/feature delay.
+//! * [`offline`] — offline (training) retrieval over the offline store,
+//!   including on-the-fly calculation for unmaterialized feature sets.
+//! * [`spec`] — feature retrieval specs (`featureset:version:feature`).
+
+pub mod offline;
+pub mod pit;
+pub mod spec;
+
+pub use offline::OfflineQueryEngine;
+pub use pit::{pit_lookup, Observation, PitConfig};
+pub use spec::FeatureRef;

@@ -1,0 +1,275 @@
+//! Offline (training) retrieval: PIT-join a spine of observations
+//! against one or more feature sets from the offline store (§2.1
+//! "Offline feature retrieval to support point-in-time joins with high
+//! data throughput").
+
+use std::collections::HashMap;
+use std::sync::Arc;
+
+use super::pit::{Observation, PitConfig, PitIndex};
+use super::spec::FeatureRef;
+use crate::metadata::assets::FeatureSetSpec;
+use crate::offline_store::OfflineStore;
+use crate::types::{FeatureWindow, FsError, Result, Timestamp};
+
+/// A training dataframe: one row per observation, one column per
+/// requested feature (None = no PIT-valid value).
+#[derive(Debug, Clone, PartialEq)]
+pub struct TrainingFrame {
+    pub columns: Vec<String>,
+    pub rows: Vec<TrainingRow>,
+}
+
+#[derive(Debug, Clone, PartialEq)]
+pub struct TrainingRow {
+    pub observation: Observation,
+    pub features: Vec<Option<f32>>,
+}
+
+impl TrainingFrame {
+    /// Fraction of cells that resolved to a value.
+    pub fn fill_rate(&self) -> f64 {
+        let total = self.rows.len() * self.columns.len();
+        if total == 0 {
+            return 0.0;
+        }
+        let filled: usize =
+            self.rows.iter().map(|r| r.features.iter().filter(|f| f.is_some()).count()).sum();
+        filled as f64 / total as f64
+    }
+}
+
+/// Offline query engine bound to an offline store.
+pub struct OfflineQueryEngine {
+    store: Arc<OfflineStore>,
+}
+
+impl OfflineQueryEngine {
+    pub fn new(store: Arc<OfflineStore>) -> Self {
+        OfflineQueryEngine { store }
+    }
+
+    /// PIT-join `observations` against `features`. Each feature ref must
+    /// resolve in `specs` (keyed by feature-set name). The scan window is
+    /// derived from the observation span plus each set's max staleness.
+    pub fn get_training_frame(
+        &self,
+        observations: &[Observation],
+        features: &[FeatureRef],
+        specs: &HashMap<String, FeatureSetSpec>,
+        cfg: PitConfig,
+    ) -> Result<TrainingFrame> {
+        if observations.is_empty() {
+            return Ok(TrainingFrame {
+                columns: features.iter().map(|f| f.to_string()).collect(),
+                rows: Vec::new(),
+            });
+        }
+        let obs_min = observations.iter().map(|o| o.ts).min().unwrap();
+        let obs_max = observations.iter().map(|o| o.ts).max().unwrap();
+
+        // Group feature refs per feature-set table so each table is
+        // scanned + indexed once (high-throughput path).
+        let mut per_table: HashMap<String, Vec<(usize, FeatureRef)>> = HashMap::new();
+        for (col, f) in features.iter().enumerate() {
+            per_table.entry(f.table()).or_default().push((col, f.clone()));
+        }
+
+        let mut rows: Vec<TrainingRow> = observations
+            .iter()
+            .map(|&observation| TrainingRow {
+                observation,
+                features: vec![None; features.len()],
+            })
+            .collect();
+
+        for (table, refs) in per_table {
+            let spec = specs.get(&refs[0].1.feature_set).ok_or_else(|| {
+                FsError::NotFound(format!("feature set spec '{}'", refs[0].1.feature_set))
+            })?;
+            // Column indices resolved against the schema once per table.
+            let cols: Vec<(usize, usize)> = refs
+                .iter()
+                .map(|(col, f)| f.column_index(spec).map(|ci| (*col, ci)))
+                .collect::<Result<_>>()?;
+
+            // Scan window: far enough back that any record usable by the
+            // earliest observation is included.
+            let lookback = if cfg.max_staleness > 0 {
+                cfg.max_staleness
+            } else {
+                // Unlimited staleness: scan from the table's own start.
+                let table_start = self
+                    .store
+                    .event_range(&table)
+                    .map(|(lo, _)| obs_min - lo)
+                    .unwrap_or(0)
+                    .max(0);
+                table_start + spec.granularity.secs()
+            };
+            let window = FeatureWindow::new(obs_min - lookback, obs_max + 1);
+            // Index only entities the spine actually references — for a
+            // small spine over a large table this skips most of the scan
+            // (EXPERIMENTS.md §Perf L3).
+            let wanted: std::collections::HashSet<_> =
+                observations.iter().map(|o| o.entity).collect();
+            let index = PitIndex::build(
+                self.store
+                    .scan(&table, window)
+                    .into_iter()
+                    .filter(|r| wanted.contains(&r.entity)),
+            );
+
+            for row in rows.iter_mut() {
+                if let Some(rec) = index.lookup(row.observation, cfg) {
+                    for &(col, ci) in &cols {
+                        row.features[col] = rec.values.get(ci).copied();
+                    }
+                }
+            }
+        }
+
+        Ok(TrainingFrame {
+            columns: features.iter().map(|f| f.to_string()).collect(),
+            rows,
+        })
+    }
+
+    /// Was the window fully materialized when read? The caller combines
+    /// this with the scheduler's data-state to distinguish "no data" from
+    /// "not materialized" (§4.3).
+    pub fn store(&self) -> &Arc<OfflineStore> {
+        &self.store
+    }
+}
+
+/// Naive full-scan join baseline (per-observation linear scan) — the
+/// comparator for `benches/pit_join.rs` (experiment E4).
+pub fn naive_training_frame(
+    store: &OfflineStore,
+    observations: &[Observation],
+    features: &[FeatureRef],
+    specs: &HashMap<String, FeatureSetSpec>,
+    cfg: PitConfig,
+) -> Result<TrainingFrame> {
+    let mut rows = Vec::with_capacity(observations.len());
+    for &observation in observations {
+        let mut feats = vec![None; features.len()];
+        for (col, f) in features.iter().enumerate() {
+            let spec = specs
+                .get(&f.feature_set)
+                .ok_or_else(|| FsError::NotFound(format!("spec '{}'", f.feature_set)))?;
+            let ci = f.column_index(spec)?;
+            let all = store.scan(&f.table(), scan_all_window(store, &f.table(), observation.ts));
+            if let Some(rec) = super::pit::pit_lookup(&all, observation, cfg) {
+                feats[col] = rec.values.get(ci).copied();
+            }
+        }
+        rows.push(TrainingRow { observation, features: feats });
+    }
+    Ok(TrainingFrame { columns: features.iter().map(|f| f.to_string()).collect(), rows })
+}
+
+fn scan_all_window(store: &OfflineStore, table: &str, until: Timestamp) -> FeatureWindow {
+    let lo = store.event_range(table).map(|(lo, _)| lo).unwrap_or(0).min(until - 1);
+    FeatureWindow::new(lo, until)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::metadata::assets::SourceSpec;
+    use crate::types::time::{Granularity, DAY};
+    use crate::types::FeatureRecord;
+
+    fn setup() -> (OfflineQueryEngine, HashMap<String, FeatureSetSpec>) {
+        let store = Arc::new(OfflineStore::new());
+        let spec = FeatureSetSpec::rolling(
+            "txn",
+            1,
+            "customer",
+            SourceSpec::synthetic(0),
+            Granularity::daily(),
+            30,
+        );
+        // Two entities, two days of records; entity 1 gets a late
+        // recompute for day 1.
+        store.merge(
+            "txn:1",
+            &[
+                FeatureRecord::new(1, DAY, DAY + 100, vec![10.0, 1.0, 10.0, 10.0, 10.0]),
+                FeatureRecord::new(1, 2 * DAY, 2 * DAY + 100, vec![20.0, 2.0, 10.0, 5.0, 15.0]),
+                FeatureRecord::new(1, DAY, 3 * DAY, vec![11.0, 1.0, 11.0, 11.0, 11.0]),
+                FeatureRecord::new(2, DAY, DAY + 100, vec![7.0, 1.0, 7.0, 7.0, 7.0]),
+            ],
+        );
+        let mut specs = HashMap::new();
+        specs.insert("txn".to_string(), spec);
+        (OfflineQueryEngine::new(store), specs)
+    }
+
+    fn refs(names: &[&str]) -> Vec<FeatureRef> {
+        names.iter().map(|n| FeatureRef::parse(&format!("txn:1:{n}")).unwrap()).collect()
+    }
+
+    #[test]
+    fn joins_pit_correct_values() {
+        let (q, specs) = setup();
+        let obs = vec![
+            Observation { entity: 1, ts: DAY + 200 },     // sees day-1 original
+            Observation { entity: 1, ts: 2 * DAY + 200 }, // sees day-2
+            Observation { entity: 2, ts: DAY + 50 },      // created later → none
+            Observation { entity: 3, ts: 5 * DAY },       // unknown entity
+        ];
+        let frame = q
+            .get_training_frame(&obs, &refs(&["720h_sum", "720h_cnt"]), &specs, PitConfig::default())
+            .unwrap();
+        assert_eq!(frame.columns.len(), 2);
+        assert_eq!(frame.rows[0].features[0], Some(10.0));
+        assert_eq!(frame.rows[1].features[0], Some(20.0));
+        assert_eq!(frame.rows[1].features[1], Some(2.0));
+        assert_eq!(frame.rows[2].features[0], None); // availability guard
+        assert_eq!(frame.rows[3].features[0], None);
+        assert!((frame.fill_rate() - 0.5).abs() < 1e-9);
+    }
+
+    #[test]
+    fn matches_naive_baseline() {
+        let (q, specs) = setup();
+        let features = refs(&["720h_sum", "720h_max"]);
+        let obs: Vec<Observation> = (0..40)
+            .map(|i| Observation { entity: 1 + (i % 3), ts: DAY / 2 + i as i64 * 6_000 })
+            .collect();
+        for cfg in [
+            PitConfig::default(),
+            PitConfig { availability_slack: 500, max_staleness: 0 },
+            PitConfig { availability_slack: 0, max_staleness: 2 * DAY },
+        ] {
+            let fast = q.get_training_frame(&obs, &features, &specs, cfg).unwrap();
+            let slow = naive_training_frame(q.store(), &obs, &features, &specs, cfg).unwrap();
+            assert_eq!(fast, slow, "cfg {cfg:?}");
+        }
+    }
+
+    #[test]
+    fn empty_observations_ok() {
+        let (q, specs) = setup();
+        let frame = q
+            .get_training_frame(&[], &refs(&["720h_sum"]), &specs, PitConfig::default())
+            .unwrap();
+        assert!(frame.rows.is_empty());
+        assert_eq!(frame.fill_rate(), 0.0);
+    }
+
+    #[test]
+    fn missing_spec_or_feature_errors() {
+        let (q, specs) = setup();
+        let obs = vec![Observation { entity: 1, ts: DAY }];
+        let bad_set = vec![FeatureRef::parse("other:1:x").unwrap()];
+        assert!(q.get_training_frame(&obs, &bad_set, &specs, PitConfig::default()).is_err());
+        let bad_feature = vec![FeatureRef::parse("txn:1:missing").unwrap()];
+        assert!(q
+            .get_training_frame(&obs, &bad_feature, &specs, PitConfig::default())
+            .is_err());
+    }
+}

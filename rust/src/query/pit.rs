@@ -1,0 +1,240 @@
+//! Point-in-time (PIT) correct lookup — the data-leakage guard (§4.4).
+//!
+//! Given an observation event at `ts₀`, the query subsystem must:
+//!
+//! 1. only look at feature values from the **past** of `ts₀` — with the
+//!    end-of-bin `event_ts` convention (§4.5.1) a record with
+//!    `event_ts == ts₀` aggregates strictly-past data and is admissible
+//!    (excluding it would *create* train/serve skew, since the online
+//!    store serves exactly that record at `ts₀`), and
+//! 2. pick the value from the **nearest past**, while considering the
+//!    expected delay of source and feature data.
+//!
+//! "Considering the expected delay" means: a feature record only counts
+//! as *available* at `ts₀` if it had already been materialized by then —
+//! `creation_ts ≤ ts₀ − availability_slack`.  Without this, training
+//! would use values that online inference could not have seen yet
+//! (training/serving skew), even though they are "from the past" on the
+//! event timeline.
+
+use std::collections::HashMap;
+
+use crate::types::{EntityId, FeatureRecord, Timestamp};
+
+/// One observation row of the spine dataframe.
+#[derive(Debug, Clone, Copy, PartialEq)]
+pub struct Observation {
+    pub entity: EntityId,
+    pub ts: Timestamp,
+}
+
+/// PIT join configuration.
+#[derive(Debug, Clone, Copy, Default)]
+pub struct PitConfig {
+    /// Extra slack on record availability: a record is usable at `ts₀`
+    /// only if `creation_ts + availability_slack ≤ ts₀`. Models serving
+    /// pipeline propagation delay.
+    pub availability_slack: i64,
+    /// Maximum lookback: a feature older than `ts₀ − max_staleness` is
+    /// not returned (0 = unlimited). Mirrors online TTL so training
+    /// matches what serving would produce.
+    pub max_staleness: i64,
+}
+
+/// Index of feature records by entity, sorted by event timestamp, for
+/// repeated PIT lookups over the same table scan.
+#[derive(Debug, Default)]
+pub struct PitIndex {
+    by_entity: HashMap<EntityId, Vec<FeatureRecord>>,
+}
+
+impl PitIndex {
+    /// Build from a record scan. Records are sorted per entity by
+    /// `(event_ts, creation_ts)`.
+    pub fn build(records: impl IntoIterator<Item = FeatureRecord>) -> Self {
+        let mut by_entity: HashMap<EntityId, Vec<FeatureRecord>> = HashMap::new();
+        for r in records {
+            by_entity.entry(r.entity).or_default().push(r);
+        }
+        for v in by_entity.values_mut() {
+            v.sort_by_key(|r| (r.event_ts, r.creation_ts));
+        }
+        PitIndex { by_entity }
+    }
+
+    pub fn len(&self) -> usize {
+        self.by_entity.values().map(Vec::len).sum()
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.by_entity.is_empty()
+    }
+
+    /// The PIT lookup for one observation.
+    pub fn lookup(&self, obs: Observation, cfg: PitConfig) -> Option<&FeatureRecord> {
+        let rows = self.by_entity.get(&obs.entity)?;
+        // Binary search for the first event_ts > ts0 (inclusive-end
+        // semantics), then walk left past unavailable record versions.
+        let mut idx = rows.partition_point(|r| r.event_ts <= obs.ts);
+        // Walk backwards over event timestamps (and, within an event
+        // timestamp, prefer the *latest available* creation version).
+        while idx > 0 {
+            idx -= 1;
+            let candidate_event = rows[idx].event_ts;
+            if cfg.max_staleness > 0 && candidate_event < obs.ts - cfg.max_staleness {
+                return None; // everything further left is older still
+            }
+            // Scan the run of records sharing this event_ts (sorted by
+            // creation_ts ascending) from newest creation down.
+            let run_start = rows[..idx + 1].partition_point(|r| r.event_ts < candidate_event);
+            let mut j = idx;
+            loop {
+                let r = &rows[j];
+                if r.creation_ts + cfg.availability_slack <= obs.ts {
+                    return Some(r);
+                }
+                if j == run_start {
+                    break;
+                }
+                j -= 1;
+            }
+            // No version of this event_ts was available at ts0; try the
+            // previous event_ts.
+            idx = run_start;
+        }
+        None
+    }
+}
+
+/// Convenience: single lookup without a prebuilt index.
+pub fn pit_lookup<'a>(
+    records: &'a [FeatureRecord],
+    obs: Observation,
+    cfg: PitConfig,
+) -> Option<FeatureRecord> {
+    // Linear scan variant (used by tests as an oracle and by one-off
+    // queries): latest (event_ts, creation_ts) among available records
+    // strictly in the past.
+    records
+        .iter()
+        .filter(|r| r.entity == obs.entity)
+        .filter(|r| r.event_ts <= obs.ts)
+        .filter(|r| r.creation_ts + cfg.availability_slack <= obs.ts)
+        .filter(|r| cfg.max_staleness == 0 || r.event_ts >= obs.ts - cfg.max_staleness)
+        .max_by_key(|r| (r.event_ts, r.creation_ts))
+        .cloned()
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn rec(entity: u64, event: Timestamp, created: Timestamp, v: f32) -> FeatureRecord {
+        FeatureRecord::new(entity, event, created, vec![v])
+    }
+
+    fn obs(entity: u64, ts: Timestamp) -> Observation {
+        Observation { entity, ts }
+    }
+
+    #[test]
+    fn never_reads_future() {
+        let idx = PitIndex::build([rec(1, 100, 110, 1.0), rec(1, 200, 210, 2.0)]);
+        let cfg = PitConfig::default();
+        // Observation between the two events sees only the first.
+        assert_eq!(idx.lookup(obs(1, 150), cfg).unwrap().values[0], 1.0);
+        // Exactly at an event_ts the record is admissible (it aggregates
+        // strictly-past data) — but this one was only created at 210, so
+        // the availability guard still hides it.
+        assert_eq!(idx.lookup(obs(1, 200), cfg).unwrap().values[0], 1.0);
+        assert_eq!(idx.lookup(obs(1, 205), cfg).unwrap().values[0], 1.0);
+        // Once created, the event-200 record serves from ts >= 210.
+        assert_eq!(idx.lookup(obs(1, 210), cfg).unwrap().values[0], 2.0);
+        // Before everything: no value (event 100 exists but its creation
+        // at 110 is after the observation).
+        assert!(idx.lookup(obs(1, 100), cfg).is_none());
+        // Strictly before the first event: nothing to see.
+        assert!(idx.lookup(obs(1, 99), cfg).is_none());
+    }
+
+    #[test]
+    fn respects_creation_availability() {
+        // Event at 100 materialized late (creation 180): an observation at
+        // 150 must NOT see it — inference at 150 couldn't have.
+        let idx = PitIndex::build([rec(1, 100, 180, 1.0)]);
+        let cfg = PitConfig::default();
+        assert!(idx.lookup(obs(1, 150), cfg).is_none());
+        assert_eq!(idx.lookup(obs(1, 180), cfg).unwrap().values[0], 1.0);
+    }
+
+    #[test]
+    fn prefers_latest_available_version_of_same_event() {
+        // Two versions of event 100: original (created 110) and a late
+        // recompute (created 300).
+        let idx = PitIndex::build([rec(1, 100, 110, 1.0), rec(1, 100, 300, 2.0)]);
+        let cfg = PitConfig::default();
+        // At 200 only the original is available.
+        assert_eq!(idx.lookup(obs(1, 200), cfg).unwrap().values[0], 1.0);
+        // At 400 the recompute is preferred (nearest past = same event,
+        // newest available version).
+        assert_eq!(idx.lookup(obs(1, 400), cfg).unwrap().values[0], 2.0);
+    }
+
+    #[test]
+    fn falls_back_to_older_event_when_newer_unavailable() {
+        let idx = PitIndex::build([rec(1, 100, 110, 1.0), rec(1, 200, 500, 2.0)]);
+        let cfg = PitConfig::default();
+        // At 300 the event-200 record isn't materialized yet → use event 100.
+        assert_eq!(idx.lookup(obs(1, 300), cfg).unwrap().values[0], 1.0);
+        assert_eq!(idx.lookup(obs(1, 500), cfg).unwrap().values[0], 2.0);
+    }
+
+    #[test]
+    fn availability_slack_models_serving_delay() {
+        let idx = PitIndex::build([rec(1, 100, 110, 1.0)]);
+        let cfg = PitConfig { availability_slack: 50, ..Default::default() };
+        assert!(idx.lookup(obs(1, 150), cfg).is_none()); // 110+50 > 150
+        assert_eq!(idx.lookup(obs(1, 160), cfg).unwrap().values[0], 1.0);
+    }
+
+    #[test]
+    fn max_staleness_mirrors_ttl() {
+        let idx = PitIndex::build([rec(1, 100, 110, 1.0)]);
+        let cfg = PitConfig { max_staleness: 200, ..Default::default() };
+        assert!(idx.lookup(obs(1, 250), cfg).is_some());
+        assert!(idx.lookup(obs(1, 301), cfg).is_none()); // 100 < 301-200
+    }
+
+    #[test]
+    fn entities_isolated() {
+        let idx = PitIndex::build([rec(1, 100, 110, 1.0)]);
+        assert!(idx.lookup(obs(2, 999), PitConfig::default()).is_none());
+    }
+
+    #[test]
+    fn index_agrees_with_linear_oracle() {
+        use crate::util::rng::Rng;
+        let mut rng = Rng::new(99);
+        let mut records = Vec::new();
+        for _ in 0..400 {
+            let e = rng.below(5);
+            let event = rng.range(0, 1_000);
+            let created = event + rng.range(1, 200);
+            records.push(rec(e, event, created, rng.f32()));
+        }
+        let idx = PitIndex::build(records.clone());
+        for trial in 0..500 {
+            let o = obs(rng.below(6), rng.range(0, 1_400));
+            for cfg in [
+                PitConfig::default(),
+                PitConfig { availability_slack: 37, max_staleness: 0 },
+                PitConfig { availability_slack: 0, max_staleness: 150 },
+                PitConfig { availability_slack: 20, max_staleness: 300 },
+            ] {
+                let fast = idx.lookup(o, cfg).cloned();
+                let slow = pit_lookup(&records, o, cfg);
+                assert_eq!(fast, slow, "trial {trial} obs {o:?} cfg {cfg:?}");
+            }
+        }
+    }
+}

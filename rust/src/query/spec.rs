@@ -1,0 +1,99 @@
+//! Feature references: `featureset:version:feature` strings used by
+//! retrieval specs and model lineage (the paper's "features used in a
+//! model" tracking).
+
+use crate::metadata::assets::FeatureSetSpec;
+use crate::types::{FsError, Result};
+
+/// A fully-qualified reference to one feature column.
+#[derive(Debug, Clone, PartialEq, Eq, Hash)]
+pub struct FeatureRef {
+    pub feature_set: String,
+    pub version: u32,
+    pub feature: String,
+}
+
+impl FeatureRef {
+    pub fn parse(s: &str) -> Result<FeatureRef> {
+        let parts: Vec<&str> = s.split(':').collect();
+        if parts.len() != 3 || parts.iter().any(|p| p.is_empty()) {
+            return Err(FsError::InvalidArg(format!(
+                "bad feature ref '{s}' (want featureset:version:feature)"
+            )));
+        }
+        let version: u32 = parts[1]
+            .parse()
+            .map_err(|_| FsError::InvalidArg(format!("bad version in feature ref '{s}'")))?;
+        Ok(FeatureRef {
+            feature_set: parts[0].to_string(),
+            version,
+            feature: parts[2].to_string(),
+        })
+    }
+
+    /// The table key under which this feature set materializes.
+    pub fn table(&self) -> String {
+        format!("{}:{}", self.feature_set, self.version)
+    }
+
+    /// Index of the feature column within the feature-set schema.
+    pub fn column_index(&self, spec: &FeatureSetSpec) -> Result<usize> {
+        spec.feature_names
+            .iter()
+            .position(|f| *f == self.feature)
+            .ok_or_else(|| {
+                FsError::NotFound(format!(
+                    "feature '{}' in feature set '{}' (has: {})",
+                    self.feature,
+                    spec.reference(),
+                    spec.feature_names.join(", ")
+                ))
+            })
+    }
+}
+
+impl std::fmt::Display for FeatureRef {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        write!(f, "{}:{}:{}", self.feature_set, self.version, self.feature)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::metadata::assets::SourceSpec;
+    use crate::types::time::Granularity;
+
+    #[test]
+    fn parse_roundtrip() {
+        let r = FeatureRef::parse("txn_30d:2:720h_sum").unwrap();
+        assert_eq!(r.feature_set, "txn_30d");
+        assert_eq!(r.version, 2);
+        assert_eq!(r.feature, "720h_sum");
+        assert_eq!(r.to_string(), "txn_30d:2:720h_sum");
+        assert_eq!(r.table(), "txn_30d:2");
+    }
+
+    #[test]
+    fn parse_rejects_malformed() {
+        for bad in ["", "a:b", "a:1:b:c", "a::b", "a:x:b", ":1:b"] {
+            assert!(FeatureRef::parse(bad).is_err(), "should reject {bad}");
+        }
+    }
+
+    #[test]
+    fn column_index_resolves() {
+        let spec = FeatureSetSpec::rolling(
+            "txn_30d",
+            1,
+            "customer",
+            SourceSpec::synthetic(0),
+            Granularity::daily(),
+            30,
+        );
+        let r = FeatureRef::parse("txn_30d:1:720h_mean").unwrap();
+        assert_eq!(r.column_index(&spec).unwrap(), 2);
+        let missing = FeatureRef::parse("txn_30d:1:nope").unwrap();
+        assert!(missing.column_index(&spec).is_err());
+    }
+}

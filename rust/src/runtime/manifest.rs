@@ -1,0 +1,258 @@
+//! Artifact manifest: metadata for the AOT-compiled HLO programs written
+//! by `python/compile/aot.py` (`artifacts/manifest.json`).
+
+use std::path::{Path, PathBuf};
+
+use crate::types::{FsError, Result};
+use crate::util::json::Json;
+
+/// Plan variant of an artifact (paper §3.1.6).
+#[derive(Debug, Clone, Copy, PartialEq, Eq, Hash)]
+pub enum Variant {
+    /// Optimized DSL plan (Pallas rolling kernel).
+    Dsl,
+    /// Black-box-UDF baseline plan (per-bin recompute).
+    Naive,
+}
+
+impl Variant {
+    pub fn parse(s: &str) -> Result<Variant> {
+        match s {
+            "dsl" => Ok(Variant::Dsl),
+            "naive" => Ok(Variant::Naive),
+            other => Err(FsError::Artifact(format!("unknown variant '{other}'"))),
+        }
+    }
+    pub fn as_str(self) -> &'static str {
+        match self {
+            Variant::Dsl => "dsl",
+            Variant::Naive => "naive",
+        }
+    }
+}
+
+/// One AOT-compiled program: rolling aggregation at a fixed
+/// `[entities, time_bins]` shape with a fixed window.
+#[derive(Debug, Clone)]
+pub struct ArtifactSpec {
+    pub name: String,
+    pub shape: String,
+    pub variant: Variant,
+    pub file: PathBuf,
+    pub entities: usize,
+    pub time_bins: usize,
+    pub window: usize,
+    pub entity_block: usize,
+    pub inputs: Vec<String>,
+    pub outputs: Vec<String>,
+}
+
+impl ArtifactSpec {
+    /// Padded time axis the program expects: `T + W - 1`.
+    pub fn padded_bins(&self) -> usize {
+        self.time_bins + self.window - 1
+    }
+
+    /// Can this artifact serve a workload of `e` entities × `t` bins with
+    /// window `w`? (window must match exactly; shape must fit).
+    pub fn fits(&self, e: usize, t: usize, w: usize) -> bool {
+        self.window == w && self.entities >= e && self.time_bins >= t
+    }
+
+    /// Cost proxy for choosing the smallest fitting artifact.
+    pub fn cells(&self) -> usize {
+        self.entities * self.padded_bins()
+    }
+}
+
+/// Parsed manifest.
+#[derive(Debug, Clone)]
+pub struct Manifest {
+    pub dir: PathBuf,
+    pub artifacts: Vec<ArtifactSpec>,
+}
+
+impl Manifest {
+    pub fn load(dir: impl AsRef<Path>) -> Result<Manifest> {
+        let dir = dir.as_ref().to_path_buf();
+        let path = dir.join("manifest.json");
+        let text = std::fs::read_to_string(&path).map_err(|e| {
+            FsError::Artifact(format!(
+                "cannot read {} (run `make artifacts` first): {e}",
+                path.display()
+            ))
+        })?;
+        Self::parse(&text, dir)
+    }
+
+    pub fn parse(text: &str, dir: PathBuf) -> Result<Manifest> {
+        let v = Json::parse(text).map_err(|e| FsError::Artifact(e.to_string()))?;
+        if v.get("format").as_i64() != Some(1) {
+            return Err(FsError::Artifact("unsupported manifest format".into()));
+        }
+        let arr = v
+            .get("artifacts")
+            .as_arr()
+            .ok_or_else(|| FsError::Artifact("manifest missing 'artifacts'".into()))?;
+        let mut artifacts = Vec::new();
+        for a in arr {
+            let req_str = |k: &str| -> Result<String> {
+                a.get(k)
+                    .as_str()
+                    .map(str::to_string)
+                    .ok_or_else(|| FsError::Artifact(format!("artifact missing '{k}'")))
+            };
+            let req_usize = |k: &str| -> Result<usize> {
+                a.get(k)
+                    .as_usize()
+                    .ok_or_else(|| FsError::Artifact(format!("artifact missing '{k}'")))
+            };
+            let strings = |k: &str| -> Vec<String> {
+                a.get(k)
+                    .as_arr()
+                    .map(|xs| xs.iter().filter_map(|x| x.as_str().map(str::to_string)).collect())
+                    .unwrap_or_default()
+            };
+            artifacts.push(ArtifactSpec {
+                name: req_str("name")?,
+                shape: req_str("shape")?,
+                variant: Variant::parse(&req_str("variant")?)?,
+                file: dir.join(req_str("file")?),
+                entities: req_usize("entities")?,
+                time_bins: req_usize("time_bins")?,
+                window: req_usize("window")?,
+                entity_block: req_usize("entity_block")?,
+                inputs: strings("inputs"),
+                outputs: strings("outputs"),
+            });
+        }
+        if artifacts.is_empty() {
+            return Err(FsError::Artifact("manifest lists no artifacts".into()));
+        }
+        Ok(Manifest { dir, artifacts })
+    }
+
+    /// Smallest artifact of `variant` fitting `e × t` with window `w`.
+    pub fn select(&self, variant: Variant, e: usize, t: usize, w: usize) -> Result<&ArtifactSpec> {
+        self.artifacts
+            .iter()
+            .filter(|a| a.variant == variant && a.fits(e, t, w))
+            .min_by_key(|a| a.cells())
+            .ok_or_else(|| {
+                FsError::Artifact(format!(
+                    "no {} artifact fits workload e={e} t={t} window={w}; available: {}",
+                    variant.as_str(),
+                    self.artifacts
+                        .iter()
+                        .map(|a| format!("{}(e={},t={},w={})", a.name, a.entities, a.time_bins, a.window))
+                        .collect::<Vec<_>>()
+                        .join(", ")
+                ))
+            })
+    }
+
+    /// Largest-capacity artifact for `(variant, window)` — the chunking
+    /// target when no artifact holds the whole workload.
+    pub fn select_largest(&self, variant: Variant, w: usize) -> Result<&ArtifactSpec> {
+        self.artifacts
+            .iter()
+            .filter(|a| a.variant == variant && a.window == w)
+            .max_by_key(|a| a.cells())
+            .ok_or_else(|| {
+                FsError::Artifact(format!(
+                    "no {} artifact compiled for window={w}; available windows: {:?}",
+                    variant.as_str(),
+                    self.windows()
+                ))
+            })
+    }
+
+    pub fn by_name(&self, name: &str) -> Result<&ArtifactSpec> {
+        self.artifacts
+            .iter()
+            .find(|a| a.name == name)
+            .ok_or_else(|| FsError::NotFound(format!("artifact '{name}'")))
+    }
+
+    /// Distinct windows supported by the artifact set.
+    pub fn windows(&self) -> Vec<usize> {
+        let mut ws: Vec<usize> = self.artifacts.iter().map(|a| a.window).collect();
+        ws.sort();
+        ws.dedup();
+        ws
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    const SAMPLE: &str = r#"{
+      "format": 1, "dtype": "f32",
+      "artifacts": [
+        {"name":"small_dsl","shape":"small","variant":"dsl","file":"a.hlo.txt",
+         "entities":16,"time_bins":32,"window":4,"entity_block":8,
+         "inputs":["bin_sum","bin_cnt","bin_min","bin_max"],
+         "outputs":["sum","cnt","mean","min","max"]},
+        {"name":"big_dsl","shape":"big","variant":"dsl","file":"b.hlo.txt",
+         "entities":64,"time_bins":128,"window":4,"entity_block":8,
+         "inputs":[],"outputs":[]},
+        {"name":"small_naive","shape":"small","variant":"naive","file":"c.hlo.txt",
+         "entities":16,"time_bins":32,"window":4,"entity_block":8,
+         "inputs":[],"outputs":[]}
+      ]
+    }"#;
+
+    fn manifest() -> Manifest {
+        Manifest::parse(SAMPLE, PathBuf::from("/tmp/a")).unwrap()
+    }
+
+    #[test]
+    fn parses_fields() {
+        let m = manifest();
+        assert_eq!(m.artifacts.len(), 3);
+        let a = m.by_name("small_dsl").unwrap();
+        assert_eq!(a.padded_bins(), 35);
+        assert_eq!(a.variant, Variant::Dsl);
+        assert_eq!(a.outputs.len(), 5);
+        assert!(a.file.starts_with("/tmp/a"));
+    }
+
+    #[test]
+    fn select_prefers_smallest_fit() {
+        let m = manifest();
+        assert_eq!(m.select(Variant::Dsl, 10, 20, 4).unwrap().name, "small_dsl");
+        assert_eq!(m.select(Variant::Dsl, 20, 20, 4).unwrap().name, "big_dsl");
+        assert_eq!(m.select(Variant::Naive, 16, 32, 4).unwrap().name, "small_naive");
+    }
+
+    #[test]
+    fn select_requires_exact_window() {
+        let m = manifest();
+        assert!(m.select(Variant::Dsl, 4, 4, 5).is_err());
+    }
+
+    #[test]
+    fn select_rejects_oversize() {
+        let m = manifest();
+        assert!(m.select(Variant::Dsl, 65, 10, 4).is_err());
+        assert!(m.select(Variant::Dsl, 10, 129, 4).is_err());
+    }
+
+    #[test]
+    fn rejects_bad_manifests() {
+        assert!(Manifest::parse("{}", PathBuf::new()).is_err());
+        assert!(Manifest::parse(r#"{"format":2,"artifacts":[]}"#, PathBuf::new()).is_err());
+        assert!(Manifest::parse(r#"{"format":1,"artifacts":[]}"#, PathBuf::new()).is_err());
+        assert!(Manifest::parse(
+            r#"{"format":1,"artifacts":[{"name":"x"}]}"#,
+            PathBuf::new()
+        )
+        .is_err());
+    }
+
+    #[test]
+    fn windows_deduped() {
+        assert_eq!(manifest().windows(), vec![4]);
+    }
+}

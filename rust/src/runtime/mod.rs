@@ -1,0 +1,349 @@
+//! PJRT runtime: loads the AOT HLO-text artifacts and executes them from
+//! the materialization hot path.
+//!
+//! Pattern (see `/opt/xla-example/load_hlo/`): `PjRtClient::cpu()` →
+//! `HloModuleProto::from_text_file` → `client.compile` → `execute`.
+//! Executables are compiled once per artifact and cached; Python is never
+//! involved at run time.
+
+pub mod manifest;
+pub mod service;
+pub mod tensor;
+
+use std::collections::HashMap;
+use std::path::Path;
+use std::sync::atomic::{AtomicU64, Ordering};
+use std::sync::{Arc, Mutex};
+
+pub use manifest::{ArtifactSpec, Manifest, Variant};
+pub use service::{ComputeHandle, ComputeService};
+pub use tensor::{rolling_reference, BinPlanes, RollPlanes, Tensor2};
+
+use crate::types::{FsError, Result};
+
+/// Execution statistics (exported into the monitoring subsystem).
+#[derive(Debug, Default)]
+pub struct EngineStats {
+    pub executions: AtomicU64,
+    pub compiles: AtomicU64,
+    pub cells_processed: AtomicU64,
+    pub exec_nanos: AtomicU64,
+}
+
+/// The compute engine: one PJRT CPU client + a cache of compiled
+/// executables keyed by artifact name.
+pub struct Engine {
+    client: xla::PjRtClient,
+    manifest: Manifest,
+    cache: Mutex<HashMap<String, Arc<xla::PjRtLoadedExecutable>>>,
+    pub stats: EngineStats,
+}
+
+impl std::fmt::Debug for Engine {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        f.debug_struct("Engine")
+            .field("platform", &self.client.platform_name())
+            .field("artifacts", &self.manifest.artifacts.len())
+            .finish()
+    }
+}
+
+impl Engine {
+    /// Load the manifest from `dir` and initialize the PJRT CPU client.
+    pub fn load(dir: impl AsRef<Path>) -> Result<Engine> {
+        let manifest = Manifest::load(dir)?;
+        let client =
+            xla::PjRtClient::cpu().map_err(|e| FsError::Runtime(format!("pjrt init: {e}")))?;
+        log::info!(
+            "runtime: platform={} devices={} artifacts={}",
+            client.platform_name(),
+            client.device_count(),
+            manifest.artifacts.len()
+        );
+        Ok(Engine { client, manifest, cache: Mutex::new(HashMap::new()), stats: EngineStats::default() })
+    }
+
+    pub fn manifest(&self) -> &Manifest {
+        &self.manifest
+    }
+
+    /// Compile (or fetch cached) executable for an artifact.
+    fn executable(&self, spec: &ArtifactSpec) -> Result<Arc<xla::PjRtLoadedExecutable>> {
+        if let Some(exe) = self.cache.lock().unwrap().get(&spec.name) {
+            return Ok(exe.clone());
+        }
+        let path = spec.file.to_string_lossy().to_string();
+        let proto = xla::HloModuleProto::from_text_file(&path)
+            .map_err(|e| FsError::Artifact(format!("parse {path}: {e}")))?;
+        let comp = xla::XlaComputation::from_proto(&proto);
+        let exe = self
+            .client
+            .compile(&comp)
+            .map_err(|e| FsError::Artifact(format!("compile {}: {e}", spec.name)))?;
+        self.stats.compiles.fetch_add(1, Ordering::Relaxed);
+        log::info!("runtime: compiled artifact '{}'", spec.name);
+        let exe = Arc::new(exe);
+        self.cache.lock().unwrap().insert(spec.name.clone(), exe.clone());
+        Ok(exe)
+    }
+
+    /// Eagerly compile every artifact (used by `geofs serve` startup so
+    /// the first materialization doesn't pay compile latency).
+    pub fn warmup(&self) -> Result<()> {
+        let specs: Vec<ArtifactSpec> = self.manifest.artifacts.clone();
+        for spec in &specs {
+            self.executable(spec)?;
+        }
+        Ok(())
+    }
+
+    /// Execute the rolling program on binned planes.
+    ///
+    /// `planes` is the workload-shaped `[E, T + W - 1]` input (halo
+    /// already attached by the caller per Algorithm 1's source lookback).
+    /// The engine selects the smallest fitting artifact of `variant`;
+    /// workloads larger than any artifact's static shape are *batched*
+    /// through it in entity × time chunks (time chunks re-read the halo
+    /// overlap, exactly like the kernel's own BlockSpec halo).
+    pub fn rolling(&self, variant: Variant, planes: &BinPlanes, window: usize) -> Result<RollPlanes> {
+        let e = planes.entities();
+        let t_pad = planes.bins();
+        if t_pad < window {
+            return Err(FsError::InvalidArg(format!(
+                "planes have {t_pad} bins < window {window} (halo missing?)"
+            )));
+        }
+        let t_out = t_pad - (window - 1);
+        match self.manifest.select(variant, e, t_out, window) {
+            Ok(spec) => {
+                let spec = spec.clone();
+                self.rolling_once(&spec, planes, e, t_out)
+            }
+            Err(_) => {
+                // No artifact holds the whole workload: chunk through the
+                // largest one for this (variant, window).
+                let spec = self.manifest.select_largest(variant, window)?.clone();
+                let mut out = RollPlanes {
+                    sum: Tensor2::zeros(e, t_out),
+                    cnt: Tensor2::zeros(e, t_out),
+                    mean: Tensor2::zeros(e, t_out),
+                    min: Tensor2::filled(e, t_out, f32::INFINITY),
+                    max: Tensor2::filled(e, t_out, f32::NEG_INFINITY),
+                };
+                let halo = window - 1;
+                let mut r0 = 0;
+                while r0 < e {
+                    let r1 = (r0 + spec.entities).min(e);
+                    let mut c0 = 0;
+                    while c0 < t_out {
+                        let c1 = (c0 + spec.time_bins).min(t_out);
+                        // Input slice covers the chunk's own halo.
+                        let sub = planes.slice(r0..r1, c0..c1 + halo);
+                        let part = self.rolling_once(&spec, &sub, r1 - r0, c1 - c0)?;
+                        out.write_block(&part, r0, c0);
+                        c0 = c1;
+                    }
+                    r0 = r1;
+                }
+                Ok(out)
+            }
+        }
+    }
+
+    /// One padded execution of `spec` over planes that fit within it.
+    fn rolling_once(
+        &self,
+        spec: &ArtifactSpec,
+        planes: &BinPlanes,
+        e: usize,
+        t_out: usize,
+    ) -> Result<RollPlanes> {
+        let exe = self.executable(spec)?;
+        let padded = planes.pad_to(spec.entities, spec.padded_bins());
+        let lit = |t: &Tensor2| -> Result<xla::Literal> {
+            xla::Literal::vec1(&t.data)
+                .reshape(&[t.rows as i64, t.cols as i64])
+                .map_err(|e| FsError::Runtime(format!("reshape: {e}")))
+        };
+        let args = [lit(&padded.sum)?, lit(&padded.cnt)?, lit(&padded.min)?, lit(&padded.max)?];
+
+        let t0 = std::time::Instant::now();
+        let out = exe
+            .execute::<xla::Literal>(&args)
+            .map_err(|e| FsError::Runtime(format!("execute {}: {e}", spec.name)))?;
+        let result = out[0][0]
+            .to_literal_sync()
+            .map_err(|e| FsError::Runtime(format!("fetch result: {e}")))?;
+        self.stats.exec_nanos.fetch_add(t0.elapsed().as_nanos() as u64, Ordering::Relaxed);
+        self.stats.executions.fetch_add(1, Ordering::Relaxed);
+        self.stats.cells_processed.fetch_add((e * t_out) as u64, Ordering::Relaxed);
+
+        // Lowered with return_tuple=True → a 5-tuple (sum,cnt,mean,min,max).
+        let parts = result
+            .to_tuple()
+            .map_err(|e| FsError::Runtime(format!("untuple: {e}")))?;
+        if parts.len() != 5 {
+            return Err(FsError::Runtime(format!(
+                "artifact {} returned {} outputs, expected 5",
+                spec.name,
+                parts.len()
+            )));
+        }
+        let mut planes_out = Vec::with_capacity(5);
+        for p in parts {
+            let v = p
+                .to_vec::<f32>()
+                .map_err(|e| FsError::Runtime(format!("read output: {e}")))?;
+            planes_out.push(Tensor2::from_vec(spec.entities, spec.time_bins, v));
+        }
+        let full = RollPlanes {
+            sum: planes_out[0].clone(),
+            cnt: planes_out[1].clone(),
+            mean: planes_out[2].clone(),
+            min: planes_out[3].clone(),
+            max: planes_out[4].clone(),
+        };
+        Ok(full.trim(e, t_out))
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::rng::Rng;
+
+    fn artifacts_dir() -> std::path::PathBuf {
+        std::path::Path::new(env!("CARGO_MANIFEST_DIR")).join("artifacts")
+    }
+
+    fn engine() -> Engine {
+        Engine::load(artifacts_dir()).expect("run `make artifacts` before cargo test")
+    }
+
+    fn random_planes(rng: &mut Rng, e: usize, t_pad: usize) -> BinPlanes {
+        let mut b = BinPlanes::empty(e, t_pad);
+        for ei in 0..e {
+            for bi in 0..t_pad {
+                for _ in 0..rng.below(3) {
+                    b.add_event(ei, bi, (rng.f32() - 0.5) * 20.0);
+                }
+            }
+        }
+        b
+    }
+
+    #[test]
+    fn executes_and_matches_reference() {
+        let eng = engine();
+        let mut rng = Rng::new(42);
+        let window = 4; // 'small' artifacts have window 4
+        let planes = random_planes(&mut rng, 10, 20 + window - 1);
+        let got = eng.rolling(Variant::Dsl, &planes, window).unwrap();
+        let want = rolling_reference(&planes, window);
+        assert_eq!(got.sum.rows, 10);
+        assert_eq!(got.sum.cols, 20);
+        for e in 0..10 {
+            for t in 0..20 {
+                for (g, w) in got.feature_vec(e, t).iter().zip(want.feature_vec(e, t)) {
+                    if w.is_finite() {
+                        assert!((g - w).abs() <= 1e-3 + w.abs() * 1e-4, "e={e} t={t} {g} vs {w}");
+                    } else {
+                        assert_eq!(*g, w);
+                    }
+                }
+            }
+        }
+    }
+
+    #[test]
+    fn dsl_and_naive_variants_agree() {
+        let eng = engine();
+        let mut rng = Rng::new(7);
+        let planes = random_planes(&mut rng, 16, 32 + 3);
+        let a = eng.rolling(Variant::Dsl, &planes, 4).unwrap();
+        let b = eng.rolling(Variant::Naive, &planes, 4).unwrap();
+        // Same numerics modulo summation order (different fusion plans).
+        let close = |x: &[f32], y: &[f32]| {
+            x.iter().zip(y).all(|(a, b)| (a - b).abs() <= 1e-4 + b.abs() * 1e-5)
+        };
+        assert!(close(&a.sum.data, &b.sum.data));
+        assert!(close(&a.mean.data, &b.mean.data));
+        // min/max are order-insensitive: exact.
+        assert_eq!(a.min.data, b.min.data);
+        assert_eq!(a.max.data, b.max.data);
+    }
+
+    #[test]
+    fn executable_cache_hits() {
+        let eng = engine();
+        let mut rng = Rng::new(1);
+        let planes = random_planes(&mut rng, 4, 8 + 3);
+        eng.rolling(Variant::Dsl, &planes, 4).unwrap();
+        eng.rolling(Variant::Dsl, &planes, 4).unwrap();
+        eng.rolling(Variant::Dsl, &planes, 4).unwrap();
+        assert_eq!(eng.stats.compiles.load(Ordering::Relaxed), 1);
+        assert_eq!(eng.stats.executions.load(Ordering::Relaxed), 3);
+    }
+
+    #[test]
+    fn unknown_window_rejected() {
+        let eng = engine();
+        let planes = BinPlanes::empty(8, 50);
+        assert!(eng.rolling(Variant::Dsl, &planes, 7).is_err());
+    }
+
+    #[test]
+    fn oversized_workloads_are_chunked() {
+        // 40 entities × 70 output bins with window 4: exceeds the 'small'
+        // artifact (16×32) and the 'big' one doesn't exist for w=4, so
+        // the engine batches entity×time chunks. Must match the reference
+        // exactly at every cell, including chunk boundaries.
+        let eng = engine();
+        let mut rng = Rng::new(77);
+        let window = 4;
+        let planes = random_planes(&mut rng, 40, 70 + window - 1);
+        let got = eng.rolling(Variant::Dsl, &planes, window).unwrap();
+        let want = rolling_reference(&planes, window);
+        assert_eq!(got.sum.rows, 40);
+        assert_eq!(got.sum.cols, 70);
+        for e in 0..40 {
+            for t in 0..70 {
+                for (g, w) in got.feature_vec(e, t).iter().zip(want.feature_vec(e, t)) {
+                    if w.is_finite() {
+                        assert!((g - w).abs() <= 1e-3 + w.abs() * 1e-4, "e={e} t={t} {g} vs {w}");
+                    } else {
+                        assert_eq!(*g, w, "e={e} t={t}");
+                    }
+                }
+            }
+        }
+        // Multiple executions of the same cached executable.
+        assert!(eng.stats.executions.load(Ordering::Relaxed) >= 6);
+        assert_eq!(eng.stats.compiles.load(Ordering::Relaxed), 1);
+    }
+
+    #[test]
+    fn missing_halo_rejected() {
+        let eng = engine();
+        let planes = BinPlanes::empty(8, 2);
+        assert!(matches!(
+            eng.rolling(Variant::Dsl, &planes, 4),
+            Err(FsError::InvalidArg(_))
+        ));
+    }
+
+    #[test]
+    fn thirty_day_window_artifact_available() {
+        // The paper's churn features need a 30-bin window (daily shape).
+        let eng = engine();
+        let mut rng = Rng::new(3);
+        let planes = random_planes(&mut rng, 5, 10 + 29);
+        let got = eng.rolling(Variant::Dsl, &planes, 30).unwrap();
+        let want = rolling_reference(&planes, 30);
+        for t in 0..10 {
+            let g = got.sum.get(0, t);
+            let w = want.sum.get(0, t);
+            assert!((g - w).abs() <= 1e-2 + w.abs() * 1e-4);
+        }
+    }
+}

@@ -1,0 +1,209 @@
+//! Compute service: thread-owned PJRT engines behind a channel.
+//!
+//! The `xla` crate's `PjRtClient`/`PjRtLoadedExecutable` are `!Send`
+//! (`Rc` + raw pointers), so engines cannot be shared across the worker
+//! pool directly.  The compute service gives each of `n` dedicated
+//! threads its own [`Engine`] (own client, own executable cache) and
+//! exposes a cloneable, `Send + Sync` [`ComputeHandle`] that dispatches
+//! rolling-aggregation requests round-robin — the paper's §3.1.5 managed
+//! compute, sized by configuration.
+
+use std::sync::atomic::{AtomicUsize, Ordering};
+use std::sync::mpsc::{channel, Sender};
+use std::sync::{Arc, Mutex};
+use std::thread::JoinHandle;
+
+use super::manifest::Manifest;
+use super::tensor::{BinPlanes, RollPlanes};
+use super::{Engine, Variant};
+use crate::types::{FsError, Result};
+
+struct Request {
+    variant: Variant,
+    planes: BinPlanes,
+    window: usize,
+    reply: Sender<Result<RollPlanes>>,
+}
+
+/// Owns the engine threads; dropping it stops them.
+pub struct ComputeService {
+    senders: Vec<Sender<Request>>,
+    threads: Vec<JoinHandle<()>>,
+    manifest: Arc<Manifest>,
+}
+
+impl ComputeService {
+    /// Start `threads` engine threads over the artifact directory.
+    pub fn start(artifacts_dir: impl AsRef<std::path::Path>, threads: usize) -> Result<ComputeService> {
+        assert!(threads > 0);
+        let dir = artifacts_dir.as_ref().to_path_buf();
+        // Validate the manifest up front (fail fast on a bad dir).
+        let manifest = Arc::new(Manifest::load(&dir)?);
+        let mut senders = Vec::new();
+        let mut handles = Vec::new();
+        for i in 0..threads {
+            let (tx, rx) = channel::<Request>();
+            let dir = dir.clone();
+            let handle = std::thread::Builder::new()
+                .name(format!("geofs-compute-{i}"))
+                .spawn(move || {
+                    let engine = match Engine::load(&dir) {
+                        Ok(e) => e,
+                        Err(e) => {
+                            log::error!("compute thread {i}: engine init failed: {e}");
+                            // Drain requests with errors so callers unblock.
+                            while let Ok(req) = rx.recv() {
+                                let _ = req
+                                    .reply
+                                    .send(Err(FsError::Runtime(format!("engine init failed: {e}"))));
+                            }
+                            return;
+                        }
+                    };
+                    while let Ok(req) = rx.recv() {
+                        let out = engine.rolling(req.variant, &req.planes, req.window);
+                        let _ = req.reply.send(out);
+                    }
+                })
+                .map_err(|e| FsError::Runtime(format!("spawn compute thread: {e}")))?;
+            senders.push(tx);
+            handles.push(handle);
+        }
+        Ok(ComputeService { senders, threads: handles, manifest })
+    }
+
+    pub fn handle(&self) -> ComputeHandle {
+        ComputeHandle {
+            senders: Arc::new(Mutex::new(self.senders.clone())),
+            next: Arc::new(AtomicUsize::new(0)),
+            manifest: self.manifest.clone(),
+        }
+    }
+}
+
+impl Drop for ComputeService {
+    fn drop(&mut self) {
+        self.senders.clear(); // closes channels; threads exit
+        for h in self.threads.drain(..) {
+            let _ = h.join();
+        }
+    }
+}
+
+/// Cloneable dispatch handle (Send + Sync).
+#[derive(Clone)]
+pub struct ComputeHandle {
+    senders: Arc<Mutex<Vec<Sender<Request>>>>,
+    next: Arc<AtomicUsize>,
+    manifest: Arc<Manifest>,
+}
+
+impl std::fmt::Debug for ComputeHandle {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        write!(f, "ComputeHandle(threads={})", self.senders.lock().unwrap().len())
+    }
+}
+
+impl ComputeHandle {
+    pub fn manifest(&self) -> &Manifest {
+        &self.manifest
+    }
+
+    /// Execute the rolling program (round-robin across engine threads;
+    /// blocks until the result is ready).
+    pub fn rolling(&self, variant: Variant, planes: &BinPlanes, window: usize) -> Result<RollPlanes> {
+        let (reply_tx, reply_rx) = channel();
+        let sender = {
+            let senders = self.senders.lock().unwrap();
+            if senders.is_empty() {
+                return Err(FsError::Runtime("compute service stopped".into()));
+            }
+            let i = self.next.fetch_add(1, Ordering::Relaxed) % senders.len();
+            senders[i].clone()
+        };
+        sender
+            .send(Request { variant, planes: planes.clone(), window, reply: reply_tx })
+            .map_err(|_| FsError::Runtime("compute thread gone".into()))?;
+        reply_rx
+            .recv()
+            .map_err(|_| FsError::Runtime("compute thread dropped reply".into()))?
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::runtime::rolling_reference;
+    use crate::util::rng::Rng;
+
+    fn artifacts_dir() -> std::path::PathBuf {
+        std::path::Path::new(env!("CARGO_MANIFEST_DIR")).join("artifacts")
+    }
+
+    fn planes(seed: u64, e: usize, t_pad: usize) -> BinPlanes {
+        let mut rng = Rng::new(seed);
+        let mut b = BinPlanes::empty(e, t_pad);
+        for ei in 0..e {
+            for bi in 0..t_pad {
+                if rng.bool(0.7) {
+                    b.add_event(ei, bi, rng.f32() * 10.0 - 5.0);
+                }
+            }
+        }
+        b
+    }
+
+    #[test]
+    fn dispatches_and_matches_reference() {
+        let svc = ComputeService::start(artifacts_dir(), 1).unwrap();
+        let h = svc.handle();
+        let p = planes(1, 8, 16 + 3);
+        let got = h.rolling(Variant::Dsl, &p, 4).unwrap();
+        let want = rolling_reference(&p, 4);
+        for i in 0..got.sum.data.len() {
+            assert!((got.sum.data[i] - want.sum.data[i]).abs() < 1e-3);
+        }
+    }
+
+    #[test]
+    fn handle_works_from_many_threads() {
+        let svc = ComputeService::start(artifacts_dir(), 2).unwrap();
+        let h = svc.handle();
+        let results: Vec<_> = std::thread::scope(|s| {
+            (0..8u64)
+                .map(|i| {
+                    let h = h.clone();
+                    s.spawn(move || {
+                        let p = planes(i, 8, 10 + 3);
+                        h.rolling(Variant::Dsl, &p, 4).map(|r| r.sum.data)
+                    })
+                })
+                .collect::<Vec<_>>()
+                .into_iter()
+                .map(|j| j.join().unwrap())
+                .collect()
+        });
+        for (i, r) in results.into_iter().enumerate() {
+            let want = rolling_reference(&planes(i as u64, 8, 13), 4);
+            let got = r.unwrap();
+            for (g, w) in got.iter().zip(&want.sum.data) {
+                assert!((g - w).abs() < 1e-3);
+            }
+        }
+    }
+
+    #[test]
+    fn bad_dir_fails_fast() {
+        assert!(ComputeService::start("/nonexistent-geofs", 1).is_err());
+    }
+
+    #[test]
+    fn errors_propagate() {
+        let svc = ComputeService::start(artifacts_dir(), 1).unwrap();
+        let h = svc.handle();
+        // No artifact compiled for window=7 → typed error through the
+        // channel (oversized workloads chunk instead of failing).
+        let p = BinPlanes::empty(8, 40);
+        assert!(h.rolling(Variant::Dsl, &p, 7).is_err());
+    }
+}

@@ -1,0 +1,310 @@
+//! Dense row-major f32 tensors and padding to artifact shapes.
+//!
+//! The binning stage produces `[E, T]` per-bin partial aggregates for the
+//! *actual* workload; AOT programs have *static* shapes, so inputs are
+//! padded up to the selected artifact's `[E_a, T_a + W - 1]` and outputs
+//! trimmed back. Padding values are the aggregation identities (0 for
+//! sum/cnt, ±inf for min/max) so padded cells never contaminate results.
+
+/// Row-major 2-D f32 tensor.
+#[derive(Debug, Clone, PartialEq)]
+pub struct Tensor2 {
+    pub rows: usize,
+    pub cols: usize,
+    pub data: Vec<f32>,
+}
+
+impl Tensor2 {
+    pub fn filled(rows: usize, cols: usize, v: f32) -> Self {
+        Tensor2 { rows, cols, data: vec![v; rows * cols] }
+    }
+
+    pub fn zeros(rows: usize, cols: usize) -> Self {
+        Self::filled(rows, cols, 0.0)
+    }
+
+    pub fn from_vec(rows: usize, cols: usize, data: Vec<f32>) -> Self {
+        assert_eq!(data.len(), rows * cols, "shape/data mismatch");
+        Tensor2 { rows, cols, data }
+    }
+
+    #[inline]
+    pub fn get(&self, r: usize, c: usize) -> f32 {
+        debug_assert!(r < self.rows && c < self.cols);
+        self.data[r * self.cols + c]
+    }
+
+    #[inline]
+    pub fn set(&mut self, r: usize, c: usize, v: f32) {
+        debug_assert!(r < self.rows && c < self.cols);
+        self.data[r * self.cols + c] = v;
+    }
+
+    #[inline]
+    pub fn row(&self, r: usize) -> &[f32] {
+        &self.data[r * self.cols..(r + 1) * self.cols]
+    }
+
+    #[inline]
+    pub fn row_mut(&mut self, r: usize) -> &mut [f32] {
+        &mut self.data[r * self.cols..(r + 1) * self.cols]
+    }
+
+    /// Pad to `[rows_to, cols_to]` with `fill`, placing `self` at offset
+    /// `(0, col_off)` — used to attach the halo region on the left and
+    /// grow to artifact shape on the right/bottom.
+    pub fn pad_into(&self, rows_to: usize, cols_to: usize, col_off: usize, fill: f32) -> Tensor2 {
+        assert!(rows_to >= self.rows && cols_to >= self.cols + col_off);
+        let mut out = Tensor2::filled(rows_to, cols_to, fill);
+        for r in 0..self.rows {
+            out.row_mut(r)[col_off..col_off + self.cols].copy_from_slice(self.row(r));
+        }
+        out
+    }
+
+    /// Copy out an arbitrary `[rows, cols]` sub-block.
+    pub fn slice(&self, rows: std::ops::Range<usize>, cols: std::ops::Range<usize>) -> Tensor2 {
+        assert!(rows.end <= self.rows && cols.end <= self.cols);
+        let mut out = Tensor2::zeros(rows.len(), cols.len());
+        for (ro, ri) in rows.clone().enumerate() {
+            out.row_mut(ro).copy_from_slice(&self.row(ri)[cols.clone()]);
+        }
+        out
+    }
+
+    /// Write `block` into this tensor at offset `(r0, c0)`.
+    pub fn write_block(&mut self, block: &Tensor2, r0: usize, c0: usize) {
+        assert!(r0 + block.rows <= self.rows && c0 + block.cols <= self.cols);
+        for r in 0..block.rows {
+            self.row_mut(r0 + r)[c0..c0 + block.cols].copy_from_slice(block.row(r));
+        }
+    }
+
+    /// Trim to the leading `[rows_to, cols_to]` block.
+    pub fn trim(&self, rows_to: usize, cols_to: usize) -> Tensor2 {
+        assert!(rows_to <= self.rows && cols_to <= self.cols);
+        let mut out = Tensor2::zeros(rows_to, cols_to);
+        for r in 0..rows_to {
+            out.row_mut(r).copy_from_slice(&self.row(r)[..cols_to]);
+        }
+        out
+    }
+}
+
+/// The four per-bin partial-aggregate planes produced by binning and
+/// consumed by the rolling program (matching `manifest.inputs`).
+#[derive(Debug, Clone)]
+pub struct BinPlanes {
+    pub sum: Tensor2,
+    pub cnt: Tensor2,
+    pub min: Tensor2,
+    pub max: Tensor2,
+}
+
+impl BinPlanes {
+    pub fn empty(entities: usize, bins: usize) -> Self {
+        BinPlanes {
+            sum: Tensor2::zeros(entities, bins),
+            cnt: Tensor2::zeros(entities, bins),
+            min: Tensor2::filled(entities, bins, f32::INFINITY),
+            max: Tensor2::filled(entities, bins, f32::NEG_INFINITY),
+        }
+    }
+
+    pub fn entities(&self) -> usize {
+        self.sum.rows
+    }
+
+    pub fn bins(&self) -> usize {
+        self.sum.cols
+    }
+
+    /// Record one event value into bin `b` of entity `e`.
+    pub fn add_event(&mut self, e: usize, b: usize, v: f32) {
+        self.sum.set(e, b, self.sum.get(e, b) + v);
+        self.cnt.set(e, b, self.cnt.get(e, b) + 1.0);
+        self.min.set(e, b, self.min.get(e, b).min(v));
+        self.max.set(e, b, self.max.get(e, b).max(v));
+    }
+
+    /// Copy out a `[rows, cols]` sub-window of all planes (used by the
+    /// engine's chunked execution).
+    pub fn slice(&self, rows: std::ops::Range<usize>, cols: std::ops::Range<usize>) -> BinPlanes {
+        BinPlanes {
+            sum: self.sum.slice(rows.clone(), cols.clone()),
+            cnt: self.cnt.slice(rows.clone(), cols.clone()),
+            min: self.min.slice(rows.clone(), cols.clone()),
+            max: self.max.slice(rows, cols),
+        }
+    }
+
+    /// Pad all planes to the artifact's `[e_a, padded_bins]` shape with
+    /// per-plane identity fills. The workload's own (already binned) halo
+    /// is expected to be part of `self`; this only grows the shape.
+    pub fn pad_to(&self, e_a: usize, padded_bins: usize) -> BinPlanes {
+        BinPlanes {
+            sum: self.sum.pad_into(e_a, padded_bins, 0, 0.0),
+            cnt: self.cnt.pad_into(e_a, padded_bins, 0, 0.0),
+            min: self.min.pad_into(e_a, padded_bins, 0, f32::INFINITY),
+            max: self.max.pad_into(e_a, padded_bins, 0, f32::NEG_INFINITY),
+        }
+    }
+}
+
+/// The five rolling aggregation planes returned by the program
+/// (matching `manifest.outputs`): sum, cnt, mean, min, max — `[E, T]`.
+#[derive(Debug, Clone)]
+pub struct RollPlanes {
+    pub sum: Tensor2,
+    pub cnt: Tensor2,
+    pub mean: Tensor2,
+    pub min: Tensor2,
+    pub max: Tensor2,
+}
+
+impl RollPlanes {
+    /// Write a chunk's outputs into this (larger) result at `(r0, c0)`.
+    pub fn write_block(&mut self, part: &RollPlanes, r0: usize, c0: usize) {
+        self.sum.write_block(&part.sum, r0, c0);
+        self.cnt.write_block(&part.cnt, r0, c0);
+        self.mean.write_block(&part.mean, r0, c0);
+        self.min.write_block(&part.min, r0, c0);
+        self.max.write_block(&part.max, r0, c0);
+    }
+
+    pub fn trim(&self, e: usize, t: usize) -> RollPlanes {
+        RollPlanes {
+            sum: self.sum.trim(e, t),
+            cnt: self.cnt.trim(e, t),
+            mean: self.mean.trim(e, t),
+            min: self.min.trim(e, t),
+            max: self.max.trim(e, t),
+        }
+    }
+
+    /// Feature vector for (entity e, output bin t) in the canonical
+    /// aggregation order used by feature-set schemas.
+    pub fn feature_vec(&self, e: usize, t: usize) -> [f32; 5] {
+        [
+            self.sum.get(e, t),
+            self.cnt.get(e, t),
+            self.mean.get(e, t),
+            self.min.get(e, t),
+            self.max.get(e, t),
+        ]
+    }
+}
+
+/// CPU reference implementation of the rolling program — used by unit
+/// tests (so `cargo test` doesn't need PJRT for every module) and by the
+/// rust-UDF baseline in the dsl_vs_udf bench.
+pub fn rolling_reference(planes: &BinPlanes, window: usize) -> RollPlanes {
+    let e = planes.entities();
+    let t_pad = planes.bins();
+    assert!(t_pad + 1 > window, "padded bins {t_pad} < window {window}");
+    let t_out = t_pad - (window - 1);
+    let mut out = RollPlanes {
+        sum: Tensor2::zeros(e, t_out),
+        cnt: Tensor2::zeros(e, t_out),
+        mean: Tensor2::zeros(e, t_out),
+        min: Tensor2::filled(e, t_out, f32::INFINITY),
+        max: Tensor2::filled(e, t_out, f32::NEG_INFINITY),
+    };
+    for r in 0..e {
+        for t in 0..t_out {
+            let (mut s, mut c) = (0.0f32, 0.0f32);
+            let (mut mn, mut mx) = (f32::INFINITY, f32::NEG_INFINITY);
+            for w in 0..window {
+                s += planes.sum.get(r, t + w);
+                c += planes.cnt.get(r, t + w);
+                mn = mn.min(planes.min.get(r, t + w));
+                mx = mx.max(planes.max.get(r, t + w));
+            }
+            out.sum.set(r, t, s);
+            out.cnt.set(r, t, c);
+            out.mean.set(r, t, if c > 0.0 { s / c.max(1.0) } else { 0.0 });
+            out.min.set(r, t, mn);
+            out.max.set(r, t, mx);
+        }
+    }
+    out
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn tensor_accessors() {
+        let mut t = Tensor2::zeros(2, 3);
+        t.set(1, 2, 5.0);
+        assert_eq!(t.get(1, 2), 5.0);
+        assert_eq!(t.row(1), &[0.0, 0.0, 5.0]);
+    }
+
+    #[test]
+    fn pad_and_trim_roundtrip() {
+        let t = Tensor2::from_vec(2, 2, vec![1.0, 2.0, 3.0, 4.0]);
+        let p = t.pad_into(4, 5, 0, -1.0);
+        assert_eq!(p.get(0, 0), 1.0);
+        assert_eq!(p.get(3, 4), -1.0);
+        assert_eq!(p.trim(2, 2), t);
+    }
+
+    #[test]
+    fn pad_with_offset_places_halo() {
+        let t = Tensor2::from_vec(1, 2, vec![7.0, 8.0]);
+        let p = t.pad_into(1, 4, 1, 0.0);
+        assert_eq!(p.data, vec![0.0, 7.0, 8.0, 0.0]);
+    }
+
+    #[test]
+    fn add_event_accumulates() {
+        let mut b = BinPlanes::empty(2, 3);
+        b.add_event(0, 1, 2.0);
+        b.add_event(0, 1, 4.0);
+        assert_eq!(b.sum.get(0, 1), 6.0);
+        assert_eq!(b.cnt.get(0, 1), 2.0);
+        assert_eq!(b.min.get(0, 1), 2.0);
+        assert_eq!(b.max.get(0, 1), 4.0);
+        // untouched bins keep identities
+        assert_eq!(b.min.get(0, 0), f32::INFINITY);
+    }
+
+    #[test]
+    fn rolling_reference_window_math() {
+        // 1 entity, window 2, padded bins 4 → 3 output bins.
+        let mut b = BinPlanes::empty(1, 4);
+        for (bin, v) in [(0, 1.0f32), (1, 2.0), (2, 3.0), (3, 4.0)] {
+            b.add_event(0, bin, v);
+        }
+        let r = rolling_reference(&b, 2);
+        assert_eq!(r.sum.row(0), &[3.0, 5.0, 7.0]);
+        assert_eq!(r.cnt.row(0), &[2.0, 2.0, 2.0]);
+        assert_eq!(r.mean.row(0), &[1.5, 2.5, 3.5]);
+        assert_eq!(r.min.row(0), &[1.0, 2.0, 3.0]);
+        assert_eq!(r.max.row(0), &[2.0, 3.0, 4.0]);
+    }
+
+    #[test]
+    fn rolling_reference_empty_windows() {
+        let b = BinPlanes::empty(1, 5);
+        let r = rolling_reference(&b, 3);
+        assert!(r.sum.row(0).iter().all(|&v| v == 0.0));
+        assert!(r.mean.row(0).iter().all(|&v| v == 0.0));
+        assert!(r.min.row(0).iter().all(|&v| v == f32::INFINITY));
+    }
+
+    #[test]
+    fn padding_identities_do_not_leak() {
+        let mut b = BinPlanes::empty(1, 4);
+        b.add_event(0, 3, 10.0);
+        let padded = b.pad_to(8, 9);
+        let r = rolling_reference(&padded, 2);
+        let trimmed = r.trim(1, 3);
+        // Window over (bin2,bin3): only the event contributes.
+        assert_eq!(trimmed.sum.get(0, 2), 10.0);
+        assert_eq!(trimmed.min.get(0, 2), 10.0);
+        assert_eq!(trimmed.max.get(0, 2), 10.0);
+    }
+}

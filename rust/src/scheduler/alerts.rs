@@ -1,0 +1,76 @@
+//! Alerting for non-recoverable failures (§3.1.3).
+
+use std::sync::Mutex;
+
+use crate::types::Timestamp;
+
+#[derive(Debug, Clone, Copy, PartialEq, Eq, PartialOrd, Ord)]
+pub enum Severity {
+    Info,
+    Warning,
+    Critical,
+}
+
+#[derive(Debug, Clone)]
+pub struct Alert {
+    pub at: Timestamp,
+    pub severity: Severity,
+    pub subsystem: &'static str,
+    pub message: String,
+}
+
+/// Thread-safe alert collector. Production would fan out to paging /
+/// metrics; tests assert on the collected alerts.
+#[derive(Debug, Default)]
+pub struct AlertSink {
+    alerts: Mutex<Vec<Alert>>,
+}
+
+impl AlertSink {
+    pub fn new() -> Self {
+        Self::default()
+    }
+
+    pub fn raise(&self, at: Timestamp, severity: Severity, subsystem: &'static str, message: impl Into<String>) {
+        let a = Alert { at, severity, subsystem, message: message.into() };
+        if severity >= Severity::Warning {
+            log::warn!("[alert:{subsystem}] {}", a.message);
+        }
+        self.alerts.lock().unwrap().push(a);
+    }
+
+    pub fn all(&self) -> Vec<Alert> {
+        self.alerts.lock().unwrap().clone()
+    }
+
+    pub fn count_at_least(&self, severity: Severity) -> usize {
+        self.alerts.lock().unwrap().iter().filter(|a| a.severity >= severity).count()
+    }
+
+    pub fn clear(&self) {
+        self.alerts.lock().unwrap().clear();
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn collects_and_filters() {
+        let s = AlertSink::new();
+        s.raise(1, Severity::Info, "scheduler", "tick");
+        s.raise(2, Severity::Critical, "materialize", "job failed permanently");
+        assert_eq!(s.all().len(), 2);
+        assert_eq!(s.count_at_least(Severity::Warning), 1);
+        assert_eq!(s.count_at_least(Severity::Info), 2);
+        s.clear();
+        assert!(s.all().is_empty());
+    }
+
+    #[test]
+    fn severity_ordering() {
+        assert!(Severity::Critical > Severity::Warning);
+        assert!(Severity::Warning > Severity::Info);
+    }
+}

@@ -1,0 +1,378 @@
+//! The scheduler executor: drives incremental + backfill materialization
+//! jobs with retry, suspension, and alerting (§3.1.1–§3.1.3, §4.3).
+
+use std::collections::HashMap;
+use std::sync::{Arc, Mutex};
+
+use super::alerts::{AlertSink, Severity};
+use super::policy::SchedulePolicy;
+use super::tracker::WindowTracker;
+use crate::exec::retry::{retry_with, RetryPolicy};
+use crate::exec::ThreadPool;
+use crate::types::{FeatureWindow, FsError, Result};
+use crate::util::Clock;
+
+/// A materialization job body: computes + merges one window, returning
+/// the number of records merged. Provided by the materialization engine;
+/// the scheduler is agnostic to how features are computed.
+pub type JobFn = Arc<dyn Fn(FeatureWindow, u32) -> Result<u64> + Send + Sync>;
+
+/// Result of running one job window.
+#[derive(Debug, Clone, PartialEq)]
+pub struct JobOutcome {
+    pub window: FeatureWindow,
+    pub records: u64,
+    pub attempts: u32,
+    pub backfill: bool,
+}
+
+#[derive(Debug, Default)]
+struct TableState {
+    tracker: WindowTracker,
+    /// Scheduled materialization suspended while a backfill runs (§3.1.1).
+    suspended: bool,
+    /// Windows that became due while suspended; run on resume.
+    deferred: Vec<FeatureWindow>,
+}
+
+/// The scheduling subsystem. One instance per region; tables are keyed
+/// by feature-set reference.
+pub struct Scheduler {
+    tables: Mutex<HashMap<String, TableState>>,
+    pool: Arc<ThreadPool>,
+    retry: RetryPolicy,
+    pub alerts: Arc<AlertSink>,
+    pub clock: Clock,
+}
+
+impl Scheduler {
+    pub fn new(pool: Arc<ThreadPool>, clock: Clock, retry: RetryPolicy) -> Self {
+        Scheduler {
+            tables: Mutex::new(HashMap::new()),
+            pool,
+            retry,
+            alerts: Arc::new(AlertSink::new()),
+            clock,
+        }
+    }
+
+    fn with_table<T>(&self, table: &str, f: impl FnOnce(&mut TableState) -> T) -> T {
+        let mut g = self.tables.lock().unwrap();
+        f(g.entry(table.to_string()).or_default())
+    }
+
+    /// Run one scheduled tick for a table: claim + execute every due
+    /// window. Windows due while the table is suspended are deferred.
+    pub fn tick(&self, table: &str, policy: &SchedulePolicy, origin: i64, job: JobFn) -> Vec<JobOutcome> {
+        let now = self.clock.now();
+        let due = self.with_table(table, |t| {
+            let hw = t.tracker.high_water(origin);
+            let due = policy.due_windows(hw, now);
+            if t.suspended {
+                for w in &due {
+                    if !t.deferred.contains(w) {
+                        t.deferred.push(*w);
+                    }
+                }
+                Vec::new()
+            } else {
+                due
+            }
+        });
+        self.run_windows(table, &due, job, false)
+    }
+
+    /// One-time backfill (§4.3): suspends scheduled materialization,
+    /// partitions the requested window, runs the pieces in parallel,
+    /// resumes scheduled work (running anything deferred meanwhile).
+    pub fn backfill(
+        &self,
+        table: &str,
+        policy: &SchedulePolicy,
+        window: FeatureWindow,
+        job: JobFn,
+    ) -> Vec<JobOutcome> {
+        self.with_table(table, |t| t.suspended = true);
+        let parts = policy.partition_backfill(window);
+        let mut outcomes = self.run_windows(table, &parts, job.clone(), true);
+
+        // Resume: release suspension and run deferred scheduled windows.
+        let deferred = self.with_table(table, |t| {
+            t.suspended = false;
+            std::mem::take(&mut t.deferred)
+        });
+        if !deferred.is_empty() {
+            log::info!("scheduler: resuming {} deferred window(s) for '{table}'", deferred.len());
+            outcomes.extend(self.run_windows(table, &deferred, job, false));
+        }
+        outcomes
+    }
+
+    /// Claim + execute a set of windows on the worker pool.
+    fn run_windows(
+        &self,
+        table: &str,
+        windows: &[FeatureWindow],
+        job: JobFn,
+        backfill: bool,
+    ) -> Vec<JobOutcome> {
+        let mut handles = Vec::new();
+        for &w in windows {
+            // Skip already-materialized backfill pieces (idempotent
+            // backfill over partially-covered ranges).
+            let claim = self.with_table(table, |t| {
+                if backfill && t.tracker.is_materialized(&w) {
+                    Ok(None)
+                } else {
+                    t.tracker.try_claim(w).map(Some)
+                }
+            });
+            let job_id = match claim {
+                Ok(None) => continue,
+                Ok(Some(id)) => id,
+                Err(FsError::WindowConflict { got, active }) => {
+                    self.alerts.raise(
+                        self.clock.now(),
+                        Severity::Warning,
+                        "scheduler",
+                        format!("window conflict on '{table}': {got} vs active {active}"),
+                    );
+                    continue;
+                }
+                Err(e) => {
+                    self.alerts.raise(self.clock.now(), Severity::Warning, "scheduler", e.to_string());
+                    continue;
+                }
+            };
+            let job = job.clone();
+            let retry = self.retry.clone();
+            let clock = self.clock.clone();
+            handles.push((
+                job_id,
+                w,
+                self.pool.submit(move || {
+                    retry_with(&retry, &clock, |attempt| job(w, attempt))
+                }),
+            ));
+        }
+
+        let mut outcomes = Vec::new();
+        for (job_id, w, h) in handles {
+            match h.join() {
+                Ok(out) => {
+                    self.with_table(table, |t| t.tracker.complete(job_id)).expect("complete");
+                    outcomes.push(JobOutcome {
+                        window: w,
+                        records: out.value,
+                        attempts: out.attempts,
+                        backfill,
+                    });
+                }
+                Err(e) => {
+                    self.with_table(table, |t| t.tracker.fail(job_id)).expect("fail");
+                    self.alerts.raise(
+                        self.clock.now(),
+                        Severity::Critical,
+                        "scheduler",
+                        format!("job on '{table}' {w} failed permanently: {e}"),
+                    );
+                }
+            }
+        }
+        outcomes
+    }
+
+    /// Data-state inspection (§4.3): fully materialized?
+    pub fn is_materialized(&self, table: &str, window: &FeatureWindow) -> bool {
+        self.with_table(table, |t| t.tracker.is_materialized(window))
+    }
+
+    /// Unmaterialized gaps of `window`.
+    pub fn gaps(&self, table: &str, window: FeatureWindow) -> Vec<FeatureWindow> {
+        self.with_table(table, |t| t.tracker.gaps(window))
+    }
+
+    pub fn coverage(&self, table: &str) -> Vec<FeatureWindow> {
+        self.with_table(table, |t| t.tracker.coverage().to_vec())
+    }
+
+    pub fn is_suspended(&self, table: &str) -> bool {
+        self.with_table(table, |t| t.suspended)
+    }
+
+    /// Snapshot of per-table coverage for failover checkpointing
+    /// (§3.1.2 "safely resume from where it left off").
+    pub fn checkpoint(&self) -> Vec<(String, Vec<FeatureWindow>)> {
+        let g = self.tables.lock().unwrap();
+        g.iter().map(|(k, t)| (k.clone(), t.tracker.coverage().to_vec())).collect()
+    }
+
+    /// Restore coverage from a checkpoint (new region taking over).
+    pub fn restore(&self, checkpoint: &[(String, Vec<FeatureWindow>)]) {
+        for (table, windows) in checkpoint {
+            self.with_table(table, |t| {
+                for &w in windows {
+                    let id = t.tracker.try_claim(w).expect("restore claim");
+                    t.tracker.complete(id).expect("restore complete");
+                }
+            });
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::types::time::{Granularity, DAY, HOUR};
+    use std::sync::atomic::{AtomicU32, Ordering};
+
+    fn sched() -> Scheduler {
+        Scheduler::new(Arc::new(ThreadPool::new(4)), Clock::fixed(0), RetryPolicy::default())
+    }
+
+    fn policy() -> SchedulePolicy {
+        SchedulePolicy {
+            granularity: Granularity(HOUR),
+            interval_secs: DAY,
+            source_delay_secs: 0,
+            max_bins_per_job: 24,
+        }
+    }
+
+    fn ok_job() -> JobFn {
+        Arc::new(|w, _| Ok(w.len() as u64))
+    }
+
+    #[test]
+    fn tick_runs_due_windows_and_advances() {
+        let s = sched();
+        s.clock.set(2 * DAY);
+        let out = s.tick("t", &policy(), 0, ok_job());
+        assert_eq!(out.len(), 2);
+        assert!(s.is_materialized("t", &FeatureWindow::new(0, 2 * DAY)));
+        // Second tick at same time: nothing due.
+        assert!(s.tick("t", &policy(), 0, ok_job()).is_empty());
+        // Advance a day: one more.
+        s.clock.set(3 * DAY);
+        assert_eq!(s.tick("t", &policy(), 0, ok_job()).len(), 1);
+    }
+
+    #[test]
+    fn retry_then_success() {
+        let s = sched();
+        s.clock.set(DAY);
+        let tries = Arc::new(AtomicU32::new(0));
+        let t2 = tries.clone();
+        let job: JobFn = Arc::new(move |w, attempt| {
+            t2.fetch_add(1, Ordering::SeqCst);
+            if attempt < 2 {
+                Err(FsError::InjectedFault("flaky".into()))
+            } else {
+                Ok(w.len() as u64)
+            }
+        });
+        let out = s.tick("t", &policy(), 0, job);
+        assert_eq!(out.len(), 1);
+        assert_eq!(out[0].attempts, 3);
+        assert_eq!(tries.load(Ordering::SeqCst), 3);
+        assert_eq!(s.alerts.count_at_least(Severity::Critical), 0);
+    }
+
+    #[test]
+    fn permanent_failure_raises_alert_and_releases_claim() {
+        let s = sched();
+        s.clock.set(DAY);
+        let job: JobFn = Arc::new(|_, _| Err(FsError::InjectedFault("always".into())));
+        let out = s.tick("t", &policy(), 0, job);
+        assert!(out.is_empty());
+        assert_eq!(s.alerts.count_at_least(Severity::Critical), 1);
+        assert!(!s.is_materialized("t", &FeatureWindow::new(0, DAY)));
+        // Window can be retried by a later tick.
+        let out = s.tick("t", &policy(), 0, ok_job());
+        assert_eq!(out.len(), 1);
+    }
+
+    #[test]
+    fn backfill_suspends_and_resumes_scheduled() {
+        let s = sched();
+        let p = policy();
+        s.clock.set(DAY);
+        s.tick("t", &p, 0, ok_job()); // day 0 materialized
+
+        // Backfill an old range on another thread; its first job blocks
+        // until this thread has observed the suspension with a tick.
+        s.clock.set(3 * DAY);
+        let (started_tx, started_rx) = std::sync::mpsc::channel::<()>();
+        let (go_tx, go_rx) = std::sync::mpsc::channel::<()>();
+        let go_rx = std::sync::Mutex::new(go_rx);
+        let started_tx = std::sync::Mutex::new(started_tx);
+        let out = std::thread::scope(|scope| {
+            let h = scope.spawn(|| {
+                s.backfill(
+                    "t",
+                    &p,
+                    FeatureWindow::new(-2 * DAY, 0),
+                    Arc::new(move |w, _| {
+                        let _ = started_tx.lock().unwrap().send(());
+                        let _ = go_rx.lock().unwrap().recv_timeout(
+                            std::time::Duration::from_secs(5),
+                        );
+                        Ok(w.len() as u64)
+                    }),
+                )
+            });
+            started_rx.recv().unwrap(); // a backfill piece is running
+            assert!(s.is_suspended("t"));
+            // Scheduled tick during backfill must defer, not run.
+            let during = s.tick("t", &p, 0, ok_job());
+            assert!(during.is_empty(), "tick during backfill must defer");
+            drop(go_tx); // release all blocked pieces
+            h.join().unwrap()
+        });
+        // Backfill pieces (2 days) + deferred scheduled windows (days 1,2).
+        let backfills = out.iter().filter(|o| o.backfill).count();
+        let scheduled = out.iter().filter(|o| !o.backfill).count();
+        assert_eq!(backfills, 2);
+        assert_eq!(scheduled, 2);
+        assert!(!s.is_suspended("t"));
+        assert!(s.is_materialized("t", &FeatureWindow::new(-2 * DAY, 3 * DAY)));
+    }
+
+    #[test]
+    fn backfill_skips_already_materialized_pieces() {
+        let s = sched();
+        let p = policy();
+        s.clock.set(2 * DAY);
+        s.tick("t", &p, 0, ok_job()); // days 0-1 done
+        let out = s.backfill("t", &p, FeatureWindow::new(0, 2 * DAY), ok_job());
+        assert!(out.is_empty(), "fully-covered backfill is a no-op: {out:?}");
+    }
+
+    #[test]
+    fn gaps_surface_unmaterialized_ranges() {
+        let s = sched();
+        let p = policy();
+        s.clock.set(DAY);
+        s.tick("t", &p, 0, ok_job());
+        let gaps = s.gaps("t", FeatureWindow::new(-DAY, 2 * DAY));
+        assert_eq!(gaps, vec![FeatureWindow::new(-DAY, 0), FeatureWindow::new(DAY, 2 * DAY)]);
+    }
+
+    #[test]
+    fn checkpoint_restore_roundtrip() {
+        let s = sched();
+        let p = policy();
+        s.clock.set(2 * DAY);
+        s.tick("t", &p, 0, ok_job());
+        let cp = s.checkpoint();
+
+        let s2 = sched();
+        s2.restore(&cp);
+        assert!(s2.is_materialized("t", &FeatureWindow::new(0, 2 * DAY)));
+        // Resumed region continues from the high-water mark, no re-work.
+        s2.clock.set(3 * DAY);
+        let out = s2.tick("t", &p, 0, ok_job());
+        assert_eq!(out.len(), 1);
+        assert_eq!(out[0].window, FeatureWindow::new(2 * DAY, 3 * DAY));
+    }
+}

@@ -1,0 +1,24 @@
+//! Context-aware scheduling subsystem (§3.1.1, §4.3).
+//!
+//! Tracks two kinds of state per feature-set table:
+//!
+//! * **Data state** — which feature windows are materialized vs not, on
+//!   the event timeline.
+//! * **Job state** — active (queued/running) jobs and the window each
+//!   covers.
+//!
+//! Invariants enforced here (exercised by `tests/scheduler_invariants.rs`):
+//! concurrent jobs never claim overlapping windows; backfill suspends
+//! scheduled materialization and resumes it after (§3.1.1); retrying a
+//! failed job cannot double-claim; "not materialized" is always
+//! distinguishable from "no data in the window" (§4.3).
+
+pub mod alerts;
+pub mod executor;
+pub mod policy;
+pub mod tracker;
+
+pub use alerts::{Alert, AlertSink, Severity};
+pub use executor::{JobOutcome, Scheduler};
+pub use policy::SchedulePolicy;
+pub use tracker::{JobId, WindowTracker};

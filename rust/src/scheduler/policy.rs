@@ -1,0 +1,162 @@
+//! Scheduling policy: when is the next incremental window due, and how
+//! are large windows partitioned into job-sized units (§3.1.1's
+//! "context aware partitioning scheme").
+
+use crate::metadata::assets::FeatureSetSpec;
+use crate::types::time::Granularity;
+use crate::types::{FeatureWindow, Timestamp};
+
+/// Derives job windows from a feature-set spec and the clock.
+#[derive(Debug, Clone)]
+pub struct SchedulePolicy {
+    pub granularity: Granularity,
+    /// Event-time length of each scheduled increment.
+    pub interval_secs: i64,
+    /// Events may land this late (§4.4): a window is only *ripe* for
+    /// materialization once `now >= window.end + source_delay`.
+    pub source_delay_secs: i64,
+    /// Context-aware partitioning: max bins per job unit.
+    pub max_bins_per_job: i64,
+}
+
+impl SchedulePolicy {
+    pub fn from_spec(spec: &FeatureSetSpec) -> Self {
+        SchedulePolicy {
+            granularity: spec.granularity,
+            interval_secs: spec.materialization.schedule_interval_secs,
+            source_delay_secs: spec.source.source_delay_secs,
+            max_bins_per_job: spec.materialization.max_bins_per_job,
+        }
+    }
+
+    /// Scheduled incremental windows due at `now`, given materialization
+    /// has already covered event time up to `high_water`.  Each returned
+    /// window is one job; windows are aligned, non-overlapping, and only
+    /// include event time that is ripe.
+    ///
+    /// Context-aware partitioning (§3.1.1) works in both directions: the
+    /// due span (whole intervals only) is re-chunked into
+    /// `max_bins_per_job` units — *splitting* large catch-up spans into
+    /// parallel jobs, and *coalescing* many small due intervals into one
+    /// job when the unit is larger than the interval.
+    pub fn due_windows(&self, high_water: Timestamp, now: Timestamp) -> Vec<FeatureWindow> {
+        let ripe_end = self.granularity.floor(now - self.source_delay_secs);
+        let start = self.granularity.floor(high_water);
+        if ripe_end <= start {
+            return Vec::new();
+        }
+        // Whole intervals only: the partial trailing interval ships with
+        // the next tick.
+        let whole_intervals = (ripe_end - start) / self.interval_secs;
+        if whole_intervals == 0 {
+            return Vec::new();
+        }
+        let span = FeatureWindow::new(start, start + whole_intervals * self.interval_secs);
+        span.split(self.granularity, self.max_bins_per_job)
+    }
+
+    /// Partition a backfill request into job units (§4.3 "one-time
+    /// backfill ... covers one feature window defined by user").
+    pub fn partition_backfill(&self, window: FeatureWindow) -> Vec<FeatureWindow> {
+        window.align(self.granularity).split(self.granularity, self.max_bins_per_job)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::types::time::{DAY, HOUR};
+
+    fn policy() -> SchedulePolicy {
+        SchedulePolicy {
+            granularity: Granularity(HOUR),
+            interval_secs: DAY,
+            source_delay_secs: 0,
+            max_bins_per_job: 24,
+        }
+    }
+
+    #[test]
+    fn nothing_due_before_interval_elapses() {
+        let p = policy();
+        assert!(p.due_windows(0, DAY - 1).is_empty());
+        assert_eq!(p.due_windows(0, DAY), vec![FeatureWindow::new(0, DAY)]);
+    }
+
+    #[test]
+    fn catches_up_multiple_intervals() {
+        let p = policy();
+        let due = p.due_windows(0, 3 * DAY + HOUR);
+        assert_eq!(due.len(), 3);
+        assert_eq!(due[0], FeatureWindow::new(0, DAY));
+        assert_eq!(due[2], FeatureWindow::new(2 * DAY, 3 * DAY));
+        // contiguous
+        for pair in due.windows(2) {
+            assert_eq!(pair[0].end, pair[1].start);
+        }
+    }
+
+    #[test]
+    fn source_delay_defers_ripeness() {
+        let mut p = policy();
+        p.source_delay_secs = 2 * HOUR;
+        // At now = DAY the last 2h aren't ripe → no full interval yet.
+        assert!(p.due_windows(0, DAY).is_empty());
+        assert_eq!(p.due_windows(0, DAY + 2 * HOUR), vec![FeatureWindow::new(0, DAY)]);
+    }
+
+    #[test]
+    fn partitioning_respects_max_bins() {
+        let mut p = policy();
+        p.max_bins_per_job = 6;
+        let due = p.due_windows(0, DAY);
+        assert_eq!(due.len(), 4); // 24h / 6h-chunks
+        assert!(due.iter().all(|w| w.bins(p.granularity) <= 6));
+    }
+
+    #[test]
+    fn coalesces_small_intervals_into_one_job() {
+        // §3.1.1 "coalescing": a large job unit absorbs many due
+        // intervals into a single window.
+        let mut p = policy();
+        p.max_bins_per_job = 24 * 30;
+        let due = p.due_windows(0, 10 * DAY);
+        assert_eq!(due, vec![FeatureWindow::new(0, 10 * DAY)]);
+    }
+
+    #[test]
+    fn backfill_partition_aligns_and_chunks() {
+        let p = policy();
+        let parts = p.partition_backfill(FeatureWindow::new(100, 3 * DAY - 100));
+        assert!(parts.len() == 3);
+        assert_eq!(parts[0].start, 0); // aligned down
+        assert_eq!(parts.last().unwrap().end, 3 * DAY); // aligned up
+    }
+
+    #[test]
+    fn high_water_respected() {
+        let p = policy();
+        let due = p.due_windows(2 * DAY, 4 * DAY);
+        assert_eq!(due.len(), 2);
+        assert_eq!(due[0].start, 2 * DAY);
+    }
+
+    #[test]
+    fn from_spec_pulls_policy_fields() {
+        use crate::metadata::assets::SourceSpec;
+        let mut spec = FeatureSetSpec::rolling(
+            "f",
+            1,
+            "e",
+            SourceSpec::synthetic(0),
+            Granularity::daily(),
+            30,
+        );
+        spec.source.source_delay_secs = 3 * HOUR;
+        spec.materialization.max_bins_per_job = 7;
+        let p = SchedulePolicy::from_spec(&spec);
+        assert_eq!(p.source_delay_secs, 3 * HOUR);
+        assert_eq!(p.max_bins_per_job, 7);
+        assert_eq!(p.interval_secs, spec.materialization.schedule_interval_secs);
+    }
+}

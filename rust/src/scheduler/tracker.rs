@@ -1,0 +1,231 @@
+//! Data-state + job-state tracking (§4.3).
+
+use std::collections::HashMap;
+
+use crate::types::{FeatureWindow, FsError, Result};
+
+pub type JobId = u64;
+
+/// Per-table window tracker.
+///
+/// `materialized` is kept as a sorted, coalesced list of disjoint
+/// windows; `active` maps in-flight jobs to their claimed windows.
+#[derive(Debug, Default)]
+pub struct WindowTracker {
+    materialized: Vec<FeatureWindow>,
+    active: HashMap<JobId, FeatureWindow>,
+    next_job: JobId,
+}
+
+impl WindowTracker {
+    pub fn new() -> Self {
+        Self::default()
+    }
+
+    /// Claim `window` for a new job. Fails with `WindowConflict` if any
+    /// active job's window overlaps (§4.3: "Concurrent jobs do not have
+    /// overlapping feature windows").
+    pub fn try_claim(&mut self, window: FeatureWindow) -> Result<JobId> {
+        if window.is_empty() {
+            return Err(FsError::InvalidArg("cannot claim an empty window".into()));
+        }
+        if let Some(conflict) = self.active.values().find(|w| w.overlaps(&window)) {
+            return Err(FsError::WindowConflict { got: window, active: *conflict });
+        }
+        let id = self.next_job;
+        self.next_job += 1;
+        self.active.insert(id, window);
+        Ok(id)
+    }
+
+    /// Job finished successfully: release the claim and mark its window
+    /// materialized.
+    pub fn complete(&mut self, job: JobId) -> Result<()> {
+        let w = self
+            .active
+            .remove(&job)
+            .ok_or_else(|| FsError::NotFound(format!("job {job}")))?;
+        self.insert_materialized(w);
+        Ok(())
+    }
+
+    /// Job failed: release the claim without marking data state.
+    pub fn fail(&mut self, job: JobId) -> Result<()> {
+        self.active
+            .remove(&job)
+            .map(|_| ())
+            .ok_or_else(|| FsError::NotFound(format!("job {job}")))
+    }
+
+    fn insert_materialized(&mut self, w: FeatureWindow) {
+        // Sorted-splice insert with local coalescing: O(log n) search +
+        // one splice, instead of a full re-sort per completion (the
+        // common case — appending at the high-water mark — is O(1)
+        // amortized; see EXPERIMENTS.md §Perf L3).
+        let i = self.materialized.partition_point(|m| m.start < w.start);
+        let mut new = w;
+        let mut start_idx = i;
+        if i > 0 && self.materialized[i - 1].end >= w.start {
+            start_idx = i - 1;
+            new = FeatureWindow::new(
+                self.materialized[i - 1].start,
+                self.materialized[i - 1].end.max(w.end),
+            );
+        }
+        let mut end_idx = start_idx;
+        while end_idx < self.materialized.len() && self.materialized[end_idx].start <= new.end {
+            new = FeatureWindow::new(new.start, new.end.max(self.materialized[end_idx].end));
+            end_idx += 1;
+        }
+        self.materialized.splice(start_idx..end_idx, [new]);
+    }
+
+    /// Is the *entire* window materialized?
+    pub fn is_materialized(&self, window: &FeatureWindow) -> bool {
+        if window.is_empty() {
+            return true;
+        }
+        self.materialized
+            .iter()
+            .any(|m| m.start <= window.start && m.end >= window.end)
+    }
+
+    /// Unmaterialized sub-windows of `window` — drives backfill planning
+    /// and the "no result because not materialized" distinction (§4.3).
+    pub fn gaps(&self, window: FeatureWindow) -> Vec<FeatureWindow> {
+        let mut gaps = Vec::new();
+        let mut cursor = window.start;
+        for m in &self.materialized {
+            if m.end <= cursor {
+                continue;
+            }
+            if m.start >= window.end {
+                break;
+            }
+            if m.start > cursor {
+                gaps.push(FeatureWindow::new(cursor, m.start.min(window.end)));
+            }
+            cursor = cursor.max(m.end);
+            if cursor >= window.end {
+                break;
+            }
+        }
+        if cursor < window.end {
+            gaps.push(FeatureWindow::new(cursor, window.end));
+        }
+        gaps
+    }
+
+    /// Materialized coverage (sorted, disjoint).
+    pub fn coverage(&self) -> &[FeatureWindow] {
+        &self.materialized
+    }
+
+    /// Windows of currently active jobs.
+    pub fn active_windows(&self) -> Vec<FeatureWindow> {
+        self.active.values().copied().collect()
+    }
+
+    pub fn active_count(&self) -> usize {
+        self.active.len()
+    }
+
+    /// End of contiguous materialized coverage starting at or before
+    /// `origin` — the high-water mark scheduled materialization extends.
+    pub fn high_water(&self, origin: i64) -> i64 {
+        let mut hw = origin;
+        for m in &self.materialized {
+            if m.start <= hw && m.end > hw {
+                hw = m.end;
+            }
+        }
+        hw
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn w(a: i64, b: i64) -> FeatureWindow {
+        FeatureWindow::new(a, b)
+    }
+
+    #[test]
+    fn claim_conflict_detection() {
+        let mut t = WindowTracker::new();
+        let j1 = t.try_claim(w(0, 10)).unwrap();
+        assert!(matches!(t.try_claim(w(5, 15)), Err(FsError::WindowConflict { .. })));
+        // Adjacent is fine (half-open).
+        let j2 = t.try_claim(w(10, 20)).unwrap();
+        assert_ne!(j1, j2);
+        assert_eq!(t.active_count(), 2);
+    }
+
+    #[test]
+    fn complete_materializes_and_releases() {
+        let mut t = WindowTracker::new();
+        let j = t.try_claim(w(0, 10)).unwrap();
+        assert!(!t.is_materialized(&w(0, 10)));
+        t.complete(j).unwrap();
+        assert!(t.is_materialized(&w(0, 10)));
+        assert!(t.is_materialized(&w(2, 8)));
+        assert!(!t.is_materialized(&w(0, 11)));
+        assert_eq!(t.active_count(), 0);
+        // window can be re-claimed (recompute/late data)
+        assert!(t.try_claim(w(0, 10)).is_ok());
+    }
+
+    #[test]
+    fn fail_releases_without_materializing() {
+        let mut t = WindowTracker::new();
+        let j = t.try_claim(w(0, 10)).unwrap();
+        t.fail(j).unwrap();
+        assert!(!t.is_materialized(&w(0, 10)));
+        assert!(t.try_claim(w(0, 10)).is_ok());
+        assert!(t.fail(999).is_err());
+    }
+
+    #[test]
+    fn coalescing() {
+        let mut t = WindowTracker::new();
+        for win in [w(0, 10), w(20, 30), w(10, 20)] {
+            let j = t.try_claim(win).unwrap();
+            t.complete(j).unwrap();
+        }
+        assert_eq!(t.coverage(), &[w(0, 30)]);
+        assert!(t.is_materialized(&w(0, 30)));
+    }
+
+    #[test]
+    fn gaps_reported_exactly() {
+        let mut t = WindowTracker::new();
+        for win in [w(10, 20), w(30, 40)] {
+            let j = t.try_claim(win).unwrap();
+            t.complete(j).unwrap();
+        }
+        assert_eq!(t.gaps(w(0, 50)), vec![w(0, 10), w(20, 30), w(40, 50)]);
+        assert_eq!(t.gaps(w(12, 18)), vec![]);
+        assert_eq!(t.gaps(w(15, 35)), vec![w(20, 30)]);
+        assert_eq!(t.gaps(w(40, 45)), vec![w(40, 45)]);
+    }
+
+    #[test]
+    fn high_water_mark() {
+        let mut t = WindowTracker::new();
+        assert_eq!(t.high_water(0), 0);
+        for win in [w(0, 10), w(10, 25), w(40, 50)] {
+            let j = t.try_claim(win).unwrap();
+            t.complete(j).unwrap();
+        }
+        assert_eq!(t.high_water(0), 25); // stops at the gap
+        assert_eq!(t.high_water(40), 50);
+    }
+
+    #[test]
+    fn empty_window_rejected() {
+        let mut t = WindowTracker::new();
+        assert!(t.try_claim(w(5, 5)).is_err());
+        assert!(t.is_materialized(&w(5, 5))); // vacuously
+    }
+}

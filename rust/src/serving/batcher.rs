@@ -1,0 +1,214 @@
+//! Micro-batching of online lookups.
+//!
+//! Point lookups arriving within a short window are coalesced into one
+//! `get_many` against the store — the standard low-latency serving trick
+//! (vLLM-style continuous batching, applied to KV reads).  The batcher is
+//! deterministic and pull-based: callers `push` requests and a driver
+//! thread (or the test) calls `flush` when either the size or the age
+//! trigger fires.
+
+use std::collections::VecDeque;
+use std::sync::Mutex;
+
+use crate::online_store::OnlineStore;
+use crate::types::{EntityId, FeatureRecord, Timestamp};
+
+/// One queued lookup.
+#[derive(Debug, Clone, PartialEq)]
+pub struct BatchItem {
+    pub request_id: u64,
+    pub table: String,
+    pub entity: EntityId,
+    /// Processing-time the request arrived (drives the age trigger).
+    pub arrived_at_us: u64,
+}
+
+/// Completed lookup.
+#[derive(Debug, Clone)]
+pub struct BatchResult {
+    pub request_id: u64,
+    pub record: Option<FeatureRecord>,
+    /// Queue time + store time, µs (simulated processing timeline).
+    pub latency_us: u64,
+}
+
+#[derive(Debug, Clone, Copy)]
+pub struct BatcherConfig {
+    pub max_batch: usize,
+    /// Flush when the oldest item has waited this long.
+    pub max_wait_us: u64,
+}
+
+impl Default for BatcherConfig {
+    fn default() -> Self {
+        BatcherConfig { max_batch: 64, max_wait_us: 500 }
+    }
+}
+
+/// FIFO micro-batcher over one online store.
+pub struct MicroBatcher {
+    cfg: BatcherConfig,
+    queue: Mutex<VecDeque<BatchItem>>,
+    next_id: Mutex<u64>,
+}
+
+impl MicroBatcher {
+    pub fn new(cfg: BatcherConfig) -> Self {
+        MicroBatcher { cfg, queue: Mutex::new(VecDeque::new()), next_id: Mutex::new(0) }
+    }
+
+    /// Enqueue a lookup; returns its request id.
+    pub fn push(&self, table: &str, entity: EntityId, now_us: u64) -> u64 {
+        let mut idg = self.next_id.lock().unwrap();
+        let id = *idg;
+        *idg += 1;
+        drop(idg);
+        self.queue.lock().unwrap().push_back(BatchItem {
+            request_id: id,
+            table: table.to_string(),
+            entity,
+            arrived_at_us: now_us,
+        });
+        id
+    }
+
+    pub fn pending(&self) -> usize {
+        self.queue.lock().unwrap().len()
+    }
+
+    /// Should the driver flush now?
+    pub fn should_flush(&self, now_us: u64) -> bool {
+        let q = self.queue.lock().unwrap();
+        if q.len() >= self.cfg.max_batch {
+            return true;
+        }
+        q.front().map_or(false, |i| now_us - i.arrived_at_us >= self.cfg.max_wait_us)
+    }
+
+    /// Drain up to `max_batch` items and execute them as grouped
+    /// `get_many` calls (one per table in the batch).
+    pub fn flush(&self, store: &OnlineStore, now: Timestamp, now_us: u64) -> Vec<BatchResult> {
+        let items: Vec<BatchItem> = {
+            let mut q = self.queue.lock().unwrap();
+            let n = q.len().min(self.cfg.max_batch);
+            q.drain(..n).collect()
+        };
+        if items.is_empty() {
+            return Vec::new();
+        }
+        // Group by table preserving original order for the response.
+        let mut by_table: Vec<(String, Vec<usize>)> = Vec::new();
+        for (i, item) in items.iter().enumerate() {
+            match by_table.iter_mut().find(|(t, _)| *t == item.table) {
+                Some((_, idxs)) => idxs.push(i),
+                None => by_table.push((item.table.clone(), vec![i])),
+            }
+        }
+        let mut results: Vec<Option<BatchResult>> = vec![None; items.len()];
+        for (table, idxs) in by_table {
+            let entities: Vec<EntityId> = idxs.iter().map(|&i| items[i].entity).collect();
+            let t0 = std::time::Instant::now();
+            let records = store.get_many(&table, &entities, now);
+            let store_us = (t0.elapsed().as_nanos() as u64 / 1_000).max(1);
+            for (&i, record) in idxs.iter().zip(records) {
+                results[i] = Some(BatchResult {
+                    request_id: items[i].request_id,
+                    record,
+                    latency_us: (now_us - items[i].arrived_at_us) + store_us,
+                });
+            }
+        }
+        results.into_iter().map(|r| r.expect("all items answered")).collect()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn store_with(n: u64) -> OnlineStore {
+        let s = OnlineStore::new(4);
+        let recs: Vec<FeatureRecord> =
+            (0..n).map(|i| FeatureRecord::new(i, 10, 20, vec![i as f32])).collect();
+        s.merge("t", &recs, 20);
+        s
+    }
+
+    #[test]
+    fn batches_by_size_trigger() {
+        let b = MicroBatcher::new(BatcherConfig { max_batch: 4, max_wait_us: 1_000_000 });
+        let store = store_with(10);
+        for e in 0..3 {
+            b.push("t", e, 100);
+        }
+        assert!(!b.should_flush(100));
+        b.push("t", 3, 101);
+        assert!(b.should_flush(101));
+        let out = b.flush(&store, 50, 150);
+        assert_eq!(out.len(), 4);
+        assert_eq!(b.pending(), 0);
+    }
+
+    #[test]
+    fn flushes_by_age_trigger() {
+        let b = MicroBatcher::new(BatcherConfig { max_batch: 100, max_wait_us: 500 });
+        b.push("t", 1, 1_000);
+        assert!(!b.should_flush(1_400));
+        assert!(b.should_flush(1_500));
+    }
+
+    #[test]
+    fn results_match_requests_in_order() {
+        let b = MicroBatcher::new(BatcherConfig::default());
+        let store = store_with(5);
+        let ids: Vec<u64> = (0..5).map(|e| b.push("t", 4 - e, 10)).collect();
+        let out = b.flush(&store, 100, 20);
+        assert_eq!(out.len(), 5);
+        for (i, r) in out.iter().enumerate() {
+            assert_eq!(r.request_id, ids[i]);
+            assert_eq!(r.record.as_ref().unwrap().values[0], (4 - i as u64) as f32);
+        }
+    }
+
+    #[test]
+    fn mixed_tables_in_one_batch() {
+        let b = MicroBatcher::new(BatcherConfig::default());
+        let store = store_with(3);
+        let extra = vec![FeatureRecord::new(7, 10, 20, vec![70.0])];
+        store.merge("other", &extra, 20);
+        b.push("t", 1, 0);
+        b.push("other", 7, 0);
+        b.push("t", 2, 0);
+        let out = b.flush(&store, 100, 5);
+        assert_eq!(out[0].record.as_ref().unwrap().values[0], 1.0);
+        assert_eq!(out[1].record.as_ref().unwrap().values[0], 70.0);
+        assert_eq!(out[2].record.as_ref().unwrap().values[0], 2.0);
+    }
+
+    #[test]
+    fn latency_includes_queue_wait() {
+        let b = MicroBatcher::new(BatcherConfig::default());
+        let store = store_with(1);
+        b.push("t", 0, 1_000);
+        let out = b.flush(&store, 100, 1_800);
+        assert!(out[0].latency_us >= 800, "queue wait must count: {}", out[0].latency_us);
+    }
+
+    #[test]
+    fn drains_at_most_max_batch() {
+        let b = MicroBatcher::new(BatcherConfig { max_batch: 2, max_wait_us: 0 });
+        let store = store_with(10);
+        for e in 0..5 {
+            b.push("t", e, 0);
+        }
+        assert_eq!(b.flush(&store, 100, 1).len(), 2);
+        assert_eq!(b.pending(), 3);
+    }
+
+    #[test]
+    fn empty_flush_is_noop() {
+        let b = MicroBatcher::new(BatcherConfig::default());
+        let store = store_with(1);
+        assert!(b.flush(&store, 100, 0).is_empty());
+    }
+}

@@ -1,0 +1,15 @@
+//! Online serving (§2.1 "Online feature retrieval to support feature
+//! retrieval with low latency").
+//!
+//! The request path: [`router`] picks the region/mechanism (delegating to
+//! `geo::access`), [`batcher`] micro-batches point lookups to amortize
+//! store access, and [`service`] ties them together with latency metrics
+//! feeding the SLA machinery.
+
+pub mod batcher;
+pub mod router;
+pub mod service;
+
+pub use batcher::{BatchItem, MicroBatcher};
+pub use router::{RouteTable, ServingRouter};
+pub use service::OnlineServing;

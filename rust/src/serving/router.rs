@@ -1,0 +1,107 @@
+//! Request routing: table → home region + access mechanism.
+
+use std::collections::HashMap;
+use std::sync::{Arc, RwLock};
+
+use crate::geo::access::CrossRegionAccess;
+use crate::types::{FsError, Result};
+
+/// Routing table: feature-set table name → its access router.
+#[derive(Default)]
+pub struct RouteTable {
+    routes: RwLock<HashMap<String, Arc<CrossRegionAccess>>>,
+}
+
+impl RouteTable {
+    pub fn new() -> Self {
+        Self::default()
+    }
+
+    pub fn set(&self, table: &str, access: Arc<CrossRegionAccess>) {
+        self.routes.write().unwrap().insert(table.to_string(), access);
+    }
+
+    pub fn get(&self, table: &str) -> Result<Arc<CrossRegionAccess>> {
+        self.routes
+            .read()
+            .unwrap()
+            .get(table)
+            .cloned()
+            .ok_or_else(|| FsError::NotFound(format!("route for table '{table}'")))
+    }
+
+    pub fn tables(&self) -> Vec<String> {
+        let mut t: Vec<_> = self.routes.read().unwrap().keys().cloned().collect();
+        t.sort();
+        t
+    }
+}
+
+/// The serving router: consults the route table per request. Thin by
+/// design — mechanism choice lives in `geo::access`, so the router's job
+/// is table resolution and failover redirection.
+pub struct ServingRouter {
+    pub routes: Arc<RouteTable>,
+}
+
+impl ServingRouter {
+    pub fn new(routes: Arc<RouteTable>) -> Self {
+        ServingRouter { routes }
+    }
+
+    /// Resolve the router for a table, verifying the home region is up
+    /// (a down home with no replica is a routable error the caller can
+    /// surface distinctly).
+    pub fn resolve(&self, table: &str, consumer_region: &str) -> Result<Arc<CrossRegionAccess>> {
+        let access = self.routes.get(table)?;
+        // If the home region is down and the consumer can't be served
+        // locally/replica, surface RegionDown.
+        let mech = access.route(consumer_region);
+        if mech == crate::geo::access::AccessMechanism::CrossRegion
+            && !access.topology.is_up(&access.home_region)
+        {
+            return Err(FsError::RegionDown(access.home_region.clone()));
+        }
+        Ok(access)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::geo::topology::GeoTopology;
+    use crate::online_store::OnlineStore;
+
+    fn access(home: &str, topology: Arc<GeoTopology>) -> Arc<CrossRegionAccess> {
+        Arc::new(CrossRegionAccess {
+            topology,
+            home_region: home.into(),
+            home_store: Arc::new(OnlineStore::new(2)),
+            replicator: None,
+            geo_fenced: false,
+        })
+    }
+
+    #[test]
+    fn resolves_registered_tables() {
+        let topology = Arc::new(GeoTopology::default_four_region());
+        let routes = Arc::new(RouteTable::new());
+        routes.set("txn:1", access("eastus", topology.clone()));
+        let r = ServingRouter::new(routes.clone());
+        assert!(r.resolve("txn:1", "westus").is_ok());
+        assert!(matches!(r.resolve("nope:1", "westus"), Err(FsError::NotFound(_))));
+        assert_eq!(routes.tables(), vec!["txn:1"]);
+    }
+
+    #[test]
+    fn surfaces_home_region_down() {
+        let topology = Arc::new(GeoTopology::default_four_region());
+        let routes = Arc::new(RouteTable::new());
+        routes.set("txn:1", access("eastus", topology.clone()));
+        let r = ServingRouter::new(routes);
+        topology.set_down("eastus", true);
+        assert!(matches!(r.resolve("txn:1", "westus"), Err(FsError::RegionDown(_))));
+        // Local consumer in the down region also fails at lookup time,
+        // but resolution for the *home* consumer is the geo layer's call.
+    }
+}

@@ -1,0 +1,119 @@
+//! The online serving front end: router + geo access + metrics.
+
+use std::sync::Arc;
+
+use super::router::ServingRouter;
+use crate::geo::access::{AccessMechanism, RoutedLookup};
+use crate::monitor::metrics::{MetricKind, MetricsRegistry};
+use crate::types::{EntityId, Result, Timestamp};
+
+/// Serving facade used by the coordinator and the benches.
+pub struct OnlineServing {
+    pub router: ServingRouter,
+    pub metrics: Arc<MetricsRegistry>,
+}
+
+impl OnlineServing {
+    pub fn new(router: ServingRouter, metrics: Arc<MetricsRegistry>) -> Self {
+        OnlineServing { router, metrics }
+    }
+
+    /// One online feature lookup from `consumer_region`. Records latency
+    /// and hit/miss metrics per mechanism.
+    pub fn lookup(
+        &self,
+        table: &str,
+        entity: EntityId,
+        consumer_region: &str,
+        now: Timestamp,
+    ) -> Result<RoutedLookup> {
+        let access = self.router.resolve(table, consumer_region)?;
+        let out = access.lookup(consumer_region, table, entity, now)?;
+        let mech = match out.mechanism {
+            AccessMechanism::Local => "local",
+            AccessMechanism::CrossRegion => "xregion",
+            AccessMechanism::Replica => "replica",
+        };
+        self.metrics.observe_latency(
+            MetricKind::System,
+            &format!("serving_latency_us_{mech}"),
+            out.latency_us * 1_000, // store ns in the histogram
+        );
+        self.metrics.inc(
+            MetricKind::System,
+            if out.record.is_some() { "serving_hits" } else { "serving_misses" },
+            1,
+        );
+        Ok(out)
+    }
+
+    /// Batched lookup of many entities (training-adjacent or bulk
+    /// inference). Returns per-entity results in order.
+    pub fn lookup_many(
+        &self,
+        table: &str,
+        entities: &[EntityId],
+        consumer_region: &str,
+        now: Timestamp,
+    ) -> Result<Vec<RoutedLookup>> {
+        entities.iter().map(|&e| self.lookup(table, e, consumer_region, now)).collect()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::geo::access::CrossRegionAccess;
+    use crate::geo::topology::GeoTopology;
+    use crate::online_store::OnlineStore;
+    use crate::serving::router::RouteTable;
+    use crate::types::FeatureRecord;
+
+    fn serving() -> (OnlineServing, Arc<OnlineStore>) {
+        let topology = Arc::new(GeoTopology::default_four_region());
+        let store = Arc::new(OnlineStore::new(2));
+        store.merge("t", &[FeatureRecord::new(1, 10, 20, vec![5.0])], 20);
+        let routes = Arc::new(RouteTable::new());
+        routes.set(
+            "t",
+            Arc::new(CrossRegionAccess {
+                topology,
+                home_region: "eastus".into(),
+                home_store: store.clone(),
+                replicator: None,
+                geo_fenced: false,
+            }),
+        );
+        (
+            OnlineServing::new(ServingRouter::new(routes), Arc::new(MetricsRegistry::new())),
+            store,
+        )
+    }
+
+    #[test]
+    fn lookup_records_metrics() {
+        let (s, _) = serving();
+        let out = s.lookup("t", 1, "eastus", 100).unwrap();
+        assert_eq!(out.record.unwrap().values[0], 5.0);
+        let _ = s.lookup("t", 999, "westus", 100).unwrap();
+        assert_eq!(s.metrics.counter("serving_hits"), 1);
+        assert_eq!(s.metrics.counter("serving_misses"), 1);
+        assert!(s.metrics.latency_quantile("serving_latency_us_local", 0.5).is_some());
+        assert!(s.metrics.latency_quantile("serving_latency_us_xregion", 0.5).is_some());
+    }
+
+    #[test]
+    fn lookup_many_ordered() {
+        let (s, store) = serving();
+        store.merge("t", &[FeatureRecord::new(2, 10, 20, vec![6.0])], 20);
+        let out = s.lookup_many("t", &[2, 1], "eastus", 100).unwrap();
+        assert_eq!(out[0].record.as_ref().unwrap().values[0], 6.0);
+        assert_eq!(out[1].record.as_ref().unwrap().values[0], 5.0);
+    }
+
+    #[test]
+    fn unknown_table_errors() {
+        let (s, _) = serving();
+        assert!(s.lookup("nope", 1, "eastus", 0).is_err());
+    }
+}

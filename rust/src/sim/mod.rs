@@ -1,0 +1,8 @@
+//! Workload simulation: the customer-churn scenario from the paper's
+//! introduction (`30day_transactions_sum`, `30day_complaints_sum`)
+//! packaged as a reusable fixture for examples, integration tests and
+//! benches.
+
+pub mod workload;
+
+pub use workload::{ChurnWorkload, ChurnWorkloadConfig};

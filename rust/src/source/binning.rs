@@ -1,0 +1,162 @@
+//! Binning: raw events → dense per-bin partial aggregates.
+//!
+//! This is the bridge between the row-oriented source world and the
+//! dense tensor world of the AOT compute graph: events in the source
+//! window (feature window + lookback halo, per Algorithm 1) are grouped
+//! by (entity, bin) and reduced to per-bin `sum/cnt/min/max` planes of
+//! shape `[E, lookback_bins + window_bins]`.
+
+use std::collections::HashMap;
+
+use super::Event;
+use crate::runtime::BinPlanes;
+use crate::types::time::Granularity;
+use crate::types::{EntityInterner, FeatureWindow};
+
+/// Result of binning: the planes plus the entity row mapping.
+#[derive(Debug)]
+pub struct BinnedWindow {
+    pub planes: BinPlanes,
+    /// Entity id for each row of the planes.
+    pub row_entities: Vec<u64>,
+    /// The *feature* window these planes cover (excluding the halo).
+    pub feature_window: FeatureWindow,
+    /// Halo bins on the left (window_bins - 1 for rolling transforms).
+    pub halo_bins: usize,
+}
+
+/// Bin `events` (which must already cover `feature_window.source_window
+/// (halo)`) into planes. Entities are interned through `interner`;
+/// rows appear in first-seen order.
+///
+/// Events outside the source window are ignored (defensive — connectors
+/// already filter).
+pub fn bin_events(
+    events: &[Event],
+    interner: &EntityInterner,
+    feature_window: FeatureWindow,
+    granularity: Granularity,
+    halo_bins: usize,
+) -> BinnedWindow {
+    debug_assert!(granularity.aligned(feature_window.start));
+    debug_assert!(granularity.aligned(feature_window.end));
+    let source_start = feature_window.start - halo_bins as i64 * granularity.secs();
+    let total_bins = halo_bins + feature_window.bins(granularity) as usize;
+
+    // First pass: discover entities (stable order), memoizing the
+    // interned id per event so the fill pass never touches the interner
+    // lock again.
+    let mut row_of: HashMap<u64, usize> = HashMap::new();
+    let mut row_entities: Vec<u64> = Vec::new();
+    let mut event_rows: Vec<usize> = Vec::with_capacity(events.len());
+    for e in events {
+        let id = interner.intern(&e.key);
+        let row = *row_of.entry(id).or_insert_with(|| {
+            row_entities.push(id);
+            row_entities.len() - 1
+        });
+        event_rows.push(row);
+    }
+
+    let mut planes = BinPlanes::empty(row_entities.len().max(1), total_bins.max(1));
+    for (e, &row) in events.iter().zip(&event_rows) {
+        if e.ts < source_start || e.ts >= feature_window.end {
+            continue;
+        }
+        let bin = granularity.bin_index(granularity.floor(source_start), e.ts);
+        // source_start is aligned because feature_window.start is.
+        planes.add_event(row, bin as usize, e.value);
+    }
+    BinnedWindow { planes, row_entities, feature_window, halo_bins }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::types::time::HOUR;
+
+    fn ev(key: &str, ts: i64, value: f32) -> Event {
+        Event { key: key.into(), ts, value }
+    }
+
+    #[test]
+    fn bins_by_entity_and_time() {
+        let interner = EntityInterner::new();
+        let g = Granularity(HOUR);
+        let w = FeatureWindow::new(2 * HOUR, 4 * HOUR); // 2 output bins
+        let events = vec![
+            ev("a", 0, 1.0),             // halo bin 0
+            ev("a", HOUR + 10, 2.0),     // halo bin 1
+            ev("a", 2 * HOUR + 5, 4.0),  // feature bin 0 (index 2)
+            ev("b", 3 * HOUR + 5, 8.0),  // feature bin 1 (index 3)
+            ev("a", 3 * HOUR + 6, 16.0), // feature bin 1
+        ];
+        let out = bin_events(&events, &interner, w, g, 2);
+        assert_eq!(out.planes.bins(), 4); // 2 halo + 2 feature
+        assert_eq!(out.row_entities.len(), 2);
+        let (ra, rb) = (0usize, 1usize); // first-seen order: a then b
+        assert_eq!(out.planes.sum.get(ra, 0), 1.0);
+        assert_eq!(out.planes.sum.get(ra, 1), 2.0);
+        assert_eq!(out.planes.sum.get(ra, 2), 4.0);
+        assert_eq!(out.planes.sum.get(ra, 3), 16.0);
+        assert_eq!(out.planes.sum.get(rb, 3), 8.0);
+        assert_eq!(out.planes.cnt.get(ra, 3), 1.0);
+        assert_eq!(out.planes.min.get(rb, 3), 8.0);
+    }
+
+    #[test]
+    fn multiple_events_same_bin_aggregate() {
+        let interner = EntityInterner::new();
+        let g = Granularity(HOUR);
+        let w = FeatureWindow::new(0, HOUR);
+        let events = vec![ev("a", 10, 3.0), ev("a", 20, 5.0), ev("a", 30, 1.0)];
+        let out = bin_events(&events, &interner, w, g, 0);
+        assert_eq!(out.planes.sum.get(0, 0), 9.0);
+        assert_eq!(out.planes.cnt.get(0, 0), 3.0);
+        assert_eq!(out.planes.min.get(0, 0), 1.0);
+        assert_eq!(out.planes.max.get(0, 0), 5.0);
+    }
+
+    #[test]
+    fn empty_events_yield_identity_planes() {
+        let interner = EntityInterner::new();
+        let g = Granularity(HOUR);
+        let out = bin_events(&[], &interner, FeatureWindow::new(0, 2 * HOUR), g, 1);
+        assert!(out.row_entities.is_empty());
+        assert_eq!(out.planes.sum.get(0, 0), 0.0); // placeholder row
+        assert_eq!(out.planes.min.get(0, 0), f32::INFINITY);
+    }
+
+    #[test]
+    fn out_of_window_events_ignored() {
+        let interner = EntityInterner::new();
+        let g = Granularity(HOUR);
+        let w = FeatureWindow::new(HOUR, 2 * HOUR);
+        // before halo and after end
+        let events = vec![ev("a", -HOUR, 100.0), ev("a", 2 * HOUR, 100.0), ev("a", HOUR, 1.0)];
+        let out = bin_events(&events, &interner, w, g, 1);
+        let total: f32 = out.planes.sum.data.iter().sum();
+        assert_eq!(total, 1.0);
+    }
+
+    #[test]
+    fn interner_is_shared_across_windows() {
+        // Entity rows differ per window but ids are stable globally.
+        let interner = EntityInterner::new();
+        let g = Granularity(HOUR);
+        let w1 = FeatureWindow::new(0, HOUR);
+        let w2 = FeatureWindow::new(HOUR, 2 * HOUR);
+        let o1 = bin_events(&[ev("x", 5, 1.0), ev("y", 6, 1.0)], &interner, w1, g, 0);
+        let o2 = bin_events(&[ev("y", HOUR + 5, 1.0)], &interner, w2, g, 0);
+        assert_eq!(o1.row_entities[1], o2.row_entities[0]); // same id for "y"
+    }
+
+    #[test]
+    fn negative_event_times() {
+        let interner = EntityInterner::new();
+        let g = Granularity(HOUR);
+        let w = FeatureWindow::new(-2 * HOUR, 0);
+        let out = bin_events(&[ev("a", -HOUR - 1, 2.0)], &interner, w, g, 0);
+        assert_eq!(out.planes.sum.get(0, 0), 2.0); // bin [-2h,-1h)
+    }
+}

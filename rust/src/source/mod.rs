@@ -1,0 +1,58 @@
+//! Source systems (§2.2): connectors that yield raw events, plus the
+//! binning stage that turns events into the dense per-bin partial
+//! aggregates the compute layer consumes.
+//!
+//! An event is `(entity_key, ts, value)` — the minimal shape the paper's
+//! churn example needs (`30day_transactions_sum` over transaction
+//! amounts).  Connectors model *source delay* (§4.4): an event with
+//! timestamp `t` only becomes readable at `t + delay` on the processing
+//! timeline, which is what makes leakage prevention non-trivial.
+
+pub mod binning;
+pub mod file;
+pub mod synthetic;
+
+pub use binning::bin_events;
+pub use file::FileSource;
+pub use synthetic::SyntheticSource;
+
+use crate::types::{FeatureWindow, Result, Timestamp};
+
+/// One raw source event.
+#[derive(Debug, Clone, PartialEq)]
+pub struct Event {
+    /// Canonical entity key (index columns joined; see `EntityInterner`).
+    pub key: String,
+    /// Event timestamp on the event timeline.
+    pub ts: Timestamp,
+    /// Value column the transformation aggregates.
+    pub value: f32,
+}
+
+/// A source connector (§3.2's "source" artifact).
+pub trait SourceConnector: Send + Sync {
+    /// Events with `ts` in `window`, *as visible at* `as_of` on the
+    /// processing timeline: events with `ts + delay > as_of` are not yet
+    /// readable (late data). Pass `as_of = i64::MAX` for a complete read.
+    fn read(&self, window: FeatureWindow, as_of: Timestamp) -> Result<Vec<Event>>;
+
+    /// The connector's expected source delay in seconds (§4.4).
+    fn delay_secs(&self) -> i64 {
+        0
+    }
+
+    /// Human-readable identity for lineage/monitoring.
+    fn describe(&self) -> String;
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn event_shape() {
+        let e = Event { key: "c1".into(), ts: 100, value: 2.5 };
+        assert_eq!(e.key, "c1");
+        assert_eq!(e.ts, 100);
+    }
+}

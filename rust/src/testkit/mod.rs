@@ -1,0 +1,6 @@
+//! Test support: a small property-testing framework (proptest is not
+//! available offline) and shared fixtures.
+
+pub mod prop;
+
+pub use prop::{forall, Gen};

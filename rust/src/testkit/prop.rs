@@ -1,0 +1,204 @@
+//! Mini property-testing framework.
+//!
+//! `proptest` is not fetchable in this environment, so coordinator
+//! invariants (routing, batching, merge/state semantics) are checked with
+//! this in-tree harness: seeded case generation, a fixed case budget, and
+//! greedy input shrinking on failure.  Failures print the seed so a case
+//! can be replayed by setting `GEOFS_PROP_SEED`.
+
+use crate::util::rng::Rng;
+
+/// Case generator: produces a random instance of `T` from an `Rng`.
+pub struct Gen<T> {
+    f: Box<dyn Fn(&mut Rng) -> T>,
+}
+
+impl<T: 'static> Gen<T> {
+    pub fn new(f: impl Fn(&mut Rng) -> T + 'static) -> Self {
+        Gen { f: Box::new(f) }
+    }
+
+    pub fn sample(&self, rng: &mut Rng) -> T {
+        (self.f)(rng)
+    }
+
+    pub fn map<U: 'static>(self, g: impl Fn(T) -> U + 'static) -> Gen<U> {
+        Gen::new(move |r| g(self.sample(r)))
+    }
+}
+
+/// Common generators.
+pub mod gens {
+    use super::Gen;
+
+    pub fn i64_in(lo: i64, hi: i64) -> Gen<i64> {
+        Gen::new(move |r| r.range(lo, hi))
+    }
+
+    pub fn usize_in(lo: usize, hi: usize) -> Gen<usize> {
+        Gen::new(move |r| r.range(lo as i64, hi as i64) as usize)
+    }
+
+    pub fn f32_unit() -> Gen<f32> {
+        Gen::new(|r| r.f32())
+    }
+
+    pub fn vec_of<T: 'static>(item: Gen<T>, max_len: usize) -> Gen<Vec<T>> {
+        Gen::new(move |r| {
+            let n = r.below(max_len as u64 + 1) as usize;
+            (0..n).map(|_| item.sample(r)).collect()
+        })
+    }
+}
+
+/// Outcome of a property check on one case.
+pub type PropResult = Result<(), String>;
+
+/// Shrinkable inputs: propose structurally smaller candidates.
+pub trait Shrink: Sized + Clone {
+    /// Candidates strictly "smaller" than `self`; empty when minimal.
+    fn shrink(&self) -> Vec<Self> {
+        Vec::new()
+    }
+}
+
+impl<T: Clone> Shrink for Vec<T> {
+    fn shrink(&self) -> Vec<Self> {
+        if self.is_empty() {
+            return vec![];
+        }
+        let mut out = Vec::new();
+        // halves — only when strictly smaller than self (a 1-element vec's
+        // second half IS the vec; re-proposing it would loop forever)
+        if self.len() >= 2 {
+            out.push(self[..self.len() / 2].to_vec());
+            out.push(self[self.len() / 2..].to_vec());
+        }
+        // drop one element (up to 8 positions to bound work)
+        let step = (self.len() / 8).max(1);
+        for i in (0..self.len()).step_by(step) {
+            let mut v = self.clone();
+            v.remove(i);
+            out.push(v);
+        }
+        out
+    }
+}
+
+impl Shrink for i64 {
+    fn shrink(&self) -> Vec<Self> {
+        if *self == 0 {
+            vec![]
+        } else {
+            vec![0, self / 2]
+        }
+    }
+}
+
+impl Shrink for u64 {
+    fn shrink(&self) -> Vec<Self> {
+        if *self == 0 {
+            vec![]
+        } else {
+            vec![0, self / 2]
+        }
+    }
+}
+
+/// Run `prop` on `cases` generated instances; shrink on failure; panic
+/// with the minimal failing case (Debug) and the seed.
+pub fn forall<T>(name: &str, cases: usize, gen: &Gen<T>, prop: impl Fn(&T) -> PropResult)
+where
+    T: Shrink + std::fmt::Debug + 'static,
+{
+    let seed = std::env::var("GEOFS_PROP_SEED")
+        .ok()
+        .and_then(|s| s.parse().ok())
+        .unwrap_or(0xfeed_face_u64);
+    let mut rng = Rng::new(seed);
+    for case_idx in 0..cases {
+        let input = gen.sample(&mut rng);
+        if let Err(msg) = prop(&input) {
+            // Greedy shrink: repeatedly take the first smaller failing input.
+            let mut minimal = input;
+            let mut minimal_msg = msg;
+            'outer: loop {
+                for cand in minimal.shrink() {
+                    if let Err(m) = prop(&cand) {
+                        minimal = cand;
+                        minimal_msg = m;
+                        continue 'outer;
+                    }
+                }
+                break;
+            }
+            panic!(
+                "property '{name}' failed (case {case_idx}, seed {seed}):\n  \
+                 error: {minimal_msg}\n  minimal input: {minimal:?}\n  \
+                 replay: GEOFS_PROP_SEED={seed}"
+            );
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::gens::*;
+    use super::*;
+
+    #[test]
+    fn passing_property_passes() {
+        forall("sum-commutes", 200, &vec_of(i64_in(-100, 100), 20), |v| {
+            let mut r = v.clone();
+            r.reverse();
+            if v.iter().sum::<i64>() == r.iter().sum::<i64>() {
+                Ok(())
+            } else {
+                Err("sum not reversal-invariant".into())
+            }
+        });
+    }
+
+    #[test]
+    fn failing_property_shrinks() {
+        let caught = std::panic::catch_unwind(|| {
+            forall("no-big", 500, &vec_of(i64_in(0, 1000), 30), |v| {
+                if v.iter().any(|&x| x >= 500) {
+                    Err("contains big".into())
+                } else {
+                    Ok(())
+                }
+            });
+        });
+        let msg = *caught.unwrap_err().downcast::<String>().unwrap();
+        assert!(msg.contains("minimal input"), "{msg}");
+        // Shrinking should get the witness down to a single element.
+        let after = msg.split("minimal input: ").nth(1).unwrap();
+        let commas = after.split(']').next().unwrap().matches(',').count();
+        assert!(commas <= 1, "not shrunk: {msg}");
+    }
+
+    #[test]
+    fn deterministic_given_seed() {
+        let collect = || {
+            let mut got = Vec::new();
+            let g = i64_in(0, 1_000_000);
+            let mut rng = Rng::new(77);
+            for _ in 0..10 {
+                got.push(g.sample(&mut rng));
+            }
+            got
+        };
+        assert_eq!(collect(), collect());
+    }
+
+    #[test]
+    fn gen_map() {
+        let g = i64_in(1, 10).map(|x| x * 2);
+        let mut rng = Rng::new(1);
+        for _ in 0..50 {
+            let v = g.sample(&mut rng);
+            assert!(v % 2 == 0 && (2..20).contains(&v));
+        }
+    }
+}

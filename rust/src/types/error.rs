@@ -1,0 +1,82 @@
+//! Library-wide error type.
+
+use crate::types::window::FeatureWindow;
+
+#[derive(Debug, thiserror::Error)]
+pub enum FsError {
+    #[error("asset not found: {0}")]
+    NotFound(String),
+
+    #[error("asset already exists: {0}")]
+    AlreadyExists(String),
+
+    #[error("immutable property '{prop}' of {asset} cannot change; bump the version instead")]
+    ImmutableProperty { asset: String, prop: String },
+
+    #[error("schema violation: {0}")]
+    Schema(String),
+
+    #[error("window {got} conflicts with active job window {active}")]
+    WindowConflict { got: FeatureWindow, active: FeatureWindow },
+
+    #[error("invalid argument: {0}")]
+    InvalidArg(String),
+
+    #[error("permission denied: principal '{principal}' lacks '{action}' on {resource}")]
+    AccessDenied { principal: String, action: String, resource: String },
+
+    #[error("region '{0}' is unavailable")]
+    RegionDown(String),
+
+    #[error("store I/O error: {0}")]
+    Io(#[from] std::io::Error),
+
+    #[error("artifact error: {0}")]
+    Artifact(String),
+
+    #[error("runtime execution error: {0}")]
+    Runtime(String),
+
+    #[error("dsl error: {0}")]
+    Dsl(String),
+
+    #[error("injected fault: {0}")]
+    InjectedFault(String),
+
+    #[error("{0}")]
+    Other(String),
+}
+
+impl FsError {
+    /// Transient errors are retried by the scheduler/merge machinery
+    /// (§3.1.3 "retry failed actions"); permanent ones raise alerts.
+    pub fn is_transient(&self) -> bool {
+        matches!(
+            self,
+            FsError::InjectedFault(_) | FsError::Io(_) | FsError::RegionDown(_)
+        )
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn transient_classification() {
+        assert!(FsError::InjectedFault("x".into()).is_transient());
+        assert!(FsError::RegionDown("eastus".into()).is_transient());
+        assert!(!FsError::NotFound("a".into()).is_transient());
+        assert!(!FsError::ImmutableProperty { asset: "fs".into(), prop: "code".into() }
+            .is_transient());
+    }
+
+    #[test]
+    fn messages_render() {
+        let e = FsError::WindowConflict {
+            got: FeatureWindow::new(0, 10),
+            active: FeatureWindow::new(5, 15),
+        };
+        assert!(e.to_string().contains("[0, 10)"));
+    }
+}

@@ -1,0 +1,14 @@
+//! Core domain types: timestamps, feature windows, records, errors.
+
+pub mod error;
+pub mod record;
+pub mod time;
+pub mod window;
+
+pub use error::FsError;
+pub use record::{EntityId, EntityInterner, FeatureRecord};
+pub use time::{Granularity, Timestamp, DAY, HOUR, MINUTE};
+pub use window::FeatureWindow;
+
+/// Result alias used across the library.
+pub type Result<T> = std::result::Result<T, FsError>;

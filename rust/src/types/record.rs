@@ -1,0 +1,190 @@
+//! The materialized feature-set record (paper §4.5.1) and entity keys.
+
+use std::collections::HashMap;
+use std::sync::RwLock;
+
+use super::time::Timestamp;
+
+/// Interned entity key. The paper's records carry "multiple ID (index)
+/// columns"; we intern the joined index-column values to a dense u64 so
+/// the storage/serving hot paths never touch strings.
+pub type EntityId = u64;
+
+/// A materialized feature-set record (§4.5.1):
+/// IDs + event_timestamp + creation_timestamp is the uniqueness key
+/// offline; online keeps `max(tuple(event_ts, creation_ts))` per entity.
+#[derive(Debug, Clone, PartialEq)]
+pub struct FeatureRecord {
+    pub entity: EntityId,
+    /// End of the aggregation bin on the event timeline.
+    pub event_ts: Timestamp,
+    /// Materialization time; always > event_ts for time-series features.
+    pub creation_ts: Timestamp,
+    /// Feature columns, in feature-set schema order.
+    pub values: Box<[f32]>,
+}
+
+impl FeatureRecord {
+    pub fn new(
+        entity: EntityId,
+        event_ts: Timestamp,
+        creation_ts: Timestamp,
+        values: impl Into<Box<[f32]>>,
+    ) -> Self {
+        FeatureRecord { entity, event_ts, creation_ts, values: values.into() }
+    }
+
+    /// Offline uniqueness key (§4.5.1).
+    pub fn unique_key(&self) -> (EntityId, Timestamp, Timestamp) {
+        (self.entity, self.event_ts, self.creation_ts)
+    }
+
+    /// Ordering tuple used by the online store (Eq. 2): a record wins if
+    /// its `(event_ts, creation_ts)` is larger.
+    pub fn version(&self) -> (Timestamp, Timestamp) {
+        (self.event_ts, self.creation_ts)
+    }
+}
+
+/// Bidirectional string↔id interner for entity index values.
+///
+/// Index columns are joined with `\x1f` (ASCII unit separator) before
+/// interning, matching the multi-ID records of §4.5.1.
+#[derive(Debug, Default)]
+pub struct EntityInterner {
+    inner: RwLock<Inner>,
+}
+
+#[derive(Debug, Default)]
+struct Inner {
+    by_key: HashMap<String, EntityId>,
+    by_id: Vec<String>,
+}
+
+pub const ID_SEP: char = '\x1f';
+
+impl EntityInterner {
+    pub fn new() -> Self {
+        Self::default()
+    }
+
+    /// Join multi-column index values into the canonical key string.
+    pub fn join_key(cols: &[&str]) -> String {
+        cols.join(&ID_SEP.to_string())
+    }
+
+    /// Intern (or look up) a key, returning its dense id.
+    pub fn intern(&self, key: &str) -> EntityId {
+        if let Some(&id) = self.inner.read().unwrap().by_key.get(key) {
+            return id;
+        }
+        let mut g = self.inner.write().unwrap();
+        if let Some(&id) = g.by_key.get(key) {
+            return id; // raced
+        }
+        let id = g.by_id.len() as EntityId;
+        g.by_id.push(key.to_string());
+        g.by_key.insert(key.to_string(), id);
+        id
+    }
+
+    /// Reverse lookup.
+    pub fn resolve(&self, id: EntityId) -> Option<String> {
+        self.inner.read().unwrap().by_id.get(id as usize).cloned()
+    }
+
+    pub fn lookup(&self, key: &str) -> Option<EntityId> {
+        self.inner.read().unwrap().by_key.get(key).copied()
+    }
+
+    pub fn len(&self) -> usize {
+        self.inner.read().unwrap().by_id.len()
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.len() == 0
+    }
+
+    /// All interned ids (0..len).
+    pub fn ids(&self) -> Vec<EntityId> {
+        (0..self.len() as EntityId).collect()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn record_keys() {
+        let r = FeatureRecord::new(7, 100, 150, vec![1.0, 2.0]);
+        assert_eq!(r.unique_key(), (7, 100, 150));
+        assert_eq!(r.version(), (100, 150));
+    }
+
+    #[test]
+    fn version_ordering_matches_alg2() {
+        // Alg 2: newer event_ts wins; tie on event_ts → newer creation_ts.
+        let old = FeatureRecord::new(1, 100, 200, vec![]);
+        let newer_event = FeatureRecord::new(1, 110, 150, vec![]);
+        let late_arriving = FeatureRecord::new(1, 100, 300, vec![]);
+        assert!(newer_event.version() > old.version());
+        assert!(late_arriving.version() > old.version());
+        assert!(newer_event.version() > late_arriving.version());
+    }
+
+    #[test]
+    fn interner_roundtrip() {
+        let i = EntityInterner::new();
+        let a = i.intern("cust_1");
+        let b = i.intern("cust_2");
+        assert_ne!(a, b);
+        assert_eq!(i.intern("cust_1"), a);
+        assert_eq!(i.resolve(a).as_deref(), Some("cust_1"));
+        assert_eq!(i.lookup("cust_2"), Some(b));
+        assert_eq!(i.lookup("nope"), None);
+        assert_eq!(i.len(), 2);
+    }
+
+    #[test]
+    fn multi_column_keys_do_not_collide() {
+        // ("ab","c") must differ from ("a","bc") — the separator ensures it.
+        let k1 = EntityInterner::join_key(&["ab", "c"]);
+        let k2 = EntityInterner::join_key(&["a", "bc"]);
+        assert_ne!(k1, k2);
+    }
+
+    #[test]
+    fn interner_dense_ids() {
+        let i = EntityInterner::new();
+        for n in 0..100 {
+            assert_eq!(i.intern(&format!("e{n}")), n as EntityId);
+        }
+        assert_eq!(i.ids().len(), 100);
+    }
+
+    #[test]
+    fn interner_concurrent() {
+        use std::sync::Arc;
+        let i = Arc::new(EntityInterner::new());
+        let hs: Vec<_> = (0..8)
+            .map(|t| {
+                let i = i.clone();
+                std::thread::spawn(move || {
+                    for n in 0..200 {
+                        i.intern(&format!("e{}", (n + t) % 100));
+                    }
+                })
+            })
+            .collect();
+        for h in hs {
+            h.join().unwrap();
+        }
+        assert_eq!(i.len(), 100);
+        // Bijective: every id resolves to a key that interns back to it.
+        for id in i.ids() {
+            let k = i.resolve(id).unwrap();
+            assert_eq!(i.lookup(&k), Some(id));
+        }
+    }
+}

@@ -1,0 +1,127 @@
+//! Event-timeline time: epoch-second timestamps and bin granularity.
+
+/// Epoch seconds. The paper's event/creation timestamps (§4.5.1).
+pub type Timestamp = i64;
+
+pub const MINUTE: i64 = 60;
+pub const HOUR: i64 = 3_600;
+pub const DAY: i64 = 86_400;
+
+/// Aggregation bin width of a feature set ("daily aggregation Feature
+/// Set" in §4.5.1). Feature windows must be aligned to this.
+#[derive(Debug, Clone, Copy, PartialEq, Eq, Hash)]
+pub struct Granularity(pub i64);
+
+impl Granularity {
+    pub const fn secs(self) -> i64 {
+        self.0
+    }
+
+    /// Floor `ts` to a bin boundary.
+    pub fn floor(self, ts: Timestamp) -> Timestamp {
+        ts.div_euclid(self.0) * self.0
+    }
+
+    /// Ceil `ts` to a bin boundary.
+    pub fn ceil(self, ts: Timestamp) -> Timestamp {
+        self.floor(ts + self.0 - 1)
+    }
+
+    /// Is `ts` on a bin boundary?
+    pub fn aligned(self, ts: Timestamp) -> bool {
+        ts.rem_euclid(self.0) == 0
+    }
+
+    /// Index of the bin containing `ts`, relative to `origin` (which must
+    /// be aligned).
+    pub fn bin_index(self, origin: Timestamp, ts: Timestamp) -> i64 {
+        debug_assert!(self.aligned(origin));
+        (ts - origin).div_euclid(self.0)
+    }
+
+    /// The *event timestamp* of the bin containing `ts`: the end of the
+    /// bin, per §4.5.1 ("in a daily aggregation Feature Set, this will be
+    /// the timestamp of the end of day").
+    pub fn bin_event_ts(self, ts: Timestamp) -> Timestamp {
+        self.floor(ts) + self.0
+    }
+
+    pub fn hourly() -> Self {
+        Granularity(super::time::HOUR)
+    }
+    pub fn daily() -> Self {
+        Granularity(super::time::DAY)
+    }
+}
+
+/// Render a duration in human units (for logs / bench tables).
+pub fn fmt_secs(mut s: i64) -> String {
+    let neg = s < 0;
+    if neg {
+        s = -s;
+    }
+    let out = if s % DAY == 0 {
+        format!("{}d", s / DAY)
+    } else if s % HOUR == 0 {
+        format!("{}h", s / HOUR)
+    } else if s % MINUTE == 0 {
+        format!("{}m", s / MINUTE)
+    } else {
+        format!("{s}s")
+    };
+    if neg {
+        format!("-{out}")
+    } else {
+        out
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn floor_ceil_aligned() {
+        let g = Granularity(HOUR);
+        assert_eq!(g.floor(3_661), 3_600);
+        assert_eq!(g.floor(3_600), 3_600);
+        assert_eq!(g.ceil(3_601), 7_200);
+        assert_eq!(g.ceil(3_600), 3_600);
+        assert!(g.aligned(7_200));
+        assert!(!g.aligned(7_201));
+    }
+
+    #[test]
+    fn negative_timestamps() {
+        let g = Granularity(HOUR);
+        assert_eq!(g.floor(-1), -3_600);
+        assert_eq!(g.ceil(-1), 0);
+        assert_eq!(g.bin_index(0, -1), -1);
+    }
+
+    #[test]
+    fn bin_event_ts_is_bin_end() {
+        let g = Granularity(DAY);
+        // Any instant during day 0 maps to event_ts = end of day 0.
+        assert_eq!(g.bin_event_ts(0), DAY);
+        assert_eq!(g.bin_event_ts(DAY - 1), DAY);
+        assert_eq!(g.bin_event_ts(DAY), 2 * DAY);
+    }
+
+    #[test]
+    fn bin_index() {
+        let g = Granularity(HOUR);
+        assert_eq!(g.bin_index(0, 0), 0);
+        assert_eq!(g.bin_index(0, HOUR - 1), 0);
+        assert_eq!(g.bin_index(0, HOUR), 1);
+        assert_eq!(g.bin_index(7_200, 7_200 + HOUR), 1);
+    }
+
+    #[test]
+    fn fmt() {
+        assert_eq!(fmt_secs(DAY * 30), "30d");
+        assert_eq!(fmt_secs(HOUR * 5), "5h");
+        assert_eq!(fmt_secs(90), "90s");
+        assert_eq!(fmt_secs(-HOUR), "-1h");
+    }
+}

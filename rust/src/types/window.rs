@@ -1,0 +1,160 @@
+//! Feature windows: half-open intervals on the event timeline.
+
+use super::time::{Granularity, Timestamp};
+
+/// Half-open `[start, end)` window of event time (Algorithm 1's
+/// `feature_window_start_ts` / `feature_window_end_ts`).
+#[derive(Debug, Clone, Copy, PartialEq, Eq, Hash)]
+pub struct FeatureWindow {
+    pub start: Timestamp,
+    pub end: Timestamp,
+}
+
+impl FeatureWindow {
+    pub fn new(start: Timestamp, end: Timestamp) -> Self {
+        assert!(start <= end, "window start {start} > end {end}");
+        FeatureWindow { start, end }
+    }
+
+    pub fn len(&self) -> i64 {
+        self.end - self.start
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.start == self.end
+    }
+
+    pub fn contains(&self, ts: Timestamp) -> bool {
+        ts >= self.start && ts < self.end
+    }
+
+    /// Overlap test — the scheduler's non-overlap invariant (§4.3) is
+    /// phrased in terms of this.
+    pub fn overlaps(&self, other: &FeatureWindow) -> bool {
+        self.start < other.end && other.start < self.end
+    }
+
+    pub fn intersect(&self, other: &FeatureWindow) -> Option<FeatureWindow> {
+        let s = self.start.max(other.start);
+        let e = self.end.min(other.end);
+        if s < e {
+            Some(FeatureWindow::new(s, e))
+        } else {
+            None
+        }
+    }
+
+    /// Union of two *adjacent or overlapping* windows.
+    pub fn merge(&self, other: &FeatureWindow) -> Option<FeatureWindow> {
+        if self.start > other.end || other.start > self.end {
+            return None;
+        }
+        Some(FeatureWindow::new(self.start.min(other.start), self.end.max(other.end)))
+    }
+
+    /// Expand to bin boundaries (start floors, end ceils).
+    pub fn align(&self, g: Granularity) -> FeatureWindow {
+        FeatureWindow::new(g.floor(self.start), g.ceil(self.end))
+    }
+
+    /// The source read window per Algorithm 1:
+    /// `source_window_start = feature_window_start - lookback`.
+    pub fn source_window(&self, lookback: i64) -> FeatureWindow {
+        assert!(lookback >= 0);
+        FeatureWindow::new(self.start - lookback, self.end)
+    }
+
+    /// Number of bins when aligned to `g`.
+    pub fn bins(&self, g: Granularity) -> i64 {
+        debug_assert!(g.aligned(self.start) && g.aligned(self.end));
+        (self.end - self.start) / g.secs()
+    }
+
+    /// Split into at most `max_bins`-wide aligned chunks — the scheduler's
+    /// context-aware partitioning unit (§3.1.1).
+    pub fn split(&self, g: Granularity, max_bins: i64) -> Vec<FeatureWindow> {
+        assert!(max_bins > 0);
+        let w = self.align(g);
+        let step = max_bins * g.secs();
+        let mut out = Vec::new();
+        let mut s = w.start;
+        while s < w.end {
+            let e = (s + step).min(w.end);
+            out.push(FeatureWindow::new(s, e));
+            s = e;
+        }
+        out
+    }
+}
+
+impl std::fmt::Display for FeatureWindow {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        write!(f, "[{}, {})", self.start, self.end)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::types::time::HOUR;
+
+    #[test]
+    fn overlap_semantics_half_open() {
+        let a = FeatureWindow::new(0, 10);
+        let b = FeatureWindow::new(10, 20); // adjacent: no overlap
+        let c = FeatureWindow::new(9, 11);
+        assert!(!a.overlaps(&b));
+        assert!(a.overlaps(&c) && c.overlaps(&b));
+        assert!(!a.contains(10) && a.contains(9));
+    }
+
+    #[test]
+    fn intersect_merge() {
+        let a = FeatureWindow::new(0, 10);
+        let b = FeatureWindow::new(5, 15);
+        assert_eq!(a.intersect(&b), Some(FeatureWindow::new(5, 10)));
+        assert_eq!(a.merge(&b), Some(FeatureWindow::new(0, 15)));
+        let far = FeatureWindow::new(20, 30);
+        assert_eq!(a.intersect(&far), None);
+        assert_eq!(a.merge(&far), None);
+        // adjacent merges
+        assert_eq!(
+            a.merge(&FeatureWindow::new(10, 12)),
+            Some(FeatureWindow::new(0, 12))
+        );
+    }
+
+    #[test]
+    fn align_and_bins() {
+        let g = Granularity(HOUR);
+        let w = FeatureWindow::new(100, 2 * HOUR + 5).align(g);
+        assert_eq!(w, FeatureWindow::new(0, 3 * HOUR));
+        assert_eq!(w.bins(g), 3);
+    }
+
+    #[test]
+    fn source_window_lookback() {
+        let w = FeatureWindow::new(1_000, 2_000);
+        assert_eq!(w.source_window(500), FeatureWindow::new(500, 2_000));
+    }
+
+    #[test]
+    fn split_covers_exactly() {
+        let g = Granularity(HOUR);
+        let w = FeatureWindow::new(0, 10 * HOUR);
+        let parts = w.split(g, 4);
+        assert_eq!(parts.len(), 3);
+        assert_eq!(parts[0], FeatureWindow::new(0, 4 * HOUR));
+        assert_eq!(parts[2], FeatureWindow::new(8 * HOUR, 10 * HOUR));
+        // contiguous, non-overlapping, covering
+        for pair in parts.windows(2) {
+            assert_eq!(pair[0].end, pair[1].start);
+        }
+    }
+
+    #[test]
+    #[should_panic]
+    fn rejects_inverted() {
+        FeatureWindow::new(10, 0);
+    }
+}

@@ -1,0 +1,209 @@
+//! Log-bucketed latency histogram (HdrHistogram-style, fixed memory).
+//!
+//! Used by the serving metrics (§2.1 "Enterprise grade SLAs") and the
+//! bench harness for percentile reporting.  Buckets are
+//! log2-major/linear-minor: 64 sub-buckets per power of two gives ≤ ~1.6%
+//! relative quantile error over the full u64 nanosecond range.
+
+const SUB_BITS: u32 = 6; // 64 linear sub-buckets per octave
+const SUB: usize = 1 << SUB_BITS;
+
+#[derive(Debug, Clone)]
+pub struct Histogram {
+    counts: Vec<u64>,
+    total: u64,
+    sum: u128,
+    min: u64,
+    max: u64,
+}
+
+impl Default for Histogram {
+    fn default() -> Self {
+        Self::new()
+    }
+}
+
+impl Histogram {
+    pub fn new() -> Self {
+        // 64 octaves × SUB sub-buckets covers all of u64.
+        Histogram { counts: vec![0; 64 * SUB], total: 0, sum: 0, min: u64::MAX, max: 0 }
+    }
+
+    fn index(v: u64) -> usize {
+        if v < SUB as u64 {
+            return v as usize;
+        }
+        let msb = 63 - v.leading_zeros();
+        let octave = (msb - SUB_BITS + 1) as usize;
+        let sub = (v >> (msb - SUB_BITS)) as usize & (SUB - 1);
+        // octave 0 handled above; shift so the table is contiguous.
+        octave * SUB + sub
+    }
+
+    /// Lower edge of bucket `i` (the value we report for quantiles —
+    /// a ≤ 1/64 under-estimate, consistent with HdrHistogram's convention).
+    fn bucket_value(i: usize) -> u64 {
+        let octave = i / SUB;
+        let sub = i % SUB;
+        if octave == 0 {
+            return sub as u64;
+        }
+        let msb = octave as u32 + SUB_BITS - 1;
+        (1u64 << msb) | ((sub as u64) << (msb - SUB_BITS))
+    }
+
+    pub fn record(&mut self, v: u64) {
+        self.counts[Self::index(v)] += 1;
+        self.total += 1;
+        self.sum += v as u128;
+        self.min = self.min.min(v);
+        self.max = self.max.max(v);
+    }
+
+    pub fn count(&self) -> u64 {
+        self.total
+    }
+
+    pub fn mean(&self) -> f64 {
+        if self.total == 0 {
+            return 0.0;
+        }
+        self.sum as f64 / self.total as f64
+    }
+
+    pub fn min(&self) -> u64 {
+        if self.total == 0 {
+            0
+        } else {
+            self.min
+        }
+    }
+
+    pub fn max(&self) -> u64 {
+        self.max
+    }
+
+    /// Quantile in [0,1]; returns the lower edge of the containing bucket
+    /// (clamped to observed min/max so p0/p100 are exact).
+    pub fn quantile(&self, q: f64) -> u64 {
+        if self.total == 0 {
+            return 0;
+        }
+        let rank = ((q.clamp(0.0, 1.0) * self.total as f64).ceil() as u64).max(1);
+        let mut seen = 0u64;
+        for (i, &c) in self.counts.iter().enumerate() {
+            seen += c;
+            if seen >= rank {
+                return Self::bucket_value(i).clamp(self.min, self.max);
+            }
+        }
+        self.max
+    }
+
+    pub fn merge(&mut self, other: &Histogram) {
+        for (a, b) in self.counts.iter_mut().zip(&other.counts) {
+            *a += b;
+        }
+        self.total += other.total;
+        self.sum += other.sum;
+        self.min = self.min.min(other.min);
+        self.max = self.max.max(other.max);
+    }
+
+    /// "p50=.. p95=.. p99=.. max=.." one-liner for logs/benches, in the
+    /// given unit divisor (e.g. 1_000 for ns→µs).
+    pub fn summary(&self, div: f64, unit: &str) -> String {
+        format!(
+            "n={} mean={:.1}{u} p50={:.1}{u} p95={:.1}{u} p99={:.1}{u} max={:.1}{u}",
+            self.total,
+            self.mean() / div,
+            self.quantile(0.50) as f64 / div,
+            self.quantile(0.95) as f64 / div,
+            self.quantile(0.99) as f64 / div,
+            self.max as f64 / div,
+            u = unit,
+        )
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn empty() {
+        let h = Histogram::new();
+        assert_eq!(h.count(), 0);
+        assert_eq!(h.quantile(0.5), 0);
+        assert_eq!(h.mean(), 0.0);
+    }
+
+    #[test]
+    fn exact_small_values() {
+        let mut h = Histogram::new();
+        for v in 0..SUB as u64 {
+            h.record(v);
+        }
+        // Values below SUB are exact buckets.
+        assert_eq!(h.quantile(0.0), 0);
+        assert_eq!(h.quantile(1.0), SUB as u64 - 1);
+        assert_eq!(h.min(), 0);
+        assert_eq!(h.max(), SUB as u64 - 1);
+    }
+
+    #[test]
+    fn quantile_relative_error_bounded() {
+        let mut h = Histogram::new();
+        let mut rng = crate::util::rng::Rng::new(1);
+        let mut vals: Vec<u64> = (0..100_000).map(|_| rng.below(10_000_000) + 1).collect();
+        for &v in &vals {
+            h.record(v);
+        }
+        vals.sort();
+        for &q in &[0.5, 0.9, 0.99, 0.999] {
+            let want = vals[((q * vals.len() as f64) as usize).min(vals.len() - 1)] as f64;
+            let got = h.quantile(q) as f64;
+            let rel = (got - want).abs() / want;
+            assert!(rel < 0.04, "q={q} want={want} got={got} rel={rel}");
+        }
+    }
+
+    #[test]
+    fn mean_exact() {
+        let mut h = Histogram::new();
+        for v in [10u64, 20, 30] {
+            h.record(v);
+        }
+        assert_eq!(h.mean(), 20.0);
+    }
+
+    #[test]
+    fn merge_equals_combined() {
+        let mut a = Histogram::new();
+        let mut b = Histogram::new();
+        let mut c = Histogram::new();
+        let mut rng = crate::util::rng::Rng::new(2);
+        for i in 0..10_000 {
+            let v = rng.below(1 << 40);
+            c.record(v);
+            if i % 2 == 0 {
+                a.record(v)
+            } else {
+                b.record(v)
+            }
+        }
+        a.merge(&b);
+        assert_eq!(a.count(), c.count());
+        assert_eq!(a.quantile(0.99), c.quantile(0.99));
+        assert_eq!(a.max(), c.max());
+    }
+
+    #[test]
+    fn huge_values_do_not_panic() {
+        let mut h = Histogram::new();
+        h.record(u64::MAX);
+        h.record(0);
+        assert_eq!(h.count(), 2);
+        assert!(h.quantile(1.0) >= h.quantile(0.0));
+    }
+}

@@ -1,0 +1,99 @@
+//! Hand-built substrates: JSON, PRNG, histograms, logging, clock.
+//!
+//! Nothing beyond the `xla` crate's dependency closure is available in
+//! this build environment, so the usual ecosystem crates (serde, rand,
+//! hdrhistogram, env_logger) are replaced by these small in-tree
+//! implementations (see DESIGN.md §5).
+
+pub mod hist;
+pub mod json;
+pub mod rng;
+
+use std::sync::atomic::{AtomicU64, Ordering};
+use std::sync::Arc;
+
+/// Simple stderr logger wired into the `log` facade.
+struct StderrLogger;
+
+impl log::Log for StderrLogger {
+    fn enabled(&self, metadata: &log::Metadata) -> bool {
+        metadata.level() <= log::max_level()
+    }
+    fn log(&self, record: &log::Record) {
+        if self.enabled(record.metadata()) {
+            eprintln!("[{:<5} {}] {}", record.level(), record.target(), record.args());
+        }
+    }
+    fn flush(&self) {}
+}
+
+/// Install the stderr logger once. Level from `GEOFS_LOG`
+/// (error|warn|info|debug|trace), default `info`.
+pub fn init_logging() {
+    static LOGGER: StderrLogger = StderrLogger;
+    let level = match std::env::var("GEOFS_LOG").as_deref() {
+        Ok("error") => log::LevelFilter::Error,
+        Ok("warn") => log::LevelFilter::Warn,
+        Ok("debug") => log::LevelFilter::Debug,
+        Ok("trace") => log::LevelFilter::Trace,
+        _ => log::LevelFilter::Info,
+    };
+    if log::set_logger(&LOGGER).is_ok() {
+        log::set_max_level(level);
+    }
+}
+
+/// A logical clock shared across the system.
+///
+/// The feature store reasons about two timelines (paper §4.5.1): the
+/// *event* timeline (timestamps in the data) and the *processing*
+/// timeline (creation timestamps, schedules, TTLs).  Tests and the geo
+/// simulator need to drive the processing timeline deterministically, so
+/// every subsystem takes a `Clock` instead of calling the OS.
+#[derive(Debug, Clone)]
+pub struct Clock(Arc<AtomicU64>);
+
+impl Clock {
+    /// A clock starting at the given epoch-seconds value; advanced manually.
+    pub fn fixed(start: i64) -> Clock {
+        Clock(Arc::new(AtomicU64::new(start as u64)))
+    }
+
+    /// Current time, epoch seconds.
+    pub fn now(&self) -> i64 {
+        self.0.load(Ordering::SeqCst) as i64
+    }
+
+    /// Advance by `secs` and return the new now.
+    pub fn advance(&self, secs: i64) -> i64 {
+        (self.0.fetch_add(secs as u64, Ordering::SeqCst) as i64) + secs
+    }
+
+    /// Set an absolute time (monotonicity is the caller's concern).
+    pub fn set(&self, t: i64) {
+        self.0.store(t as u64, Ordering::SeqCst);
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn clock_advances() {
+        let c = Clock::fixed(1_000);
+        assert_eq!(c.now(), 1_000);
+        assert_eq!(c.advance(60), 1_060);
+        assert_eq!(c.now(), 1_060);
+        c.set(5);
+        assert_eq!(c.now(), 5);
+    }
+
+    #[test]
+    fn clock_is_shared() {
+        let a = Clock::fixed(0);
+        let b = a.clone();
+        a.advance(10);
+        assert_eq!(b.now(), 10);
+    }
+}

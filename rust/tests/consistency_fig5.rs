@@ -1,0 +1,172 @@
+//! Experiments E1–E3: Fig 5 offline/online consistency semantics and
+//! eventual consistency under injected merge failures (§4.5.2–§4.5.4).
+
+use std::sync::Arc;
+
+use geofs::materialize::bootstrap_offline_to_online;
+use geofs::materialize::merge::{DualStoreMerger, FaultInjector};
+use geofs::metadata::assets::MaterializationPolicy;
+use geofs::offline_store::OfflineStore;
+use geofs::online_store::OnlineStore;
+use geofs::exec::RetryPolicy;
+use geofs::types::{FeatureRecord, FeatureWindow, Timestamp};
+use geofs::util::rng::Rng;
+use geofs::util::Clock;
+
+fn rec(entity: u64, event: Timestamp, created: Timestamp, v: f32) -> FeatureRecord {
+    FeatureRecord::new(entity, event, created, vec![v])
+}
+
+/// The paper's exact Fig 5 scenario.
+#[test]
+fn fig5_exact_scenario() {
+    let offline = Arc::new(OfflineStore::new());
+    let online = Arc::new(OnlineStore::new(2));
+    let merger = DualStoreMerger::new(
+        offline.clone(),
+        online.clone(),
+        FaultInjector::none(),
+        RetryPolicy::default(),
+        Clock::fixed(0),
+    );
+    let policy = MaterializationPolicy::default();
+    let (t0, t1, t2) = (100, 200, 300);
+    let (c0, c1, c2, c3) = (110, 210, 310, 400);
+    assert!(c3 > c2 && c2 > c1 && c1 > c0); // paper's t3' > t2' > t1' > t0'
+
+    // T1: R0, R1, R2.
+    for r in [rec(1, t0, c0, 0.0), rec(1, t1, c1, 1.0), rec(1, t2, c2, 2.0)] {
+        merger.merge("t", &[r.clone()], &policy, r.creation_ts).unwrap();
+    }
+    assert_eq!(offline.scan("t", FeatureWindow::new(0, 1_000)).len(), 3, "offline has R0,R1,R2");
+    assert_eq!(online.get("t", 1, 1_000).unwrap().version(), (t2, c2), "online has R2");
+
+    // T2: late-arriving R3 = {event t1, creation t3'}.
+    merger.merge("t", &[rec(1, t1, c3, 3.0)], &policy, c3).unwrap();
+    assert_eq!(
+        offline.scan("t", FeatureWindow::new(0, 1_000)).len(),
+        4,
+        "offline has all 4 records"
+    );
+    assert_eq!(
+        online.get("t", 1, 1_000).unwrap().version(),
+        (t2, c2),
+        "online still has R2 (R3's event_ts is older)"
+    );
+}
+
+/// Delivery-order independence: any interleaving of the same merges
+/// converges both stores to identical final states.
+#[test]
+fn consistency_under_arbitrary_merge_order() {
+    let records = vec![
+        rec(1, 100, 110, 0.0),
+        rec(1, 200, 210, 1.0),
+        rec(1, 200, 400, 2.0),
+        rec(1, 300, 310, 3.0),
+        rec(2, 100, 120, 4.0),
+        rec(2, 50, 500, 5.0),
+    ];
+    let mut rng = Rng::new(12);
+    let mut reference_online: Option<Vec<(u64, (i64, i64))>> = None;
+    for trial in 0..20 {
+        let mut order = records.clone();
+        rng.shuffle(&mut order);
+        let offline = Arc::new(OfflineStore::new());
+        let online = Arc::new(OnlineStore::new(4));
+        let merger = DualStoreMerger::new(
+            offline.clone(),
+            online.clone(),
+            FaultInjector::none(),
+            RetryPolicy::default(),
+            Clock::fixed(0),
+        );
+        for r in &order {
+            merger
+                .merge("t", std::slice::from_ref(r), &MaterializationPolicy::default(), r.creation_ts)
+                .unwrap();
+        }
+        assert_eq!(offline.row_count("t"), 6, "offline keeps all (trial {trial})");
+        let state: Vec<(u64, (i64, i64))> = online
+            .dump_table("t", 10_000)
+            .into_iter()
+            .map(|r| (r.entity, r.version()))
+            .collect();
+        match &reference_online {
+            None => reference_online = Some(state),
+            Some(want) => assert_eq!(&state, want, "trial {trial} diverged"),
+        }
+    }
+    let want = reference_online.unwrap();
+    assert_eq!(want, vec![(1, (300, 310)), (2, (100, 120))]);
+}
+
+/// E3: under injected transient failures with retries, both stores
+/// converge; with a persistently failing sink, the job-level retry
+/// (re-merge of the same records) heals the divergence.
+#[test]
+fn eventual_consistency_with_fault_injection() {
+    for &p in &[0.1, 0.3, 0.5] {
+        let offline = Arc::new(OfflineStore::new());
+        let online = Arc::new(OnlineStore::new(4));
+        let merger = DualStoreMerger::new(
+            offline.clone(),
+            online.clone(),
+            FaultInjector::with_rates(99, p, p),
+            RetryPolicy { max_attempts: 30, ..Default::default() },
+            Clock::fixed(0),
+        );
+        let records: Vec<FeatureRecord> =
+            (0..200).map(|i| rec(i % 20, 100 + (i as i64 / 20) * 100, 1_000 + i as i64, i as f32)).collect();
+        // Merge in batches (like jobs); job-level retry on failure.
+        for chunk in records.chunks(25) {
+            let mut attempts = 0;
+            loop {
+                attempts += 1;
+                match merger.merge("t", chunk, &MaterializationPolicy::default(), 2_000) {
+                    Ok(_) => break,
+                    Err(_) if attempts < 50 => continue,
+                    Err(e) => panic!("failed to converge at p={p}: {e}"),
+                }
+            }
+        }
+        // Convergence: offline holds every unique record; online holds the
+        // Eq. 2 max per entity.
+        assert_eq!(offline.row_count("t"), 200, "p={p}");
+        for latest in offline.latest_per_entity("t") {
+            let got = online.get("t", latest.entity, 10_000).unwrap();
+            assert_eq!(got.version(), latest.version(), "p={p}");
+        }
+    }
+}
+
+/// §4.5.5 bootstrap both ways, composed with Fig 5 data.
+#[test]
+fn bootstrap_second_store_reaches_parity() {
+    let offline = Arc::new(OfflineStore::new());
+    // Offline-only phase.
+    offline.merge(
+        "t",
+        &[rec(1, 100, 110, 0.0), rec(1, 200, 210, 1.0), rec(1, 200, 400, 2.0), rec(2, 50, 60, 3.0)],
+    );
+    // Enable online later → bootstrap.
+    let online = Arc::new(OnlineStore::new(2));
+    let stats = bootstrap_offline_to_online(&offline, &online, "t", 1_000);
+    assert_eq!(stats.inserted, 2);
+    assert_eq!(online.get("t", 1, 2_000).unwrap().version(), (200, 400));
+    assert_eq!(online.get("t", 2, 2_000).unwrap().version(), (50, 60));
+
+    // Subsequent merges keep both consistent without re-bootstrap.
+    let merger = DualStoreMerger::new(
+        offline.clone(),
+        online.clone(),
+        FaultInjector::none(),
+        RetryPolicy::default(),
+        Clock::fixed(0),
+    );
+    merger
+        .merge("t", &[rec(1, 300, 500, 9.0)], &MaterializationPolicy::default(), 500)
+        .unwrap();
+    assert_eq!(online.get("t", 1, 2_000).unwrap().version(), (300, 500));
+    assert_eq!(offline.row_count("t"), 5);
+}

@@ -1,0 +1,173 @@
+//! End-to-end integration: the full three-layer stack on the churn
+//! workload (DESIGN.md E2E / E10), including AOT-artifact execution.
+
+use geofs::config::Config;
+use geofs::coordinator::{FeatureStore, OpenOptions};
+use geofs::query::pit::PitConfig;
+use geofs::sim::{ChurnWorkload, ChurnWorkloadConfig};
+use geofs::types::time::DAY;
+use geofs::types::FeatureWindow;
+
+fn open() -> (std::sync::Arc<FeatureStore>, ChurnWorkload) {
+    let fs = FeatureStore::open(Config::default_geo(), OpenOptions::default())
+        .expect("run `make artifacts` before cargo test");
+    let w = ChurnWorkload::install(
+        &fs,
+        ChurnWorkloadConfig { customers: 32, days: 8, seed: 3, ..Default::default() },
+    )
+    .unwrap();
+    (fs, w)
+}
+
+fn materialize_daily(fs: &FeatureStore, w: &ChurnWorkload, days: i64) {
+    for day in 1..=days {
+        fs.clock.set(day * DAY);
+        fs.materialize_tick(&w.txn_table).unwrap();
+        fs.materialize_tick(&w.interactions_table).unwrap();
+    }
+}
+
+#[test]
+fn full_pipeline_materialize_query_serve() {
+    let (fs, w) = open();
+    materialize_daily(&fs, &w, 8);
+
+    // Offline store has both tables, and coverage matches the ticks.
+    assert!(fs.offline.row_count(&w.txn_table) > 0);
+    assert!(fs.offline.row_count(&w.interactions_table) > 0);
+    assert!(fs.is_materialized(&w.txn_table, FeatureWindow::new(0, 8 * DAY)));
+    assert!(!fs.is_materialized(&w.txn_table, FeatureWindow::new(0, 9 * DAY)));
+
+    // Training frame resolves with full fill for active customers.
+    let spine = w.observation_spine(200);
+    let observations: Vec<(String, i64)> =
+        spine.iter().map(|(k, ts, _)| (k.clone(), *ts)).collect();
+    let frame = fs
+        .get_training_frame(
+            &w.principal,
+            None,
+            &observations,
+            &w.model_features(),
+            PitConfig::default(),
+            "eastus",
+        )
+        .unwrap();
+    assert_eq!(frame.rows.len(), 200);
+    assert!(frame.fill_rate() > 0.9, "fill rate {:.3}", frame.fill_rate());
+
+    // Online serving hits for every customer with any history.
+    let out = fs.get_online(&w.principal, &w.txn_table, "cust_00000", "eastus").unwrap();
+    assert!(out.record.is_some());
+    // The online record equals the offline Eq. 2 latest for the entity.
+    let latest = fs.offline.latest_per_entity(&w.txn_table);
+    let id = fs.interner.lookup("cust_00000").unwrap();
+    let off = latest.iter().find(|r| r.entity == id).unwrap();
+    assert_eq!(out.record.unwrap().version(), off.version());
+}
+
+#[test]
+fn incremental_equals_backfill() {
+    // The same history materialized (a) incrementally day-by-day and
+    // (b) as one backfill must produce identical offline feature values
+    // (creation timestamps differ; values must not).
+    let (fs_a, w_a) = open();
+    materialize_daily(&fs_a, &w_a, 8);
+
+    let (fs_b, w_b) = open();
+    fs_b.clock.set(8 * DAY);
+    fs_b.backfill(&w_b.txn_table, FeatureWindow::new(0, 8 * DAY)).unwrap();
+
+    let mut rows_a = fs_a.offline.scan(&w_a.txn_table, FeatureWindow::new(0, 9 * DAY));
+    let mut rows_b = fs_b.offline.scan(&w_b.txn_table, FeatureWindow::new(0, 9 * DAY));
+    // Interners are per-store; compare via resolved keys.
+    let key_a: std::collections::HashMap<_, _> = rows_a
+        .drain(..)
+        .map(|r| ((fs_a.interner.resolve(r.entity).unwrap(), r.event_ts), r.values))
+        .collect();
+    let key_b: std::collections::HashMap<_, _> = rows_b
+        .drain(..)
+        .map(|r| ((fs_b.interner.resolve(r.entity).unwrap(), r.event_ts), r.values))
+        .collect();
+    assert_eq!(key_a.len(), key_b.len());
+    for (k, va) in &key_a {
+        let vb = &key_b[k];
+        assert_eq!(va.len(), vb.len());
+        for (a, b) in va.iter().zip(vb.iter()) {
+            assert!((a - b).abs() <= 1e-3 + b.abs() * 1e-5, "{k:?}: {a} vs {b}");
+        }
+    }
+}
+
+#[test]
+fn online_offline_consistency_after_materialization() {
+    // Eq. 2: for every entity, online holds exactly the offline
+    // max(event_ts, creation_ts) record.
+    let (fs, w) = open();
+    materialize_daily(&fs, &w, 6);
+    let now = fs.clock.now();
+    for rec in fs.offline.latest_per_entity(&w.txn_table) {
+        let online = fs.online.get(&w.txn_table, rec.entity, now).unwrap();
+        assert_eq!(online.version(), rec.version());
+        assert_eq!(online.values, rec.values);
+    }
+}
+
+#[test]
+fn dsl_plan_used_for_registered_sets() {
+    // The churn feature sets must plan onto the optimized artifact, not
+    // the fallback (guards against silent plan regressions).
+    let (fs, _w) = open();
+    let specs = fs.feature_set_specs();
+    // Re-plan through a fresh materializer view: the plan rationale is
+    // surfaced via metrics-free API here — use dsl::plan_transform with
+    // the engine manifest.
+    let manifest = geofs::runtime::Manifest::load("artifacts").unwrap();
+    for spec in specs.values() {
+        let plan = geofs::dsl::plan_transform(
+            &spec.transform,
+            spec.granularity,
+            Some(&manifest),
+        )
+        .unwrap();
+        assert!(
+            matches!(plan.kind, geofs::dsl::PlanKind::Artifact(geofs::runtime::Variant::Dsl)),
+            "{} must use the optimized plan, got {:?}",
+            spec.name,
+            plan.kind
+        );
+    }
+}
+
+#[test]
+fn freshness_sla_and_catchup() {
+    let (fs, w) = open();
+    materialize_daily(&fs, &w, 4);
+    assert!(fs.table_freshness(&w.txn_table).unwrap().within_sla);
+
+    // Fall three days behind → SLA violation; one tick catches up.
+    fs.clock.set(7 * DAY);
+    assert!(!fs.table_freshness(&w.txn_table).unwrap().within_sla);
+    fs.materialize_tick(&w.txn_table).unwrap();
+    let f = fs.table_freshness(&w.txn_table).unwrap();
+    assert!(f.within_sla, "staleness after catchup: {}", f.staleness_secs);
+}
+
+#[test]
+fn not_materialized_vs_no_data_distinction() {
+    // §4.3: empty retrieval results must be attributable either to
+    // "window not materialized" or "no data in the window".
+    let (fs, w) = open();
+    materialize_daily(&fs, &w, 4);
+
+    // A never-materialized future window: gap reported.
+    let future = FeatureWindow::new(10 * DAY, 11 * DAY);
+    assert!(!fs.is_materialized(&w.txn_table, future));
+    assert_eq!(fs.scheduler.gaps(&w.txn_table, future), vec![future]);
+
+    // A materialized window with a ghost entity: materialized, no rows —
+    // i.e. genuinely no data.
+    let past = FeatureWindow::new(DAY, 2 * DAY);
+    assert!(fs.is_materialized(&w.txn_table, past));
+    let ghost = fs.get_online(&w.principal, &w.txn_table, "ghost_customer", "eastus").unwrap();
+    assert!(ghost.record.is_none());
+}

@@ -1,0 +1,247 @@
+//! Experiment E2 + coordinator invariants as property tests (in-tree
+//! `testkit::prop` framework — proptest is unavailable offline).
+//!
+//! Each property runs hundreds of seeded random cases with shrinking.
+
+use std::sync::Arc;
+
+use geofs::offline_store::OfflineStore;
+use geofs::online_store::OnlineStore;
+use geofs::query::pit::{pit_lookup, Observation, PitConfig, PitIndex};
+use geofs::scheduler::WindowTracker;
+use geofs::testkit::prop::{forall, Gen};
+use geofs::types::{FeatureRecord, FeatureWindow};
+use geofs::util::json::Json;
+use geofs::util::rng::Rng;
+
+/// Compact record encoding for generation + shrinking:
+/// (entity, event_ts, creation_delta>0, value-salt).
+type R = (u64, i64, i64, i32);
+
+fn to_rec(r: &R) -> FeatureRecord {
+    // Value is a pure function of the uniqueness key: two generated
+    // records with identical keys must carry identical values (as real
+    // deterministic materialization guarantees), otherwise "first write
+    // wins on no-op" makes delivery order observable by construction.
+    let value = (r.0 as i64 * 31 + r.1 * 7 + r.2) as f32;
+    FeatureRecord::new(r.0, r.1, r.1 + 1 + r.2.abs(), vec![value])
+}
+
+fn gen_records(max_len: usize) -> Gen<Vec<R>> {
+    Gen::new(move |rng: &mut Rng| {
+        let n = rng.below(max_len as u64 + 1) as usize;
+        (0..n)
+            .map(|_| {
+                (
+                    rng.below(6),
+                    rng.range(0, 500),
+                    rng.range(0, 300),
+                    rng.range(-100, 100) as i32,
+                )
+            })
+            .collect()
+    })
+}
+
+#[test]
+fn prop_online_merge_order_independent() {
+    // Alg 2 online: the converged per-entity state is independent of
+    // delivery order and of duplicate delivery.
+    forall("online-order-independent", 300, &gen_records(24), |rs| {
+        let canonical = {
+            let s = OnlineStore::new(2);
+            for r in rs {
+                s.merge("t", &[to_rec(r)], 0);
+            }
+            s.dump_table("t", 1_000_000)
+        };
+        // Shuffled + duplicated delivery.
+        let mut rng = Rng::new(rs.len() as u64 + 1);
+        let mut shuffled: Vec<R> = rs.clone();
+        shuffled.extend(rs.iter().cloned()); // duplicates
+        rng.shuffle(&mut shuffled);
+        let s = OnlineStore::new(4);
+        for r in &shuffled {
+            s.merge("t", &[to_rec(r)], 0);
+        }
+        let got = s.dump_table("t", 1_000_000);
+        if got == canonical {
+            Ok(())
+        } else {
+            Err(format!("diverged: {got:?} vs {canonical:?}"))
+        }
+    });
+}
+
+#[test]
+fn prop_online_state_is_eq2_of_offline() {
+    // Merging the same stream into both stores: online equals the
+    // offline max(event_ts, creation_ts) per entity.
+    forall("online-is-eq2", 300, &gen_records(24), |rs| {
+        let off = OfflineStore::new();
+        let on = OnlineStore::new(2);
+        for r in rs {
+            let rec = to_rec(r);
+            off.merge("t", std::slice::from_ref(&rec));
+            on.merge("t", &[rec], 0);
+        }
+        for latest in off.latest_per_entity("t") {
+            match on.get("t", latest.entity, 1_000_000) {
+                Some(got) if got.version() == latest.version() => {}
+                other => return Err(format!("entity {}: {other:?} vs {latest:?}", latest.entity)),
+            }
+        }
+        Ok(())
+    });
+}
+
+#[test]
+fn prop_offline_merge_idempotent_and_lossless() {
+    forall("offline-idempotent", 300, &gen_records(24), |rs| {
+        let off = OfflineStore::new();
+        let recs: Vec<FeatureRecord> = rs.iter().map(to_rec).collect();
+        off.merge("t", &recs);
+        let count1 = off.row_count("t");
+        off.merge("t", &recs); // replay the whole job
+        if off.row_count("t") != count1 {
+            return Err("replay changed row count".into());
+        }
+        // Every unique key present.
+        let unique: std::collections::HashSet<_> = recs.iter().map(|r| r.unique_key()).collect();
+        if unique.len() as u64 != count1 {
+            return Err(format!("{} unique vs {count1} stored", unique.len()));
+        }
+        Ok(())
+    });
+}
+
+#[test]
+fn prop_pit_index_matches_oracle() {
+    let gen = Gen::new(|rng: &mut Rng| {
+        let n = rng.below(30) as usize;
+        let records: Vec<R> = (0..n)
+            .map(|_| (rng.below(4), rng.range(0, 300), rng.range(0, 200), 0))
+            .collect();
+        records
+    });
+    forall("pit-index-oracle", 300, &gen, |rs| {
+        let recs: Vec<FeatureRecord> = rs.iter().map(to_rec).collect();
+        let idx = PitIndex::build(recs.clone());
+        let mut rng = Rng::new(rs.len() as u64 * 31 + 7);
+        for _ in 0..50 {
+            let obs = Observation { entity: rng.below(5), ts: rng.range(0, 700) };
+            let cfg = PitConfig {
+                availability_slack: rng.range(0, 50),
+                max_staleness: if rng.bool(0.5) { 0 } else { rng.range(1, 400) },
+            };
+            let fast = idx.lookup(obs, cfg).cloned();
+            let slow = pit_lookup(&recs, obs, cfg);
+            if fast != slow {
+                return Err(format!("obs {obs:?} cfg {cfg:?}: {fast:?} vs {slow:?}"));
+            }
+        }
+        Ok(())
+    });
+}
+
+#[test]
+fn prop_tracker_gaps_partition_window() {
+    // gaps(w) ∪ covered-parts of w == w exactly, with no overlap.
+    let gen = Gen::new(|rng: &mut Rng| {
+        let n = rng.below(12) as usize;
+        (0..n)
+            .map(|_| {
+                let a = rng.range(0, 200);
+                let b = a + rng.range(1, 50);
+                (a, b)
+            })
+            .collect::<Vec<(i64, i64)>>()
+    });
+    forall("tracker-gap-partition", 300, &gen, |windows| {
+        let mut t = WindowTracker::new();
+        for &(a, b) in windows {
+            if let Ok(id) = t.try_claim(FeatureWindow::new(a, b)) {
+                t.complete(id).map_err(|e| e.to_string())?;
+            }
+        }
+        let probe = FeatureWindow::new(-20, 260);
+        let gaps = t.gaps(probe);
+        // Gaps are disjoint, sorted, inside the probe.
+        for pair in gaps.windows(2) {
+            if pair[0].end > pair[1].start {
+                return Err(format!("gaps overlap: {pair:?}"));
+            }
+        }
+        let gap_len: i64 = gaps.iter().map(|g| g.len()).sum();
+        let covered: i64 = t
+            .coverage()
+            .iter()
+            .filter_map(|c| c.intersect(&probe))
+            .map(|c| c.len())
+            .sum();
+        if gap_len + covered != probe.len() {
+            return Err(format!(
+                "partition broken: gaps {gap_len} + covered {covered} != {}",
+                probe.len()
+            ));
+        }
+        // Every gap is genuinely unmaterialized.
+        for g in &gaps {
+            if t.is_materialized(g) {
+                return Err(format!("gap {g} claims materialized"));
+            }
+        }
+        Ok(())
+    });
+}
+
+#[test]
+fn prop_online_scale_preserves_contents() {
+    forall("scale-preserves", 120, &gen_records(40), |rs| {
+        let s = OnlineStore::new(3);
+        for r in rs {
+            s.merge("t", &[to_rec(r)], 0);
+        }
+        let before = s.dump_table("t", 1_000_000);
+        for shards in [1usize, 7, 16, 2] {
+            s.scale_to(shards).map_err(|e| e.to_string())?;
+            let after = s.dump_table("t", 1_000_000);
+            if after != before {
+                return Err(format!("resharding to {shards} changed contents"));
+            }
+        }
+        Ok(())
+    });
+}
+
+#[test]
+fn prop_json_roundtrip() {
+    // Generator for arbitrary JSON trees (depth-bounded).
+    fn gen_json(rng: &mut Rng, depth: usize) -> Json {
+        match if depth == 0 { rng.below(4) } else { rng.below(6) } {
+            0 => Json::Null,
+            1 => Json::Bool(rng.bool(0.5)),
+            2 => Json::Num((rng.range(-1_000_000, 1_000_000) as f64) / 8.0),
+            3 => {
+                let n = rng.below(12);
+                Json::Str((0..n).map(|_| *rng.pick(&['a', '"', '\\', 'é', '\n', 'z'])).collect())
+            }
+            4 => Json::Arr((0..rng.below(5)).map(|_| gen_json(rng, depth - 1)).collect()),
+            _ => Json::Obj(
+                (0..rng.below(5))
+                    .map(|i| (format!("k{i}"), gen_json(rng, depth - 1)))
+                    .collect(),
+            ),
+        }
+    }
+    let gen = Gen::new(|rng: &mut Rng| vec![gen_json(rng, 3)]);
+    forall("json-roundtrip", 400, &gen, |v| {
+        let j = &v[0];
+        let text = j.to_string();
+        match Json::parse(&text) {
+            Ok(back) if back == *j => Ok(()),
+            Ok(back) => Err(format!("{j} reparsed as {back}")),
+            Err(e) => Err(format!("{j} → '{text}' failed: {e}")),
+        }
+    });
+}
