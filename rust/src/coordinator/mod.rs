@@ -33,7 +33,7 @@ use crate::scheduler::{JobOutcome, SchedulePolicy, Scheduler};
 use crate::serving::router::{RouteTable, ServingRouter};
 use crate::serving::service::OnlineServing;
 use crate::source::SourceConnector;
-use crate::types::{EntityInterner, FeatureWindow, FsError, Result, Timestamp};
+use crate::types::{EntityId, EntityInterner, FeatureWindow, FsError, Result, Timestamp};
 use crate::util::Clock;
 
 /// Options controlling how the store is opened.
@@ -346,6 +346,52 @@ impl FeatureStore {
         self.serving.lookup(table, entity, consumer_region, self.clock.now())
     }
 
+    /// Batched online lookup: RBAC checked once, keys interned once,
+    /// then one routed batch through the serving layer (one routing
+    /// decision and one WAN round trip for the whole key set — the
+    /// §3.1.4 hot-path amortization). Results are in input order;
+    /// unknown entity keys are clean local misses.
+    pub fn get_online_many(
+        &self,
+        principal: &Principal,
+        table: &str,
+        entity_keys: &[&str],
+        consumer_region: &str,
+    ) -> Result<Vec<crate::geo::access::RoutedLookup>> {
+        use crate::geo::access::{AccessMechanism, RoutedLookup};
+        let store = self.store_name()?;
+        self.rbac.check(principal, &store, Action::ReadFeatures, self.clock.now())?;
+        let now = self.clock.now();
+        let mut out: Vec<RoutedLookup> = entity_keys
+            .iter()
+            .map(|_| RoutedLookup {
+                record: None,
+                mechanism: AccessMechanism::Local,
+                latency_us: self.config.local_latency_us,
+                staleness_secs: 0,
+            })
+            .collect();
+        let known: Vec<(usize, EntityId)> = entity_keys
+            .iter()
+            .enumerate()
+            .filter_map(|(i, k)| self.interner.lookup(k).map(|e| (i, e)))
+            .collect();
+        if known.is_empty() {
+            return Ok(out);
+        }
+        let entities: Vec<EntityId> = known.iter().map(|&(_, e)| e).collect();
+        let batch = self.serving.lookup_batch(table, &entities, consumer_region, now)?;
+        for (&(i, _), record) in known.iter().zip(batch.records) {
+            out[i] = RoutedLookup {
+                record,
+                mechanism: batch.mechanism,
+                latency_us: batch.latency_us,
+                staleness_secs: batch.staleness_secs,
+            };
+        }
+        Ok(out)
+    }
+
     /// Offline PIT-correct training frame (§4.4), with RBAC + lineage
     /// recording for the requesting model.
     #[allow(clippy::too_many_arguments)]
@@ -480,6 +526,30 @@ mod tests {
         assert!(miss.record.is_none());
         // RBAC enforced.
         assert!(fs.get_online(&Principal("mallory".into()), &table, "x", "local").is_err());
+    }
+
+    #[test]
+    fn batched_online_read_matches_point_reads() {
+        let fs = open_local();
+        let table = register(&fs, 4);
+        fs.clock.set(2 * DAY);
+        fs.materialize_tick(&table).unwrap();
+        let alice = Principal("alice".into());
+        let keys = ["cust_00000", "ghost", "cust_00001", "cust_00002"];
+        let batch = fs.get_online_many(&alice, &table, &keys, "local").unwrap();
+        assert_eq!(batch.len(), keys.len());
+        for (i, key) in keys.iter().enumerate() {
+            let point = fs.get_online(&alice, &table, key, "local").unwrap();
+            assert_eq!(
+                batch[i].record.as_ref().map(|r| r.unique_key()),
+                point.record.as_ref().map(|r| r.unique_key()),
+                "key {key}"
+            );
+        }
+        // RBAC enforced on the batched path too.
+        assert!(fs
+            .get_online_many(&Principal("mallory".into()), &table, &keys, "local")
+            .is_err());
     }
 
     #[test]

@@ -94,6 +94,11 @@ impl ThreadPool {
 impl Drop for ThreadPool {
     fn drop(&mut self) {
         *self.shared.shutdown.lock().unwrap() = true;
+        // Acquire the queue lock before notifying: a worker that observed
+        // shutdown=false does so while holding the queue lock, so by the
+        // time we get it here that worker is parked in `cv.wait` (which
+        // released the lock) and the notification cannot be lost.
+        drop(self.shared.queue.lock().unwrap());
         self.shared.cv.notify_all();
         for h in self.workers.drain(..) {
             let _ = h.join();

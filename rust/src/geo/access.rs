@@ -37,6 +37,20 @@ pub struct RoutedLookup {
     pub staleness_secs: i64,
 }
 
+/// Result of one routed *batched* lookup: many keys, one routing
+/// decision, and — crucially — one WAN round trip for the whole batch.
+#[derive(Debug, Clone)]
+pub struct RoutedBatch {
+    /// Per-entity results, in input order.
+    pub records: Vec<Option<FeatureRecord>>,
+    pub mechanism: AccessMechanism,
+    /// Simulated end-to-end latency of the whole batch (one WAN round
+    /// trip + one batched store read).
+    pub latency_us: u64,
+    /// Replica staleness at read time (0 for local/cross-region).
+    pub staleness_secs: i64,
+}
+
 /// Router for online reads against a store homed in `home_region`.
 pub struct CrossRegionAccess {
     pub topology: Arc<GeoTopology>,
@@ -65,6 +79,43 @@ impl CrossRegionAccess {
         AccessMechanism::CrossRegion
     }
 
+    /// Resolve `consumer_region` to the store to read from, the
+    /// simulated wire round-trip cost, and the staleness bound — the
+    /// single source of routing truth shared by the point and batched
+    /// lookups.
+    fn route_target(
+        &self,
+        consumer_region: &str,
+        now: Timestamp,
+    ) -> Result<(AccessMechanism, &Arc<OnlineStore>, u64, i64)> {
+        let mechanism = self.route(consumer_region);
+        Ok(match mechanism {
+            AccessMechanism::Local => (
+                mechanism,
+                &self.home_store,
+                self.topology.rtt_us(consumer_region, consumer_region)?,
+                0,
+            ),
+            AccessMechanism::CrossRegion => (
+                mechanism,
+                &self.home_store,
+                // Pay the WAN round trip to the home region.
+                self.topology.rtt_us(consumer_region, &self.home_region)?,
+                0,
+            ),
+            AccessMechanism::Replica => {
+                let rep = self.replicator.as_ref().expect("routed to replica");
+                let store = rep.replica(consumer_region).expect("replica exists");
+                (
+                    mechanism,
+                    store,
+                    self.topology.rtt_us(consumer_region, consumer_region)?,
+                    rep.staleness_secs(consumer_region, now),
+                )
+            }
+        })
+    }
+
     /// Routed lookup with simulated latency accounting.
     pub fn lookup(
         &self,
@@ -73,41 +124,31 @@ impl CrossRegionAccess {
         entity: EntityId,
         now: Timestamp,
     ) -> Result<RoutedLookup> {
-        let mechanism = self.route(consumer_region);
-        match mechanism {
-            AccessMechanism::Local => {
-                let t0 = std::time::Instant::now();
-                let record = self.home_store.get(table, entity, now);
-                let compute = t0.elapsed().as_micros() as u64;
-                Ok(RoutedLookup {
-                    record,
-                    mechanism,
-                    latency_us: self.topology.rtt_us(consumer_region, consumer_region)? + compute,
-                    staleness_secs: 0,
-                })
-            }
-            AccessMechanism::CrossRegion => {
-                // Pay the WAN round trip to the home region.
-                let wan = self.topology.rtt_us(consumer_region, &self.home_region)?;
-                let t0 = std::time::Instant::now();
-                let record = self.home_store.get(table, entity, now);
-                let compute = t0.elapsed().as_micros() as u64;
-                Ok(RoutedLookup { record, mechanism, latency_us: wan + compute, staleness_secs: 0 })
-            }
-            AccessMechanism::Replica => {
-                let rep = self.replicator.as_ref().expect("routed to replica");
-                let store = rep.replica(consumer_region).expect("replica exists");
-                let t0 = std::time::Instant::now();
-                let record = store.get(table, entity, now);
-                let compute = t0.elapsed().as_micros() as u64;
-                Ok(RoutedLookup {
-                    record,
-                    mechanism,
-                    latency_us: self.topology.rtt_us(consumer_region, consumer_region)? + compute,
-                    staleness_secs: rep.staleness_secs(consumer_region, now),
-                })
-            }
-        }
+        let (mechanism, store, wire_us, staleness_secs) =
+            self.route_target(consumer_region, now)?;
+        let t0 = std::time::Instant::now();
+        let record = store.get(table, entity, now);
+        let compute = t0.elapsed().as_micros() as u64;
+        Ok(RoutedLookup { record, mechanism, latency_us: wire_us + compute, staleness_secs })
+    }
+
+    /// Routed **batched** lookup: route once, then serve every entity
+    /// through one `get_many` against the chosen store. A cross-region
+    /// batch pays the WAN round trip once instead of once per key —
+    /// this is the serving batcher's remote-read amortization.
+    pub fn lookup_many(
+        &self,
+        consumer_region: &str,
+        table: &str,
+        entities: &[EntityId],
+        now: Timestamp,
+    ) -> Result<RoutedBatch> {
+        let (mechanism, store, wire_us, staleness_secs) =
+            self.route_target(consumer_region, now)?;
+        let t0 = std::time::Instant::now();
+        let records = store.get_many(table, entities, now);
+        let compute = t0.elapsed().as_micros() as u64;
+        Ok(RoutedBatch { records, mechanism, latency_us: wire_us + compute, staleness_secs })
     }
 }
 
@@ -199,5 +240,46 @@ mod tests {
         let (a, _) = setup(false, false);
         a.topology.set_down("eastus", true);
         assert!(a.lookup("westeurope", "t", 1, 0).is_err());
+    }
+
+    #[test]
+    fn batched_lookup_matches_point_lookups() {
+        let (a, home) = setup(false, true);
+        home.merge("t", &[rec(2, 100, 150, 7.0)], 150);
+        for region in ["eastus", "westeurope", "southeastasia"] {
+            let batch = a.lookup_many(region, "t", &[1, 2, 9], 1_000).unwrap();
+            assert_eq!(batch.records.len(), 3);
+            for (i, &e) in [1u64, 2, 9].iter().enumerate() {
+                let point = a.lookup(region, "t", e, 1_000).unwrap();
+                assert_eq!(batch.mechanism, point.mechanism, "{region}");
+                assert_eq!(
+                    batch.records[i].as_ref().map(|r| r.entity),
+                    point.record.as_ref().map(|r| r.entity),
+                    "{region} entity {e}"
+                );
+            }
+        }
+    }
+
+    #[test]
+    fn batched_cross_region_pays_one_rtt() {
+        let (a, _) = setup(false, false);
+        // 32 keys from westeurope: one 80ms RTT for the whole batch, not 32.
+        let keys: Vec<u64> = (0..32).collect();
+        let batch = a.lookup_many("westeurope", "t", &keys, 1_000).unwrap();
+        assert_eq!(batch.mechanism, AccessMechanism::CrossRegion);
+        assert!(batch.latency_us >= 80_000, "must include one RTT: {}", batch.latency_us);
+        assert!(
+            batch.latency_us < 2 * 80_000,
+            "batch must not pay per-key RTTs: {}",
+            batch.latency_us
+        );
+    }
+
+    #[test]
+    fn batched_lookup_respects_outage() {
+        let (a, _) = setup(false, false);
+        a.topology.set_down("eastus", true);
+        assert!(a.lookup_many("westeurope", "t", &[1], 0).is_err());
     }
 }

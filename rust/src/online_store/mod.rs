@@ -9,12 +9,41 @@
 //! * equal event_ts and new creation_ts > existing → override
 //! * otherwise → no-op
 //!
-//! Sharded like a Redis cluster; `scale_to` rebalances shards online
-//! (§3.1.3 "scale up or down the managed resources like Redis").
+//! # Concurrency design (the serving hot path)
+//!
+//! The store is an immutable-snapshot + sharded-lock design, built so
+//! point reads never acquire a store-global lock:
+//!
+//! * All shard state lives in one [`ShardSet`] behind an `Arc`. Readers
+//!   obtain the current `Arc` via a **generation-stamped thread-local
+//!   cache**: a `get`/`get_many` does one atomic generation load and (on
+//!   the fast path) zero shared-lock acquisitions before touching its
+//!   single target shard's `RwLock`. Only when the generation changed
+//!   (a `scale_to`/`set_ttl` swapped the set — rare) does a reader take
+//!   the small `current` mutex once to refresh its cached `Arc`.
+//! * Writers (`merge`, `evict_expired`) share an `admin` read lock —
+//!   they run concurrently with each other and with all readers, taking
+//!   only per-shard write locks. `scale_to`/`set_ttl` take the `admin`
+//!   write lock, build a **new** `ShardSet` (rehash/ttl-update), and
+//!   atomically publish it; readers still holding the old `Arc` keep
+//!   reading the pre-swap snapshot (linearizable: the scale is a
+//!   data-preserving no-op), then pick up the new set on their next
+//!   operation via the generation check.
+//! * TTL sweep (`evict_expired`) locks one shard at a time, so readers
+//!   of other shards are never blocked; expired entries are filtered at
+//!   read time regardless, so a sweep is pure space reclamation.
+//! * Shard maps are nested `table → entity → entry`, so lookups never
+//!   allocate a `(String, EntityId)` key; `get_many` groups keys by
+//!   shard and takes each shard lock exactly once per batch.
+//!
+//! `hits`/`misses` stay plain atomic counters. Sharded like a Redis
+//! cluster; `scale_to` rebalances shards online (§3.1.3 "scale up or
+//! down the managed resources like Redis") without blocking readers.
 
+use std::cell::RefCell;
 use std::collections::HashMap;
 use std::sync::atomic::{AtomicU64, Ordering};
-use std::sync::RwLock;
+use std::sync::{Arc, Mutex, RwLock, Weak};
 
 use crate::offline_store::MergeStats;
 use crate::types::{EntityId, FeatureRecord, FsError, Result, Timestamp};
@@ -29,14 +58,74 @@ struct Entry {
     written_at: Timestamp,
 }
 
-type ShardMap = HashMap<(String, EntityId), Entry>;
+/// table name → entity → entry. Nested so the read path can look up
+/// with `&str` (no per-read key allocation).
+type TableMap = HashMap<String, HashMap<EntityId, Entry>>;
 
-/// Sharded in-process KV store.
+/// One shard: an independently locked slice of the key space.
+type Shard = RwLock<TableMap>;
+
+/// The immutable-topology snapshot readers operate on. The `shards`
+/// vector and `ttls` map never change inside a published `ShardSet`;
+/// only shard *contents* (behind per-shard locks) do.
+#[derive(Debug)]
+struct ShardSet {
+    /// Monotonic publish counter; compared against the store's atomic
+    /// generation by the thread-local snapshot cache.
+    generation: u64,
+    /// Shared across TTL-only swaps (`set_ttl` republishes the same
+    /// shard vector with a new TTL table).
+    shards: Arc<Vec<Shard>>,
+    /// TTL per table (seconds on the processing timeline); absent = ∞.
+    ttls: HashMap<String, i64>,
+}
+
+impl ShardSet {
+    fn ttl_of(&self, table: &str) -> i64 {
+        self.ttls.get(table).copied().unwrap_or(i64::MAX)
+    }
+}
+
+fn live(e: &Entry, ttl: i64, now: Timestamp) -> bool {
+    ttl == i64::MAX || now - e.written_at < ttl
+}
+
+/// splitmix-style avalanche so sequential ids spread across shards.
+fn shard_of(entity: EntityId, n: usize) -> usize {
+    let mut x = entity.wrapping_add(0x9e3779b97f4a7c15);
+    x = (x ^ (x >> 30)).wrapping_mul(0xbf58476d1ce4e5b9);
+    x = (x ^ (x >> 27)).wrapping_mul(0x94d049bb133111eb);
+    (x ^ (x >> 31)) as usize % n
+}
+
+/// Process-unique store ids for the thread-local snapshot cache.
+static NEXT_STORE_ID: AtomicU64 = AtomicU64::new(0);
+
+thread_local! {
+    /// Per-thread `(store_id, snapshot)` cache. Entries are `Weak` so
+    /// an idle thread never pins a dropped store or a superseded
+    /// (pre-scale) shard set — once the store publishes a new set, the
+    /// old one is freed as soon as in-flight readers finish, not when
+    /// every thread happens to touch the store again. Bounded FIFO.
+    static SNAPSHOT_CACHE: RefCell<Vec<(u64, Weak<ShardSet>)>> = const { RefCell::new(Vec::new()) };
+}
+
+const SNAPSHOT_CACHE_CAP: usize = 8;
+
+/// Sharded in-process KV store with lock-free snapshot reads.
 #[derive(Debug)]
 pub struct OnlineStore {
-    shards: RwLock<Vec<RwLock<ShardMap>>>,
-    /// TTL per table (seconds on the processing timeline); default ∞.
-    ttls: RwLock<HashMap<String, i64>>,
+    store_id: u64,
+    /// Generation of the currently published [`ShardSet`]; bumped with
+    /// `Release` on every publish, read with `Acquire` by readers.
+    generation: AtomicU64,
+    /// Slow-path source of truth: held only long enough to clone/swap
+    /// the `Arc` — never across a map access or a rehash.
+    current: Mutex<Arc<ShardSet>>,
+    /// Writer/topology coordination: `merge`/`evict_expired` take read
+    /// (concurrent), `scale_to`/`set_ttl` take write (exclusive), and
+    /// the read path takes nothing.
+    admin: RwLock<()>,
     pub hits: AtomicU64,
     pub misses: AtomicU64,
 }
@@ -50,69 +139,151 @@ impl Default for OnlineStore {
 impl OnlineStore {
     pub fn new(shards: usize) -> Self {
         assert!(shards > 0);
+        let set = ShardSet {
+            generation: 0,
+            shards: Arc::new((0..shards).map(|_| RwLock::new(HashMap::new())).collect()),
+            ttls: HashMap::new(),
+        };
         OnlineStore {
-            shards: RwLock::new((0..shards).map(|_| RwLock::new(HashMap::new())).collect()),
-            ttls: RwLock::new(HashMap::new()),
+            store_id: NEXT_STORE_ID.fetch_add(1, Ordering::Relaxed),
+            generation: AtomicU64::new(0),
+            current: Mutex::new(Arc::new(set)),
+            admin: RwLock::new(()),
             hits: AtomicU64::new(0),
             misses: AtomicU64::new(0),
         }
     }
 
+    /// Current snapshot. Fast path: one atomic load + thread-local hit.
+    /// Slow path (first use on this thread, or after a topology/TTL
+    /// publish): one brief `current` mutex lock to clone the `Arc`.
+    fn snapshot(&self) -> Arc<ShardSet> {
+        let gen = self.generation.load(Ordering::Acquire);
+        let hit = SNAPSHOT_CACHE.with(|c| {
+            c.borrow()
+                .iter()
+                .find(|(id, _)| *id == self.store_id)
+                .and_then(|(_, w)| w.upgrade())
+                .filter(|s| s.generation == gen)
+        });
+        if let Some(s) = hit {
+            return s;
+        }
+        let fresh = self.current.lock().unwrap().clone();
+        SNAPSHOT_CACHE.with(|c| {
+            let mut c = c.borrow_mut();
+            c.retain(|(id, _)| *id != self.store_id);
+            if c.len() >= SNAPSHOT_CACHE_CAP {
+                c.remove(0);
+            }
+            c.push((self.store_id, Arc::downgrade(&fresh)));
+        });
+        fresh
+    }
+
+    /// Publish a new shard set. Caller must hold the `admin` write lock.
+    fn publish(&self, set: ShardSet) {
+        let gen = set.generation;
+        *self.current.lock().unwrap() = Arc::new(set);
+        self.generation.store(gen, Ordering::Release);
+    }
+
     pub fn shard_count(&self) -> usize {
-        self.shards.read().unwrap().len()
+        self.snapshot().shards.len()
     }
 
+    /// Set a table's TTL. Publishes a new snapshot sharing the same
+    /// shard vector (no data is touched or copied).
     pub fn set_ttl(&self, table: &str, ttl_secs: i64) {
-        self.ttls.write().unwrap().insert(table.to_string(), ttl_secs);
-    }
-
-    fn shard_of(&self, entity: EntityId, n: usize) -> usize {
-        // splitmix-style avalanche so sequential ids spread.
-        let mut x = entity.wrapping_add(0x9e3779b97f4a7c15);
-        x = (x ^ (x >> 30)).wrapping_mul(0xbf58476d1ce4e5b9);
-        x = (x ^ (x >> 27)).wrapping_mul(0x94d049bb133111eb);
-        (x ^ (x >> 31)) as usize % n
+        let _topology = self.admin.write().unwrap();
+        let old = self.current.lock().unwrap().clone();
+        let mut ttls = old.ttls.clone();
+        ttls.insert(table.to_string(), ttl_secs);
+        self.publish(ShardSet {
+            generation: old.generation + 1,
+            shards: old.shards.clone(),
+            ttls,
+        });
     }
 
     /// Algorithm 2 (online branch). `now` is the processing-timeline
-    /// write moment (drives TTL).
+    /// write moment (drives TTL). Records are grouped by shard so each
+    /// shard's write lock is taken once per batch.
     pub fn merge(&self, table: &str, records: &[FeatureRecord], now: Timestamp) -> MergeStats {
         let mut stats = MergeStats::default();
-        let shards = self.shards.read().unwrap();
-        let n = shards.len();
-        for r in records {
-            let key = (table.to_string(), r.entity);
-            let mut shard = shards[self.shard_of(r.entity, n)].write().unwrap();
-            match shard.get(&key) {
-                None => {
-                    shard.insert(key, Entry { record: r.clone(), written_at: now });
-                    stats.inserted += 1;
-                }
-                Some(e) if r.version() > e.record.version() => {
-                    shard.insert(key, Entry { record: r.clone(), written_at: now });
-                    stats.inserted += 1;
-                }
-                Some(_) => stats.skipped += 1,
+        if records.is_empty() {
+            return stats;
+        }
+        let _writers = self.admin.read().unwrap();
+        let set = self.snapshot();
+        let n = set.shards.len();
+        if let [r] = records {
+            // Point-upsert fast path: no grouping allocation.
+            let mut shard = set.shards[shard_of(r.entity, n)].write().unwrap();
+            let tm = Self::table_map(&mut shard, table);
+            Self::apply(tm, r, now, &mut stats);
+            return stats;
+        }
+        let mut by_shard: Vec<Vec<usize>> = vec![Vec::new(); n];
+        for (i, r) in records.iter().enumerate() {
+            by_shard[shard_of(r.entity, n)].push(i);
+        }
+        for (s, idxs) in by_shard.iter().enumerate() {
+            if idxs.is_empty() {
+                continue;
+            }
+            let mut shard = set.shards[s].write().unwrap();
+            let tm = Self::table_map(&mut shard, table);
+            for &i in idxs {
+                Self::apply(tm, &records[i], now, &mut stats);
             }
         }
         stats
     }
 
+    /// The table's entity map in `shard`, created on first write. Keyed
+    /// by `&str` first so the steady-state write path (table already
+    /// present) never allocates the table key — which is why the
+    /// `entry` API (and clippy's map_entry shape) is deliberately
+    /// avoided here.
+    #[allow(clippy::map_entry)]
+    fn table_map<'a>(shard: &'a mut TableMap, table: &str) -> &'a mut HashMap<EntityId, Entry> {
+        if !shard.contains_key(table) {
+            shard.insert(table.to_string(), HashMap::new());
+        }
+        shard.get_mut(table).expect("just ensured present")
+    }
+
+    fn apply(
+        tm: &mut HashMap<EntityId, Entry>,
+        r: &FeatureRecord,
+        now: Timestamp,
+        stats: &mut MergeStats,
+    ) {
+        match tm.get(&r.entity) {
+            Some(e) if r.version() <= e.record.version() => stats.skipped += 1,
+            _ => {
+                tm.insert(r.entity, Entry { record: r.clone(), written_at: now });
+                stats.inserted += 1;
+            }
+        }
+    }
+
     /// Low-latency point lookup. Returns `None` for absent or TTL-expired
     /// entries — the caller distinguishes "not materialized" vs "no data"
-    /// through the scheduler's data-state (§4.3).
+    /// through the scheduler's data-state (§4.3). Acquires no
+    /// store-global lock: one atomic load + one shard read lock.
     pub fn get(&self, table: &str, entity: EntityId, now: Timestamp) -> Option<FeatureRecord> {
-        let shards = self.shards.read().unwrap();
-        let n = shards.len();
-        let shard = shards[self.shard_of(entity, n)].read().unwrap();
-        let out = shard.get(&(table.to_string(), entity)).and_then(|e| {
-            let ttl = self.ttls.read().unwrap().get(table).copied().unwrap_or(i64::MAX);
-            if ttl != i64::MAX && now - e.written_at >= ttl {
-                None // expired
-            } else {
-                Some(e.record.clone())
-            }
-        });
+        let set = self.snapshot();
+        let ttl = set.ttl_of(table);
+        let out = {
+            let shard = set.shards[shard_of(entity, set.shards.len())].read().unwrap();
+            shard
+                .get(table)
+                .and_then(|tm| tm.get(&entity))
+                .filter(|e| live(e, ttl, now))
+                .map(|e| e.record.clone())
+        };
         match &out {
             Some(_) => self.hits.fetch_add(1, Ordering::Relaxed),
             None => self.misses.fetch_add(1, Ordering::Relaxed),
@@ -120,27 +291,63 @@ impl OnlineStore {
         out
     }
 
-    /// Batched lookup (the serving batcher's unit of work).
+    /// Batched lookup (the serving batcher's unit of work): keys are
+    /// grouped by shard and each shard lock is taken exactly once, with
+    /// one TTL resolution for the whole batch. Result order matches the
+    /// input; `get_many(t, ks)[i] == get(t, ks[i])` for all `i`.
     pub fn get_many(
         &self,
         table: &str,
         entities: &[EntityId],
         now: Timestamp,
     ) -> Vec<Option<FeatureRecord>> {
-        entities.iter().map(|&e| self.get(table, e, now)).collect()
+        if entities.is_empty() {
+            return Vec::new();
+        }
+        let set = self.snapshot();
+        let n = set.shards.len();
+        let ttl = set.ttl_of(table);
+        let mut out: Vec<Option<FeatureRecord>> = vec![None; entities.len()];
+        let mut by_shard: Vec<Vec<usize>> = vec![Vec::new(); n];
+        for (i, &e) in entities.iter().enumerate() {
+            by_shard[shard_of(e, n)].push(i);
+        }
+        let (mut hits, mut misses) = (0u64, 0u64);
+        for (s, idxs) in by_shard.iter().enumerate() {
+            if idxs.is_empty() {
+                continue;
+            }
+            let shard = set.shards[s].read().unwrap();
+            match shard.get(table) {
+                None => misses += idxs.len() as u64,
+                Some(tm) => {
+                    for &i in idxs {
+                        match tm.get(&entities[i]).filter(|e| live(e, ttl, now)) {
+                            Some(e) => {
+                                out[i] = Some(e.record.clone());
+                                hits += 1;
+                            }
+                            None => misses += 1,
+                        }
+                    }
+                }
+            }
+        }
+        self.hits.fetch_add(hits, Ordering::Relaxed);
+        self.misses.fetch_add(misses, Ordering::Relaxed);
+        out
     }
 
     /// Everything currently live in a table — the online→offline
     /// bootstrap read (§4.5.5).
     pub fn dump_table(&self, table: &str, now: Timestamp) -> Vec<FeatureRecord> {
-        let ttl = self.ttls.read().unwrap().get(table).copied().unwrap_or(i64::MAX);
-        let shards = self.shards.read().unwrap();
+        let set = self.snapshot();
+        let ttl = set.ttl_of(table);
         let mut out = Vec::new();
-        for s in shards.iter() {
-            for ((t, _), e) in s.read().unwrap().iter() {
-                if t == table && (ttl == i64::MAX || now - e.written_at < ttl) {
-                    out.push(e.record.clone());
-                }
+        for s in set.shards.iter() {
+            let shard = s.read().unwrap();
+            if let Some(tm) = shard.get(table) {
+                out.extend(tm.values().filter(|e| live(e, ttl, now)).map(|e| e.record.clone()));
             }
         }
         out.sort_by_key(|r| r.entity);
@@ -148,48 +355,82 @@ impl OnlineStore {
     }
 
     /// Drop TTL-expired entries (Redis does this lazily + actively; we
-    /// expose it so tests and the freshness monitor can force it).
+    /// expose it so tests and the freshness monitor can force it). Locks
+    /// one shard at a time — readers of other shards are unaffected and
+    /// readers never see expired data regardless (read-time filter).
     pub fn evict_expired(&self, now: Timestamp) -> u64 {
-        let ttls = self.ttls.read().unwrap().clone();
-        let shards = self.shards.read().unwrap();
+        let _writers = self.admin.read().unwrap();
+        let set = self.snapshot();
         let mut evicted = 0;
-        for s in shards.iter() {
-            let mut g = s.write().unwrap();
-            g.retain(|(table, _), e| {
-                let ttl = ttls.get(table).copied().unwrap_or(i64::MAX);
-                let keep = ttl == i64::MAX || now - e.written_at < ttl;
-                if !keep {
-                    evicted += 1;
+        for s in set.shards.iter() {
+            let mut shard = s.write().unwrap();
+            for (table, tm) in shard.iter_mut() {
+                let ttl = set.ttl_of(table);
+                if ttl == i64::MAX {
+                    continue;
                 }
-                keep
-            });
+                tm.retain(|_, e| {
+                    let keep = live(e, ttl, now);
+                    if !keep {
+                        evicted += 1;
+                    }
+                    keep
+                });
+            }
+            shard.retain(|_, tm| !tm.is_empty());
         }
         evicted
     }
 
-    /// Scale to `n` shards, rehashing all entries (§3.1.3). Readers are
-    /// briefly blocked by the outer write lock — the paper's "scale
-    /// up/down managed Redis" with a short rebalance pause.
+    /// Scale to `n` shards, rehashing all entries (§3.1.3). Writers are
+    /// paused for the rebalance (the `admin` write lock), but readers
+    /// are **never** blocked: they keep serving the pre-scale snapshot
+    /// until the new shard set is published, then switch over via the
+    /// generation check on their next operation.
     pub fn scale_to(&self, n: usize) -> Result<()> {
         if n == 0 {
             return Err(FsError::InvalidArg("shard count must be > 0".into()));
         }
-        let mut shards = self.shards.write().unwrap();
-        let mut entries: Vec<((String, EntityId), Entry)> = Vec::new();
-        for s in shards.iter() {
-            entries.extend(s.write().unwrap().drain());
+        let _topology = self.admin.write().unwrap();
+        let old = self.current.lock().unwrap().clone();
+        // The new maps are private to this call until published, so the
+        // rehash takes no destination locks at all. Entries are cloned
+        // (not drained) so in-flight readers of the old set stay
+        // coherent; per (old shard, table) the entries are bucketed by
+        // destination first, so each table key is cloned per bucket,
+        // not per entry.
+        let mut new_maps: Vec<TableMap> = (0..n).map(|_| HashMap::new()).collect();
+        for s in old.shards.iter() {
+            // Writers are excluded by the admin write lock; concurrent
+            // readers share these read locks.
+            let shard = s.read().unwrap();
+            for (table, tm) in shard.iter() {
+                let mut buckets: Vec<Vec<(EntityId, Entry)>> = vec![Vec::new(); n];
+                for (&entity, entry) in tm.iter() {
+                    buckets[shard_of(entity, n)].push((entity, entry.clone()));
+                }
+                for (dest, bucket) in buckets.into_iter().enumerate() {
+                    if !bucket.is_empty() {
+                        new_maps[dest].entry(table.clone()).or_default().extend(bucket);
+                    }
+                }
+            }
         }
-        let new: Vec<RwLock<ShardMap>> = (0..n).map(|_| RwLock::new(HashMap::new())).collect();
-        for (key, entry) in entries {
-            let idx = self.shard_of(key.1, n);
-            new[idx].write().unwrap().insert(key, entry);
-        }
-        *shards = new;
+        self.publish(ShardSet {
+            generation: old.generation + 1,
+            shards: Arc::new(new_maps.into_iter().map(RwLock::new).collect()),
+            ttls: old.ttls.clone(),
+        });
         Ok(())
     }
 
+    /// Resident entries (including not-yet-evicted expired ones).
     pub fn len(&self) -> usize {
-        self.shards.read().unwrap().iter().map(|s| s.read().unwrap().len()).sum()
+        let set = self.snapshot();
+        set.shards
+            .iter()
+            .map(|s| s.read().unwrap().values().map(HashMap::len).sum::<usize>())
+            .sum()
     }
 
     pub fn is_empty(&self) -> bool {
@@ -284,6 +525,34 @@ mod tests {
     }
 
     #[test]
+    fn get_many_matches_point_gets_and_counts() {
+        let s = OnlineStore::new(4);
+        s.set_ttl("t", 500);
+        let rows: Vec<_> = (0..64).map(|i| rec(i, 10, 20, i as f32)).collect();
+        s.merge("t", &rows, 100);
+        let keys: Vec<EntityId> = (0..96).collect(); // 64 hits, 32 misses
+        let batched = s.get_many("t", &keys, 300);
+        for (i, &k) in keys.iter().enumerate() {
+            assert_eq!(batched[i], s.get("t", k, 300), "key {k}");
+        }
+        // get_many counted one hit/miss per key (then the loop doubled them).
+        assert_eq!(s.hits.load(Ordering::Relaxed), 2 * 64);
+        assert_eq!(s.misses.load(Ordering::Relaxed), 2 * 32);
+        // TTL applies to the batch exactly as to point reads.
+        assert!(s.get_many("t", &keys, 700).iter().all(Option::is_none));
+    }
+
+    #[test]
+    fn get_many_empty_and_unknown_table() {
+        let s = OnlineStore::new(4);
+        assert!(s.get_many("t", &[], 0).is_empty());
+        let got = s.get_many("ghost", &[1, 2, 3], 0);
+        assert_eq!(got.len(), 3);
+        assert!(got.iter().all(Option::is_none));
+        assert_eq!(s.misses.load(Ordering::Relaxed), 3);
+    }
+
+    #[test]
     fn scale_preserves_data() {
         let s = OnlineStore::new(2);
         let rows: Vec<_> = (0..500).map(|i| rec(i, 10, 20, i as f32)).collect();
@@ -296,6 +565,32 @@ mod tests {
         s.scale_to(1).unwrap();
         assert_eq!(s.len(), 500);
         assert!(s.scale_to(0).is_err());
+    }
+
+    #[test]
+    fn scale_preserves_ttls() {
+        let s = OnlineStore::new(2);
+        s.set_ttl("t", 100);
+        s.merge("t", &[rec(1, 10, 20, 1.0)], 1_000);
+        s.scale_to(8).unwrap();
+        assert!(s.get("t", 1, 1_050).is_some());
+        assert!(s.get("t", 1, 1_200).is_none(), "TTL must survive resharding");
+    }
+
+    #[test]
+    fn snapshots_refresh_across_scales() {
+        // Same thread: write → scale → read must see the post-scale set
+        // (generation check invalidates the thread-local cache).
+        let s = OnlineStore::new(2);
+        s.merge("t", &[rec(1, 10, 20, 1.0)], 20);
+        let _ = s.get("t", 1, 30); // warm the snapshot cache
+        for shards in [5, 3, 12, 1] {
+            s.scale_to(shards).unwrap();
+            assert_eq!(s.shard_count(), shards);
+            assert_eq!(s.get("t", 1, 30).unwrap().values[0], 1.0);
+            s.merge("t", &[rec(2, 10, 20, 2.0)], 20);
+            assert!(s.get("t", 2, 30).is_some());
+        }
     }
 
     #[test]
@@ -321,7 +616,6 @@ mod tests {
 
     #[test]
     fn concurrent_merges_converge() {
-        use std::sync::Arc;
         let s = Arc::new(OnlineStore::new(8));
         let handles: Vec<_> = (0..8u64)
             .map(|t| {

@@ -210,5 +210,61 @@ mod tests {
         let b = MicroBatcher::new(BatcherConfig::default());
         let store = store_with(1);
         assert!(b.flush(&store, 100, 0).is_empty());
+        assert!(!b.should_flush(1_000_000), "empty queue must never trigger a flush");
+        assert_eq!(b.pending(), 0);
+    }
+
+    #[test]
+    fn successive_flushes_preserve_fifo_order() {
+        // Items pushed across several flush cycles come back in global
+        // FIFO order: flush k drains ids [k*max .. k*max + max).
+        let b = MicroBatcher::new(BatcherConfig { max_batch: 3, max_wait_us: 0 });
+        let store = store_with(10);
+        let ids: Vec<u64> = (0..8).map(|e| b.push("t", e, 0)).collect();
+        let mut seen = Vec::new();
+        while b.pending() > 0 {
+            let out = b.flush(&store, 100, 1);
+            assert!(out.len() <= 3);
+            seen.extend(out.iter().map(|r| r.request_id));
+        }
+        assert_eq!(seen, ids, "flush cycles must drain in arrival order");
+    }
+
+    #[test]
+    fn request_ids_are_unique_and_monotonic() {
+        let b = MicroBatcher::new(BatcherConfig::default());
+        let ids: Vec<u64> = (0..50).map(|e| b.push("t", e % 7, e)).collect();
+        for pair in ids.windows(2) {
+            assert!(pair[1] > pair[0]);
+        }
+        assert_eq!(b.pending(), 50);
+    }
+
+    #[test]
+    fn flush_results_match_per_key_gets() {
+        // The grouped get_many execution must be observationally
+        // identical to per-key point gets (same records, same store
+        // hit/miss accounting for the batch).
+        let b = MicroBatcher::new(BatcherConfig::default());
+        let store = store_with(6);
+        for e in [0u64, 9, 3, 5, 11] {
+            b.push("t", e, 0);
+        }
+        let out = b.flush(&store, 100, 5);
+        let batched_hits = store.hits.load(std::sync::atomic::Ordering::Relaxed);
+        let batched_misses = store.misses.load(std::sync::atomic::Ordering::Relaxed);
+        assert_eq!((batched_hits, batched_misses), (3, 2));
+        for (r, e) in out.iter().zip([0u64, 9, 3, 5, 11]) {
+            assert_eq!(r.record, store.get("t", e, 100), "entity {e}");
+        }
+    }
+
+    #[test]
+    fn age_trigger_fires_on_oldest_item() {
+        let b = MicroBatcher::new(BatcherConfig { max_batch: 100, max_wait_us: 500 });
+        b.push("t", 1, 1_000);
+        b.push("t", 2, 1_400); // younger item must not reset the clock
+        assert!(!b.should_flush(1_499));
+        assert!(b.should_flush(1_500), "oldest item's age drives the trigger");
     }
 }

@@ -1,15 +1,33 @@
 //! Online serving (§2.1 "Online feature retrieval to support feature
 //! retrieval with low latency").
 //!
-//! The request path: [`router`] picks the region/mechanism (delegating to
-//! `geo::access`), [`batcher`] micro-batches point lookups to amortize
-//! store access, and [`service`] ties them together with latency metrics
-//! feeding the SLA machinery.
+//! # The batched read path
+//!
+//! The request hot path is built around batches end to end:
+//!
+//! 1. [`batcher`] — point lookups arriving within a short window are
+//!    coalesced by the [`MicroBatcher`]; a flush drains up to
+//!    `max_batch` queued lookups and issues **one** `get_many` per
+//!    table in the batch.
+//! 2. [`router`] — resolves the table to its geo access router once per
+//!    request/batch (home region, replica, or cross-region, per
+//!    compliance policy) and surfaces region outages.
+//! 3. [`service`] — [`OnlineServing::lookup_batch`] executes the routed
+//!    batch via `CrossRegionAccess::lookup_many`, paying the WAN round
+//!    trip **once per batch** instead of once per key, and feeds
+//!    latency + hit/miss metrics into the SLA machinery.
+//!
+//! Underneath, `OnlineStore::get_many` groups the batch's keys by shard
+//! and takes each shard lock exactly once; point reads never take a
+//! store-global lock (see the `online_store` module docs for the
+//! snapshot/generation design). Together this makes batch size the
+//! lever that amortizes *both* store synchronization and simulated WAN
+//! cost — experiment E9 in `benches/online_retrieval.rs` measures it.
 
 pub mod batcher;
 pub mod router;
 pub mod service;
 
-pub use batcher::{BatchItem, MicroBatcher};
+pub use batcher::{BatchItem, BatcherConfig, MicroBatcher};
 pub use router::{RouteTable, ServingRouter};
 pub use service::OnlineServing;

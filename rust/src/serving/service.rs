@@ -1,11 +1,27 @@
 //! The online serving front end: router + geo access + metrics.
+//!
+//! Two read paths:
+//!
+//! * [`OnlineServing::lookup`] — one point read, one routing decision.
+//! * [`OnlineServing::lookup_batch`] / [`OnlineServing::lookup_many`] —
+//!   the batched path: one routing decision and **one** WAN round trip
+//!   for the whole key set, served by the store's sharded `get_many`.
+//!   This is what the [`super::batcher::MicroBatcher`] drains into.
 
 use std::sync::Arc;
 
 use super::router::ServingRouter;
-use crate::geo::access::{AccessMechanism, RoutedLookup};
+use crate::geo::access::{AccessMechanism, RoutedBatch, RoutedLookup};
 use crate::monitor::metrics::{MetricKind, MetricsRegistry};
 use crate::types::{EntityId, Result, Timestamp};
+
+fn mech_label(m: AccessMechanism) -> &'static str {
+    match m {
+        AccessMechanism::Local => "local",
+        AccessMechanism::CrossRegion => "xregion",
+        AccessMechanism::Replica => "replica",
+    }
+}
 
 /// Serving facade used by the coordinator and the benches.
 pub struct OnlineServing {
@@ -29,11 +45,7 @@ impl OnlineServing {
     ) -> Result<RoutedLookup> {
         let access = self.router.resolve(table, consumer_region)?;
         let out = access.lookup(consumer_region, table, entity, now)?;
-        let mech = match out.mechanism {
-            AccessMechanism::Local => "local",
-            AccessMechanism::CrossRegion => "xregion",
-            AccessMechanism::Replica => "replica",
-        };
+        let mech = mech_label(out.mechanism);
         self.metrics.observe_latency(
             MetricKind::System,
             &format!("serving_latency_us_{mech}"),
@@ -47,8 +59,40 @@ impl OnlineServing {
         Ok(out)
     }
 
-    /// Batched lookup of many entities (training-adjacent or bulk
-    /// inference). Returns per-entity results in order.
+    /// The batched lookup endpoint: resolve the route once, then serve
+    /// the whole key set with one `CrossRegionAccess::lookup_many` (one
+    /// WAN round trip, per-shard-amortized store access). Records batch
+    /// latency and per-key hit/miss metrics.
+    pub fn lookup_batch(
+        &self,
+        table: &str,
+        entities: &[EntityId],
+        consumer_region: &str,
+        now: Timestamp,
+    ) -> Result<RoutedBatch> {
+        let access = self.router.resolve(table, consumer_region)?;
+        let out = access.lookup_many(consumer_region, table, entities, now)?;
+        let mech = mech_label(out.mechanism);
+        self.metrics.observe_latency(
+            MetricKind::System,
+            &format!("serving_batch_latency_us_{mech}"),
+            out.latency_us * 1_000, // store ns in the histogram
+        );
+        let hits = out.records.iter().filter(|r| r.is_some()).count() as u64;
+        self.metrics.inc(MetricKind::System, "serving_hits", hits);
+        self.metrics.inc(
+            MetricKind::System,
+            "serving_misses",
+            out.records.len() as u64 - hits,
+        );
+        self.metrics.inc(MetricKind::System, "serving_batches", 1);
+        Ok(out)
+    }
+
+    /// Batched lookup of many entities (bulk inference). Returns
+    /// per-entity results in order. Internally a single routed batch —
+    /// each returned item carries the batch's mechanism/latency, not a
+    /// per-key WAN cost.
     pub fn lookup_many(
         &self,
         table: &str,
@@ -56,7 +100,17 @@ impl OnlineServing {
         consumer_region: &str,
         now: Timestamp,
     ) -> Result<Vec<RoutedLookup>> {
-        entities.iter().map(|&e| self.lookup(table, e, consumer_region, now)).collect()
+        let batch = self.lookup_batch(table, entities, consumer_region, now)?;
+        Ok(batch
+            .records
+            .into_iter()
+            .map(|record| RoutedLookup {
+                record,
+                mechanism: batch.mechanism,
+                latency_us: batch.latency_us,
+                staleness_secs: batch.staleness_secs,
+            })
+            .collect())
     }
 }
 
@@ -112,8 +166,24 @@ mod tests {
     }
 
     #[test]
+    fn lookup_batch_records_batch_metrics() {
+        let (s, store) = serving();
+        store.merge("t", &[FeatureRecord::new(2, 10, 20, vec![6.0])], 20);
+        let batch = s.lookup_batch("t", &[1, 2, 42], "westus", 100).unwrap();
+        assert_eq!(batch.mechanism, AccessMechanism::CrossRegion);
+        assert_eq!(batch.records.len(), 3);
+        assert_eq!(s.metrics.counter("serving_hits"), 2);
+        assert_eq!(s.metrics.counter("serving_misses"), 1);
+        assert_eq!(s.metrics.counter("serving_batches"), 1);
+        assert!(s.metrics.latency_quantile("serving_batch_latency_us_xregion", 0.5).is_some());
+        // One WAN round trip (60ms for eastus↔westus) for the whole batch.
+        assert!(batch.latency_us >= 60_000 && batch.latency_us < 120_000, "{}", batch.latency_us);
+    }
+
+    #[test]
     fn unknown_table_errors() {
         let (s, _) = serving();
         assert!(s.lookup("nope", 1, "eastus", 0).is_err());
+        assert!(s.lookup_batch("nope", &[1], "eastus", 0).is_err());
     }
 }

@@ -1,50 +1,73 @@
 //! Library-wide error type.
+//!
+//! Hand-implemented `Display`/`Error` (the `thiserror` derive crate is
+//! not available in the offline build environment); message formats are
+//! part of the API surface — tests assert on them.
+
+use std::fmt;
 
 use crate::types::window::FeatureWindow;
 
-#[derive(Debug, thiserror::Error)]
+#[derive(Debug)]
 pub enum FsError {
-    #[error("asset not found: {0}")]
     NotFound(String),
-
-    #[error("asset already exists: {0}")]
     AlreadyExists(String),
-
-    #[error("immutable property '{prop}' of {asset} cannot change; bump the version instead")]
     ImmutableProperty { asset: String, prop: String },
-
-    #[error("schema violation: {0}")]
     Schema(String),
-
-    #[error("window {got} conflicts with active job window {active}")]
     WindowConflict { got: FeatureWindow, active: FeatureWindow },
-
-    #[error("invalid argument: {0}")]
     InvalidArg(String),
-
-    #[error("permission denied: principal '{principal}' lacks '{action}' on {resource}")]
     AccessDenied { principal: String, action: String, resource: String },
-
-    #[error("region '{0}' is unavailable")]
     RegionDown(String),
-
-    #[error("store I/O error: {0}")]
-    Io(#[from] std::io::Error),
-
-    #[error("artifact error: {0}")]
+    Io(std::io::Error),
     Artifact(String),
-
-    #[error("runtime execution error: {0}")]
     Runtime(String),
-
-    #[error("dsl error: {0}")]
     Dsl(String),
-
-    #[error("injected fault: {0}")]
     InjectedFault(String),
-
-    #[error("{0}")]
     Other(String),
+}
+
+impl fmt::Display for FsError {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        match self {
+            FsError::NotFound(s) => write!(f, "asset not found: {s}"),
+            FsError::AlreadyExists(s) => write!(f, "asset already exists: {s}"),
+            FsError::ImmutableProperty { asset, prop } => write!(
+                f,
+                "immutable property '{prop}' of {asset} cannot change; bump the version instead"
+            ),
+            FsError::Schema(s) => write!(f, "schema violation: {s}"),
+            FsError::WindowConflict { got, active } => {
+                write!(f, "window {got} conflicts with active job window {active}")
+            }
+            FsError::InvalidArg(s) => write!(f, "invalid argument: {s}"),
+            FsError::AccessDenied { principal, action, resource } => write!(
+                f,
+                "permission denied: principal '{principal}' lacks '{action}' on {resource}"
+            ),
+            FsError::RegionDown(r) => write!(f, "region '{r}' is unavailable"),
+            FsError::Io(e) => write!(f, "store I/O error: {e}"),
+            FsError::Artifact(s) => write!(f, "artifact error: {s}"),
+            FsError::Runtime(s) => write!(f, "runtime execution error: {s}"),
+            FsError::Dsl(s) => write!(f, "dsl error: {s}"),
+            FsError::InjectedFault(s) => write!(f, "injected fault: {s}"),
+            FsError::Other(s) => write!(f, "{s}"),
+        }
+    }
+}
+
+impl std::error::Error for FsError {
+    fn source(&self) -> Option<&(dyn std::error::Error + 'static)> {
+        match self {
+            FsError::Io(e) => Some(e),
+            _ => None,
+        }
+    }
+}
+
+impl From<std::io::Error> for FsError {
+    fn from(e: std::io::Error) -> Self {
+        FsError::Io(e)
+    }
 }
 
 impl FsError {
@@ -78,5 +101,12 @@ mod tests {
             active: FeatureWindow::new(5, 15),
         };
         assert!(e.to_string().contains("[0, 10)"));
+    }
+
+    #[test]
+    fn io_source_chain() {
+        let e = FsError::from(std::io::Error::new(std::io::ErrorKind::Other, "disk"));
+        assert!(std::error::Error::source(&e).is_some());
+        assert!(e.to_string().starts_with("store I/O error:"));
     }
 }

@@ -196,6 +196,84 @@ fn prop_tracker_gaps_partition_window() {
 }
 
 #[test]
+fn prop_online_state_is_max_version_tuple() {
+    // Eq. 2 stated directly: after any interleaving of upserts, the
+    // record stored per entity is exactly the delivered record with
+    // max(tuple(event_ts, creation_ts)) — computed here from the raw
+    // input list, independent of any store machinery.
+    forall("online-max-tuple", 300, &gen_records(32), |rs| {
+        let mut rng = Rng::new(rs.len() as u64 ^ 0xabcd);
+        let mut order: Vec<R> = rs.clone();
+        rng.shuffle(&mut order);
+        let s = OnlineStore::new(3);
+        for r in &order {
+            s.merge("t", &[to_rec(r)], 0);
+        }
+        let mut expected: std::collections::HashMap<u64, FeatureRecord> =
+            std::collections::HashMap::new();
+        for r in rs {
+            let rec = to_rec(r);
+            match expected.get(&rec.entity) {
+                Some(b) if b.version() >= rec.version() => {}
+                _ => {
+                    expected.insert(rec.entity, rec);
+                }
+            }
+        }
+        for (entity, want) in &expected {
+            match s.get("t", *entity, 1_000_000) {
+                Some(got) if got.version() == want.version() => {}
+                other => {
+                    return Err(format!(
+                        "entity {entity}: stored {other:?}, want version {:?}",
+                        want.version()
+                    ))
+                }
+            }
+        }
+        if s.len() != expected.len() {
+            return Err(format!("{} resident vs {} entities", s.len(), expected.len()));
+        }
+        Ok(())
+    });
+}
+
+#[test]
+fn prop_get_many_equals_point_gets() {
+    // For every key set (present, absent, duplicated keys; with and
+    // without TTL expiry in play), the batched read path returns exactly
+    // what per-key point reads return, in order.
+    forall("get-many-equals-gets", 300, &gen_records(32), |rs| {
+        let s = OnlineStore::new(4);
+        for r in rs {
+            // written_at spread so TTL bites for some records only.
+            s.merge("t", &[to_rec(r)], (r.1 % 7) * 50);
+        }
+        s.set_ttl("t", 200);
+        let mut rng = Rng::new(rs.len() as u64 * 17 + 3);
+        for _ in 0..10 {
+            let n = rng.below(12) as usize;
+            let keys: Vec<u64> = (0..n).map(|_| rng.below(9)).collect();
+            let now = rng.range(0, 600);
+            let batched = s.get_many("t", &keys, now);
+            if batched.len() != keys.len() {
+                return Err(format!("{} results for {} keys", batched.len(), keys.len()));
+            }
+            for (i, &k) in keys.iter().enumerate() {
+                let point = s.get("t", k, now);
+                if batched[i] != point {
+                    return Err(format!(
+                        "key {k} at now={now}: batched {:?} vs point {point:?}",
+                        batched[i]
+                    ));
+                }
+            }
+        }
+        Ok(())
+    });
+}
+
+#[test]
 fn prop_online_scale_preserves_contents() {
     forall("scale-preserves", 120, &gen_records(40), |rs| {
         let s = OnlineStore::new(3);

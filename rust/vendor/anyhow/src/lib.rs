@@ -1,0 +1,142 @@
+//! Minimal error-aggregation type, API-compatible with the subset of
+//! the `anyhow` crate used by this workspace's binaries and examples
+//! (the real crate is unreachable in the offline build environment).
+//!
+//! Supported surface: [`Error`], [`Result`], `anyhow!`, `bail!`, and
+//! `?`-conversion from any `std::error::Error + Send + Sync + 'static`.
+
+use std::fmt;
+
+/// A type-erased error with a best-effort source chain in `{:?}`.
+pub struct Error(Box<dyn std::error::Error + Send + Sync + 'static>);
+
+/// `Result<T, anyhow::Error>` alias.
+pub type Result<T, E = Error> = std::result::Result<T, E>;
+
+impl Error {
+    /// Wrap a concrete error.
+    pub fn new<E: std::error::Error + Send + Sync + 'static>(err: E) -> Self {
+        Error(Box::new(err))
+    }
+
+    /// Build an error from a displayable message.
+    pub fn msg<M: fmt::Display + fmt::Debug + Send + Sync + 'static>(message: M) -> Self {
+        Error(Box::new(MessageError(message)))
+    }
+
+    /// The root cause chain, outermost first.
+    pub fn chain(&self) -> impl Iterator<Item = &(dyn std::error::Error + 'static)> {
+        let mut next: Option<&(dyn std::error::Error + 'static)> = Some(self.0.as_ref());
+        std::iter::from_fn(move || {
+            let cur = next?;
+            next = cur.source();
+            Some(cur)
+        })
+    }
+}
+
+// NOTE: `Error` deliberately does NOT implement `std::error::Error`;
+// that keeps the blanket `From` below coherent with `From<T> for T`,
+// exactly like the real anyhow.
+impl<E: std::error::Error + Send + Sync + 'static> From<E> for Error {
+    fn from(err: E) -> Self {
+        Error::new(err)
+    }
+}
+
+impl fmt::Display for Error {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        fmt::Display::fmt(&self.0, f)
+    }
+}
+
+impl fmt::Debug for Error {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        write!(f, "{}", self.0)?;
+        let mut source = self.0.source();
+        if source.is_some() {
+            write!(f, "\n\nCaused by:")?;
+        }
+        while let Some(s) = source {
+            write!(f, "\n    {s}")?;
+            source = s.source();
+        }
+        Ok(())
+    }
+}
+
+/// String-message error used by `anyhow!` / `bail!`.
+struct MessageError<M>(M);
+
+impl<M: fmt::Display> fmt::Display for MessageError<M> {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        fmt::Display::fmt(&self.0, f)
+    }
+}
+
+impl<M: fmt::Debug> fmt::Debug for MessageError<M> {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        fmt::Debug::fmt(&self.0, f)
+    }
+}
+
+impl<M: fmt::Display + fmt::Debug> std::error::Error for MessageError<M> {}
+
+/// Construct an [`Error`] from a format string.
+#[macro_export]
+macro_rules! anyhow {
+    ($msg:literal $(,)?) => ($crate::Error::msg(format!($msg)));
+    ($fmt:expr, $($arg:tt)*) => ($crate::Error::msg(format!($fmt, $($arg)*)));
+    ($err:expr $(,)?) => ($crate::Error::msg(format!("{}", $err)));
+}
+
+/// Return early with an [`Error`] built from a format string.
+#[macro_export]
+macro_rules! bail {
+    ($($arg:tt)*) => (return Err($crate::anyhow!($($arg)*)));
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn io_err() -> std::io::Error {
+        std::io::Error::new(std::io::ErrorKind::Other, "disk on fire")
+    }
+
+    #[test]
+    fn question_mark_converts() {
+        fn inner() -> Result<()> {
+            Err(io_err())?;
+            Ok(())
+        }
+        let e = inner().unwrap_err();
+        assert!(e.to_string().contains("disk on fire"));
+    }
+
+    #[test]
+    fn anyhow_macro_formats() {
+        let e = anyhow!("bad {} at {}", "thing", 7);
+        assert_eq!(e.to_string(), "bad thing at 7");
+    }
+
+    #[test]
+    fn bail_returns_err() {
+        fn inner(flag: bool) -> Result<u32> {
+            if flag {
+                bail!("flagged: {flag}");
+            }
+            Ok(1)
+        }
+        assert!(inner(true).is_err());
+        assert_eq!(inner(false).unwrap(), 1);
+    }
+
+    #[test]
+    fn debug_prints_chain() {
+        let e = Error::new(io_err());
+        let dbg = format!("{e:?}");
+        assert!(dbg.contains("disk on fire"));
+        assert_eq!(e.chain().count(), 1);
+    }
+}

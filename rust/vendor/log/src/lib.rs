@@ -1,0 +1,276 @@
+//! Minimal logging facade, API-compatible with the subset of the
+//! `log` crate used by this workspace (the real crate is unreachable in
+//! the offline build environment).
+//!
+//! Supported surface: `error!`/`warn!`/`info!`/`debug!`/`trace!`
+//! macros, the [`Log`] trait, [`set_logger`]/[`set_max_level`]/
+//! [`max_level`], and the [`Level`]/[`LevelFilter`]/[`Metadata`]/
+//! [`Record`] types.
+
+use std::fmt;
+use std::sync::atomic::{AtomicUsize, Ordering};
+use std::sync::RwLock;
+
+/// Verbosity level of a log record, most severe first.
+#[derive(Debug, Clone, Copy, PartialEq, Eq, PartialOrd, Ord, Hash)]
+pub enum Level {
+    Error = 1,
+    Warn,
+    Info,
+    Debug,
+    Trace,
+}
+
+impl Level {
+    pub fn as_str(&self) -> &'static str {
+        match self {
+            Level::Error => "ERROR",
+            Level::Warn => "WARN",
+            Level::Info => "INFO",
+            Level::Debug => "DEBUG",
+            Level::Trace => "TRACE",
+        }
+    }
+}
+
+impl fmt::Display for Level {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        f.pad(self.as_str())
+    }
+}
+
+/// Maximum-verbosity filter; `Off` disables logging entirely.
+#[derive(Debug, Clone, Copy, PartialEq, Eq, PartialOrd, Ord, Hash)]
+pub enum LevelFilter {
+    Off = 0,
+    Error,
+    Warn,
+    Info,
+    Debug,
+    Trace,
+}
+
+impl PartialEq<LevelFilter> for Level {
+    fn eq(&self, other: &LevelFilter) -> bool {
+        *self as usize == *other as usize
+    }
+}
+
+impl PartialOrd<LevelFilter> for Level {
+    fn partial_cmp(&self, other: &LevelFilter) -> Option<std::cmp::Ordering> {
+        (*self as usize).partial_cmp(&(*other as usize))
+    }
+}
+
+impl PartialEq<Level> for LevelFilter {
+    fn eq(&self, other: &Level) -> bool {
+        *self as usize == *other as usize
+    }
+}
+
+impl PartialOrd<Level> for LevelFilter {
+    fn partial_cmp(&self, other: &Level) -> Option<std::cmp::Ordering> {
+        (*self as usize).partial_cmp(&(*other as usize))
+    }
+}
+
+/// Metadata about a log record: its level and target.
+#[derive(Debug, Clone)]
+pub struct Metadata<'a> {
+    level: Level,
+    target: &'a str,
+}
+
+impl<'a> Metadata<'a> {
+    pub fn level(&self) -> Level {
+        self.level
+    }
+    pub fn target(&self) -> &'a str {
+        self.target
+    }
+}
+
+/// One log record, borrowed for the duration of the `Log::log` call.
+#[derive(Debug, Clone)]
+pub struct Record<'a> {
+    metadata: Metadata<'a>,
+    args: fmt::Arguments<'a>,
+    module_path: Option<&'a str>,
+    file: Option<&'a str>,
+    line: Option<u32>,
+}
+
+impl<'a> Record<'a> {
+    pub fn metadata(&self) -> &Metadata<'a> {
+        &self.metadata
+    }
+    pub fn level(&self) -> Level {
+        self.metadata.level
+    }
+    pub fn target(&self) -> &'a str {
+        self.metadata.target
+    }
+    pub fn args(&self) -> &fmt::Arguments<'a> {
+        &self.args
+    }
+    pub fn module_path(&self) -> Option<&'a str> {
+        self.module_path
+    }
+    pub fn file(&self) -> Option<&'a str> {
+        self.file
+    }
+    pub fn line(&self) -> Option<u32> {
+        self.line
+    }
+}
+
+/// A logging sink.
+pub trait Log: Send + Sync {
+    fn enabled(&self, metadata: &Metadata) -> bool;
+    fn log(&self, record: &Record);
+    fn flush(&self);
+}
+
+/// Error returned when a logger is installed twice.
+#[derive(Debug)]
+pub struct SetLoggerError(());
+
+impl fmt::Display for SetLoggerError {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        f.write_str("attempted to set a logger after one was already installed")
+    }
+}
+
+impl std::error::Error for SetLoggerError {}
+
+static LOGGER: RwLock<Option<&'static dyn Log>> = RwLock::new(None);
+static MAX_LEVEL: AtomicUsize = AtomicUsize::new(LevelFilter::Off as usize);
+
+/// Install the global logger. Fails if one is already installed.
+pub fn set_logger(logger: &'static dyn Log) -> Result<(), SetLoggerError> {
+    let mut g = LOGGER.write().unwrap();
+    if g.is_some() {
+        return Err(SetLoggerError(()));
+    }
+    *g = Some(logger);
+    Ok(())
+}
+
+pub fn set_max_level(level: LevelFilter) {
+    MAX_LEVEL.store(level as usize, Ordering::Relaxed);
+}
+
+pub fn max_level() -> LevelFilter {
+    match MAX_LEVEL.load(Ordering::Relaxed) {
+        1 => LevelFilter::Error,
+        2 => LevelFilter::Warn,
+        3 => LevelFilter::Info,
+        4 => LevelFilter::Debug,
+        5 => LevelFilter::Trace,
+        _ => LevelFilter::Off,
+    }
+}
+
+/// Macro plumbing — not part of the public API of the real crate, but
+/// called by the macros below.
+#[doc(hidden)]
+pub fn __private_log(
+    args: fmt::Arguments,
+    level: Level,
+    target: &str,
+    module_path: &'static str,
+    file: &'static str,
+    line: u32,
+) {
+    let g = LOGGER.read().unwrap();
+    if let Some(logger) = *g {
+        let metadata = Metadata { level, target };
+        if logger.enabled(&metadata) {
+            logger.log(&Record {
+                metadata,
+                args,
+                module_path: Some(module_path),
+                file: Some(file),
+                line: Some(line),
+            });
+        }
+    }
+}
+
+#[macro_export]
+macro_rules! log {
+    (target: $target:expr, $lvl:expr, $($arg:tt)+) => ({
+        let lvl = $lvl;
+        if lvl <= $crate::max_level() {
+            $crate::__private_log(
+                format_args!($($arg)+),
+                lvl,
+                $target,
+                module_path!(),
+                file!(),
+                line!(),
+            );
+        }
+    });
+    ($lvl:expr, $($arg:tt)+) => ($crate::log!(target: module_path!(), $lvl, $($arg)+));
+}
+
+#[macro_export]
+macro_rules! error {
+    (target: $target:expr, $($arg:tt)+) => ($crate::log!(target: $target, $crate::Level::Error, $($arg)+));
+    ($($arg:tt)+) => ($crate::log!($crate::Level::Error, $($arg)+));
+}
+
+#[macro_export]
+macro_rules! warn {
+    (target: $target:expr, $($arg:tt)+) => ($crate::log!(target: $target, $crate::Level::Warn, $($arg)+));
+    ($($arg:tt)+) => ($crate::log!($crate::Level::Warn, $($arg)+));
+}
+
+#[macro_export]
+macro_rules! info {
+    (target: $target:expr, $($arg:tt)+) => ($crate::log!(target: $target, $crate::Level::Info, $($arg)+));
+    ($($arg:tt)+) => ($crate::log!($crate::Level::Info, $($arg)+));
+}
+
+#[macro_export]
+macro_rules! debug {
+    (target: $target:expr, $($arg:tt)+) => ($crate::log!(target: $target, $crate::Level::Debug, $($arg)+));
+    ($($arg:tt)+) => ($crate::log!($crate::Level::Debug, $($arg)+));
+}
+
+#[macro_export]
+macro_rules! trace {
+    (target: $target:expr, $($arg:tt)+) => ($crate::log!(target: $target, $crate::Level::Trace, $($arg)+));
+    ($($arg:tt)+) => ($crate::log!($crate::Level::Trace, $($arg)+));
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn level_vs_filter_ordering() {
+        assert!(Level::Error <= LevelFilter::Info);
+        assert!(Level::Info <= LevelFilter::Info);
+        assert!(Level::Debug > LevelFilter::Info);
+        assert!(!(Level::Trace <= LevelFilter::Off));
+    }
+
+    #[test]
+    fn max_level_roundtrip_and_macros_without_logger() {
+        // One test (not several) because max_level is global state and
+        // the harness runs tests in parallel.
+        set_max_level(LevelFilter::Warn);
+        assert_eq!(max_level(), LevelFilter::Warn);
+        // No logger installed in this test binary: must be a no-op.
+        set_max_level(LevelFilter::Trace);
+        info!("hello {}", 42);
+        warn!(target: "custom", "warned");
+        error!("boom");
+        debug!("dbg");
+        trace!("trc");
+        set_max_level(LevelFilter::Off);
+        assert_eq!(max_level(), LevelFilter::Off);
+    }
+}
