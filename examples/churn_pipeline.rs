@@ -80,9 +80,9 @@ fn main() -> anyhow::Result<()> {
     let pit_dt = t0.elapsed();
     println!(
         "training frame: {} rows × {} cols in {pit_dt:.2?} ({:.0} rows/s), fill_rate={:.3}",
-        frame.rows.len(),
+        frame.len(),
         frame.columns.len(),
-        frame.rows.len() as f64 / pit_dt.as_secs_f64(),
+        frame.len() as f64 / pit_dt.as_secs_f64(),
         frame.fill_rate()
     );
 
@@ -143,8 +143,7 @@ fn train_logreg(
 ) -> (Vec<f32>, f64) {
     let n_feat = frame.columns.len();
     let rows: Vec<(Vec<f32>, f32)> = frame
-        .rows
-        .iter()
+        .rows()
         .zip(labels)
         .map(|(r, &l)| {
             let x: Vec<f32> = r.features.iter().map(|f| f.unwrap_or(0.0)).collect();

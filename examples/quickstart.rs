@@ -70,7 +70,7 @@ fn main() -> anyhow::Result<()> {
         PitConfig::default(),
         "local",
     )?;
-    for row in &frame.rows {
+    for row in frame.rows() {
         println!("obs@{} → {:?}", row.observation.ts, row.features);
     }
     println!("fill rate: {:.2}", frame.fill_rate());

@@ -88,6 +88,9 @@ pub struct FeatureStore {
     pub serving: Arc<OnlineServing>,
     pub replicator: Option<Arc<GeoReplicator>>,
     pub merger: Arc<DualStoreMerger>,
+    /// Shared worker pool: scheduler jobs and the offline query engine's
+    /// per-table / per-chunk PIT joins run here.
+    pool: Arc<ThreadPool>,
     materializer: Arc<Materializer>,
     routes: Arc<RouteTable>,
     registrations: RwLock<HashMap<String, Arc<Registration>>>,
@@ -149,6 +152,7 @@ impl FeatureStore {
         ));
         Ok(Arc::new(FeatureStore {
             materializer: Arc::new(Materializer::new(engine, interner.clone())),
+            pool,
             config,
             clock,
             catalog: Arc::new(Catalog::new()),
@@ -350,7 +354,9 @@ impl FeatureStore {
     /// then one routed batch through the serving layer (one routing
     /// decision and one WAN round trip for the whole key set — the
     /// §3.1.4 hot-path amortization). Results are in input order;
-    /// unknown entity keys are clean local misses.
+    /// unknown entity keys are clean local misses. A thin wrapper over
+    /// [`FeatureStore::get_online_many_mixed`] with a constant table, so
+    /// single-table and mixed-table batches cannot diverge.
     pub fn get_online_many(
         &self,
         principal: &Principal,
@@ -358,11 +364,28 @@ impl FeatureStore {
         entity_keys: &[&str],
         consumer_region: &str,
     ) -> Result<Vec<crate::geo::access::RoutedLookup>> {
+        let requests: Vec<(&str, &str)> = entity_keys.iter().map(|&k| (table, k)).collect();
+        self.get_online_many_mixed(principal, &requests, consumer_region)
+    }
+
+    /// Batched online lookup across **mixed tables** (ROADMAP follow-up:
+    /// the micro-batcher already groups per table; this gives the
+    /// coordinator endpoint the same shape). RBAC is checked once and
+    /// keys are interned once; requests are grouped per table preserving
+    /// first-seen order, each group is served by one routed batch (one
+    /// WAN round trip per table), and results scatter back in input
+    /// order. Unknown entity keys are clean local misses.
+    pub fn get_online_many_mixed(
+        &self,
+        principal: &Principal,
+        requests: &[(&str, &str)],
+        consumer_region: &str,
+    ) -> Result<Vec<crate::geo::access::RoutedLookup>> {
         use crate::geo::access::{AccessMechanism, RoutedLookup};
         let store = self.store_name()?;
         self.rbac.check(principal, &store, Action::ReadFeatures, self.clock.now())?;
         let now = self.clock.now();
-        let mut out: Vec<RoutedLookup> = entity_keys
+        let mut out: Vec<RoutedLookup> = requests
             .iter()
             .map(|_| RoutedLookup {
                 record: None,
@@ -371,23 +394,27 @@ impl FeatureStore {
                 staleness_secs: 0,
             })
             .collect();
-        let known: Vec<(usize, EntityId)> = entity_keys
-            .iter()
-            .enumerate()
-            .filter_map(|(i, k)| self.interner.lookup(k).map(|e| (i, e)))
-            .collect();
-        if known.is_empty() {
-            return Ok(out);
+        // table → (input slot, entity) groups, in first-seen table order.
+        let mut groups: Vec<(&str, Vec<(usize, EntityId)>)> = Vec::new();
+        for (i, req) in requests.iter().enumerate() {
+            let (table, key) = *req;
+            let Some(entity) = self.interner.lookup(key) else { continue };
+            match groups.iter_mut().find(|(t, _)| *t == table) {
+                Some((_, items)) => items.push((i, entity)),
+                None => groups.push((table, vec![(i, entity)])),
+            }
         }
-        let entities: Vec<EntityId> = known.iter().map(|&(_, e)| e).collect();
-        let batch = self.serving.lookup_batch(table, &entities, consumer_region, now)?;
-        for (&(i, _), record) in known.iter().zip(batch.records) {
-            out[i] = RoutedLookup {
-                record,
-                mechanism: batch.mechanism,
-                latency_us: batch.latency_us,
-                staleness_secs: batch.staleness_secs,
-            };
+        for (table, items) in groups {
+            let entities: Vec<EntityId> = items.iter().map(|&(_, e)| e).collect();
+            let batch = self.serving.lookup_batch(table, &entities, consumer_region, now)?;
+            for (&(i, _), record) in items.iter().zip(batch.records) {
+                out[i] = RoutedLookup {
+                    record,
+                    mechanism: batch.mechanism,
+                    latency_us: batch.latency_us,
+                    staleness_secs: batch.staleness_secs,
+                };
+            }
         }
         Ok(out)
     }
@@ -411,12 +438,14 @@ impl FeatureStore {
             .map(|(key, ts)| Observation { entity: self.interner.intern(key), ts: *ts })
             .collect();
         let specs: HashMap<String, FeatureSetSpec> = self.feature_set_specs();
-        let engine = OfflineQueryEngine::new(self.offline.clone());
+        // The engine streams the store's columnar segments and fans the
+        // per-table joins out over the store's worker pool.
+        let engine = OfflineQueryEngine::with_pool(self.offline.clone(), self.pool.clone());
         let frame = engine.get_training_frame(&obs, features, &specs, cfg)?;
         if let Some(model) = model {
             self.lineage.record(model, features, consumer_region, self.clock.now());
         }
-        self.metrics.inc(MetricKind::System, "training_rows_served", frame.rows.len() as u64);
+        self.metrics.inc(MetricKind::System, "training_rows_served", frame.len() as u64);
         Ok(frame)
     }
 
@@ -553,6 +582,54 @@ mod tests {
     }
 
     #[test]
+    fn mixed_table_batch_matches_point_reads() {
+        let fs = open_local();
+        let table_a = register(&fs, 4);
+        // Second feature set → second table, same entity space.
+        let spec_b = FeatureSetSpec::rolling(
+            "click",
+            1,
+            "customer",
+            SourceSpec::synthetic(7),
+            Granularity(HOUR),
+            4,
+        );
+        let table_b = fs
+            .register_feature_set(spec_b, Arc::new(SyntheticSource::new(7, 30)), 0)
+            .unwrap();
+        fs.clock.set(2 * DAY);
+        fs.materialize_tick(&table_a).unwrap();
+        fs.materialize_tick(&table_b).unwrap();
+
+        let alice = Principal("alice".into());
+        let requests: Vec<(&str, &str)> = vec![
+            (table_a.as_str(), "cust_00000"),
+            (table_b.as_str(), "cust_00001"),
+            (table_a.as_str(), "ghost"),
+            (table_b.as_str(), "cust_00000"),
+            (table_a.as_str(), "cust_00002"),
+        ];
+        let batch = fs.get_online_many_mixed(&alice, &requests, "local").unwrap();
+        assert_eq!(batch.len(), requests.len());
+        for (i, (table, key)) in requests.iter().enumerate() {
+            let point = fs.get_online(&alice, table, key, "local").unwrap();
+            assert_eq!(
+                batch[i].record.as_ref().map(|r| r.unique_key()),
+                point.record.as_ref().map(|r| r.unique_key()),
+                "{table}/{key}"
+            );
+        }
+        // RBAC enforced on the mixed path too.
+        assert!(fs
+            .get_online_many_mixed(&Principal("mallory".into()), &requests, "local")
+            .is_err());
+        // Unknown table in a request is an error, like the per-table path.
+        assert!(fs
+            .get_online_many_mixed(&alice, &[("nope:1", "cust_00000")], "local")
+            .is_err());
+    }
+
+    #[test]
     fn freshness_tracks_high_water() {
         let fs = open_local();
         let table = register(&fs, 2);
@@ -589,7 +666,7 @@ mod tests {
                 "local",
             )
             .unwrap();
-        assert_eq!(frame.rows.len(), 10);
+        assert_eq!(frame.len(), 10);
         assert!(frame.fill_rate() > 0.0, "some observations must resolve");
         // Lineage recorded.
         assert_eq!(

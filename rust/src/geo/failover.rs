@@ -50,13 +50,15 @@ impl FailoverManager {
         offline_dir: PathBuf,
         now: Timestamp,
     ) -> Result<RegionCheckpoint> {
+        // Capture scheduler coverage BEFORE flushing segments: the
+        // offline store locks per table now, so a merge can land midway
+        // through the dump. With coverage-first ordering such a merge
+        // only adds rows beyond the recorded coverage — a restore then
+        // re-materializes those windows (idempotently) instead of
+        // trusting coverage for rows the dump may have missed.
+        let coverage = scheduler.checkpoint();
         offline.persist(&offline_dir)?;
-        Ok(RegionCheckpoint {
-            region: region.to_string(),
-            taken_at: now,
-            coverage: scheduler.checkpoint(),
-            offline_dir,
-        })
+        Ok(RegionCheckpoint { region: region.to_string(), taken_at: now, coverage, offline_dir })
     }
 
     /// Fail over to the nearest up standby. Restores scheduler coverage
@@ -101,14 +103,9 @@ impl FailoverManager {
 mod tests {
     use super::*;
     use crate::exec::{RetryPolicy, ThreadPool};
+    use crate::testkit::TempDir;
     use crate::types::FeatureRecord;
     use crate::util::Clock;
-
-    fn tmpdir(tag: &str) -> PathBuf {
-        let d = std::env::temp_dir().join(format!("geofs-fo-{}-{tag}", std::process::id()));
-        let _ = std::fs::remove_dir_all(&d);
-        d
-    }
 
     fn scheduler() -> Scheduler {
         Scheduler::new(Arc::new(ThreadPool::new(2)), Clock::fixed(0), RetryPolicy::default())
@@ -133,8 +130,10 @@ mod tests {
         // Mark coverage by claiming+completing.
         active.restore(&[("txn:1".to_string(), vec![FeatureWindow::new(0, 300)])]);
 
-        let dir = tmpdir("a");
-        let cp = fm.checkpoint("eastus", &active, &offline, dir.clone(), 500).unwrap();
+        let dir = TempDir::new("fo-a");
+        let cp = fm
+            .checkpoint("eastus", &active, &offline, dir.path().to_path_buf(), 500)
+            .unwrap();
 
         // Region goes down; fail over.
         topology.set_down("eastus", true);
@@ -152,7 +151,6 @@ mod tests {
             standby_sched.gaps("txn:1", FeatureWindow::new(0, 400)),
             vec![FeatureWindow::new(300, 400)]
         );
-        std::fs::remove_dir_all(&dir).unwrap();
     }
 
     #[test]
@@ -160,11 +158,12 @@ mod tests {
         let topology = Arc::new(GeoTopology::new(&["solo"], &[], 100));
         let fm = FailoverManager::new(topology.clone());
         topology.set_down("solo", true);
+        let dir = TempDir::new("fo-b");
         let cp = RegionCheckpoint {
             region: "solo".into(),
             taken_at: 0,
             coverage: vec![],
-            offline_dir: tmpdir("b"),
+            offline_dir: dir.file("never-written"),
         };
         assert!(fm.failover(&cp, &scheduler(), 2, 0).is_err());
     }

@@ -14,7 +14,10 @@ use crate::types::{FeatureRecord, Timestamp};
 
 struct Pending {
     table: String,
-    records: Vec<FeatureRecord>,
+    /// One shared copy of the batch for *all* replica queues (the
+    /// write-path symmetry follow-up: enqueue used to clone the record
+    /// vector once per region).
+    records: Arc<[FeatureRecord]>,
     visible_at: Timestamp,
 }
 
@@ -52,15 +55,19 @@ impl GeoReplicator {
     }
 
     /// Called after every home-region merge: enqueue for each replica.
+    /// The batch is copied **once** into a shared `Arc` — every replica
+    /// queue holds the same allocation, mirroring how the read path
+    /// shares one routed batch across a region's key set.
     pub fn enqueue(&self, table: &str, records: &[FeatureRecord], now: Timestamp) {
         if records.is_empty() {
             return;
         }
+        let shared: Arc<[FeatureRecord]> = records.into();
         let mut q = self.queues.lock().unwrap();
         for (region, queue) in q.iter_mut() {
             queue.push_back(Pending {
                 table: table.to_string(),
-                records: records.to_vec(),
+                records: shared.clone(),
                 visible_at: now + self.lag_secs[region],
             });
         }
@@ -68,15 +75,46 @@ impl GeoReplicator {
 
     /// Apply every queued batch that has become visible by `now`.
     /// Returns records applied per region.
+    ///
+    /// Visible batches are drained first and coalesced per table in
+    /// arrival order, then applied with **one** `OnlineStore::merge` per
+    /// table — which groups records by shard internally, so a
+    /// replication pump locks each destination shard once per table
+    /// instead of once per batch (the `merge`/`get_many` symmetry from
+    /// the ROADMAP). Alg 2 is order-independent-convergent, and the
+    /// concatenation preserves arrival order, so the converged state is
+    /// identical to per-batch application.
     pub fn pump(&self, now: Timestamp) -> HashMap<String, u64> {
         let mut applied = HashMap::new();
         let mut q = self.queues.lock().unwrap();
         for (region, queue) in q.iter_mut() {
             let store = &self.replicas[region];
-            let mut n = 0u64;
+            let mut visible: Vec<Pending> = Vec::new();
             while queue.front().map_or(false, |p| p.visible_at <= now) {
-                let p = queue.pop_front().unwrap();
-                let stats = store.merge(&p.table, &p.records, now);
+                visible.push(queue.pop_front().unwrap());
+            }
+            // Batch indices per table, in arrival order.
+            let mut groups: Vec<(&str, Vec<usize>)> = Vec::new();
+            for (i, p) in visible.iter().enumerate() {
+                match groups.iter_mut().find(|(t, _)| *t == p.table) {
+                    Some((_, idxs)) => idxs.push(i),
+                    None => groups.push((p.table.as_str(), vec![i])),
+                }
+            }
+            let mut n = 0u64;
+            for (table, idxs) in &groups {
+                let stats = if let &[i] = &idxs[..] {
+                    // Single visible batch for this table (the common
+                    // case): apply the shared slice directly, no copies.
+                    store.merge(table, &visible[i].records, now)
+                } else {
+                    let mut records: Vec<FeatureRecord> =
+                        Vec::with_capacity(idxs.iter().map(|&i| visible[i].records.len()).sum());
+                    for &i in idxs {
+                        records.extend_from_slice(&visible[i].records);
+                    }
+                    store.merge(table, &records, now)
+                };
                 n += stats.inserted + stats.skipped;
             }
             applied.insert(region.clone(), n);
@@ -150,6 +188,36 @@ mod tests {
         let got = store.get("t", 1, 1_000).unwrap();
         assert_eq!(got.version(), (100, 300));
         assert_eq!(got.values[0], 2.0);
+    }
+
+    #[test]
+    fn pump_coalesces_batches_per_table_per_region() {
+        let eu = Arc::new(OnlineStore::new(2));
+        let asia = Arc::new(OnlineStore::new(2));
+        let r = GeoReplicator::new(vec![
+            ("westeurope".into(), eu.clone(), 10),
+            ("southeastasia".into(), asia.clone(), 10),
+        ]);
+        // Three batches for "a" (including a same-event recompute and a
+        // stale event) and one for "b", all visible at once: one merge
+        // per table per region must converge exactly as per-batch
+        // application would.
+        r.enqueue("a", &[rec(1, 100, 110, 1.0)], 0);
+        r.enqueue("a", &[rec(1, 100, 300, 2.0), rec(2, 10, 20, 9.0)], 1);
+        r.enqueue("b", &[rec(1, 5, 6, 3.0)], 2);
+        r.enqueue("a", &[rec(1, 90, 400, 0.5)], 3); // older event: no-op
+        let applied = r.pump(1_000);
+        assert_eq!(applied["westeurope"], 5);
+        assert_eq!(applied["southeastasia"], 5);
+        for store in [&eu, &asia] {
+            let got = store.get("a", 1, 1_000).unwrap();
+            assert_eq!(got.version(), (100, 300));
+            assert_eq!(got.values[0], 2.0);
+            assert_eq!(store.get("a", 2, 1_000).unwrap().values[0], 9.0);
+            assert_eq!(store.get("b", 1, 1_000).unwrap().values[0], 3.0);
+        }
+        assert_eq!(r.backlog("westeurope"), 0);
+        assert_eq!(r.backlog("southeastasia"), 0);
     }
 
     #[test]

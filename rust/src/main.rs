@@ -157,7 +157,7 @@ fn cmd_demo(args: &Args) -> anyhow::Result<()> {
     )?;
     println!(
         "training frame: {} rows × {} features, fill_rate={:.2}",
-        frame.rows.len(),
+        frame.len(),
         frame.columns.len(),
         frame.fill_rate()
     );

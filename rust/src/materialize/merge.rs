@@ -173,6 +173,20 @@ mod tests {
     }
 
     #[test]
+    fn remerge_after_compaction_still_dedupes() {
+        // Offline compaction changes physical layout only: a job-level
+        // re-merge of the same records through the dual-store path must
+        // still be a pure no-op on the offline sink.
+        let m = merger(FaultInjector::none());
+        let recs: Vec<_> = (0..20).map(|i| rec(i, 100 + i as i64, 150 + i as i64, i as f32)).collect();
+        m.merge("t", &recs, &MaterializationPolicy::default(), 150).unwrap();
+        assert_eq!(m.offline.compact("t"), 1);
+        let rep = m.merge("t", &recs, &MaterializationPolicy::default(), 160).unwrap();
+        assert_eq!(rep.offline.unwrap(), MergeStats { inserted: 0, skipped: 20 });
+        assert_eq!(m.offline.row_count("t"), 20);
+    }
+
+    #[test]
     fn transient_faults_retried_to_consistency() {
         let m = merger(FaultInjector::with_rates(7, 0.5, 0.5));
         let recs: Vec<_> = (0..50).map(|i| rec(i, 100, 150, i as f32)).collect();

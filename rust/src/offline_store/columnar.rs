@@ -1,0 +1,401 @@
+//! Immutable columnar segments — the offline store's storage unit.
+//!
+//! A [`Segment`] holds one sorted run of records in column-major layout
+//! (the Delta-table shape of §3.1.4, scaled down): one contiguous array
+//! per key column (`entity`, `event_ts`, `creation_ts`) plus a flat
+//! value plane addressed through per-row offsets. Rows are ordered by
+//! `(entity, event_ts, creation_ts)` — exactly the order the PIT
+//! merge-join consumes — so
+//!
+//! * all rows of one entity form one contiguous **run** found by binary
+//!   search on the entity column,
+//! * within a run, rows ascend by `(event_ts, creation_ts)`, which is
+//!   the PIT lookup order, and
+//! * the last row of a run is the entity's Eq. 2 max-version record,
+//!   making `latest_per_entity` an O(#runs) walk instead of a per-row
+//!   version tournament.
+//!
+//! Segments are immutable after construction and shared by `Arc`:
+//! readers never copy row data, and compaction (k-way [`Segment::merge`]
+//! of sorted runs) builds a new segment without disturbing concurrent
+//! scans of the old ones. Per-segment zone stats (min/max of every key
+//! column) let scans and joins prune whole segments without touching a
+//! row.
+
+use crate::types::{EntityId, FeatureRecord, FeatureWindow, Timestamp};
+
+/// Borrowed view of one row — the zero-clone scan currency.
+#[derive(Debug, Clone, Copy, PartialEq)]
+pub struct RowView<'a> {
+    pub entity: EntityId,
+    pub event_ts: Timestamp,
+    pub creation_ts: Timestamp,
+    pub values: &'a [f32],
+}
+
+impl RowView<'_> {
+    /// Materialize an owned record (only for callers that must own).
+    pub fn to_record(&self) -> FeatureRecord {
+        FeatureRecord::new(self.entity, self.event_ts, self.creation_ts, self.values.to_vec())
+    }
+}
+
+/// Min/max of each key column — segment pruning for scans and joins.
+#[derive(Debug, Clone, Copy, Default, PartialEq, Eq)]
+pub struct ZoneStats {
+    pub min_entity: EntityId,
+    pub max_entity: EntityId,
+    pub min_event: Timestamp,
+    pub max_event: Timestamp,
+    pub min_creation: Timestamp,
+    pub max_creation: Timestamp,
+}
+
+/// An immutable columnar run sorted by `(entity, event_ts, creation_ts)`.
+#[derive(Debug)]
+pub struct Segment {
+    entities: Box<[EntityId]>,
+    event_ts: Box<[Timestamp]>,
+    creation_ts: Box<[Timestamp]>,
+    /// Row `i`'s values live at `values[offsets[i]..offsets[i+1]]`.
+    value_offsets: Box<[u32]>,
+    values: Box<[f32]>,
+    stats: ZoneStats,
+}
+
+impl Segment {
+    /// Build from arbitrary-order rows (sorts once, at write time — the
+    /// cost queries used to pay per `PitIndex::build`).
+    pub fn from_unsorted(mut rows: Vec<FeatureRecord>) -> Segment {
+        rows.sort_unstable_by_key(|r| (r.entity, r.event_ts, r.creation_ts));
+        let total_vals = rows.iter().map(|r| r.values.len()).sum();
+        let mut b = SegmentBuilder::with_capacity(rows.len(), total_vals);
+        for r in &rows {
+            b.push(r.entity, r.event_ts, r.creation_ts, &r.values);
+        }
+        b.finish()
+    }
+
+    /// K-way merge of sorted segments into one sorted segment — the
+    /// compaction kernel. No re-sort: inputs are already runs.
+    pub fn merge(segs: &[&Segment]) -> Segment {
+        let total_rows = segs.iter().map(|s| s.len()).sum();
+        let total_vals = segs.iter().map(|s| s.values.len()).sum();
+        let mut b = SegmentBuilder::with_capacity(total_rows, total_vals);
+        let mut cur = vec![0usize; segs.len()];
+        loop {
+            let mut best: Option<(usize, (EntityId, Timestamp, Timestamp))> = None;
+            for (si, s) in segs.iter().enumerate() {
+                let i = cur[si];
+                if i < s.len() {
+                    let key = (s.entities[i], s.event_ts[i], s.creation_ts[i]);
+                    match best {
+                        Some((_, bk)) if bk <= key => {}
+                        _ => best = Some((si, key)),
+                    }
+                }
+            }
+            let Some((si, _)) = best else { break };
+            let i = cur[si];
+            b.push(segs[si].entities[i], segs[si].event_ts[i], segs[si].creation_ts[i], segs[si].values_of(i));
+            cur[si] += 1;
+        }
+        b.finish()
+    }
+
+    /// Reassemble from decoded columns (the `.gfseg` load path),
+    /// validating shape and sort order.
+    pub(crate) fn from_columns(
+        entities: Vec<EntityId>,
+        event_ts: Vec<Timestamp>,
+        creation_ts: Vec<Timestamp>,
+        value_offsets: Vec<u32>,
+        values: Vec<f32>,
+    ) -> std::result::Result<Segment, String> {
+        let n = entities.len();
+        if event_ts.len() != n || creation_ts.len() != n {
+            return Err("key columns disagree on row count".into());
+        }
+        if value_offsets.len() != n + 1 || value_offsets[0] != 0 {
+            return Err("bad value offsets".into());
+        }
+        if value_offsets.windows(2).any(|w| w[0] > w[1]) {
+            return Err("value offsets not monotone".into());
+        }
+        if *value_offsets.last().unwrap() as usize != values.len() {
+            return Err("value plane length mismatch".into());
+        }
+        for i in 1..n {
+            let prev = (entities[i - 1], event_ts[i - 1], creation_ts[i - 1]);
+            let this = (entities[i], event_ts[i], creation_ts[i]);
+            // Strictly increasing: equal adjacent keys would break the
+            // store's uniqueness invariant (the key set dedupes, so a
+            // duplicate row would be served but uncounted).
+            if prev >= this {
+                return Err(format!("rows out of order or duplicate at {i}"));
+            }
+        }
+        let stats = compute_stats(&entities, &event_ts, &creation_ts);
+        Ok(Segment {
+            entities: entities.into_boxed_slice(),
+            event_ts: event_ts.into_boxed_slice(),
+            creation_ts: creation_ts.into_boxed_slice(),
+            value_offsets: value_offsets.into_boxed_slice(),
+            values: values.into_boxed_slice(),
+            stats,
+        })
+    }
+
+    pub fn len(&self) -> usize {
+        self.entities.len()
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.entities.is_empty()
+    }
+
+    pub fn stats(&self) -> ZoneStats {
+        self.stats
+    }
+
+    /// Column accessors (borrowed — the join reads these in place).
+    pub fn entities(&self) -> &[EntityId] {
+        &self.entities
+    }
+
+    pub fn event_ts(&self) -> &[Timestamp] {
+        &self.event_ts
+    }
+
+    pub fn creation_ts(&self) -> &[Timestamp] {
+        &self.creation_ts
+    }
+
+    /// Row `i`'s value plane slice.
+    pub fn values_of(&self, i: usize) -> &[f32] {
+        &self.values[self.value_offsets[i] as usize..self.value_offsets[i + 1] as usize]
+    }
+
+    pub fn row(&self, i: usize) -> RowView<'_> {
+        RowView {
+            entity: self.entities[i],
+            event_ts: self.event_ts[i],
+            creation_ts: self.creation_ts[i],
+            values: self.values_of(i),
+        }
+    }
+
+    pub fn iter(&self) -> impl Iterator<Item = RowView<'_>> {
+        (0..self.len()).map(move |i| self.row(i))
+    }
+
+    /// Zone check: could any row's `event_ts` fall inside `window`?
+    pub fn overlaps_event_window(&self, window: FeatureWindow) -> bool {
+        !self.is_empty() && self.stats.min_event < window.end && self.stats.max_event >= window.start
+    }
+
+    /// Zone check: does any row version exist at `as_of`
+    /// (`creation_ts <= as_of`)?
+    pub fn any_visible_at(&self, as_of: Timestamp) -> bool {
+        !self.is_empty() && self.stats.min_creation <= as_of
+    }
+
+    /// Zone check: could `entity` be present at all?
+    pub fn may_contain_entity(&self, entity: EntityId) -> bool {
+        !self.is_empty() && self.stats.min_entity <= entity && entity <= self.stats.max_entity
+    }
+
+    /// The contiguous run of rows for `entity`, searched from `from`
+    /// (pass a cursor when probing entities in ascending order —
+    /// the merge-join's access pattern). Returns `(lo, hi)`, possibly
+    /// empty.
+    pub fn entity_run(&self, entity: EntityId, from: usize) -> (usize, usize) {
+        let tail = &self.entities[from..];
+        let lo = from + tail.partition_point(|&e| e < entity);
+        let hi = from + tail.partition_point(|&e| e <= entity);
+        (lo, hi)
+    }
+
+    /// Restrict a run to rows whose `event_ts` lies in `window`
+    /// (within a run the event column ascends, so this is two binary
+    /// searches).
+    pub fn run_event_window(&self, lo: usize, hi: usize, window: FeatureWindow) -> (usize, usize) {
+        let evs = &self.event_ts[lo..hi];
+        (
+            lo + evs.partition_point(|&t| t < window.start),
+            lo + evs.partition_point(|&t| t < window.end),
+        )
+    }
+}
+
+fn compute_stats(entities: &[EntityId], event_ts: &[Timestamp], creation_ts: &[Timestamp]) -> ZoneStats {
+    if entities.is_empty() {
+        return ZoneStats::default();
+    }
+    let mut stats = ZoneStats {
+        // Sorted by entity first, so the entity bounds are the ends.
+        min_entity: entities[0],
+        max_entity: entities[entities.len() - 1],
+        min_event: Timestamp::MAX,
+        max_event: Timestamp::MIN,
+        min_creation: Timestamp::MAX,
+        max_creation: Timestamp::MIN,
+    };
+    for (&ev, &cr) in event_ts.iter().zip(creation_ts.iter()) {
+        stats.min_event = stats.min_event.min(ev);
+        stats.max_event = stats.max_event.max(ev);
+        stats.min_creation = stats.min_creation.min(cr);
+        stats.max_creation = stats.max_creation.max(cr);
+    }
+    stats
+}
+
+/// Append-only builder; rows must arrive in sorted order.
+pub(crate) struct SegmentBuilder {
+    entities: Vec<EntityId>,
+    event_ts: Vec<Timestamp>,
+    creation_ts: Vec<Timestamp>,
+    value_offsets: Vec<u32>,
+    values: Vec<f32>,
+}
+
+impl SegmentBuilder {
+    pub(crate) fn with_capacity(rows: usize, vals: usize) -> Self {
+        let mut value_offsets = Vec::with_capacity(rows + 1);
+        value_offsets.push(0);
+        SegmentBuilder {
+            entities: Vec::with_capacity(rows),
+            event_ts: Vec::with_capacity(rows),
+            creation_ts: Vec::with_capacity(rows),
+            value_offsets,
+            values: Vec::with_capacity(vals),
+        }
+    }
+
+    pub(crate) fn push(&mut self, entity: EntityId, event: Timestamp, creation: Timestamp, values: &[f32]) {
+        debug_assert!(
+            self.entities.is_empty()
+                || (*self.entities.last().unwrap(), *self.event_ts.last().unwrap(), *self.creation_ts.last().unwrap())
+                    <= (entity, event, creation),
+            "builder fed out of order"
+        );
+        self.entities.push(entity);
+        self.event_ts.push(event);
+        self.creation_ts.push(creation);
+        self.values.extend_from_slice(values);
+        assert!(self.values.len() <= u32::MAX as usize, "value plane exceeds u32 offsets");
+        self.value_offsets.push(self.values.len() as u32);
+    }
+
+    pub(crate) fn finish(self) -> Segment {
+        let stats = compute_stats(&self.entities, &self.event_ts, &self.creation_ts);
+        Segment {
+            entities: self.entities.into_boxed_slice(),
+            event_ts: self.event_ts.into_boxed_slice(),
+            creation_ts: self.creation_ts.into_boxed_slice(),
+            value_offsets: self.value_offsets.into_boxed_slice(),
+            values: self.values.into_boxed_slice(),
+            stats,
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn rec(entity: u64, event: Timestamp, created: Timestamp, vals: &[f32]) -> FeatureRecord {
+        FeatureRecord::new(entity, event, created, vals.to_vec())
+    }
+
+    #[test]
+    fn from_unsorted_sorts_and_rounds_trip() {
+        let rows = vec![
+            rec(2, 50, 60, &[2.0]),
+            rec(1, 100, 150, &[1.0, 1.5]),
+            rec(1, 100, 120, &[]),
+            rec(1, 30, 40, &[0.5]),
+        ];
+        let seg = Segment::from_unsorted(rows);
+        assert_eq!(seg.len(), 4);
+        let keys: Vec<_> = seg.iter().map(|r| (r.entity, r.event_ts, r.creation_ts)).collect();
+        assert_eq!(keys, vec![(1, 30, 40), (1, 100, 120), (1, 100, 150), (2, 50, 60)]);
+        assert_eq!(seg.values_of(2), &[1.0, 1.5]);
+        assert_eq!(seg.values_of(1), &[] as &[f32]);
+        assert_eq!(seg.row(3).values, &[2.0]);
+    }
+
+    #[test]
+    fn zone_stats() {
+        let seg = Segment::from_unsorted(vec![rec(3, -5, 10, &[0.0]), rec(7, 99, 2, &[0.0])]);
+        let z = seg.stats();
+        assert_eq!((z.min_entity, z.max_entity), (3, 7));
+        assert_eq!((z.min_event, z.max_event), (-5, 99));
+        assert_eq!((z.min_creation, z.max_creation), (2, 10));
+        assert!(seg.overlaps_event_window(FeatureWindow::new(-10, 0)));
+        assert!(!seg.overlaps_event_window(FeatureWindow::new(100, 200)));
+        assert!(seg.overlaps_event_window(FeatureWindow::new(99, 100)));
+        assert!(seg.any_visible_at(2) && !seg.any_visible_at(1));
+        assert!(seg.may_contain_entity(5) && !seg.may_contain_entity(8));
+    }
+
+    #[test]
+    fn empty_segment_prunes_everything() {
+        let seg = Segment::from_unsorted(vec![]);
+        assert!(seg.is_empty());
+        assert!(!seg.overlaps_event_window(FeatureWindow::new(i64::MIN / 2, i64::MAX / 2)));
+        assert!(!seg.any_visible_at(i64::MAX));
+        assert!(!seg.may_contain_entity(0));
+    }
+
+    #[test]
+    fn entity_runs_and_event_windows() {
+        let seg = Segment::from_unsorted(vec![
+            rec(1, 10, 11, &[0.0]),
+            rec(1, 20, 21, &[1.0]),
+            rec(1, 20, 30, &[2.0]),
+            rec(5, 7, 8, &[3.0]),
+        ]);
+        assert_eq!(seg.entity_run(1, 0), (0, 3));
+        assert_eq!(seg.entity_run(5, 3), (3, 4));
+        assert_eq!(seg.entity_run(4, 0), (3, 3)); // absent: empty run
+        assert_eq!(seg.entity_run(9, 0), (4, 4));
+        // Window restriction inside entity 1's run.
+        assert_eq!(seg.run_event_window(0, 3, FeatureWindow::new(15, 21)), (1, 3));
+        assert_eq!(seg.run_event_window(0, 3, FeatureWindow::new(0, 10)), (0, 0));
+    }
+
+    #[test]
+    fn kway_merge_interleaves_sorted() {
+        let a = Segment::from_unsorted(vec![rec(1, 10, 11, &[1.0]), rec(3, 5, 6, &[3.0])]);
+        let b = Segment::from_unsorted(vec![rec(1, 10, 9, &[0.9]), rec(2, 1, 2, &[2.0])]);
+        let c = Segment::from_unsorted(vec![]);
+        let m = Segment::merge(&[&a, &b, &c]);
+        let keys: Vec<_> = m.iter().map(|r| (r.entity, r.event_ts, r.creation_ts)).collect();
+        assert_eq!(keys, vec![(1, 10, 9), (1, 10, 11), (2, 1, 2), (3, 5, 6)]);
+        assert_eq!(m.values_of(0), &[0.9]);
+        assert_eq!(m.values_of(1), &[1.0]);
+        assert_eq!(m.stats().max_entity, 3);
+    }
+
+    #[test]
+    fn from_columns_validates() {
+        assert!(Segment::from_columns(vec![1, 2], vec![0, 0], vec![0, 0], vec![0, 0, 0], vec![]).is_ok());
+        // out of order
+        assert!(Segment::from_columns(vec![2, 1], vec![0, 0], vec![0, 0], vec![0, 0, 0], vec![]).is_err());
+        // duplicate uniqueness key
+        assert!(Segment::from_columns(vec![1, 1], vec![0, 0], vec![0, 0], vec![0, 0, 0], vec![]).is_err());
+        // ragged columns
+        assert!(Segment::from_columns(vec![1], vec![0, 0], vec![0], vec![0, 0], vec![]).is_err());
+        // offsets vs value plane
+        assert!(Segment::from_columns(vec![1], vec![0], vec![0], vec![0, 2], vec![1.0]).is_err());
+        assert!(Segment::from_columns(vec![1], vec![0], vec![0], vec![0, 1], vec![1.0]).is_ok());
+    }
+
+    #[test]
+    fn to_record_roundtrip() {
+        let r = rec(9, 1, 2, &[4.0, 5.0]);
+        let seg = Segment::from_unsorted(vec![r.clone()]);
+        assert_eq!(seg.row(0).to_record(), r);
+    }
+}

@@ -1,23 +1,34 @@
-//! On-disk segment format for offline-store tables.
+//! On-disk format for offline-store segments (`.gfseg`, version 2).
 //!
-//! Simple length-prefixed binary layout with a CRC-style checksum —
-//! enough to give the offline store real durability semantics (the geo
-//! failover test kills a region and reloads from segments) without
-//! pulling in parquet.
+//! The file layout mirrors the in-memory [`Segment`]: whole columns are
+//! written contiguously (not row-interleaved), so a load is four bulk
+//! column decodes instead of a per-row parse, and the sorted order is
+//! preserved — a loaded table needs no re-sort and no re-index.
 //!
 //! Layout (all little-endian):
 //! ```text
-//! magic "GFSEG1\0\0" | u32 n_rows | rows... | u64 checksum
-//! row := u64 entity | i64 event_ts | i64 creation_ts
-//!        | u32 n_values | f32 * n_values
+//! magic "GFSEG2\0\0"
+//! u32 n_rows
+//! u64 entity      * n_rows
+//! i64 event_ts    * n_rows
+//! i64 creation_ts * n_rows
+//! u32 value_off   * (n_rows + 1)   // off[0] = 0, off[n] = n_values
+//! f32 value       * n_values
+//! u64 checksum                      // FNV-1a over everything after magic
 //! ```
+//!
+//! Writes go to a temp file then rename, so a crashed writer never
+//! leaves a torn segment under the real name; the checksum catches
+//! bit-level corruption, and [`Segment::from_columns`] validates shape
+//! and sort order on load.
 
 use std::io::{Read, Write};
 use std::path::Path;
 
+use super::columnar::Segment;
 use crate::types::{FeatureRecord, FsError, Result};
 
-const MAGIC: &[u8; 8] = b"GFSEG1\0\0";
+const MAGIC: &[u8; 8] = b"GFSEG2\0\0";
 
 /// FNV-1a over the payload — cheap corruption detection.
 fn checksum(bytes: &[u8]) -> u64 {
@@ -29,21 +40,34 @@ fn checksum(bytes: &[u8]) -> u64 {
     h
 }
 
-pub fn persist_table(path: &Path, rows: &[&FeatureRecord]) -> Result<()> {
-    let mut payload = Vec::with_capacity(rows.len() * 32);
-    payload.extend_from_slice(&(rows.len() as u32).to_le_bytes());
-    for r in rows {
-        payload.extend_from_slice(&r.entity.to_le_bytes());
-        payload.extend_from_slice(&r.event_ts.to_le_bytes());
-        payload.extend_from_slice(&r.creation_ts.to_le_bytes());
-        payload.extend_from_slice(&(r.values.len() as u32).to_le_bytes());
-        for v in r.values.iter() {
+/// Persist one sorted columnar segment.
+pub fn persist_segment(path: &Path, seg: &Segment) -> Result<()> {
+    let n = seg.len();
+    let mut payload = Vec::with_capacity(4 + n * (8 + 8 + 8 + 4) + 4);
+    payload.extend_from_slice(&(n as u32).to_le_bytes());
+    for &e in seg.entities() {
+        payload.extend_from_slice(&e.to_le_bytes());
+    }
+    for &t in seg.event_ts() {
+        payload.extend_from_slice(&t.to_le_bytes());
+    }
+    for &t in seg.creation_ts() {
+        payload.extend_from_slice(&t.to_le_bytes());
+    }
+    let mut off: u32 = 0;
+    payload.extend_from_slice(&off.to_le_bytes());
+    for i in 0..n {
+        off += seg.values_of(i).len() as u32;
+        payload.extend_from_slice(&off.to_le_bytes());
+    }
+    for i in 0..n {
+        for v in seg.values_of(i) {
             payload.extend_from_slice(&v.to_le_bytes());
         }
     }
     let sum = checksum(&payload);
-    // Write to a temp file then rename: a crashed writer never leaves a
-    // torn segment under the real name.
+    // Temp file + rename: a crashed writer never leaves a torn segment
+    // under the real name.
     let tmp = path.with_extension("tmp");
     {
         let mut f = std::fs::File::create(&tmp)?;
@@ -56,11 +80,12 @@ pub fn persist_table(path: &Path, rows: &[&FeatureRecord]) -> Result<()> {
     Ok(())
 }
 
-pub fn load_table(path: &Path) -> Result<Vec<FeatureRecord>> {
+/// Load one segment; verifies checksum, shape and sort order.
+pub fn load_segment(path: &Path) -> Result<Segment> {
     let mut bytes = Vec::new();
     std::fs::File::open(path)?.read_to_end(&mut bytes)?;
     if bytes.len() < MAGIC.len() + 4 + 8 || &bytes[..MAGIC.len()] != MAGIC {
-        return Err(FsError::Other(format!("{path:?}: not a geofs segment")));
+        return Err(FsError::Other(format!("{path:?}: not a geofs v2 segment")));
     }
     let payload = &bytes[MAGIC.len()..bytes.len() - 8];
     let stored_sum = u64::from_le_bytes(bytes[bytes.len() - 8..].try_into().unwrap());
@@ -77,49 +102,98 @@ pub fn load_table(path: &Path) -> Result<Vec<FeatureRecord>> {
         *pos += n;
         Ok(s)
     };
-    let n_rows = u32::from_le_bytes(take(&mut pos, 4)?.try_into().unwrap()) as usize;
-    let mut rows = Vec::with_capacity(n_rows);
-    for _ in 0..n_rows {
-        let entity = u64::from_le_bytes(take(&mut pos, 8)?.try_into().unwrap());
-        let event_ts = i64::from_le_bytes(take(&mut pos, 8)?.try_into().unwrap());
-        let creation_ts = i64::from_le_bytes(take(&mut pos, 8)?.try_into().unwrap());
-        let n_vals = u32::from_le_bytes(take(&mut pos, 4)?.try_into().unwrap()) as usize;
-        let mut values = Vec::with_capacity(n_vals);
-        for _ in 0..n_vals {
-            values.push(f32::from_le_bytes(take(&mut pos, 4)?.try_into().unwrap()));
-        }
-        rows.push(FeatureRecord::new(entity, event_ts, creation_ts, values));
+    let n = u32::from_le_bytes(take(&mut pos, 4)?.try_into().unwrap()) as usize;
+    let mut entities = Vec::with_capacity(n);
+    for _ in 0..n {
+        entities.push(u64::from_le_bytes(take(&mut pos, 8)?.try_into().unwrap()));
+    }
+    let mut event_ts = Vec::with_capacity(n);
+    for _ in 0..n {
+        event_ts.push(i64::from_le_bytes(take(&mut pos, 8)?.try_into().unwrap()));
+    }
+    let mut creation_ts = Vec::with_capacity(n);
+    for _ in 0..n {
+        creation_ts.push(i64::from_le_bytes(take(&mut pos, 8)?.try_into().unwrap()));
+    }
+    let mut value_offsets = Vec::with_capacity(n + 1);
+    for _ in 0..n + 1 {
+        value_offsets.push(u32::from_le_bytes(take(&mut pos, 4)?.try_into().unwrap()));
+    }
+    let n_values = *value_offsets.last().unwrap_or(&0) as usize;
+    let mut values = Vec::with_capacity(n_values);
+    for _ in 0..n_values {
+        values.push(f32::from_le_bytes(take(&mut pos, 4)?.try_into().unwrap()));
     }
     if pos != payload.len() {
         return Err(FsError::Other(format!("{path:?}: trailing bytes in segment")));
     }
-    Ok(rows)
+    Segment::from_columns(entities, event_ts, creation_ts, value_offsets, values)
+        .map_err(|e| FsError::Other(format!("{path:?}: {e}")))
+}
+
+/// Row-level convenience: persist records as one sorted segment.
+/// Rows sharing a `(entity, event_ts, creation_ts)` uniqueness key are
+/// collapsed to one (Alg 2 idempotence — they are the same logical
+/// record), since the loader rejects duplicate keys.
+pub fn persist_table(path: &Path, rows: &[&FeatureRecord]) -> Result<()> {
+    let mut owned: Vec<FeatureRecord> = rows.iter().map(|r| (*r).clone()).collect();
+    owned.sort_unstable_by_key(|r| (r.entity, r.event_ts, r.creation_ts));
+    owned.dedup_by_key(|r| r.unique_key());
+    let seg = Segment::from_unsorted(owned);
+    persist_segment(path, &seg)
+}
+
+/// Row-level convenience: load a segment as owned records (in segment —
+/// i.e. `(entity, event_ts, creation_ts)` — order).
+pub fn load_table(path: &Path) -> Result<Vec<FeatureRecord>> {
+    Ok(load_segment(path)?.iter().map(|r| r.to_record()).collect())
 }
 
 #[cfg(test)]
 mod tests {
     use super::*;
-
-    fn tmpfile(tag: &str) -> std::path::PathBuf {
-        std::env::temp_dir().join(format!("geofs-seg-{}-{tag}.gfseg", std::process::id()))
-    }
+    use crate::testkit::TempDir;
 
     #[test]
-    fn roundtrip() {
-        let path = tmpfile("rt");
+    fn roundtrip_preserves_sorted_rows() {
+        let dir = TempDir::new("seg-rt");
+        let path = dir.file("t.gfseg");
         let rows = vec![
-            FeatureRecord::new(1, 100, 150, vec![1.0, 2.0, f32::INFINITY]),
             FeatureRecord::new(u64::MAX, -5, 0, vec![]),
+            FeatureRecord::new(1, 100, 150, vec![1.0, 2.0, f32::INFINITY]),
         ];
         persist_table(&path, &rows.iter().collect::<Vec<_>>()).unwrap();
         let got = load_table(&path).unwrap();
-        assert_eq!(got, rows);
-        std::fs::remove_file(&path).unwrap();
+        // Persist sorts by (entity, event_ts, creation_ts).
+        assert_eq!(got.len(), 2);
+        assert_eq!(got[0], rows[1]);
+        assert_eq!(got[1], rows[0]);
+    }
+
+    #[test]
+    fn segment_roundtrip_is_columnar_identical() {
+        let dir = TempDir::new("seg-col");
+        let path = dir.file("t.gfseg");
+        let seg = Segment::from_unsorted(vec![
+            FeatureRecord::new(3, 30, 40, vec![0.25]),
+            FeatureRecord::new(1, 10, 20, vec![1.0, -2.0]),
+            FeatureRecord::new(1, 10, 99, vec![]),
+        ]);
+        persist_segment(&path, &seg).unwrap();
+        let got = load_segment(&path).unwrap();
+        assert_eq!(got.entities(), seg.entities());
+        assert_eq!(got.event_ts(), seg.event_ts());
+        assert_eq!(got.creation_ts(), seg.creation_ts());
+        for i in 0..seg.len() {
+            assert_eq!(got.values_of(i), seg.values_of(i));
+        }
+        assert_eq!(got.stats(), seg.stats());
     }
 
     #[test]
     fn detects_corruption() {
-        let path = tmpfile("corrupt");
+        let dir = TempDir::new("seg-corrupt");
+        let path = dir.file("t.gfseg");
         let rows = vec![FeatureRecord::new(1, 2, 3, vec![4.0])];
         persist_table(&path, &rows.iter().collect::<Vec<_>>()).unwrap();
         // Flip a payload byte.
@@ -128,22 +202,36 @@ mod tests {
         bytes[mid] ^= 0xff;
         std::fs::write(&path, &bytes).unwrap();
         assert!(load_table(&path).is_err());
-        std::fs::remove_file(&path).unwrap();
     }
 
     #[test]
-    fn rejects_non_segment() {
-        let path = tmpfile("junk");
-        std::fs::write(&path, b"hello world, definitely not a segment").unwrap();
-        assert!(load_table(&path).is_err());
-        std::fs::remove_file(&path).unwrap();
+    fn rejects_non_segment_and_old_format() {
+        let dir = TempDir::new("seg-junk");
+        let junk = dir.file("junk.gfseg");
+        std::fs::write(&junk, b"hello world, definitely not a segment").unwrap();
+        assert!(load_table(&junk).is_err());
+        // A v1 magic is rejected cleanly, not misparsed.
+        let old = dir.file("old.gfseg");
+        std::fs::write(&old, b"GFSEG1\0\0rest-of-an-old-file").unwrap();
+        assert!(load_table(&old).is_err());
+    }
+
+    #[test]
+    fn persist_table_collapses_duplicate_keys() {
+        let dir = TempDir::new("seg-dup");
+        let path = dir.file("t.gfseg");
+        let r = FeatureRecord::new(1, 2, 3, vec![4.0]);
+        persist_table(&path, &[&r, &r, &r]).unwrap();
+        let got = load_table(&path).unwrap();
+        assert_eq!(got, vec![r]);
     }
 
     #[test]
     fn empty_table() {
-        let path = tmpfile("empty");
+        let dir = TempDir::new("seg-empty");
+        let path = dir.file("t.gfseg");
         persist_table(&path, &[]).unwrap();
         assert_eq!(load_table(&path).unwrap(), vec![]);
-        std::fs::remove_file(&path).unwrap();
+        assert!(load_segment(&path).unwrap().is_empty());
     }
 }

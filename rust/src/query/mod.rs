@@ -1,10 +1,16 @@
 //! Query subsystem: point-in-time correct feature retrieval (§4.4).
 //!
-//! * [`pit`] — the leakage-prevention join: for an observation at time
+//! * [`pit`] — the leakage-prevention rule: for an observation at time
 //!   `ts₀`, return feature values strictly from the past of `ts₀`,
 //!   nearest-past first, honoring the expected source/feature delay.
-//! * [`offline`] — offline (training) retrieval over the offline store,
-//!   including on-the-fly calculation for unmaterialized feature sets.
+//!   Hosts the linear-scan [`pit::pit_lookup`] oracle and the
+//!   [`pit::PitIndex`] baseline retained for differential tests.
+//! * [`offline`] — the offline (training) engine: a streaming
+//!   merge-join of the entity-sorted spine against the offline store's
+//!   sorted columnar segments, fanned out per table / per entity chunk
+//!   over the shared thread pool, assembling a columnar
+//!   [`offline::TrainingFrame`]. No per-query index build, no
+//!   full-table record clones.
 //! * [`spec`] — feature retrieval specs (`featureset:version:feature`).
 
 pub mod offline;

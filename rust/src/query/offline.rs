@@ -2,24 +2,58 @@
 //! against one or more feature sets from the offline store (§2.1
 //! "Offline feature retrieval to support point-in-time joins with high
 //! data throughput").
+//!
+//! # The streaming merge-join (PR 2 rebuild)
+//!
+//! The engine no longer scans the table into a `Vec<FeatureRecord>` and
+//! builds a hash-of-sorted-vectors index per query. Instead:
+//!
+//! 1. The spine is sorted once by `(entity, ts)` — the same order the
+//!    offline store's columnar segments are sorted in.
+//! 2. Each table contributes an [`OfflineStore::snapshot`]: `Arc`-shared
+//!    sorted segments. For each spine entity, the engine binary-searches
+//!    each segment's **entity run** (advancing a per-segment cursor,
+//!    since spine entities ascend) and k-way-merges the runs into one
+//!    `(event_ts, creation_ts)`-sorted candidate list — a merge of
+//!    presorted runs, not a sort, touching only spine entities inside
+//!    the scan window.
+//! 3. Each observation resolves against that candidate list with the
+//!    §4.4 PIT rule (nearest past, latest available version, staleness
+//!    and availability-slack guards). Only the winning row's requested
+//!    value columns are copied into the frame — value planes are read
+//!    in place.
+//! 4. Per-table (and, for large spines, per-entity-chunk) joins fan out
+//!    over the shared [`ThreadPool`]; results scatter into a columnar
+//!    [`TrainingFrame`].
+//!
+//! The naive per-observation full-scan join ([`naive_training_frame`])
+//! is retained verbatim as the differential-test oracle and the bench
+//! baseline (experiment E4).
 
 use std::collections::HashMap;
 use std::sync::Arc;
 
-use super::pit::{Observation, PitConfig, PitIndex};
+use super::pit::{Observation, PitConfig};
 use super::spec::FeatureRef;
+use crate::exec::ThreadPool;
 use crate::metadata::assets::FeatureSetSpec;
-use crate::offline_store::OfflineStore;
-use crate::types::{FeatureWindow, FsError, Result, Timestamp};
+use crate::offline_store::{OfflineStore, Segment};
+use crate::types::{EntityId, FeatureWindow, FsError, Result, Timestamp};
 
-/// A training dataframe: one row per observation, one column per
-/// requested feature (None = no PIT-valid value).
+/// A training dataframe in columnar layout: one entry per observation
+/// per requested feature (`None` = no PIT-valid value). Cells live in
+/// one column-major buffer — `data[col * len() + row]` — matching the
+/// columnar store the frame is assembled from.
 #[derive(Debug, Clone, PartialEq)]
 pub struct TrainingFrame {
     pub columns: Vec<String>,
-    pub rows: Vec<TrainingRow>,
+    pub observations: Vec<Observation>,
+    /// Column-major cells: `data[col * observations.len() + row]`.
+    pub data: Vec<Option<f32>>,
 }
 
+/// One materialized row (a gather over the columnar buffer) — kept for
+/// row-oriented consumers (model trainers, examples).
 #[derive(Debug, Clone, PartialEq)]
 pub struct TrainingRow {
     pub observation: Observation,
@@ -27,26 +61,209 @@ pub struct TrainingRow {
 }
 
 impl TrainingFrame {
+    /// Number of observation rows.
+    pub fn len(&self) -> usize {
+        self.observations.len()
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.observations.is_empty()
+    }
+
+    /// One cell.
+    pub fn value(&self, row: usize, col: usize) -> Option<f32> {
+        self.data[col * self.len() + row]
+    }
+
+    /// One whole feature column, contiguous.
+    pub fn column(&self, col: usize) -> &[Option<f32>] {
+        &self.data[col * self.len()..(col + 1) * self.len()]
+    }
+
+    /// Row-oriented iteration (gathers across columns per row).
+    pub fn rows(&self) -> impl Iterator<Item = TrainingRow> + '_ {
+        (0..self.len()).map(move |i| TrainingRow {
+            observation: self.observations[i],
+            features: (0..self.columns.len()).map(|c| self.value(i, c)).collect(),
+        })
+    }
+
     /// Fraction of cells that resolved to a value.
     pub fn fill_rate(&self) -> f64 {
-        let total = self.rows.len() * self.columns.len();
-        if total == 0 {
+        if self.data.is_empty() {
             return 0.0;
         }
-        let filled: usize =
-            self.rows.iter().map(|r| r.features.iter().filter(|f| f.is_some()).count()).sum();
-        filled as f64 / total as f64
+        let filled = self.data.iter().filter(|c| c.is_some()).count();
+        filled as f64 / self.data.len() as f64
     }
 }
 
-/// Offline query engine bound to an offline store.
+/// One merge-join candidate: `(event_ts, creation_ts, segment, row)`.
+/// Rows never leave the segment — the tuple is the only per-candidate
+/// allocation, and values are read in place on resolution.
+type Candidate = (Timestamp, Timestamp, u32, u32);
+
+/// The §4.4 PIT rule over an `(event_ts, creation_ts)`-sorted candidate
+/// list — delegates to the single shared [`super::pit::pit_walk`]
+/// implementation also used by `PitIndex::lookup` (the differential
+/// tests in `tests/offline_stress.rs` pin the equivalence against the
+/// linear `pit_lookup` oracle).
+fn pit_pick(rows: &[Candidate], ts: Timestamp, cfg: PitConfig) -> Option<usize> {
+    super::pit::pit_walk(rows, |r| (r.0, r.1), ts, cfg)
+}
+
+/// Gather `entity`'s rows (within `window`) from every segment and
+/// k-way-merge the presorted runs into `out`, sorted by
+/// `(event_ts, creation_ts)`. `cursors` are per-segment positions that
+/// only move forward — valid because callers probe entities in
+/// ascending order.
+fn collect_candidates(
+    segs: &[Arc<Segment>],
+    cursors: &mut [usize],
+    entity: EntityId,
+    window: FeatureWindow,
+    heads: &mut Vec<(usize, usize, usize)>,
+    out: &mut Vec<Candidate>,
+) {
+    out.clear();
+    // (segment, next row, run end) per segment holding in-window rows;
+    // caller-owned scratch so the per-entity loop never allocates.
+    heads.clear();
+    for (si, seg) in segs.iter().enumerate() {
+        if !seg.may_contain_entity(entity) || !seg.overlaps_event_window(window) {
+            continue;
+        }
+        let (lo, hi) = seg.entity_run(entity, cursors[si]);
+        cursors[si] = hi;
+        let (wlo, whi) = seg.run_event_window(lo, hi, window);
+        if wlo < whi {
+            heads.push((si, wlo, whi));
+        }
+    }
+    if let &[(si, lo, hi)] = &heads[..] {
+        let seg = &segs[si];
+        for i in lo..hi {
+            out.push((seg.event_ts()[i], seg.creation_ts()[i], si as u32, i as u32));
+        }
+        return;
+    }
+    while !heads.is_empty() {
+        let mut b = 0;
+        let mut bkey = {
+            let (si, i, _) = heads[0];
+            (segs[si].event_ts()[i], segs[si].creation_ts()[i])
+        };
+        for (k, &(si, i, _)) in heads.iter().enumerate().skip(1) {
+            let key = (segs[si].event_ts()[i], segs[si].creation_ts()[i]);
+            if key < bkey {
+                b = k;
+                bkey = key;
+            }
+        }
+        let (si, i, hi) = heads[b];
+        out.push((bkey.0, bkey.1, si as u32, i as u32));
+        if i + 1 < hi {
+            heads[b].1 = i + 1;
+        } else {
+            heads.swap_remove(b);
+        }
+    }
+}
+
+/// One unit of fanned-out join work: a contiguous span of the sorted
+/// spine joined against one table's segment snapshot.
+struct JoinTask {
+    segs: Arc<Vec<Arc<Segment>>>,
+    obs: Arc<Vec<Observation>>,
+    /// Spine permutation, sorted by `(entity, ts)`.
+    order: Arc<Vec<u32>>,
+    /// Span `[lo, hi)` of `order` this task owns (entity-aligned).
+    lo: usize,
+    hi: usize,
+    /// Schema column indices to extract for this table.
+    cols: Arc<Vec<usize>>,
+    window: FeatureWindow,
+    cfg: PitConfig,
+}
+
+impl JoinTask {
+    /// Returns `span_len * cols.len()` cells, row-major within the span.
+    fn run(&self) -> Vec<Option<f32>> {
+        let n_cols = self.cols.len();
+        let span = &self.order[self.lo..self.hi];
+        let mut out = vec![None; span.len() * n_cols];
+        let mut cursors = vec![0usize; self.segs.len()];
+        let mut heads: Vec<(usize, usize, usize)> = Vec::new();
+        let mut cand: Vec<Candidate> = Vec::new();
+        let mut pos = 0;
+        while pos < span.len() {
+            let entity = self.obs[span[pos] as usize].entity;
+            let mut end = pos + 1;
+            while end < span.len() && self.obs[span[end] as usize].entity == entity {
+                end += 1;
+            }
+            collect_candidates(&self.segs, &mut cursors, entity, self.window, &mut heads, &mut cand);
+            if !cand.is_empty() {
+                for k in pos..end {
+                    let o = self.obs[span[k] as usize];
+                    if let Some(win) = pit_pick(&cand, o.ts, self.cfg) {
+                        let (_, _, si, ri) = cand[win];
+                        let vals = self.segs[si as usize].values_of(ri as usize);
+                        for (j, &col) in self.cols.iter().enumerate() {
+                            out[k * n_cols + j] = vals.get(col).copied();
+                        }
+                    }
+                }
+            }
+            pos = end;
+        }
+        out
+    }
+}
+
+/// Split the sorted spine into entity-aligned spans of at least
+/// `target` observations (one span when parallelism is off).
+fn chunk_spine(obs: &[Observation], order: &[u32], workers: usize) -> Vec<(usize, usize)> {
+    let n = order.len();
+    if workers <= 1 || n == 0 {
+        return vec![(0, n)];
+    }
+    let target = (n / (workers * 3)).max(256);
+    let mut chunks = Vec::new();
+    let mut start = 0;
+    while start < n {
+        let mut i = (start + target).min(n);
+        if i < n {
+            // Extend to the end of the entity straddling the boundary so
+            // no entity's candidate merge is done twice.
+            let e = obs[order[i - 1] as usize].entity;
+            while i < n && obs[order[i] as usize].entity == e {
+                i += 1;
+            }
+        }
+        chunks.push((start, i));
+        start = i;
+    }
+    chunks
+}
+
+/// Offline query engine bound to an offline store, optionally fanning
+/// work out over a shared thread pool.
 pub struct OfflineQueryEngine {
     store: Arc<OfflineStore>,
+    pool: Option<Arc<ThreadPool>>,
 }
 
 impl OfflineQueryEngine {
     pub fn new(store: Arc<OfflineStore>) -> Self {
-        OfflineQueryEngine { store }
+        OfflineQueryEngine { store, pool: None }
+    }
+
+    /// Engine that runs per-table / per-entity-chunk joins on `pool`.
+    /// Must not be invoked *from* a task already running on that pool
+    /// (the blocking joins could starve the queue).
+    pub fn with_pool(store: Arc<OfflineStore>, pool: Arc<ThreadPool>) -> Self {
+        OfflineQueryEngine { store, pool: Some(pool) }
     }
 
     /// PIT-join `observations` against `features`. Each feature ref must
@@ -59,80 +276,106 @@ impl OfflineQueryEngine {
         specs: &HashMap<String, FeatureSetSpec>,
         cfg: PitConfig,
     ) -> Result<TrainingFrame> {
-        if observations.is_empty() {
-            return Ok(TrainingFrame {
-                columns: features.iter().map(|f| f.to_string()).collect(),
-                rows: Vec::new(),
-            });
+        let columns: Vec<String> = features.iter().map(|f| f.to_string()).collect();
+        let n = observations.len();
+        if n == 0 {
+            return Ok(TrainingFrame { columns, observations: Vec::new(), data: Vec::new() });
         }
         let obs_min = observations.iter().map(|o| o.ts).min().unwrap();
         let obs_max = observations.iter().map(|o| o.ts).max().unwrap();
 
-        // Group feature refs per feature-set table so each table is
-        // scanned + indexed once (high-throughput path).
-        let mut per_table: HashMap<String, Vec<(usize, FeatureRef)>> = HashMap::new();
+        // Group feature refs per feature-set table, resolving schemas up
+        // front so errors surface before any work is scheduled.
+        // (table, granularity secs, [(frame col, schema col)])
+        let mut per_table: Vec<(String, i64, Vec<(usize, usize)>)> = Vec::new();
         for (col, f) in features.iter().enumerate() {
-            per_table.entry(f.table()).or_default().push((col, f.clone()));
+            let spec = specs
+                .get(&f.feature_set)
+                .ok_or_else(|| FsError::NotFound(format!("feature set spec '{}'", f.feature_set)))?;
+            let ci = f.column_index(spec)?;
+            let table = f.table();
+            match per_table.iter_mut().find(|(t, _, _)| *t == table) {
+                Some((_, _, cols)) => cols.push((col, ci)),
+                None => per_table.push((table, spec.granularity.secs(), vec![(col, ci)])),
+            }
         }
 
-        let mut rows: Vec<TrainingRow> = observations
-            .iter()
-            .map(|&observation| TrainingRow {
-                observation,
-                features: vec![None; features.len()],
-            })
-            .collect();
+        // The spine permutation, sorted by (entity, ts) — the merge-join
+        // driving order, computed once for every table.
+        let mut order: Vec<u32> = (0..n as u32).collect();
+        order.sort_unstable_by_key(|&i| {
+            let o = observations[i as usize];
+            (o.entity, o.ts)
+        });
+        let obs_arc = Arc::new(observations.to_vec());
+        let order_arc = Arc::new(order);
+        let workers = self.pool.as_ref().map(|p| p.worker_count()).unwrap_or(1);
+        let chunks = chunk_spine(&obs_arc, &order_arc, workers);
 
-        for (table, refs) in per_table {
-            let spec = specs.get(&refs[0].1.feature_set).ok_or_else(|| {
-                FsError::NotFound(format!("feature set spec '{}'", refs[0].1.feature_set))
-            })?;
-            // Column indices resolved against the schema once per table.
-            let cols: Vec<(usize, usize)> = refs
-                .iter()
-                .map(|(col, f)| f.column_index(spec).map(|ci| (*col, ci)))
-                .collect::<Result<_>>()?;
+        let mut data: Vec<Option<f32>> = vec![None; features.len() * n];
+        let mut tasks: Vec<JoinTask> = Vec::new();
+        let mut metas: Vec<(usize, usize, Vec<usize>)> = Vec::new();
 
+        for (table, gran_secs, cols) in &per_table {
+            let segs = self.store.snapshot(table);
+            if segs.is_empty() {
+                continue; // unknown/empty table: whole columns stay None
+            }
             // Scan window: far enough back that any record usable by the
             // earliest observation is included.
             let lookback = if cfg.max_staleness > 0 {
                 cfg.max_staleness
             } else {
-                // Unlimited staleness: scan from the table's own start.
+                // Unlimited staleness: reach back to the table's own start.
                 let table_start = self
                     .store
-                    .event_range(&table)
+                    .event_range(table)
                     .map(|(lo, _)| obs_min - lo)
                     .unwrap_or(0)
                     .max(0);
-                table_start + spec.granularity.secs()
+                table_start + gran_secs
             };
             let window = FeatureWindow::new(obs_min - lookback, obs_max + 1);
-            // Index only entities the spine actually references — for a
-            // small spine over a large table this skips most of the scan
-            // (EXPERIMENTS.md §Perf L3).
-            let wanted: std::collections::HashSet<_> =
-                observations.iter().map(|o| o.entity).collect();
-            let index = PitIndex::build(
-                self.store
-                    .scan(&table, window)
-                    .into_iter()
-                    .filter(|r| wanted.contains(&r.entity)),
-            );
+            let segs = Arc::new(segs);
+            let schema_cols = Arc::new(cols.iter().map(|&(_, ci)| ci).collect::<Vec<_>>());
+            let frame_cols: Vec<usize> = cols.iter().map(|&(c, _)| c).collect();
+            for &(lo, hi) in &chunks {
+                tasks.push(JoinTask {
+                    segs: segs.clone(),
+                    obs: obs_arc.clone(),
+                    order: order_arc.clone(),
+                    lo,
+                    hi,
+                    cols: schema_cols.clone(),
+                    window,
+                    cfg,
+                });
+                metas.push((lo, hi, frame_cols.clone()));
+            }
+        }
 
-            for row in rows.iter_mut() {
-                if let Some(rec) = index.lookup(row.observation, cfg) {
-                    for &(col, ci) in &cols {
-                        row.features[col] = rec.values.get(ci).copied();
-                    }
+        let results: Vec<Vec<Option<f32>>> = match &self.pool {
+            Some(pool) if tasks.len() > 1 => pool.map(tasks, |t: JoinTask| t.run()),
+            // Consume the tasks either way so every Arc ref drops before
+            // the frame reclaims the spine below.
+            _ => tasks.into_iter().map(|t| t.run()).collect(),
+        };
+
+        // Scatter span-local cells into the columnar frame.
+        for ((lo, hi, frame_cols), cells) in metas.into_iter().zip(results) {
+            let n_cols = frame_cols.len();
+            for local in 0..(hi - lo) {
+                let row = order_arc[lo + local] as usize;
+                for (j, &col) in frame_cols.iter().enumerate() {
+                    data[col * n + row] = cells[local * n_cols + j];
                 }
             }
         }
 
-        Ok(TrainingFrame {
-            columns: features.iter().map(|f| f.to_string()).collect(),
-            rows,
-        })
+        // All tasks have dropped their Arc refs; reclaim the spine copy
+        // instead of cloning it a second time for the frame.
+        let observations = Arc::try_unwrap(obs_arc).unwrap_or_else(|a| a.as_ref().clone());
+        Ok(TrainingFrame { columns, observations, data })
     }
 
     /// Was the window fully materialized when read? The caller combines
@@ -144,7 +387,8 @@ impl OfflineQueryEngine {
 }
 
 /// Naive full-scan join baseline (per-observation linear scan) — the
-/// comparator for `benches/pit_join.rs` (experiment E4).
+/// differential-test oracle and the comparator for `benches/pit_join.rs`
+/// (experiment E4).
 pub fn naive_training_frame(
     store: &OfflineStore,
     observations: &[Observation],
@@ -152,9 +396,10 @@ pub fn naive_training_frame(
     specs: &HashMap<String, FeatureSetSpec>,
     cfg: PitConfig,
 ) -> Result<TrainingFrame> {
-    let mut rows = Vec::with_capacity(observations.len());
-    for &observation in observations {
-        let mut feats = vec![None; features.len()];
+    let columns: Vec<String> = features.iter().map(|f| f.to_string()).collect();
+    let n = observations.len();
+    let mut data: Vec<Option<f32>> = vec![None; features.len() * n];
+    for (row, &observation) in observations.iter().enumerate() {
         for (col, f) in features.iter().enumerate() {
             let spec = specs
                 .get(&f.feature_set)
@@ -162,17 +407,19 @@ pub fn naive_training_frame(
             let ci = f.column_index(spec)?;
             let all = store.scan(&f.table(), scan_all_window(store, &f.table(), observation.ts));
             if let Some(rec) = super::pit::pit_lookup(&all, observation, cfg) {
-                feats[col] = rec.values.get(ci).copied();
+                data[col * n + row] = rec.values.get(ci).copied();
             }
         }
-        rows.push(TrainingRow { observation, features: feats });
     }
-    Ok(TrainingFrame { columns: features.iter().map(|f| f.to_string()).collect(), rows })
+    Ok(TrainingFrame { columns, observations: observations.to_vec(), data })
 }
 
 fn scan_all_window(store: &OfflineStore, table: &str, until: Timestamp) -> FeatureWindow {
-    let lo = store.event_range(table).map(|(lo, _)| lo).unwrap_or(0).min(until - 1);
-    FeatureWindow::new(lo, until)
+    // Inclusive end: with the end-of-bin convention (§4.5.1) a record
+    // with `event_ts == until` is admissible, exactly as `pit_lookup`
+    // admits it — the oracle's scan window must not hide such records.
+    let lo = store.event_range(table).map(|(lo, _)| lo).unwrap_or(0).min(until);
+    FeatureWindow::new(lo, until + 1)
 }
 
 #[cfg(test)]
@@ -225,21 +472,32 @@ mod tests {
             .get_training_frame(&obs, &refs(&["720h_sum", "720h_cnt"]), &specs, PitConfig::default())
             .unwrap();
         assert_eq!(frame.columns.len(), 2);
-        assert_eq!(frame.rows[0].features[0], Some(10.0));
-        assert_eq!(frame.rows[1].features[0], Some(20.0));
-        assert_eq!(frame.rows[1].features[1], Some(2.0));
-        assert_eq!(frame.rows[2].features[0], None); // availability guard
-        assert_eq!(frame.rows[3].features[0], None);
+        assert_eq!(frame.len(), 4);
+        assert_eq!(frame.value(0, 0), Some(10.0));
+        assert_eq!(frame.value(1, 0), Some(20.0));
+        assert_eq!(frame.value(1, 1), Some(2.0));
+        assert_eq!(frame.value(2, 0), None); // availability guard
+        assert_eq!(frame.value(3, 0), None);
         assert!((frame.fill_rate() - 0.5).abs() < 1e-9);
+        // Row gather matches the columnar cells.
+        let rows: Vec<TrainingRow> = frame.rows().collect();
+        assert_eq!(rows[1].observation, obs[1]);
+        assert_eq!(rows[1].features, vec![Some(20.0), Some(2.0)]);
+        // Whole-column access is contiguous.
+        assert_eq!(frame.column(0), &[Some(10.0), Some(20.0), None, None]);
     }
 
     #[test]
     fn matches_naive_baseline() {
         let (q, specs) = setup();
         let features = refs(&["720h_sum", "720h_max"]);
-        let obs: Vec<Observation> = (0..40)
+        let mut obs: Vec<Observation> = (0..40)
             .map(|i| Observation { entity: 1 + (i % 3), ts: DAY / 2 + i as i64 * 6_000 })
             .collect();
+        // Exercise the inclusive-end boundary: observation exactly at an
+        // event timestamp.
+        obs.push(Observation { entity: 1, ts: DAY });
+        obs.push(Observation { entity: 1, ts: 2 * DAY });
         for cfg in [
             PitConfig::default(),
             PitConfig { availability_slack: 500, max_staleness: 0 },
@@ -252,12 +510,83 @@ mod tests {
     }
 
     #[test]
+    fn pooled_engine_matches_sequential() {
+        // Two tables and a spine large enough to split into several
+        // entity chunks: the pool path (per-table × per-chunk tasks) must
+        // scatter back to exactly the sequential result.
+        let (q, mut specs) = setup();
+        specs.insert(
+            "click".to_string(),
+            FeatureSetSpec::rolling(
+                "click",
+                1,
+                "customer",
+                SourceSpec::synthetic(0),
+                Granularity::daily(),
+                30,
+            ),
+        );
+        for e in 0..5u64 {
+            for d in 1..4i64 {
+                q.store().merge(
+                    "click:1",
+                    &[FeatureRecord::new(
+                        e,
+                        d * DAY,
+                        d * DAY + 50,
+                        vec![e as f32 + d as f32, 1.0, 0.0, 0.0, 0.0],
+                    )],
+                );
+            }
+        }
+        let pooled =
+            OfflineQueryEngine::with_pool(q.store().clone(), Arc::new(ThreadPool::new(3)));
+        let mut features = refs(&["720h_sum", "720h_cnt", "720h_max"]);
+        features.push(FeatureRef::parse("click:1:720h_sum").unwrap());
+        let obs: Vec<Observation> = (0..1_000)
+            .map(|i| Observation { entity: i % 5, ts: DAY / 3 + i as i64 * 300 })
+            .collect();
+        let cfg = PitConfig { availability_slack: 100, max_staleness: 3 * DAY };
+        let seq = q.get_training_frame(&obs, &features, &specs, cfg).unwrap();
+        let par = pooled.get_training_frame(&obs, &features, &specs, cfg).unwrap();
+        assert_eq!(seq, par);
+        assert!(par.fill_rate() > 0.0);
+    }
+
+    #[test]
+    fn exact_event_ts_is_admissible_when_available() {
+        // End-of-bin convention: a record whose event_ts equals the
+        // observation time is served as long as it was created by then —
+        // on both the engine and the oracle path.
+        let store = Arc::new(OfflineStore::new());
+        store.merge("txn:1", &[FeatureRecord::new(1, 100, 100, vec![5.0, 1.0, 5.0, 5.0, 5.0])]);
+        let spec = FeatureSetSpec::rolling(
+            "txn",
+            1,
+            "customer",
+            SourceSpec::synthetic(0),
+            Granularity::daily(),
+            30,
+        );
+        let mut specs = HashMap::new();
+        specs.insert("txn".to_string(), spec);
+        let q = OfflineQueryEngine::new(store);
+        let obs = vec![Observation { entity: 1, ts: 100 }];
+        let features = refs(&["720h_sum"]);
+        let fast = q.get_training_frame(&obs, &features, &specs, PitConfig::default()).unwrap();
+        let slow =
+            naive_training_frame(q.store(), &obs, &features, &specs, PitConfig::default()).unwrap();
+        assert_eq!(fast.value(0, 0), Some(5.0));
+        assert_eq!(fast, slow);
+    }
+
+    #[test]
     fn empty_observations_ok() {
         let (q, specs) = setup();
         let frame = q
             .get_training_frame(&[], &refs(&["720h_sum"]), &specs, PitConfig::default())
             .unwrap();
-        assert!(frame.rows.is_empty());
+        assert!(frame.is_empty());
         assert_eq!(frame.fill_rate(), 0.0);
     }
 
@@ -271,5 +600,25 @@ mod tests {
         assert!(q
             .get_training_frame(&obs, &bad_feature, &specs, PitConfig::default())
             .is_err());
+    }
+
+    #[test]
+    fn chunking_is_entity_aligned_and_covering() {
+        let obs: Vec<Observation> =
+            (0..1_000).map(|i| Observation { entity: (i / 10) as u64, ts: i as i64 }).collect();
+        let mut order: Vec<u32> = (0..obs.len() as u32).collect();
+        order.sort_unstable_by_key(|&i| (obs[i as usize].entity, obs[i as usize].ts));
+        let chunks = chunk_spine(&obs, &order, 4);
+        assert!(chunks.len() > 1);
+        // Covering and contiguous.
+        assert_eq!(chunks[0].0, 0);
+        assert_eq!(chunks.last().unwrap().1, obs.len());
+        for pair in chunks.windows(2) {
+            assert_eq!(pair[0].1, pair[1].0);
+            // Entity-aligned: an entity never straddles a boundary.
+            let left = obs[order[pair[0].1 - 1] as usize].entity;
+            let right = obs[order[pair[1].0] as usize].entity;
+            assert_ne!(left, right);
+        }
     }
 }

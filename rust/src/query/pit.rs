@@ -73,37 +73,50 @@ impl PitIndex {
     /// The PIT lookup for one observation.
     pub fn lookup(&self, obs: Observation, cfg: PitConfig) -> Option<&FeatureRecord> {
         let rows = self.by_entity.get(&obs.entity)?;
-        // Binary search for the first event_ts > ts0 (inclusive-end
-        // semantics), then walk left past unavailable record versions.
-        let mut idx = rows.partition_point(|r| r.event_ts <= obs.ts);
-        // Walk backwards over event timestamps (and, within an event
-        // timestamp, prefer the *latest available* creation version).
-        while idx > 0 {
-            idx -= 1;
-            let candidate_event = rows[idx].event_ts;
-            if cfg.max_staleness > 0 && candidate_event < obs.ts - cfg.max_staleness {
-                return None; // everything further left is older still
-            }
-            // Scan the run of records sharing this event_ts (sorted by
-            // creation_ts ascending) from newest creation down.
-            let run_start = rows[..idx + 1].partition_point(|r| r.event_ts < candidate_event);
-            let mut j = idx;
-            loop {
-                let r = &rows[j];
-                if r.creation_ts + cfg.availability_slack <= obs.ts {
-                    return Some(r);
-                }
-                if j == run_start {
-                    break;
-                }
-                j -= 1;
-            }
-            // No version of this event_ts was available at ts0; try the
-            // previous event_ts.
-            idx = run_start;
-        }
-        None
+        pit_walk(rows, |r| (r.event_ts, r.creation_ts), obs.ts, cfg).map(|i| &rows[i])
     }
+}
+
+/// The core §4.4 walk over one entity's rows sorted by
+/// `(event_ts, creation_ts)`: binary-search the first event past `ts`
+/// (inclusive-end semantics), then walk event timestamps leftward,
+/// preferring the *latest available* creation version within each event
+/// and stopping at the staleness horizon. Returns the winning row index.
+///
+/// Shared by [`PitIndex::lookup`] and the offline engine's merge-join
+/// candidate resolution, so the leakage-guard rule has exactly one
+/// implementation.
+pub(crate) fn pit_walk<K>(
+    rows: &[K],
+    key: impl Fn(&K) -> (Timestamp, Timestamp),
+    ts: Timestamp,
+    cfg: PitConfig,
+) -> Option<usize> {
+    let mut idx = rows.partition_point(|r| key(r).0 <= ts);
+    while idx > 0 {
+        idx -= 1;
+        let candidate_event = key(&rows[idx]).0;
+        if cfg.max_staleness > 0 && candidate_event < ts - cfg.max_staleness {
+            return None; // everything further left is older still
+        }
+        // Scan the run of rows sharing this event_ts (sorted by
+        // creation_ts ascending) from newest creation down.
+        let run_start = rows[..idx + 1].partition_point(|r| key(r).0 < candidate_event);
+        let mut j = idx;
+        loop {
+            if key(&rows[j]).1 + cfg.availability_slack <= ts {
+                return Some(j);
+            }
+            if j == run_start {
+                break;
+            }
+            j -= 1;
+        }
+        // No version of this event_ts was available at ts; try the
+        // previous event_ts.
+        idx = run_start;
+    }
+    None
 }
 
 /// Convenience: single lookup without a prebuilt index.

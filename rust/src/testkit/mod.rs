@@ -1,6 +1,87 @@
 //! Test support: a small property-testing framework (proptest is not
-//! available offline) and shared fixtures.
+//! available offline), an RAII temp-dir guard, and shared fixtures.
 
 pub mod prop;
 
 pub use prop::{forall, Gen};
+
+use std::path::{Path, PathBuf};
+use std::sync::atomic::{AtomicU64, Ordering};
+
+static TEMP_SEQ: AtomicU64 = AtomicU64::new(0);
+
+/// RAII temporary directory: unique per instance, removed on drop —
+/// including drop during unwinding, so a failing assertion in the middle
+/// of a persistence test no longer strands files in `$TMPDIR` (and a
+/// rerun never sees a stale directory).
+#[derive(Debug)]
+pub struct TempDir {
+    path: PathBuf,
+}
+
+impl TempDir {
+    /// Create `$TMPDIR/geofs-<tag>-<pid>-<seq>`, fresh and empty.
+    pub fn new(tag: &str) -> TempDir {
+        let seq = TEMP_SEQ.fetch_add(1, Ordering::Relaxed);
+        let path = std::env::temp_dir().join(format!(
+            "geofs-{tag}-{}-{seq}",
+            std::process::id()
+        ));
+        let _ = std::fs::remove_dir_all(&path);
+        std::fs::create_dir_all(&path).expect("create temp dir");
+        TempDir { path }
+    }
+
+    pub fn path(&self) -> &Path {
+        &self.path
+    }
+
+    /// A file path inside the directory (not created).
+    pub fn file(&self, name: &str) -> PathBuf {
+        self.path.join(name)
+    }
+}
+
+impl Drop for TempDir {
+    fn drop(&mut self) {
+        let _ = std::fs::remove_dir_all(&self.path);
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn tempdir_is_fresh_and_cleaned() {
+        let kept;
+        {
+            let d = TempDir::new("unit");
+            kept = d.path().to_path_buf();
+            assert!(kept.exists());
+            std::fs::write(d.file("x.bin"), b"data").unwrap();
+        }
+        assert!(!kept.exists(), "guard must remove the directory on drop");
+    }
+
+    #[test]
+    fn tempdir_cleans_on_panic() {
+        let kept = std::sync::Arc::new(std::sync::Mutex::new(PathBuf::new()));
+        let k2 = kept.clone();
+        let result = std::panic::catch_unwind(move || {
+            let d = TempDir::new("panic");
+            *k2.lock().unwrap() = d.path().to_path_buf();
+            std::fs::write(d.file("y.bin"), b"data").unwrap();
+            panic!("boom");
+        });
+        assert!(result.is_err());
+        assert!(!kept.lock().unwrap().exists(), "guard must clean up during unwinding");
+    }
+
+    #[test]
+    fn tempdirs_are_unique() {
+        let a = TempDir::new("uniq");
+        let b = TempDir::new("uniq");
+        assert_ne!(a.path(), b.path());
+    }
+}

@@ -52,7 +52,7 @@ fn full_pipeline_materialize_query_serve() {
             "eastus",
         )
         .unwrap();
-    assert_eq!(frame.rows.len(), 200);
+    assert_eq!(frame.len(), 200);
     assert!(frame.fill_rate() > 0.9, "fill rate {:.3}", frame.fill_rate());
 
     // Online serving hits for every customer with any history.

@@ -9,19 +9,14 @@ use geofs::exec::{RetryPolicy, ThreadPool};
 use geofs::geo::failover::FailoverManager;
 use geofs::scheduler::Scheduler;
 use geofs::sim::{ChurnWorkload, ChurnWorkloadConfig};
+use geofs::testkit::TempDir;
 use geofs::types::time::DAY;
 use geofs::types::{FeatureWindow, FsError};
 use geofs::util::Clock;
 
-fn tmpdir(tag: &str) -> std::path::PathBuf {
-    let d = std::env::temp_dir().join(format!("geofs-it-fo-{}-{tag}", std::process::id()));
-    let _ = std::fs::remove_dir_all(&d);
-    d
-}
-
 #[test]
 fn full_failover_no_loss_no_rework() {
-    let dir = tmpdir("full");
+    let dir = TempDir::new("it-fo-full");
     // Primary runs 5 days.
     let fs = FeatureStore::open(Config::default_geo(), OpenOptions::default()).unwrap();
     let w = ChurnWorkload::install(
@@ -35,7 +30,7 @@ fn full_failover_no_loss_no_rework() {
     }
     let rows = fs.offline.row_count(&w.txn_table);
     let latest_before = fs.offline.latest_per_entity(&w.txn_table);
-    let cp = fs.checkpoint(dir.clone()).unwrap();
+    let cp = fs.checkpoint(dir.path().to_path_buf()).unwrap();
 
     // Outage.
     fs.topology.set_down("eastus", true);
@@ -67,7 +62,6 @@ fn full_failover_no_loss_no_rework() {
         standby_sched.gaps(&w.txn_table, FeatureWindow::new(0, 6 * DAY)),
         vec![FeatureWindow::new(5 * DAY, 6 * DAY)]
     );
-    let _ = std::fs::remove_dir_all(&dir);
 }
 
 #[test]
@@ -105,7 +99,7 @@ fn replica_survives_home_outage() {
 
 #[test]
 fn checkpoint_is_cheap_and_idempotent() {
-    let dir = tmpdir("idem");
+    let dir = TempDir::new("it-fo-idem");
     let fs = FeatureStore::open(
         Config::default_geo(),
         OpenOptions { with_engine: false, ..Default::default() },
@@ -120,11 +114,10 @@ fn checkpoint_is_cheap_and_idempotent() {
         fs.clock.set(day * DAY);
         fs.materialize_tick(&w.txn_table).unwrap();
     }
-    let cp1 = fs.checkpoint(dir.clone()).unwrap();
-    let cp2 = fs.checkpoint(dir.clone()).unwrap();
+    let cp1 = fs.checkpoint(dir.path().to_path_buf()).unwrap();
+    let cp2 = fs.checkpoint(dir.path().to_path_buf()).unwrap();
     assert_eq!(cp1.coverage, cp2.coverage);
     // Restoring from either gives the same offline rows.
     let off1 = geofs::offline_store::OfflineStore::load(&cp1.offline_dir).unwrap();
     assert_eq!(off1.row_count(&w.txn_table), fs.offline.row_count(&w.txn_table));
-    let _ = std::fs::remove_dir_all(&dir);
 }

@@ -90,7 +90,7 @@ fn training_matches_serving_no_skew() {
             "local",
         )
         .unwrap();
-    for ((_, _, served_value), row) in served.iter().zip(&frame.rows) {
+    for ((_, _, served_value), row) in served.iter().zip(frame.rows()) {
         assert_eq!(
             row.features[0], *served_value,
             "training value diverged from what serving returned (skew)"

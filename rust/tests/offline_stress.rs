@@ -1,0 +1,273 @@
+//! Differential + stress coverage for the columnar offline store and
+//! the streaming PIT merge-join engine (PR 2 tentpole).
+//!
+//! * `prop_merge_join_matches_naive_oracle` — hundreds of seeded random
+//!   cases (records merged in random batch sizes over a tiny spill
+//!   threshold, random spines including exact `event_ts` hits and
+//!   unknown entities, random availability/staleness configs): the
+//!   columnar merge-join — sequential *and* thread-pool fanned — must
+//!   equal the retained `naive_training_frame` linear-scan oracle cell
+//!   for cell.
+//! * `merge_while_query_stress` — concurrent writers (same record set,
+//!   shuffled: Alg 2 idempotence under contention), a compaction thread
+//!   churning the physical layout, and PIT readers asserting leak
+//!   freedom and forward-only winners, mirroring
+//!   `tests/online_stress.rs` for the offline path.
+
+use std::collections::HashMap;
+use std::sync::atomic::{AtomicBool, Ordering};
+use std::sync::Arc;
+
+use geofs::exec::ThreadPool;
+use geofs::metadata::assets::{FeatureSetSpec, SourceSpec};
+use geofs::offline_store::OfflineStore;
+use geofs::query::offline::{naive_training_frame, OfflineQueryEngine};
+use geofs::query::pit::{Observation, PitConfig};
+use geofs::query::spec::FeatureRef;
+use geofs::testkit::prop::{forall, Gen};
+use geofs::types::time::Granularity;
+use geofs::types::FeatureRecord;
+use geofs::util::rng::Rng;
+
+fn spec_map() -> HashMap<String, FeatureSetSpec> {
+    let mut specs = HashMap::new();
+    specs.insert(
+        "txn".to_string(),
+        FeatureSetSpec::rolling(
+            "txn",
+            1,
+            "customer",
+            SourceSpec::synthetic(0),
+            Granularity::daily(),
+            30,
+        ),
+    );
+    specs
+}
+
+/// Compact record encoding: (entity, event_ts, creation_delta ≥ 0).
+/// Values are a pure function of the uniqueness key so duplicate
+/// generation cannot make delivery order observable.
+type R = (u64, i64, i64);
+
+fn to_rec(r: &R) -> FeatureRecord {
+    let v = (r.0 as i64 * 131 + r.1 * 7 + r.2) as f32;
+    FeatureRecord::new(r.0, r.1, r.1 + r.2, vec![v, v + 0.5])
+}
+
+fn gen_records(max_len: usize) -> Gen<Vec<R>> {
+    Gen::new(move |rng: &mut Rng| {
+        let n = rng.below(max_len as u64 + 1) as usize;
+        (0..n)
+            .map(|_| (rng.below(6), rng.range(0, 400), rng.range(0, 200)))
+            .collect()
+    })
+}
+
+#[test]
+fn prop_merge_join_matches_naive_oracle() {
+    let pool = Arc::new(ThreadPool::new(3));
+    let specs = spec_map();
+    let features = vec![
+        FeatureRef::parse("txn:1:720h_sum").unwrap(),
+        FeatureRef::parse("txn:1:720h_cnt").unwrap(),
+    ];
+    forall("merge-join-vs-naive", 150, &gen_records(40), |rs| {
+        // Tiny spill threshold: cases exercise multi-segment k-way
+        // merges plus the unsealed delta mini-segment.
+        let store = Arc::new(OfflineStore::with_spill_threshold(5));
+        let recs: Vec<FeatureRecord> = rs.iter().map(to_rec).collect();
+        let mut rng = Rng::new(rs.len() as u64 * 1_000_003 + 17);
+        let mut i = 0;
+        while i < recs.len() {
+            let end = (i + 1 + rng.below(7) as usize).min(recs.len());
+            store.merge("txn:1", &recs[i..end]);
+            i = end;
+        }
+        if rng.bool(0.3) {
+            store.compact("txn:1");
+        }
+        // Random spine: unknown entities, and ~25% of timestamps landing
+        // exactly on an event_ts (the inclusive-end boundary).
+        let n_obs = rng.below(30) as usize;
+        let mut obs = Vec::with_capacity(n_obs);
+        for _ in 0..n_obs {
+            let entity = rng.below(8);
+            let ts = if !recs.is_empty() && rng.bool(0.25) {
+                rng.pick(&recs).event_ts
+            } else {
+                rng.range(-50, 700)
+            };
+            obs.push(Observation { entity, ts });
+        }
+        let cfg = PitConfig {
+            availability_slack: if rng.bool(0.5) { 0 } else { rng.range(1, 80) },
+            max_staleness: if rng.bool(0.5) { 0 } else { rng.range(1, 500) },
+        };
+        let seq = OfflineQueryEngine::new(store.clone());
+        let fanned = OfflineQueryEngine::with_pool(store.clone(), pool.clone());
+        let fast =
+            seq.get_training_frame(&obs, &features, &specs, cfg).map_err(|e| e.to_string())?;
+        let par =
+            fanned.get_training_frame(&obs, &features, &specs, cfg).map_err(|e| e.to_string())?;
+        let slow = naive_training_frame(&store, &obs, &features, &specs, cfg)
+            .map_err(|e| e.to_string())?;
+        if fast != slow {
+            return Err(format!(
+                "merge-join diverged from oracle (cfg {cfg:?}, shape {:?})",
+                store.storage_shape("txn:1")
+            ));
+        }
+        if par != fast {
+            return Err("pooled engine diverged from sequential".into());
+        }
+        Ok(())
+    });
+}
+
+// ---- merge-while-query stress ------------------------------------------
+
+const STRESS_ENTITIES: u64 = 16;
+const EVENTS_PER_ENTITY: i64 = 120;
+const EVENT_STEP: i64 = 10;
+const DELAY: i64 = 25;
+
+/// Entity `e`'s `k`-th record: event `k * STEP`, materialized `DELAY`
+/// later, value column 0 encodes the event timestamp so readers can
+/// verify exactly which record won a PIT lookup.
+fn stress_rec(entity: u64, k: i64) -> FeatureRecord {
+    let event = k * EVENT_STEP;
+    FeatureRecord::new(entity, event, event + DELAY, vec![event as f32, entity as f32])
+}
+
+#[test]
+fn merge_while_query_stress() {
+    let store = Arc::new(OfflineStore::with_spill_threshold(64));
+    let pool = Arc::new(ThreadPool::new(2));
+    let specs = spec_map();
+    let features = vec![FeatureRef::parse("txn:1:720h_sum").unwrap()];
+    let done = Arc::new(AtomicBool::new(false));
+
+    // Fixed spine: entities including two unknown ones, timestamps
+    // spread over (and past) the event range. Large enough that the
+    // pooled reader's join splits into several entity chunks.
+    let ts_mod = EVENTS_PER_ENTITY * EVENT_STEP + 100;
+    let spine: Vec<Observation> = (0..1_200u64)
+        .map(|i| Observation {
+            entity: i % (STRESS_ENTITIES + 2),
+            ts: (i as i64 * 7) % ts_mod,
+        })
+        .collect();
+
+    std::thread::scope(|s| {
+        // Two writers merge the SAME record set in different orders:
+        // Alg 2 idempotence under write/write contention.
+        let writers: Vec<_> = (0..2u64)
+            .map(|w| {
+                let store = store.clone();
+                s.spawn(move || {
+                    let mut rng = Rng::new(0x5eed ^ w);
+                    let mut all: Vec<FeatureRecord> = (0..STRESS_ENTITIES)
+                        .flat_map(|e| (0..EVENTS_PER_ENTITY).map(move |k| stress_rec(e, k)))
+                        .collect();
+                    rng.shuffle(&mut all);
+                    for chunk in all.chunks(37) {
+                        store.merge("txn:1", chunk);
+                    }
+                })
+            })
+            .collect();
+        // Compactor: churns the physical layout under the readers.
+        {
+            let store = store.clone();
+            let done = done.clone();
+            s.spawn(move || {
+                while !done.load(Ordering::Relaxed) {
+                    store.compact("txn:1");
+                    std::thread::yield_now();
+                }
+            });
+        }
+        // Readers: one sequential engine, one pool-fanned engine. Every
+        // returned cell must be leak-free, from the right entity's
+        // stream, and per-observation winners must only move forward as
+        // records land.
+        let mut readers = Vec::new();
+        for r in 0..2u64 {
+            let store = store.clone();
+            let done = done.clone();
+            let spine = spine.clone();
+            let specs = specs.clone();
+            let features = features.clone();
+            let pool = pool.clone();
+            readers.push(s.spawn(move || {
+                let engine = if r == 0 {
+                    OfflineQueryEngine::new(store.clone())
+                } else {
+                    OfflineQueryEngine::with_pool(store.clone(), pool)
+                };
+                let mut last: Vec<Option<f32>> = vec![None; spine.len()];
+                let mut iterations = 0u64;
+                loop {
+                    let frame = engine
+                        .get_training_frame(&spine, &features, &specs, PitConfig::default())
+                        .unwrap();
+                    for (i, o) in spine.iter().enumerate() {
+                        if let Some(v) = frame.value(i, 0) {
+                            assert!(o.entity < STRESS_ENTITIES, "unknown entity got a value");
+                            let event = v as i64;
+                            assert_eq!(event % EVENT_STEP, 0, "value not from a real record");
+                            assert!(
+                                event + DELAY <= o.ts,
+                                "unavailable record served (leak): event {event} at ts {}",
+                                o.ts
+                            );
+                            if let Some(prev) = last[i] {
+                                assert!(
+                                    v >= prev,
+                                    "PIT winner moved backwards at obs {i}: {prev} then {v}"
+                                );
+                            }
+                            last[i] = Some(v);
+                        }
+                    }
+                    iterations += 1;
+                    if done.load(Ordering::Relaxed) {
+                        break iterations;
+                    }
+                }
+            }));
+        }
+
+        for h in writers {
+            h.join().unwrap();
+        }
+        // Give readers a beat of post-write overlap with the compactor.
+        std::thread::sleep(std::time::Duration::from_millis(20));
+        done.store(true, Ordering::Relaxed);
+        for h in readers {
+            assert!(h.join().unwrap() > 0, "readers must complete iterations");
+        }
+    });
+
+    // Converged: no lost or duplicated rows despite double delivery.
+    assert_eq!(store.row_count("txn:1"), STRESS_ENTITIES * EVENTS_PER_ENTITY as u64);
+
+    // Final frame equals the naive oracle AND the analytically expected
+    // nearest-available record per observation.
+    let engine = OfflineQueryEngine::new(store.clone());
+    let frame =
+        engine.get_training_frame(&spine, &features, &specs, PitConfig::default()).unwrap();
+    let oracle =
+        naive_training_frame(&store, &spine, &features, &specs, PitConfig::default()).unwrap();
+    assert_eq!(frame, oracle);
+    let max_event = (EVENTS_PER_ENTITY - 1) * EVENT_STEP;
+    for (i, o) in spine.iter().enumerate() {
+        let expected = if o.entity >= STRESS_ENTITIES || o.ts < DELAY {
+            None
+        } else {
+            Some((((o.ts - DELAY) / EVENT_STEP) * EVENT_STEP).min(max_event) as f32)
+        };
+        assert_eq!(frame.value(i, 0), expected, "obs {i} ({o:?})");
+    }
+}
