@@ -29,10 +29,12 @@ use crate::query::offline::{OfflineQueryEngine, TrainingFrame};
 use crate::query::pit::{Observation, PitConfig};
 use crate::query::spec::FeatureRef;
 use crate::runtime::ComputeService;
+use crate::monitor::sweeper::TtlSweeper;
 use crate::scheduler::{JobOutcome, SchedulePolicy, Scheduler};
 use crate::serving::router::{RouteTable, ServingRouter};
 use crate::serving::service::OnlineServing;
 use crate::source::SourceConnector;
+use crate::stream::{StreamConfig, StreamDeps, StreamEvent, StreamIngestor, StreamStats};
 use crate::types::{EntityId, EntityInterner, FeatureWindow, FsError, Result, Timestamp};
 use crate::util::Clock;
 
@@ -94,6 +96,11 @@ pub struct FeatureStore {
     materializer: Arc<Materializer>,
     routes: Arc<RouteTable>,
     registrations: RwLock<HashMap<String, Arc<Registration>>>,
+    /// Active streaming engines, one per streamed feature set (§4.3's
+    /// streaming materialization plane).
+    streams: RwLock<HashMap<String, Arc<StreamIngestor>>>,
+    /// Background TTL sweep thread, when started.
+    ttl_sweeper: RwLock<Option<TtlSweeper>>,
     /// Keeps the compute threads alive for the store's lifetime.
     _compute: Option<ComputeService>,
     geo_fenced: bool,
@@ -170,6 +177,8 @@ impl FeatureStore {
             merger,
             routes,
             registrations: RwLock::new(HashMap::new()),
+            streams: RwLock::new(HashMap::new()),
+            ttl_sweeper: RwLock::new(None),
             _compute: compute,
             geo_fenced: opts.geo_fenced,
             store_name: RwLock::new(None),
@@ -318,11 +327,124 @@ impl FeatureStore {
     }
 
     /// Drive replication delivery (geo examples advance the clock then
-    /// pump).
+    /// pump): the batch path's queues plus every streaming engine's
+    /// tailed record log.
     pub fn pump_replication(&self) {
+        let now = self.clock.now();
         if let Some(rep) = &self.replicator {
-            rep.pump(self.clock.now());
+            rep.pump(now);
         }
+        for ing in self.streams.read().unwrap().values() {
+            ing.pump_replicas(now);
+        }
+    }
+
+    // ---- streaming ingestion (near-real-time materialization) -------------
+
+    /// Start the streaming engine for a registered feature set: events
+    /// appended via [`FeatureStore::stream_ingest`] materialize into
+    /// both stores as the watermark passes each bin — milliseconds of
+    /// poll latency instead of a scheduler period. Remote regions (when
+    /// replication is on) tail the engine's emitted-record log.
+    pub fn start_stream(&self, table: &str, cfg: StreamConfig) -> Result<()> {
+        let reg = self.registration(table)?;
+        let mut streams = self.streams.write().unwrap();
+        if streams.contains_key(table) {
+            return Err(FsError::InvalidArg(format!("'{table}' is already streaming")));
+        }
+        let replicas = self.replicator.as_ref().map(|r| r.replica_set()).unwrap_or_default();
+        let ing = StreamIngestor::new(
+            reg.spec.clone(),
+            cfg,
+            StreamDeps {
+                materializer: self.materializer.clone(),
+                offline: self.offline.clone(),
+                online: self.online.clone(),
+                freshness: self.freshness.clone(),
+                metrics: self.metrics.clone(),
+                clock: self.clock.clone(),
+                pool: Some(self.pool.clone()),
+                replicas,
+            },
+        )?;
+        streams.insert(table.to_string(), ing);
+        Ok(())
+    }
+
+    /// The running engine for `table` (ingest/poll/checkpoint surface).
+    pub fn stream(&self, table: &str) -> Result<Arc<StreamIngestor>> {
+        self.streams
+            .read()
+            .unwrap()
+            .get(table)
+            .cloned()
+            .ok_or_else(|| FsError::NotFound(format!("streaming engine for '{table}'")))
+    }
+
+    /// Append events to a table's stream.
+    pub fn stream_ingest(&self, table: &str, events: &[StreamEvent]) -> Result<u64> {
+        Ok(self.stream(table)?.ingest(events))
+    }
+
+    /// Process everything currently in the table's log.
+    pub fn poll_stream(&self, table: &str) -> Result<StreamStats> {
+        self.stream(table)?.poll()
+    }
+
+    /// Poll to exhaustion and flush the online write stage.
+    pub fn drain_stream(&self, table: &str) -> Result<StreamStats> {
+        self.stream(table)?.drain()
+    }
+
+    /// Detach the engine, then drain it (its log lives only as long as
+    /// the engine, so stop is a drain barrier). Detaching **first**
+    /// makes the barrier atomic: an ingest racing with stop fails with
+    /// `NotFound` instead of appending to a log that is about to be
+    /// dropped (a silent data loss). If the final drain fails, the
+    /// engine is re-attached so the caller can retry instead of losing
+    /// the undrained log with the last `Arc`.
+    pub fn stop_stream(&self, table: &str) -> Result<StreamStats> {
+        let ing = self
+            .streams
+            .write()
+            .unwrap()
+            .remove(table)
+            .ok_or_else(|| FsError::NotFound(format!("streaming engine for '{table}'")))?;
+        match ing.drain() {
+            Ok(stats) => Ok(stats),
+            Err(e) => {
+                self.streams.write().unwrap().entry(table.to_string()).or_insert(ing);
+                Err(e)
+            }
+        }
+    }
+
+    /// Current table watermark of a streaming feature set.
+    pub fn stream_watermark(&self, table: &str) -> Option<Timestamp> {
+        self.streams.read().unwrap().get(table).and_then(|i| i.watermark())
+    }
+
+    // ---- background maintenance ------------------------------------------
+
+    /// Start the background TTL sweeper (ROADMAP follow-up): reclaims
+    /// expired online entries and refreshes the freshness-violation
+    /// gauge every `period`. Idempotent; the thread stops on
+    /// [`FeatureStore::stop_ttl_sweeper`] or store drop.
+    pub fn start_ttl_sweeper(&self, period: std::time::Duration) {
+        let mut g = self.ttl_sweeper.write().unwrap();
+        if g.is_none() {
+            *g = Some(TtlSweeper::spawn(
+                self.online.clone(),
+                self.freshness.clone(),
+                self.metrics.clone(),
+                self.clock.clone(),
+                period,
+            ));
+        }
+    }
+
+    pub fn stop_ttl_sweeper(&self) {
+        self.ttl_sweeper.write().unwrap().take();
     }
 
     // ---- retrieval ----------------------------------------------------------
@@ -686,6 +808,79 @@ mod tests {
             fs.backfill("nope:1", FeatureWindow::new(0, DAY)),
             Err(FsError::NotFound(_))
         ));
+    }
+
+    #[test]
+    fn streaming_materializes_into_both_stores() {
+        let fs = open_local();
+        let table = register(&fs, 2);
+        fs.clock.set(2 * DAY);
+        fs.start_stream(&table, StreamConfig::default()).unwrap();
+        // Double-start is rejected; unknown tables too.
+        assert!(fs.start_stream(&table, StreamConfig::default()).is_err());
+        assert!(fs.start_stream("nope:1", StreamConfig::default()).is_err());
+
+        let events = vec![
+            StreamEvent::new(0, "cust_a", 30 * 60, 4.0),
+            StreamEvent::new(1, "cust_a", HOUR + 300, 2.0),
+            StreamEvent::new(2, "cust_b", HOUR + 400, 7.0),
+            StreamEvent::new(3, "cust_a", 3 * HOUR, 0.0), // punctuation
+            StreamEvent::new(4, "cust_b", 3 * HOUR, 0.0),
+        ];
+        fs.stream_ingest(&table, &events).unwrap();
+        let stats = fs.drain_stream(&table).unwrap();
+        assert!(stats.records_emitted > 0);
+        assert_eq!(fs.stream_watermark(&table), Some(3 * HOUR));
+
+        // Online point read through the full serving path (RBAC +
+        // routing), event fresh within the poll — not a scheduler tick.
+        let alice = Principal("alice".into());
+        let got = fs.get_online(&alice, &table, "cust_a", "local").unwrap();
+        let rec = got.record.expect("streamed record visible online");
+        assert_eq!(rec.creation_ts, 2 * DAY);
+        // Offline: same record version queryable via PIT.
+        let frame = fs
+            .get_training_frame(
+                &alice,
+                None,
+                &[("cust_a".to_string(), 2 * DAY + HOUR), ("cust_b".to_string(), 2 * DAY + HOUR)],
+                &[FeatureRef::parse("txn:1:2h_sum").unwrap()],
+                PitConfig::default(),
+                "local",
+            )
+            .unwrap();
+        assert_eq!(frame.value(0, 0), Some(rec.values[0]));
+        assert_eq!(frame.value(1, 0), Some(7.0));
+        // Freshness follows the watermark, not the scheduler.
+        let f = fs.table_freshness(&table).unwrap();
+        assert_eq!(f.high_water, 3 * HOUR);
+        assert!(fs.metrics.gauge("stream_watermark_lag_secs").is_some());
+
+        // Stop is a drain barrier and detaches the engine.
+        fs.stop_stream(&table).unwrap();
+        assert!(fs.stream(&table).is_err());
+        assert!(fs.poll_stream(&table).is_err());
+    }
+
+    #[test]
+    fn ttl_sweeper_lifecycle() {
+        let fs = open_local();
+        let table = register(&fs, 2);
+        fs.clock.set(DAY);
+        fs.materialize_tick(&table).unwrap();
+        assert!(!fs.online.is_empty());
+        fs.start_ttl_sweeper(std::time::Duration::from_millis(2));
+        fs.start_ttl_sweeper(std::time::Duration::from_millis(2)); // idempotent
+        // Push the clock past the online TTL; the background thread must
+        // reclaim without any manual evict call.
+        fs.clock.set(DAY + 15 * DAY);
+        let deadline = std::time::Instant::now() + std::time::Duration::from_secs(5);
+        while !fs.online.is_empty() && std::time::Instant::now() < deadline {
+            std::thread::sleep(std::time::Duration::from_millis(2));
+        }
+        assert_eq!(fs.online.len(), 0, "sweeper must reclaim expired entries");
+        assert!(fs.metrics.counter("ttl_evicted_total") > 0);
+        fs.stop_ttl_sweeper();
     }
 
     #[test]

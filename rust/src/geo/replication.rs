@@ -5,12 +5,117 @@
 //! replica after the replication lag (WAN transfer + apply).  Reads in a
 //! replica region are local-latency but may be stale by up to the lag —
 //! the trade experiment E6 measures against cross-region access.
+//!
+//! Two delivery mechanisms share the replica stores:
+//!
+//! * [`GeoReplicator`] — the batch path: each home merge is **pushed**
+//!   into per-region queues (one shared `Arc` batch across regions).
+//! * [`LogTailer`] — the streaming path: the engine appends every
+//!   emitted batch to one shared [`PartitionedLog`], and each remote
+//!   region **tails** it with its own cursor. One log entry serves any
+//!   number of regions with O(1) state per region (a cursor instead of
+//!   a queue), and a new region can join by starting its cursor at 0 —
+//!   the ad-hoc per-region queues of the batch path become a single
+//!   replayable history.
 
 use std::collections::{HashMap, VecDeque};
 use std::sync::{Arc, Mutex};
 
 use crate::online_store::OnlineStore;
+use crate::stream::log::PartitionedLog;
 use crate::types::{FeatureRecord, Timestamp};
+
+/// One replicable unit in the streaming record log: the records a
+/// materialization round emitted for a table, stamped with the
+/// processing time it was appended (drives lag-based visibility).
+#[derive(Debug, Clone)]
+pub struct ReplBatch {
+    pub table: String,
+    /// Shared with the online write batcher — the log never copies
+    /// record data.
+    pub records: Arc<[FeatureRecord]>,
+    pub appended_at: Timestamp,
+}
+
+/// Remote regions tailing the streaming record log. Apply order is log
+/// order; a batch becomes visible to a region `lag` seconds after it
+/// was appended.
+pub struct LogTailer {
+    log: Arc<PartitionedLog<ReplBatch>>,
+    /// (region, store, lag_secs), fixed at construction.
+    replicas: Vec<(String, Arc<OnlineStore>, i64)>,
+    /// Per-replica, per-partition cursors — the only per-region state.
+    cursors: Mutex<Vec<Vec<u64>>>,
+}
+
+impl LogTailer {
+    pub fn new(log: Arc<PartitionedLog<ReplBatch>>, replicas: Vec<(String, Arc<OnlineStore>, i64)>) -> Self {
+        let cursors = vec![vec![0u64; log.partitions()]; replicas.len()];
+        LogTailer { log, replicas, cursors: Mutex::new(cursors) }
+    }
+
+    pub fn regions(&self) -> Vec<String> {
+        let mut r: Vec<_> = self.replicas.iter().map(|(name, _, _)| name.clone()).collect();
+        r.sort();
+        r
+    }
+
+    /// Advance every region's cursor over all batches visible by `now`,
+    /// coalescing per table into one shard-grouped merge (same idiom as
+    /// [`GeoReplicator::pump`]). Returns records applied per region.
+    pub fn pump(&self, now: Timestamp) -> HashMap<String, u64> {
+        let mut applied = HashMap::new();
+        let mut cursors = self.cursors.lock().unwrap();
+        // Bounded tail chunk: a region waiting out a long lag must not
+        // re-clone its entire backlog on every pump.
+        const TAIL_CHUNK: usize = 256;
+        for (ri, (region, store, lag)) in self.replicas.iter().enumerate() {
+            let mut n = 0u64;
+            for p in 0..self.log.partitions() {
+                loop {
+                    let entries = self.log.read_from(p, cursors[ri][p], TAIL_CHUNK);
+                    if entries.is_empty() {
+                        break;
+                    }
+                    // Tail in log order, stopping at the first
+                    // not-yet-visible batch (visibility is monotone in
+                    // append order).
+                    let mut hit_unripe = false;
+                    let mut visible: Vec<(&str, &[FeatureRecord])> = Vec::new();
+                    for (off, batch) in &entries {
+                        if batch.appended_at + lag > now {
+                            hit_unripe = true;
+                            break;
+                        }
+                        visible.push((batch.table.as_str(), &batch.records));
+                        cursors[ri][p] = off + 1;
+                    }
+                    let stats = store.merge_batches(&visible, now);
+                    n += stats.inserted + stats.skipped;
+                    if hit_unripe || entries.len() < TAIL_CHUNK {
+                        break;
+                    }
+                }
+            }
+            applied.insert(region.clone(), n);
+        }
+        applied
+    }
+
+    /// Log entries a region has not applied yet.
+    pub fn backlog(&self, region: &str) -> usize {
+        let cursors = self.cursors.lock().unwrap();
+        self.replicas
+            .iter()
+            .position(|(name, _, _)| name.as_str() == region)
+            .map(|ri| {
+                (0..self.log.partitions())
+                    .map(|p| (self.log.high_water(p) - cursors[ri][p]) as usize)
+                    .sum()
+            })
+            .unwrap_or(0)
+    }
+}
 
 struct Pending {
     table: String,
@@ -54,6 +159,18 @@ impl GeoReplicator {
         r
     }
 
+    /// The replica stores + lags, for wiring a streaming [`LogTailer`]
+    /// onto the same destination stores the batch path pushes to.
+    pub fn replica_set(&self) -> Vec<(String, Arc<OnlineStore>, i64)> {
+        let mut out: Vec<_> = self
+            .replicas
+            .iter()
+            .map(|(region, store)| (region.clone(), store.clone(), self.lag_secs[region]))
+            .collect();
+        out.sort_by(|a, b| a.0.cmp(&b.0));
+        out
+    }
+
     /// Called after every home-region merge: enqueue for each replica.
     /// The batch is copied **once** into a shared `Arc` — every replica
     /// queue holds the same allocation, mirroring how the read path
@@ -76,14 +193,10 @@ impl GeoReplicator {
     /// Apply every queued batch that has become visible by `now`.
     /// Returns records applied per region.
     ///
-    /// Visible batches are drained first and coalesced per table in
-    /// arrival order, then applied with **one** `OnlineStore::merge` per
-    /// table — which groups records by shard internally, so a
-    /// replication pump locks each destination shard once per table
-    /// instead of once per batch (the `merge`/`get_many` symmetry from
-    /// the ROADMAP). Alg 2 is order-independent-convergent, and the
-    /// concatenation preserves arrival order, so the converged state is
-    /// identical to per-batch application.
+    /// Visible batches are drained first and applied through
+    /// [`OnlineStore::merge_batches`]: one shard-grouped merge per table
+    /// instead of one per batch (the `merge`/`get_many` symmetry from
+    /// the ROADMAP).
     pub fn pump(&self, now: Timestamp) -> HashMap<String, u64> {
         let mut applied = HashMap::new();
         let mut q = self.queues.lock().unwrap();
@@ -93,31 +206,10 @@ impl GeoReplicator {
             while queue.front().map_or(false, |p| p.visible_at <= now) {
                 visible.push(queue.pop_front().unwrap());
             }
-            // Batch indices per table, in arrival order.
-            let mut groups: Vec<(&str, Vec<usize>)> = Vec::new();
-            for (i, p) in visible.iter().enumerate() {
-                match groups.iter_mut().find(|(t, _)| *t == p.table) {
-                    Some((_, idxs)) => idxs.push(i),
-                    None => groups.push((p.table.as_str(), vec![i])),
-                }
-            }
-            let mut n = 0u64;
-            for (table, idxs) in &groups {
-                let stats = if let &[i] = &idxs[..] {
-                    // Single visible batch for this table (the common
-                    // case): apply the shared slice directly, no copies.
-                    store.merge(table, &visible[i].records, now)
-                } else {
-                    let mut records: Vec<FeatureRecord> =
-                        Vec::with_capacity(idxs.iter().map(|&i| visible[i].records.len()).sum());
-                    for &i in idxs {
-                        records.extend_from_slice(&visible[i].records);
-                    }
-                    store.merge(table, &records, now)
-                };
-                n += stats.inserted + stats.skipped;
-            }
-            applied.insert(region.clone(), n);
+            let batches: Vec<(&str, &[FeatureRecord])> =
+                visible.iter().map(|p| (p.table.as_str(), &p.records[..])).collect();
+            let stats = store.merge_batches(&batches, now);
+            applied.insert(region.clone(), stats.inserted + stats.skipped);
         }
         applied
     }
@@ -235,5 +327,71 @@ mod tests {
         r.pump(190);
         assert!(asia.get("t", 1, 190).is_some());
         assert_eq!(r.regions(), vec!["southeastasia", "westeurope"]);
+        let set = r.replica_set();
+        assert_eq!(set.len(), 2);
+        assert_eq!((set[0].0.as_str(), set[0].2), ("southeastasia", 90));
+        assert_eq!((set[1].0.as_str(), set[1].2), ("westeurope", 30));
+    }
+
+    fn batch(table: &str, entity: u64, event: Timestamp, created: Timestamp, v: f32, at: Timestamp) -> ReplBatch {
+        ReplBatch {
+            table: table.into(),
+            records: [rec(entity, event, created, v)].into(),
+            appended_at: at,
+        }
+    }
+
+    #[test]
+    fn tailer_applies_after_lag_in_log_order() {
+        let log = Arc::new(PartitionedLog::new(1));
+        let eu = Arc::new(OnlineStore::new(2));
+        let asia = Arc::new(OnlineStore::new(2));
+        let t = LogTailer::new(
+            log.clone(),
+            vec![("westeurope".into(), eu.clone(), 30), ("southeastasia".into(), asia.clone(), 90)],
+        );
+        log.append(0, batch("t", 1, 100, 110, 1.0, 1_000));
+        log.append(0, batch("t", 1, 100, 300, 2.0, 1_005)); // recompute
+        log.append(0, batch("u", 2, 5, 6, 3.0, 1_010));
+        // Before any lag elapses: nothing applied anywhere.
+        let applied = t.pump(1_020);
+        assert_eq!(applied["westeurope"], 0);
+        assert_eq!(t.backlog("westeurope"), 3);
+        // EU lag elapsed for all three, Asia still waiting.
+        let applied = t.pump(1_040);
+        assert_eq!(applied["westeurope"], 3);
+        assert_eq!(applied["southeastasia"], 0);
+        assert_eq!(eu.get("t", 1, 1_040).unwrap().version(), (100, 300));
+        assert_eq!(eu.get("u", 2, 1_040).unwrap().values[0], 3.0);
+        assert!(asia.get("t", 1, 1_040).is_none());
+        assert_eq!(t.backlog("westeurope"), 0);
+        assert_eq!(t.backlog("southeastasia"), 3);
+        // Asia catches up from the same log entries (one history, two
+        // cursors).
+        t.pump(1_100);
+        assert_eq!(asia.get("t", 1, 1_100).unwrap().version(), (100, 300));
+        assert_eq!(t.backlog("southeastasia"), 0);
+        // Replays are no-ops: the cursor moved past everything.
+        assert_eq!(t.pump(2_000)["westeurope"], 0);
+        assert_eq!(t.regions(), vec!["southeastasia", "westeurope"]);
+    }
+
+    #[test]
+    fn tailer_stops_at_first_unripe_entry() {
+        // Apply order is log order: a visible entry behind an unripe one
+        // must wait (prefix semantics, like a real log tail).
+        let log = Arc::new(PartitionedLog::new(1));
+        let eu = Arc::new(OnlineStore::new(2));
+        let t = LogTailer::new(log.clone(), vec![("eu".into(), eu.clone(), 10)]);
+        log.append(0, batch("t", 1, 100, 110, 1.0, 1_000));
+        log.append(0, batch("t", 2, 100, 110, 2.0, 5_000));
+        log.append(0, batch("t", 3, 100, 110, 3.0, 1_001)); // appended_at regressed
+        let applied = t.pump(1_050);
+        assert_eq!(applied["eu"], 1);
+        assert!(eu.get("t", 3, 1_050).is_none(), "entry behind unripe prefix must wait");
+        t.pump(5_010);
+        assert!(eu.get("t", 2, 5_010).is_some() && eu.get("t", 3, 5_010).is_some());
+        assert_eq!(t.backlog("eu"), 0);
+        assert_eq!(t.backlog("nope"), 0);
     }
 }

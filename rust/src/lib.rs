@@ -42,5 +42,6 @@ pub mod offline_store;
 pub mod online_store;
 pub mod runtime;
 pub mod source;
+pub mod stream;
 
 pub use types::{FsError, Result};

@@ -52,6 +52,30 @@ impl Materializer {
         )
     }
 
+    /// Plan `spec` and verify the plan can actually *execute* here: an
+    /// artifact plan needs the AOT engine loaded, a UDF plan needs the
+    /// named UDF registered. Start-time validation for callers (the
+    /// streaming engine) that must not discover an unexecutable plan
+    /// mid-stream — by the time `calculate` runs there, consumer offsets
+    /// have already advanced, so a deterministic failure would become
+    /// silent data loss instead of a clean start error.
+    pub fn validate_executable(&self, spec: &FeatureSetSpec) -> Result<()> {
+        let plan = self.plan(spec)?;
+        match &plan.kind {
+            PlanKind::Artifact(_) if self.engine.is_none() => Err(FsError::Runtime(
+                "plan requires the AOT engine but none is loaded".into(),
+            )),
+            PlanKind::Artifact(_) => Ok(()),
+            PlanKind::RustUdf => {
+                let name = match &spec.transform {
+                    crate::metadata::assets::TransformSpec::Udf(n) => n.as_str(),
+                    _ => "rolling_recompute",
+                };
+                self.udfs.get(name).map(|_| ())
+            }
+        }
+    }
+
     /// Run Algorithm 1 for one feature window.
     ///
     /// `as_of` is the processing-timeline read moment (drives source

@@ -8,6 +8,8 @@
 
 pub mod freshness;
 pub mod metrics;
+pub mod sweeper;
 
 pub use freshness::FreshnessTracker;
 pub use metrics::{MetricKind, MetricsRegistry};
+pub use sweeper::{sweep_once, SweepReport, TtlSweeper};

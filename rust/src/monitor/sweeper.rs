@@ -1,0 +1,175 @@
+//! Background TTL sweeper (ROADMAP follow-up: `evict_expired` used to
+//! be caller-driven).
+//!
+//! Redis reclaims expired keys both lazily (on read — our stores
+//! already filter expired entries at read time) and **actively** (a
+//! background cycle). [`TtlSweeper`] is the active half: a thread that
+//! periodically sweeps the online store and folds the results into the
+//! monitoring plane — eviction counters plus the freshness-SLA
+//! violation gauge, so one health cycle answers both "is expired data
+//! still resident?" and "which tables are stale?".
+//!
+//! The sweep body is exposed as [`sweep_once`] so tests and the
+//! coordinator can run a deterministic cycle on the simulated clock;
+//! the thread just repeats it on a wall-clock period.
+
+use std::sync::atomic::{AtomicU64, Ordering};
+use std::sync::{Arc, Condvar, Mutex};
+use std::time::Duration;
+
+use crate::monitor::freshness::FreshnessTracker;
+use crate::monitor::metrics::{MetricKind, MetricsRegistry};
+use crate::online_store::OnlineStore;
+use crate::types::Timestamp;
+use crate::util::Clock;
+
+/// Outcome of one sweep cycle.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub struct SweepReport {
+    /// Expired entries physically reclaimed from the online store.
+    pub evicted: u64,
+    /// Tables currently violating their freshness SLA.
+    pub sla_violations: usize,
+}
+
+/// One sweep cycle: reclaim expired online entries and refresh the
+/// freshness gauges.
+pub fn sweep_once(
+    online: &OnlineStore,
+    freshness: &FreshnessTracker,
+    metrics: &MetricsRegistry,
+    now: Timestamp,
+) -> SweepReport {
+    let evicted = online.evict_expired(now);
+    if evicted > 0 {
+        metrics.inc(MetricKind::System, "ttl_evicted_total", evicted);
+    }
+    let violations = freshness.violations(now);
+    metrics.set_gauge(MetricKind::System, "freshness_sla_violations", violations.len() as f64);
+    metrics.set_gauge(MetricKind::System, "ttl_last_sweep_at", now as f64);
+    SweepReport { evicted, sla_violations: violations.len() }
+}
+
+/// Background sweep thread; stops (promptly) on drop.
+pub struct TtlSweeper {
+    stop: Arc<(Mutex<bool>, Condvar)>,
+    total_evicted: Arc<AtomicU64>,
+    sweeps: Arc<AtomicU64>,
+    handle: Option<std::thread::JoinHandle<()>>,
+}
+
+impl TtlSweeper {
+    pub fn spawn(
+        online: Arc<OnlineStore>,
+        freshness: Arc<FreshnessTracker>,
+        metrics: Arc<MetricsRegistry>,
+        clock: Clock,
+        period: Duration,
+    ) -> TtlSweeper {
+        let stop = Arc::new((Mutex::new(false), Condvar::new()));
+        let total_evicted = Arc::new(AtomicU64::new(0));
+        let sweeps = Arc::new(AtomicU64::new(0));
+        let (stop2, evicted2, sweeps2) = (stop.clone(), total_evicted.clone(), sweeps.clone());
+        let handle = std::thread::Builder::new()
+            .name("geofs-ttl-sweeper".into())
+            .spawn(move || loop {
+                {
+                    let (m, cv) = &*stop2;
+                    let mut stopped = m.lock().unwrap();
+                    while !*stopped {
+                        let (g, timeout) = cv.wait_timeout(stopped, period).unwrap();
+                        stopped = g;
+                        if timeout.timed_out() {
+                            break;
+                        }
+                    }
+                    if *stopped {
+                        return;
+                    }
+                }
+                let report = sweep_once(&online, &freshness, &metrics, clock.now());
+                evicted2.fetch_add(report.evicted, Ordering::Relaxed);
+                sweeps2.fetch_add(1, Ordering::Relaxed);
+            })
+            .expect("spawn ttl sweeper");
+        TtlSweeper { stop, total_evicted, sweeps, handle: Some(handle) }
+    }
+
+    /// Entries reclaimed by the background thread so far.
+    pub fn total_evicted(&self) -> u64 {
+        self.total_evicted.load(Ordering::Relaxed)
+    }
+
+    /// Completed background cycles.
+    pub fn sweeps(&self) -> u64 {
+        self.sweeps.load(Ordering::Relaxed)
+    }
+}
+
+impl Drop for TtlSweeper {
+    fn drop(&mut self) {
+        {
+            let (m, cv) = &*self.stop;
+            *m.lock().unwrap() = true;
+            cv.notify_all();
+        }
+        if let Some(h) = self.handle.take() {
+            let _ = h.join();
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::types::FeatureRecord;
+
+    fn setup() -> (Arc<OnlineStore>, Arc<FreshnessTracker>, Arc<MetricsRegistry>) {
+        let online = Arc::new(OnlineStore::new(2));
+        online.set_ttl("t", 100);
+        let recs: Vec<FeatureRecord> =
+            (0..8).map(|i| FeatureRecord::new(i, 10, 20, vec![i as f32])).collect();
+        online.merge("t", &recs, 1_000);
+        (online, Arc::new(FreshnessTracker::new()), Arc::new(MetricsRegistry::new()))
+    }
+
+    #[test]
+    fn sweep_once_reclaims_and_gauges() {
+        let (online, freshness, metrics) = setup();
+        freshness.configure("t", 0, 50);
+        freshness.advance("t", 900);
+        // Nothing expired yet.
+        let r = sweep_once(&online, &freshness, &metrics, 1_050);
+        assert_eq!(r.evicted, 0);
+        assert_eq!(online.len(), 8);
+        // Past the TTL: all reclaimed; table is also past its SLA.
+        let r = sweep_once(&online, &freshness, &metrics, 1_100);
+        assert_eq!(r.evicted, 8);
+        assert_eq!(r.sla_violations, 1);
+        assert_eq!(online.len(), 0);
+        assert_eq!(metrics.counter("ttl_evicted_total"), 8);
+        assert_eq!(metrics.gauge("freshness_sla_violations"), Some(1.0));
+        assert_eq!(metrics.gauge("ttl_last_sweep_at"), Some(1_100.0));
+    }
+
+    #[test]
+    fn background_thread_sweeps_on_its_own() {
+        let (online, freshness, metrics) = setup();
+        let clock = Clock::fixed(2_000); // everything written at 1000 has expired
+        let sweeper = TtlSweeper::spawn(
+            online.clone(),
+            freshness.clone(),
+            metrics.clone(),
+            clock,
+            Duration::from_millis(2),
+        );
+        let deadline = std::time::Instant::now() + Duration::from_secs(5);
+        while !online.is_empty() && std::time::Instant::now() < deadline {
+            std::thread::sleep(Duration::from_millis(2));
+        }
+        assert_eq!(online.len(), 0, "background sweeper must reclaim expired entries");
+        assert_eq!(sweeper.total_evicted(), 8);
+        assert!(sweeper.sweeps() >= 1);
+        drop(sweeper); // must stop promptly without hanging the test
+    }
+}

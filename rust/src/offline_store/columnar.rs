@@ -40,8 +40,16 @@ impl RowView<'_> {
     }
 }
 
-/// Min/max of each key column — segment pruning for scans and joins.
-#[derive(Debug, Clone, Copy, Default, PartialEq, Eq)]
+/// Buckets in the per-segment creation-time histogram.
+pub const CREATION_BUCKETS: usize = 16;
+
+/// Min/max of each key column — segment pruning for scans and joins —
+/// plus a small equi-width histogram over `creation_ts`, so `as_of`
+/// readers can classify a segment as all-visible (skip the per-row
+/// creation check entirely), none-visible (skip the segment), or
+/// partially visible (with row-count bounds for planning) without
+/// touching a row.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
 pub struct ZoneStats {
     pub min_entity: EntityId,
     pub max_entity: EntityId,
@@ -49,6 +57,48 @@ pub struct ZoneStats {
     pub max_event: Timestamp,
     pub min_creation: Timestamp,
     pub max_creation: Timestamp,
+    /// Row counts per equi-width `creation_ts` bucket over
+    /// `[min_creation, max_creation]`.
+    pub creation_hist: [u32; CREATION_BUCKETS],
+}
+
+impl Default for ZoneStats {
+    fn default() -> Self {
+        ZoneStats {
+            min_entity: 0,
+            max_entity: 0,
+            min_event: 0,
+            max_event: 0,
+            min_creation: 0,
+            max_creation: 0,
+            creation_hist: [0; CREATION_BUCKETS],
+        }
+    }
+}
+
+impl ZoneStats {
+    fn creation_bucket(&self, ts: Timestamp) -> usize {
+        // Width covers the inclusive span; i128 avoids overflow on wide
+        // timestamp ranges.
+        let span = self.max_creation as i128 - self.min_creation as i128 + 1;
+        let w = (span + CREATION_BUCKETS as i128 - 1) / CREATION_BUCKETS as i128;
+        (((ts as i128 - self.min_creation as i128) / w) as usize).min(CREATION_BUCKETS - 1)
+    }
+
+    /// `(lower, upper)` bounds on the number of rows with
+    /// `creation_ts <= as_of`, answered from the histogram alone.
+    pub fn visible_bounds(&self, as_of: Timestamp) -> (u64, u64) {
+        let total: u64 = self.creation_hist.iter().map(|&c| c as u64).sum();
+        if total == 0 || as_of < self.min_creation {
+            return (0, 0);
+        }
+        if as_of >= self.max_creation {
+            return (total, total);
+        }
+        let k = self.creation_bucket(as_of);
+        let lower: u64 = self.creation_hist[..k].iter().map(|&c| c as u64).sum();
+        (lower, lower + self.creation_hist[k] as u64)
+    }
 }
 
 /// An immutable columnar run sorted by `(entity, event_ts, creation_ts)`.
@@ -200,6 +250,19 @@ impl Segment {
         !self.is_empty() && self.stats.min_creation <= as_of
     }
 
+    /// Zone check: is *every* row visible at `as_of`? When true, an
+    /// `as_of` scan can skip the per-row creation filter for this whole
+    /// segment.
+    pub fn all_visible_at(&self, as_of: Timestamp) -> bool {
+        !self.is_empty() && self.stats.max_creation <= as_of
+    }
+
+    /// Histogram-backed `(lower, upper)` bounds on rows visible at
+    /// `as_of` — the planning statistic behind creation-time pruning.
+    pub fn visible_bounds(&self, as_of: Timestamp) -> (u64, u64) {
+        self.stats.visible_bounds(as_of)
+    }
+
     /// Zone check: could `entity` be present at all?
     pub fn may_contain_entity(&self, entity: EntityId) -> bool {
         !self.is_empty() && self.stats.min_entity <= entity && entity <= self.stats.max_entity
@@ -240,12 +303,17 @@ fn compute_stats(entities: &[EntityId], event_ts: &[Timestamp], creation_ts: &[T
         max_event: Timestamp::MIN,
         min_creation: Timestamp::MAX,
         max_creation: Timestamp::MIN,
+        creation_hist: [0; CREATION_BUCKETS],
     };
     for (&ev, &cr) in event_ts.iter().zip(creation_ts.iter()) {
         stats.min_event = stats.min_event.min(ev);
         stats.max_event = stats.max_event.max(ev);
         stats.min_creation = stats.min_creation.min(cr);
         stats.max_creation = stats.max_creation.max(cr);
+    }
+    // Second pass now that the creation span is known.
+    for &cr in creation_ts {
+        stats.creation_hist[stats.creation_bucket(cr)] += 1;
     }
     stats
 }
@@ -397,5 +465,46 @@ mod tests {
         let r = rec(9, 1, 2, &[4.0, 5.0]);
         let seg = Segment::from_unsorted(vec![r.clone()]);
         assert_eq!(seg.row(0).to_record(), r);
+    }
+
+    #[test]
+    fn creation_histogram_bounds_are_sound_and_tight_at_edges() {
+        // 100 rows with creation_ts 0..100.
+        let rows: Vec<FeatureRecord> =
+            (0..100).map(|i| rec(i as u64, 0, i as Timestamp, &[0.0])).collect();
+        let seg = Segment::from_unsorted(rows);
+        assert_eq!(seg.stats().creation_hist.iter().sum::<u32>(), 100);
+        // Exact at the extremes.
+        assert_eq!(seg.visible_bounds(-1), (0, 0));
+        assert_eq!(seg.visible_bounds(99), (100, 100));
+        assert!(seg.all_visible_at(99) && !seg.all_visible_at(98));
+        // Sound everywhere: lower ≤ truth ≤ upper, and the bucketed
+        // uncertainty is at most one bucket's width of rows.
+        for as_of in -5..110 {
+            let truth = seg.iter().filter(|r| r.creation_ts <= as_of).count() as u64;
+            let (lo, hi) = seg.visible_bounds(as_of);
+            assert!(lo <= truth && truth <= hi, "as_of {as_of}: {lo} ≤ {truth} ≤ {hi}");
+            assert!(hi - lo <= 100_u64.div_ceil(CREATION_BUCKETS as u64) + 1);
+        }
+    }
+
+    #[test]
+    fn creation_histogram_handles_degenerate_spans() {
+        // All rows share one creation_ts (single bucket).
+        let seg = Segment::from_unsorted(vec![rec(1, 0, 500, &[0.0]), rec(2, 0, 500, &[0.0])]);
+        assert_eq!(seg.visible_bounds(499), (0, 0));
+        assert_eq!(seg.visible_bounds(500), (2, 2));
+        assert!(seg.all_visible_at(500));
+        // Empty segment.
+        let empty = Segment::from_unsorted(vec![]);
+        assert_eq!(empty.visible_bounds(i64::MAX), (0, 0));
+        assert!(!empty.all_visible_at(i64::MAX));
+        // Extreme span (negative to large positive) must not overflow.
+        let wide = Segment::from_unsorted(vec![
+            rec(1, 0, -4_000_000_000, &[0.0]),
+            rec(2, 0, 4_000_000_000, &[0.0]),
+        ]);
+        assert_eq!(wide.visible_bounds(0).0, 1);
+        assert_eq!(wide.visible_bounds(4_000_000_000), (2, 2));
     }
 }

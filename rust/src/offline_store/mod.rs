@@ -46,7 +46,7 @@ use std::sync::{Arc, RwLock};
 
 use crate::types::{EntityId, FeatureRecord, FeatureWindow, FsError, Result, Timestamp};
 
-pub use columnar::{RowView, Segment, ZoneStats};
+pub use columnar::{RowView, Segment, ZoneStats, CREATION_BUCKETS};
 pub use segment::{load_segment, load_table, persist_segment, persist_table};
 
 /// Delta rows that trigger a spill into a sorted segment.
@@ -186,7 +186,12 @@ impl OfflineStore {
     /// Visit every record with `event_ts` in `window` (and, when `as_of`
     /// is set, `creation_ts <= as_of`) **in place** — no record clones.
     /// Segments whose zone stats cannot intersect the predicate are
-    /// skipped without touching a row. Visit order is unspecified.
+    /// skipped without touching a row; per the creation-time zone stats,
+    /// a segment whose every version already existed at `as_of` is
+    /// scanned without the per-row creation check (the common case once
+    /// a segment's write burst has passed), so only segments that
+    /// genuinely straddle `as_of` pay the row-by-row filter. Visit order
+    /// is unspecified.
     pub fn for_each_in_window<F: FnMut(RowView<'_>)>(
         &self,
         table: &str,
@@ -205,8 +210,12 @@ impl OfflineStore {
                     continue;
                 }
             }
+            // None once zone stats prove every row visible at `as_of`.
+            let check_creation = as_of.filter(|&t0| !seg.all_visible_at(t0));
             for row in seg.iter() {
-                if window.contains(row.event_ts) && as_of.map_or(true, |t0| row.creation_ts <= t0) {
+                if window.contains(row.event_ts)
+                    && check_creation.is_none_or(|t0| row.creation_ts <= t0)
+                {
                     f(row);
                 }
             }
@@ -261,6 +270,26 @@ impl OfflineStore {
         g.spill_delta();
         g.compact_all();
         g.segments.len()
+    }
+
+    /// `(lower, upper)` bounds on rows visible at `as_of`
+    /// (`creation_ts <= as_of`), answered from the per-segment
+    /// creation-time histograms plus an exact pass over the small delta
+    /// — no sealed row is touched. The planning statistic behind
+    /// time-travel scans: `upper == 0` proves a table has nothing to
+    /// say at `as_of`, `lower == row_count` proves the creation filter
+    /// is a no-op.
+    pub fn visible_row_bounds(&self, table: &str, as_of: Timestamp) -> (u64, u64) {
+        let Some(t) = self.table(table) else { return (0, 0) };
+        let g = t.inner.read().unwrap();
+        let (mut lo, mut hi) = (0u64, 0u64);
+        for seg in &g.segments {
+            let (l, h) = seg.visible_bounds(as_of);
+            lo += l;
+            hi += h;
+        }
+        let delta_visible = g.delta.iter().filter(|r| r.creation_ts <= as_of).count() as u64;
+        (lo + delta_visible, hi + delta_visible)
     }
 
     /// Physical shape for introspection/tests: `(sealed segments, delta rows)`.
@@ -563,6 +592,29 @@ mod tests {
         scanned_asof.sort_by_key(|r| r.unique_key());
         assert_eq!(visited_asof, scanned_asof);
         assert!(visited_asof.len() < visited.len());
+    }
+
+    #[test]
+    fn visible_row_bounds_bracket_scan_as_of() {
+        let s = OfflineStore::with_spill_threshold(8);
+        for i in 0..50i64 {
+            s.merge("t", &[rec((i % 7) as EntityId, i * 10, 1_000 + i * 5, i as f32)]);
+        }
+        let w = FeatureWindow::new(i64::MIN / 2, i64::MAX / 2);
+        for as_of in [0, 1_000, 1_040, 1_120, 1_245, 9_999] {
+            let truth = s.scan_as_of("t", w, as_of).len() as u64;
+            let (lo, hi) = s.visible_row_bounds("t", as_of);
+            assert!(lo <= truth && truth <= hi, "as_of {as_of}: {lo} ≤ {truth} ≤ {hi}");
+        }
+        // Edges are exact, whatever the segment/delta split.
+        assert_eq!(s.visible_row_bounds("t", 999), (0, 0));
+        assert_eq!(s.visible_row_bounds("t", 9_999), (50, 50));
+        assert_eq!(s.visible_row_bounds("ghost", 0), (0, 0));
+        // The all-visible fast path (no per-row creation check) must be
+        // indistinguishable from the filtering path.
+        let all = s.scan("t", w);
+        let fast = s.scan_as_of("t", w, 9_999);
+        assert_eq!(all.len(), fast.len());
     }
 
     #[test]

@@ -241,6 +241,41 @@ impl OnlineStore {
         stats
     }
 
+    /// Merge a sequence of `(table, records)` batches, coalescing per
+    /// table (first-seen order, single batches applied in place) into
+    /// **one** shard-grouped [`OnlineStore::merge`] per table — the
+    /// write-side analogue of `get_many`'s lock amortization, shared by
+    /// the replication pumps and the serving write batcher. Alg 2 is
+    /// order-independent-convergent and the concatenation preserves
+    /// batch order, so the converged state equals per-batch application.
+    pub fn merge_batches(
+        &self,
+        batches: &[(&str, &[FeatureRecord])],
+        now: Timestamp,
+    ) -> MergeStats {
+        let mut groups: Vec<(&str, Vec<usize>)> = Vec::new();
+        for (i, &(table, _)) in batches.iter().enumerate() {
+            match groups.iter_mut().find(|(t, _)| *t == table) {
+                Some((_, idxs)) => idxs.push(i),
+                None => groups.push((table, vec![i])),
+            }
+        }
+        let mut stats = MergeStats::default();
+        for (table, idxs) in &groups {
+            if let &[i] = &idxs[..] {
+                stats.add(self.merge(table, batches[i].1, now));
+            } else {
+                let mut records: Vec<FeatureRecord> =
+                    Vec::with_capacity(idxs.iter().map(|&i| batches[i].1.len()).sum());
+                for &i in idxs {
+                    records.extend_from_slice(batches[i].1);
+                }
+                stats.add(self.merge(table, &records, now));
+            }
+        }
+        stats
+    }
+
     /// The table's entity map in `shard`, created on first write. Keyed
     /// by `&str` first so the steady-state write path (table already
     /// present) never allocates the table key — which is why the
@@ -490,6 +525,35 @@ mod tests {
             assert_eq!(s.get("t", 1, 1_000).unwrap().version(), (30, 31), "rot={rot}");
             assert_eq!(s.get("t", 2, 1_000).unwrap().version(), (5, 6));
         }
+    }
+
+    #[test]
+    fn merge_batches_equals_per_batch_application() {
+        let direct = OnlineStore::new(2);
+        let coalesced = OnlineStore::new(2);
+        // Mixed tables, a same-event recompute, and a stale no-op.
+        let batches: Vec<(&str, Vec<FeatureRecord>)> = vec![
+            ("a", vec![rec(1, 100, 110, 1.0)]),
+            ("b", vec![rec(1, 5, 6, 3.0)]),
+            ("a", vec![rec(1, 100, 300, 2.0), rec(2, 10, 20, 9.0)]),
+            ("a", vec![rec(1, 90, 400, 0.5)]),
+        ];
+        let mut direct_stats = MergeStats::default();
+        for (t, rs) in &batches {
+            direct_stats.add(direct.merge(t, rs, 50));
+        }
+        let refs: Vec<(&str, &[FeatureRecord])> =
+            batches.iter().map(|(t, rs)| (*t, rs.as_slice())).collect();
+        let stats = coalesced.merge_batches(&refs, 50);
+        assert_eq!(stats.inserted + stats.skipped, direct_stats.inserted + direct_stats.skipped);
+        for (t, e) in [("a", 1u64), ("a", 2), ("b", 1)] {
+            assert_eq!(
+                coalesced.get(t, e, 60).map(|r| (r.version(), r.values.clone())),
+                direct.get(t, e, 60).map(|r| (r.version(), r.values.clone())),
+                "{t}/{e}"
+            );
+        }
+        assert!(coalesced.merge_batches(&[], 50) == MergeStats::default());
     }
 
     #[test]

@@ -1,17 +1,118 @@
-//! Micro-batching of online lookups.
+//! Micro-batching of online lookups **and writes**.
 //!
 //! Point lookups arriving within a short window are coalesced into one
 //! `get_many` against the store — the standard low-latency serving trick
-//! (vLLM-style continuous batching, applied to KV reads).  The batcher is
-//! deterministic and pull-based: callers `push` requests and a driver
-//! thread (or the test) calls `flush` when either the size or the age
-//! trigger fires.
+//! (vLLM-style continuous batching, applied to KV reads).  The same
+//! machinery runs the other direction: [`WriteBatcher`] coalesces
+//! record upserts (the streaming engine's online-write stage) into one
+//! `merge` per table per flush.
+//!
+//! Both batchers are deterministic and pull-based at the core: callers
+//! `push`, and `flush` fires when either the size or the age trigger
+//! does. On top of that, [`FlushDriver`] is the real push-based driver
+//! (ROADMAP follow-up): a background thread parked on the batcher's
+//! wake condvar, kicked by every `push`, that honors `max_wait_us` on
+//! the wall clock — a full batch flushes immediately (size trigger +
+//! wake), a lone item flushes within ~`max_wait_us`. The pull-based
+//! path stays for tests and for engines that want deterministic,
+//! simulated-time flushing.
+//!
+//! Timebases: queue items carry the caller's `now_us`. The pull path
+//! may feed a simulated timeline; anything driven by a [`FlushDriver`]
+//! must push with [`wall_us`] so ages are measured on the same clock
+//! the driver waits on.
 
 use std::collections::VecDeque;
-use std::sync::Mutex;
+use std::sync::atomic::{AtomicBool, AtomicUsize, Ordering};
+use std::sync::{Arc, Condvar, Mutex, OnceLock};
+use std::time::{Duration, Instant};
 
 use crate::online_store::OnlineStore;
 use crate::types::{EntityId, FeatureRecord, Timestamp};
+use crate::util::Clock;
+
+/// Microseconds since process start — the wall-clock timebase shared by
+/// batcher pushes and [`FlushDriver`] waits.
+pub fn wall_us() -> u64 {
+    static T0: OnceLock<Instant> = OnceLock::new();
+    T0.get_or_init(Instant::now).elapsed().as_micros() as u64
+}
+
+/// Wake channel between `push` and a parked [`FlushDriver`].
+#[derive(Debug, Default)]
+struct Wake {
+    pings: Mutex<u64>,
+    cv: Condvar,
+}
+
+impl Wake {
+    fn ping(&self) {
+        *self.pings.lock().unwrap() += 1;
+        self.cv.notify_all();
+    }
+
+    /// Wait until pinged past `seen` or `timeout` elapses; returns the
+    /// latest ping counter.
+    fn wait(&self, seen: u64, timeout: Duration) -> u64 {
+        let mut g = self.pings.lock().unwrap();
+        if *g == seen {
+            let (g2, _) = self.cv.wait_timeout(g, timeout).unwrap();
+            g = g2;
+        }
+        *g
+    }
+}
+
+/// Background flush thread: parked on a batcher's wake channel, ticks
+/// on every push and at least every `period`. The tick closure gets
+/// `final_pass = true` exactly once, on shutdown, and must drain then.
+pub struct FlushDriver {
+    stop: Arc<AtomicBool>,
+    wake: Arc<Wake>,
+    handle: Option<std::thread::JoinHandle<()>>,
+}
+
+impl FlushDriver {
+    fn spawn(
+        name: &str,
+        wake: Arc<Wake>,
+        period: Duration,
+        mut tick: impl FnMut(bool) + Send + 'static,
+    ) -> FlushDriver {
+        let stop = Arc::new(AtomicBool::new(false));
+        let stop2 = stop.clone();
+        let wake2 = wake.clone();
+        let handle = std::thread::Builder::new()
+            .name(name.to_string())
+            .spawn(move || {
+                let mut seen = 0u64;
+                loop {
+                    if stop2.load(Ordering::Acquire) {
+                        tick(true);
+                        return;
+                    }
+                    seen = wake2.wait(seen, period);
+                    tick(false);
+                }
+            })
+            .expect("spawn flush driver");
+        FlushDriver { stop, wake, handle: Some(handle) }
+    }
+}
+
+impl Drop for FlushDriver {
+    fn drop(&mut self) {
+        self.stop.store(true, Ordering::Release);
+        self.wake.ping();
+        if let Some(h) = self.handle.take() {
+            let _ = h.join();
+        }
+    }
+}
+
+fn driver_period(cfg: &BatcherConfig) -> Duration {
+    Duration::from_micros(cfg.max_wait_us.clamp(100, 1_000_000))
+}
 
 /// One queued lookup.
 #[derive(Debug, Clone, PartialEq)]
@@ -50,11 +151,17 @@ pub struct MicroBatcher {
     cfg: BatcherConfig,
     queue: Mutex<VecDeque<BatchItem>>,
     next_id: Mutex<u64>,
+    wake: Arc<Wake>,
 }
 
 impl MicroBatcher {
     pub fn new(cfg: BatcherConfig) -> Self {
-        MicroBatcher { cfg, queue: Mutex::new(VecDeque::new()), next_id: Mutex::new(0) }
+        MicroBatcher {
+            cfg,
+            queue: Mutex::new(VecDeque::new()),
+            next_id: Mutex::new(0),
+            wake: Arc::new(Wake::default()),
+        }
     }
 
     /// Enqueue a lookup; returns its request id.
@@ -69,7 +176,31 @@ impl MicroBatcher {
             entity,
             arrived_at_us: now_us,
         });
+        self.wake.ping();
         id
+    }
+
+    /// Spawn the push-based background flush loop. Completed lookups go
+    /// to `sink`. Callers must `push` with [`wall_us`] timestamps. The
+    /// driver drains the queue on drop.
+    pub fn spawn_driver(
+        self: &Arc<Self>,
+        store: Arc<OnlineStore>,
+        clock: Clock,
+        sink: impl Fn(Vec<BatchResult>) + Send + 'static,
+    ) -> FlushDriver {
+        let b = self.clone();
+        let period = driver_period(&b.cfg);
+        FlushDriver::spawn("geofs-read-flush", self.wake.clone(), period, move |final_pass| {
+            let now_us = wall_us();
+            while (final_pass && b.pending() > 0) || b.should_flush(now_us) {
+                let out = b.flush(&store, clock.now(), now_us);
+                if out.is_empty() {
+                    break;
+                }
+                sink(out);
+            }
+        })
     }
 
     pub fn pending(&self) -> usize {
@@ -82,7 +213,9 @@ impl MicroBatcher {
         if q.len() >= self.cfg.max_batch {
             return true;
         }
-        q.front().map_or(false, |i| now_us - i.arrived_at_us >= self.cfg.max_wait_us)
+        // Saturating: with a concurrent driver a push can land between
+        // the driver's clock read and this check.
+        q.front().map_or(false, |i| now_us.saturating_sub(i.arrived_at_us) >= self.cfg.max_wait_us)
     }
 
     /// Drain up to `max_batch` items and execute them as grouped
@@ -114,11 +247,138 @@ impl MicroBatcher {
                 results[i] = Some(BatchResult {
                     request_id: items[i].request_id,
                     record,
-                    latency_us: (now_us - items[i].arrived_at_us) + store_us,
+                    latency_us: now_us.saturating_sub(items[i].arrived_at_us) + store_us,
                 });
             }
         }
         results.into_iter().map(|r| r.expect("all items answered")).collect()
+    }
+}
+
+/// One queued write batch (shared `Arc` so the replication log can hold
+/// the same allocation).
+#[derive(Debug, Clone)]
+struct WriteItem {
+    table: String,
+    records: Arc<[FeatureRecord]>,
+    arrived_at_us: u64,
+}
+
+/// Micro-batcher for online **writes** — the streaming engine's
+/// online-write stage. Record batches pushed within a short window are
+/// coalesced and applied with one [`OnlineStore::merge`] per table per
+/// flush (merge groups by shard internally, so shard write locks are
+/// taken once per flush per table). Alg 2 is order-independent
+/// convergent, so batching never changes the converged state.
+///
+/// `max_batch` counts *records*, not pushes. [`WriteBatcher::pending`]
+/// is the backpressure signal: producers that see it grow past their
+/// bound flush inline instead of queueing further.
+pub struct WriteBatcher {
+    cfg: BatcherConfig,
+    queue: Mutex<VecDeque<WriteItem>>,
+    pending_records: AtomicUsize,
+    wake: Arc<Wake>,
+}
+
+impl WriteBatcher {
+    pub fn new(cfg: BatcherConfig) -> Self {
+        WriteBatcher {
+            cfg,
+            queue: Mutex::new(VecDeque::new()),
+            pending_records: AtomicUsize::new(0),
+            wake: Arc::new(Wake::default()),
+        }
+    }
+
+    /// Enqueue a record batch; returns the queued record count after the
+    /// push (the producer-side backpressure signal).
+    pub fn push(&self, table: &str, records: Arc<[FeatureRecord]>, now_us: u64) -> usize {
+        if records.is_empty() {
+            return self.pending();
+        }
+        let n = records.len();
+        let pending = {
+            let mut q = self.queue.lock().unwrap();
+            q.push_back(WriteItem { table: table.to_string(), records, arrived_at_us: now_us });
+            // Count while holding the queue lock: flush subtracts under
+            // the same lock, so the counter can never transiently go
+            // negative (wrap) when a concurrent driver flushes the item
+            // before this add landed.
+            self.pending_records.fetch_add(n, Ordering::Relaxed) + n
+        };
+        self.wake.ping();
+        pending
+    }
+
+    /// Queued records not yet merged.
+    pub fn pending(&self) -> usize {
+        self.pending_records.load(Ordering::Relaxed)
+    }
+
+    /// Size (records ≥ `max_batch`) or age (oldest waited `max_wait_us`)
+    /// trigger.
+    pub fn should_flush(&self, now_us: u64) -> bool {
+        if self.pending() >= self.cfg.max_batch {
+            return true;
+        }
+        let q = self.queue.lock().unwrap();
+        q.front().is_some_and(|i| now_us.saturating_sub(i.arrived_at_us) >= self.cfg.max_wait_us)
+    }
+
+    /// Drain queued batches (whole batches, until ≥ `max_batch` records
+    /// are taken) and merge them, one `OnlineStore::merge` per table in
+    /// first-seen order. Returns records written.
+    pub fn flush(&self, store: &OnlineStore, now: Timestamp, _now_us: u64) -> u64 {
+        let items: Vec<WriteItem> = {
+            let mut q = self.queue.lock().unwrap();
+            let mut taken = Vec::new();
+            let mut n = 0usize;
+            while n < self.cfg.max_batch {
+                let Some(item) = q.pop_front() else { break };
+                n += item.records.len();
+                taken.push(item);
+            }
+            self.pending_records.fetch_sub(n, Ordering::Relaxed);
+            taken
+        };
+        if items.is_empty() {
+            return 0;
+        }
+        // One shard-grouped merge per table, in arrival order.
+        let batches: Vec<(&str, &[FeatureRecord])> =
+            items.iter().map(|it| (it.table.as_str(), &it.records[..])).collect();
+        store.merge_batches(&batches, now);
+        items.iter().map(|it| it.records.len() as u64).sum()
+    }
+
+    /// Flush until the queue is empty — the checkpoint/drain barrier.
+    pub fn drain(&self, store: &OnlineStore, now: Timestamp, now_us: u64) -> u64 {
+        let mut written = 0;
+        while self.pending() > 0 {
+            written += self.flush(store, now, now_us);
+        }
+        written
+    }
+
+    /// Spawn the push-based background flush loop (honors `max_wait_us`
+    /// on the wall clock; drains on drop). Producers must push with
+    /// [`wall_us`] timestamps.
+    pub fn spawn_driver(self: &Arc<Self>, store: Arc<OnlineStore>, clock: Clock) -> FlushDriver {
+        let b = self.clone();
+        let period = driver_period(&b.cfg);
+        FlushDriver::spawn("geofs-write-flush", self.wake.clone(), period, move |final_pass| {
+            let now_us = wall_us();
+            if final_pass {
+                b.drain(&store, clock.now(), now_us);
+                return;
+            }
+            while b.should_flush(now_us) {
+                if b.flush(&store, clock.now(), now_us) == 0 {
+                    break;
+                }
+            }
+        })
     }
 }
 
@@ -266,5 +526,109 @@ mod tests {
         b.push("t", 2, 1_400); // younger item must not reset the clock
         assert!(!b.should_flush(1_499));
         assert!(b.should_flush(1_500), "oldest item's age drives the trigger");
+    }
+
+    fn recs(lo: u64, hi: u64) -> Arc<[FeatureRecord]> {
+        (lo..hi).map(|i| FeatureRecord::new(i, 10, 20, vec![i as f32])).collect()
+    }
+
+    #[test]
+    fn write_batcher_coalesces_per_table() {
+        let store = OnlineStore::new(4);
+        let b = WriteBatcher::new(BatcherConfig { max_batch: 100, max_wait_us: 0 });
+        assert_eq!(b.push("a", recs(0, 3), 0), 3);
+        assert_eq!(b.push("b", recs(10, 12), 0), 5);
+        assert_eq!(b.push("a", recs(3, 5), 0), 7);
+        assert_eq!(b.pending(), 7);
+        assert!(b.should_flush(1), "age trigger with max_wait 0");
+        let written = b.flush(&store, 100, 1);
+        assert_eq!(written, 7);
+        assert_eq!(b.pending(), 0);
+        for i in 0..5 {
+            assert_eq!(store.get("a", i, 100).unwrap().values[0], i as f32);
+        }
+        assert!(store.get("b", 10, 100).is_some() && store.get("b", 11, 100).is_some());
+        // Empty pushes are ignored; empty flush is a no-op.
+        assert_eq!(b.push("a", recs(0, 0), 5), 0);
+        assert_eq!(b.flush(&store, 100, 5), 0);
+    }
+
+    #[test]
+    fn write_batcher_size_trigger_counts_records() {
+        let b = WriteBatcher::new(BatcherConfig { max_batch: 4, max_wait_us: 1_000_000 });
+        b.push("t", recs(0, 3), 0);
+        assert!(!b.should_flush(0));
+        b.push("t", recs(3, 6), 0); // 6 records ≥ 4
+        assert!(b.should_flush(0));
+        // Flush takes whole batches until ≥ max_batch records.
+        let store = OnlineStore::new(2);
+        assert_eq!(b.flush(&store, 100, 0), 6);
+    }
+
+    #[test]
+    fn write_batcher_flush_equals_direct_merges() {
+        // Batched writes converge to exactly the per-batch merge state,
+        // duplicates and late versions included (Alg 2 order freedom).
+        let direct = OnlineStore::new(2);
+        let batched = OnlineStore::new(2);
+        let b = WriteBatcher::new(BatcherConfig { max_batch: 3, max_wait_us: 0 });
+        let batches: Vec<Arc<[FeatureRecord]>> = vec![
+            [FeatureRecord::new(1, 10, 11, vec![1.0])].into(),
+            [FeatureRecord::new(1, 10, 30, vec![2.0]), FeatureRecord::new(2, 5, 6, vec![3.0])].into(),
+            [FeatureRecord::new(1, 9, 99, vec![9.0])].into(), // stale event: no-op
+        ];
+        for batch in &batches {
+            direct.merge("t", batch, 50);
+            b.push("t", batch.clone(), 0);
+        }
+        b.drain(&batched, 50, 1);
+        for e in [1u64, 2] {
+            assert_eq!(
+                batched.get("t", e, 60).map(|r| (r.version(), r.values.clone())),
+                direct.get("t", e, 60).map(|r| (r.version(), r.values.clone())),
+            );
+        }
+    }
+
+    #[test]
+    fn write_driver_flushes_in_background() {
+        let store = Arc::new(OnlineStore::new(2));
+        let b = Arc::new(WriteBatcher::new(BatcherConfig { max_batch: 1_000, max_wait_us: 2_000 }));
+        let driver = b.spawn_driver(store.clone(), Clock::fixed(100));
+        b.push("t", recs(0, 4), wall_us());
+        // Age trigger (~2ms) must fire without any manual flush.
+        let deadline = std::time::Instant::now() + Duration::from_secs(5);
+        while b.pending() > 0 && std::time::Instant::now() < deadline {
+            std::thread::sleep(Duration::from_millis(1));
+        }
+        assert_eq!(b.pending(), 0, "driver must flush by age");
+        assert!(store.get("t", 0, 100).is_some());
+        // Drop drains whatever is still queued.
+        b.push("t", recs(4, 8), wall_us());
+        drop(driver);
+        assert_eq!(b.pending(), 0, "driver drop must drain");
+        assert!(store.get("t", 7, 100).is_some());
+    }
+
+    #[test]
+    fn read_driver_delivers_results_to_sink() {
+        let store = Arc::new(store_with(8));
+        let b = Arc::new(MicroBatcher::new(BatcherConfig { max_batch: 4, max_wait_us: 1_000 }));
+        let got: Arc<Mutex<Vec<BatchResult>>> = Arc::new(Mutex::new(Vec::new()));
+        let sink = got.clone();
+        let driver = b.spawn_driver(store.clone(), Clock::fixed(50), move |out| {
+            sink.lock().unwrap().extend(out);
+        });
+        for e in 0..4 {
+            b.push("t", e, wall_us()); // full batch → size trigger + wake
+        }
+        let deadline = std::time::Instant::now() + Duration::from_secs(5);
+        while got.lock().unwrap().len() < 4 && std::time::Instant::now() < deadline {
+            std::thread::sleep(Duration::from_millis(1));
+        }
+        drop(driver);
+        let results = got.lock().unwrap();
+        assert_eq!(results.len(), 4);
+        assert!(results.iter().all(|r| r.record.is_some()));
     }
 }

@@ -28,6 +28,6 @@ pub mod batcher;
 pub mod router;
 pub mod service;
 
-pub use batcher::{BatchItem, BatcherConfig, MicroBatcher};
+pub use batcher::{wall_us, BatchItem, BatcherConfig, FlushDriver, MicroBatcher, WriteBatcher};
 pub use router::{RouteTable, ServingRouter};
 pub use service::OnlineServing;

@@ -1,0 +1,188 @@
+//! Consumer-group offset checkpoints — the crash/resume substrate.
+//!
+//! The streaming engine's only durable state besides the sinks is a
+//! per-`(group, table, partition)` checkpoint: the log offset up to
+//! which effects are **fully applied to both sinks**, plus the
+//! finalization boundary reached. Everything else (event buffer,
+//! dedupe set, watermarks) is rebuilt by replaying the log below the
+//! committed offset — the log is the source of truth, checkpoints are
+//! cursors into it.
+//!
+//! Exactly-once contract: offsets are committed only *behind a flush
+//! barrier* (the online write batcher is drained first, offline merges
+//! are synchronous), so a crash can lose at most uncommitted work.
+//! Replay from the last checkpoint re-delivers that work, and both
+//! sinks absorb the redelivery idempotently — the offline store dedupes
+//! on the `(entity, event_ts, creation_ts)` uniqueness key, the online
+//! store's Eq. 2 merge is a monotone no-op for an already-applied
+//! version. At-least-once delivery + idempotent dual-write =
+//! exactly-once effects.
+
+use std::collections::HashMap;
+use std::path::Path;
+use std::sync::Mutex;
+
+use crate::types::{FsError, Result, Timestamp};
+use crate::util::json::Json;
+
+/// One partition's committed progress.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub struct PartitionCheckpoint {
+    /// Next log offset to consume (all effects below it are durable in
+    /// both sinks).
+    pub offset: u64,
+    /// Bin-finalization boundary at commit time (`None` = nothing
+    /// finalized yet). Restoring it prevents re-emission of already
+    /// final bins on resume.
+    pub finalized_until: Option<Timestamp>,
+    /// Newest creation stamp emitted by this partition (`None` = never
+    /// emitted). Restoring it keeps the monotone-creation invariant
+    /// across incarnations: without it, a post-resume repair of a
+    /// committed bin could collide with the pre-crash version's
+    /// `creation_ts` and be silently deduped away by both sinks.
+    pub last_creation: Option<Timestamp>,
+}
+
+fn slot(group: &str, table: &str, partition: usize) -> String {
+    format!("{group}\u{1f}{table}\u{1f}{partition}")
+}
+
+/// In-memory checkpoint store with JSON persistence (the ZooKeeper /
+/// consumer-offsets-topic analogue, scaled down).
+#[derive(Debug, Default)]
+pub struct CheckpointStore {
+    inner: Mutex<HashMap<String, PartitionCheckpoint>>,
+}
+
+impl CheckpointStore {
+    pub fn new() -> Self {
+        Self::default()
+    }
+
+    /// Commit progress for one partition (overwrites prior commits).
+    pub fn commit(&self, group: &str, table: &str, partition: usize, ck: PartitionCheckpoint) {
+        self.inner.lock().unwrap().insert(slot(group, table, partition), ck);
+    }
+
+    pub fn get(&self, group: &str, table: &str, partition: usize) -> Option<PartitionCheckpoint> {
+        self.inner.lock().unwrap().get(&slot(group, table, partition)).copied()
+    }
+
+    pub fn len(&self) -> usize {
+        self.inner.lock().unwrap().len()
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.len() == 0
+    }
+
+    /// Persist all checkpoints to one JSON file.
+    pub fn persist(&self, path: &Path) -> Result<()> {
+        let g = self.inner.lock().unwrap();
+        let entries: Vec<Json> = g
+            .iter()
+            .map(|(k, ck)| {
+                Json::obj(vec![
+                    ("slot", Json::str(k.as_str())),
+                    ("offset", Json::num(ck.offset as f64)),
+                    ("has_finalized", Json::Bool(ck.finalized_until.is_some())),
+                    ("finalized_until", Json::num(ck.finalized_until.unwrap_or(0) as f64)),
+                    ("has_creation", Json::Bool(ck.last_creation.is_some())),
+                    ("last_creation", Json::num(ck.last_creation.unwrap_or(0) as f64)),
+                ])
+            })
+            .collect();
+        let doc = Json::obj(vec![("checkpoints", Json::Arr(entries))]);
+        std::fs::write(path, doc.to_string())?;
+        Ok(())
+    }
+
+    /// Load a store persisted by [`CheckpointStore::persist`].
+    pub fn load(path: &Path) -> Result<CheckpointStore> {
+        let text = std::fs::read_to_string(path)?;
+        let doc = Json::parse(&text)
+            .map_err(|e| FsError::Other(format!("bad checkpoint file {path:?}: {e}")))?;
+        let store = CheckpointStore::new();
+        let entries = doc
+            .get("checkpoints")
+            .as_arr()
+            .ok_or_else(|| FsError::Other("checkpoint file missing 'checkpoints'".into()))?;
+        let mut g = store.inner.lock().unwrap();
+        for e in entries {
+            let key = e
+                .get("slot")
+                .as_str()
+                .ok_or_else(|| FsError::Other("checkpoint entry missing 'slot'".into()))?
+                .to_string();
+            let offset = e
+                .get("offset")
+                .as_f64()
+                .ok_or_else(|| FsError::Other("checkpoint entry missing 'offset'".into()))?
+                as u64;
+            let finalized_until = if e.get("has_finalized").as_bool().unwrap_or(false) {
+                Some(e.get("finalized_until").as_i64().unwrap_or(0))
+            } else {
+                None
+            };
+            let last_creation = if e.get("has_creation").as_bool().unwrap_or(false) {
+                Some(e.get("last_creation").as_i64().unwrap_or(0))
+            } else {
+                None
+            };
+            g.insert(key, PartitionCheckpoint { offset, finalized_until, last_creation });
+        }
+        drop(g);
+        Ok(store)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::testkit::TempDir;
+
+    fn ck(offset: u64, finalized_until: Option<Timestamp>, last_creation: Option<Timestamp>) -> PartitionCheckpoint {
+        PartitionCheckpoint { offset, finalized_until, last_creation }
+    }
+
+    #[test]
+    fn commit_overwrites_and_isolates_slots() {
+        let s = CheckpointStore::new();
+        s.commit("g", "t", 0, ck(5, None, None));
+        s.commit("g", "t", 0, ck(9, Some(100), Some(140)));
+        s.commit("g", "t", 1, ck(2, None, None));
+        s.commit("g2", "t", 0, ck(7, None, None));
+        assert_eq!(s.get("g", "t", 0).unwrap().offset, 9);
+        assert_eq!(s.get("g", "t", 0).unwrap().finalized_until, Some(100));
+        assert_eq!(s.get("g", "t", 0).unwrap().last_creation, Some(140));
+        assert_eq!(s.get("g", "t", 1).unwrap().offset, 2);
+        assert_eq!(s.get("g2", "t", 0).unwrap().offset, 7);
+        assert!(s.get("g", "other", 0).is_none());
+        assert_eq!(s.len(), 3);
+    }
+
+    #[test]
+    fn persist_load_roundtrip() {
+        let dir = TempDir::new("ckpt");
+        let s = CheckpointStore::new();
+        s.commit("g", "txn:1", 0, ck(123, Some(-7_200), Some(99)));
+        s.commit("g", "txn:1", 3, ck(0, None, None));
+        let path = dir.file("offsets.json");
+        s.persist(&path).unwrap();
+
+        let loaded = CheckpointStore::load(&path).unwrap();
+        assert_eq!(loaded.len(), 2);
+        assert_eq!(loaded.get("g", "txn:1", 0), Some(ck(123, Some(-7_200), Some(99))));
+        assert_eq!(loaded.get("g", "txn:1", 3), Some(ck(0, None, None)));
+    }
+
+    #[test]
+    fn load_rejects_garbage() {
+        let dir = TempDir::new("ckpt-bad");
+        let path = dir.file("bad.json");
+        std::fs::write(&path, "{not json").unwrap();
+        assert!(CheckpointStore::load(&path).is_err());
+        std::fs::write(&path, "{\"x\": 1}").unwrap();
+        assert!(CheckpointStore::load(&path).is_err());
+    }
+}

@@ -1,0 +1,529 @@
+//! The per-partition incremental materialization pipeline.
+//!
+//! Each log partition owns one [`PartitionPipeline`]: a replayable
+//! event buffer, a seq-dedupe set, a [`WatermarkTracker`], and the
+//! bin-finalization boundary. The pipeline itself performs **no
+//! compute and no I/O** — it absorbs events and produces [`EmitPlan`]s
+//! (aligned feature windows, optionally restricted to the entities a
+//! late event touched). The engine executes each plan through the same
+//! `materialize::calc` Algorithm-1 path the batch scheduler uses, so a
+//! streamed record is *by construction* the record a batch job over the
+//! same events would produce — the whole online≡offline differential
+//! guarantee reduces to "same calc, same inputs, watermark-gated
+//! creation time".
+//!
+//! # Emission
+//!
+//! When the watermark passes a bin end, that bin is *final*: the plan
+//! covers all newly-final bins as one window (the engine splits it by
+//! `max_bins_per_job`-style chunks). Rolling windows reach back into
+//! the retained buffer for their lookback halo, exactly like Algorithm
+//! 1's `source_window`.
+//!
+//! # Late events (bounded out-of-orderness violated)
+//!
+//! An event whose bin is already final is routed to the repair path:
+//! the bins its rolling window touches — `[bin, bin + window_bins)`
+//! clipped to the already-final region — are recomputed **for that
+//! entity only**, producing new record versions with a fresh
+//! `creation_ts`. Online, Eq. 2 overrides (same `event_ts`, newer
+//! `creation_ts`); offline, the new version is appended next to the old
+//! one — the same late-data shape the paper's Fig 5 R3 describes for
+//! the batch path, so PIT queries keep working unchanged.
+//!
+//! # Memory
+//!
+//! The buffer retains events down to
+//! `finalized_until − retention − lookback` (retention `i64::MAX` =
+//! keep everything). A late event older than the retention floor cannot
+//! be repaired correctly (its window's inputs are gone) and is counted
+//! in `dropped_late` instead of producing a wrong record.
+
+use std::collections::{HashMap, HashSet};
+
+use super::log::StreamEvent;
+use super::watermark::WatermarkTracker;
+use crate::source::{Event, SourceConnector};
+use crate::types::{FeatureWindow, Granularity, Result, Timestamp};
+
+/// Static shape of one partition pipeline.
+#[derive(Debug, Clone, Copy)]
+pub struct PipelineConfig {
+    pub granularity: Granularity,
+    /// Rolling window length in bins (drives the lookback halo).
+    pub window_bins: usize,
+    /// Bounded out-of-orderness: the watermark trails max event time by
+    /// this many seconds.
+    pub allowed_lateness_secs: i64,
+    /// How far below the finalization boundary late events are still
+    /// repairable; `i64::MAX` retains everything.
+    pub retention_secs: i64,
+}
+
+impl PipelineConfig {
+    fn lookback_secs(&self) -> i64 {
+        (self.window_bins.max(1) as i64 - 1) * self.granularity.secs()
+    }
+}
+
+/// One unit of materialization work the engine must run.
+#[derive(Debug, Clone, PartialEq, Eq)]
+pub struct EmitPlan {
+    /// Granularity-aligned feature window to materialize.
+    pub window: FeatureWindow,
+    /// Restrict the compute to these entity keys (`None` = every entity
+    /// with buffered events — the normal emission path).
+    pub keys: Option<Vec<String>>,
+    /// True when this plan re-materializes already-final bins for late
+    /// events.
+    pub repair: bool,
+}
+
+/// Per-partition counters (fed into `StreamStats` / metrics).
+#[derive(Debug, Default, Clone, Copy, PartialEq, Eq)]
+pub struct PartitionStats {
+    /// Events absorbed (including duplicates and drops).
+    pub received: u64,
+    /// Producer redeliveries suppressed by seq dedupe.
+    pub duplicates: u64,
+    /// Events that arrived out of order but within the lateness bound.
+    pub out_of_order: u64,
+    /// Events below the finalization boundary (repair path).
+    pub late: u64,
+    /// Late events older than the retention floor — not repairable.
+    pub dropped_late: u64,
+    /// Normal emission plans produced.
+    pub emitted_windows: u64,
+    /// Repair plans produced.
+    pub repaired_windows: u64,
+}
+
+impl PartitionStats {
+    pub fn add(&mut self, o: PartitionStats) {
+        self.received += o.received;
+        self.duplicates += o.duplicates;
+        self.out_of_order += o.out_of_order;
+        self.late += o.late;
+        self.dropped_late += o.dropped_late;
+        self.emitted_windows += o.emitted_windows;
+        self.repaired_windows += o.repaired_windows;
+    }
+}
+
+/// The per-partition state machine.
+#[derive(Debug)]
+pub struct PartitionPipeline {
+    cfg: PipelineConfig,
+    tracker: WatermarkTracker,
+    /// Retained events (replayable working set; arbitrary order).
+    buffer: Vec<StreamEvent>,
+    /// Producer-seq dedupe set.
+    seen: HashSet<u64>,
+    /// Bins with end ≤ this boundary are final. `i64::MIN` = none yet.
+    finalized_until: Timestamp,
+    /// key → late-event bin starts awaiting repair.
+    pending_repairs: HashMap<String, Vec<Timestamp>>,
+    pub stats: PartitionStats,
+}
+
+impl PartitionPipeline {
+    pub fn new(cfg: PipelineConfig) -> Self {
+        assert!(cfg.window_bins >= 1);
+        assert!(cfg.retention_secs >= 0);
+        PartitionPipeline {
+            tracker: WatermarkTracker::new(cfg.allowed_lateness_secs),
+            cfg,
+            buffer: Vec::new(),
+            seen: HashSet::new(),
+            finalized_until: Timestamp::MIN,
+            pending_repairs: HashMap::new(),
+            stats: PartitionStats::default(),
+        }
+    }
+
+    pub fn watermark(&self) -> Timestamp {
+        self.tracker.watermark()
+    }
+
+    pub fn finalized_until(&self) -> Timestamp {
+        self.finalized_until
+    }
+
+    pub fn buffer(&self) -> &[StreamEvent] {
+        &self.buffer
+    }
+
+    pub fn buffered_events(&self) -> usize {
+        self.buffer.len()
+    }
+
+    /// Oldest *bin start* still repairable, aligned down to a bin
+    /// boundary: a bin is only repairable if **all** of its events are
+    /// still buffered, so the floor must never cut a bin in half —
+    /// otherwise a late event could pass the repairability check while
+    /// part of its bin's inputs were already evicted, and the repair
+    /// would silently produce a wrong value. Late events whose bin
+    /// starts below this are dropped (counted) rather than mis-repaired.
+    fn retention_floor(&self) -> Option<Timestamp> {
+        if self.cfg.retention_secs == i64::MAX || self.finalized_until == Timestamp::MIN {
+            return None;
+        }
+        self.finalized_until
+            .checked_sub(self.cfg.retention_secs)
+            .map(|t| self.cfg.granularity.floor(t))
+    }
+
+    /// Absorb one event: dedupe, classify, buffer, queue repairs.
+    pub fn absorb(&mut self, ev: &StreamEvent) {
+        self.stats.received += 1;
+        if !self.seen.insert(ev.seq) {
+            self.stats.duplicates += 1;
+            return;
+        }
+        let g = self.cfg.granularity;
+        let bin_start = g.floor(ev.ts);
+        let bin_end = bin_start + g.secs();
+        let late = self.finalized_until != Timestamp::MIN && bin_end <= self.finalized_until;
+        let obs = self.tracker.observe(&ev.key, ev.ts);
+        if obs.out_of_order && !late {
+            self.stats.out_of_order += 1;
+        }
+        if late {
+            if self.retention_floor().is_some_and(|floor| bin_start < floor) {
+                self.stats.dropped_late += 1;
+                return;
+            }
+            self.stats.late += 1;
+            self.pending_repairs.entry(ev.key.clone()).or_default().push(bin_start);
+        }
+        self.buffer.push(ev.clone());
+    }
+
+    /// Advance finalization to the watermark and produce the round's
+    /// plans: at most one normal emission window plus the repair windows
+    /// for late events absorbed since the last round. Also evicts the
+    /// buffer below the retention floor.
+    pub fn plans(&mut self) -> Vec<EmitPlan> {
+        let g = self.cfg.granularity;
+        let mut out = Vec::new();
+
+        // Repairs first: their windows are clipped to the boundary as it
+        // stood when the late events arrived — bins finalized *this*
+        // round are emitted below with the late events already in the
+        // buffer, so repairing them too would do the work twice.
+        let repair_cap = self.finalized_until;
+        if !self.pending_repairs.is_empty() && repair_cap != Timestamp::MIN {
+            // Merge each key's touched bins into intervals, then group
+            // keys sharing an identical interval into one plan.
+            let wb_span = self.cfg.window_bins as i64 * g.secs();
+            let mut by_interval: HashMap<(Timestamp, Timestamp), Vec<String>> = HashMap::new();
+            for (key, mut bins) in std::mem::take(&mut self.pending_repairs) {
+                bins.sort_unstable();
+                bins.dedup();
+                let mut cur: Option<(Timestamp, Timestamp)> = None;
+                for b in bins {
+                    let end = b.saturating_add(wb_span).min(repair_cap);
+                    debug_assert!(b < end, "late bin must precede the finalization boundary");
+                    match cur {
+                        Some((s, e)) if b <= e => cur = Some((s, e.max(end))),
+                        Some(done) => {
+                            by_interval.entry(done).or_default().push(key.clone());
+                            cur = Some((b, end));
+                        }
+                        None => cur = Some((b, end)),
+                    }
+                }
+                if let Some(done) = cur {
+                    by_interval.entry(done).or_default().push(key.clone());
+                }
+            }
+            let mut intervals: Vec<((Timestamp, Timestamp), Vec<String>)> =
+                by_interval.into_iter().collect();
+            intervals.sort(); // deterministic plan order
+            for ((s, e), mut keys) in intervals {
+                keys.sort();
+                self.stats.repaired_windows += 1;
+                out.push(EmitPlan { window: FeatureWindow::new(s, e), keys: Some(keys), repair: true });
+            }
+        }
+
+        // Normal emission: all bins newly covered by the watermark.
+        let wm = self.watermark();
+        if wm != Timestamp::MIN {
+            let new_final = g.floor(wm);
+            if new_final > self.finalized_until {
+                let start = if self.finalized_until == Timestamp::MIN {
+                    self.buffer.iter().map(|e| g.floor(e.ts)).min()
+                } else {
+                    Some(self.finalized_until)
+                };
+                if let Some(s) = start {
+                    if s < new_final && self.buffer.iter().any(|e| e.ts < new_final) {
+                        self.stats.emitted_windows += 1;
+                        out.push(EmitPlan {
+                            window: FeatureWindow::new(s.min(new_final), new_final),
+                            keys: None,
+                            repair: false,
+                        });
+                    }
+                }
+                self.finalized_until = new_final;
+            }
+        }
+
+        // Evict below the retention floor (keep the repair lookback halo).
+        if let Some(floor) = self.retention_floor() {
+            if let Some(evict_below) = floor.checked_sub(self.cfg.lookback_secs()) {
+                let seen = &mut self.seen;
+                self.buffer.retain(|e| {
+                    let keep = e.ts >= evict_below;
+                    if !keep {
+                        seen.remove(&e.seq);
+                    }
+                    keep
+                });
+            }
+        }
+        out
+    }
+
+    /// Crash/resume: re-absorb one already-committed event to rebuild
+    /// the working set — buffer + dedupe + watermark only, **no** plan
+    /// side effects (its emissions and repairs were durable before the
+    /// checkpoint committed).
+    pub fn rebuild(&mut self, ev: &StreamEvent) {
+        if !self.seen.insert(ev.seq) {
+            return;
+        }
+        self.tracker.observe(&ev.key, ev.ts);
+        let bin_start = self.cfg.granularity.floor(ev.ts);
+        if self.retention_floor().is_some_and(|floor| bin_start < floor) {
+            return;
+        }
+        self.buffer.push(ev.clone());
+    }
+
+    /// Crash/resume: restore the checkpointed finalization boundary
+    /// (call before [`PartitionPipeline::rebuild`], so the retention
+    /// floor applies during the replay).
+    pub fn restore_finalized(&mut self, t: Timestamp) {
+        self.finalized_until = self.finalized_until.max(t);
+    }
+}
+
+/// A `SourceConnector` over the partition buffer — Algorithm 1's
+/// `source.read` served straight from retained stream events, so the
+/// engine can reuse `Materializer::calculate` verbatim. Optionally
+/// restricted to the entity keys a repair plan names.
+pub struct BufferSource<'a> {
+    events: &'a [StreamEvent],
+    keys: Option<HashSet<&'a str>>,
+}
+
+impl<'a> BufferSource<'a> {
+    pub fn new(events: &'a [StreamEvent], keys: Option<&'a [String]>) -> Self {
+        BufferSource { events, keys: keys.map(|ks| ks.iter().map(String::as_str).collect()) }
+    }
+}
+
+impl SourceConnector for BufferSource<'_> {
+    fn read(&self, window: FeatureWindow, as_of: Timestamp) -> Result<Vec<Event>> {
+        Ok(self
+            .events
+            .iter()
+            .filter(|e| window.contains(e.ts) && e.ts <= as_of)
+            .filter(|e| self.keys.as_ref().is_none_or(|ks| ks.contains(e.key.as_str())))
+            .map(|e| Event { key: e.key.clone(), ts: e.ts, value: e.value })
+            .collect())
+    }
+
+    fn describe(&self) -> String {
+        format!("stream-buffer({} events)", self.events.len())
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::types::time::HOUR;
+
+    fn cfg(wb: usize, lateness: i64, retention: i64) -> PipelineConfig {
+        PipelineConfig {
+            granularity: Granularity(HOUR),
+            window_bins: wb,
+            allowed_lateness_secs: lateness,
+            retention_secs: retention,
+        }
+    }
+
+    fn ev(seq: u64, key: &str, ts: Timestamp) -> StreamEvent {
+        StreamEvent::new(seq, key, ts, 1.0)
+    }
+
+    #[test]
+    fn emits_only_watermark_covered_bins() {
+        let mut p = PartitionPipeline::new(cfg(2, 600, i64::MAX));
+        p.absorb(&ev(0, "a", 100));
+        assert!(p.plans().is_empty(), "watermark below first bin end");
+        // max_seen = HOUR + 700 → wm = HOUR + 100 → bin [0, HOUR) final.
+        p.absorb(&ev(1, "a", HOUR + 700));
+        let plans = p.plans();
+        assert_eq!(plans.len(), 1);
+        assert_eq!(plans[0].window, FeatureWindow::new(0, HOUR));
+        assert!(!plans[0].repair && plans[0].keys.is_none());
+        assert_eq!(p.finalized_until(), HOUR);
+        // No progress → no new plans.
+        assert!(p.plans().is_empty());
+    }
+
+    #[test]
+    fn duplicates_suppressed() {
+        let mut p = PartitionPipeline::new(cfg(1, 0, i64::MAX));
+        p.absorb(&ev(0, "a", 100));
+        p.absorb(&ev(0, "a", 100));
+        p.absorb(&ev(0, "a", 100));
+        assert_eq!(p.stats.duplicates, 2);
+        assert_eq!(p.buffered_events(), 1);
+    }
+
+    #[test]
+    fn late_event_routes_to_entity_scoped_repair() {
+        let mut p = PartitionPipeline::new(cfg(2, 0, i64::MAX));
+        p.absorb(&ev(0, "a", 100));
+        p.absorb(&ev(1, "b", 3 * HOUR + 10));
+        let plans = p.plans(); // finalizes [0, 3h)
+        assert_eq!(plans.len(), 1);
+        assert_eq!(p.finalized_until(), 3 * HOUR);
+        // Event for the already-final bin [0, 1h): late.
+        p.absorb(&ev(2, "a", 50));
+        assert_eq!(p.stats.late, 1);
+        let plans = p.plans();
+        assert_eq!(plans.len(), 1);
+        let r = &plans[0];
+        assert!(r.repair);
+        // Rolling window of 2 bins starting at the event's bin, clipped
+        // to the finalized boundary.
+        assert_eq!(r.window, FeatureWindow::new(0, 2 * HOUR));
+        assert_eq!(r.keys.as_deref(), Some(&["a".to_string()][..]));
+        // The late event stays buffered for future halos.
+        assert_eq!(p.buffered_events(), 3);
+    }
+
+    #[test]
+    fn repair_intervals_merge_and_group_by_key() {
+        let mut p = PartitionPipeline::new(cfg(2, 0, i64::MAX));
+        p.absorb(&ev(0, "z", 10 * HOUR + 5));
+        p.plans(); // finalized to 10h
+        // Two adjacent late bins for "a" merge into one interval; "b"
+        // shares an identical interval with "a"'s first … construct:
+        p.absorb(&ev(1, "a", 30)); // bin 0 → window [0, 2h)
+        p.absorb(&ev(2, "a", HOUR + 30)); // bin 1 → [1h, 3h) — overlaps → [0, 3h)
+        p.absorb(&ev(3, "b", 30)); // bin 0 → [0, 2h)
+        let plans = p.plans();
+        assert_eq!(plans.len(), 2);
+        let a = plans.iter().find(|pl| pl.keys.as_deref() == Some(&["a".to_string()][..])).unwrap();
+        assert_eq!(a.window, FeatureWindow::new(0, 3 * HOUR));
+        let b = plans.iter().find(|pl| pl.keys.as_deref() == Some(&["b".to_string()][..])).unwrap();
+        assert_eq!(b.window, FeatureWindow::new(0, 2 * HOUR));
+        assert_eq!(p.stats.repaired_windows, 2);
+    }
+
+    #[test]
+    fn repair_clips_to_finalized_boundary() {
+        let mut p = PartitionPipeline::new(cfg(4, 0, i64::MAX));
+        p.absorb(&ev(0, "z", 3 * HOUR + 5));
+        p.plans(); // finalized to 3h
+        p.absorb(&ev(1, "a", 2 * HOUR + 1)); // bin [2h,3h) final → late
+        let plans = p.plans();
+        let r = plans.iter().find(|pl| pl.repair).unwrap();
+        // 4-bin span would reach 6h; clipped to the 3h boundary.
+        assert_eq!(r.window, FeatureWindow::new(2 * HOUR, 3 * HOUR));
+    }
+
+    #[test]
+    fn retention_floor_drops_unrepairable_events() {
+        let mut p = PartitionPipeline::new(cfg(1, 0, 2 * HOUR));
+        p.absorb(&ev(0, "z", 10 * HOUR + 5));
+        p.plans(); // finalized 10h; floor = 8h
+        p.absorb(&ev(1, "a", 7 * HOUR)); // below floor → dropped
+        p.absorb(&ev(2, "a", 9 * HOUR)); // above floor → repairable
+        assert_eq!(p.stats.dropped_late, 1);
+        assert_eq!(p.stats.late, 1);
+        let plans = p.plans();
+        assert_eq!(plans.iter().filter(|pl| pl.repair).count(), 1);
+    }
+
+    #[test]
+    fn unaligned_retention_floor_never_splits_a_bin() {
+        // retention 90min (not a bin multiple): the floor aligns down to
+        // 8h, so bin [8h,9h) is either fully repairable with all its
+        // events retained, or fully dropped — never half-evicted.
+        let mut p = PartitionPipeline::new(cfg(1, 0, 90 * 60));
+        p.absorb(&ev(0, "a", 8 * HOUR + 60)); // early event of bin [8h,9h)
+        p.absorb(&ev(1, "z", 10 * HOUR + 5));
+        p.plans(); // finalized 10h; aligned floor = 8h
+        // Early bin-8h event must survive eviction (bin above the floor).
+        assert_eq!(p.buffered_events(), 2);
+        // Late event in the same bin: repairable, and the recompute sees
+        // the retained early event.
+        p.absorb(&ev(2, "a", 8 * HOUR + 30 * 60));
+        let plans = p.plans();
+        let r = plans.iter().find(|pl| pl.repair).unwrap();
+        assert_eq!(r.window, FeatureWindow::new(8 * HOUR, 9 * HOUR));
+        let src = BufferSource::new(p.buffer(), r.keys.as_deref());
+        let got = src.read(r.window, i64::MAX).unwrap();
+        assert_eq!(got.len(), 2, "repair inputs must include the bin's early event");
+        // A late event below the aligned floor is dropped outright.
+        p.absorb(&ev(3, "a", 7 * HOUR + 59 * 60));
+        assert_eq!(p.stats.dropped_late, 1);
+    }
+
+    #[test]
+    fn buffer_evicts_below_retention_and_frees_dedupe() {
+        let mut p = PartitionPipeline::new(cfg(1, 0, HOUR));
+        for i in 0..10 {
+            p.absorb(&ev(i, "a", i as i64 * HOUR + 5));
+        }
+        p.plans(); // finalized 9h, floor 8h, lookback 0 → evict < 8h
+        assert!(p.buffered_events() <= 2, "old events evicted, got {}", p.buffered_events());
+        // Evicted seqs are forgotten — a redelivery of seq 0 is treated
+        // as (too-old) late, not a duplicate.
+        p.absorb(&ev(0, "a", 5));
+        assert_eq!(p.stats.duplicates, 0);
+        assert_eq!(p.stats.dropped_late, 1);
+    }
+
+    #[test]
+    fn rebuild_restores_working_set_without_side_effects() {
+        let mut p = PartitionPipeline::new(cfg(2, 0, i64::MAX));
+        p.restore_finalized(3 * HOUR);
+        for i in 0..5 {
+            p.rebuild(&ev(i, "a", i as i64 * HOUR + 30));
+        }
+        p.rebuild(&ev(2, "a", 2 * HOUR + 30)); // duplicate in replay
+        assert_eq!(p.buffered_events(), 5);
+        assert_eq!(p.finalized_until(), 3 * HOUR);
+        assert_eq!(p.stats, PartitionStats::default(), "rebuild must not count stats");
+        // Resuming: watermark restored from replayed events, so new
+        // plans cover only [3h, …).
+        p.absorb(&ev(10, "a", 6 * HOUR + 5));
+        let plans = p.plans();
+        assert_eq!(plans.len(), 1);
+        assert_eq!(plans[0].window, FeatureWindow::new(3 * HOUR, 6 * HOUR));
+    }
+
+    #[test]
+    fn buffer_source_filters_window_and_keys() {
+        let events =
+            vec![ev(0, "a", 10), ev(1, "b", 20), ev(2, "a", 30), ev(3, "a", 99)];
+        let all = BufferSource::new(&events, None);
+        let got = all.read(FeatureWindow::new(0, 50), i64::MAX).unwrap();
+        assert_eq!(got.len(), 3);
+        let keys = vec!["a".to_string()];
+        let only_a = BufferSource::new(&events, Some(&keys));
+        let got = only_a.read(FeatureWindow::new(0, 100), i64::MAX).unwrap();
+        assert_eq!(got.len(), 3);
+        assert!(got.iter().all(|e| e.key == "a"));
+        assert!(only_a.describe().contains("4 events"));
+    }
+}

@@ -1,0 +1,201 @@
+//! Watermark tracking with bounded out-of-orderness (the streaming
+//! plane's event-time progress clock).
+//!
+//! A watermark at `w` asserts "no more events with `ts < w` are
+//! expected". With a bounded out-of-orderness contract of `L` seconds,
+//! the watermark trails the largest observed event timestamp by `L`:
+//!
+//! ```text
+//! watermark = max_seen_event_ts − allowed_lateness
+//! ```
+//!
+//! Bins whose end falls at or below the watermark are *final* — the
+//! pipeline materializes them and stamps `creation_ts`, which is
+//! exactly what makes the streamed history PIT-consistent: a record is
+//! only created once its input window can no longer grow, and an event
+//! that *does* arrive below the watermark (violating the bound) is
+//! routed through the late-repair path, producing a **new version**
+//! with a later `creation_ts` — the same shape as the batch path's
+//! late-data recompute (Fig 5's R3).
+//!
+//! The tracker also keeps a per-entity high-water mark. Partition-level
+//! finalization must not stall on one quiet entity, so the *partition*
+//! watermark derives from the global maximum; the per-entity marks
+//! classify disorder (an event can be in-order for its entity yet late
+//! for the partition, and vice versa) for monitoring and tests.
+
+use std::collections::HashMap;
+
+use crate::types::Timestamp;
+
+/// Classification of one observed event against the tracker state
+/// *before* the observation.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub struct Observed {
+    /// Event timestamp regressed vs the partition's max — out of order,
+    /// but possibly still within the allowed-lateness bound.
+    pub out_of_order: bool,
+    /// Event timestamp fell below the watermark — the bounded
+    /// out-of-orderness contract was violated (late event).
+    pub beyond_lateness: bool,
+    /// Event timestamp regressed vs its own entity's high-water mark.
+    pub entity_regression: bool,
+}
+
+/// Per-partition watermark state.
+#[derive(Debug)]
+pub struct WatermarkTracker {
+    allowed_lateness: i64,
+    max_seen: Timestamp,
+    per_key: HashMap<String, Timestamp>,
+}
+
+impl WatermarkTracker {
+    pub fn new(allowed_lateness: i64) -> Self {
+        assert!(allowed_lateness >= 0);
+        WatermarkTracker { allowed_lateness, max_seen: Timestamp::MIN, per_key: HashMap::new() }
+    }
+
+    /// Largest event timestamp observed (`i64::MIN` before any event).
+    pub fn max_seen(&self) -> Timestamp {
+        self.max_seen
+    }
+
+    /// Current watermark (`i64::MIN` before any event).
+    pub fn watermark(&self) -> Timestamp {
+        if self.max_seen == Timestamp::MIN {
+            Timestamp::MIN
+        } else {
+            self.max_seen - self.allowed_lateness
+        }
+    }
+
+    /// Observe one event; returns its disorder classification and
+    /// advances the marks. The watermark never regresses.
+    pub fn observe(&mut self, key: &str, ts: Timestamp) -> Observed {
+        let wm = self.watermark();
+        let obs = Observed {
+            out_of_order: self.max_seen != Timestamp::MIN && ts < self.max_seen,
+            beyond_lateness: wm != Timestamp::MIN && ts < wm,
+            entity_regression: self.per_key.get(key).is_some_and(|&hi| ts < hi),
+        };
+        if ts > self.max_seen {
+            self.max_seen = ts;
+        }
+        match self.per_key.get_mut(key) {
+            Some(hi) => {
+                if ts > *hi {
+                    *hi = ts;
+                }
+            }
+            None => {
+                self.per_key.insert(key.to_string(), ts);
+            }
+        }
+        obs
+    }
+
+    /// Per-entity high-water mark.
+    pub fn entity_high(&self, key: &str) -> Option<Timestamp> {
+        self.per_key.get(key).copied()
+    }
+
+    pub fn tracked_entities(&self) -> usize {
+        self.per_key.len()
+    }
+}
+
+/// Table-level watermark: the minimum across partitions that have seen
+/// data (a partition no entity routes to must not stall the table).
+/// `None` until any partition has data.
+pub fn min_watermark<'a>(trackers: impl IntoIterator<Item = &'a WatermarkTracker>) -> Option<Timestamp> {
+    trackers
+        .into_iter()
+        .map(WatermarkTracker::watermark)
+        .filter(|&w| w != Timestamp::MIN)
+        .min()
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn watermark_trails_max_seen() {
+        let mut t = WatermarkTracker::new(10);
+        assert_eq!(t.watermark(), Timestamp::MIN);
+        t.observe("a", 100);
+        assert_eq!(t.watermark(), 90);
+        t.observe("a", 150);
+        assert_eq!(t.watermark(), 140);
+        // Regression never lowers the watermark.
+        t.observe("b", 120);
+        assert_eq!(t.watermark(), 140);
+        assert_eq!(t.max_seen(), 150);
+    }
+
+    #[test]
+    fn classifies_disorder() {
+        let mut t = WatermarkTracker::new(10);
+        let first = t.observe("a", 100);
+        assert_eq!(first, Observed { out_of_order: false, beyond_lateness: false, entity_regression: false });
+        // Within the bound: out of order but not late.
+        let within = t.observe("a", 95);
+        assert!(within.out_of_order && !within.beyond_lateness && within.entity_regression);
+        // Below the watermark (100 - 10 = 90): late.
+        let late = t.observe("a", 85);
+        assert!(late.beyond_lateness);
+        // A different entity moving forward for itself can still be
+        // partition-out-of-order.
+        let b = t.observe("b", 99);
+        assert!(b.out_of_order && !b.entity_regression);
+        assert_eq!(t.entity_high("b"), Some(99));
+        assert_eq!(t.entity_high("a"), Some(100));
+        assert_eq!(t.tracked_entities(), 2);
+    }
+
+    #[test]
+    fn zero_lateness_means_watermark_at_max() {
+        let mut t = WatermarkTracker::new(0);
+        t.observe("a", 50);
+        assert_eq!(t.watermark(), 50);
+        // Exactly at the watermark is not late (bins up to 50 are final,
+        // and an event AT 50 belongs to the bin ending after 50).
+        assert!(!t.observe("a", 50).beyond_lateness);
+        assert!(t.observe("a", 49).beyond_lateness);
+    }
+
+    #[test]
+    fn min_watermark_ignores_idle_partitions() {
+        let mut a = WatermarkTracker::new(5);
+        let b = WatermarkTracker::new(5); // idle — never observed
+        let mut c = WatermarkTracker::new(5);
+        assert_eq!(min_watermark([&a, &b, &c]), None);
+        a.observe("x", 100);
+        assert_eq!(min_watermark([&a, &b, &c]), Some(95));
+        c.observe("y", 50);
+        assert_eq!(min_watermark([&a, &b, &c]), Some(45));
+    }
+
+    #[test]
+    fn prop_watermark_monotone_under_random_streams() {
+        use crate::util::rng::Rng;
+        let mut rng = Rng::new(42);
+        for case in 0..20 {
+            let lateness = rng.range(0, 500);
+            let mut t = WatermarkTracker::new(lateness);
+            let mut prev = Timestamp::MIN;
+            for _ in 0..300 {
+                let ts = rng.range(-1_000, 100_000);
+                let key = format!("e{}", rng.below(6));
+                let obs = t.observe(&key, ts);
+                // Late ⟺ below the pre-observation watermark.
+                assert_eq!(obs.beyond_lateness, prev != Timestamp::MIN && ts < prev, "case {case}");
+                let wm = t.watermark();
+                assert!(wm >= prev, "watermark regressed: {wm} < {prev}");
+                assert!(wm == Timestamp::MIN || wm == t.max_seen() - lateness);
+                prev = wm;
+            }
+        }
+    }
+}

@@ -8,6 +8,30 @@ pub use prop::{forall, Gen};
 use std::path::{Path, PathBuf};
 use std::sync::atomic::{AtomicU64, Ordering};
 
+use crate::source::{Event, SourceConnector};
+use crate::types::{FeatureWindow, Result, Timestamp};
+
+/// Fixed-event batch source: serves exactly the given events, honoring
+/// window + `as_of` visibility. Shared by the consistency tests and the
+/// stream bench so their batch-vs-stream differentials read the same
+/// source semantics (same role as [`TempDir`]: one fixture, no drift).
+pub struct FixedSource(pub Vec<Event>);
+
+impl SourceConnector for FixedSource {
+    fn read(&self, window: FeatureWindow, as_of: Timestamp) -> Result<Vec<Event>> {
+        Ok(self
+            .0
+            .iter()
+            .filter(|e| window.contains(e.ts) && e.ts <= as_of)
+            .cloned()
+            .collect())
+    }
+
+    fn describe(&self) -> String {
+        format!("fixed({} events)", self.0.len())
+    }
+}
+
 static TEMP_SEQ: AtomicU64 = AtomicU64::new(0);
 
 /// RAII temporary directory: unique per instance, removed on drop —
