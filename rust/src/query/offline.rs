@@ -11,9 +11,13 @@
 //! 1. The spine is sorted once by `(entity, ts)` — the same order the
 //!    offline store's columnar segments are sorted in.
 //! 2. Each table contributes an [`OfflineStore::snapshot`]: `Arc`-shared
-//!    sorted segments. For each spine entity, the engine binary-searches
-//!    each segment's **entity run** (advancing a per-segment cursor,
-//!    since spine entities ascend) and k-way-merges the runs into one
+//!    sorted **compressed** segments, read through per-segment
+//!    [`SegmentCursor`]s (PR 4): the entity-run binary search goes
+//!    through each segment's block directory and decodes exactly the
+//!    blocks a run touches — full key planes are never materialized.
+//!    For each spine entity, the engine binary-searches each segment's
+//!    **entity run** (advancing a per-segment position, since spine
+//!    entities ascend) and k-way-merges the runs into one
 //!    `(event_ts, creation_ts)`-sorted candidate list — a merge of
 //!    presorted runs, not a sort, touching only spine entities inside
 //!    the scan window.
@@ -37,7 +41,7 @@ use super::pit::{Observation, PitConfig};
 use super::spec::FeatureRef;
 use crate::exec::ThreadPool;
 use crate::metadata::assets::FeatureSetSpec;
-use crate::offline_store::{OfflineStore, Segment};
+use crate::offline_store::{OfflineStore, Segment, SegmentCursor};
 use crate::types::{EntityId, FeatureWindow, FsError, Result, Timestamp};
 
 /// A training dataframe in columnar layout: one entry per observation
@@ -114,12 +118,15 @@ fn pit_pick(rows: &[Candidate], ts: Timestamp, cfg: PitConfig) -> Option<usize> 
 
 /// Gather `entity`'s rows (within `window`) from every segment and
 /// k-way-merge the presorted runs into `out`, sorted by
-/// `(event_ts, creation_ts)`. `cursors` are per-segment positions that
-/// only move forward — valid because callers probe entities in
-/// ascending order.
+/// `(event_ts, creation_ts)`. `positions` are per-segment forward-only
+/// run positions (valid because callers probe entities in ascending
+/// order); `readers` are the per-segment lazy-decode cursors — each
+/// holds one decoded block, so an ascending probe sequence streams
+/// block to block instead of materializing key planes.
 fn collect_candidates(
     segs: &[Arc<Segment>],
-    cursors: &mut [usize],
+    readers: &mut [SegmentCursor<'_>],
+    positions: &mut [usize],
     entity: EntityId,
     window: FeatureWindow,
     heads: &mut Vec<(usize, usize, usize)>,
@@ -133,17 +140,17 @@ fn collect_candidates(
         if !seg.may_contain_entity(entity) || !seg.overlaps_event_window(window) {
             continue;
         }
-        let (lo, hi) = seg.entity_run(entity, cursors[si]);
-        cursors[si] = hi;
-        let (wlo, whi) = seg.run_event_window(lo, hi, window);
+        let (lo, hi) = readers[si].entity_run(entity, positions[si]);
+        positions[si] = hi;
+        let (wlo, whi) = readers[si].run_event_window(lo, hi, window);
         if wlo < whi {
             heads.push((si, wlo, whi));
         }
     }
     if let &[(si, lo, hi)] = &heads[..] {
-        let seg = &segs[si];
         for i in lo..hi {
-            out.push((seg.event_ts()[i], seg.creation_ts()[i], si as u32, i as u32));
+            let (_, ev, cr) = readers[si].key(i);
+            out.push((ev, cr, si as u32, i as u32));
         }
         return;
     }
@@ -151,13 +158,15 @@ fn collect_candidates(
         let mut b = 0;
         let mut bkey = {
             let (si, i, _) = heads[0];
-            (segs[si].event_ts()[i], segs[si].creation_ts()[i])
+            let (_, ev, cr) = readers[si].key(i);
+            (ev, cr)
         };
-        for (k, &(si, i, _)) in heads.iter().enumerate().skip(1) {
-            let key = (segs[si].event_ts()[i], segs[si].creation_ts()[i]);
-            if key < bkey {
+        for k in 1..heads.len() {
+            let (si, i, _) = heads[k];
+            let (_, ev, cr) = readers[si].key(i);
+            if (ev, cr) < bkey {
                 b = k;
-                bkey = key;
+                bkey = (ev, cr);
             }
         }
         let (si, i, hi) = heads[b];
@@ -192,7 +201,11 @@ impl JoinTask {
         let n_cols = self.cols.len();
         let span = &self.order[self.lo..self.hi];
         let mut out = vec![None; span.len() * n_cols];
-        let mut cursors = vec![0usize; self.segs.len()];
+        // Per-segment decode cursors + forward-only run positions: the
+        // task streams each compressed segment's blocks exactly once as
+        // spine entities ascend.
+        let mut readers: Vec<SegmentCursor<'_>> = self.segs.iter().map(|s| s.cursor()).collect();
+        let mut positions = vec![0usize; self.segs.len()];
         let mut heads: Vec<(usize, usize, usize)> = Vec::new();
         let mut cand: Vec<Candidate> = Vec::new();
         let mut pos = 0;
@@ -202,7 +215,15 @@ impl JoinTask {
             while end < span.len() && self.obs[span[end] as usize].entity == entity {
                 end += 1;
             }
-            collect_candidates(&self.segs, &mut cursors, entity, self.window, &mut heads, &mut cand);
+            collect_candidates(
+                &self.segs,
+                &mut readers,
+                &mut positions,
+                entity,
+                self.window,
+                &mut heads,
+                &mut cand,
+            );
             if !cand.is_empty() {
                 for k in pos..end {
                     let o = self.obs[span[k] as usize];

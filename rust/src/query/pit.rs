@@ -85,7 +85,10 @@ impl PitIndex {
 ///
 /// Shared by [`PitIndex::lookup`] and the offline engine's merge-join
 /// candidate resolution, so the leakage-guard rule has exactly one
-/// implementation.
+/// implementation. The merge-join feeds it `(event_ts, creation_ts)`
+/// tuples lifted out of compressed segments by lazy cursors — the walk
+/// itself never touches storage, which is what keeps the rule reusable
+/// across the raw-record oracle and the compressed engine.
 pub(crate) fn pit_walk<K>(
     rows: &[K],
     key: impl Fn(&K) -> (Timestamp, Timestamp),

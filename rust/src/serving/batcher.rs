@@ -24,11 +24,12 @@
 
 use std::collections::VecDeque;
 use std::sync::atomic::{AtomicBool, AtomicUsize, Ordering};
-use std::sync::{Arc, Condvar, Mutex, OnceLock};
+use std::sync::{Arc, Mutex, OnceLock};
 use std::time::{Duration, Instant};
 
 use crate::online_store::OnlineStore;
 use crate::types::{EntityId, FeatureRecord, Timestamp};
+use crate::util::wake::Wake;
 use crate::util::Clock;
 
 /// Microseconds since process start — the wall-clock timebase shared by
@@ -36,31 +37,6 @@ use crate::util::Clock;
 pub fn wall_us() -> u64 {
     static T0: OnceLock<Instant> = OnceLock::new();
     T0.get_or_init(Instant::now).elapsed().as_micros() as u64
-}
-
-/// Wake channel between `push` and a parked [`FlushDriver`].
-#[derive(Debug, Default)]
-struct Wake {
-    pings: Mutex<u64>,
-    cv: Condvar,
-}
-
-impl Wake {
-    fn ping(&self) {
-        *self.pings.lock().unwrap() += 1;
-        self.cv.notify_all();
-    }
-
-    /// Wait until pinged past `seen` or `timeout` elapses; returns the
-    /// latest ping counter.
-    fn wait(&self, seen: u64, timeout: Duration) -> u64 {
-        let mut g = self.pings.lock().unwrap();
-        if *g == seen {
-            let (g2, _) = self.cv.wait_timeout(g, timeout).unwrap();
-            g = g2;
-        }
-        *g
-    }
 }
 
 /// Background flush thread: parked on a batcher's wake channel, ticks

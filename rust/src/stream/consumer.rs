@@ -52,11 +52,27 @@ fn slot(group: &str, table: &str, partition: usize) -> String {
 #[derive(Debug, Default)]
 pub struct CheckpointStore {
     inner: Mutex<HashMap<String, PartitionCheckpoint>>,
+    /// Known `(group, table)` consumers. A registered consumer that has
+    /// not yet committed a partition **vetoes** truncation for it —
+    /// otherwise a freshly-started group sharing an already-checkpointed
+    /// log would silently lose the prefix another group's commits
+    /// released. Registration is in-memory only (not persisted):
+    /// consumers re-register when their engines re-attach after a
+    /// restart, before any truncation can run.
+    consumers: Mutex<std::collections::HashSet<(String, String)>>,
 }
 
 impl CheckpointStore {
     pub fn new() -> Self {
         Self::default()
+    }
+
+    /// Declare that `group` consumes `table` (idempotent). Engines call
+    /// this before their first truncation opportunity so the retention
+    /// bound can never run ahead of a consumer that exists but has not
+    /// committed yet.
+    pub fn register_consumer(&self, group: &str, table: &str) {
+        self.consumers.lock().unwrap().insert((group.to_string(), table.to_string()));
     }
 
     /// Commit progress for one partition (overwrites prior commits).
@@ -66,6 +82,48 @@ impl CheckpointStore {
 
     pub fn get(&self, group: &str, table: &str, partition: usize) -> Option<PartitionCheckpoint> {
         self.inner.lock().unwrap().get(&slot(group, table, partition)).copied()
+    }
+
+    /// Minimum committed offset for `(table, partition)` across **all**
+    /// consumer groups — the log-retention bound: everything below it
+    /// has been durably applied by every group that committed this
+    /// partition, so the log may truncate it (clamped further by the
+    /// repair-retention floor; see `StreamIngestor::truncate_log`).
+    /// `None` when no group has committed the partition yet, **or** when
+    /// a [`CheckpointStore::register_consumer`]-declared consumer of the
+    /// table has not committed it (retain everything for the laggard).
+    /// Groups commit all partitions atomically in `checkpoint_to`, so a
+    /// committed group cannot be silently skipped here by having
+    /// committed only some partitions.
+    pub fn min_committed_offset(&self, table: &str, partition: usize) -> Option<u64> {
+        // Lock order: consumers, then inner (only this method takes both).
+        let consumers = self.consumers.lock().unwrap();
+        let g = self.inner.lock().unwrap();
+        let mut min: Option<u64> = None;
+        for (group, t) in consumers.iter() {
+            if t != table {
+                continue;
+            }
+            match g.get(&slot(group, table, partition)) {
+                Some(ck) => min = Some(min.map_or(ck.offset, |m| m.min(ck.offset))),
+                // Registered but uncommitted: veto truncation entirely.
+                None => return None,
+            }
+        }
+        // Commits from groups that never registered (e.g. loaded from a
+        // persisted checkpoint file) still hold the bound down.
+        for (key, ck) in g.iter() {
+            let mut parts = key.split('\u{1f}');
+            let _group = parts.next();
+            if parts.next() != Some(table) {
+                continue;
+            }
+            if parts.next().and_then(|p| p.parse::<usize>().ok()) != Some(partition) {
+                continue;
+            }
+            min = Some(min.map_or(ck.offset, |m| m.min(ck.offset)));
+        }
+        min
     }
 
     pub fn len(&self) -> usize {
@@ -159,6 +217,36 @@ mod tests {
         assert_eq!(s.get("g2", "t", 0).unwrap().offset, 7);
         assert!(s.get("g", "other", 0).is_none());
         assert_eq!(s.len(), 3);
+    }
+
+    #[test]
+    fn min_committed_offset_spans_groups() {
+        let s = CheckpointStore::new();
+        assert_eq!(s.min_committed_offset("t", 0), None);
+        s.commit("g1", "t", 0, ck(9, None, None));
+        assert_eq!(s.min_committed_offset("t", 0), Some(9));
+        s.commit("g2", "t", 0, ck(4, None, None));
+        assert_eq!(s.min_committed_offset("t", 0), Some(4));
+        // Other partitions and tables do not interfere.
+        s.commit("g1", "t", 1, ck(1, None, None));
+        s.commit("g1", "other", 0, ck(0, None, None));
+        assert_eq!(s.min_committed_offset("t", 0), Some(4));
+        assert_eq!(s.min_committed_offset("t", 1), Some(1));
+        assert_eq!(s.min_committed_offset("ghost", 0), None);
+        // A lagging group holds the bound down even as others advance.
+        s.commit("g1", "t", 0, ck(100, None, None));
+        assert_eq!(s.min_committed_offset("t", 0), Some(4));
+        // A registered-but-uncommitted consumer vetoes truncation: a
+        // freshly-started group must not lose the prefix other groups
+        // already released.
+        s.register_consumer("g3", "t");
+        assert_eq!(s.min_committed_offset("t", 0), None);
+        s.commit("g3", "t", 0, ck(2, None, None));
+        assert_eq!(s.min_committed_offset("t", 0), Some(2));
+        // Registration is idempotent and table-scoped.
+        s.register_consumer("g3", "t");
+        s.register_consumer("g9", "elsewhere");
+        assert_eq!(s.min_committed_offset("t", 0), Some(2));
     }
 
     #[test]

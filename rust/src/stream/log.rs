@@ -14,9 +14,14 @@
 //!   store's shards), so all events of one entity land in one partition
 //!   and per-entity order is preserved end to end.
 //!
-//! Items are retained for the log's lifetime: the log **is** the
+//! Items are retained until explicitly truncated: the log **is** the
 //! replayable source of truth that makes consumer crash/resume
 //! (`stream::consumer`) possible without snapshotting pipeline state.
+//! [`PartitionedLog::truncate_below`] reclaims a prefix once every
+//! consumer group's checkpoint (and the repair-retention floor) has
+//! moved past it — offsets are stable across truncation: each partition
+//! keeps a `base` offset, so offset arithmetic never shifts and a
+//! cursor pointing below the base simply resumes at the base.
 
 use std::sync::atomic::{AtomicU64, Ordering};
 use std::sync::RwLock;
@@ -47,17 +52,30 @@ impl StreamEvent {
     }
 }
 
-/// Generic N-partition append-only log. Partitions are independently
-/// locked; appends to different partitions never contend.
+/// One partition's state: retained items plus the offset of the first
+/// retained item (`base` only grows, via truncation).
+#[derive(Debug)]
+struct Part<T> {
+    base: u64,
+    items: Vec<T>,
+}
+
+/// Generic N-partition append-only log with prefix truncation.
+/// Partitions are independently locked; appends to different partitions
+/// never contend.
 #[derive(Debug)]
 pub struct PartitionedLog<T> {
-    parts: Vec<RwLock<Vec<T>>>,
+    parts: Vec<RwLock<Part<T>>>,
 }
 
 impl<T: Clone> PartitionedLog<T> {
     pub fn new(partitions: usize) -> Self {
         assert!(partitions > 0);
-        PartitionedLog { parts: (0..partitions).map(|_| RwLock::new(Vec::new())).collect() }
+        PartitionedLog {
+            parts: (0..partitions)
+                .map(|_| RwLock::new(Part { base: 0, items: Vec::new() }))
+                .collect(),
+        }
     }
 
     pub fn partitions(&self) -> usize {
@@ -67,31 +85,55 @@ impl<T: Clone> PartitionedLog<T> {
     /// Append one item; returns its offset within the partition.
     pub fn append(&self, partition: usize, item: T) -> u64 {
         let mut p = self.parts[partition].write().unwrap();
-        p.push(item);
-        (p.len() - 1) as u64
+        p.items.push(item);
+        p.base + (p.items.len() - 1) as u64
     }
 
     /// Exclusive end of the partition (next offset to be written).
     pub fn high_water(&self, partition: usize) -> u64 {
-        self.parts[partition].read().unwrap().len() as u64
+        let p = self.parts[partition].read().unwrap();
+        p.base + p.items.len() as u64
+    }
+
+    /// Offset of the oldest retained item (0 until truncation).
+    pub fn base_offset(&self, partition: usize) -> u64 {
+        self.parts[partition].read().unwrap().base
     }
 
     /// Up to `max` items from `offset` (inclusive), with their offsets.
-    /// An offset at/past the high-water mark yields an empty batch.
+    /// An offset at/past the high-water mark yields an empty batch; an
+    /// offset below the retained base resumes at the base (those items
+    /// are gone — callers that need them had a checkpoint covering them).
     pub fn read_from(&self, partition: usize, offset: u64, max: usize) -> Vec<(u64, T)> {
         let p = self.parts[partition].read().unwrap();
-        let lo = (offset as usize).min(p.len());
-        let hi = lo.saturating_add(max).min(p.len());
-        p[lo..hi]
+        let lo = (offset.max(p.base) - p.base) as usize;
+        let lo = lo.min(p.items.len());
+        let hi = lo.saturating_add(max).min(p.items.len());
+        p.items[lo..hi]
             .iter()
             .enumerate()
-            .map(|(i, item)| ((lo + i) as u64, item.clone()))
+            .map(|(i, item)| (p.base + (lo + i) as u64, item.clone()))
             .collect()
     }
 
-    /// Total items across all partitions.
+    /// Drop every item below `offset` (clamped to `[base, high_water]`).
+    /// Returns the number of items reclaimed. Offsets of surviving items
+    /// are unchanged.
+    pub fn truncate_below(&self, partition: usize, offset: u64) -> u64 {
+        let mut p = self.parts[partition].write().unwrap();
+        let hw = p.base + p.items.len() as u64;
+        let cut = offset.clamp(p.base, hw);
+        let drop_n = (cut - p.base) as usize;
+        if drop_n > 0 {
+            p.items.drain(..drop_n);
+            p.base = cut;
+        }
+        drop_n as u64
+    }
+
+    /// Retained items across all partitions (truncated items excluded).
     pub fn len(&self) -> usize {
-        self.parts.iter().map(|p| p.read().unwrap().len()).sum()
+        self.parts.iter().map(|p| p.read().unwrap().items.len()).sum()
     }
 
     pub fn is_empty(&self) -> bool {
@@ -153,8 +195,17 @@ impl EventLog {
         self.log.high_water(partition)
     }
 
+    pub fn base_offset(&self, partition: usize) -> u64 {
+        self.log.base_offset(partition)
+    }
+
     pub fn read_from(&self, partition: usize, offset: u64, max: usize) -> Vec<(u64, StreamEvent)> {
         self.log.read_from(partition, offset, max)
+    }
+
+    /// Reclaim events below `offset` (see [`PartitionedLog::truncate_below`]).
+    pub fn truncate_below(&self, partition: usize, offset: u64) -> u64 {
+        self.log.truncate_below(partition, offset)
     }
 
     pub fn len(&self) -> usize {
@@ -195,6 +246,29 @@ mod tests {
         let b: Vec<_> = log.read_from(0, 3, usize::MAX);
         assert_eq!(a.len(), 5);
         assert_eq!(b, vec![(3, 3), (4, 4)]);
+    }
+
+    #[test]
+    fn truncation_preserves_offsets_and_reclaims_memory() {
+        let log: PartitionedLog<u32> = PartitionedLog::new(1);
+        for i in 0..10 {
+            log.append(0, i);
+        }
+        assert_eq!(log.truncate_below(0, 4), 4);
+        assert_eq!(log.base_offset(0), 4);
+        assert_eq!(log.len(), 6);
+        // Surviving offsets are unchanged; reads below base resume at base.
+        assert_eq!(log.read_from(0, 4, 2), vec![(4, 4), (5, 5)]);
+        assert_eq!(log.read_from(0, 0, 3), vec![(4, 4), (5, 5), (6, 6)]);
+        // Appends continue the offset sequence.
+        assert_eq!(log.append(0, 99), 10);
+        assert_eq!(log.high_water(0), 11);
+        // Truncation is idempotent and clamps to the high-water mark.
+        assert_eq!(log.truncate_below(0, 4), 0);
+        assert_eq!(log.truncate_below(0, 1_000), 7);
+        assert!(log.read_from(0, 0, 10).is_empty());
+        assert_eq!(log.base_offset(0), 11);
+        assert_eq!(log.append(0, 7), 11);
     }
 
     #[test]

@@ -59,6 +59,17 @@
 //! signal: each poll advances `monitor::freshness` to it and gauges
 //! `stream_watermark_lag_secs`, so the SLA machinery treats "ripe but
 //! unwatermarked" stream time exactly like unmaterialized batch time.
+//! `stream_watermark_skew_secs` (max−min across partitions) exposes a
+//! stuck partition before the table watermark visibly stalls.
+//!
+//! # Log retention
+//!
+//! When a [`CheckpointStore`] is attached (`StreamDeps::checkpoints`),
+//! each poll truncates the source log below the minimum committed
+//! offset across **all** consumer groups, clamped to the bin-aligned
+//! repair retention floor — so log memory is bounded by consumer lag +
+//! repair horizon instead of growing forever, while crash/resume and
+//! late-repair replay keep working over the retained suffix.
 
 pub mod consumer;
 pub mod log;
@@ -140,6 +151,13 @@ pub struct StreamDeps {
     /// Remote regions that should tail the emitted-record log
     /// (typically `GeoReplicator::replica_set`). Empty = no replication.
     pub replicas: Vec<(String, Arc<OnlineStore>, i64)>,
+    /// Consumer-group checkpoint store consulted by `poll` for log
+    /// retention: events below the minimum committed offset across
+    /// **all** groups (clamped to the bin-aligned repair retention
+    /// floor) are truncated from the source log. `None` = retain
+    /// everything (the pre-retention behavior; also what keeps ad-hoc
+    /// test engines trivially replayable).
+    pub checkpoints: Option<Arc<CheckpointStore>>,
 }
 
 /// One poll round's aggregate outcome.
@@ -156,6 +174,13 @@ pub struct StreamStats {
     /// Table watermark after the round (None until any partition has
     /// data).
     pub watermark: Option<Timestamp>,
+    /// Max−min watermark across partitions with data (0 with ≤ 1 active
+    /// partition): the stuck-partition signal — one stalled partition
+    /// drags the table watermark (the min) while healthy partitions run
+    /// ahead (the max), so skew grows long before freshness trips.
+    pub watermark_skew_secs: i64,
+    /// Log entries reclaimed by retention this round.
+    pub truncated: u64,
 }
 
 /// Per-partition consumer + pipeline state.
@@ -253,6 +278,13 @@ impl StreamIngestor {
         // already-consumed offsets (see Materializer::validate_executable).
         deps.materializer.validate_executable(&spec)?;
         let table = spec.reference();
+        // Declare this engine's consumer group before any truncation can
+        // run: an uncommitted registered group vetoes log retention, so
+        // a second engine attaching to a shared, already-checkpointed
+        // log cannot lose the prefix the first engine's commits released.
+        if let Some(ck) = &deps.checkpoints {
+            ck.register_consumer(&cfg.group, &table);
+        }
         let pcfg = PipelineConfig {
             granularity: spec.granularity,
             window_bins: spec.window_bins.max(1),
@@ -403,14 +435,34 @@ impl StreamIngestor {
         };
         let mut stats = StreamStats::default();
         let mut wm: Option<Timestamp> = None;
+        let mut wm_max: Option<Timestamp> = None;
         for round in rounds {
             let r = round?;
             stats.consumed += r.consumed;
             stats.records_emitted += r.records;
             stats.pipeline.add(r.stats);
             wm = fold_min_wm(wm, r.watermark);
+            if r.watermark != Timestamp::MIN {
+                wm_max = Some(wm_max.map_or(r.watermark, |cur| cur.max(r.watermark)));
+            }
         }
         stats.watermark = wm;
+        // Per-partition watermark skew: a stuck partition shows up here
+        // (max races ahead of the min) before the table watermark — and
+        // therefore freshness — visibly stalls.
+        if let (Some(lo), Some(hi)) = (wm, wm_max) {
+            stats.watermark_skew_secs = (hi - lo).max(0);
+            self.deps.metrics.set_gauge(
+                MetricKind::System,
+                "stream_watermark_skew_secs",
+                stats.watermark_skew_secs as f64,
+            );
+        }
+        // Log retention: reclaim the prefix every consumer group has
+        // durably committed, clamped to the repair-retention floor.
+        if let Some(ck) = self.deps.checkpoints.clone() {
+            stats.truncated = self.truncate_log(&ck);
+        }
 
         let now = self.deps.clock.now();
         // Online write stage: inline flush when pull-based, or when the
@@ -445,6 +497,8 @@ impl StreamIngestor {
             agg.records_emitted += s.records_emitted;
             agg.pipeline = s.pipeline; // cumulative since engine start
             agg.watermark = s.watermark;
+            agg.watermark_skew_secs = s.watermark_skew_secs;
+            agg.truncated += s.truncated;
             if s.consumed == 0 {
                 break;
             }
@@ -458,6 +512,53 @@ impl StreamIngestor {
     /// Returns records applied per region (empty without replicas).
     pub fn pump_replicas(&self, now: Timestamp) -> std::collections::HashMap<String, u64> {
         self.tailer.as_ref().map(|t| t.pump(now)).unwrap_or_default()
+    }
+
+    /// Reclaim source-log entries no consumer will ever need again:
+    /// below the **minimum committed offset across all consumer groups**
+    /// for the partition, and older than the partition's bin-aligned
+    /// repair retention floor (minus the lookback halo). The second
+    /// clamp matters because crash/resume rebuilds the partition buffer
+    /// by replaying the log below the committed offset — events the
+    /// rebuild still wants must survive even though every group has
+    /// committed past them. Entries are scanned in arrival order and
+    /// truncation stops at the first entry that is either uncommitted or
+    /// still repair-relevant (prefix truncation only). Returns entries
+    /// reclaimed. Wired into [`StreamIngestor::poll`] when
+    /// `StreamDeps::checkpoints` is set; callers managing their own
+    /// checkpoint store can invoke it directly.
+    pub fn truncate_log(&self, store: &CheckpointStore) -> u64 {
+        // Self-register: this engine's own uncommitted group must veto
+        // truncation even when the caller's store is not the one in
+        // `deps.checkpoints` (which registered at construction).
+        store.register_consumer(&self.cfg.group, &self.table);
+        let mut reclaimed = 0;
+        for p in 0..self.parts.len() {
+            // Cheapest guard first: with unbounded retention (the
+            // default) there is never anything to reclaim, and the
+            // checkpoint-map scan is skipped entirely.
+            let evict_ts = {
+                let st = self.parts[p].lock().unwrap();
+                st.pipeline.evictable_below()
+            };
+            let Some(evict_ts) = evict_ts else { continue };
+            let Some(committed) = store.min_committed_offset(&self.table, p) else { continue };
+            let mut cut = self.log.base_offset(p);
+            'scan: while cut < committed {
+                let batch = self.log.read_from(p, cut, 256);
+                if batch.is_empty() {
+                    break;
+                }
+                for (off, ev) in &batch {
+                    if *off >= committed || ev.ts >= evict_ts {
+                        break 'scan;
+                    }
+                    cut = off + 1;
+                }
+            }
+            reclaimed += self.log.truncate_below(p, cut);
+        }
+        reclaimed
     }
 
     /// Commit consumer progress behind a flush barrier: drain the online
@@ -524,7 +625,12 @@ impl StreamIngestor {
             if let Some(lc) = ck.last_creation {
                 st.last_creation = st.last_creation.max(lc);
             }
-            for (_, ev) in self.log.read_from(p, 0, ck.offset as usize) {
+            // Replay [base, committed): retention may have truncated a
+            // prefix — those events are below the repair floor, so the
+            // rebuild would have dropped them anyway.
+            let base = self.log.base_offset(p);
+            let replay = ck.offset.saturating_sub(base) as usize;
+            for (_, ev) in self.log.read_from(p, base, replay) {
                 st.pipeline.rebuild(&ev);
             }
             st.next_offset = ck.offset.min(self.log.high_water(p));
@@ -561,6 +667,7 @@ mod tests {
             clock,
             pool: None,
             replicas: Vec::new(),
+            checkpoints: None,
         }
     }
 
@@ -744,6 +851,96 @@ mod tests {
         let applied = ing.pump_replicas(10 * HOUR + 60);
         assert!(applied["westeurope"] > 0);
         assert_eq!(eu.get(&table, a, 10 * HOUR + 60).unwrap().values[0], 4.0);
+    }
+
+    #[test]
+    fn watermark_skew_gauge_exposes_stuck_partition() {
+        let clock = Clock::fixed(50 * HOUR);
+        let ing = StreamIngestor::new(
+            spec(1),
+            StreamConfig { partitions: 2, ..Default::default() },
+            deps(clock),
+        )
+        .unwrap();
+        // Find keys landing in different partitions.
+        let (mut key_a, mut key_b) = (None, None);
+        for i in 0..64 {
+            let k = format!("cust_{i}");
+            match ing.log().partition_of(&k) {
+                0 if key_a.is_none() => key_a = Some(k),
+                1 if key_b.is_none() => key_b = Some(k),
+                _ => {}
+            }
+            if key_a.is_some() && key_b.is_some() {
+                break;
+            }
+        }
+        let (a, b) = (key_a.unwrap(), key_b.unwrap());
+        // Partition of `a` runs 9 hours ahead of `b`'s: the table
+        // watermark (min) sits at 1h while the skew gauge exposes the
+        // laggard long before freshness notices.
+        ing.ingest(&[ev(0, &a, 10 * HOUR, 1.0), ev(1, &b, HOUR, 1.0)]);
+        let s = ing.poll().unwrap();
+        assert_eq!(s.watermark, Some(HOUR));
+        assert_eq!(s.watermark_skew_secs, 9 * HOUR);
+        assert_eq!(
+            ing.deps.metrics.gauge("stream_watermark_skew_secs"),
+            Some((9 * HOUR) as f64)
+        );
+        // The stuck partition catches up → skew collapses.
+        ing.ingest(&[ev(2, &b, 10 * HOUR, 1.0)]);
+        let s = ing.poll().unwrap();
+        assert_eq!(s.watermark_skew_secs, 0);
+        assert_eq!(ing.deps.metrics.gauge("stream_watermark_skew_secs"), Some(0.0));
+    }
+
+    #[test]
+    fn log_retention_truncates_committed_prefix_and_survives_resume() {
+        let clock = Clock::fixed(100 * HOUR);
+        let store = Arc::new(CheckpointStore::new());
+        let mut d = deps(clock.clone());
+        d.checkpoints = Some(store.clone());
+        let cfg = StreamConfig {
+            partitions: 1,
+            retention_secs: 2 * HOUR,
+            ..Default::default()
+        };
+        let ing = StreamIngestor::new(spec(1), cfg.clone(), d).unwrap();
+        let events: Vec<StreamEvent> =
+            (0..20).map(|i| ev(i, "a", i as i64 * HOUR + 30 * 60, 1.0)).collect();
+        ing.ingest(&events);
+        ing.drain().unwrap();
+        // No checkpoint committed yet → nothing truncated.
+        assert_eq!(ing.log().base_offset(0), 0);
+
+        ing.checkpoint_to(&store);
+        let s = ing.poll().unwrap();
+        // Finalized to 19h, retention floor 17h (lookback 0): committed
+        // events with ts < 17h are reclaimed, the repair halo survives.
+        assert_eq!(s.truncated, 17);
+        assert_eq!(ing.log().base_offset(0), 17);
+        assert_eq!(ing.log().len(), 3);
+        assert_eq!(ing.log().high_water(0), 20);
+
+        // Crash/resume over the truncated log: a fresh engine restores
+        // from the checkpoint, replays only the retained suffix, and
+        // keeps processing.
+        let d2 = {
+            let mut d2 = deps(clock.clone());
+            d2.checkpoints = Some(store.clone());
+            d2
+        };
+        let ing2 = StreamIngestor::with_log(spec(1), cfg, d2, ing.log().clone()).unwrap();
+        ing2.restore_from(&store).unwrap();
+        ing2.ingest(&[ev(50, "a", 20 * HOUR + 10, 2.0)]);
+        let s2 = ing2.drain().unwrap();
+        assert!(s2.records_emitted > 0, "resumed engine must emit the newly-final bin");
+        let table = ing2.table().to_string();
+        let a = ing2.deps.materializer.interner().lookup("a").unwrap();
+        // The emitted bin is 19h→20h with the retained 19h30 event.
+        let got = ing2.deps.online.get(&table, a, i64::MAX - 1).unwrap();
+        assert_eq!(got.event_ts, 20 * HOUR);
+        assert_eq!(got.values[0], 1.0);
     }
 
     #[test]

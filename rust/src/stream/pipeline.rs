@@ -173,6 +173,18 @@ impl PartitionPipeline {
             .map(|t| self.cfg.granularity.floor(t))
     }
 
+    /// Events with `ts` below this bound can no longer contribute to any
+    /// repair: the bin-aligned retention floor minus the rolling-window
+    /// lookback halo. This is both the buffer-eviction bound and the
+    /// **safe log-truncation bound** for this partition — a replayed
+    /// event below it would be dropped by `rebuild` anyway, so the log
+    /// may reclaim it once every consumer group's checkpoint has passed
+    /// it (`StreamIngestor::truncate_log`). `None` while retention is
+    /// unbounded or nothing has finalized.
+    pub fn evictable_below(&self) -> Option<Timestamp> {
+        self.retention_floor().and_then(|f| f.checked_sub(self.cfg.lookback_secs()))
+    }
+
     /// Absorb one event: dedupe, classify, buffer, queue repairs.
     pub fn absorb(&mut self, ev: &StreamEvent) {
         self.stats.received += 1;
@@ -272,17 +284,15 @@ impl PartitionPipeline {
         }
 
         // Evict below the retention floor (keep the repair lookback halo).
-        if let Some(floor) = self.retention_floor() {
-            if let Some(evict_below) = floor.checked_sub(self.cfg.lookback_secs()) {
-                let seen = &mut self.seen;
-                self.buffer.retain(|e| {
-                    let keep = e.ts >= evict_below;
-                    if !keep {
-                        seen.remove(&e.seq);
-                    }
-                    keep
-                });
-            }
+        if let Some(evict_below) = self.evictable_below() {
+            let seen = &mut self.seen;
+            self.buffer.retain(|e| {
+                let keep = e.ts >= evict_below;
+                if !keep {
+                    seen.remove(&e.seq);
+                }
+                keep
+            });
         }
         out
     }

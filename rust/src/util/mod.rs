@@ -8,6 +8,7 @@
 pub mod hist;
 pub mod json;
 pub mod rng;
+pub(crate) mod wake;
 
 use std::sync::atomic::{AtomicU64, Ordering};
 use std::sync::Arc;

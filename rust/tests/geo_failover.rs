@@ -47,8 +47,9 @@ fn full_failover_no_loss_no_rework() {
         RetryPolicy::default(),
     );
     let fm = FailoverManager::new(fs.topology.clone());
-    let (region, offline2, online2) = fm.failover(&cp, &standby_sched, 8, 6 * DAY).unwrap();
-    assert_eq!(region, "westus");
+    let promoted = fm.failover(&cp, &standby_sched, 8, 6 * DAY).unwrap();
+    let (offline2, online2) = (promoted.offline.clone(), promoted.online.clone());
+    assert_eq!(promoted.region, "westus");
     assert_eq!(offline2.row_count(&w.txn_table), rows, "offline data loss");
     // Online rebuilt to the exact Eq. 2 state.
     for rec in &latest_before {

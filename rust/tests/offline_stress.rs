@@ -1,18 +1,28 @@
-//! Differential + stress coverage for the columnar offline store and
-//! the streaming PIT merge-join engine (PR 2 tentpole).
+//! Differential + stress coverage for the compressed columnar offline
+//! store and the streaming PIT merge-join engine (PR 2 tentpole,
+//! re-pinned over the PR 4 compression/tiering rebuild).
 //!
 //! * `prop_merge_join_matches_naive_oracle` — hundreds of seeded random
 //!   cases (records merged in random batch sizes over a tiny spill
 //!   threshold, random spines including exact `event_ts` hits and
-//!   unknown entities, random availability/staleness configs): the
-//!   columnar merge-join — sequential *and* thread-pool fanned — must
-//!   equal the retained `naive_training_frame` linear-scan oracle cell
-//!   for cell.
+//!   unknown entities, random availability/staleness configs, random
+//!   bloom densities including a degraded 1-bit filter, and random
+//!   background-compaction ticks churning the tiers): the compressed
+//!   merge-join — sequential *and* thread-pool fanned — must equal the
+//!   retained `naive_training_frame` linear-scan oracle cell for cell,
+//!   and the compressed store's scans must equal an uncompressed
+//!   `Vec<FeatureRecord>` oracle row for row.
+//! * `prop_idempotence_survives_bloom_false_positives` — Alg 2 dedupe
+//!   now rides on per-segment bloom filters + exact probes; with a
+//!   deliberately degraded 1-bit-per-key filter (tens of percent false
+//!   positives) redeliveries must still dedupe exactly and near-miss
+//!   keys must still insert.
 //! * `merge_while_query_stress` — concurrent writers (same record set,
-//!   shuffled: Alg 2 idempotence under contention), a compaction thread
-//!   churning the physical layout, and PIT readers asserting leak
-//!   freedom and forward-only winners, mirroring
-//!   `tests/online_stress.rs` for the offline path.
+//!   shuffled: Alg 2 idempotence under contention), the **real**
+//!   background `CompactionDriver` plus an explicit-compact churn thread
+//!   racing it (exercising the lost-race abort in `compact_tick`), and
+//!   PIT readers asserting leak freedom and forward-only winners,
+//!   mirroring `tests/online_stress.rs` for the offline path.
 
 use std::collections::HashMap;
 use std::sync::atomic::{AtomicBool, Ordering};
@@ -20,13 +30,13 @@ use std::sync::Arc;
 
 use geofs::exec::ThreadPool;
 use geofs::metadata::assets::{FeatureSetSpec, SourceSpec};
-use geofs::offline_store::OfflineStore;
+use geofs::offline_store::{CompactionDriver, OfflineStore, StoreConfig};
 use geofs::query::offline::{naive_training_frame, OfflineQueryEngine};
 use geofs::query::pit::{Observation, PitConfig};
 use geofs::query::spec::FeatureRef;
 use geofs::testkit::prop::{forall, Gen};
 use geofs::types::time::Granularity;
-use geofs::types::FeatureRecord;
+use geofs::types::{FeatureRecord, FeatureWindow};
 use geofs::util::rng::Rng;
 
 fn spec_map() -> HashMap<String, FeatureSetSpec> {
@@ -74,18 +84,56 @@ fn prop_merge_join_matches_naive_oracle() {
     ];
     forall("merge-join-vs-naive", 150, &gen_records(40), |rs| {
         // Tiny spill threshold: cases exercise multi-segment k-way
-        // merges plus the unsealed delta mini-segment.
-        let store = Arc::new(OfflineStore::with_spill_threshold(5));
-        let recs: Vec<FeatureRecord> = rs.iter().map(to_rec).collect();
+        // merges plus the unsealed delta mini-segment. Half the cases
+        // run a degraded 1-bit bloom so dedupe leans on the exact probe.
         let mut rng = Rng::new(rs.len() as u64 * 1_000_003 + 17);
+        let store = Arc::new(OfflineStore::with_config(StoreConfig {
+            spill_rows: 5,
+            tier_fanin: 3,
+            bloom_bits_per_key: if rng.bool(0.5) { 1 } else { 10 },
+        }));
+        let recs: Vec<FeatureRecord> = rs.iter().map(to_rec).collect();
         let mut i = 0;
         while i < recs.len() {
             let end = (i + 1 + rng.below(7) as usize).min(recs.len());
             store.merge("txn:1", &recs[i..end]);
             i = end;
+            // Random size-tiered background ticks churn the layout the
+            // same way the driver thread would.
+            if rng.bool(0.15) {
+                store.compact_tick();
+            }
         }
         if rng.bool(0.3) {
             store.compact("txn:1");
+        }
+        // Compressed store ≡ uncompressed oracle: every surviving row,
+        // bit for bit, through the compressed scan path (duplicates in
+        // the generated batch collapse by uniqueness key).
+        {
+            let mut want: Vec<FeatureRecord> = recs.clone();
+            want.sort_by_key(|r| r.unique_key());
+            want.dedup_by_key(|r| r.unique_key());
+            let mut got = store.scan("txn:1", FeatureWindow::new(i64::MIN / 2, i64::MAX / 2));
+            got.sort_by_key(|r| r.unique_key());
+            if got != want {
+                return Err(format!(
+                    "compressed scan diverged from raw oracle ({} vs {} rows, shape {:?})",
+                    got.len(),
+                    want.len(),
+                    store.storage_shape("txn:1")
+                ));
+            }
+            // Time travel agrees with a raw filter too.
+            let as_of = rng.range(-10, 650);
+            let mut got_asof =
+                store.scan_as_of("txn:1", FeatureWindow::new(i64::MIN / 2, i64::MAX / 2), as_of);
+            got_asof.sort_by_key(|r| r.unique_key());
+            let want_asof: Vec<FeatureRecord> =
+                want.iter().filter(|r| r.creation_ts <= as_of).cloned().collect();
+            if got_asof != want_asof {
+                return Err(format!("as_of {as_of} scan diverged from raw oracle"));
+            }
         }
         // Random spine: unknown entities, and ~25% of timestamps landing
         // exactly on an event_ts (the inclusive-end boundary).
@@ -125,6 +173,69 @@ fn prop_merge_join_matches_naive_oracle() {
     });
 }
 
+#[test]
+fn prop_idempotence_survives_bloom_false_positives() {
+    // 1 bit/key ⇒ the filter answers "maybe" for a large fraction of
+    // absent keys; Alg 2 must still be exactly idempotent because every
+    // bloom hit is confirmed by a binary-search probe of the segment.
+    forall("bloom-fp-idempotence", 120, &gen_records(60), |rs| {
+        let store = OfflineStore::with_config(StoreConfig {
+            spill_rows: 4,
+            tier_fanin: 3,
+            bloom_bits_per_key: 1,
+        });
+        let recs: Vec<FeatureRecord> = rs.iter().map(to_rec).collect();
+        let mut rng = Rng::new(rs.len() as u64 * 7_919 + 3);
+        // First delivery in random chunks, with churn between chunks.
+        let mut i = 0;
+        while i < recs.len() {
+            let end = (i + 1 + rng.below(5) as usize).min(recs.len());
+            store.merge("txn:1", &recs[i..end]);
+            if rng.bool(0.2) {
+                store.compact_tick();
+            }
+            i = end;
+        }
+        let mut unique: Vec<FeatureRecord> = recs.clone();
+        unique.sort_by_key(|r| r.unique_key());
+        unique.dedup_by_key(|r| r.unique_key());
+        if store.row_count("txn:1") != unique.len() as u64 {
+            return Err(format!(
+                "first delivery: {} rows stored, {} unique keys",
+                store.row_count("txn:1"),
+                unique.len()
+            ));
+        }
+        // Full redelivery (shuffled): every record must be skipped via
+        // the bloom→exact-probe path, none double-inserted.
+        let mut replay = recs.clone();
+        rng.shuffle(&mut replay);
+        let m = store.merge("txn:1", &replay);
+        if m.inserted != 0 {
+            return Err(format!("redelivery inserted {} rows (bloom FP broke dedupe?)", m.inserted));
+        }
+        // Near-miss keys (creation_ts shifted past the generator's
+        // range) are new versions: false positives must not swallow
+        // genuinely-new inserts.
+        let shifted: Vec<FeatureRecord> = unique
+            .iter()
+            .map(|r| FeatureRecord::new(r.entity, r.event_ts, r.creation_ts + 100_000, r.values.to_vec()))
+            .collect();
+        let m = store.merge("txn:1", &shifted);
+        if m.inserted != shifted.len() as u64 {
+            return Err(format!(
+                "near-miss keys: {} of {} inserted (false positive treated as exact hit)",
+                m.inserted,
+                shifted.len()
+            ));
+        }
+        if store.row_count("txn:1") != (unique.len() + shifted.len()) as u64 {
+            return Err("row count drifted".into());
+        }
+        Ok(())
+    });
+}
+
 // ---- merge-while-query stress ------------------------------------------
 
 const STRESS_ENTITIES: u64 = 16;
@@ -142,11 +253,17 @@ fn stress_rec(entity: u64, k: i64) -> FeatureRecord {
 
 #[test]
 fn merge_while_query_stress() {
-    let store = Arc::new(OfflineStore::with_spill_threshold(64));
+    let store = Arc::new(OfflineStore::with_config(StoreConfig {
+        spill_rows: 64,
+        tier_fanin: 3,
+        ..Default::default()
+    }));
     let pool = Arc::new(ThreadPool::new(2));
     let specs = spec_map();
     let features = vec![FeatureRef::parse("txn:1:720h_sum").unwrap()];
     let done = Arc::new(AtomicBool::new(false));
+    // The real background driver folds tiers while everything else runs.
+    let driver = CompactionDriver::spawn(store.clone(), std::time::Duration::from_millis(1));
 
     // Fixed spine: entities including two unknown ones, timestamps
     // spread over (and past) the event range. Large enough that the
@@ -177,7 +294,9 @@ fn merge_while_query_stress() {
                 })
             })
             .collect();
-        // Compactor: churns the physical layout under the readers.
+        // Explicit-compact churn racing the background driver: folds
+        // everything while the driver picks tiers, exercising the
+        // lost-race abort in `compact_tick` on top of the layout churn.
         {
             let store = store.clone();
             let done = done.clone();
@@ -249,6 +368,8 @@ fn merge_while_query_stress() {
             assert!(h.join().unwrap() > 0, "readers must complete iterations");
         }
     });
+
+    drop(driver);
 
     // Converged: no lost or duplicated rows despite double delivery.
     assert_eq!(store.row_count("txn:1"), STRESS_ENTITIES * EVENTS_PER_ENTITY as u64);

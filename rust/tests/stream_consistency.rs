@@ -248,6 +248,7 @@ fn standalone_deps(clock: Clock) -> StreamDeps {
         clock,
         pool: None,
         replicas: Vec::new(),
+        checkpoints: None,
     }
 }
 
@@ -314,6 +315,7 @@ fn crash_resume_from_checkpoint_is_exactly_once() {
         clock: clock.clone(),
         pool: None,
         replicas: Vec::new(),
+        checkpoints: None,
     };
     let engine2 = StreamIngestor::with_log(spec(3), cfg, deps2, log.clone()).unwrap();
     engine2.restore_from(&CheckpointStore::load(&path).unwrap()).unwrap();
