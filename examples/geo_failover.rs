@@ -1,7 +1,8 @@
 //! Region failover walkthrough (paper §3.1.2): a region dies
-//! mid-deployment; a standby restores the checkpoint and resumes
-//! scheduled materialization from the exact high-water mark — no data
-//! loss, no double work.
+//! mid-deployment; a standby restores the checkpoint, replays the
+//! replication fabric's record log (acked writes newer than the
+//! checkpoint are not lost), and resumes scheduled materialization from
+//! the exact high-water mark — no data loss, no double work.
 //!
 //! ```bash
 //! make artifacts && cargo run --release --example geo_failover
@@ -13,24 +14,29 @@ use geofs::geo::failover::FailoverManager;
 use geofs::sim::{ChurnWorkload, ChurnWorkloadConfig};
 use geofs::types::time::DAY;
 use geofs::types::FeatureWindow;
-use geofs::util::init_logging;
+use geofs::util::{init_logging, Clock};
 
 fn main() -> anyhow::Result<()> {
     init_logging();
     let data_dir = std::env::temp_dir().join(format!("geofs-failover-{}", std::process::id()));
 
     // ---- primary region operates for a week ---------------------------
-    let fs = FeatureStore::open(Config::default_geo(), OpenOptions::default())?;
+    let fs = FeatureStore::open(
+        Config::default_geo(),
+        OpenOptions { geo_replication: true, ..Default::default() },
+    )?;
     let w = ChurnWorkload::install(
         &fs,
-        ChurnWorkloadConfig { customers: 48, days: 7, seed: 9, ..Default::default() },
+        ChurnWorkloadConfig { customers: 48, days: 8, seed: 9, ..Default::default() },
     )?;
     for day in 1..=7 {
         fs.clock.set(day * DAY);
         fs.materialize_tick(&w.txn_table)?;
     }
-    let rows_before = fs.offline.row_count(&w.txn_table);
-    println!("primary (eastus): {} offline rows across 7 days", rows_before);
+    println!(
+        "primary (eastus): {} offline rows across 7 days",
+        fs.offline.row_count(&w.txn_table)
+    );
 
     // Periodic checkpoint (the HA loop would do this continuously).
     let checkpoint = fs.checkpoint(data_dir.clone())?;
@@ -40,9 +46,17 @@ fn main() -> anyhow::Result<()> {
         fs.scheduler.coverage(&w.txn_table)
     );
 
+    // One more day of writes lands AFTER the checkpoint: merged at home
+    // and appended to the replication fabric, but not yet replicated
+    // (the 30 s lag has not elapsed) and not in any checkpoint.
+    fs.clock.set(8 * DAY);
+    fs.materialize_tick(&w.txn_table)?;
+    let rows_acked = fs.offline.row_count(&w.txn_table);
+    println!("day 8 acked post-checkpoint: {} offline rows total", rows_acked);
+
     // ---- region goes down ----------------------------------------------
     fs.topology.set_down("eastus", true);
-    println!("\n!! eastus is down");
+    println!("\n!! eastus is down (day-8 writes never replicated)");
 
     // ---- standby takes over ---------------------------------------------
     let standby = FeatureStore::open(
@@ -51,22 +65,38 @@ fn main() -> anyhow::Result<()> {
     )?;
     let w2 = ChurnWorkload::install(
         &standby,
-        ChurnWorkloadConfig { customers: 48, days: 7, seed: 9, ..Default::default() },
+        ChurnWorkloadConfig { customers: 48, days: 8, seed: 9, ..Default::default() },
     )?;
     standby.topology.set_down("eastus", true);
     let fm = FailoverManager::new(standby.topology.clone());
-    let promoted = fm.failover(&checkpoint, &standby.scheduler, 8, 8 * DAY)?;
+    // Promote with the fabric: the standby's replica store is promoted
+    // in place and the retained log is replayed into both restored
+    // stores, so the day-8 acked writes survive the outage.
+    let promoted = fm.failover_with(
+        &checkpoint,
+        &standby.scheduler,
+        8,
+        9 * DAY,
+        fs.fabric.as_ref(),
+        Clock::fixed(9 * DAY),
+        Some(standby.metrics.clone()),
+    )?;
     let (offline, online) = (&promoted.offline, &promoted.online);
     println!(
-        "failover → {}: restored {} offline rows, {} online entities",
+        "failover → {}: restored {} offline rows, {} online entities, replicating to {:?}",
         promoted.region,
         offline.row_count(&w2.txn_table),
-        online.len()
+        online.len(),
+        promoted.fabric.as_ref().map(|f| f.regions()).unwrap_or_default()
     );
-    assert_eq!(offline.row_count(&w2.txn_table), rows_before, "no data loss");
+    assert_eq!(
+        offline.row_count(&w2.txn_table),
+        rows_acked,
+        "fabric replay must recover acked writes newer than the checkpoint"
+    );
 
     // Import restored durable state into the standby deployment.
-    let restored = offline.scan(&w2.txn_table, FeatureWindow::new(0, 8 * DAY));
+    let restored = offline.scan(&w2.txn_table, FeatureWindow::new(0, 9 * DAY));
     standby.offline.merge(&w2.txn_table, &restored);
     standby.bootstrap_online_from_offline(&w2.txn_table);
 
@@ -81,6 +111,6 @@ fn main() -> anyhow::Result<()> {
     assert!(outcomes.iter().all(|o| o.window.start >= 7 * DAY), "must resume, not redo");
 
     let _ = std::fs::remove_dir_all(&data_dir);
-    println!("\nfailover complete: resumed from checkpoint without loss or re-work.");
+    println!("\nfailover complete: resumed from checkpoint + fabric replay without loss or re-work.");
     Ok(())
 }

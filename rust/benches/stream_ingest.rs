@@ -71,7 +71,7 @@ fn deps(
         metrics: Arc::new(MetricsRegistry::new()),
         clock,
         pool,
-        replicas: Vec::new(),
+        fabric: None,
         checkpoints: None,
     };
     (d, offline, online)

@@ -12,8 +12,8 @@ use std::sync::{Arc, RwLock};
 
 use crate::config::Config;
 use crate::exec::ThreadPool;
-use crate::geo::access::CrossRegionAccess;
-use crate::geo::replication::GeoReplicator;
+use crate::geo::access::{CrossRegionAccess, ReadConsistency};
+use crate::geo::replication::{ReplicationDriver, ReplicationFabric, SessionToken};
 use crate::geo::topology::GeoTopology;
 use crate::governance::rbac::{Action, Principal, Rbac};
 use crate::lineage::Lineage;
@@ -34,7 +34,9 @@ use crate::scheduler::{JobOutcome, SchedulePolicy, Scheduler};
 use crate::serving::router::{RouteTable, ServingRouter};
 use crate::serving::service::OnlineServing;
 use crate::source::SourceConnector;
-use crate::stream::{StreamConfig, StreamDeps, StreamEvent, StreamIngestor, StreamStats};
+use crate::stream::{
+    CheckpointStore, StreamConfig, StreamDeps, StreamEvent, StreamIngestor, StreamStats,
+};
 use crate::types::{EntityId, EntityInterner, FeatureWindow, FsError, Result, Timestamp};
 use crate::util::Clock;
 
@@ -88,8 +90,16 @@ pub struct FeatureStore {
     pub online: Arc<OnlineStore>,
     pub topology: Arc<GeoTopology>,
     pub serving: Arc<OnlineServing>,
-    pub replicator: Option<Arc<GeoReplicator>>,
+    /// The replication fabric: one durable record log every home merge
+    /// appends to, delivered to replica regions by the background
+    /// driver. `None` when geo-replication is off.
+    pub fabric: Option<Arc<ReplicationFabric>>,
     pub merger: Arc<DualStoreMerger>,
+    /// Store-level consumer-group checkpoints: engines started via
+    /// [`FeatureStore::start_stream`] commit here (via
+    /// [`FeatureStore::checkpoint_stream`]), which lets their source
+    /// logs truncate without caller-side plumbing.
+    pub checkpoints: Arc<CheckpointStore>,
     /// Shared worker pool: scheduler jobs and the offline query engine's
     /// per-table / per-chunk PIT joins run here.
     pool: Arc<ThreadPool>,
@@ -105,6 +115,10 @@ pub struct FeatureStore {
     /// all tier merges so no writer (batch jobs, the stream dual-write)
     /// ever folds segments inline.
     compaction: RwLock<Option<CompactionDriver>>,
+    /// Background replication delivery thread (geo-replication only):
+    /// woken by every fabric append, ticking for lag visibility. Lives
+    /// for the store's lifetime.
+    _repl_driver: Option<ReplicationDriver>,
     /// Keeps the compute threads alive for the store's lifetime.
     _compute: Option<ComputeService>,
     geo_fenced: bool,
@@ -137,7 +151,8 @@ impl FeatureStore {
             config.retry.clone(),
             clock.clone(),
         ));
-        let replicator = (opts.geo_replication && !opts.geo_fenced && config.regions.len() > 1)
+        let metrics = Arc::new(MetricsRegistry::new());
+        let fabric = (opts.geo_replication && !opts.geo_fenced && config.regions.len() > 1)
             .then(|| {
                 let replicas = config
                     .regions
@@ -151,18 +166,27 @@ impl FeatureStore {
                         )
                     })
                     .collect();
-                Arc::new(GeoReplicator::new(replicas))
+                ReplicationFabric::new(4, replicas, Some(metrics.clone()))
             });
+        // Background delivery: woken on every append, ticking so lagged
+        // batches become visible as the clock advances.
+        let repl_driver = fabric.as_ref().map(|f| {
+            ReplicationDriver::spawn(
+                f.clone(),
+                clock.clone(),
+                std::time::Duration::from_millis(20),
+            )
+        });
         let scheduler =
             Arc::new(Scheduler::new(pool.clone(), clock.clone(), config.retry.clone()));
         // The offline store's tier merges are background-only now (no
         // inline compaction on any writer), so the managed store always
         // runs the driver; `stop_compaction` opts out.
-        let compaction = CompactionDriver::spawn(
+        let compaction = CompactionDriver::spawn_with(
             offline.clone(),
             std::time::Duration::from_millis(100),
+            Some(metrics.clone()),
         );
-        let metrics = Arc::new(MetricsRegistry::new());
         let routes = Arc::new(RouteTable::new());
         let serving = Arc::new(OnlineServing::new(
             ServingRouter::new(routes.clone()),
@@ -184,13 +208,15 @@ impl FeatureStore {
             online,
             topology,
             serving,
-            replicator,
+            fabric,
             merger,
+            checkpoints: Arc::new(CheckpointStore::new()),
             routes,
             registrations: RwLock::new(HashMap::new()),
             streams: RwLock::new(HashMap::new()),
             ttl_sweeper: RwLock::new(None),
             compaction: RwLock::new(Some(compaction)),
+            _repl_driver: repl_driver,
             _compute: compute,
             geo_fenced: opts.geo_fenced,
             store_name: RwLock::new(None),
@@ -245,7 +271,7 @@ impl FeatureStore {
                 topology: self.topology.clone(),
                 home_region: self.config.home_region().to_string(),
                 home_store: self.online.clone(),
-                replicator: self.replicator.clone(),
+                fabric: self.fabric.clone(),
                 geo_fenced: self.geo_fenced,
             }),
         );
@@ -282,15 +308,15 @@ impl FeatureStore {
         let materializer = self.materializer.clone();
         let merger = self.merger.clone();
         let clock = self.clock.clone();
-        let replicator = self.replicator.clone();
+        let fabric = self.fabric.clone();
         let metrics = self.metrics.clone();
         let table = reg.spec.reference();
         Arc::new(move |window: FeatureWindow, _attempt: u32| {
             let now = clock.now();
             let records = materializer.calculate(&spec, source.as_ref(), window, now, now)?;
             let report = merger.merge(&table, &records, &spec.materialization, now)?;
-            if let Some(rep) = &replicator {
-                rep.enqueue(&table, &records, now);
+            if let Some(f) = &fabric {
+                f.append(&table, &records, now);
             }
             metrics.inc(MetricKind::System, "materialized_records", records.len() as u64);
             metrics.inc(MetricKind::System, "materialization_jobs", 1);
@@ -332,23 +358,31 @@ impl FeatureStore {
             hw
         };
         self.freshness.advance(table, hw);
-        // Deliver replicated data that has become visible.
-        if let Some(rep) = &self.replicator {
-            rep.pump(self.clock.now());
+        // Deliver replicated data that has become visible (the driver
+        // also runs in the background; per-region locks make the
+        // concurrent pumps safe and the merges idempotent).
+        if let Some(f) = &self.fabric {
+            f.pump(self.clock.now());
         }
     }
 
-    /// Drive replication delivery (geo examples advance the clock then
-    /// pump): the batch path's queues plus every streaming engine's
-    /// tailed record log.
+    /// Drive replication delivery deterministically (geo examples and
+    /// tests advance the simulated clock then pump): one fabric pump
+    /// covers batch *and* streaming writes — they share the log — then
+    /// the fully-applied prefix is reclaimed.
     pub fn pump_replication(&self) {
-        let now = self.clock.now();
-        if let Some(rep) = &self.replicator {
-            rep.pump(now);
+        if let Some(f) = &self.fabric {
+            f.pump(self.clock.now());
+            f.truncate_applied();
         }
-        for ing in self.streams.read().unwrap().values() {
-            ing.pump_replicas(now);
-        }
+    }
+
+    /// The fabric positions covering every write acked so far — pass to
+    /// [`ReadConsistency::ReadYourWrites`] to make replica reads wait
+    /// for them. `None` without geo-replication (every read is home
+    /// anyway).
+    pub fn session_token(&self) -> Option<SessionToken> {
+        self.fabric.as_ref().map(|f| f.token())
     }
 
     // ---- streaming ingestion (near-real-time materialization) -------------
@@ -356,15 +390,18 @@ impl FeatureStore {
     /// Start the streaming engine for a registered feature set: events
     /// appended via [`FeatureStore::stream_ingest`] materialize into
     /// both stores as the watermark passes each bin — milliseconds of
-    /// poll latency instead of a scheduler period. Remote regions (when
-    /// replication is on) tail the engine's emitted-record log.
+    /// poll latency instead of a scheduler period. Emitted batches are
+    /// appended to the store's replication fabric (when replication is
+    /// on), and the engine is wired to the coordinator-owned
+    /// [`CheckpointStore`], so [`FeatureStore::checkpoint_stream`] +
+    /// the per-poll retention pass keep the source log bounded without
+    /// caller-side plumbing.
     pub fn start_stream(&self, table: &str, cfg: StreamConfig) -> Result<()> {
         let reg = self.registration(table)?;
         let mut streams = self.streams.write().unwrap();
         if streams.contains_key(table) {
             return Err(FsError::InvalidArg(format!("'{table}' is already streaming")));
         }
-        let replicas = self.replicator.as_ref().map(|r| r.replica_set()).unwrap_or_default();
         let ing = StreamIngestor::new(
             reg.spec.clone(),
             cfg,
@@ -376,12 +413,8 @@ impl FeatureStore {
                 metrics: self.metrics.clone(),
                 clock: self.clock.clone(),
                 pool: Some(self.pool.clone()),
-                replicas,
-                // The coordinator's engines retain their full logs (no
-                // store-level consumer groups yet); callers that
-                // checkpoint via `stream(table)` can pass their own
-                // store to `truncate_log`.
-                checkpoints: None,
+                fabric: self.fabric.clone(),
+                checkpoints: Some(self.checkpoints.clone()),
             },
         )?;
         streams.insert(table.to_string(), ing);
@@ -441,6 +474,15 @@ impl FeatureStore {
         self.streams.read().unwrap().get(table).and_then(|i| i.watermark())
     }
 
+    /// Commit a streaming engine's consumer progress to the
+    /// coordinator-owned checkpoint store (behind the engine's flush
+    /// barrier). Subsequent polls reclaim the committed source-log
+    /// prefix, clamped to the repair retention floor.
+    pub fn checkpoint_stream(&self, table: &str) -> Result<()> {
+        self.stream(table)?.checkpoint_to(&self.checkpoints);
+        Ok(())
+    }
+
     // ---- background maintenance ------------------------------------------
 
     /// Start the background TTL sweeper (ROADMAP follow-up): reclaims
@@ -479,7 +521,11 @@ impl FeatureStore {
         // Drop-then-spawn: dropping joins the old driver, so two
         // drivers never race the same store.
         g.take();
-        *g = Some(CompactionDriver::spawn(self.offline.clone(), period));
+        *g = Some(CompactionDriver::spawn_with(
+            self.offline.clone(),
+            period,
+            Some(self.metrics.clone()),
+        ));
     }
 
     pub fn stop_compaction(&self) {
@@ -488,13 +534,32 @@ impl FeatureStore {
 
     // ---- retrieval ----------------------------------------------------------
 
-    /// Online lookup by entity key from a consumer region, with RBAC.
+    /// Online lookup by entity key from a consumer region, with RBAC
+    /// (default read consistency: any replica).
     pub fn get_online(
         &self,
         principal: &Principal,
         table: &str,
         entity_key: &str,
         consumer_region: &str,
+    ) -> Result<crate::geo::access::RoutedLookup> {
+        self.get_online_with(
+            principal,
+            table,
+            entity_key,
+            consumer_region,
+            &ReadConsistency::default(),
+        )
+    }
+
+    /// Online lookup under an explicit [`ReadConsistency`] policy.
+    pub fn get_online_with(
+        &self,
+        principal: &Principal,
+        table: &str,
+        entity_key: &str,
+        consumer_region: &str,
+        consistency: &ReadConsistency,
     ) -> Result<crate::geo::access::RoutedLookup> {
         let store = self.store_name()?;
         self.rbac.check(principal, &store, Action::ReadFeatures, self.clock.now())?;
@@ -508,7 +573,7 @@ impl FeatureStore {
                 staleness_secs: 0,
             });
         };
-        self.serving.lookup(table, entity, consumer_region, self.clock.now())
+        self.serving.lookup(table, entity, consumer_region, self.clock.now(), consistency)
     }
 
     /// Batched online lookup: RBAC checked once, keys interned once,
@@ -525,8 +590,27 @@ impl FeatureStore {
         entity_keys: &[&str],
         consumer_region: &str,
     ) -> Result<Vec<crate::geo::access::RoutedLookup>> {
+        self.get_online_many_with(
+            principal,
+            table,
+            entity_keys,
+            consumer_region,
+            &ReadConsistency::default(),
+        )
+    }
+
+    /// Batched online lookup under an explicit [`ReadConsistency`]
+    /// policy (one routing decision per table group).
+    pub fn get_online_many_with(
+        &self,
+        principal: &Principal,
+        table: &str,
+        entity_keys: &[&str],
+        consumer_region: &str,
+        consistency: &ReadConsistency,
+    ) -> Result<Vec<crate::geo::access::RoutedLookup>> {
         let requests: Vec<(&str, &str)> = entity_keys.iter().map(|&k| (table, k)).collect();
-        self.get_online_many_mixed(principal, &requests, consumer_region)
+        self.get_online_many_mixed_with(principal, &requests, consumer_region, consistency)
     }
 
     /// Batched online lookup across **mixed tables** (ROADMAP follow-up:
@@ -541,6 +625,23 @@ impl FeatureStore {
         principal: &Principal,
         requests: &[(&str, &str)],
         consumer_region: &str,
+    ) -> Result<Vec<crate::geo::access::RoutedLookup>> {
+        self.get_online_many_mixed_with(
+            principal,
+            requests,
+            consumer_region,
+            &ReadConsistency::default(),
+        )
+    }
+
+    /// Mixed-table batched lookup under an explicit [`ReadConsistency`]
+    /// policy: one policy evaluation + one routed batch per table group.
+    pub fn get_online_many_mixed_with(
+        &self,
+        principal: &Principal,
+        requests: &[(&str, &str)],
+        consumer_region: &str,
+        consistency: &ReadConsistency,
     ) -> Result<Vec<crate::geo::access::RoutedLookup>> {
         use crate::geo::access::{AccessMechanism, RoutedLookup};
         let store = self.store_name()?;
@@ -567,7 +668,8 @@ impl FeatureStore {
         }
         for (table, items) in groups {
             let entities: Vec<EntityId> = items.iter().map(|&(_, e)| e).collect();
-            let batch = self.serving.lookup_batch(table, &entities, consumer_region, now)?;
+            let batch =
+                self.serving.lookup_batch(table, &entities, consumer_region, now, consistency)?;
             for (&(i, _), record) in items.iter().zip(batch.records) {
                 out[i] = RoutedLookup {
                     record,
@@ -618,12 +720,18 @@ impl FeatureStore {
     // ---- bootstrap (§4.5.5) --------------------------------------------------
 
     pub fn bootstrap_online_from_offline(&self, table: &str) -> crate::offline_store::MergeStats {
-        crate::materialize::bootstrap_offline_to_online(
-            &self.offline,
-            &self.online,
-            table,
-            self.clock.now(),
-        )
+        let now = self.clock.now();
+        // One gather feeds both the home merge (the §4.5.5 bootstrap,
+        // same rule as `materialize::bootstrap_offline_to_online`) and
+        // the fabric append — a direct coordinator write reaches
+        // replicas through the same plane as every other merge, and the
+        // replicated snapshot is exactly what was merged online.
+        let latest = self.offline.latest_per_entity(table);
+        let stats = self.online.merge(table, &latest, now);
+        if let Some(f) = &self.fabric {
+            f.append(table, &latest, now);
+        }
+        stats
     }
 
     pub fn bootstrap_offline_from_online(&self, table: &str) -> crate::offline_store::MergeStats {
@@ -952,8 +1060,51 @@ mod tests {
         let (segs, _) = fs.offline.storage_shape("t:1");
         assert!(segs < 4, "driver must fold tier 0, got {segs} segments");
         assert_eq!(fs.offline.row_count("t:1"), 6 * 1024);
+        // Observability: the driver exports its work through the store's
+        // metrics — a total counter, per-tier counters, and a backlog
+        // gauge that has settled to zero once every tier is under-full.
+        assert!(fs.metrics.counter("compaction_merges_total") > 0);
+        assert!(fs.metrics.counter("compaction_merges_tier0") > 0);
+        let deadline = std::time::Instant::now() + std::time::Duration::from_secs(5);
+        while fs.metrics.gauge("compaction_backlog") != Some(0.0)
+            && std::time::Instant::now() < deadline
+        {
+            std::thread::sleep(std::time::Duration::from_millis(2));
+        }
+        assert_eq!(fs.metrics.gauge("compaction_backlog"), Some(0.0));
         fs.stop_compaction();
         assert!(fs.compaction.read().unwrap().is_none());
+    }
+
+    #[test]
+    fn stream_log_truncates_through_coordinator_checkpoints() {
+        use crate::types::time::HOUR;
+        let fs = open_local();
+        let table = register(&fs, 1);
+        fs.clock.set(100 * HOUR);
+        // A bounded repair horizon makes retention meaningful; the
+        // engine is wired to the coordinator's CheckpointStore
+        // automatically by start_stream.
+        fs.start_stream(
+            &table,
+            StreamConfig { partitions: 1, retention_secs: 2 * HOUR, ..Default::default() },
+        )
+        .unwrap();
+        let events: Vec<StreamEvent> =
+            (0..20).map(|i| StreamEvent::new(i, "cust_a", i as i64 * HOUR + 30 * 60, 1.0)).collect();
+        fs.stream_ingest(&table, &events).unwrap();
+        fs.drain_stream(&table).unwrap();
+        let ing = fs.stream(&table).unwrap();
+        // Nothing committed yet → the poll retains everything.
+        assert_eq!(ing.log().base_offset(0), 0);
+        // Commit through the coordinator, then the next poll reclaims
+        // the committed prefix below the repair floor — no caller-side
+        // checkpoint-store plumbing involved.
+        fs.checkpoint_stream(&table).unwrap();
+        let s = fs.poll_stream(&table).unwrap();
+        assert!(s.truncated > 0, "committed prefix must be reclaimed");
+        assert!(ing.log().base_offset(0) > 0, "log base must advance");
+        assert!(fs.checkpoint_stream("nope:1").is_err());
     }
 
     #[test]

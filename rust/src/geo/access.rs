@@ -1,20 +1,37 @@
-//! Cross-region access vs local-replica access (§4.1.2, Fig 4).
+//! Cross-region access vs local-replica access (§4.1.2, Fig 4), routed
+//! under an explicit consistency policy.
 //!
 //! Two mechanisms for a consuming workspace in region C to read assets of
 //! a feature store homed in region H:
 //!
 //! * **CrossRegion** — data stays in H (geo-fence compliant); C pays
 //!   `rtt(C, H)` per lookup, staleness 0 relative to H.
-//! * **Replica** — reads a geo-replicated copy in C; local latency,
+//! * **Replica** — reads a fabric-replicated copy in C; local latency,
 //!   staleness up to the replication lag; not allowed for geo-fenced
 //!   stores.
 //!
-//! Routing prefers the mechanism the store's compliance policy allows,
-//! then the lower-latency option.
+//! The choice between them is no longer just "replica if it exists":
+//! every read carries a [`ReadConsistency`] policy and the router
+//! consults the replication fabric's log positions to honor it —
+//!
+//! * [`ReadConsistency::Strong`] always reads the home region (one WAN
+//!   RTT from elsewhere, staleness 0).
+//! * [`ReadConsistency::BoundedStaleness`]`(secs)` serves from the local
+//!   replica only while its log-position staleness is within the bound;
+//!   a replica past the bound **falls back to cross-region** instead of
+//!   serving stale data.
+//! * [`ReadConsistency::ReadYourWrites`]`(token)` serves from a replica
+//!   only once its cursors cover the session token the write returned;
+//!   otherwise the read crosses to the home region, so a session never
+//!   observes state older than its own writes.
+//!
+//! Geo-fencing and region health still dominate: a geo-fenced store
+//! never routes to a replica, and outages surface as errors from the
+//! topology.
 
 use std::sync::Arc;
 
-use super::replication::GeoReplicator;
+use super::replication::{ReplicationFabric, SessionToken};
 use super::topology::GeoTopology;
 use crate::online_store::OnlineStore;
 use crate::types::{EntityId, FeatureRecord, Result, Timestamp};
@@ -24,6 +41,29 @@ pub enum AccessMechanism {
     Local,
     CrossRegion,
     Replica,
+}
+
+/// Per-read consistency policy (threaded through `OnlineServing` and
+/// `FeatureStore::get_online_many{_mixed}`).
+#[derive(Debug, Clone, PartialEq)]
+pub enum ReadConsistency {
+    /// Always read the home region: staleness 0, one WAN RTT from
+    /// non-home regions.
+    Strong,
+    /// Serve from a local replica only while its log-position staleness
+    /// is within the bound (seconds); else fall back to cross-region.
+    BoundedStaleness(i64),
+    /// Serve from a replica only once it covers the session token
+    /// (per-partition fabric offsets) returned by the session's writes.
+    ReadYourWrites(SessionToken),
+}
+
+impl Default for ReadConsistency {
+    /// Eventual consistency: any replica, however stale — the pre-policy
+    /// routing behavior.
+    fn default() -> Self {
+        ReadConsistency::BoundedStaleness(i64::MAX)
+    }
 }
 
 /// Result of one routed lookup.
@@ -56,22 +96,25 @@ pub struct CrossRegionAccess {
     pub topology: Arc<GeoTopology>,
     pub home_region: String,
     pub home_store: Arc<OnlineStore>,
-    /// Present when geo-replication is enabled for this store.
-    pub replicator: Option<Arc<GeoReplicator>>,
+    /// Present when geo-replication is enabled for this store — the
+    /// single replication plane whose cursors/staleness drive policy
+    /// routing.
+    pub fabric: Option<Arc<ReplicationFabric>>,
     /// Geo-fenced stores must not be replicated out of region (§4.1.2
     /// "data compliance issues").
     pub geo_fenced: bool,
 }
 
 impl CrossRegionAccess {
-    /// Decide the mechanism for a consumer region.
+    /// Capability routing: the mechanism a consumer region *could* use,
+    /// ignoring staleness (a replica exists and compliance allows it).
     pub fn route(&self, consumer_region: &str) -> AccessMechanism {
         if consumer_region == self.home_region {
             return AccessMechanism::Local;
         }
         if !self.geo_fenced {
-            if let Some(rep) = &self.replicator {
-                if rep.replica(consumer_region).is_some() {
+            if let Some(f) = &self.fabric {
+                if f.replica(consumer_region).is_some() {
                     return AccessMechanism::Replica;
                 }
             }
@@ -79,16 +122,65 @@ impl CrossRegionAccess {
         AccessMechanism::CrossRegion
     }
 
-    /// Resolve `consumer_region` to the store to read from, the
+    /// Policy routing: the mechanism this read actually uses. A replica
+    /// is eligible only when the capability route allows it **and** the
+    /// policy's freshness requirement holds against the fabric's log
+    /// positions at `now`.
+    pub fn route_policy(
+        &self,
+        consumer_region: &str,
+        consistency: &ReadConsistency,
+        now: Timestamp,
+    ) -> AccessMechanism {
+        self.policy_route(consumer_region, consistency, now).0
+    }
+
+    /// [`CrossRegionAccess::route_policy`] plus the replica staleness it
+    /// already had to compute (0 for local/cross-region) — the lookups
+    /// use this so the hot path consults the fabric's cursors once per
+    /// routing decision, not twice.
+    fn policy_route(
+        &self,
+        consumer_region: &str,
+        consistency: &ReadConsistency,
+        now: Timestamp,
+    ) -> (AccessMechanism, i64) {
+        let mech = self.route(consumer_region);
+        if mech != AccessMechanism::Replica {
+            return (mech, 0);
+        }
+        let fabric = self.fabric.as_ref().expect("replica route implies fabric");
+        match consistency {
+            ReadConsistency::Strong => (AccessMechanism::CrossRegion, 0),
+            ReadConsistency::BoundedStaleness(bound) => {
+                let staleness = fabric.staleness_secs(consumer_region, now);
+                if staleness <= *bound {
+                    (AccessMechanism::Replica, staleness)
+                } else {
+                    (AccessMechanism::CrossRegion, 0)
+                }
+            }
+            ReadConsistency::ReadYourWrites(token) => {
+                if fabric.covers(consumer_region, token) {
+                    (AccessMechanism::Replica, fabric.staleness_secs(consumer_region, now))
+                } else {
+                    (AccessMechanism::CrossRegion, 0)
+                }
+            }
+        }
+    }
+
+    /// Resolve `consumer_region` + policy to the store to read from, the
     /// simulated wire round-trip cost, and the staleness bound — the
     /// single source of routing truth shared by the point and batched
     /// lookups.
     fn route_target(
         &self,
         consumer_region: &str,
+        consistency: &ReadConsistency,
         now: Timestamp,
     ) -> Result<(AccessMechanism, &Arc<OnlineStore>, u64, i64)> {
-        let mechanism = self.route(consumer_region);
+        let (mechanism, staleness_secs) = self.policy_route(consumer_region, consistency, now);
         Ok(match mechanism {
             AccessMechanism::Local => (
                 mechanism,
@@ -104,13 +196,13 @@ impl CrossRegionAccess {
                 0,
             ),
             AccessMechanism::Replica => {
-                let rep = self.replicator.as_ref().expect("routed to replica");
-                let store = rep.replica(consumer_region).expect("replica exists");
+                let fabric = self.fabric.as_ref().expect("routed to replica");
+                let store = fabric.replica(consumer_region).expect("replica exists");
                 (
                     mechanism,
                     store,
                     self.topology.rtt_us(consumer_region, consumer_region)?,
-                    rep.staleness_secs(consumer_region, now),
+                    staleness_secs,
                 )
             }
         })
@@ -123,9 +215,10 @@ impl CrossRegionAccess {
         table: &str,
         entity: EntityId,
         now: Timestamp,
+        consistency: &ReadConsistency,
     ) -> Result<RoutedLookup> {
         let (mechanism, store, wire_us, staleness_secs) =
-            self.route_target(consumer_region, now)?;
+            self.route_target(consumer_region, consistency, now)?;
         let t0 = std::time::Instant::now();
         let record = store.get(table, entity, now);
         let compute = t0.elapsed().as_micros() as u64;
@@ -142,9 +235,10 @@ impl CrossRegionAccess {
         table: &str,
         entities: &[EntityId],
         now: Timestamp,
+        consistency: &ReadConsistency,
     ) -> Result<RoutedBatch> {
         let (mechanism, store, wire_us, staleness_secs) =
-            self.route_target(consumer_region, now)?;
+            self.route_target(consumer_region, consistency, now)?;
         let t0 = std::time::Instant::now();
         let records = store.get_many(table, entities, now);
         let compute = t0.elapsed().as_micros() as u64;
@@ -155,28 +249,33 @@ impl CrossRegionAccess {
 #[cfg(test)]
 mod tests {
     use super::*;
+    use crate::geo::replication::ReplicationFabric;
 
     fn rec(entity: u64, event: Timestamp, created: Timestamp, v: f32) -> FeatureRecord {
         FeatureRecord::new(entity, event, created, vec![v])
+    }
+
+    fn eventual() -> ReadConsistency {
+        ReadConsistency::default()
     }
 
     fn setup(geo_fenced: bool, with_replica: bool) -> (CrossRegionAccess, Arc<OnlineStore>) {
         let topology = Arc::new(GeoTopology::default_four_region());
         let home = Arc::new(OnlineStore::new(2));
         home.merge("t", &[rec(1, 100, 150, 42.0)], 150);
-        let replicator = with_replica.then(|| {
+        let fabric = with_replica.then(|| {
             let eu = Arc::new(OnlineStore::new(2));
-            let r = Arc::new(GeoReplicator::new(vec![("westeurope".into(), eu, 30)]));
-            r.enqueue("t", &[rec(1, 100, 150, 42.0)], 150);
-            r.pump(1_000); // caught up
-            r
+            let f = ReplicationFabric::new(2, vec![("westeurope".into(), eu, 30)], None);
+            f.append("t", &[rec(1, 100, 150, 42.0)], 150);
+            f.pump(1_000); // caught up
+            f
         });
         (
             CrossRegionAccess {
                 topology,
                 home_region: "eastus".into(),
                 home_store: home.clone(),
-                replicator,
+                fabric,
                 geo_fenced,
             },
             home,
@@ -186,7 +285,7 @@ mod tests {
     #[test]
     fn local_reads_are_cheap() {
         let (a, _) = setup(false, false);
-        let out = a.lookup("eastus", "t", 1, 1_000).unwrap();
+        let out = a.lookup("eastus", "t", 1, 1_000, &eventual()).unwrap();
         assert_eq!(out.mechanism, AccessMechanism::Local);
         assert!(out.latency_us < 5_000, "local should be sub-ms-ish: {}", out.latency_us);
         assert_eq!(out.record.unwrap().values[0], 42.0);
@@ -195,7 +294,7 @@ mod tests {
     #[test]
     fn cross_region_pays_wan_rtt() {
         let (a, _) = setup(false, false);
-        let out = a.lookup("westeurope", "t", 1, 1_000).unwrap();
+        let out = a.lookup("westeurope", "t", 1, 1_000, &eventual()).unwrap();
         assert_eq!(out.mechanism, AccessMechanism::CrossRegion);
         assert!(out.latency_us >= 80_000, "must include 80ms RTT: {}", out.latency_us);
         assert_eq!(out.staleness_secs, 0);
@@ -205,32 +304,91 @@ mod tests {
     #[test]
     fn replica_is_local_latency_but_stale() {
         let (a, _) = setup(false, true);
-        let out = a.lookup("westeurope", "t", 1, 1_000).unwrap();
+        let out = a.lookup("westeurope", "t", 1, 1_000, &eventual()).unwrap();
         assert_eq!(out.mechanism, AccessMechanism::Replica);
         assert!(out.latency_us < 5_000);
         assert!(out.record.is_some());
 
-        // New write not yet pumped → replica still answers old data and
+        // New write not yet applied → replica still answers old data and
         // reports staleness.
-        let rep = a.replicator.as_ref().unwrap();
+        let fabric = a.fabric.as_ref().unwrap();
         a.home_store.merge("t", &[rec(1, 200, 250, 99.0)], 1_500);
-        rep.enqueue("t", &[rec(1, 200, 250, 99.0)], 1_500);
-        let out = a.lookup("westeurope", "t", 1, 1_510).unwrap();
+        fabric.append("t", &[rec(1, 200, 250, 99.0)], 1_500);
+        let out = a.lookup("westeurope", "t", 1, 1_510, &eventual()).unwrap();
         assert_eq!(out.record.unwrap().values[0], 42.0); // stale value
         assert_eq!(out.staleness_secs, 10);
     }
 
     #[test]
+    fn strong_always_reads_home() {
+        let (a, _) = setup(false, true);
+        let out = a.lookup("westeurope", "t", 1, 1_000, &ReadConsistency::Strong).unwrap();
+        assert_eq!(out.mechanism, AccessMechanism::CrossRegion);
+        assert!(out.latency_us >= 80_000);
+        assert_eq!(out.staleness_secs, 0);
+        // Home consumers stay local under every policy.
+        let out = a.lookup("eastus", "t", 1, 1_000, &ReadConsistency::Strong).unwrap();
+        assert_eq!(out.mechanism, AccessMechanism::Local);
+    }
+
+    #[test]
+    fn bounded_staleness_falls_back_past_the_bound() {
+        let (a, home) = setup(false, true);
+        let fabric = a.fabric.as_ref().unwrap().clone();
+        // A write at t=1500 not yet applied: staleness grows with now.
+        home.merge("t", &[rec(1, 200, 250, 99.0)], 1_500);
+        fabric.append("t", &[rec(1, 200, 250, 99.0)], 1_500);
+        // Within the bound: replica serves (stale data is acceptable).
+        let out = a
+            .lookup("westeurope", "t", 1, 1_510, &ReadConsistency::BoundedStaleness(60))
+            .unwrap();
+        assert_eq!(out.mechanism, AccessMechanism::Replica);
+        assert_eq!(out.record.unwrap().values[0], 42.0);
+        // Past the bound: fall back to cross-region, fresh data.
+        let out = a
+            .lookup("westeurope", "t", 1, 1_510, &ReadConsistency::BoundedStaleness(5))
+            .unwrap();
+        assert_eq!(out.mechanism, AccessMechanism::CrossRegion);
+        assert_eq!(out.record.unwrap().values[0], 99.0);
+        // Replica catches up → bound satisfied again.
+        fabric.pump(1_540);
+        let out = a
+            .lookup("westeurope", "t", 1, 1_545, &ReadConsistency::BoundedStaleness(5))
+            .unwrap();
+        assert_eq!(out.mechanism, AccessMechanism::Replica);
+        assert_eq!(out.record.unwrap().values[0], 99.0);
+    }
+
+    #[test]
+    fn read_your_writes_gates_on_the_token() {
+        let (a, home) = setup(false, true);
+        let fabric = a.fabric.as_ref().unwrap().clone();
+        home.merge("t", &[rec(1, 200, 250, 99.0)], 1_500);
+        let token = fabric.append("t", &[rec(1, 200, 250, 99.0)], 1_500);
+        // Replica does not cover the token yet: read crosses to home and
+        // sees the session's own write.
+        let rw = ReadConsistency::ReadYourWrites(token.clone());
+        let out = a.lookup("westeurope", "t", 1, 1_510, &rw).unwrap();
+        assert_eq!(out.mechanism, AccessMechanism::CrossRegion);
+        assert_eq!(out.record.unwrap().values[0], 99.0);
+        // Once the cursors cover the token, the replica serves locally.
+        fabric.pump(1_530);
+        let out = a.lookup("westeurope", "t", 1, 1_540, &rw).unwrap();
+        assert_eq!(out.mechanism, AccessMechanism::Replica);
+        assert_eq!(out.record.unwrap().values[0], 99.0);
+    }
+
+    #[test]
     fn geo_fence_forces_cross_region() {
         let (a, _) = setup(true, true);
-        let out = a.lookup("westeurope", "t", 1, 1_000).unwrap();
+        let out = a.lookup("westeurope", "t", 1, 1_000, &eventual()).unwrap();
         assert_eq!(out.mechanism, AccessMechanism::CrossRegion);
     }
 
     #[test]
     fn region_without_replica_goes_cross_region() {
         let (a, _) = setup(false, true);
-        let out = a.lookup("southeastasia", "t", 1, 1_000).unwrap();
+        let out = a.lookup("southeastasia", "t", 1, 1_000, &eventual()).unwrap();
         assert_eq!(out.mechanism, AccessMechanism::CrossRegion);
         assert!(out.latency_us >= 220_000);
     }
@@ -239,7 +397,7 @@ mod tests {
     fn home_region_down_fails_cross_region_reads() {
         let (a, _) = setup(false, false);
         a.topology.set_down("eastus", true);
-        assert!(a.lookup("westeurope", "t", 1, 0).is_err());
+        assert!(a.lookup("westeurope", "t", 1, 0, &eventual()).is_err());
     }
 
     #[test]
@@ -247,10 +405,10 @@ mod tests {
         let (a, home) = setup(false, true);
         home.merge("t", &[rec(2, 100, 150, 7.0)], 150);
         for region in ["eastus", "westeurope", "southeastasia"] {
-            let batch = a.lookup_many(region, "t", &[1, 2, 9], 1_000).unwrap();
+            let batch = a.lookup_many(region, "t", &[1, 2, 9], 1_000, &eventual()).unwrap();
             assert_eq!(batch.records.len(), 3);
             for (i, &e) in [1u64, 2, 9].iter().enumerate() {
-                let point = a.lookup(region, "t", e, 1_000).unwrap();
+                let point = a.lookup(region, "t", e, 1_000, &eventual()).unwrap();
                 assert_eq!(batch.mechanism, point.mechanism, "{region}");
                 assert_eq!(
                     batch.records[i].as_ref().map(|r| r.entity),
@@ -266,7 +424,7 @@ mod tests {
         let (a, _) = setup(false, false);
         // 32 keys from westeurope: one 80ms RTT for the whole batch, not 32.
         let keys: Vec<u64> = (0..32).collect();
-        let batch = a.lookup_many("westeurope", "t", &keys, 1_000).unwrap();
+        let batch = a.lookup_many("westeurope", "t", &keys, 1_000, &eventual()).unwrap();
         assert_eq!(batch.mechanism, AccessMechanism::CrossRegion);
         assert!(batch.latency_us >= 80_000, "must include one RTT: {}", batch.latency_us);
         assert!(
@@ -280,6 +438,6 @@ mod tests {
     fn batched_lookup_respects_outage() {
         let (a, _) = setup(false, false);
         a.topology.set_down("eastus", true);
-        assert!(a.lookup_many("westeurope", "t", &[1], 0).is_err());
+        assert!(a.lookup_many("westeurope", "t", &[1], 0, &eventual()).is_err());
     }
 }

@@ -8,29 +8,47 @@
 //! restores the checkpoint and resumes scheduled materialization from the
 //! exact high-water mark; the offline store reloads from segments and the
 //! online store is rebuilt via the §4.5.5 bootstrap.
+//!
+//! With a replication fabric attached, failover additionally **replays
+//! the fabric log** ([`FailoverManager::failover_with`]): acked writes
+//! that reached the fabric but had not replicated everywhere (or were
+//! newer than the last checkpoint) are merged back into the restored
+//! stores before promotion, so promotion loses no acked write. The
+//! promoted region comes back as a first-class home: the standby's
+//! replica store (which already holds the applied prefix) is promoted
+//! in place, and a fresh fabric over the surviving regions starts with
+//! its own running [`ReplicationDriver`].
 
 use std::path::PathBuf;
 use std::sync::Arc;
 
+use super::replication::{ReplicationDriver, ReplicationFabric};
 use super::topology::GeoTopology;
 use crate::materialize::bootstrap_offline_to_online;
+use crate::monitor::metrics::MetricsRegistry;
 use crate::offline_store::{CompactionDriver, OfflineStore};
 use crate::online_store::OnlineStore;
 use crate::scheduler::Scheduler;
 use crate::types::{FeatureWindow, FsError, Result, Timestamp};
+use crate::util::Clock;
 
 /// Everything a promoted standby runs with after [`FailoverManager::failover`]:
-/// the restored stores plus the background compaction driver the
-/// restored offline store needs as the new write target (segment
-/// folding is background-only — without a driver the promoted region
-/// would accumulate segments without bound, exactly like
-/// `FeatureStore::open` would without its own driver). Dropping the
-/// outcome stops the driver.
+/// the restored stores plus the background drivers the new home needs —
+/// a [`CompactionDriver`] (segment folding is background-only; without
+/// one the promoted region would accumulate segments without bound) and,
+/// when failover ran with a fabric, the promoted region's own
+/// [`ReplicationFabric`] + running [`ReplicationDriver`] over the
+/// surviving replica regions. Dropping the outcome stops the drivers.
 pub struct PromotedRegion {
     pub region: String,
     pub offline: Arc<OfflineStore>,
     pub online: Arc<OnlineStore>,
     pub compaction: CompactionDriver,
+    /// The new home's replication plane (surviving regions only; the
+    /// dead home re-joins via bootstrap when it returns). `None` when
+    /// failover ran without a fabric.
+    pub fabric: Option<Arc<ReplicationFabric>>,
+    pub replication: Option<ReplicationDriver>,
 }
 
 /// Everything a standby region needs to take over.
@@ -75,16 +93,50 @@ impl FailoverManager {
         Ok(RegionCheckpoint { region: region.to_string(), taken_at: now, coverage, offline_dir })
     }
 
-    /// Fail over to the nearest up standby. Restores scheduler coverage
-    /// and the offline store (with its own background compaction
-    /// driver); rebuilds the online store from offline (bootstrap
-    /// §4.5.5).
+    /// Fail over to the nearest up standby without a replication fabric
+    /// (checkpoint + bootstrap only; see [`FailoverManager::failover_with`]).
     pub fn failover(
         &self,
         checkpoint: &RegionCheckpoint,
         standby_scheduler: &Scheduler,
         online_shards: usize,
         now: Timestamp,
+    ) -> Result<PromotedRegion> {
+        self.failover_with(
+            checkpoint,
+            standby_scheduler,
+            online_shards,
+            now,
+            None,
+            Clock::fixed(now),
+            None,
+        )
+    }
+
+    /// Fail over to the nearest up standby. Restores scheduler coverage
+    /// and the offline store; promotes the standby's fabric replica
+    /// store (or bootstraps a fresh one from offline, §4.5.5); then
+    /// replays the retained fabric log — the full history into the
+    /// offline store (durability for acked writes newer than the
+    /// checkpoint) and the tail above the standby's applied cursor into
+    /// the online store (acked writes that had not replicated yet).
+    /// Both replays are idempotent: offline dedupes on the uniqueness
+    /// key, online's Eq. 2 merge is a monotone no-op. The promoted
+    /// region gets its own fabric over the surviving replica regions
+    /// with a running [`ReplicationDriver`] (ticking on `clock`,
+    /// gauging through `metrics`), and the retained log is forwarded
+    /// into it so survivors whose cursors trailed the promoted region's
+    /// also converge on every acked write.
+    #[allow(clippy::too_many_arguments)]
+    pub fn failover_with(
+        &self,
+        checkpoint: &RegionCheckpoint,
+        standby_scheduler: &Scheduler,
+        online_shards: usize,
+        now: Timestamp,
+        fabric: Option<&Arc<ReplicationFabric>>,
+        clock: Clock,
+        metrics: Option<Arc<MetricsRegistry>>,
     ) -> Result<PromotedRegion> {
         if self.topology.is_up(&checkpoint.region) {
             log::warn!("failover requested while '{}' is up", checkpoint.region);
@@ -98,22 +150,84 @@ impl FailoverManager {
         let offline = Arc::new(OfflineStore::load(&checkpoint.offline_dir)?);
         // 2. Restore scheduler data-state (resume point, no re-work, no gaps).
         standby_scheduler.restore(&checkpoint.coverage);
-        // 3. Rebuild online serving state from offline (bootstrap).
-        let online = Arc::new(OnlineStore::new(online_shards));
+        // 3. Online serving state: promote the standby's replica store in
+        // place when the fabric has one (it already applied the log
+        // prefix below its cursor); else start fresh. Either way,
+        // bootstrap from offline fills history from before replication.
+        let online = fabric
+            .and_then(|f| f.replica(&standby).cloned())
+            .unwrap_or_else(|| Arc::new(OnlineStore::new(online_shards)));
         for table in offline.tables() {
             bootstrap_offline_to_online(&offline, &online, &table, now);
         }
+        // 4. Re-home replication: a fresh fabric over the surviving
+        // regions, driven by the promoted region's own driver thread.
+        let (new_fabric, replication) = match fabric {
+            Some(f) => {
+                let survivors: Vec<_> =
+                    f.replica_set().into_iter().filter(|(r, _, _)| *r != standby).collect();
+                let nf = ReplicationFabric::new(f.partitions(), survivors, metrics);
+                let driver = ReplicationDriver::spawn(
+                    nf.clone(),
+                    clock,
+                    std::time::Duration::from_millis(20),
+                );
+                (Some(nf), Some(driver))
+            }
+            None => (None, None),
+        };
+        // 5. Replay the retained fabric log: no acked write is lost even
+        // if it post-dates the checkpoint and never reached a replica.
+        // Every retained entry goes into the restored offline store
+        // (durability), entries above the standby's applied cursor go
+        // into the promoted online store (the below-cursor prefix is
+        // already applied there), and everything is forwarded into the
+        // new fabric so surviving replicas — whose old cursors may trail
+        // the promoted region's — converge through their new cursors.
+        // All three sinks absorb duplicates idempotently.
+        let mut replayed = 0u64;
+        if let Some(f) = fabric {
+            let cursors = f.cursors(&standby);
+            for p in 0..f.partitions() {
+                let mut cur = 0u64;
+                loop {
+                    let entries = f.read_tail(p, cur, 256);
+                    if entries.is_empty() {
+                        break;
+                    }
+                    for (off, batch) in entries {
+                        offline.merge(&batch.table, &batch.records);
+                        if off >= cursors[p] {
+                            online.merge(&batch.table, &batch.records, now);
+                            replayed += batch.records.len() as u64;
+                        }
+                        if let Some(nf) = &new_fabric {
+                            nf.append_shared(&batch.table, batch.records, now);
+                        }
+                        cur = off + 1;
+                    }
+                }
+            }
+        }
         log::info!(
-            "failover: '{}' → '{}' restored {} table(s)",
+            "failover: '{}' → '{}' restored {} table(s), replayed {} fabric record(s)",
             checkpoint.region,
             standby,
-            offline.tables().len()
+            offline.tables().len(),
+            replayed
         );
-        // 4. The promoted store is the new write target: give it the
+        // 6. The promoted store is the new write target: give it the
         // background tier folding every live store needs.
         let compaction =
             CompactionDriver::spawn(offline.clone(), std::time::Duration::from_millis(100));
-        Ok(PromotedRegion { region: standby, offline, online, compaction })
+        Ok(PromotedRegion {
+            region: standby,
+            offline,
+            online,
+            compaction,
+            fabric: new_fabric,
+            replication,
+        })
     }
 }
 
@@ -159,6 +273,7 @@ mod tests {
         let promoted = fm.failover(&cp, &standby_sched, 4, 600).unwrap();
         let (off2, on2) = (promoted.offline.clone(), promoted.online.clone());
         assert_eq!(promoted.region, "westus");
+        assert!(promoted.fabric.is_none() && promoted.replication.is_none());
         // No data loss offline.
         assert_eq!(off2.row_count("txn:1"), 3);
         // Online rebuilt to Eq. 2 state.
@@ -170,6 +285,50 @@ mod tests {
             standby_sched.gaps("txn:1", FeatureWindow::new(0, 400)),
             vec![FeatureWindow::new(300, 400)]
         );
+    }
+
+    #[test]
+    fn failover_replays_unreplicated_fabric_tail() {
+        let topology = Arc::new(GeoTopology::default_four_region());
+        let fm = FailoverManager::new(topology.clone());
+
+        let offline = OfflineStore::new();
+        offline.merge("t:1", &[FeatureRecord::new(1, 100, 150, vec![1.0])]);
+        let active = scheduler();
+        let dir = TempDir::new("fo-tail");
+        let cp = fm
+            .checkpoint("eastus", &active, &offline, dir.path().to_path_buf(), 500)
+            .unwrap();
+
+        // Fabric with the nearest standby (westus) as a replica. One
+        // batch replicated, one acked write still in the log when the
+        // home dies — the checkpoint predates both.
+        let westus = Arc::new(OnlineStore::new(2));
+        let fabric =
+            ReplicationFabric::new(2, vec![("westus".into(), westus.clone(), 10)], None);
+        fabric.append("t:1", &[FeatureRecord::new(1, 200, 250, vec![2.0])], 600);
+        fabric.pump(700); // applied to the replica
+        fabric.append("t:1", &[FeatureRecord::new(2, 300, 350, vec![3.0])], 800); // unreplicated
+
+        topology.set_down("eastus", true);
+        let promoted = fm
+            .failover_with(&cp, &scheduler(), 4, 900, Some(&fabric), Clock::fixed(900), None)
+            .unwrap();
+        assert_eq!(promoted.region, "westus");
+        // The promoted online store is the replica itself, now holding
+        // checkpointed history + applied prefix + the replayed tail.
+        assert!(Arc::ptr_eq(&promoted.online, &westus));
+        assert_eq!(promoted.online.get("t:1", 1, 1_000).unwrap().version(), (200, 250));
+        assert_eq!(promoted.online.get("t:1", 2, 1_000).unwrap().values[0], 3.0);
+        // Offline durability: every fabric record landed there too.
+        assert_eq!(promoted.offline.row_count("t:1"), 3);
+        // The new home replicates onward: fabric over the survivors
+        // (none here — the only replica was promoted), driver running,
+        // and the retained history forwarded as future replay material.
+        let nf = promoted.fabric.as_ref().unwrap();
+        assert!(nf.regions().is_empty());
+        assert_eq!(nf.log_len(), 2, "retained entries forwarded into the new fabric");
+        assert!(promoted.replication.is_some());
     }
 
     #[test]

@@ -2,24 +2,37 @@
 //!
 //! The substrate here replaces Azure's regions and WAN (DESIGN.md §5): a
 //! simulated topology with a configurable inter-region latency matrix and
-//! injectable outages.  On top of it:
+//! injectable outages.  On top of it, one **replication fabric** ties the
+//! geo story together:
 //!
-//! * [`access`] — cross-region asset access (data stays in its home
-//!   region; consumers pay WAN latency) — the mechanism AzureML shipped.
-//! * [`replication`] — geo-replication with asynchronous lag (the
-//!   roadmap mechanism): local-latency reads, staleness > 0.
+//! * [`replication`] — the fabric: every home-region online merge
+//!   (batch scheduler job, streaming dual-write, bootstrap) appends a
+//!   `ReplBatch` to one shared durable record log; replica regions are
+//!   just per-region cursors into it, advanced by a background
+//!   `ReplicationDriver` (push-woken on append + periodic lag ticks),
+//!   with the log truncated below the minimum applied cursor. Writes
+//!   return `SessionToken`s (per-partition log positions).
+//! * [`access`] — consistency-aware routed reads: `Strong` (home
+//!   region, one WAN RTT), `BoundedStaleness(secs)` (replica only while
+//!   its log-position staleness is within the bound, else cross-region
+//!   fallback), and `ReadYourWrites(token)` (replica only once its
+//!   cursors cover the session token). Geo-fenced stores never leave
+//!   their home region (§4.1.2 "data compliance issues").
 //! * [`failover`] — region-down handling: restore metadata + scheduler
-//!   checkpoint in a standby region and resume without data loss.
+//!   checkpoint in a standby region, promote the standby's replica
+//!   store, replay the retained fabric log (no acked write lost), and
+//!   come back as a first-class home with its own running drivers.
 //!
-//! `benches/geo_access.rs` (experiment E6) quantifies the latency ↔
-//! staleness trade between the two access mechanisms.
+//! `benches/geo_access.rs` (experiments E6 + E-GEO) quantifies the
+//! latency ↔ staleness trade per consistency policy and the fabric's
+//! apply throughput vs region count.
 
 pub mod access;
 pub mod failover;
 pub mod replication;
 pub mod topology;
 
-pub use access::{AccessMechanism, CrossRegionAccess};
-pub use failover::{FailoverManager, RegionCheckpoint};
-pub use replication::GeoReplicator;
+pub use access::{AccessMechanism, CrossRegionAccess, ReadConsistency};
+pub use failover::{FailoverManager, PromotedRegion, RegionCheckpoint};
+pub use replication::{ReplBatch, ReplicationDriver, ReplicationFabric, SessionToken};
 pub use topology::GeoTopology;

@@ -1,231 +1,414 @@
-//! Asynchronous geo-replication of online-store data (§4.1.2's
-//! geo-replication mechanism, on the paper's roadmap).
+//! The geo-replication **fabric** (§4.1.2's geo-replication mechanism):
+//! one durable record log, per-region cursors, and a background
+//! replication driver.
 //!
-//! The home region's merges are enqueued and become visible in each
-//! replica after the replication lag (WAN transfer + apply).  Reads in a
-//! replica region are local-latency but may be stale by up to the lag —
-//! the trade experiment E6 measures against cross-region access.
+//! Earlier revisions had two parallel delivery mechanisms feeding the
+//! same replica stores — per-region `VecDeque` push queues for the
+//! batch path and an engine-local tailed log for the streaming path —
+//! both caller-driven. This module collapses them into a single plane:
 //!
-//! Two delivery mechanisms share the replica stores:
+//! * Every home-region online merge (batch scheduler job, streaming
+//!   dual-write, coordinator bootstrap) appends a [`ReplBatch`] to one
+//!   shared [`PartitionedLog`] owned by the fabric. The log is the
+//!   replayable history: it outlives any stream engine, serves any
+//!   number of regions, and is what failover replays to recover acked
+//!   writes that had not reached every replica.
+//! * Per-region apply state is just **cursors** (one per log partition)
+//!   behind a **per-region lock** — one slow region's merge never
+//!   blocks another region's apply, and two pumps of different regions
+//!   run fully in parallel.
+//! * A [`ReplicationDriver`] thread drives delivery: push-woken on
+//!   every append (`util::wake`) plus periodic lag ticks, so batches
+//!   become visible `lag` seconds after append without any caller
+//!   pumping. Each driver tick also truncates the log below the minimum
+//!   applied cursor, bounding log memory by the slowest region's lag.
+//! * [`SessionToken`]s capture per-partition log positions at write
+//!   time; `geo::access` uses them (and the fabric's staleness/cursor
+//!   introspection) to route reads under an explicit
+//!   [`super::access::ReadConsistency`] policy.
 //!
-//! * [`GeoReplicator`] — the batch path: each home merge is **pushed**
-//!   into per-region queues (one shared `Arc` batch across regions).
-//! * [`LogTailer`] — the streaming path: the engine appends every
-//!   emitted batch to one shared [`PartitionedLog`], and each remote
-//!   region **tails** it with its own cursor. One log entry serves any
-//!   number of regions with O(1) state per region (a cursor instead of
-//!   a queue), and a new region can join by starting its cursor at 0 —
-//!   the ad-hoc per-region queues of the batch path become a single
-//!   replayable history.
+//! A batch becomes *visible* to a region `lag_secs` after it was
+//! appended (the WAN transfer + apply simulation), and apply order is
+//! log order per partition — prefix semantics, like a real log tail.
 
-use std::collections::{HashMap, VecDeque};
+use std::collections::HashMap;
+use std::sync::atomic::{AtomicBool, AtomicU64, Ordering};
 use std::sync::{Arc, Mutex};
+use std::time::Duration;
 
+use crate::monitor::metrics::{MetricKind, MetricsRegistry};
 use crate::online_store::OnlineStore;
 use crate::stream::log::PartitionedLog;
 use crate::types::{FeatureRecord, Timestamp};
+use crate::util::wake::Wake;
+use crate::util::Clock;
 
-/// One replicable unit in the streaming record log: the records a
-/// materialization round emitted for a table, stamped with the
-/// processing time it was appended (drives lag-based visibility).
+/// One replicable unit in the fabric log: the records one home-region
+/// merge produced for a table, stamped with the processing time it was
+/// appended (drives lag-based visibility).
 #[derive(Debug, Clone)]
 pub struct ReplBatch {
     pub table: String,
-    /// Shared with the online write batcher — the log never copies
+    /// Shared with the producing write path — the log never copies
     /// record data.
     pub records: Arc<[FeatureRecord]>,
     pub appended_at: Timestamp,
 }
 
-/// Remote regions tailing the streaming record log. Apply order is log
-/// order; a batch becomes visible to a region `lag` seconds after it
-/// was appended.
-pub struct LogTailer {
-    log: Arc<PartitionedLog<ReplBatch>>,
-    /// (region, store, lag_secs), fixed at construction.
-    replicas: Vec<(String, Arc<OnlineStore>, i64)>,
-    /// Per-replica, per-partition cursors — the only per-region state.
-    cursors: Mutex<Vec<Vec<u64>>>,
+/// A causal position in the fabric log: the per-partition offsets a
+/// session's writes reached. A replica may serve a
+/// `ReadYourWrites(token)` read only once its cursors cover the token.
+#[derive(Debug, Clone, PartialEq, Eq, Default)]
+pub struct SessionToken {
+    offsets: Vec<u64>,
 }
 
-impl LogTailer {
-    pub fn new(log: Arc<PartitionedLog<ReplBatch>>, replicas: Vec<(String, Arc<OnlineStore>, i64)>) -> Self {
-        let cursors = vec![vec![0u64; log.partitions()]; replicas.len()];
-        LogTailer { log, replicas, cursors: Mutex::new(cursors) }
+impl SessionToken {
+    pub fn offsets(&self) -> &[u64] {
+        &self.offsets
+    }
+
+    /// Merge another token in (per-partition max) — a session that
+    /// wrote through several paths carries one combined token.
+    pub fn join(&mut self, other: &SessionToken) {
+        if self.offsets.len() < other.offsets.len() {
+            self.offsets.resize(other.offsets.len(), 0);
+        }
+        for (mine, theirs) in self.offsets.iter_mut().zip(&other.offsets) {
+            *mine = (*mine).max(*theirs);
+        }
+    }
+}
+
+/// One replica region's state: the destination store, its simulated
+/// replication lag, and its apply cursors — **individually locked** so
+/// pumping one region never serializes behind another's merge.
+struct RegionState {
+    name: String,
+    store: Arc<OnlineStore>,
+    lag_secs: i64,
+    cursors: Mutex<Vec<u64>>,
+}
+
+/// The single replication plane: every home merge appends here, every
+/// replica region tails it with its own cursors.
+pub struct ReplicationFabric {
+    log: PartitionedLog<ReplBatch>,
+    regions: Vec<RegionState>,
+    wake: Arc<Wake>,
+    metrics: Option<Arc<MetricsRegistry>>,
+}
+
+/// Bounded tail chunk: a region waiting out a long lag must not re-clone
+/// its entire backlog on every pump.
+const TAIL_CHUNK: usize = 256;
+
+impl ReplicationFabric {
+    /// Build a fabric with `partitions` log partitions (tables are
+    /// hash-routed, so one table's batches stay ordered) over
+    /// `(region, store, lag_secs)` replicas. `metrics`, when present,
+    /// receives per-region `repl_lag_secs_*` / `repl_backlog_*` gauges
+    /// on every pump.
+    pub fn new(
+        partitions: usize,
+        replicas: Vec<(String, Arc<OnlineStore>, i64)>,
+        metrics: Option<Arc<MetricsRegistry>>,
+    ) -> Arc<ReplicationFabric> {
+        let partitions = partitions.max(1);
+        let regions = replicas
+            .into_iter()
+            .map(|(name, store, lag_secs)| RegionState {
+                name,
+                store,
+                lag_secs,
+                cursors: Mutex::new(vec![0u64; partitions]),
+            })
+            .collect();
+        Arc::new(ReplicationFabric {
+            log: PartitionedLog::new(partitions),
+            regions,
+            wake: Arc::new(Wake::default()),
+            metrics,
+        })
+    }
+
+    pub fn partitions(&self) -> usize {
+        self.log.partitions()
     }
 
     pub fn regions(&self) -> Vec<String> {
-        let mut r: Vec<_> = self.replicas.iter().map(|(name, _, _)| name.clone()).collect();
+        let mut r: Vec<_> = self.regions.iter().map(|r| r.name.clone()).collect();
         r.sort();
         r
-    }
-
-    /// Advance every region's cursor over all batches visible by `now`,
-    /// coalescing per table into one shard-grouped merge (same idiom as
-    /// [`GeoReplicator::pump`]). Returns records applied per region.
-    pub fn pump(&self, now: Timestamp) -> HashMap<String, u64> {
-        let mut applied = HashMap::new();
-        let mut cursors = self.cursors.lock().unwrap();
-        // Bounded tail chunk: a region waiting out a long lag must not
-        // re-clone its entire backlog on every pump.
-        const TAIL_CHUNK: usize = 256;
-        for (ri, (region, store, lag)) in self.replicas.iter().enumerate() {
-            let mut n = 0u64;
-            for p in 0..self.log.partitions() {
-                loop {
-                    let entries = self.log.read_from(p, cursors[ri][p], TAIL_CHUNK);
-                    if entries.is_empty() {
-                        break;
-                    }
-                    // Tail in log order, stopping at the first
-                    // not-yet-visible batch (visibility is monotone in
-                    // append order).
-                    let mut hit_unripe = false;
-                    let mut visible: Vec<(&str, &[FeatureRecord])> = Vec::new();
-                    for (off, batch) in &entries {
-                        if batch.appended_at + lag > now {
-                            hit_unripe = true;
-                            break;
-                        }
-                        visible.push((batch.table.as_str(), &batch.records));
-                        cursors[ri][p] = off + 1;
-                    }
-                    let stats = store.merge_batches(&visible, now);
-                    n += stats.inserted + stats.skipped;
-                    if hit_unripe || entries.len() < TAIL_CHUNK {
-                        break;
-                    }
-                }
-            }
-            applied.insert(region.clone(), n);
-        }
-        applied
-    }
-
-    /// Log entries a region has not applied yet.
-    pub fn backlog(&self, region: &str) -> usize {
-        let cursors = self.cursors.lock().unwrap();
-        self.replicas
-            .iter()
-            .position(|(name, _, _)| name.as_str() == region)
-            .map(|ri| {
-                (0..self.log.partitions())
-                    .map(|p| (self.log.high_water(p) - cursors[ri][p]) as usize)
-                    .sum()
-            })
-            .unwrap_or(0)
-    }
-}
-
-struct Pending {
-    table: String,
-    /// One shared copy of the batch for *all* replica queues (the
-    /// write-path symmetry follow-up: enqueue used to clone the record
-    /// vector once per region).
-    records: Arc<[FeatureRecord]>,
-    visible_at: Timestamp,
-}
-
-/// Replicates online merges from a home store to replica stores.
-pub struct GeoReplicator {
-    replicas: HashMap<String, Arc<OnlineStore>>,
-    /// Per-replica apply queue.
-    queues: Mutex<HashMap<String, VecDeque<Pending>>>,
-    /// Replication lag per replica region (seconds on the processing
-    /// timeline).
-    lag_secs: HashMap<String, i64>,
-}
-
-impl GeoReplicator {
-    pub fn new(replicas: Vec<(String, Arc<OnlineStore>, i64)>) -> Self {
-        let mut map = HashMap::new();
-        let mut lag = HashMap::new();
-        let mut queues = HashMap::new();
-        for (region, store, lag_secs) in replicas {
-            map.insert(region.clone(), store);
-            lag.insert(region.clone(), lag_secs);
-            queues.insert(region, VecDeque::new());
-        }
-        GeoReplicator { replicas: map, queues: Mutex::new(queues), lag_secs: lag }
     }
 
     pub fn replica(&self, region: &str) -> Option<&Arc<OnlineStore>> {
-        self.replicas.get(region)
+        self.region(region).map(|r| &r.store)
     }
 
-    pub fn regions(&self) -> Vec<String> {
-        let mut r: Vec<_> = self.replicas.keys().cloned().collect();
-        r.sort();
-        r
-    }
-
-    /// The replica stores + lags, for wiring a streaming [`LogTailer`]
-    /// onto the same destination stores the batch path pushes to.
+    /// The replica stores + lags (failover wiring).
     pub fn replica_set(&self) -> Vec<(String, Arc<OnlineStore>, i64)> {
         let mut out: Vec<_> = self
-            .replicas
+            .regions
             .iter()
-            .map(|(region, store)| (region.clone(), store.clone(), self.lag_secs[region]))
+            .map(|r| (r.name.clone(), r.store.clone(), r.lag_secs))
             .collect();
         out.sort_by(|a, b| a.0.cmp(&b.0));
         out
     }
 
-    /// Called after every home-region merge: enqueue for each replica.
-    /// The batch is copied **once** into a shared `Arc` — every replica
-    /// queue holds the same allocation, mirroring how the read path
-    /// shares one routed batch across a region's key set.
-    pub fn enqueue(&self, table: &str, records: &[FeatureRecord], now: Timestamp) {
+    fn region(&self, region: &str) -> Option<&RegionState> {
+        self.regions.iter().find(|r| r.name == region)
+    }
+
+    /// The wake channel a [`ReplicationDriver`] parks on.
+    pub(crate) fn wake(&self) -> Arc<Wake> {
+        self.wake.clone()
+    }
+
+    /// The log partition a table's batches route to (stable hash, so a
+    /// table's batches form one ordered sub-log).
+    fn partition_of(&self, table: &str) -> usize {
+        (crate::stream::log::hash_key(table) % self.log.partitions() as u64) as usize
+    }
+
+    /// Append one home-region merge to the fabric (copies the records
+    /// into one shared `Arc`). Wakes the driver. Returns the session
+    /// token covering this write.
+    pub fn append(&self, table: &str, records: &[FeatureRecord], now: Timestamp) -> SessionToken {
         if records.is_empty() {
-            return;
+            return SessionToken::default();
         }
-        let shared: Arc<[FeatureRecord]> = records.into();
-        let mut q = self.queues.lock().unwrap();
-        for (region, queue) in q.iter_mut() {
-            queue.push_back(Pending {
-                table: table.to_string(),
-                records: shared.clone(),
-                visible_at: now + self.lag_secs[region],
-            });
+        self.append_shared(table, records.into(), now)
+    }
+
+    /// Append an already-shared batch (the streaming dual-write hands
+    /// the same allocation to both sinks and the fabric).
+    pub fn append_shared(
+        &self,
+        table: &str,
+        records: Arc<[FeatureRecord]>,
+        now: Timestamp,
+    ) -> SessionToken {
+        if records.is_empty() {
+            return SessionToken::default();
+        }
+        let mut token = SessionToken { offsets: vec![0; self.log.partitions()] };
+        let p = self.partition_of(table);
+        let off = self.log.append(
+            p,
+            ReplBatch { table: table.to_string(), records, appended_at: now },
+        );
+        token.offsets[p] = off + 1;
+        self.wake.ping();
+        token
+    }
+
+    /// A token covering **everything appended so far** (per-partition
+    /// high-water marks) — what a session grabs after a batch of writes.
+    pub fn token(&self) -> SessionToken {
+        SessionToken {
+            offsets: (0..self.log.partitions()).map(|p| self.log.high_water(p)).collect(),
         }
     }
 
-    /// Apply every queued batch that has become visible by `now`.
+    /// Does `region`'s applied state cover `token`? (Every partition
+    /// cursor at/past the token's offset.)
+    pub fn covers(&self, region: &str, token: &SessionToken) -> bool {
+        let Some(r) = self.region(region) else { return false };
+        let cursors = r.cursors.lock().unwrap();
+        token
+            .offsets
+            .iter()
+            .enumerate()
+            .all(|(p, &off)| cursors.get(p).map_or(off == 0, |&c| c >= off))
+    }
+
+    /// `region`'s applied cursors (failover replay bound).
+    pub fn cursors(&self, region: &str) -> Vec<u64> {
+        match self.region(region) {
+            Some(r) => r.cursors.lock().unwrap().clone(),
+            None => vec![0; self.log.partitions()],
+        }
+    }
+
+    /// Apply every batch visible to `region` by `now`, in log order,
+    /// coalescing per table into one shard-grouped merge per chunk. Only
+    /// `region`'s cursor lock is held — other regions pump in parallel.
+    /// Returns records applied.
+    pub fn pump_region(&self, region: &str, now: Timestamp) -> u64 {
+        let Some(r) = self.region(region) else { return 0 };
+        let mut cursors = r.cursors.lock().unwrap();
+        let mut n = 0u64;
+        for p in 0..self.log.partitions() {
+            // A cursor below the truncated base resumes at the base:
+            // those entries were applied by every region already.
+            cursors[p] = cursors[p].max(self.log.base_offset(p));
+            loop {
+                let entries = self.log.read_from(p, cursors[p], TAIL_CHUNK);
+                if entries.is_empty() {
+                    break;
+                }
+                // Tail in log order, stopping at the first not-yet-visible
+                // batch (visibility is monotone in append order).
+                let mut hit_unripe = false;
+                let mut visible: Vec<(&str, &[FeatureRecord])> = Vec::new();
+                for (off, batch) in &entries {
+                    if batch.appended_at + r.lag_secs > now {
+                        hit_unripe = true;
+                        break;
+                    }
+                    visible.push((batch.table.as_str(), &batch.records));
+                    cursors[p] = off + 1;
+                }
+                let stats = r.store.merge_batches(&visible, now);
+                n += stats.inserted + stats.skipped;
+                if hit_unripe || entries.len() < TAIL_CHUNK {
+                    break;
+                }
+            }
+        }
+        n
+    }
+
+    /// Pump every region and refresh the per-region lag/backlog gauges.
     /// Returns records applied per region.
-    ///
-    /// Visible batches are drained first and applied through
-    /// [`OnlineStore::merge_batches`]: one shard-grouped merge per table
-    /// instead of one per batch (the `merge`/`get_many` symmetry from
-    /// the ROADMAP).
     pub fn pump(&self, now: Timestamp) -> HashMap<String, u64> {
         let mut applied = HashMap::new();
-        let mut q = self.queues.lock().unwrap();
-        for (region, queue) in q.iter_mut() {
-            let store = &self.replicas[region];
-            let mut visible: Vec<Pending> = Vec::new();
-            while queue.front().map_or(false, |p| p.visible_at <= now) {
-                visible.push(queue.pop_front().unwrap());
+        for r in &self.regions {
+            applied.insert(r.name.clone(), self.pump_region(&r.name, now));
+        }
+        if let Some(m) = &self.metrics {
+            for r in &self.regions {
+                m.set_gauge(
+                    MetricKind::System,
+                    &format!("repl_lag_secs_{}", r.name),
+                    self.staleness_secs(&r.name, now) as f64,
+                );
+                m.set_gauge(
+                    MetricKind::System,
+                    &format!("repl_backlog_{}", r.name),
+                    self.backlog(&r.name) as f64,
+                );
             }
-            let batches: Vec<(&str, &[FeatureRecord])> =
-                visible.iter().map(|p| (p.table.as_str(), &p.records[..])).collect();
-            let stats = store.merge_batches(&batches, now);
-            applied.insert(region.clone(), stats.inserted + stats.skipped);
         }
         applied
     }
 
-    /// Worst-case staleness of a replica at `now`: age of its oldest
-    /// unapplied batch (0 when fully caught up).
-    pub fn staleness_secs(&self, region: &str, now: Timestamp) -> i64 {
-        let q = self.queues.lock().unwrap();
-        q.get(region)
-            .and_then(|queue| queue.front())
-            .map(|p| (now - (p.visible_at - self.lag_secs[region])).max(0))
-            .unwrap_or(0)
+    /// Truncate the log below the minimum applied cursor across all
+    /// regions (every surviving entry is still needed by someone).
+    /// Returns entries reclaimed. With no replica regions nothing is
+    /// reclaimed — the log is then purely the failover-replay history.
+    pub fn truncate_applied(&self) -> u64 {
+        if self.regions.is_empty() {
+            return 0;
+        }
+        let per_region: Vec<Vec<u64>> =
+            self.regions.iter().map(|r| r.cursors.lock().unwrap().clone()).collect();
+        let mut reclaimed = 0;
+        for p in 0..self.log.partitions() {
+            let min = per_region.iter().map(|c| c[p]).min().unwrap_or(0);
+            reclaimed += self.log.truncate_below(p, min);
+        }
+        reclaimed
     }
 
+    /// Log entries `region` has not applied yet.
     pub fn backlog(&self, region: &str) -> usize {
-        self.queues.lock().unwrap().get(region).map(|q| q.len()).unwrap_or(0)
+        let Some(r) = self.region(region) else { return 0 };
+        let cursors = r.cursors.lock().unwrap();
+        (0..self.log.partitions())
+            .map(|p| (self.log.high_water(p).saturating_sub(cursors[p])) as usize)
+            .sum()
+    }
+
+    /// Worst-case staleness of `region` at `now`: age of its oldest
+    /// unapplied batch (0 when fully caught up). This is the
+    /// log-position staleness `BoundedStaleness` routing checks.
+    pub fn staleness_secs(&self, region: &str, now: Timestamp) -> i64 {
+        let Some(r) = self.region(region) else { return 0 };
+        let cursors = r.cursors.lock().unwrap().clone();
+        let mut worst = 0i64;
+        for (p, &cur) in cursors.iter().enumerate() {
+            if let Some((_, batch)) = self.log.read_from(p, cur, 1).into_iter().next() {
+                worst = worst.max((now - batch.appended_at).max(0));
+            }
+        }
+        worst
+    }
+
+    /// Read the retained log tail of one partition from `offset`
+    /// (failover replay; bounded chunks are the caller's loop).
+    pub fn read_tail(&self, partition: usize, offset: u64, max: usize) -> Vec<(u64, ReplBatch)> {
+        self.log.read_from(partition, offset, max)
+    }
+
+    /// Retained log entries across all partitions.
+    pub fn log_len(&self) -> usize {
+        self.log.len()
+    }
+
+    /// Test hook: run `f` while holding `region`'s cursor lock. Pins the
+    /// per-region locking contract — with a fabric-global cursor lock,
+    /// pumping another region from inside `f` would deadlock.
+    #[doc(hidden)]
+    pub fn while_region_locked<R>(&self, region: &str, f: impl FnOnce() -> R) -> R {
+        let r = self.region(region).expect("known region");
+        let _held = r.cursors.lock().unwrap();
+        f()
+    }
+}
+
+/// Background delivery thread: parked on the fabric's wake channel
+/// (pinged by every append), ticking at least every `period` so
+/// lag-gated visibility advances with the clock. Each tick pumps every
+/// region and truncates the log below the minimum applied cursor.
+/// Dropping the driver stops the thread.
+pub struct ReplicationDriver {
+    stop: Arc<AtomicBool>,
+    wake: Arc<Wake>,
+    applied: Arc<AtomicU64>,
+    handle: Option<std::thread::JoinHandle<()>>,
+}
+
+impl ReplicationDriver {
+    pub fn spawn(fabric: Arc<ReplicationFabric>, clock: Clock, period: Duration) -> Self {
+        let stop = Arc::new(AtomicBool::new(false));
+        let applied = Arc::new(AtomicU64::new(0));
+        let wake = fabric.wake();
+        let (stop2, applied2, wake2) = (stop.clone(), applied.clone(), wake.clone());
+        let handle = std::thread::Builder::new()
+            .name("geofs-replicator".into())
+            .spawn(move || {
+                let mut seen = 0u64;
+                loop {
+                    if stop2.load(Ordering::Acquire) {
+                        return;
+                    }
+                    seen = wake2.wait(seen, period);
+                    let now = clock.now();
+                    let n: u64 = fabric.pump(now).values().sum();
+                    applied2.fetch_add(n, Ordering::Relaxed);
+                    fabric.truncate_applied();
+                }
+            })
+            .expect("spawn replication driver");
+        ReplicationDriver { stop, wake, applied, handle: Some(handle) }
+    }
+
+    /// Records applied since spawn (test/metrics hook).
+    pub fn applied(&self) -> u64 {
+        self.applied.load(Ordering::Relaxed)
+    }
+}
+
+impl Drop for ReplicationDriver {
+    fn drop(&mut self) {
+        self.stop.store(true, Ordering::Release);
+        self.wake.ping();
+        if let Some(h) = self.handle.take() {
+            let _ = h.join();
+        }
     }
 }
 
@@ -237,161 +420,165 @@ mod tests {
         FeatureRecord::new(entity, event, created, vec![v])
     }
 
-    fn replicator(lag: i64) -> (GeoReplicator, Arc<OnlineStore>) {
+    fn fabric(lag: i64) -> (Arc<ReplicationFabric>, Arc<OnlineStore>) {
         let store = Arc::new(OnlineStore::new(2));
-        let r = GeoReplicator::new(vec![("westeurope".into(), store.clone(), lag)]);
-        (r, store)
+        let f = ReplicationFabric::new(2, vec![("westeurope".into(), store.clone(), lag)], None);
+        (f, store)
     }
 
     #[test]
     fn records_visible_after_lag() {
-        let (r, store) = replicator(60);
-        r.enqueue("t", &[rec(1, 100, 150, 1.0)], 1_000);
-        r.pump(1_030);
+        let (f, store) = fabric(60);
+        f.append("t", &[rec(1, 100, 150, 1.0)], 1_000);
+        f.pump(1_030);
         assert!(store.get("t", 1, 1_030).is_none(), "not visible before lag");
-        assert_eq!(r.backlog("westeurope"), 1);
-        r.pump(1_060);
+        assert_eq!(f.backlog("westeurope"), 1);
+        f.pump(1_060);
         assert_eq!(store.get("t", 1, 1_060).unwrap().values[0], 1.0);
-        assert_eq!(r.backlog("westeurope"), 0);
+        assert_eq!(f.backlog("westeurope"), 0);
     }
 
     #[test]
     fn staleness_measures_oldest_pending() {
-        let (r, _) = replicator(120);
-        assert_eq!(r.staleness_secs("westeurope", 0), 0);
-        r.enqueue("t", &[rec(1, 1, 2, 1.0)], 1_000);
-        r.enqueue("t", &[rec(2, 1, 2, 1.0)], 1_050);
-        assert_eq!(r.staleness_secs("westeurope", 1_080), 80);
-        r.pump(1_120); // first batch applies
-        assert_eq!(r.staleness_secs("westeurope", 1_130), 80); // second pending, enqueued 1050
-        r.pump(1_200);
-        assert_eq!(r.staleness_secs("westeurope", 1_300), 0);
+        let (f, _) = fabric(120);
+        assert_eq!(f.staleness_secs("westeurope", 0), 0);
+        f.append("t", &[rec(1, 1, 2, 1.0)], 1_000);
+        f.append("t", &[rec(2, 1, 2, 1.0)], 1_050);
+        assert_eq!(f.staleness_secs("westeurope", 1_080), 80);
+        f.pump(1_120); // first batch applies
+        assert_eq!(f.staleness_secs("westeurope", 1_130), 80); // second pending, appended 1050
+        f.pump(1_200);
+        assert_eq!(f.staleness_secs("westeurope", 1_300), 0);
     }
 
     #[test]
     fn replication_preserves_alg2_ordering() {
-        // Batches applied in order converge replicas to the home state
-        // even when a late-arriving record was merged in between.
-        let (r, store) = replicator(10);
-        r.enqueue("t", &[rec(1, 100, 110, 1.0)], 0);
-        r.enqueue("t", &[rec(1, 100, 300, 2.0)], 5); // recompute
-        r.enqueue("t", &[rec(1, 90, 400, 0.5)], 6); // older event: no-op
-        r.pump(1_000);
+        // Batches applied in log order converge the replica to the home
+        // state even when a late-arriving record was merged in between.
+        let (f, store) = fabric(10);
+        f.append("t", &[rec(1, 100, 110, 1.0)], 0);
+        f.append("t", &[rec(1, 100, 300, 2.0)], 5); // recompute
+        f.append("t", &[rec(1, 90, 400, 0.5)], 6); // older event: no-op
+        f.pump(1_000);
         let got = store.get("t", 1, 1_000).unwrap();
         assert_eq!(got.version(), (100, 300));
         assert_eq!(got.values[0], 2.0);
     }
 
     #[test]
-    fn pump_coalesces_batches_per_table_per_region() {
+    fn one_log_many_regions_independent_lag() {
         let eu = Arc::new(OnlineStore::new(2));
         let asia = Arc::new(OnlineStore::new(2));
-        let r = GeoReplicator::new(vec![
-            ("westeurope".into(), eu.clone(), 10),
-            ("southeastasia".into(), asia.clone(), 10),
-        ]);
-        // Three batches for "a" (including a same-event recompute and a
-        // stale event) and one for "b", all visible at once: one merge
-        // per table per region must converge exactly as per-batch
-        // application would.
-        r.enqueue("a", &[rec(1, 100, 110, 1.0)], 0);
-        r.enqueue("a", &[rec(1, 100, 300, 2.0), rec(2, 10, 20, 9.0)], 1);
-        r.enqueue("b", &[rec(1, 5, 6, 3.0)], 2);
-        r.enqueue("a", &[rec(1, 90, 400, 0.5)], 3); // older event: no-op
-        let applied = r.pump(1_000);
-        assert_eq!(applied["westeurope"], 5);
-        assert_eq!(applied["southeastasia"], 5);
-        for store in [&eu, &asia] {
-            let got = store.get("a", 1, 1_000).unwrap();
-            assert_eq!(got.version(), (100, 300));
-            assert_eq!(got.values[0], 2.0);
-            assert_eq!(store.get("a", 2, 1_000).unwrap().values[0], 9.0);
-            assert_eq!(store.get("b", 1, 1_000).unwrap().values[0], 3.0);
-        }
-        assert_eq!(r.backlog("westeurope"), 0);
-        assert_eq!(r.backlog("southeastasia"), 0);
-    }
-
-    #[test]
-    fn multiple_replicas_independent_lag() {
-        let eu = Arc::new(OnlineStore::new(2));
-        let asia = Arc::new(OnlineStore::new(2));
-        let r = GeoReplicator::new(vec![
-            ("westeurope".into(), eu.clone(), 30),
-            ("southeastasia".into(), asia.clone(), 90),
-        ]);
-        r.enqueue("t", &[rec(1, 1, 2, 1.0)], 100);
-        r.pump(140);
-        assert!(eu.get("t", 1, 140).is_some());
-        assert!(asia.get("t", 1, 140).is_none());
-        r.pump(190);
-        assert!(asia.get("t", 1, 190).is_some());
-        assert_eq!(r.regions(), vec!["southeastasia", "westeurope"]);
-        let set = r.replica_set();
-        assert_eq!(set.len(), 2);
-        assert_eq!((set[0].0.as_str(), set[0].2), ("southeastasia", 90));
-        assert_eq!((set[1].0.as_str(), set[1].2), ("westeurope", 30));
-    }
-
-    fn batch(table: &str, entity: u64, event: Timestamp, created: Timestamp, v: f32, at: Timestamp) -> ReplBatch {
-        ReplBatch {
-            table: table.into(),
-            records: [rec(entity, event, created, v)].into(),
-            appended_at: at,
-        }
-    }
-
-    #[test]
-    fn tailer_applies_after_lag_in_log_order() {
-        let log = Arc::new(PartitionedLog::new(1));
-        let eu = Arc::new(OnlineStore::new(2));
-        let asia = Arc::new(OnlineStore::new(2));
-        let t = LogTailer::new(
-            log.clone(),
+        let f = ReplicationFabric::new(
+            1,
             vec![("westeurope".into(), eu.clone(), 30), ("southeastasia".into(), asia.clone(), 90)],
+            None,
         );
-        log.append(0, batch("t", 1, 100, 110, 1.0, 1_000));
-        log.append(0, batch("t", 1, 100, 300, 2.0, 1_005)); // recompute
-        log.append(0, batch("u", 2, 5, 6, 3.0, 1_010));
+        f.append("t", &[rec(1, 100, 110, 1.0)], 1_000);
+        f.append("t", &[rec(1, 100, 300, 2.0)], 1_005); // recompute
+        f.append("u", &[rec(2, 5, 6, 3.0)], 1_010);
         // Before any lag elapses: nothing applied anywhere.
-        let applied = t.pump(1_020);
+        let applied = f.pump(1_020);
         assert_eq!(applied["westeurope"], 0);
-        assert_eq!(t.backlog("westeurope"), 3);
+        assert_eq!(f.backlog("westeurope"), 3);
         // EU lag elapsed for all three, Asia still waiting.
-        let applied = t.pump(1_040);
+        let applied = f.pump(1_040);
         assert_eq!(applied["westeurope"], 3);
         assert_eq!(applied["southeastasia"], 0);
         assert_eq!(eu.get("t", 1, 1_040).unwrap().version(), (100, 300));
         assert_eq!(eu.get("u", 2, 1_040).unwrap().values[0], 3.0);
         assert!(asia.get("t", 1, 1_040).is_none());
-        assert_eq!(t.backlog("westeurope"), 0);
-        assert_eq!(t.backlog("southeastasia"), 3);
-        // Asia catches up from the same log entries (one history, two
-        // cursors).
-        t.pump(1_100);
+        // One history, two cursors: nothing reclaimable while Asia lags.
+        assert_eq!(f.truncate_applied(), 0);
+        f.pump(1_100);
         assert_eq!(asia.get("t", 1, 1_100).unwrap().version(), (100, 300));
-        assert_eq!(t.backlog("southeastasia"), 0);
+        assert_eq!(f.backlog("southeastasia"), 0);
+        // Everyone applied: the prefix is reclaimed.
+        assert_eq!(f.truncate_applied(), 3);
+        assert_eq!(f.log_len(), 0);
         // Replays are no-ops: the cursor moved past everything.
-        assert_eq!(t.pump(2_000)["westeurope"], 0);
-        assert_eq!(t.regions(), vec!["southeastasia", "westeurope"]);
+        assert_eq!(f.pump(2_000)["westeurope"], 0);
+        assert_eq!(f.regions(), vec!["southeastasia", "westeurope"]);
     }
 
     #[test]
-    fn tailer_stops_at_first_unripe_entry() {
+    fn pump_stops_at_first_unripe_entry() {
         // Apply order is log order: a visible entry behind an unripe one
         // must wait (prefix semantics, like a real log tail).
-        let log = Arc::new(PartitionedLog::new(1));
+        let (f, store) = fabric(10);
+        f.append("t", &[rec(1, 100, 110, 1.0)], 1_000);
+        f.append("t", &[rec(2, 100, 110, 2.0)], 5_000);
+        f.append("t", &[rec(3, 100, 110, 3.0)], 1_001); // appended_at regressed
+        assert_eq!(f.pump(1_050)["westeurope"], 1);
+        assert!(store.get("t", 3, 1_050).is_none(), "entry behind unripe prefix must wait");
+        f.pump(5_010);
+        assert!(store.get("t", 2, 5_010).is_some() && store.get("t", 3, 5_010).is_some());
+        assert_eq!(f.backlog("westeurope"), 0);
+        assert_eq!(f.backlog("nope"), 0);
+    }
+
+    #[test]
+    fn tokens_cover_once_cursors_pass() {
+        let (f, _) = fabric(0);
+        let empty = f.token();
+        assert!(f.covers("westeurope", &empty), "empty token is always covered");
+        let tok = f.append("t", &[rec(1, 1, 2, 1.0)], 100);
+        assert!(!f.covers("westeurope", &tok));
+        assert!(!f.covers("nowhere", &tok), "unknown region never covers");
+        f.pump(100);
+        assert!(f.covers("westeurope", &tok));
+        // join folds positions per partition.
+        let mut joined = tok.clone();
+        let tok2 = f.append("t", &[rec(2, 1, 2, 1.0)], 101);
+        joined.join(&tok2);
+        assert!(!f.covers("westeurope", &joined));
+        f.pump(101);
+        assert!(f.covers("westeurope", &joined));
+        assert_eq!(joined, f.token());
+    }
+
+    #[test]
+    fn driver_applies_in_background_and_truncates() {
         let eu = Arc::new(OnlineStore::new(2));
-        let t = LogTailer::new(log.clone(), vec![("eu".into(), eu.clone(), 10)]);
-        log.append(0, batch("t", 1, 100, 110, 1.0, 1_000));
-        log.append(0, batch("t", 2, 100, 110, 2.0, 5_000));
-        log.append(0, batch("t", 3, 100, 110, 3.0, 1_001)); // appended_at regressed
-        let applied = t.pump(1_050);
-        assert_eq!(applied["eu"], 1);
-        assert!(eu.get("t", 3, 1_050).is_none(), "entry behind unripe prefix must wait");
-        t.pump(5_010);
-        assert!(eu.get("t", 2, 5_010).is_some() && eu.get("t", 3, 5_010).is_some());
-        assert_eq!(t.backlog("eu"), 0);
-        assert_eq!(t.backlog("nope"), 0);
+        let f = ReplicationFabric::new(2, vec![("eu".into(), eu.clone(), 30)], None);
+        let clock = Clock::fixed(1_000);
+        let driver = ReplicationDriver::spawn(f.clone(), clock.clone(), Duration::from_millis(2));
+        f.append("t", &[rec(1, 10, 20, 7.0)], 1_000);
+        // Lag not elapsed: the driver must hold the batch back.
+        std::thread::sleep(Duration::from_millis(20));
+        assert!(eu.get("t", 1, 1_000).is_none());
+        // Advance the clock past the lag: the periodic tick delivers
+        // without any caller pump, then reclaims the applied prefix.
+        clock.set(1_030);
+        let deadline = std::time::Instant::now() + Duration::from_secs(5);
+        while f.backlog("eu") > 0 && std::time::Instant::now() < deadline {
+            std::thread::sleep(Duration::from_millis(2));
+        }
+        assert_eq!(eu.get("t", 1, 1_030).unwrap().values[0], 7.0);
+        assert!(driver.applied() >= 1);
+        let deadline = std::time::Instant::now() + Duration::from_secs(5);
+        while f.log_len() > 0 && std::time::Instant::now() < deadline {
+            std::thread::sleep(Duration::from_millis(2));
+        }
+        assert_eq!(f.log_len(), 0, "driver must truncate below the min applied cursor");
+        drop(driver);
+    }
+
+    #[test]
+    fn pump_sets_lag_and_backlog_gauges() {
+        let metrics = Arc::new(MetricsRegistry::new());
+        let eu = Arc::new(OnlineStore::new(2));
+        let f = ReplicationFabric::new(
+            1,
+            vec![("eu".into(), eu, 60)],
+            Some(metrics.clone()),
+        );
+        f.append("t", &[rec(1, 1, 2, 1.0)], 1_000);
+        f.pump(1_010);
+        assert_eq!(metrics.gauge("repl_lag_secs_eu"), Some(10.0));
+        assert_eq!(metrics.gauge("repl_backlog_eu"), Some(1.0));
+        f.pump(1_060);
+        assert_eq!(metrics.gauge("repl_lag_secs_eu"), Some(0.0));
+        assert_eq!(metrics.gauge("repl_backlog_eu"), Some(0.0));
     }
 }

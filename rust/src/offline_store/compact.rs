@@ -43,6 +43,7 @@ use std::time::Duration;
 
 use super::columnar::Segment;
 use super::OfflineStore;
+use crate::monitor::metrics::{MetricKind, MetricsRegistry};
 use crate::util::wake::Wake;
 
 /// Size tier of a segment: the smallest `t` with
@@ -63,30 +64,47 @@ pub(crate) fn tier_of(rows: usize, base: usize, fanin: usize) -> u32 {
     t
 }
 
+/// Pick one tier merge over per-segment **row counts**: the `fanin`
+/// creation-adjacent member indices of the lowest over-full tier.
+/// `None` when no tier is over-full. This arithmetic core is shared by
+/// the real picker below and the backlog estimator
+/// (`OfflineStore::compaction_backlog`), which simulates folds on the
+/// count list without touching any segment.
+pub(crate) fn pick_tier_rows(
+    rows: &[usize],
+    base: usize,
+    fanin: usize,
+) -> Option<(u32, Vec<usize>)> {
+    let fanin = fanin.max(2);
+    if rows.len() < fanin {
+        return None;
+    }
+    // tier → creation-ordered member indices.
+    let mut tiers: std::collections::BTreeMap<u32, Vec<usize>> = std::collections::BTreeMap::new();
+    for (i, &r) in rows.iter().enumerate() {
+        tiers.entry(tier_of(r, base, fanin)).or_default().push(i);
+    }
+    for (&tier, members) in tiers.iter() {
+        if members.len() >= fanin {
+            return Some((tier, members[..fanin].to_vec()));
+        }
+    }
+    None
+}
+
 /// Pick one tier merge: the `fanin` creation-adjacent members of the
 /// lowest over-full tier (the segment list is creation-sorted, so tier
 /// members are visited — and therefore merged — in creation order).
+/// Returns the tier merged from, for the per-tier merge counters.
 /// `None` when no tier is over-full.
 pub(crate) fn pick_tier(
     segments: &[Arc<Segment>],
     base: usize,
     fanin: usize,
-) -> Option<Vec<Arc<Segment>>> {
-    if segments.len() < fanin.max(2) {
-        return None;
-    }
-    // tier → creation-ordered member indices.
-    let mut tiers: std::collections::BTreeMap<u32, Vec<usize>> = std::collections::BTreeMap::new();
-    for (i, s) in segments.iter().enumerate() {
-        tiers.entry(tier_of(s.len(), base, fanin)).or_default().push(i);
-    }
-    let fanin = fanin.max(2);
-    for members in tiers.values() {
-        if members.len() >= fanin {
-            return Some(members[..fanin].iter().map(|&i| segments[i].clone()).collect());
-        }
-    }
-    None
+) -> Option<(u32, Vec<Arc<Segment>>)> {
+    let rows: Vec<usize> = segments.iter().map(|s| s.len()).collect();
+    let (tier, idxs) = pick_tier_rows(&rows, base, fanin)?;
+    Some((tier, idxs.into_iter().map(|i| segments[i].clone()).collect()))
 }
 
 /// Background compaction thread bound to one store. Dropping the driver
@@ -103,6 +121,19 @@ impl CompactionDriver {
     /// every `period`, each tick running tier merges until no table has
     /// an over-full tier.
     pub fn spawn(store: Arc<OfflineStore>, period: Duration) -> CompactionDriver {
+        Self::spawn_with(store, period, None)
+    }
+
+    /// [`CompactionDriver::spawn`] with observability: each merge bumps
+    /// `compaction_merges_total` and a `compaction_merges_tier{t}`
+    /// counter for the tier it folded, and every tick refreshes the
+    /// `compaction_backlog` gauge (tier merges currently pending across
+    /// all tables — 0 once the driver has drained the store's shape).
+    pub fn spawn_with(
+        store: Arc<OfflineStore>,
+        period: Duration,
+        metrics: Option<Arc<MetricsRegistry>>,
+    ) -> CompactionDriver {
         let stop = Arc::new(AtomicBool::new(false));
         let merges = Arc::new(AtomicU64::new(0));
         let wake = store.compaction_wake();
@@ -119,11 +150,34 @@ impl CompactionDriver {
                     }
                     seen = wake2.wait(seen, period);
                     loop {
-                        let done = store.compact_tick();
-                        merges2.fetch_add(done as u64, Ordering::Relaxed);
-                        if done == 0 || stop2.load(Ordering::Acquire) {
+                        let tiers = store.compact_tick_tiers();
+                        merges2.fetch_add(tiers.len() as u64, Ordering::Relaxed);
+                        if let Some(m) = &metrics {
+                            if !tiers.is_empty() {
+                                m.inc(
+                                    MetricKind::System,
+                                    "compaction_merges_total",
+                                    tiers.len() as u64,
+                                );
+                                for t in &tiers {
+                                    m.inc(
+                                        MetricKind::System,
+                                        &format!("compaction_merges_tier{t}"),
+                                        1,
+                                    );
+                                }
+                            }
+                        }
+                        if tiers.is_empty() || stop2.load(Ordering::Acquire) {
                             break;
                         }
+                    }
+                    if let Some(m) = &metrics {
+                        m.set_gauge(
+                            MetricKind::System,
+                            "compaction_backlog",
+                            store.compaction_backlog() as f64,
+                        );
                     }
                 }
             })
@@ -177,7 +231,8 @@ mod tests {
     fn picks_lowest_overfull_tier_in_creation_order() {
         // Three tier-0 segments (≤4 rows) + one big one; fanin 3.
         let segs = vec![seg(2), seg(3), seg(4), seg(400)];
-        let picked = pick_tier(&segs, 4, 3).expect("tier 0 over-full");
+        let (tier, picked) = pick_tier(&segs, 4, 3).expect("tier 0 over-full");
+        assert_eq!(tier, 0);
         assert_eq!(picked.len(), 3);
         for (p, s) in picked.iter().zip(&segs[..3]) {
             assert!(Arc::ptr_eq(p, s), "must take the first (creation-adjacent) members");
@@ -194,9 +249,28 @@ mod tests {
         let base = 4;
         let fanin = 4;
         let segs: Vec<Arc<Segment>> = (0..4).map(|k| seg_at(4, k * 100)).collect();
-        let picked = pick_tier(&segs, base, fanin).unwrap();
+        let (_, picked) = pick_tier(&segs, base, fanin).unwrap();
         let refs: Vec<&Segment> = picked.iter().map(|s| s.as_ref()).collect();
         let merged = Segment::merge(&refs);
         assert!(tier_of(merged.len(), base, fanin) >= 1);
+    }
+
+    #[test]
+    fn pick_tier_rows_simulates_backlog_to_exhaustion() {
+        // Six tier-0 counts, fanin 4: one pickable merge now; folding it
+        // leaves 2 + 1 merged — under-full, so the simulated backlog is
+        // exactly 1 (what the backlog gauge reports).
+        let mut rows = vec![4usize, 4, 4, 4, 4, 4];
+        let mut pending = 0;
+        while let Some((_, idxs)) = pick_tier_rows(&rows, 4, 4) {
+            let merged: usize = idxs.iter().map(|&i| rows[i]).sum();
+            for &i in idxs.iter().rev() {
+                rows.remove(i);
+            }
+            rows.push(merged);
+            pending += 1;
+        }
+        assert_eq!(pending, 1);
+        assert!(pick_tier_rows(&[4, 4], 4, 4).is_none());
     }
 }

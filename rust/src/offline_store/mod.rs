@@ -284,7 +284,13 @@ impl OfflineStore {
     /// lock, and it aborts harmlessly if a racing explicit `compact()`
     /// already removed an input. Returns tier merges performed.
     pub fn compact_tick(&self) -> usize {
-        let mut merges = 0;
+        self.compact_tick_tiers().len()
+    }
+
+    /// [`OfflineStore::compact_tick`], reporting the **tier** of every
+    /// merge performed (the driver's per-tier merge counters).
+    pub fn compact_tick_tiers(&self) -> Vec<u32> {
+        let mut merges = Vec::new();
         for name in self.tables() {
             let Some(t) = self.table(&name) else { continue };
             loop {
@@ -292,7 +298,7 @@ impl OfflineStore {
                     let g = t.inner.read().unwrap();
                     compact::pick_tier(&g.segments, self.cfg.spill_rows, self.cfg.tier_fanin)
                 };
-                let Some(picked) = picked else { break };
+                let Some((tier, picked)) = picked else { break };
                 let refs: Vec<&Segment> = picked.iter().map(|s| s.as_ref()).collect();
                 let merged = Arc::new(Segment::merge_with(&refs, self.cfg.bloom_bits_per_key));
                 let mut g = t.inner.write().unwrap();
@@ -304,10 +310,36 @@ impl OfflineStore {
                 g.segments.retain(|s| !picked.iter().any(|p| Arc::ptr_eq(s, p)));
                 g.segments.push(merged);
                 g.segments.sort_by_key(|s| s.stats().min_creation);
-                merges += 1;
+                merges.push(tier);
             }
         }
         merges
+    }
+
+    /// Tier merges currently pending across all tables, estimated by
+    /// simulating the size-tiered picker on per-segment row counts until
+    /// no tier is over-full — pure arithmetic, no segment touched, no
+    /// lock held during the simulation. This is the
+    /// `compaction_backlog` gauge the [`CompactionDriver`] exports: 0
+    /// means every table's shape is settled.
+    pub fn compaction_backlog(&self) -> u64 {
+        let mut pending = 0u64;
+        for name in self.tables() {
+            let Some(t) = self.table(&name) else { continue };
+            let mut rows: Vec<usize> =
+                t.inner.read().unwrap().segments.iter().map(|s| s.len()).collect();
+            while let Some((_, idxs)) =
+                compact::pick_tier_rows(&rows, self.cfg.spill_rows, self.cfg.tier_fanin)
+            {
+                let merged: usize = idxs.iter().map(|&i| rows[i]).sum();
+                for &i in idxs.iter().rev() {
+                    rows.remove(i);
+                }
+                rows.push(merged);
+                pending += 1;
+            }
+        }
+        pending
     }
 
     /// Visit every record with `event_ts` in `window` (and, when `as_of`

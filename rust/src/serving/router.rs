@@ -77,7 +77,7 @@ mod tests {
             topology,
             home_region: home.into(),
             home_store: Arc::new(OnlineStore::new(2)),
-            replicator: None,
+            fabric: None,
             geo_fenced: false,
         })
     }

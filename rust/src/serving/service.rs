@@ -11,7 +11,7 @@
 use std::sync::Arc;
 
 use super::router::ServingRouter;
-use crate::geo::access::{AccessMechanism, RoutedBatch, RoutedLookup};
+use crate::geo::access::{AccessMechanism, ReadConsistency, RoutedBatch, RoutedLookup};
 use crate::monitor::metrics::{MetricKind, MetricsRegistry};
 use crate::types::{EntityId, Result, Timestamp};
 
@@ -34,17 +34,19 @@ impl OnlineServing {
         OnlineServing { router, metrics }
     }
 
-    /// One online feature lookup from `consumer_region`. Records latency
-    /// and hit/miss metrics per mechanism.
+    /// One online feature lookup from `consumer_region` under a
+    /// consistency policy. Records latency and hit/miss metrics per
+    /// mechanism.
     pub fn lookup(
         &self,
         table: &str,
         entity: EntityId,
         consumer_region: &str,
         now: Timestamp,
+        consistency: &ReadConsistency,
     ) -> Result<RoutedLookup> {
         let access = self.router.resolve(table, consumer_region)?;
-        let out = access.lookup(consumer_region, table, entity, now)?;
+        let out = access.lookup(consumer_region, table, entity, now, consistency)?;
         let mech = mech_label(out.mechanism);
         self.metrics.observe_latency(
             MetricKind::System,
@@ -69,9 +71,10 @@ impl OnlineServing {
         entities: &[EntityId],
         consumer_region: &str,
         now: Timestamp,
+        consistency: &ReadConsistency,
     ) -> Result<RoutedBatch> {
         let access = self.router.resolve(table, consumer_region)?;
-        let out = access.lookup_many(consumer_region, table, entities, now)?;
+        let out = access.lookup_many(consumer_region, table, entities, now, consistency)?;
         let mech = mech_label(out.mechanism);
         self.metrics.observe_latency(
             MetricKind::System,
@@ -99,8 +102,9 @@ impl OnlineServing {
         entities: &[EntityId],
         consumer_region: &str,
         now: Timestamp,
+        consistency: &ReadConsistency,
     ) -> Result<Vec<RoutedLookup>> {
-        let batch = self.lookup_batch(table, entities, consumer_region, now)?;
+        let batch = self.lookup_batch(table, entities, consumer_region, now, consistency)?;
         Ok(batch
             .records
             .into_iter()
@@ -134,7 +138,7 @@ mod tests {
                 topology,
                 home_region: "eastus".into(),
                 home_store: store.clone(),
-                replicator: None,
+                fabric: None,
                 geo_fenced: false,
             }),
         );
@@ -147,9 +151,9 @@ mod tests {
     #[test]
     fn lookup_records_metrics() {
         let (s, _) = serving();
-        let out = s.lookup("t", 1, "eastus", 100).unwrap();
+        let out = s.lookup("t", 1, "eastus", 100, &ReadConsistency::default()).unwrap();
         assert_eq!(out.record.unwrap().values[0], 5.0);
-        let _ = s.lookup("t", 999, "westus", 100).unwrap();
+        let _ = s.lookup("t", 999, "westus", 100, &ReadConsistency::default()).unwrap();
         assert_eq!(s.metrics.counter("serving_hits"), 1);
         assert_eq!(s.metrics.counter("serving_misses"), 1);
         assert!(s.metrics.latency_quantile("serving_latency_us_local", 0.5).is_some());
@@ -160,7 +164,7 @@ mod tests {
     fn lookup_many_ordered() {
         let (s, store) = serving();
         store.merge("t", &[FeatureRecord::new(2, 10, 20, vec![6.0])], 20);
-        let out = s.lookup_many("t", &[2, 1], "eastus", 100).unwrap();
+        let out = s.lookup_many("t", &[2, 1], "eastus", 100, &ReadConsistency::default()).unwrap();
         assert_eq!(out[0].record.as_ref().unwrap().values[0], 6.0);
         assert_eq!(out[1].record.as_ref().unwrap().values[0], 5.0);
     }
@@ -169,7 +173,7 @@ mod tests {
     fn lookup_batch_records_batch_metrics() {
         let (s, store) = serving();
         store.merge("t", &[FeatureRecord::new(2, 10, 20, vec![6.0])], 20);
-        let batch = s.lookup_batch("t", &[1, 2, 42], "westus", 100).unwrap();
+        let batch = s.lookup_batch("t", &[1, 2, 42], "westus", 100, &ReadConsistency::default()).unwrap();
         assert_eq!(batch.mechanism, AccessMechanism::CrossRegion);
         assert_eq!(batch.records.len(), 3);
         assert_eq!(s.metrics.counter("serving_hits"), 2);
@@ -183,7 +187,7 @@ mod tests {
     #[test]
     fn unknown_table_errors() {
         let (s, _) = serving();
-        assert!(s.lookup("nope", 1, "eastus", 0).is_err());
-        assert!(s.lookup_batch("nope", &[1], "eastus", 0).is_err());
+        assert!(s.lookup("nope", 1, "eastus", 0, &ReadConsistency::default()).is_err());
+        assert!(s.lookup_batch("nope", &[1], "eastus", 0, &ReadConsistency::default()).is_err());
     }
 }

@@ -142,8 +142,9 @@ impl<T: Clone> PartitionedLog<T> {
 }
 
 /// splitmix-style avalanche so textual keys with common prefixes spread
-/// across partitions (mirrors `online_store::shard_of`).
-fn hash_key(key: &str) -> u64 {
+/// across partitions (mirrors `online_store::shard_of`; also the
+/// replication fabric's table→partition router).
+pub(crate) fn hash_key(key: &str) -> u64 {
     let mut x = 0xcbf29ce484222325u64;
     for b in key.as_bytes() {
         x ^= *b as u64;

@@ -18,15 +18,22 @@
 //!                          ▼ FeatureRecords (creation_ts = now)
 //!              ┌───────────┼──────────────────┐
 //!              ▼           ▼                  ▼
-//!      OfflineStore   WriteBatcher      ReplBatch log
-//!      (sync merge,   (micro-batched    (remote regions tail
-//!       Alg 2 dedupe)  online merges)    via geo::LogTailer)
+//!      OfflineStore   WriteBatcher      ReplicationFabric
+//!      (sync merge,   (micro-batched    (store-wide record log;
+//!       Alg 2 dedupe)  online merges)    replica regions tail it)
 //! ```
 //!
 //! Per-partition work fans out over the shared [`ThreadPool`]; each
 //! partition's state sits behind its own lock, and entities are
 //! key-routed to exactly one partition, so rounds parallelize without
 //! cross-partition coordination.
+//!
+//! Replication is **not** engine-local: emitted batches are appended to
+//! the store-wide `geo::replication::ReplicationFabric` (the same
+//! durable record log the batch scheduler appends to), whose background
+//! `ReplicationDriver` delivers them to replica regions. The engine
+//! keeps no per-region state and the replication log outlives engine
+//! incarnations.
 //!
 //! # Exactly-once dual-write
 //!
@@ -84,7 +91,7 @@ pub use watermark::{min_watermark, WatermarkTracker};
 use std::sync::{Arc, Mutex, Weak};
 
 use crate::exec::ThreadPool;
-use crate::geo::replication::{LogTailer, ReplBatch};
+use crate::geo::replication::ReplicationFabric;
 use crate::materialize::Materializer;
 use crate::metadata::assets::FeatureSetSpec;
 use crate::monitor::freshness::FreshnessTracker;
@@ -148,9 +155,10 @@ pub struct StreamDeps {
     pub clock: Clock,
     /// Fan per-partition rounds out here (None = sequential).
     pub pool: Option<Arc<ThreadPool>>,
-    /// Remote regions that should tail the emitted-record log
-    /// (typically `GeoReplicator::replica_set`). Empty = no replication.
-    pub replicas: Vec<(String, Arc<OnlineStore>, i64)>,
+    /// The store-wide replication fabric: every emitted batch is
+    /// appended so replica regions receive streaming writes through the
+    /// same plane as batch writes. `None` = no replication.
+    pub fabric: Option<Arc<ReplicationFabric>>,
     /// Consumer-group checkpoint store consulted by `poll` for log
     /// retention: events below the minimum committed offset across
     /// **all** groups (clamped to the bin-aligned repair retention
@@ -231,8 +239,6 @@ pub struct StreamIngestor {
     log: Arc<EventLog>,
     parts: Vec<Mutex<PartState>>,
     writer: Arc<WriteBatcher>,
-    repl_log: Option<Arc<PartitionedLog<ReplBatch>>>,
-    tailer: Option<LogTailer>,
     deps: StreamDeps,
     _writer_driver: Option<FlushDriver>,
 }
@@ -304,13 +310,6 @@ impl StreamIngestor {
         let writer_driver = cfg
             .writer_driver
             .then(|| writer.spawn_driver(deps.online.clone(), deps.clock.clone()));
-        let (repl_log, tailer) = if deps.replicas.is_empty() {
-            (None, None)
-        } else {
-            let rl: Arc<PartitionedLog<ReplBatch>> = Arc::new(PartitionedLog::new(1));
-            let tailer = LogTailer::new(rl.clone(), deps.replicas.clone());
-            (Some(rl), Some(tailer))
-        };
         Ok(Arc::new_cyclic(|me| StreamIngestor {
             me: me.clone(),
             log,
@@ -319,8 +318,6 @@ impl StreamIngestor {
             cfg,
             parts,
             writer,
-            repl_log,
-            tailer,
             deps,
             _writer_driver: writer_driver,
         }))
@@ -397,20 +394,17 @@ impl StreamIngestor {
                 let shared: Arc<[crate::types::FeatureRecord]> = records.into();
                 // Dual-write: offline synchronously (Alg 2 idempotent
                 // append), online through the micro-batched write stage,
-                // replicas via the tailed record log — all three share
-                // one allocation and identical timestamps.
+                // replicas via the store-wide replication fabric — all
+                // three share one allocation and identical timestamps.
                 self.deps.offline.merge(&self.table, &shared);
                 self.writer.push(&self.table, shared.clone(), wall_us());
-                if let Some(rl) = &self.repl_log {
+                if let Some(fabric) = &self.deps.fabric {
                     // appended_at is *processing* time (the lag-visibility
                     // rule is defined against it), not the bumped
                     // creation stamp — a bumped stamp would push
-                    // visibility past the lag and, because tailing is
-                    // prefix-ordered, block later honest entries too.
-                    rl.append(
-                        0,
-                        ReplBatch { table: self.table.clone(), records: shared, appended_at: proc_now },
-                    );
+                    // visibility past the lag and, because fabric tailing
+                    // is prefix-ordered, block later honest entries too.
+                    fabric.append_shared(&self.table, shared, proc_now);
                 }
             }
         }
@@ -508,12 +502,6 @@ impl StreamIngestor {
         Ok(agg)
     }
 
-    /// Deliver replicated batches that have become visible by `now`.
-    /// Returns records applied per region (empty without replicas).
-    pub fn pump_replicas(&self, now: Timestamp) -> std::collections::HashMap<String, u64> {
-        self.tailer.as_ref().map(|t| t.pump(now)).unwrap_or_default()
-    }
-
     /// Reclaim source-log entries no consumer will ever need again:
     /// below the **minimum committed offset across all consumer groups**
     /// for the partition, and older than the partition's bin-aligned
@@ -564,14 +552,10 @@ impl StreamIngestor {
     /// Commit consumer progress behind a flush barrier: drain the online
     /// write stage, then record each partition's offset + finalization
     /// boundary. Everything below the committed offsets is durable in
-    /// both **home** sinks.
-    ///
-    /// Caveat: the replica record log is engine-local and *not* covered
-    /// by the checkpoint — batches emitted before a crash but not yet
-    /// pumped to replicas are not re-appended on resume (only
-    /// re-emissions of uncommitted work are). Replicas re-converge via
-    /// the idempotent batch path / bootstrap; making the record log a
-    /// durable first-class log is a ROADMAP follow-up.
+    /// both **home** sinks; replica delivery is the fabric's job — the
+    /// replication log is store-wide and outlives this engine, so
+    /// batches emitted before a crash stay replayable to replicas
+    /// regardless of checkpoint state.
     pub fn checkpoint_to(&self, store: &CheckpointStore) {
         // Phase 1: snapshot progress under each partition's lock. A
         // poll enqueues its online records *before* releasing the lock,
@@ -666,7 +650,7 @@ mod tests {
             metrics: Arc::new(MetricsRegistry::new()),
             clock,
             pool: None,
-            replicas: Vec::new(),
+            fabric: None,
             checkpoints: None,
         }
     }
@@ -834,11 +818,13 @@ mod tests {
     }
 
     #[test]
-    fn replicas_tail_the_record_log() {
+    fn emitted_batches_reach_replicas_through_the_fabric() {
         let clock = Clock::fixed(10 * HOUR);
         let eu = Arc::new(OnlineStore::new(2));
+        let fabric =
+            ReplicationFabric::new(2, vec![("westeurope".into(), eu.clone(), 60)], None);
         let mut d = deps(clock.clone());
-        d.replicas = vec![("westeurope".into(), eu.clone(), 60)];
+        d.fabric = Some(fabric.clone());
         let ing = StreamIngestor::new(spec(1), StreamConfig::default(), d).unwrap();
         ing.ingest(&[ev(0, "a", 10, 4.0), ev(1, "a", HOUR + 5, 1.0)]);
         ing.drain().unwrap();
@@ -846,11 +832,16 @@ mod tests {
         let a = ing.deps.materializer.interner().lookup("a").unwrap();
         // Home is visible immediately; the replica only after its lag.
         assert!(ing.deps.online.get(&table, a, 10 * HOUR).is_some());
-        ing.pump_replicas(10 * HOUR);
+        fabric.pump(10 * HOUR);
         assert!(eu.get(&table, a, 10 * HOUR).is_none());
-        let applied = ing.pump_replicas(10 * HOUR + 60);
+        let applied = fabric.pump(10 * HOUR + 60);
         assert!(applied["westeurope"] > 0);
         assert_eq!(eu.get(&table, a, 10 * HOUR + 60).unwrap().values[0], 4.0);
+        // The fabric log — not the engine — retains the batches, so the
+        // replication history survives the engine: dropping the engine
+        // leaves the applied prefix reclaimable.
+        drop(ing);
+        assert!(fabric.truncate_applied() > 0);
     }
 
     #[test]

@@ -2,8 +2,9 @@
 //!
 //! One producer-side `ping` + one consumer-side timed `wait`, built on
 //! a counter + condvar. Used by the serving batchers' `FlushDriver`
-//! (`serving::batcher`) and the offline store's `CompactionDriver`
-//! (`offline_store::compact`) — one implementation, so any fix to the
+//! (`serving::batcher`), the offline store's `CompactionDriver`
+//! (`offline_store::compact`) and the geo fabric's `ReplicationDriver`
+//! (`geo::replication`) — one implementation, so any fix to the
 //! wakeup semantics (lost-wakeup ordering, spurious-wake handling)
 //! lands everywhere at once.
 //!

@@ -1,0 +1,386 @@
+//! The replication fabric's correctness contract (§4.1.2 + §3.1.2):
+//!
+//! * **Convergence** — driver-applied replicas reach exactly the state
+//!   of synchronous home-store application, under duplicate delivery
+//!   and out-of-order record versions (the differential guarantee of
+//!   the single replication plane).
+//! * **Per-region locking** — a blocked region's apply never stalls
+//!   another region's (the global-cursor-lock pump this PR removed
+//!   would deadlock the pinned scenario).
+//! * **Read-your-writes** — a token-gated replica read never returns
+//!   pre-token state, whatever the pump interleaving.
+//! * **Policy routing on the public batched path** — `Strong` /
+//!   `BoundedStaleness` / `ReadYourWrites` selectable through
+//!   `FeatureStore::get_online_many_with`, with bounded staleness
+//!   falling back to cross-region instead of serving stale data.
+//! * **Failover under replication** — the home dies mid-backlog; the
+//!   promoted region recovers every acked write from the fabric log and
+//!   returns with a running replication driver whose staleness gauges
+//!   drain to zero.
+
+use std::collections::HashMap;
+use std::sync::Arc;
+use std::time::Duration;
+
+use geofs::config::Config;
+use geofs::coordinator::{FeatureStore, OpenOptions};
+use geofs::exec::{RetryPolicy, ThreadPool};
+use geofs::geo::access::{AccessMechanism, CrossRegionAccess, ReadConsistency};
+use geofs::geo::failover::FailoverManager;
+use geofs::geo::replication::{ReplicationDriver, ReplicationFabric};
+use geofs::geo::topology::GeoTopology;
+use geofs::governance::rbac::{Grant, Principal, Role};
+use geofs::metadata::assets::{EntitySpec, FeatureSetSpec, SourceSpec};
+use geofs::monitor::metrics::MetricsRegistry;
+use geofs::offline_store::OfflineStore;
+use geofs::online_store::OnlineStore;
+use geofs::scheduler::Scheduler;
+use geofs::source::synthetic::SyntheticSource;
+use geofs::testkit::TempDir;
+use geofs::types::time::{Granularity, DAY, HOUR};
+use geofs::types::FeatureRecord;
+use geofs::util::rng::Rng;
+use geofs::util::Clock;
+
+fn rec(entity: u64, event: i64, created: i64, v: f32) -> FeatureRecord {
+    FeatureRecord::new(entity, event, created, vec![v])
+}
+
+#[test]
+fn driver_applied_replicas_converge_to_home_state() {
+    let mut rng = Rng::new(13);
+    let home = Arc::new(OnlineStore::new(4));
+    let eu = Arc::new(OnlineStore::new(4));
+    let asia = Arc::new(OnlineStore::new(4));
+    let fabric = ReplicationFabric::new(
+        4,
+        vec![("eu".into(), eu.clone(), 7), ("asia".into(), asia.clone(), 19)],
+        None,
+    );
+    let clock = Clock::fixed(0);
+    let driver = ReplicationDriver::spawn(fabric.clone(), clock.clone(), Duration::from_millis(1));
+
+    let tables = ["t:1", "u:1", "v:1"];
+    let mut touched: Vec<(String, u64)> = Vec::new();
+    let mut now = 0i64;
+    for _ in 0..250 {
+        now += rng.range(0, 3);
+        let table = tables[rng.below(3) as usize];
+        // Out-of-order versions inside and across batches: event and
+        // creation are drawn independently, so a later append can carry
+        // an older version (Alg 2 must still converge identically).
+        let recs: Vec<FeatureRecord> = (0..1 + rng.below(6))
+            .map(|_| {
+                let e = rng.below(40);
+                touched.push((table.to_string(), e));
+                rec(e, rng.range(0, 500), rng.range(0, 500), rng.f32())
+            })
+            .collect();
+        home.merge(table, &recs, now);
+        fabric.append(table, &recs, now);
+        if rng.below(4) == 0 {
+            // At-least-once delivery: the same batch appended twice.
+            fabric.append(table, &recs, now);
+        }
+        clock.set(now);
+    }
+    // All lags elapse; the background driver must drain both regions.
+    clock.set(now + 100);
+    let deadline = std::time::Instant::now() + Duration::from_secs(10);
+    while (fabric.backlog("eu") > 0 || fabric.backlog("asia") > 0)
+        && std::time::Instant::now() < deadline
+    {
+        std::thread::sleep(Duration::from_millis(2));
+    }
+    assert_eq!(fabric.backlog("eu") + fabric.backlog("asia"), 0, "driver must drain");
+
+    let read_at = now + 200;
+    for (table, e) in &touched {
+        let want = home.get(table, *e, read_at).expect("home has every merged entity");
+        for (name, store) in [("eu", &eu), ("asia", &asia)] {
+            let got = store
+                .get(table, *e, read_at)
+                .unwrap_or_else(|| panic!("{name} missing {table}/{e}"));
+            assert_eq!(got.version(), want.version(), "{name} {table}/{e}");
+            assert_eq!(got.values, want.values, "{name} {table}/{e}");
+        }
+    }
+    drop(driver);
+}
+
+#[test]
+fn blocked_region_does_not_stall_another_regions_apply() {
+    let slow = Arc::new(OnlineStore::new(2));
+    let fast = Arc::new(OnlineStore::new(2));
+    let fabric = ReplicationFabric::new(
+        2,
+        vec![("slow".into(), slow, 0), ("fast".into(), fast.clone(), 0)],
+        None,
+    );
+    for i in 0..5 {
+        fabric.append("t", &[rec(i, i as i64, i as i64 + 1, 1.0)], 0);
+    }
+    // Hold the slow region's cursor lock (a region stuck mid-merge) and
+    // apply the fast region from under it. The pre-fabric LogTailer held
+    // ONE mutex across every region's merge — this call would deadlock.
+    fabric.while_region_locked("slow", || {
+        let applied = fabric.pump_region("fast", 100);
+        assert_eq!(applied, 5, "fast region must apply while slow is blocked");
+    });
+    assert_eq!(fabric.backlog("fast"), 0);
+    assert_eq!(fabric.backlog("slow"), 5, "blocked region untouched");
+    // Nothing is reclaimable while the slow region still needs the log.
+    assert_eq!(fabric.truncate_applied(), 0);
+    fabric.pump(100);
+    assert_eq!(fabric.backlog("slow"), 0);
+    assert_eq!(fabric.truncate_applied(), 5);
+}
+
+#[test]
+fn read_your_writes_never_returns_pre_token_state() {
+    let mut rng = Rng::new(29);
+    let topology = Arc::new(GeoTopology::default_four_region());
+    let home = Arc::new(OnlineStore::new(4));
+    let eu = Arc::new(OnlineStore::new(4));
+    let fabric =
+        ReplicationFabric::new(4, vec![("westeurope".into(), eu, 15)], None);
+    let access = CrossRegionAccess {
+        topology,
+        home_region: "eastus".into(),
+        home_store: home.clone(),
+        fabric: Some(fabric.clone()),
+        geo_fenced: false,
+    };
+    let mut now = 1_000i64;
+    for i in 0..200i64 {
+        let e = rng.below(10);
+        // Monotone per-write versions: the freshest state for entity `e`
+        // is always the most recent write.
+        let r = rec(e, i, i + 1, i as f32);
+        home.merge("t", &[r.clone()], now);
+        let token = fabric.append("t", &[r], now);
+        // Arbitrary pump interleavings: sometimes nothing, sometimes a
+        // partial prefix, sometimes fully caught up.
+        if rng.below(3) == 0 {
+            fabric.pump(now + rng.range(0, 40));
+        }
+        let out = access
+            .lookup("westeurope", "t", e, now, &ReadConsistency::ReadYourWrites(token))
+            .unwrap();
+        let got = out.record.expect("a session always sees its own write");
+        assert!(
+            got.version() >= (i, i + 1),
+            "pre-token state served at step {i}: got {:?} via {:?}",
+            got.version(),
+            out.mechanism
+        );
+        now += rng.range(0, 5);
+    }
+}
+
+#[test]
+fn consistency_policies_on_the_public_batched_path() {
+    let fs = FeatureStore::open(
+        Config::default_geo(),
+        OpenOptions { with_engine: false, geo_replication: true, ..Default::default() },
+    )
+    .unwrap();
+    fs.create_store("fs-geo").unwrap();
+    fs.create_entity(EntitySpec::new("customer", 1, &["customer_id"])).unwrap();
+    let alice = Principal("alice".into());
+    fs.rbac.grant(Grant {
+        principal: alice.clone(),
+        store: "fs-geo".into(),
+        role: Role::Admin,
+        workspace: "ws".into(),
+        workspace_region: "eastus".into(),
+    });
+    let spec = FeatureSetSpec::rolling(
+        "txn",
+        1,
+        "customer",
+        SourceSpec::synthetic(5),
+        Granularity(HOUR),
+        4,
+    );
+    let table = fs
+        .register_feature_set(spec, Arc::new(SyntheticSource::new(5, 30)), 0)
+        .unwrap();
+    fs.clock.set(2 * DAY);
+    fs.materialize_tick(&table).unwrap();
+    let token = fs.session_token().expect("replication on");
+    let keys = ["cust_00000", "cust_00001", "cust_00002"];
+
+    // Writes are acked but not yet replicated (lag 30 s): every policy
+    // that needs fresh data must cross; eventual reads may go stale.
+    fs.clock.advance(10);
+    let strong = fs
+        .get_online_many_with(&alice, &table, &keys, "westeurope", &ReadConsistency::Strong)
+        .unwrap();
+    assert!(strong.iter().all(|o| o.mechanism == AccessMechanism::CrossRegion));
+    assert!(strong.iter().all(|o| o.record.is_some()));
+    assert!(strong.iter().all(|o| o.staleness_secs == 0));
+
+    let eventual = fs
+        .get_online_many(&alice, &table, &keys, "westeurope")
+        .unwrap();
+    assert!(eventual.iter().all(|o| o.mechanism == AccessMechanism::Replica));
+    assert!(
+        eventual.iter().all(|o| o.record.is_none()),
+        "replica has not applied yet: eventual reads see the stale (empty) copy"
+    );
+
+    // Bounded staleness past its bound: fall back to cross-region
+    // rather than serve data 10 s staler than the caller allows.
+    let bounded = fs
+        .get_online_many_with(
+            &alice,
+            &table,
+            &keys,
+            "westeurope",
+            &ReadConsistency::BoundedStaleness(5),
+        )
+        .unwrap();
+    assert!(bounded.iter().all(|o| o.mechanism == AccessMechanism::CrossRegion));
+    assert!(bounded.iter().all(|o| o.record.is_some()));
+
+    // Read-your-writes with an uncovered token: same fallback.
+    let ryw = fs
+        .get_online_many_with(
+            &alice,
+            &table,
+            &keys,
+            "westeurope",
+            &ReadConsistency::ReadYourWrites(token.clone()),
+        )
+        .unwrap();
+    assert!(ryw.iter().all(|o| o.mechanism == AccessMechanism::CrossRegion));
+    assert!(ryw.iter().all(|o| o.record.is_some()));
+
+    // The replica catches up: every policy now serves locally with the
+    // same data the home would return.
+    fs.clock.advance(600);
+    fs.pump_replication();
+    for policy in [
+        ReadConsistency::BoundedStaleness(5),
+        ReadConsistency::ReadYourWrites(token),
+    ] {
+        let out = fs
+            .get_online_many_with(&alice, &table, &keys, "westeurope", &policy)
+            .unwrap();
+        assert!(out.iter().all(|o| o.mechanism == AccessMechanism::Replica), "{policy:?}");
+        for (o, s) in out.iter().zip(&strong) {
+            assert_eq!(
+                o.record.as_ref().map(|r| r.unique_key()),
+                s.record.as_ref().map(|r| r.unique_key()),
+                "replica ≡ home once covered"
+            );
+        }
+    }
+}
+
+#[test]
+fn failover_under_replication_loses_no_acked_write() {
+    let topology = Arc::new(GeoTopology::default_four_region());
+    let fm = FailoverManager::new(topology.clone());
+    let metrics = Arc::new(MetricsRegistry::new());
+
+    let offline = Arc::new(OfflineStore::new());
+    let home = Arc::new(OnlineStore::new(4));
+    let westus = Arc::new(OnlineStore::new(4));
+    let westeurope = Arc::new(OnlineStore::new(4));
+    let fabric = ReplicationFabric::new(
+        4,
+        vec![("westus".into(), westus.clone(), 5), ("westeurope".into(), westeurope.clone(), 5)],
+        Some(metrics.clone()),
+    );
+
+    let sched = |at: i64| {
+        Scheduler::new(Arc::new(ThreadPool::new(2)), Clock::fixed(at), RetryPolicy::default())
+    };
+    let dir = TempDir::new("fo-stress");
+    let table = "t:1";
+    let mut acked: Vec<FeatureRecord> = Vec::new();
+    let mut cp = None;
+    for i in 0..40i64 {
+        let batch =
+            vec![rec(i as u64 % 7, i * 10, i * 10 + 1, i as f32), rec((i as u64 + 3) % 7, i * 10 + 2, i * 10 + 3, -i as f32)];
+        offline.merge(table, &batch);
+        home.merge(table, &batch, i);
+        fabric.append(table, &batch, i);
+        acked.extend(batch);
+        if i == 15 {
+            // The periodic HA checkpoint — 24 batches post-date it.
+            cp = Some(
+                fm.checkpoint("eastus", &sched(15), &offline, dir.path().to_path_buf(), 15)
+                    .unwrap(),
+            );
+        }
+    }
+    // Replicas apply a partial prefix, then the home dies mid-backlog.
+    fabric.pump(20);
+    assert!(fabric.backlog("westus") > 0, "must fail over mid-backlog");
+    topology.set_down("eastus", true);
+
+    let clock = Clock::fixed(100);
+    let promoted = fm
+        .failover_with(
+            cp.as_ref().unwrap(),
+            &sched(100),
+            4,
+            100,
+            Some(&fabric),
+            clock.clone(),
+            Some(metrics.clone()),
+        )
+        .unwrap();
+    assert_eq!(promoted.region, "westus");
+
+    // Zero lost acked writes: the promoted online store holds the max
+    // version per entity across ALL acked batches (checkpointed or
+    // not, replicated or not), and the restored offline store holds
+    // every acked row.
+    let mut expect: HashMap<u64, FeatureRecord> = HashMap::new();
+    for r in &acked {
+        let slot = expect.entry(r.entity).or_insert_with(|| r.clone());
+        if r.version() > slot.version() {
+            *slot = r.clone();
+        }
+    }
+    for (e, want) in &expect {
+        let got = promoted
+            .online
+            .get(table, *e, 1_000)
+            .unwrap_or_else(|| panic!("entity {e} lost in failover"));
+        assert_eq!(got.version(), want.version(), "entity {e}");
+        assert_eq!(got.values, want.values, "entity {e}");
+    }
+    assert_eq!(promoted.offline.row_count(table), acked.len() as u64, "offline acked rows");
+
+    // The promoted region is a first-class home: its fabric replicates
+    // onward to the survivor and the staleness gauges drain to zero.
+    let nf = promoted.fabric.as_ref().unwrap();
+    assert_eq!(nf.regions(), vec!["westeurope"]);
+    nf.append(table, &[rec(99, 1_000, 1_001, 42.0)], clock.now());
+    clock.advance(60); // past the survivor's lag
+    let deadline = std::time::Instant::now() + Duration::from_secs(10);
+    while (nf.backlog("westeurope") > 0
+        || metrics.gauge("repl_lag_secs_westeurope") != Some(0.0))
+        && std::time::Instant::now() < deadline
+    {
+        std::thread::sleep(Duration::from_millis(2));
+    }
+    assert_eq!(nf.backlog("westeurope"), 0);
+    assert_eq!(metrics.gauge("repl_lag_secs_westeurope"), Some(0.0));
+    assert_eq!(metrics.gauge("repl_backlog_westeurope"), Some(0.0));
+    assert_eq!(westeurope.get(table, 99, 2_000).unwrap().values[0], 42.0);
+    // The retained log was forwarded through the new fabric, so the
+    // surviving replica (whose old cursor trailed mid-backlog) has also
+    // converged on every acked write — not just the new home.
+    for (e, want) in &expect {
+        let got = westeurope
+            .get(table, *e, 2_000)
+            .unwrap_or_else(|| panic!("survivor missing entity {e}"));
+        assert_eq!(got.version(), want.version(), "survivor entity {e}");
+    }
+}

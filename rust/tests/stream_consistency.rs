@@ -247,7 +247,7 @@ fn standalone_deps(clock: Clock) -> StreamDeps {
         metrics: Arc::new(MetricsRegistry::new()),
         clock,
         pool: None,
-        replicas: Vec::new(),
+        fabric: None,
         checkpoints: None,
     }
 }
@@ -314,7 +314,7 @@ fn crash_resume_from_checkpoint_is_exactly_once() {
         metrics: Arc::new(MetricsRegistry::new()),
         clock: clock.clone(),
         pool: None,
-        replicas: Vec::new(),
+        fabric: None,
         checkpoints: None,
     };
     let engine2 = StreamIngestor::with_log(spec(3), cfg, deps2, log.clone()).unwrap();
