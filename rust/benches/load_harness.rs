@@ -1,0 +1,58 @@
+//! Experiment E-LOAD: production load harness over the fully-wired store
+//! (geo-replication + compaction drivers live, streaming engine feeding
+//! the hourly table) with admission control sized so the final phase
+//! saturates the tenant budget.
+//!
+//! Three phases — steady, write-heavy, read-overload — each reporting
+//! per-op-class p50/p99/p999, throughput, and shed rate. The run writes
+//! `BENCH_load.json` (override the path with `GEOFS_BENCH_OUT`) so the
+//! trajectory is diffable across PRs; CI uploads it as an artifact.
+//!
+//! Run asserts (the paper's overload claim, checked, not eyeballed):
+//! * the pre-overload phases shed nothing — their demand fits inside
+//!   the admission burst by construction;
+//! * the read-overload phase (≥ 2× saturation) sheds typed
+//!   `Overloaded` requests while the p99 of *served* reads stays
+//!   bounded — shedding keeps the goodput fast instead of letting the
+//!   queue absorb the spike.
+
+use std::path::PathBuf;
+
+use geofs::load::{LoadConfig, LoadHarness};
+
+fn main() {
+    let fast = std::env::var("GEOFS_BENCH_FAST").is_ok();
+    let cfg = LoadConfig::standard(fast);
+    let seed = cfg.seed;
+    let harness = LoadHarness::setup(cfg).expect("load harness setup");
+    let report = harness.run().expect("load harness run");
+    report.print();
+
+    // Overload contract.
+    for name in ["steady", "write-heavy"] {
+        let phase = report.phase(name);
+        for (class, stats) in &phase.classes {
+            assert_eq!(stats.shed, 0, "phase '{name}' class '{class}' shed inside the budget");
+        }
+    }
+    let overload = report.phase("read-overload").class("read");
+    assert!(overload.shed > 0, "read-overload phase must shed (offered ≥2× the admission burst)");
+    let served_p99_ns = overload.hist.quantile(0.99);
+    assert!(
+        overload.served == 0 || served_p99_ns < 1_000_000_000,
+        "served-read p99 unbounded under overload: {served_p99_ns}ns"
+    );
+    println!(
+        "\noverload: shed {} / {} reads ({:.1}%), served-read p99 {}",
+        overload.shed,
+        overload.issued,
+        overload.shed_rate() * 100.0,
+        geofs::benchkit::fmt_ns(served_p99_ns as f64),
+    );
+
+    let out = std::env::var("GEOFS_BENCH_OUT")
+        .map(PathBuf::from)
+        .unwrap_or_else(|_| PathBuf::from("BENCH_load.json"));
+    report.write_json(&out).expect("write BENCH_load.json");
+    println!("wrote {} (seed {seed})", out.display());
+}

@@ -60,6 +60,9 @@ impl Measurement {
     pub fn p99_ns(&self) -> u64 {
         self.hist.quantile(0.99)
     }
+    pub fn p999_ns(&self) -> u64 {
+        self.hist.quantile(0.999)
+    }
     /// Units per second at mean latency.
     pub fn throughput(&self) -> f64 {
         if self.mean_ns() == 0.0 {

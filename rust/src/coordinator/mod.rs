@@ -54,6 +54,11 @@ pub struct OpenOptions {
     pub geo_fenced: bool,
     /// Fault injection rates for the dual-store merger (tests/benches).
     pub fault_rates: Option<(u64, f64, f64)>,
+    /// Admission policy for the serving front end. `None` = fully open
+    /// (no gate constructed); `Some` wires an
+    /// [`crate::serving::AdmissionController`] in front of every
+    /// tenant-attributed online read.
+    pub admission: Option<crate::serving::AdmissionConfig>,
 }
 
 impl Default for OpenOptions {
@@ -64,6 +69,7 @@ impl Default for OpenOptions {
             geo_replication: false,
             geo_fenced: false,
             fault_rates: None,
+            admission: None,
         }
     }
 }
@@ -90,6 +96,10 @@ pub struct FeatureStore {
     pub online: Arc<OnlineStore>,
     pub topology: Arc<GeoTopology>,
     pub serving: Arc<OnlineServing>,
+    /// The serving admission gate, when configured via
+    /// [`OpenOptions::admission`] (also reachable through
+    /// `serving.admission`; kept here for operator rate overrides).
+    pub admission: Option<Arc<crate::serving::AdmissionController>>,
     /// The replication fabric: one durable record log every home merge
     /// appends to, delivered to replica regions by the background
     /// driver. `None` when geo-replication is off.
@@ -188,10 +198,20 @@ impl FeatureStore {
             Some(metrics.clone()),
         );
         let routes = Arc::new(RouteTable::new());
-        let serving = Arc::new(OnlineServing::new(
-            ServingRouter::new(routes.clone()),
-            metrics.clone(),
-        ));
+        let admission = opts
+            .admission
+            .as_ref()
+            .map(|cfg| {
+                crate::serving::AdmissionController::new(cfg.clone(), Some(metrics.clone()))
+            });
+        let serving = Arc::new(match &admission {
+            Some(ctrl) => OnlineServing::with_admission(
+                ServingRouter::new(routes.clone()),
+                metrics.clone(),
+                ctrl.clone(),
+            ),
+            None => OnlineServing::new(ServingRouter::new(routes.clone()), metrics.clone()),
+        });
         Ok(Arc::new(FeatureStore {
             materializer: Arc::new(Materializer::new(engine, interner.clone())),
             pool,
@@ -208,6 +228,7 @@ impl FeatureStore {
             online,
             topology,
             serving,
+            admission,
             fabric,
             merger,
             checkpoints: Arc::new(CheckpointStore::new()),
@@ -431,9 +452,13 @@ impl FeatureStore {
             .ok_or_else(|| FsError::NotFound(format!("streaming engine for '{table}'")))
     }
 
-    /// Append events to a table's stream.
+    /// Append events to a table's stream, through the engine's admission
+    /// bound (`StreamConfig::max_backlog_events`): sheds with a typed
+    /// `Overloaded` error rather than growing the backlog without bound.
+    /// The default bound is unlimited, so nothing sheds until a stream
+    /// is configured with one.
     pub fn stream_ingest(&self, table: &str, events: &[StreamEvent]) -> Result<u64> {
-        Ok(self.stream(table)?.ingest(events))
+        self.stream(table)?.try_ingest(events)
     }
 
     /// Process everything currently in the table's log.
@@ -668,8 +693,17 @@ impl FeatureStore {
         }
         for (table, items) in groups {
             let entities: Vec<EntityId> = items.iter().map(|&(_, e)| e).collect();
-            let batch =
-                self.serving.lookup_batch(table, &entities, consumer_region, now, consistency)?;
+            // Tenant = the requesting principal: admission (when
+            // configured) charges each table group against the caller's
+            // and the table's budgets, shedding typed `Overloaded`.
+            let batch = self.serving.lookup_batch_admitted(
+                &principal.0,
+                table,
+                &entities,
+                consumer_region,
+                now,
+                consistency,
+            )?;
             for (&(i, _), record) in items.iter().zip(batch.records) {
                 out[i] = RoutedLookup {
                     record,
@@ -748,13 +782,21 @@ impl FeatureStore {
     /// Persist offline segments + scheduler coverage for failover.
     pub fn checkpoint(&self, dir: PathBuf) -> Result<crate::geo::failover::RegionCheckpoint> {
         let fm = crate::geo::failover::FailoverManager::new(self.topology.clone());
-        fm.checkpoint(
+        let cp = fm.checkpoint(
             self.config.home_region(),
             &self.scheduler,
             &self.offline,
             dir,
             self.clock.now(),
-        )
+        )?;
+        // Only after the segments are durable: advance the fabric's
+        // truncation floor. Entries newer than this checkpoint stay in
+        // the log even once applied everywhere — they are what failover
+        // replays into a store restored from these segments.
+        if let Some(f) = &self.fabric {
+            f.record_checkpoint();
+        }
+        Ok(cp)
     }
 
     /// Current freshness of a table.

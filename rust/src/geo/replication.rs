@@ -97,6 +97,12 @@ pub struct ReplicationFabric {
     regions: Vec<RegionState>,
     wake: Arc<Wake>,
     metrics: Option<Arc<MetricsRegistry>>,
+    /// Per-partition log positions of the last recorded offline
+    /// checkpoint (`None` until one is taken). Truncation never reclaims
+    /// at/past this floor: entries newer than the checkpoint are absent
+    /// from the persisted segments and are exactly what failover replays
+    /// into a restored store.
+    checkpoint_floor: Mutex<Option<Vec<u64>>>,
 }
 
 /// Bounded tail chunk: a region waiting out a long lag must not re-clone
@@ -129,6 +135,7 @@ impl ReplicationFabric {
             regions,
             wake: Arc::new(Wake::default()),
             metrics,
+            checkpoint_floor: Mutex::new(None),
         })
     }
 
@@ -295,19 +302,47 @@ impl ReplicationFabric {
         applied
     }
 
+    /// Record the current log high-water marks as the checkpoint floor.
+    /// Called after an offline checkpoint persists: everything below the
+    /// returned positions is durable in the checkpoint segments, so it
+    /// is safe to reclaim once every region applied it; everything at or
+    /// past them must stay replayable for failover. Re-recording after a
+    /// newer checkpoint advances the floor.
+    pub fn record_checkpoint(&self) -> Vec<u64> {
+        let floor: Vec<u64> =
+            (0..self.log.partitions()).map(|p| self.log.high_water(p)).collect();
+        *self.checkpoint_floor.lock().unwrap() = Some(floor.clone());
+        floor
+    }
+
+    /// The last recorded checkpoint floor, if any (test/metrics hook).
+    pub fn checkpoint_floor(&self) -> Option<Vec<u64>> {
+        self.checkpoint_floor.lock().unwrap().clone()
+    }
+
     /// Truncate the log below the minimum applied cursor across all
-    /// regions (every surviving entry is still needed by someone).
-    /// Returns entries reclaimed. With no replica regions nothing is
-    /// reclaimed — the log is then purely the failover-replay history.
+    /// regions (every surviving entry is still needed by someone),
+    /// additionally gated on the last recorded checkpoint floor: an
+    /// entry applied everywhere but newer than the checkpoint is still
+    /// the only durable copy failover can replay into a restored offline
+    /// store, so it survives. With no checkpoint recorded the min-cursor
+    /// rule stands alone — a store that never checkpointed has no
+    /// restore target to protect. Returns entries reclaimed. With no
+    /// replica regions nothing is reclaimed — the log is then purely the
+    /// failover-replay history.
     pub fn truncate_applied(&self) -> u64 {
         if self.regions.is_empty() {
             return 0;
         }
         let per_region: Vec<Vec<u64>> =
             self.regions.iter().map(|r| r.cursors.lock().unwrap().clone()).collect();
+        let floor = self.checkpoint_floor.lock().unwrap().clone();
         let mut reclaimed = 0;
         for p in 0..self.log.partitions() {
-            let min = per_region.iter().map(|c| c[p]).min().unwrap_or(0);
+            let mut min = per_region.iter().map(|c| c[p]).min().unwrap_or(0);
+            if let Some(fl) = &floor {
+                min = min.min(fl[p]);
+            }
             reclaimed += self.log.truncate_below(p, min);
         }
         reclaimed
@@ -562,6 +597,30 @@ mod tests {
         }
         assert_eq!(f.log_len(), 0, "driver must truncate below the min applied cursor");
         drop(driver);
+    }
+
+    #[test]
+    fn checkpoint_floor_gates_truncation() {
+        let (f, _store) = fabric(0);
+        f.append("t", &[rec(1, 1, 2, 1.0)], 100);
+        f.pump(100);
+        // Checkpoint here: everything so far is durable offline.
+        let floor = f.record_checkpoint();
+        assert_eq!(f.checkpoint_floor(), Some(floor));
+        // A post-checkpoint entry applies everywhere...
+        f.append("t", &[rec(2, 1, 2, 2.0)], 101);
+        f.pump(101);
+        assert_eq!(f.backlog("westeurope"), 0);
+        // ...but only the pre-checkpoint prefix is reclaimable: the new
+        // entry exists nowhere durable except this log.
+        assert_eq!(f.truncate_applied(), 1);
+        assert_eq!(f.log_len(), 1, "applied-everywhere entry newer than checkpoint survives");
+        // A fresh checkpoint advances the floor and releases it.
+        f.record_checkpoint();
+        assert_eq!(f.truncate_applied(), 1);
+        assert_eq!(f.log_len(), 0);
+        // Nothing further to reclaim.
+        assert_eq!(f.truncate_applied(), 0);
     }
 
     #[test]

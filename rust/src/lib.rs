@@ -32,6 +32,7 @@ pub mod geo;
 pub mod sim;
 pub mod governance;
 pub mod lineage;
+pub mod load;
 pub mod materialize;
 pub mod monitor;
 pub mod serving;

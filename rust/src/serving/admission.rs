@@ -1,0 +1,377 @@
+//! Admission control for the serving front end (§2.1 "Enterprise grade
+//! SLAs"): graceful degradation instead of queueing without bound.
+//!
+//! A managed store's online path must keep serving its p99 for admitted
+//! traffic even when one tenant (or one hot table) offers more load than
+//! the store can absorb. The [`AdmissionController`] sits in front of
+//! every routed read:
+//!
+//! * **Per-tenant and per-table token buckets** — sustained rate plus a
+//!   burst allowance, refilled continuously from a microsecond
+//!   timestamp. A request costs its key count, so batch size and request
+//!   count are interchangeable against the same budget.
+//! * **Queue-depth-aware shedding** — a bounded in-flight permit count.
+//!   When the serving queue is full the request is shed *immediately*
+//!   with a typed [`FsError::Overloaded`] rather than parked; latency of
+//!   admitted requests stays bounded because nothing waits behind an
+//!   unbounded backlog.
+//! * **RAII permits** — an admitted request holds a [`Permit`] for its
+//!   lifetime; dropping it (normally or on panic/error) releases the
+//!   in-flight slot, so shedding recovers as soon as load does.
+//!
+//! Timestamps are passed in explicitly (`now_us`, microseconds on the
+//! [`super::wall_us`] timebase) rather than read inside, which makes the
+//! rate+burst bound a deterministic property the admission tests can pin
+//! without sleeping.
+//!
+//! `Overloaded` is intentionally **not** classified transient: the whole
+//! point of shedding is to push work back to the caller's backoff loop,
+//! not into an inline retry storm (see `types/error.rs`).
+
+use std::collections::HashMap;
+use std::sync::atomic::{AtomicU64, AtomicUsize, Ordering};
+use std::sync::{Arc, Mutex};
+
+use crate::monitor::metrics::{MetricKind, MetricsRegistry};
+use crate::types::{FsError, Result};
+
+/// Continuous-refill token bucket: `rate_per_sec` sustained, `burst`
+/// capacity. A non-finite rate admits everything (the "unlimited"
+/// default), so enabling admission control only constrains the tenants
+/// and tables an operator actually bounds.
+#[derive(Debug)]
+pub struct TokenBucket {
+    rate_per_sec: f64,
+    burst: f64,
+    /// (available tokens, last refill timestamp µs).
+    state: Mutex<(f64, u64)>,
+}
+
+impl TokenBucket {
+    pub fn new(rate_per_sec: f64, burst: f64) -> TokenBucket {
+        TokenBucket { rate_per_sec, burst: burst.max(0.0), state: Mutex::new((burst.max(0.0), 0)) }
+    }
+
+    /// Take `cost` tokens at `now_us` if available. Never blocks; a
+    /// shortfall is a shed, not a wait.
+    pub fn try_acquire(&self, cost: f64, now_us: u64) -> bool {
+        if !self.rate_per_sec.is_finite() {
+            return true;
+        }
+        let mut st = self.state.lock().unwrap();
+        let (ref mut tokens, ref mut last_us) = *st;
+        if now_us > *last_us {
+            let dt = (now_us - *last_us) as f64 / 1e6;
+            *tokens = (*tokens + dt * self.rate_per_sec).min(self.burst);
+            *last_us = now_us;
+        }
+        if *tokens >= cost {
+            *tokens -= cost;
+            true
+        } else {
+            false
+        }
+    }
+
+    /// Currently available tokens (test hook; refills to `now_us` first).
+    pub fn available(&self, now_us: u64) -> f64 {
+        let mut st = self.state.lock().unwrap();
+        let (ref mut tokens, ref mut last_us) = *st;
+        if self.rate_per_sec.is_finite() && now_us > *last_us {
+            let dt = (now_us - *last_us) as f64 / 1e6;
+            *tokens = (*tokens + dt * self.rate_per_sec).min(self.burst);
+            *last_us = now_us;
+        }
+        *tokens
+    }
+}
+
+/// Admission policy. Defaults are fully open (infinite rates, unbounded
+/// queue): wiring the controller in changes nothing until an operator
+/// sets a bound.
+#[derive(Debug, Clone)]
+pub struct AdmissionConfig {
+    /// Sustained per-tenant budget, in key-lookups per second.
+    pub tenant_rate: f64,
+    /// Per-tenant burst capacity (bucket size), in key-lookups.
+    pub tenant_burst: f64,
+    /// Sustained per-table budget, in key-lookups per second.
+    pub table_rate: f64,
+    /// Per-table burst capacity, in key-lookups.
+    pub table_burst: f64,
+    /// Maximum requests holding permits at once; above this the serving
+    /// queue sheds instead of deepening.
+    pub max_inflight: usize,
+}
+
+impl Default for AdmissionConfig {
+    fn default() -> Self {
+        AdmissionConfig {
+            tenant_rate: f64::INFINITY,
+            tenant_burst: f64::INFINITY,
+            table_rate: f64::INFINITY,
+            table_burst: f64::INFINITY,
+            max_inflight: usize::MAX,
+        }
+    }
+}
+
+/// RAII in-flight slot: held for the lifetime of an admitted request,
+/// released (even on panic) when dropped.
+pub struct Permit {
+    inflight: Arc<AtomicUsize>,
+    metrics: Option<Arc<MetricsRegistry>>,
+}
+
+impl Drop for Permit {
+    fn drop(&mut self) {
+        let now = self.inflight.fetch_sub(1, Ordering::AcqRel) - 1;
+        if let Some(m) = &self.metrics {
+            m.set_gauge(MetricKind::System, "admission_inflight", now as f64);
+        }
+    }
+}
+
+/// The serving-front-end admission gate. Cheap to share (`Arc`) and to
+/// consult: one atomic for queue depth, one small mutex per bucket.
+pub struct AdmissionController {
+    cfg: AdmissionConfig,
+    tenants: Mutex<HashMap<String, Arc<TokenBucket>>>,
+    tables: Mutex<HashMap<String, Arc<TokenBucket>>>,
+    inflight: Arc<AtomicUsize>,
+    admitted: AtomicU64,
+    shed: AtomicU64,
+    metrics: Option<Arc<MetricsRegistry>>,
+}
+
+impl AdmissionController {
+    pub fn new(cfg: AdmissionConfig, metrics: Option<Arc<MetricsRegistry>>) -> Arc<Self> {
+        Arc::new(AdmissionController {
+            cfg,
+            tenants: Mutex::new(HashMap::new()),
+            tables: Mutex::new(HashMap::new()),
+            inflight: Arc::new(AtomicUsize::new(0)),
+            admitted: AtomicU64::new(0),
+            shed: AtomicU64::new(0),
+            metrics,
+        })
+    }
+
+    /// Override one tenant's budget (multi-tenant isolation: a noisy
+    /// neighbour gets a tighter bucket without touching anyone else).
+    pub fn set_tenant_rate(&self, tenant: &str, rate_per_sec: f64, burst: f64) {
+        self.tenants
+            .lock()
+            .unwrap()
+            .insert(tenant.to_string(), Arc::new(TokenBucket::new(rate_per_sec, burst)));
+    }
+
+    /// Override one table's budget.
+    pub fn set_table_rate(&self, table: &str, rate_per_sec: f64, burst: f64) {
+        self.tables
+            .lock()
+            .unwrap()
+            .insert(table.to_string(), Arc::new(TokenBucket::new(rate_per_sec, burst)));
+    }
+
+    fn bucket(
+        map: &Mutex<HashMap<String, Arc<TokenBucket>>>,
+        key: &str,
+        rate: f64,
+        burst: f64,
+    ) -> Arc<TokenBucket> {
+        let mut map = map.lock().unwrap();
+        map.entry(key.to_string())
+            .or_insert_with(|| Arc::new(TokenBucket::new(rate, burst)))
+            .clone()
+    }
+
+    /// Admit or shed one request of `cost` key-lookups. Checks queue
+    /// depth first (an over-deep queue sheds regardless of budget), then
+    /// the tenant bucket, then the table bucket. On admission the
+    /// returned [`Permit`] holds the in-flight slot; tokens already
+    /// taken from the tenant bucket are *not* refunded if the table
+    /// bucket then sheds — the work of reaching the table gate was real.
+    pub fn admit(&self, tenant: &str, table: &str, cost: f64, now_us: u64) -> Result<Permit> {
+        // Reserve the slot optimistically; back out on shed.
+        let depth = self.inflight.fetch_add(1, Ordering::AcqRel);
+        if depth >= self.cfg.max_inflight {
+            self.inflight.fetch_sub(1, Ordering::AcqRel);
+            return Err(self.shed(
+                "serving queue",
+                format!("inflight {} >= {}", depth, self.cfg.max_inflight),
+            ));
+        }
+        let tb = Self::bucket(&self.tenants, tenant, self.cfg.tenant_rate, self.cfg.tenant_burst);
+        if !tb.try_acquire(cost, now_us) {
+            self.inflight.fetch_sub(1, Ordering::AcqRel);
+            return Err(self.shed(
+                &format!("tenant '{tenant}'"),
+                format!("rate budget exhausted (cost {cost})"),
+            ));
+        }
+        let tbl = Self::bucket(&self.tables, table, self.cfg.table_rate, self.cfg.table_burst);
+        if !tbl.try_acquire(cost, now_us) {
+            self.inflight.fetch_sub(1, Ordering::AcqRel);
+            return Err(self.shed(
+                &format!("table '{table}'"),
+                format!("rate budget exhausted (cost {cost})"),
+            ));
+        }
+        self.admitted.fetch_add(1, Ordering::Relaxed);
+        if let Some(m) = &self.metrics {
+            m.inc(MetricKind::System, "admission_admitted", 1);
+            m.set_gauge(MetricKind::System, "admission_inflight", (depth + 1) as f64);
+        }
+        Ok(Permit { inflight: self.inflight.clone(), metrics: self.metrics.clone() })
+    }
+
+    fn shed(&self, resource: &str, reason: String) -> FsError {
+        self.shed.fetch_add(1, Ordering::Relaxed);
+        if let Some(m) = &self.metrics {
+            m.inc(MetricKind::System, "admission_shed", 1);
+        }
+        FsError::Overloaded { resource: resource.to_string(), reason }
+    }
+
+    /// Requests admitted since construction.
+    pub fn admitted(&self) -> u64 {
+        self.admitted.load(Ordering::Relaxed)
+    }
+
+    /// Requests shed since construction.
+    pub fn shed_count(&self) -> u64 {
+        self.shed.load(Ordering::Relaxed)
+    }
+
+    /// Requests currently holding permits.
+    pub fn inflight(&self) -> usize {
+        self.inflight.load(Ordering::Acquire)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn bucket_burst_then_refill() {
+        let b = TokenBucket::new(10.0, 5.0); // 10/s, burst 5
+        for _ in 0..5 {
+            assert!(b.try_acquire(1.0, 0));
+        }
+        assert!(!b.try_acquire(1.0, 0), "burst exhausted");
+        // 300ms refills 3 tokens.
+        assert!(b.try_acquire(3.0, 300_000));
+        assert!(!b.try_acquire(1.0, 300_000));
+        // Refill caps at burst no matter how long we wait.
+        assert!((b.available(100_000_000) - 5.0).abs() < 1e-9);
+    }
+
+    #[test]
+    fn bucket_infinite_rate_always_admits() {
+        let b = TokenBucket::new(f64::INFINITY, 0.0);
+        for _ in 0..1000 {
+            assert!(b.try_acquire(1e9, 0));
+        }
+    }
+
+    #[test]
+    fn bucket_ignores_time_regression() {
+        let b = TokenBucket::new(10.0, 2.0);
+        assert!(b.try_acquire(2.0, 1_000_000));
+        // An earlier timestamp must not mint tokens.
+        assert!(!b.try_acquire(1.0, 0));
+    }
+
+    #[test]
+    fn default_config_is_fully_open() {
+        let ctrl = AdmissionController::new(AdmissionConfig::default(), None);
+        for _ in 0..100 {
+            let p = ctrl.admit("anyone", "any_table", 1e6, 0).expect("open by default");
+            drop(p);
+        }
+        assert_eq!(ctrl.admitted(), 100);
+        assert_eq!(ctrl.shed_count(), 0);
+    }
+
+    #[test]
+    fn queue_depth_sheds_and_recovers() {
+        let cfg = AdmissionConfig { max_inflight: 2, ..Default::default() };
+        let ctrl = AdmissionController::new(cfg, None);
+        let p1 = ctrl.admit("a", "t", 1.0, 0).unwrap();
+        let _p2 = ctrl.admit("a", "t", 1.0, 0).unwrap();
+        assert_eq!(ctrl.inflight(), 2);
+        let err = ctrl.admit("a", "t", 1.0, 0).unwrap_err();
+        match err {
+            FsError::Overloaded { ref resource, .. } => {
+                assert_eq!(resource, "serving queue")
+            }
+            other => panic!("expected Overloaded, got {other}"),
+        }
+        drop(p1);
+        assert_eq!(ctrl.inflight(), 1);
+        let _p3 = ctrl.admit("a", "t", 1.0, 0).expect("slot freed by drop");
+    }
+
+    #[test]
+    fn tenant_isolation() {
+        let cfg = AdmissionConfig {
+            tenant_rate: 0.0,
+            tenant_burst: 3.0,
+            ..Default::default()
+        };
+        let ctrl = AdmissionController::new(cfg, None);
+        for _ in 0..3 {
+            ctrl.admit("greedy", "t", 1.0, 0).unwrap();
+        }
+        assert!(matches!(
+            ctrl.admit("greedy", "t", 1.0, 0),
+            Err(FsError::Overloaded { .. })
+        ));
+        // A different tenant's bucket is untouched.
+        ctrl.admit("polite", "t", 1.0, 0).expect("separate tenant budget");
+    }
+
+    #[test]
+    fn table_bucket_sheds_after_tenant_admits() {
+        let cfg = AdmissionConfig {
+            table_rate: 0.0,
+            table_burst: 2.0,
+            ..Default::default()
+        };
+        let ctrl = AdmissionController::new(cfg, None);
+        ctrl.admit("a", "hot", 1.0, 0).unwrap();
+        ctrl.admit("b", "hot", 1.0, 0).unwrap();
+        let err = ctrl.admit("c", "hot", 1.0, 0).unwrap_err();
+        assert!(err.to_string().contains("hot"), "{err}");
+        ctrl.admit("c", "cold", 1.0, 0).expect("separate table budget");
+        assert_eq!(ctrl.admitted(), 3);
+        assert_eq!(ctrl.shed_count(), 1);
+    }
+
+    #[test]
+    fn per_tenant_override() {
+        let ctrl = AdmissionController::new(AdmissionConfig::default(), None);
+        ctrl.set_tenant_rate("noisy", 0.0, 1.0);
+        ctrl.admit("noisy", "t", 1.0, 0).unwrap();
+        assert!(ctrl.admit("noisy", "t", 1.0, 0).is_err());
+        ctrl.admit("other", "t", 100.0, 0).expect("default stays open");
+    }
+
+    #[test]
+    fn counters_and_metrics() {
+        let metrics = Arc::new(MetricsRegistry::new());
+        let cfg = AdmissionConfig { tenant_rate: 0.0, tenant_burst: 1.0, ..Default::default() };
+        let ctrl = AdmissionController::new(cfg, Some(metrics.clone()));
+        let p = ctrl.admit("a", "t", 1.0, 0).unwrap();
+        assert!(ctrl.admit("a", "t", 1.0, 0).is_err());
+        assert_eq!(ctrl.admitted(), 1);
+        assert_eq!(ctrl.shed_count(), 1);
+        assert_eq!(metrics.counter("admission_admitted"), 1);
+        assert_eq!(metrics.counter("admission_shed"), 1);
+        assert_eq!(metrics.gauge("admission_inflight"), Some(1.0));
+        drop(p);
+        assert_eq!(metrics.gauge("admission_inflight"), Some(0.0));
+    }
+}

@@ -28,7 +28,7 @@ use std::sync::{Arc, Mutex, OnceLock};
 use std::time::{Duration, Instant};
 
 use crate::online_store::OnlineStore;
-use crate::types::{EntityId, FeatureRecord, Timestamp};
+use crate::types::{EntityId, FeatureRecord, FsError, Result, Timestamp};
 use crate::util::wake::Wake;
 use crate::util::Clock;
 
@@ -154,6 +154,26 @@ impl MicroBatcher {
         });
         self.wake.ping();
         id
+    }
+
+    /// Backpressure-aware enqueue: sheds with a typed `Overloaded` error
+    /// when the queue already holds `max_pending` lookups, instead of
+    /// deepening it without bound. The bound is the caller's — different
+    /// producers on one batcher can run different depths.
+    pub fn try_push(
+        &self,
+        table: &str,
+        entity: EntityId,
+        now_us: u64,
+        max_pending: usize,
+    ) -> Result<u64> {
+        if self.pending() >= max_pending {
+            return Err(FsError::Overloaded {
+                resource: "read batcher".into(),
+                reason: format!("pending {} >= {max_pending}", self.pending()),
+            });
+        }
+        Ok(self.push(table, entity, now_us))
     }
 
     /// Spawn the push-based background flush loop. Completed lookups go
@@ -285,6 +305,28 @@ impl WriteBatcher {
         };
         self.wake.ping();
         pending
+    }
+
+    /// Backpressure-aware enqueue: sheds with a typed `Overloaded` error
+    /// when `max_pending` records are already queued. Producers that
+    /// would rather wait than drop keep using [`Self::push`] and flush
+    /// inline past their bound (the streaming engine does); front ends
+    /// facing untrusted load use this and bounce the overflow.
+    pub fn try_push(
+        &self,
+        table: &str,
+        records: Arc<[FeatureRecord]>,
+        now_us: u64,
+        max_pending: usize,
+    ) -> Result<usize> {
+        let queued = self.pending();
+        if queued + records.len() > max_pending {
+            return Err(FsError::Overloaded {
+                resource: "write batcher".into(),
+                reason: format!("pending {queued} + {} > {max_pending}", records.len()),
+            });
+        }
+        Ok(self.push(table, records, now_us))
     }
 
     /// Queued records not yet merged.
@@ -564,6 +606,40 @@ mod tests {
                 direct.get("t", e, 60).map(|r| (r.version(), r.values.clone())),
             );
         }
+    }
+
+    #[test]
+    fn read_try_push_sheds_at_depth_bound() {
+        let b = MicroBatcher::new(BatcherConfig { max_batch: 100, max_wait_us: 1_000_000 });
+        let store = store_with(4);
+        for e in 0..3 {
+            b.try_push("t", e, 0, 3).unwrap();
+        }
+        match b.try_push("t", 3, 0, 3) {
+            Err(FsError::Overloaded { ref resource, .. }) => assert_eq!(resource, "read batcher"),
+            other => panic!("expected Overloaded, got {other:?}"),
+        }
+        // Flushing frees the queue; pushes admit again.
+        assert_eq!(b.flush(&store, 100, 1).len(), 3);
+        b.try_push("t", 3, 2, 3).unwrap();
+    }
+
+    #[test]
+    fn write_try_push_sheds_at_record_bound() {
+        let store = OnlineStore::new(2);
+        let b = WriteBatcher::new(BatcherConfig { max_batch: 100, max_wait_us: 0 });
+        b.try_push("t", recs(0, 4), 0, 6).unwrap();
+        // 4 queued + 3 incoming > 6 → shed, queue untouched.
+        assert!(matches!(
+            b.try_push("t", recs(4, 7), 0, 6),
+            Err(FsError::Overloaded { .. })
+        ));
+        assert_eq!(b.pending(), 4);
+        // A batch that fits the remaining headroom is admitted.
+        b.try_push("t", recs(4, 6), 0, 6).unwrap();
+        assert_eq!(b.pending(), 6);
+        b.drain(&store, 100, 1);
+        b.try_push("t", recs(6, 8), 2, 6).unwrap();
     }
 
     #[test]

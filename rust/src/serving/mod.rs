@@ -23,11 +23,24 @@
 //! snapshot/generation design). Together this makes batch size the
 //! lever that amortizes *both* store synchronization and simulated WAN
 //! cost — experiment E9 in `benches/online_retrieval.rs` measures it.
+//!
+//! # Overload behavior
+//!
+//! In front of the routed read sits [`admission`]: per-tenant/per-table
+//! token buckets plus a bounded in-flight permit count. Past saturation
+//! the front end sheds with a typed `Overloaded` error instead of
+//! letting queues deepen, so the p99 of *admitted* requests stays
+//! bounded (experiment E-LOAD in `benches/load_harness.rs` measures
+//! the shed/latency trade under ≥2× saturation). The batchers expose
+//! the same contract on the write side via `try_push` pending-depth
+//! bounds.
 
+pub mod admission;
 pub mod batcher;
 pub mod router;
 pub mod service;
 
+pub use admission::{AdmissionConfig, AdmissionController, Permit, TokenBucket};
 pub use batcher::{wall_us, BatchItem, BatcherConfig, FlushDriver, MicroBatcher, WriteBatcher};
 pub use router::{RouteTable, ServingRouter};
 pub use service::OnlineServing;

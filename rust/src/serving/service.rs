@@ -10,6 +10,8 @@
 
 use std::sync::Arc;
 
+use super::admission::AdmissionController;
+use super::batcher::wall_us;
 use super::router::ServingRouter;
 use crate::geo::access::{AccessMechanism, ReadConsistency, RoutedBatch, RoutedLookup};
 use crate::monitor::metrics::{MetricKind, MetricsRegistry};
@@ -27,11 +29,23 @@ fn mech_label(m: AccessMechanism) -> &'static str {
 pub struct OnlineServing {
     pub router: ServingRouter,
     pub metrics: Arc<MetricsRegistry>,
+    /// Admission gate for tenant-attributed reads; `None` = fully open.
+    pub admission: Option<Arc<AdmissionController>>,
 }
 
 impl OnlineServing {
     pub fn new(router: ServingRouter, metrics: Arc<MetricsRegistry>) -> Self {
-        OnlineServing { router, metrics }
+        OnlineServing { router, metrics, admission: None }
+    }
+
+    /// A serving front end with an admission gate in front of the
+    /// tenant-attributed batch path.
+    pub fn with_admission(
+        router: ServingRouter,
+        metrics: Arc<MetricsRegistry>,
+        admission: Arc<AdmissionController>,
+    ) -> Self {
+        OnlineServing { router, metrics, admission: Some(admission) }
     }
 
     /// One online feature lookup from `consumer_region` under a
@@ -90,6 +104,28 @@ impl OnlineServing {
         );
         self.metrics.inc(MetricKind::System, "serving_batches", 1);
         Ok(out)
+    }
+
+    /// The tenant-attributed batch endpoint: pass the request through
+    /// the admission gate (cost = key count), then serve it as one
+    /// routed batch. The permit is held for the duration of the lookup
+    /// so the in-flight bound tracks requests actually being served.
+    /// Sheds with a typed `Overloaded` error; with no admission
+    /// controller configured it is exactly [`Self::lookup_batch`].
+    pub fn lookup_batch_admitted(
+        &self,
+        tenant: &str,
+        table: &str,
+        entities: &[EntityId],
+        consumer_region: &str,
+        now: Timestamp,
+        consistency: &ReadConsistency,
+    ) -> Result<RoutedBatch> {
+        let _permit = match &self.admission {
+            Some(ctrl) => Some(ctrl.admit(tenant, table, entities.len() as f64, wall_us())?),
+            None => None,
+        };
+        self.lookup_batch(table, entities, consumer_region, now, consistency)
     }
 
     /// Batched lookup of many entities (bulk inference). Returns
@@ -182,6 +218,32 @@ mod tests {
         assert!(s.metrics.latency_quantile("serving_batch_latency_us_xregion", 0.5).is_some());
         // One WAN round trip (60ms for eastus↔westus) for the whole batch.
         assert!(batch.latency_us >= 60_000 && batch.latency_us < 120_000, "{}", batch.latency_us);
+    }
+
+    #[test]
+    fn admitted_batch_path_sheds_past_burst() {
+        use crate::serving::admission::{AdmissionConfig, AdmissionController};
+        use crate::types::FsError;
+        let (open, _) = serving();
+        // Rebuild with a tight tenant budget: 3 key-lookups, no refill.
+        let cfg = AdmissionConfig { tenant_rate: 0.0, tenant_burst: 3.0, ..Default::default() };
+        let s = OnlineServing::with_admission(
+            ServingRouter::new(open.router.routes.clone()),
+            open.metrics.clone(),
+            AdmissionController::new(cfg, None),
+        );
+        let c = ReadConsistency::default();
+        // 2-key batch + 1-key batch fit the burst; the next must shed typed.
+        s.lookup_batch_admitted("alice", "t", &[1, 2], "eastus", 100, &c).unwrap();
+        s.lookup_batch_admitted("alice", "t", &[1], "eastus", 100, &c).unwrap();
+        match s.lookup_batch_admitted("alice", "t", &[1], "eastus", 100, &c) {
+            Err(FsError::Overloaded { .. }) => {}
+            other => panic!("expected Overloaded, got {other:?}"),
+        }
+        // A different tenant still gets served.
+        s.lookup_batch_admitted("bob", "t", &[1], "eastus", 100, &c).unwrap();
+        // No admission controller → same call is fully open.
+        open.lookup_batch_admitted("alice", "t", &[1], "eastus", 100, &c).unwrap();
     }
 
     #[test]

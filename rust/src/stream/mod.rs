@@ -126,6 +126,11 @@ pub struct StreamConfig {
     /// a driver attached (backpressure when the dual-write stage falls
     /// behind).
     pub max_pending_online: usize,
+    /// Admission bound on the source log: [`StreamIngestor::try_ingest`]
+    /// sheds (typed `Overloaded`) when the unconsumed backlog would
+    /// exceed this many events. `usize::MAX` = never shed (the plain
+    /// `ingest` path is always unbounded).
+    pub max_backlog_events: usize,
     /// Consumer-group name for checkpoints.
     pub group: String,
 }
@@ -140,6 +145,7 @@ impl Default for StreamConfig {
             writer: BatcherConfig::default(),
             writer_driver: false,
             max_pending_online: 4_096,
+            max_backlog_events: usize::MAX,
             group: "default".into(),
         }
     }
@@ -340,11 +346,51 @@ impl StreamIngestor {
     }
 
     /// Append events (key-routed to partitions). Returns the count.
+    /// Never rejects — producers that must not lose events use this and
+    /// absorb the backlog; front ends facing untrusted producers use
+    /// [`Self::try_ingest`].
     pub fn ingest(&self, events: &[StreamEvent]) -> u64 {
         for ev in events {
             self.log.append(ev.clone());
         }
         events.len() as u64
+    }
+
+    /// Admission-controlled ingest: sheds the whole batch with a typed
+    /// `Overloaded` error when the unconsumed backlog would exceed
+    /// `cfg.max_backlog_events` — bounded ingest memory instead of an
+    /// ever-deeper log while the poll loop is saturated. Shed events are
+    /// counted in the `stream_shed_events` metric; admitted batches
+    /// behave exactly like [`Self::ingest`].
+    pub fn try_ingest(&self, events: &[StreamEvent]) -> Result<u64> {
+        let backlog = self.backlog();
+        if backlog.saturating_add(events.len() as u64) > self.cfg.max_backlog_events as u64 {
+            self.deps.metrics.inc(
+                MetricKind::System,
+                "stream_shed_events",
+                events.len() as u64,
+            );
+            return Err(FsError::Overloaded {
+                resource: format!("stream '{}'", self.table),
+                reason: format!(
+                    "backlog {backlog} + {} > {}",
+                    events.len(),
+                    self.cfg.max_backlog_events
+                ),
+            });
+        }
+        Ok(self.ingest(events))
+    }
+
+    /// Ingested-but-unconsumed events across partitions (the admission
+    /// signal `try_ingest` checks).
+    pub fn backlog(&self) -> u64 {
+        let mut n = 0u64;
+        for (p, st) in self.parts.iter().enumerate() {
+            let next = st.lock().unwrap().next_offset;
+            n += self.log.high_water(p).saturating_sub(next);
+        }
+        n
     }
 
     /// Table watermark: min across partitions that have seen data.
@@ -693,6 +739,33 @@ mod tests {
         f.configure(&table, 0, HOUR); // (engine only advances; SLA params are registration's job)
         ing.poll().unwrap();
         assert!(ing.deps.metrics.gauge("stream_watermark_lag_secs").is_some());
+    }
+
+    #[test]
+    fn try_ingest_sheds_past_backlog_bound_and_recovers() {
+        let clock = Clock::fixed(10 * HOUR);
+        let ing = StreamIngestor::new(
+            spec(2),
+            StreamConfig { partitions: 2, max_backlog_events: 4, ..Default::default() },
+            deps(clock),
+        )
+        .unwrap();
+        ing.try_ingest(&[ev(0, "a", 10, 1.0), ev(1, "b", 20, 1.0), ev(2, "c", 30, 1.0)])
+            .unwrap();
+        assert_eq!(ing.backlog(), 3);
+        // 3 queued + 2 incoming > 4 → typed shed, log untouched.
+        match ing.try_ingest(&[ev(3, "d", 40, 1.0), ev(4, "e", 50, 1.0)]) {
+            Err(FsError::Overloaded { .. }) => {}
+            other => panic!("expected Overloaded, got {other:?}"),
+        }
+        assert_eq!(ing.backlog(), 3);
+        assert_eq!(ing.deps.metrics.counter("stream_shed_events"), 2);
+        // A batch that fits the remaining headroom is admitted.
+        ing.try_ingest(&[ev(3, "d", 40, 1.0)]).unwrap();
+        // Consuming the backlog re-opens admission.
+        ing.poll().unwrap();
+        assert_eq!(ing.backlog(), 0);
+        ing.try_ingest(&[ev(4, "e", 50, 1.0), ev(5, "f", 60, 1.0)]).unwrap();
     }
 
     #[test]

@@ -23,6 +23,7 @@ pub enum FsError {
     Runtime(String),
     Dsl(String),
     InjectedFault(String),
+    Overloaded { resource: String, reason: String },
     Other(String),
 }
 
@@ -50,6 +51,9 @@ impl fmt::Display for FsError {
             FsError::Runtime(s) => write!(f, "runtime execution error: {s}"),
             FsError::Dsl(s) => write!(f, "dsl error: {s}"),
             FsError::InjectedFault(s) => write!(f, "injected fault: {s}"),
+            FsError::Overloaded { resource, reason } => {
+                write!(f, "overloaded: {resource} shed request ({reason})")
+            }
             FsError::Other(s) => write!(f, "{s}"),
         }
     }
@@ -73,6 +77,10 @@ impl From<std::io::Error> for FsError {
 impl FsError {
     /// Transient errors are retried by the scheduler/merge machinery
     /// (§3.1.3 "retry failed actions"); permanent ones raise alerts.
+    ///
+    /// `Overloaded` is deliberately NOT transient: admission control sheds
+    /// load to push work back to the caller's backoff loop, and an inline
+    /// retry storm would amplify exactly the overload being shed.
     pub fn is_transient(&self) -> bool {
         matches!(
             self,
@@ -92,6 +100,20 @@ mod tests {
         assert!(!FsError::NotFound("a".into()).is_transient());
         assert!(!FsError::ImmutableProperty { asset: "fs".into(), prop: "code".into() }
             .is_transient());
+        // Shed load must bounce to the caller's backoff, never a hot retry.
+        assert!(!FsError::Overloaded { resource: "serving".into(), reason: "q".into() }
+            .is_transient());
+    }
+
+    #[test]
+    fn overloaded_renders_resource_and_reason() {
+        let e = FsError::Overloaded {
+            resource: "serving queue".into(),
+            reason: "inflight 128 >= 128".into(),
+        };
+        let s = e.to_string();
+        assert!(s.starts_with("overloaded:"), "{s}");
+        assert!(s.contains("serving queue") && s.contains("inflight"), "{s}");
     }
 
     #[test]

@@ -117,6 +117,51 @@ impl Rng {
     }
 }
 
+/// Zipf-distributed index sampler over `[0, n)` with exponent `s`
+/// (P(k) ∝ 1/(k+1)^s) — the skewed key-popularity model used by the load
+/// harness: a handful of hot entities absorb most online lookups while the
+/// long tail stays cold. `s = 0` degenerates to uniform; `s ≈ 1` is the
+/// classic web/serving skew.
+///
+/// The CDF is precomputed once (O(n)); each sample is a binary search, so
+/// the sampler is cheap enough to sit on the benchmark hot path. Sampling
+/// takes `&self` — one `Zipf` can be shared across worker threads, each
+/// drawing from its own forked [`Rng`].
+#[derive(Debug, Clone)]
+pub struct Zipf {
+    cdf: Vec<f64>,
+}
+
+impl Zipf {
+    pub fn new(n: usize, s: f64) -> Zipf {
+        assert!(n > 0, "Zipf over empty domain");
+        let mut cdf = Vec::with_capacity(n);
+        let mut acc = 0.0;
+        for k in 0..n {
+            acc += 1.0 / ((k + 1) as f64).powf(s);
+            cdf.push(acc);
+        }
+        for c in &mut cdf {
+            *c /= acc;
+        }
+        Zipf { cdf }
+    }
+
+    /// Draw an index in `[0, len)`; index 0 is the hottest key.
+    pub fn sample(&self, rng: &mut Rng) -> usize {
+        let u = rng.f64();
+        self.cdf.partition_point(|&c| c <= u).min(self.cdf.len() - 1)
+    }
+
+    pub fn len(&self) -> usize {
+        self.cdf.len()
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.cdf.is_empty()
+    }
+}
+
 #[cfg(test)]
 mod tests {
     use super::*;
@@ -197,5 +242,54 @@ mod tests {
         let mut a = base.fork();
         let mut b = base.fork();
         assert_ne!(a.next_u64(), b.next_u64());
+    }
+
+    #[test]
+    fn zipf_deterministic_and_in_range() {
+        let z = Zipf::new(100, 1.1);
+        let mut a = Rng::new(21);
+        let mut b = Rng::new(21);
+        for _ in 0..1000 {
+            let x = z.sample(&mut a);
+            assert!(x < 100);
+            assert_eq!(x, z.sample(&mut b));
+        }
+    }
+
+    #[test]
+    fn zipf_zero_exponent_is_uniform() {
+        let z = Zipf::new(10, 0.0);
+        let mut r = Rng::new(4);
+        let mut counts = [0u32; 10];
+        let n = 50_000;
+        for _ in 0..n {
+            counts[z.sample(&mut r)] += 1;
+        }
+        for (i, &c) in counts.iter().enumerate() {
+            let frac = c as f64 / n as f64;
+            assert!((frac - 0.1).abs() < 0.01, "i={i} frac={frac}");
+        }
+    }
+
+    #[test]
+    fn zipf_head_dominates_at_unit_exponent() {
+        let z = Zipf::new(1000, 1.0);
+        let mut r = Rng::new(17);
+        let n = 50_000;
+        let mut head = 0u32; // draws landing in the top 1% of keys
+        let mut first = 0u32;
+        for _ in 0..n {
+            let x = z.sample(&mut r);
+            if x < 10 {
+                head += 1;
+            }
+            if x == 0 {
+                first += 1;
+            }
+        }
+        // For n=1000, s=1: P(top 10) = H(10)/H(1000) ≈ 2.93/7.49 ≈ 0.39,
+        // vs 1% under uniform. P(0) ≈ 0.134.
+        assert!(head as f64 / n as f64 > 0.30, "head={head}");
+        assert!(first as f64 / n as f64 > 0.10, "first={first}");
     }
 }

@@ -1,0 +1,167 @@
+//! Property tests for the admission-control layer (load-harness PR).
+//!
+//! Three laws, checked at the controller and at the public store API:
+//!
+//! 1. **Conservation** — every request is exactly served or shed; the
+//!    controller's counters agree with the callers' tallies even under
+//!    thread contention, and inflight drains to zero when permits drop.
+//! 2. **Typed shedding** — overload surfaces as `FsError::Overloaded`
+//!    (never a panic, never a silent drop) on the batched read path and
+//!    the streaming ingest path alike.
+//! 3. **Rate + burst bound** — over any window W the admitted count
+//!    never exceeds `burst + rate·W` (+1 for boundary slop), for
+//!    arbitrary monotone arrival patterns.
+
+use std::thread;
+
+use geofs::config::Config;
+use geofs::coordinator::{FeatureStore, OpenOptions};
+use geofs::serving::{AdmissionConfig, AdmissionController};
+use geofs::sim::{ChurnWorkload, ChurnWorkloadConfig};
+use geofs::stream::{StreamConfig, StreamEvent};
+use geofs::types::time::DAY;
+use geofs::types::FsError;
+use geofs::util::rng::Rng;
+
+#[test]
+fn conservation_under_contention() {
+    // Zero refill → exactly `burst` admissions fit, no matter how the
+    // threads interleave.
+    let ctrl = AdmissionController::new(
+        AdmissionConfig { tenant_rate: 0.0, tenant_burst: 500.0, ..Default::default() },
+        None,
+    );
+    const THREADS: usize = 8;
+    const OPS: usize = 200;
+    let (mut served, mut shed) = (0u64, 0u64);
+    thread::scope(|s| {
+        let handles: Vec<_> = (0..THREADS)
+            .map(|t| {
+                let ctrl = ctrl.clone();
+                s.spawn(move || {
+                    let (mut served, mut shed) = (0u64, 0u64);
+                    for i in 0..OPS {
+                        match ctrl.admit("tenant", "table", 1.0, (t * OPS + i) as u64) {
+                            Ok(_permit) => served += 1,
+                            Err(FsError::Overloaded { .. }) => shed += 1,
+                            Err(e) => panic!("admission must shed typed, got: {e}"),
+                        }
+                    }
+                    (served, shed)
+                })
+            })
+            .collect();
+        for h in handles {
+            let (a, b) = h.join().unwrap();
+            served += a;
+            shed += b;
+        }
+    });
+    assert_eq!(served + shed, (THREADS * OPS) as u64, "every request served xor shed");
+    assert_eq!(served, 500, "zero-refill bucket admits exactly its burst");
+    assert_eq!(ctrl.admitted(), served);
+    assert_eq!(ctrl.shed_count(), shed);
+    assert_eq!(ctrl.inflight(), 0, "dropped permits release their slots");
+}
+
+#[test]
+fn admitted_never_exceeds_rate_window_plus_burst() {
+    for seed in [1u64, 7, 42, 1337] {
+        let mut rng = Rng::new(seed);
+        let rate = 50.0 + rng.f64() * 200.0;
+        let burst = 10.0 + rng.f64() * 90.0;
+        let ctrl = AdmissionController::new(
+            AdmissionConfig { tenant_rate: rate, tenant_burst: burst, ..Default::default() },
+            None,
+        );
+        let mut now_us = 0u64;
+        let mut admitted = 0u64;
+        for _ in 0..5_000 {
+            now_us += rng.below(2_000); // bursty arrivals, 0..2ms apart
+            if ctrl.admit("t", "tbl", 1.0, now_us).is_ok() {
+                admitted += 1;
+            }
+        }
+        let window_secs = now_us as f64 / 1e6;
+        let bound = burst + rate * window_secs + 1.0;
+        assert!(
+            (admitted as f64) <= bound,
+            "seed {seed}: admitted {admitted} exceeds burst {burst:.1} + rate {rate:.1} × {window_secs:.3}s"
+        );
+        // And the budget is actually usable: at least the burst fits.
+        assert!((admitted as f64) >= burst.floor(), "seed {seed}: budget unusable");
+    }
+}
+
+#[test]
+fn store_read_path_sheds_typed_overloaded_past_burst() {
+    let fs = FeatureStore::open(
+        Config::default_local(),
+        OpenOptions {
+            with_engine: false,
+            admission: Some(AdmissionConfig {
+                tenant_rate: 0.0,
+                tenant_burst: 4.0,
+                ..Default::default()
+            }),
+            ..Default::default()
+        },
+    )
+    .unwrap();
+    let w = ChurnWorkload::install(
+        &fs,
+        ChurnWorkloadConfig { customers: 8, days: 2, ..Default::default() },
+    )
+    .unwrap();
+    fs.clock.set(2 * DAY);
+    fs.materialize_tick(&w.txn_table).unwrap();
+    let home = fs.config.home_region().to_string();
+    let reqs: Vec<(&str, &str)> =
+        vec![(w.txn_table.as_str(), "cust_00001"), (w.txn_table.as_str(), "cust_00002")];
+
+    // Two 2-key batches fit the burst of 4 exactly...
+    fs.get_online_many_mixed(&w.principal, &reqs, &home).unwrap();
+    fs.get_online_many_mixed(&w.principal, &reqs, &home).unwrap();
+    // ...the third sheds with the typed error on the public API.
+    match fs.get_online_many_mixed(&w.principal, &reqs, &home) {
+        Err(FsError::Overloaded { resource, reason }) => {
+            assert!(resource.contains("ds-alice"), "tenant named in shed: {resource}");
+            assert!(!reason.is_empty());
+        }
+        Ok(_) => panic!("expected typed Overloaded shed past the burst"),
+        Err(e) => panic!("expected Overloaded, got: {e}"),
+    }
+}
+
+#[test]
+fn stream_ingest_sheds_on_backlog_bound_and_recovers() {
+    let fs = FeatureStore::open(
+        Config::default_local(),
+        OpenOptions { with_engine: false, ..Default::default() },
+    )
+    .unwrap();
+    let w = ChurnWorkload::install(
+        &fs,
+        ChurnWorkloadConfig { customers: 8, days: 1, ..Default::default() },
+    )
+    .unwrap();
+    fs.clock.set(DAY);
+    fs.start_stream(
+        &w.interactions_table,
+        StreamConfig { partitions: 2, max_backlog_events: 3, ..Default::default() },
+    )
+    .unwrap();
+    let ev = |seq: u64| StreamEvent::new(seq, "cust_00001", DAY + seq as i64, 1.0);
+
+    fs.stream_ingest(&w.interactions_table, &[ev(0), ev(1), ev(2)]).unwrap();
+    match fs.stream_ingest(&w.interactions_table, &[ev(3)]) {
+        Err(FsError::Overloaded { resource, .. }) => {
+            assert!(resource.contains(&w.interactions_table), "stream named in shed: {resource}")
+        }
+        Ok(_) => panic!("expected backlog shed at the bound"),
+        Err(e) => panic!("expected Overloaded, got: {e}"),
+    }
+    // Draining the backlog reopens admission — backpressure, not a latch.
+    fs.poll_stream(&w.interactions_table).unwrap();
+    fs.stream_ingest(&w.interactions_table, &[ev(3)]).unwrap();
+}

@@ -384,3 +384,69 @@ fn failover_under_replication_loses_no_acked_write() {
         assert_eq!(got.version(), want.version(), "survivor entity {e}");
     }
 }
+
+/// Regression (load-harness PR): log truncation must never outrun the
+/// last offline checkpoint. Before the checkpoint floor existed,
+/// `truncate_applied` reclaimed any entry every replica had applied —
+/// including entries newer than the last HA checkpoint. A home crash
+/// then restored from that checkpoint with nothing left in the log to
+/// replay the gap, silently losing acked writes on the *promoted*
+/// store. The floor (recorded by `FeatureStore::checkpoint` →
+/// `ReplicationFabric::record_checkpoint`) keeps post-checkpoint
+/// entries durable until the next checkpoint, so crash-restore replays
+/// them.
+#[test]
+fn truncation_respects_checkpoint_floor_across_crash_restore() {
+    let topology = Arc::new(GeoTopology::default_four_region());
+    let fm = FailoverManager::new(topology.clone());
+    let metrics = Arc::new(MetricsRegistry::new());
+
+    let offline = Arc::new(OfflineStore::new());
+    let home = Arc::new(OnlineStore::new(4));
+    let westus = Arc::new(OnlineStore::new(4));
+    let fabric = ReplicationFabric::new(
+        2,
+        vec![("westus".into(), westus.clone(), 5)],
+        Some(metrics.clone()),
+    );
+    let sched = |at: i64| {
+        Scheduler::new(Arc::new(ThreadPool::new(2)), Clock::fixed(at), RetryPolicy::default())
+    };
+    let dir = TempDir::new("cp-floor");
+    let table = "t:1";
+
+    // Batch A: acked, replicated, checkpointed.
+    let a = vec![rec(1, 10, 11, 1.0), rec(2, 12, 13, 2.0)];
+    offline.merge(table, &a);
+    home.merge(table, &a, 10);
+    fabric.append(table, &a, 10);
+    fabric.pump(20);
+    let cp = fm.checkpoint("eastus", &sched(20), &offline, dir.path().to_path_buf(), 20).unwrap();
+    fabric.record_checkpoint();
+
+    // Batch B: acked + fully replicated, but NOT in the checkpoint.
+    let b = vec![rec(7, 30, 31, 7.5)];
+    offline.merge(table, &b);
+    home.merge(table, &b, 30);
+    fabric.append(table, &b, 30);
+    fabric.pump(40);
+    assert_eq!(fabric.backlog("westus"), 0, "B fully applied before truncation");
+
+    // Truncation reclaims A (below the floor) but must retain B even
+    // though every replica has applied it.
+    assert_eq!(fabric.truncate_applied(), 1, "only the pre-checkpoint batch is reclaimed");
+    assert_eq!(fabric.log_len(), 1, "post-checkpoint batch survives for crash-restore");
+
+    // Home dies; promote. The restored stores must hold batch B, which
+    // only the retained log can supply (the checkpoint predates it).
+    topology.set_down("eastus", true);
+    let clock = Clock::fixed(100);
+    let promoted = fm
+        .failover_with(&cp, &sched(100), 2, 100, Some(&fabric), clock, Some(metrics.clone()))
+        .unwrap();
+    assert_eq!(promoted.region, "westus");
+    let got = promoted.online.get(table, 7, 1_000).expect("post-checkpoint write survives crash");
+    assert_eq!(got.values[0], 7.5);
+    assert_eq!(got.event_ts, 30);
+    assert_eq!(promoted.offline.row_count(table), 3, "offline restore covers A and B");
+}

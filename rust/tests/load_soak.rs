@@ -1,0 +1,241 @@
+//! Soak test (load-harness PR): a mixed read/ingest/PIT workload runs
+//! against a fully-wired geo store — background compaction and
+//! replication drivers live, streaming engine feeding the hourly table,
+//! admission gate in front of reads — and the final streamed state must
+//! equal a sequential single-threaded oracle fed the identical events.
+//!
+//! What this pins down:
+//! * **Convergence** — concurrent ingestion (3 producers over disjoint
+//!   event slices, arbitrary interleave) converges to the same per-key
+//!   online state as in-order ingestion, because the pipeline's
+//!   watermark + repair machinery is order-independent under unbounded
+//!   retention. Values compare within an f32 tolerance: bin sums fold
+//!   in arrival order, so the last ulp may legitimately differ.
+//! * **Watermark invariant** — after the final drain no online record
+//!   of the streamed table carries an event time above the table
+//!   watermark, and the dual-write queue is empty.
+//! * **Liveness under admission** — readers tolerate typed `Overloaded`
+//!   sheds but must observe real served traffic; nothing panics and no
+//!   non-overload error escapes any worker.
+
+use std::sync::atomic::{AtomicBool, AtomicU64, Ordering};
+use std::thread;
+use std::time::Duration;
+
+use geofs::config::Config;
+use geofs::coordinator::{FeatureStore, OpenOptions};
+use geofs::query::pit::PitConfig;
+use geofs::serving::AdmissionConfig;
+use geofs::sim::{ChurnWorkload, ChurnWorkloadConfig};
+use geofs::stream::{StreamConfig, StreamEvent};
+use geofs::types::time::{DAY, HOUR};
+use geofs::types::{FsError, Timestamp};
+use geofs::util::rng::Rng;
+
+const CUSTOMERS: usize = 32;
+const DAYS: i64 = 3;
+const BASE_EVENTS: usize = 1_200;
+
+fn dataset() -> ChurnWorkloadConfig {
+    ChurnWorkloadConfig { customers: CUSTOMERS, days: DAYS, ..Default::default() }
+}
+
+fn stream_cfg() -> StreamConfig {
+    // Unbounded backlog: the oracle comparison needs every event in.
+    StreamConfig { partitions: 4, ..Default::default() }
+}
+
+/// Deterministic event trace: uniform keys, strictly increasing event
+/// time, followed by one high-timestamp "flush" event per customer so
+/// the watermark passes every base bin on all partitions.
+fn events() -> (Vec<StreamEvent>, Vec<StreamEvent>, Timestamp) {
+    let start = DAYS * DAY;
+    let mut rng = Rng::new(7);
+    let base: Vec<StreamEvent> = (0..BASE_EVENTS)
+        .map(|i| {
+            StreamEvent::new(
+                i as u64,
+                format!("cust_{:05}", rng.below(CUSTOMERS as u64)),
+                start + i as i64 * 2,
+                rng.f32(),
+            )
+        })
+        .collect();
+    let flush_ts = start + BASE_EVENTS as i64 * 2 + HOUR;
+    let flush: Vec<StreamEvent> = (0..CUSTOMERS)
+        .map(|c| {
+            StreamEvent::new(BASE_EVENTS as u64 + c as u64, format!("cust_{c:05}"), flush_ts, 0.5)
+        })
+        .collect();
+    (base, flush, flush_ts)
+}
+
+#[test]
+fn mixed_soak_converges_to_sequential_oracle() {
+    let (base, flush, flush_ts) = events();
+
+    // --- System under test: geo store, real drivers, admission gate.
+    let fs = FeatureStore::open(
+        Config::default_geo(),
+        OpenOptions {
+            with_engine: false,
+            geo_replication: true,
+            admission: Some(AdmissionConfig {
+                tenant_rate: 2_000.0,
+                tenant_burst: 1_500.0,
+                ..Default::default()
+            }),
+            ..Default::default()
+        },
+    )
+    .unwrap();
+    let w = ChurnWorkload::install(&fs, dataset()).unwrap();
+    fs.clock.set(DAYS * DAY);
+    fs.materialize_tick(&w.txn_table).unwrap();
+    fs.start_stream(&w.interactions_table, stream_cfg()).unwrap();
+    let home = fs.config.home_region().to_string();
+    let spine: Vec<(String, Timestamp)> = w
+        .observation_spine(64)
+        .into_iter()
+        .map(|(k, ts, _)| (k, ts))
+        .collect();
+    let features = w.model_features();
+
+    let stop = AtomicBool::new(false);
+    let served_reads = AtomicU64::new(0);
+    let shed_reads = AtomicU64::new(0);
+    thread::scope(|s| {
+        // Poller: consumes the stream and moves simulated time so the
+        // lag-gated replication driver delivers.
+        let poller = s.spawn(|| {
+            while !stop.load(Ordering::Acquire) {
+                let _ = fs.poll_stream(&w.interactions_table);
+                fs.clock.advance(1);
+                thread::sleep(Duration::from_millis(1));
+            }
+        });
+        // 3 ingesters over disjoint contiguous slices: worst-case
+        // cross-slice reordering for the watermark/repair machinery.
+        let mut workers = Vec::new();
+        for chunk in base.chunks(base.len().div_ceil(3)) {
+            let (fs, w) = (&fs, &w);
+            workers.push(s.spawn(move || {
+                for ev in chunk {
+                    fs.stream_ingest(&w.interactions_table, std::slice::from_ref(ev)).unwrap();
+                }
+            }));
+        }
+        // 2 readers: mixed-table batches; Overloaded is the only
+        // acceptable failure.
+        for r in 0..2u64 {
+            let (fs, w) = (&fs, &w);
+            let (served, shed, home) = (&served_reads, &shed_reads, home.as_str());
+            workers.push(s.spawn(move || {
+                let mut rng = Rng::new(100 + r);
+                for _ in 0..150 {
+                    let keys: Vec<String> = (0..8)
+                        .map(|_| format!("cust_{:05}", rng.below(CUSTOMERS as u64)))
+                        .collect();
+                    let reqs: Vec<(&str, &str)> = keys
+                        .iter()
+                        .enumerate()
+                        .map(|(i, k)| {
+                            let t = if i % 2 == 0 { &w.txn_table } else { &w.interactions_table };
+                            (t.as_str(), k.as_str())
+                        })
+                        .collect();
+                    match fs.get_online_many_mixed(&w.principal, &reqs, home) {
+                        Ok(_) => served.fetch_add(1, Ordering::Relaxed),
+                        Err(FsError::Overloaded { .. }) => shed.fetch_add(1, Ordering::Relaxed),
+                        Err(e) => panic!("reader hit non-overload error: {e}"),
+                    };
+                    thread::sleep(Duration::from_micros(200));
+                }
+            }));
+        }
+        // 1 PIT thread: offline reads race the stream's dual writes and
+        // the background compaction driver.
+        {
+            let (fs, w) = (&fs, &w);
+            let (spine, features, home) = (&spine, &features, home.as_str());
+            workers.push(s.spawn(move || {
+                let mut rng = Rng::new(9);
+                for _ in 0..40 {
+                    let obs: Vec<(String, Timestamp)> = (0..4)
+                        .map(|_| spine[rng.below(spine.len() as u64) as usize].clone())
+                        .collect();
+                    fs.get_training_frame(
+                        &w.principal,
+                        None,
+                        &obs,
+                        features,
+                        PitConfig::default(),
+                        home,
+                    )
+                    .unwrap();
+                    thread::sleep(Duration::from_micros(500));
+                }
+            }));
+        }
+        for h in workers {
+            h.join().unwrap();
+        }
+        // Producers done: append the flush punctuation, then stop.
+        fs.stream_ingest(&w.interactions_table, &flush).unwrap();
+        stop.store(true, Ordering::Release);
+        poller.join().unwrap();
+    });
+    let stats = fs.drain_stream(&w.interactions_table).unwrap();
+    assert!(served_reads.load(Ordering::Relaxed) > 0, "admission starved all readers");
+    assert_eq!(stats.pending_online, 0, "dual-write queue drained");
+    let wm = stats.watermark.expect("streamed table has a watermark");
+    assert_eq!(wm, flush_ts, "watermark reached the flush punctuation");
+
+    // --- Watermark invariant: nothing served ahead of the watermark.
+    let now = flush_ts + 1;
+    for rec in fs.online.dump_table(&w.interactions_table, now) {
+        assert!(rec.event_ts <= wm, "online record event_ts {} ahead of watermark {wm}", rec.event_ts);
+    }
+
+    // --- Oracle: same events, one thread, in order, no concurrency.
+    let oracle = FeatureStore::open(
+        Config::default_local(),
+        OpenOptions { with_engine: false, ..Default::default() },
+    )
+    .unwrap();
+    let ow = ChurnWorkload::install(&oracle, dataset()).unwrap();
+    oracle.clock.set(DAYS * DAY);
+    oracle.start_stream(&ow.interactions_table, stream_cfg()).unwrap();
+    oracle.stream_ingest(&ow.interactions_table, &base).unwrap();
+    oracle.stream_ingest(&ow.interactions_table, &flush).unwrap();
+    oracle.drain_stream(&ow.interactions_table).unwrap();
+
+    let mut compared = 0;
+    for c in 0..CUSTOMERS {
+        let key = format!("cust_{c:05}");
+        let got = fs
+            .interner
+            .lookup(&key)
+            .and_then(|e| fs.online.get(&w.interactions_table, e, now));
+        let want = oracle
+            .interner
+            .lookup(&key)
+            .and_then(|e| oracle.online.get(&ow.interactions_table, e, now));
+        match (got, want) {
+            (None, None) => {}
+            (Some(g), Some(o)) => {
+                assert_eq!(g.event_ts, o.event_ts, "key {key}: bin mismatch");
+                assert_eq!(g.values.len(), o.values.len(), "key {key}: arity");
+                for (i, (gv, ov)) in g.values.iter().zip(o.values.iter()).enumerate() {
+                    assert!(
+                        (gv - ov).abs() <= 1e-3 + 1e-4 * ov.abs(),
+                        "key {key} value[{i}]: {gv} vs oracle {ov}"
+                    );
+                }
+                compared += 1;
+            }
+            (g, o) => panic!("key {key}: presence diverged (sut {g:?}, oracle {o:?})"),
+        }
+    }
+    assert!(compared > 0, "oracle comparison must cover real state");
+}
