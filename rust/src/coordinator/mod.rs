@@ -179,12 +179,15 @@ impl FeatureStore {
                 ReplicationFabric::new(4, replicas, Some(metrics.clone()))
             });
         // Background delivery: woken on every append, ticking so lagged
-        // batches become visible as the clock advances.
+        // batches become visible as the clock advances. Regions apply
+        // concurrently on the shared pool so a slow replica never
+        // delays the others' convergence.
         let repl_driver = fabric.as_ref().map(|f| {
-            ReplicationDriver::spawn(
+            ReplicationDriver::spawn_with_pool(
                 f.clone(),
                 clock.clone(),
                 std::time::Duration::from_millis(20),
+                pool.clone(),
             )
         });
         let scheduler =

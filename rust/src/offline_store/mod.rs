@@ -113,6 +113,10 @@ impl MergeStats {
     }
 }
 
+/// Batch size from which the sorted dedupe probe pays for its sort:
+/// below this, per-record probes win.
+const SORTED_PROBE_MIN: usize = 8;
+
 /// One feature-set table: sealed segments + delta + bounded dedupe
 /// state.
 #[derive(Debug, Default)]
@@ -133,37 +137,123 @@ impl TableInner {
     /// Returns the merge stats and whether a spill happened (the store
     /// pings the compaction driver on spills).
     fn merge(&mut self, records: &[FeatureRecord], cfg: &StoreConfig) -> (MergeStats, bool) {
-        let mut stats = MergeStats::default();
-        {
-            // One reusable probe cursor per sealed segment: consecutive
-            // records often hash into the same blocks, and the cursors'
-            // scratch is allocated once per merge call, not per probe.
-            let mut probes: Vec<SegmentCursor<'_>> =
-                self.segments.iter().map(|s| s.cursor()).collect();
-            for r in records {
-                let key = r.unique_key();
-                let dup = self.delta_keys.contains(&key)
-                    || self
-                        .segments
-                        .iter()
-                        .zip(probes.iter_mut())
-                        .any(|(s, c)| s.may_contain_key(key) && c.contains(key));
-                if dup {
-                    stats.skipped += 1;
-                } else {
-                    self.delta_keys.insert(key);
-                    self.delta.push(r.clone());
-                    self.rows += 1;
-                    stats.inserted += 1;
-                }
-            }
-        }
+        let stats = if records.len() >= SORTED_PROBE_MIN && !self.segments.is_empty() {
+            self.merge_sorted(records)
+        } else {
+            self.merge_pointwise(records)
+        };
         let mut spilled = false;
         if self.delta.len() >= cfg.spill_rows {
             self.spill_delta(cfg);
             spilled = true;
         }
         (stats, spilled)
+    }
+
+    /// Per-record dedupe probe — small batches, where sorting overhead
+    /// would dominate the saved block decodes.
+    fn merge_pointwise(&mut self, records: &[FeatureRecord]) -> MergeStats {
+        let mut stats = MergeStats::default();
+        // One reusable probe cursor per sealed segment: consecutive
+        // records often hash into the same blocks, and the cursors'
+        // scratch is allocated once per merge call, not per probe.
+        let mut probes: Vec<SegmentCursor<'_>> =
+            self.segments.iter().map(|s| s.cursor()).collect();
+        for r in records {
+            let key = r.unique_key();
+            let dup = self.delta_keys.contains(&key)
+                || self
+                    .segments
+                    .iter()
+                    .zip(probes.iter_mut())
+                    .any(|(s, c)| s.may_contain_key(key) && c.contains(key));
+            if dup {
+                stats.skipped += 1;
+            } else {
+                self.delta_keys.insert(key);
+                self.delta.push(r.clone());
+                self.rows += 1;
+                stats.inserted += 1;
+            }
+        }
+        stats
+    }
+
+    /// Sorted-batch dedupe probe: sort the batch's keys once, then walk
+    /// each sealed segment in ascending key order — one `entity_run`
+    /// binary search per entity (with a monotone `from` hint, so the
+    /// directory walk never restarts) and a two-pointer scan inside the
+    /// run, instead of an independent `contains` probe per record. Each
+    /// segment block is decoded at most once per merge call however
+    /// many records land in it, which is what amortizes bulk re-merge
+    /// (backfill replay, failover log replay) over big batches.
+    /// Classification is identical to [`Self::merge_pointwise`]: among
+    /// in-batch duplicates of one key the **first arrival** wins, and
+    /// inserts land in arrival order.
+    fn merge_sorted(&mut self, records: &[FeatureRecord]) -> MergeStats {
+        let mut order: Vec<usize> = (0..records.len()).collect();
+        // Sort by (key, arrival index): duplicate keys may carry
+        // different values, and pointwise application keeps the first.
+        order.sort_unstable_by_key(|&i| (records[i].unique_key(), i));
+        let mut dup = vec![false; records.len()];
+        for w in order.windows(2) {
+            if records[w[0]].unique_key() == records[w[1]].unique_key() {
+                dup[w[1]] = true;
+            }
+        }
+        for &i in &order {
+            if !dup[i] && self.delta_keys.contains(&records[i].unique_key()) {
+                dup[i] = true;
+            }
+        }
+        for seg in &self.segments {
+            let mut cur = seg.cursor();
+            let mut pos = 0usize; // keys ascend over `order` → monotone hint
+            let mut k = 0usize;
+            while k < order.len() {
+                let entity = records[order[k]].entity;
+                let mut k_end = k + 1;
+                while k_end < order.len() && records[order[k_end]].entity == entity {
+                    k_end += 1;
+                }
+                let group = &order[k..k_end];
+                k = k_end;
+                if !seg.may_contain_entity(entity)
+                    || !group
+                        .iter()
+                        .any(|&i| !dup[i] && seg.may_contain_key(records[i].unique_key()))
+                {
+                    continue;
+                }
+                let (lo, hi) = cur.entity_run(entity, pos);
+                pos = hi;
+                let mut row = lo;
+                for &i in group {
+                    if dup[i] || !seg.may_contain_key(records[i].unique_key()) {
+                        continue;
+                    }
+                    let key = records[i].unique_key();
+                    while row < hi && cur.key(row) < key {
+                        row += 1;
+                    }
+                    if row < hi && cur.key(row) == key {
+                        dup[i] = true;
+                    }
+                }
+            }
+        }
+        let mut stats = MergeStats::default();
+        for (i, r) in records.iter().enumerate() {
+            if dup[i] {
+                stats.skipped += 1;
+            } else {
+                self.delta_keys.insert(r.unique_key());
+                self.delta.push(r.clone());
+                self.rows += 1;
+                stats.inserted += 1;
+            }
+        }
+        stats
     }
 
     /// Seal the delta into a sorted segment (one sort, at write time).
@@ -628,6 +718,50 @@ mod tests {
         let m2 = s.merge("t", &rows);
         assert_eq!(m2, MergeStats { inserted: 0, skipped: 2 });
         assert_eq!(s.row_count("t"), 2);
+    }
+
+    #[test]
+    fn sorted_batch_dedupe_matches_pointwise() {
+        // Differential: bulk merges (sorted-probe path) against the same
+        // records applied one by one (pointwise path) — identical stats,
+        // identical surviving rows, under heavy key collisions: re-draws
+        // of already-sealed keys, in-batch duplicates carrying different
+        // values (first arrival must win), and fresh keys.
+        use crate::util::rng::Rng;
+        let mut rng = Rng::new(77);
+        let bulk = OfflineStore::with_spill_threshold(16);
+        let pointwise = OfflineStore::with_spill_threshold(16);
+        let history: Vec<FeatureRecord> = (0..64)
+            .map(|i| rec(rng.below(20), rng.range(0, 50), rng.range(0, 50), i as f32))
+            .collect();
+        bulk.merge("t", &history);
+        for r in &history {
+            pointwise.merge("t", std::slice::from_ref(r));
+        }
+        for round in 0..10 {
+            let batch: Vec<FeatureRecord> = (0..40)
+                .map(|j| {
+                    rec(rng.below(20), rng.range(0, 60), rng.range(0, 60), (round * 100 + j) as f32)
+                })
+                .collect();
+            let mb = bulk.merge("t", &batch);
+            let mut mp = MergeStats::default();
+            for r in &batch {
+                mp.add(pointwise.merge("t", std::slice::from_ref(r)));
+            }
+            assert_eq!(mb, mp, "round {round}");
+        }
+        assert_eq!(bulk.row_count("t"), pointwise.row_count("t"));
+        let w = FeatureWindow::new(0, 1_000);
+        let key = |r: &FeatureRecord| (r.entity, r.event_ts, r.creation_ts);
+        let (mut a, mut b) = (bulk.scan("t", w), pointwise.scan("t", w));
+        a.sort_by_key(key);
+        b.sort_by_key(key);
+        assert_eq!(a.len(), b.len());
+        for (x, y) in a.iter().zip(&b) {
+            assert_eq!(key(x), key(y));
+            assert_eq!(x.values, y.values, "first in-batch duplicate must win in both paths");
+        }
     }
 
     #[test]

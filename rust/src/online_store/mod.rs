@@ -11,30 +11,43 @@
 //!
 //! # Concurrency design (the serving hot path)
 //!
-//! The store is an immutable-snapshot + sharded-lock design, built so
-//! point reads never acquire a store-global lock:
+//! Reads are **wait-free with respect to writers**: no point or batched
+//! read ever acquires a `Mutex` or `RwLock` — there is no lock a reader
+//! and a writer both take. The pieces:
 //!
-//! * All shard state lives in one [`ShardSet`] behind an `Arc`. Readers
-//!   obtain the current `Arc` via a **generation-stamped thread-local
-//!   cache**: a `get`/`get_many` does one atomic generation load and (on
-//!   the fast path) zero shared-lock acquisitions before touching its
-//!   single target shard's `RwLock`. Only when the generation changed
-//!   (a `scale_to`/`set_ttl` swapped the set — rare) does a reader take
-//!   the small `current` mutex once to refresh its cached `Arc`.
-//! * Writers (`merge`, `evict_expired`) share an `admin` read lock —
-//!   they run concurrently with each other and with all readers, taking
-//!   only per-shard write locks. `scale_to`/`set_ttl` take the `admin`
-//!   write lock, build a **new** `ShardSet` (rehash/ttl-update), and
-//!   atomically publish it; readers still holding the old `Arc` keep
-//!   reading the pre-swap snapshot (linearizable: the scale is a
-//!   data-preserving no-op), then pick up the new set on their next
+//! * Shard interiors are [`seqlock::SeqlockMap`]s: open-addressing
+//!   bucket arrays where every field is an atomic and an even/odd
+//!   stamp makes each bucket's composite read atomic (see that module
+//!   for the full memory-ordering argument). Readers retry the few
+//!   loads of a bucket only while a writer is mid-write on *that*
+//!   bucket; writers serialize on a small per-shard `Mutex<WriteSide>`
+//!   readers never touch.
+//! * Topology is an immutable [`ShardSet`] snapshot (`table →
+//!   TableShards → shards`) behind a generation-stamped thread-local
+//!   cache. The slow path (first use on a thread, or after a publish)
+//!   goes through the [`PubLedger`] — an append-only array of `Weak`
+//!   publications indexed by generation — so even a cache miss is
+//!   atomics + `Weak::upgrade`, never a mutex.
+//! * Writers (`merge`, `evict_expired`) share the `admin` read lock (so
+//!   they never race a topology swap) and take only per-shard write
+//!   mutexes. `scale_to`/`set_ttl`/table creation/shard growth take the
+//!   `admin` write lock, build a **new** `ShardSet` (or new per-table
+//!   shard arrays), and publish it; readers on the old snapshot keep
+//!   serving it untouched and pick up the new one on their next
 //!   operation via the generation check.
-//! * TTL sweep (`evict_expired`) locks one shard at a time, so readers
-//!   of other shards are never blocked; expired entries are filtered at
-//!   read time regardless, so a sweep is pure space reclamation.
-//! * Shard maps are nested `table → entity → entry`, so lookups never
-//!   allocate a `(String, EntityId)` key; `get_many` groups keys by
-//!   shard and takes each shard lock exactly once per batch.
+//! * Shard growth is rebuild-on-full: each published `SeqlockMap` has
+//!   fixed capacity; a merge whose batch might not fit rebuilds that
+//!   table's shards at a doubled size and **retries the whole batch**
+//!   (Alg 2 application is idempotent, so re-applying records that
+//!   landed before the rebuild only reclassifies them from `inserted`
+//!   to `skipped` — `inserted + skipped == records.len()` always
+//!   holds).
+//! * TTL expiry is filtered at read time from the bucket's
+//!   `written_at`; `evict_expired` tombstones expired buckets one shard
+//!   mutex at a time (pure space reclamation — readers of the same
+//!   shard are not blocked, they just stop seeing the entries). Value
+//!   arena slots of overridden/evicted entries are reclaimed at the
+//!   next rebuild of that table, not eagerly.
 //!
 //! `hits`/`misses` stay plain atomic counters. Sharded like a Redis
 //! cluster; `scale_to` rebalances shards online (§3.1.3 "scale up or
@@ -42,40 +55,102 @@
 
 use std::cell::RefCell;
 use std::collections::HashMap;
+use std::fmt;
 use std::sync::atomic::{AtomicU64, Ordering};
-use std::sync::{Arc, Mutex, RwLock, Weak};
+use std::sync::{Arc, Mutex, OnceLock, RwLock, Weak};
 
 use crate::offline_store::MergeStats;
 use crate::types::{EntityId, FeatureRecord, FsError, Result, Timestamp};
 
-/// Per-table entry: the single latest record (Eq. 2) + TTL bookkeeping.
-#[derive(Debug, Clone)]
-struct Entry {
-    record: FeatureRecord,
-    /// Wall-clock (processing timeline) moment this entry was last
-    /// written; TTL expiry is measured from here, like a Redis SET with
-    /// EXPIRE.
-    written_at: Timestamp,
+mod seqlock;
+
+use seqlock::{ReadHit, SeqlockMap, WriteSide};
+
+/// splitmix-style avalanche: the low bits route to a shard, the high
+/// bits index buckets inside the shard's `SeqlockMap` (decorrelated so
+/// a shard's keys spread over its whole bucket array).
+pub(crate) fn hash_of(entity: EntityId) -> u64 {
+    let mut x = entity.wrapping_add(0x9e3779b97f4a7c15);
+    x = (x ^ (x >> 30)).wrapping_mul(0xbf58476d1ce4e5b9);
+    x = (x ^ (x >> 27)).wrapping_mul(0x94d049bb133111eb);
+    x ^ (x >> 31)
 }
 
-/// table name → entity → entry. Nested so the read path can look up
-/// with `&str` (no per-read key allocation).
-type TableMap = HashMap<String, HashMap<EntityId, Entry>>;
+fn shard_idx(hash: u64, n: usize) -> usize {
+    (hash % n as u64) as usize
+}
 
-/// One shard: an independently locked slice of the key space.
-type Shard = RwLock<TableMap>;
+/// One shard: a seqlock bucket array plus the write mutex serializing
+/// its writers. Readers use `map` only.
+#[derive(Debug)]
+struct SeqShard {
+    write: Mutex<WriteSide>,
+    map: SeqlockMap,
+}
 
-/// The immutable-topology snapshot readers operate on. The `shards`
-/// vector and `ttls` map never change inside a published `ShardSet`;
-/// only shard *contents* (behind per-shard locks) do.
+impl SeqShard {
+    fn with_room_for(expected: usize) -> SeqShard {
+        SeqShard { write: Mutex::new(WriteSide::default()), map: SeqlockMap::with_room_for(expected) }
+    }
+}
+
+/// One table's shard array. Shared (`Arc`) across `ShardSet`
+/// publications that do not touch this table, so a TTL change or
+/// another table's growth never copies data.
+#[derive(Debug)]
+struct TableShards {
+    shards: Vec<SeqShard>,
+}
+
+/// Room for this many entries per shard in a freshly-created table.
+const INITIAL_SHARD_ROOM: usize = 8;
+
+impl TableShards {
+    fn new(n_shards: usize, per_shard_room: usize) -> TableShards {
+        TableShards {
+            shards: (0..n_shards).map(|_| SeqShard::with_room_for(per_shard_room)).collect(),
+        }
+    }
+
+    /// Rebuild into `n_shards` with room for every resident entry plus
+    /// `extra` incoming ones per shard. Caller holds the `admin` write
+    /// lock, so no writer mutates `self` during the gather.
+    fn rebuilt(&self, n_shards: usize, extra: usize) -> TableShards {
+        let mut gathered: Vec<Vec<(EntityId, u64, ReadHit)>> = (0..n_shards).map(|_| Vec::new()).collect();
+        for shard in &self.shards {
+            shard.map.for_each_resident(|entity, hit| {
+                let h = hash_of(entity);
+                gathered[shard_idx(h, n_shards)].push((entity, h, hit));
+            });
+        }
+        let shards = gathered
+            .into_iter()
+            .map(|entries| {
+                let shard =
+                    SeqShard::with_room_for((entries.len() + extra).max(INITIAL_SHARD_ROOM));
+                let mut ws = shard.write.lock().unwrap();
+                for (entity, h, hit) in &entries {
+                    shard.map.seed(&mut ws, *entity, *h, hit);
+                }
+                drop(ws);
+                shard
+            })
+            .collect();
+        TableShards { shards }
+    }
+}
+
+/// The immutable-topology snapshot readers operate on. Everything
+/// inside a published `ShardSet` is fixed except shard *contents*
+/// (mutated through the seqlock write protocol).
 #[derive(Debug)]
 struct ShardSet {
     /// Monotonic publish counter; compared against the store's atomic
-    /// generation by the thread-local snapshot cache.
+    /// generation by the thread-local snapshot cache, and the entry's
+    /// index in the [`PubLedger`].
     generation: u64,
-    /// Shared across TTL-only swaps (`set_ttl` republishes the same
-    /// shard vector with a new TTL table).
-    shards: Arc<Vec<Shard>>,
+    n_shards: usize,
+    tables: HashMap<String, Arc<TableShards>>,
     /// TTL per table (seconds on the processing timeline); absent = ∞.
     ttls: HashMap<String, i64>,
 }
@@ -86,16 +161,8 @@ impl ShardSet {
     }
 }
 
-fn live(e: &Entry, ttl: i64, now: Timestamp) -> bool {
-    ttl == i64::MAX || now - e.written_at < ttl
-}
-
-/// splitmix-style avalanche so sequential ids spread across shards.
-fn shard_of(entity: EntityId, n: usize) -> usize {
-    let mut x = entity.wrapping_add(0x9e3779b97f4a7c15);
-    x = (x ^ (x >> 30)).wrapping_mul(0xbf58476d1ce4e5b9);
-    x = (x ^ (x >> 27)).wrapping_mul(0x94d049bb133111eb);
-    (x ^ (x >> 31)) as usize % n
+fn live_at(hit: &ReadHit, ttl: i64, now: Timestamp) -> bool {
+    ttl == i64::MAX || now - hit.written_at < ttl
 }
 
 /// Process-unique store ids for the thread-local snapshot cache.
@@ -112,19 +179,77 @@ thread_local! {
 
 const SNAPSHOT_CACHE_CAP: usize = 8;
 
-/// Sharded in-process KV store with lock-free snapshot reads.
+/// First ledger chunk's slot count; chunk `k` holds `LEDGER_BASE << k`.
+const LEDGER_BASE: usize = 64;
+/// 48 geometric chunks cover ~2^53 publications.
+const LEDGER_CHUNKS: usize = 48;
+
+/// Lock-free publication ledger: generation → `Weak<ShardSet>`. An
+/// append-only array grown in geometrically-sized `OnceLock` chunks so
+/// a reader resolving any generation is two `OnceLock::get`s and a
+/// `Weak::upgrade` — the snapshot slow path takes no mutex. Superseded
+/// publications cost one dead `Weak` (~a pointer) each; the strong ref
+/// for the live one is held by the store's publisher-only `current`.
+struct PubLedger {
+    chunks: [OnceLock<Box<[OnceLock<Weak<ShardSet>>]>>; LEDGER_CHUNKS],
+}
+
+impl PubLedger {
+    fn new() -> PubLedger {
+        PubLedger { chunks: std::array::from_fn(|_| OnceLock::new()) }
+    }
+
+    /// (chunk, offset) for a generation: chunk `k` spans
+    /// `[LEDGER_BASE·(2^k − 1), LEDGER_BASE·(2^{k+1} − 1))`.
+    fn locate(generation: u64) -> (usize, usize) {
+        let idx = usize::try_from(generation).expect("generation fits usize");
+        let k = (idx / LEDGER_BASE + 1).ilog2() as usize;
+        assert!(k < LEDGER_CHUNKS, "publication ledger exhausted");
+        let base = LEDGER_BASE * ((1usize << k) - 1);
+        (k, idx - base)
+    }
+
+    /// Record a publication. Publisher-only (under the `admin` write
+    /// lock), and always *before* the generation counter advances.
+    fn put(&self, generation: u64, set: Weak<ShardSet>) {
+        let (k, off) = Self::locate(generation);
+        let chunk = self.chunks[k]
+            .get_or_init(|| (0..(LEDGER_BASE << k)).map(|_| OnceLock::new()).collect());
+        chunk[off].set(set).expect("generations are published once");
+    }
+
+    /// Resolve a generation to its live snapshot. `None` when that
+    /// publication was superseded and dropped — the caller re-reads the
+    /// generation counter and retries with a newer one.
+    fn get(&self, generation: u64) -> Option<Arc<ShardSet>> {
+        let (k, off) = Self::locate(generation);
+        self.chunks[k].get()?.get(off)?.get()?.upgrade()
+    }
+}
+
+impl fmt::Debug for PubLedger {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        f.write_str("PubLedger { .. }")
+    }
+}
+
+/// Sharded in-process KV store whose read path is wait-free w.r.t.
+/// writers (no reader-visible locks at all — see module docs).
 #[derive(Debug)]
 pub struct OnlineStore {
     store_id: u64,
-    /// Generation of the currently published [`ShardSet`]; bumped with
+    /// Generation of the currently published [`ShardSet`]; stored with
     /// `Release` on every publish, read with `Acquire` by readers.
     generation: AtomicU64,
-    /// Slow-path source of truth: held only long enough to clone/swap
-    /// the `Arc` — never across a map access or a rehash.
+    /// Publisher-side strong reference keeping the latest publication
+    /// alive. **Never** locked on the read path — readers resolve
+    /// snapshots through the [`PubLedger`].
     current: Mutex<Arc<ShardSet>>,
+    ledger: PubLedger,
     /// Writer/topology coordination: `merge`/`evict_expired` take read
-    /// (concurrent), `scale_to`/`set_ttl` take write (exclusive), and
-    /// the read path takes nothing.
+    /// (concurrent), publishes (`scale_to`/`set_ttl`/table
+    /// creation/growth) take write (exclusive), and the read path takes
+    /// nothing.
     admin: RwLock<()>,
     pub hits: AtomicU64,
     pub misses: AtomicU64,
@@ -139,15 +264,19 @@ impl Default for OnlineStore {
 impl OnlineStore {
     pub fn new(shards: usize) -> Self {
         assert!(shards > 0);
-        let set = ShardSet {
+        let set = Arc::new(ShardSet {
             generation: 0,
-            shards: Arc::new((0..shards).map(|_| RwLock::new(HashMap::new())).collect()),
+            n_shards: shards,
+            tables: HashMap::new(),
             ttls: HashMap::new(),
-        };
+        });
+        let ledger = PubLedger::new();
+        ledger.put(0, Arc::downgrade(&set));
         OnlineStore {
             store_id: NEXT_STORE_ID.fetch_add(1, Ordering::Relaxed),
             generation: AtomicU64::new(0),
-            current: Mutex::new(Arc::new(set)),
+            current: Mutex::new(set),
+            ledger,
             admin: RwLock::new(()),
             hits: AtomicU64::new(0),
             misses: AtomicU64::new(0),
@@ -156,9 +285,11 @@ impl OnlineStore {
 
     /// Current snapshot. Fast path: one atomic load + thread-local hit.
     /// Slow path (first use on this thread, or after a topology/TTL
-    /// publish): one brief `current` mutex lock to clone the `Arc`.
+    /// publish): ledger lookup + `Weak::upgrade` — still no lock. An
+    /// upgrade can only fail for a superseded generation, in which case
+    /// the generation counter has already advanced past it.
     fn snapshot(&self) -> Arc<ShardSet> {
-        let gen = self.generation.load(Ordering::Acquire);
+        let mut gen = self.generation.load(Ordering::Acquire);
         let hit = SNAPSHOT_CACHE.with(|c| {
             c.borrow()
                 .iter()
@@ -169,7 +300,20 @@ impl OnlineStore {
         if let Some(s) = hit {
             return s;
         }
-        let fresh = self.current.lock().unwrap().clone();
+        let fresh = loop {
+            if let Some(s) = self.ledger.get(gen) {
+                break s;
+            }
+            // A dead publication means a newer one exists; its generation
+            // store may not be visible on this thread yet (Weak::upgrade's
+            // failure read is Relaxed) — spin until the counter moves.
+            let newer = self.generation.load(Ordering::Acquire);
+            if newer == gen {
+                std::hint::spin_loop();
+            } else {
+                gen = newer;
+            }
+        };
         SNAPSHOT_CACHE.with(|c| {
             let mut c = c.borrow_mut();
             c.retain(|(id, _)| *id != self.store_id);
@@ -182,72 +326,167 @@ impl OnlineStore {
     }
 
     /// Publish a new shard set. Caller must hold the `admin` write lock.
+    /// Order matters for lock-free readers: ledger slot first, then the
+    /// generation counter (`Release`), then retire the old strong ref —
+    /// so a reader holding either generation value can always resolve
+    /// it, or observes the newer generation.
     fn publish(&self, set: ShardSet) {
         let gen = set.generation;
-        *self.current.lock().unwrap() = Arc::new(set);
+        let arc = Arc::new(set);
+        self.ledger.put(gen, Arc::downgrade(&arc));
         self.generation.store(gen, Ordering::Release);
+        *self.current.lock().unwrap() = arc;
+    }
+
+    /// The latest publication (publisher side; caller holds `admin`).
+    fn current(&self) -> Arc<ShardSet> {
+        self.current.lock().unwrap().clone()
     }
 
     pub fn shard_count(&self) -> usize {
-        self.snapshot().shards.len()
+        self.snapshot().n_shards
     }
 
-    /// Set a table's TTL. Publishes a new snapshot sharing the same
-    /// shard vector (no data is touched or copied).
+    /// Set a table's TTL. Publishes a new snapshot sharing every
+    /// table's shard array (no data is touched or copied).
     pub fn set_ttl(&self, table: &str, ttl_secs: i64) {
         let _topology = self.admin.write().unwrap();
-        let old = self.current.lock().unwrap().clone();
+        let old = self.current();
         let mut ttls = old.ttls.clone();
         ttls.insert(table.to_string(), ttl_secs);
         self.publish(ShardSet {
             generation: old.generation + 1,
-            shards: old.shards.clone(),
+            n_shards: old.n_shards,
+            tables: old.tables.clone(),
             ttls,
         });
     }
 
     /// Algorithm 2 (online branch). `now` is the processing-timeline
-    /// write moment (drives TTL). Records are grouped by shard so each
-    /// shard's write lock is taken once per batch.
+    /// write moment (drives TTL). Retries the whole batch after
+    /// creating the table or growing its shards; per attempt the stats
+    /// are rebuilt from scratch, so `inserted + skipped ==
+    /// records.len()` even when a growth retry reclassifies records
+    /// applied before the rebuild as `skipped`.
     pub fn merge(&self, table: &str, records: &[FeatureRecord], now: Timestamp) -> MergeStats {
-        let mut stats = MergeStats::default();
         if records.is_empty() {
-            return stats;
+            return MergeStats::default();
         }
-        let _writers = self.admin.read().unwrap();
-        let set = self.snapshot();
-        let n = set.shards.len();
+        loop {
+            let missing_table = {
+                let _writers = self.admin.read().unwrap();
+                let set = self.snapshot();
+                match set.tables.get(table) {
+                    None => true,
+                    Some(ts) => {
+                        if let Some(stats) = Self::merge_into(ts, records, now) {
+                            return stats;
+                        }
+                        false
+                    }
+                }
+            };
+            if missing_table {
+                self.ensure_table(table);
+            } else {
+                self.grow_table(table, records.len());
+            }
+        }
+    }
+
+    /// Apply a batch into one table's shards. Returns `None` when some
+    /// shard lacks room for its slice of the batch (checked under that
+    /// shard's write mutex *before* applying any of its records) — the
+    /// caller grows the table and retries.
+    fn merge_into(ts: &TableShards, records: &[FeatureRecord], now: Timestamp) -> Option<MergeStats> {
+        let n = ts.shards.len();
+        let mut stats = MergeStats::default();
         if let [r] = records {
             // Point-upsert fast path: no grouping allocation.
-            let mut shard = set.shards[shard_of(r.entity, n)].write().unwrap();
-            let tm = Self::table_map(&mut shard, table);
-            Self::apply(tm, r, now, &mut stats);
-            return stats;
+            let h = hash_of(r.entity);
+            let shard = &ts.shards[shard_idx(h, n)];
+            let mut ws = shard.write.lock().unwrap();
+            if !shard.map.has_room(&ws, 1) {
+                return None;
+            }
+            match shard.map.apply(&mut ws, h, r, now) {
+                seqlock::Applied::Inserted => stats.inserted += 1,
+                seqlock::Applied::Skipped => stats.skipped += 1,
+            }
+            return Some(stats);
         }
+        let mut hashes: Vec<u64> = Vec::with_capacity(records.len());
         let mut by_shard: Vec<Vec<usize>> = vec![Vec::new(); n];
         for (i, r) in records.iter().enumerate() {
-            by_shard[shard_of(r.entity, n)].push(i);
+            let h = hash_of(r.entity);
+            hashes.push(h);
+            by_shard[shard_idx(h, n)].push(i);
         }
         for (s, idxs) in by_shard.iter().enumerate() {
             if idxs.is_empty() {
                 continue;
             }
-            let mut shard = set.shards[s].write().unwrap();
-            let tm = Self::table_map(&mut shard, table);
+            let shard = &ts.shards[s];
+            let mut ws = shard.write.lock().unwrap();
+            if !shard.map.has_room(&ws, idxs.len()) {
+                return None;
+            }
             for &i in idxs {
-                Self::apply(tm, &records[i], now, &mut stats);
+                match shard.map.apply(&mut ws, hashes[i], &records[i], now) {
+                    seqlock::Applied::Inserted => stats.inserted += 1,
+                    seqlock::Applied::Skipped => stats.skipped += 1,
+                }
             }
         }
-        stats
+        Some(stats)
+    }
+
+    /// Publish a snapshot containing `table` (no-op if a racing merge
+    /// already created it).
+    fn ensure_table(&self, table: &str) {
+        let _topology = self.admin.write().unwrap();
+        let old = self.current();
+        if old.tables.contains_key(table) {
+            return;
+        }
+        let mut tables = old.tables.clone();
+        tables.insert(
+            table.to_string(),
+            Arc::new(TableShards::new(old.n_shards, INITIAL_SHARD_ROOM)),
+        );
+        self.publish(ShardSet {
+            generation: old.generation + 1,
+            n_shards: old.n_shards,
+            tables,
+            ttls: old.ttls.clone(),
+        });
+    }
+
+    /// Rebuild one table's shards with room for everything resident
+    /// plus `incoming` more, and publish. Readers on the old snapshot
+    /// are untouched; the gather is quiescent because we hold the
+    /// `admin` write lock (no writer runs).
+    fn grow_table(&self, table: &str, incoming: usize) {
+        let _topology = self.admin.write().unwrap();
+        let old = self.current();
+        let Some(ts) = old.tables.get(table) else { return };
+        let mut tables = old.tables.clone();
+        tables.insert(table.to_string(), Arc::new(ts.rebuilt(old.n_shards, incoming)));
+        self.publish(ShardSet {
+            generation: old.generation + 1,
+            n_shards: old.n_shards,
+            tables,
+            ttls: old.ttls.clone(),
+        });
     }
 
     /// Merge a sequence of `(table, records)` batches, coalescing per
     /// table (first-seen order, single batches applied in place) into
-    /// **one** shard-grouped [`OnlineStore::merge`] per table — the
-    /// write-side analogue of `get_many`'s lock amortization, shared by
-    /// the replication pumps and the serving write batcher. Alg 2 is
-    /// order-independent-convergent and the concatenation preserves
-    /// batch order, so the converged state equals per-batch application.
+    /// **one** [`OnlineStore::merge`] per table — the write-side batch
+    /// amortization shared by the replication pumps and the serving
+    /// write batcher. Alg 2 is order-independent-convergent and the
+    /// concatenation preserves batch order, so the converged state
+    /// equals per-batch application.
     pub fn merge_batches(
         &self,
         batches: &[(&str, &[FeatureRecord])],
@@ -276,49 +515,26 @@ impl OnlineStore {
         stats
     }
 
-    /// The table's entity map in `shard`, created on first write. Keyed
-    /// by `&str` first so the steady-state write path (table already
-    /// present) never allocates the table key — which is why the
-    /// `entry` API (and clippy's map_entry shape) is deliberately
-    /// avoided here.
-    #[allow(clippy::map_entry)]
-    fn table_map<'a>(shard: &'a mut TableMap, table: &str) -> &'a mut HashMap<EntityId, Entry> {
-        if !shard.contains_key(table) {
-            shard.insert(table.to_string(), HashMap::new());
+    /// The wait-free probe shared by `get`/`get_many`: snapshot lookup,
+    /// seqlock bucket read, TTL filter. No locks anywhere on this path.
+    fn probe(set: &ShardSet, table: &str, entity: EntityId, ttl: i64, now: Timestamp) -> Option<FeatureRecord> {
+        let ts = set.tables.get(table)?;
+        let h = hash_of(entity);
+        let hit = ts.shards[shard_idx(h, ts.shards.len())].map.read(entity, h)?;
+        if !live_at(&hit, ttl, now) {
+            return None;
         }
-        shard.get_mut(table).expect("just ensured present")
-    }
-
-    fn apply(
-        tm: &mut HashMap<EntityId, Entry>,
-        r: &FeatureRecord,
-        now: Timestamp,
-        stats: &mut MergeStats,
-    ) {
-        match tm.get(&r.entity) {
-            Some(e) if r.version() <= e.record.version() => stats.skipped += 1,
-            _ => {
-                tm.insert(r.entity, Entry { record: r.clone(), written_at: now });
-                stats.inserted += 1;
-            }
-        }
+        Some(FeatureRecord::new(entity, hit.event_ts, hit.creation_ts, &hit.values[..]))
     }
 
     /// Low-latency point lookup. Returns `None` for absent or TTL-expired
     /// entries — the caller distinguishes "not materialized" vs "no data"
-    /// through the scheduler's data-state (§4.3). Acquires no
-    /// store-global lock: one atomic load + one shard read lock.
+    /// through the scheduler's data-state (§4.3). Wait-free w.r.t.
+    /// writers: one atomic generation load, one seqlock bucket probe,
+    /// zero lock acquisitions.
     pub fn get(&self, table: &str, entity: EntityId, now: Timestamp) -> Option<FeatureRecord> {
         let set = self.snapshot();
-        let ttl = set.ttl_of(table);
-        let out = {
-            let shard = set.shards[shard_of(entity, set.shards.len())].read().unwrap();
-            shard
-                .get(table)
-                .and_then(|tm| tm.get(&entity))
-                .filter(|e| live(e, ttl, now))
-                .map(|e| e.record.clone())
-        };
+        let out = Self::probe(&set, table, entity, set.ttl_of(table), now);
         match &out {
             Some(_) => self.hits.fetch_add(1, Ordering::Relaxed),
             None => self.misses.fetch_add(1, Ordering::Relaxed),
@@ -326,10 +542,11 @@ impl OnlineStore {
         out
     }
 
-    /// Batched lookup (the serving batcher's unit of work): keys are
-    /// grouped by shard and each shard lock is taken exactly once, with
-    /// one TTL resolution for the whole batch. Result order matches the
-    /// input; `get_many(t, ks)[i] == get(t, ks[i])` for all `i`.
+    /// Batched lookup (the serving batcher's unit of work): one
+    /// snapshot load and one TTL resolution amortized over the batch,
+    /// then a wait-free seqlock probe per key — there are no shard
+    /// locks left to group by, so keys are served in input order.
+    /// `get_many(t, ks)[i] == get(t, ks[i])` for all `i`.
     pub fn get_many(
         &self,
         table: &str,
@@ -340,49 +557,40 @@ impl OnlineStore {
             return Vec::new();
         }
         let set = self.snapshot();
-        let n = set.shards.len();
         let ttl = set.ttl_of(table);
-        let mut out: Vec<Option<FeatureRecord>> = vec![None; entities.len()];
-        let mut by_shard: Vec<Vec<usize>> = vec![Vec::new(); n];
-        for (i, &e) in entities.iter().enumerate() {
-            by_shard[shard_of(e, n)].push(i);
-        }
         let (mut hits, mut misses) = (0u64, 0u64);
-        for (s, idxs) in by_shard.iter().enumerate() {
-            if idxs.is_empty() {
-                continue;
-            }
-            let shard = set.shards[s].read().unwrap();
-            match shard.get(table) {
-                None => misses += idxs.len() as u64,
-                Some(tm) => {
-                    for &i in idxs {
-                        match tm.get(&entities[i]).filter(|e| live(e, ttl, now)) {
-                            Some(e) => {
-                                out[i] = Some(e.record.clone());
-                                hits += 1;
-                            }
-                            None => misses += 1,
-                        }
-                    }
+        let out: Vec<Option<FeatureRecord>> = entities
+            .iter()
+            .map(|&e| {
+                let r = Self::probe(&set, table, e, ttl, now);
+                match &r {
+                    Some(_) => hits += 1,
+                    None => misses += 1,
                 }
-            }
-        }
+                r
+            })
+            .collect();
         self.hits.fetch_add(hits, Ordering::Relaxed);
         self.misses.fetch_add(misses, Ordering::Relaxed);
         out
     }
 
     /// Everything currently live in a table — the online→offline
-    /// bootstrap read (§4.5.5).
+    /// bootstrap read (§4.5.5). Lock-free scan; with concurrent writers
+    /// each *bucket* is observed consistently, the table as a whole is
+    /// not a point-in-time cut (same contract the per-shard-locked scan
+    /// had across shards).
     pub fn dump_table(&self, table: &str, now: Timestamp) -> Vec<FeatureRecord> {
         let set = self.snapshot();
         let ttl = set.ttl_of(table);
         let mut out = Vec::new();
-        for s in set.shards.iter() {
-            let shard = s.read().unwrap();
-            if let Some(tm) = shard.get(table) {
-                out.extend(tm.values().filter(|e| live(e, ttl, now)).map(|e| e.record.clone()));
+        if let Some(ts) = set.tables.get(table) {
+            for shard in &ts.shards {
+                shard.map.for_each_resident(|entity, hit| {
+                    if live_at(&hit, ttl, now) {
+                        out.push(FeatureRecord::new(entity, hit.event_ts, hit.creation_ts, &hit.values[..]));
+                    }
+                });
             }
         }
         out.sort_by_key(|r| r.entity);
@@ -390,29 +598,23 @@ impl OnlineStore {
     }
 
     /// Drop TTL-expired entries (Redis does this lazily + actively; we
-    /// expose it so tests and the freshness monitor can force it). Locks
-    /// one shard at a time — readers of other shards are unaffected and
-    /// readers never see expired data regardless (read-time filter).
+    /// expose it so tests and the freshness monitor can force it).
+    /// Takes one shard write mutex at a time — readers are never
+    /// blocked anywhere (expired entries are filtered at read time
+    /// regardless), and writers of other shards proceed.
     pub fn evict_expired(&self, now: Timestamp) -> u64 {
         let _writers = self.admin.read().unwrap();
         let set = self.snapshot();
         let mut evicted = 0;
-        for s in set.shards.iter() {
-            let mut shard = s.write().unwrap();
-            for (table, tm) in shard.iter_mut() {
-                let ttl = set.ttl_of(table);
-                if ttl == i64::MAX {
-                    continue;
-                }
-                tm.retain(|_, e| {
-                    let keep = live(e, ttl, now);
-                    if !keep {
-                        evicted += 1;
-                    }
-                    keep
-                });
+        for (table, ts) in set.tables.iter() {
+            let ttl = set.ttl_of(table);
+            if ttl == i64::MAX {
+                continue;
             }
-            shard.retain(|_, tm| !tm.is_empty());
+            for shard in &ts.shards {
+                let mut ws = shard.write.lock().unwrap();
+                evicted += shard.map.tombstone_expired(&mut ws, ttl, now);
+            }
         }
         evicted
     }
@@ -421,50 +623,36 @@ impl OnlineStore {
     /// paused for the rebalance (the `admin` write lock), but readers
     /// are **never** blocked: they keep serving the pre-scale snapshot
     /// until the new shard set is published, then switch over via the
-    /// generation check on their next operation.
+    /// generation check on their next operation. Rebuilding also starts
+    /// fresh value arenas, reclaiming slots leaked by overrides and
+    /// evictions.
     pub fn scale_to(&self, n: usize) -> Result<()> {
         if n == 0 {
             return Err(FsError::InvalidArg("shard count must be > 0".into()));
         }
         let _topology = self.admin.write().unwrap();
-        let old = self.current.lock().unwrap().clone();
-        // The new maps are private to this call until published, so the
-        // rehash takes no destination locks at all. Entries are cloned
-        // (not drained) so in-flight readers of the old set stay
-        // coherent; per (old shard, table) the entries are bucketed by
-        // destination first, so each table key is cloned per bucket,
-        // not per entry.
-        let mut new_maps: Vec<TableMap> = (0..n).map(|_| HashMap::new()).collect();
-        for s in old.shards.iter() {
-            // Writers are excluded by the admin write lock; concurrent
-            // readers share these read locks.
-            let shard = s.read().unwrap();
-            for (table, tm) in shard.iter() {
-                let mut buckets: Vec<Vec<(EntityId, Entry)>> = vec![Vec::new(); n];
-                for (&entity, entry) in tm.iter() {
-                    buckets[shard_of(entity, n)].push((entity, entry.clone()));
-                }
-                for (dest, bucket) in buckets.into_iter().enumerate() {
-                    if !bucket.is_empty() {
-                        new_maps[dest].entry(table.clone()).or_default().extend(bucket);
-                    }
-                }
-            }
-        }
+        let old = self.current();
+        let tables = old
+            .tables
+            .iter()
+            .map(|(name, ts)| (name.clone(), Arc::new(ts.rebuilt(n, 0))))
+            .collect();
         self.publish(ShardSet {
             generation: old.generation + 1,
-            shards: Arc::new(new_maps.into_iter().map(RwLock::new).collect()),
+            n_shards: n,
+            tables,
             ttls: old.ttls.clone(),
         });
         Ok(())
     }
 
     /// Resident entries (including not-yet-evicted expired ones).
+    /// Lock-free: sums the shards' atomic live counters.
     pub fn len(&self) -> usize {
         let set = self.snapshot();
-        set.shards
-            .iter()
-            .map(|s| s.read().unwrap().values().map(HashMap::len).sum::<usize>())
+        set.tables
+            .values()
+            .map(|ts| ts.shards.iter().map(|s| s.map.live()).sum::<usize>())
             .sum()
     }
 
@@ -703,5 +891,37 @@ mod tests {
             assert_eq!(got.event_ts, 151 + e as i64);
             assert_eq!(got.creation_ts, 151 + e as i64 + 1 + 7);
         }
+    }
+
+    #[test]
+    fn growth_retry_conserves_stats_totals() {
+        // A batch far bigger than a fresh table's initial room forces at
+        // least one rebuild-and-retry mid-merge; totals must still be
+        // exactly one count per record, and re-merging the same batch
+        // must classify every record as skipped.
+        let s = OnlineStore::new(3);
+        let rows: Vec<_> = (0..1_000).map(|i| rec(i, 10, 20, i as f32)).collect();
+        let m = s.merge("t", &rows, 20);
+        assert_eq!(m.inserted + m.skipped, 1_000);
+        assert_eq!(s.len(), 1_000);
+        let again = s.merge("t", &rows, 30);
+        assert_eq!(again.inserted, 0);
+        assert_eq!(again.skipped, 1_000);
+    }
+
+    #[test]
+    fn reads_are_lock_free_under_a_held_write_mutex() {
+        // A reader must complete while a writer-side shard mutex is held
+        // (the old RwLock interior would deadlock this test): pin the
+        // write mutex of every shard, then read on the same thread.
+        let s = Arc::new(OnlineStore::new(2));
+        s.merge("t", &[rec(1, 10, 20, 1.0)], 20);
+        let set = s.snapshot();
+        let guards: Vec<_> =
+            set.tables["t"].shards.iter().map(|sh| sh.write.lock().unwrap()).collect();
+        assert_eq!(s.get("t", 1, 30).unwrap().values[0], 1.0);
+        assert_eq!(s.get_many("t", &[1, 2], 30)[1], None);
+        assert_eq!(s.len(), 1);
+        drop(guards);
     }
 }

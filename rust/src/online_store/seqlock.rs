@@ -1,0 +1,511 @@
+//! Seqlock-stamped open-addressing bucket array — the shard interior of
+//! the online store. Point and batched reads are **wait-free with
+//! respect to writers**: a reader never acquires a lock a writer can
+//! hold; it only retries the handful of loads for a bucket a writer is
+//! mutating *at that instant*.
+//!
+//! # Layout
+//!
+//! A [`SeqlockMap`] is a power-of-two array of [`Bucket`]s (linear
+//! probing) plus a fixed **value arena** of `OnceLock<Arc<[f32]>>`
+//! slots. Every field a reader touches is an individual atomic, so the
+//! whole structure is unsafe-free: a torn read is impossible at the
+//! language level — the seqlock stamp exists to make a *composite* read
+//! of one bucket's fields atomic, not to paper over UB.
+//!
+//! * `vidx` encodes occupancy: [`EMPTY`] (never written), [`TOMBSTONE`]
+//!   (deleted), else an index into the value arena.
+//! * Variable-length feature vectors cannot be stored in atomics, so a
+//!   bucket stores only the arena index. A write **never mutates a
+//!   published arena slot**: it claims a fresh slot, sets its `OnceLock`
+//!   (immutable from then on), and only then points the bucket at it
+//!   inside the stamped write. Superseded slots leak until the owning
+//!   table is rebuilt (grow / `scale_to`), which starts a fresh arena —
+//!   the price of lock-free readers is deferred reclamation.
+//!
+//! # Writer protocol
+//!
+//! Writers are serialized per shard by a small `Mutex<WriteSide>` the
+//! *caller* holds — readers never touch it. With the mutex held, a
+//! mutation of bucket `b` is:
+//!
+//! ```text
+//! s = b.stamp.load(Relaxed)          // even: bucket stable
+//! b.stamp.store(s + 1, Relaxed)      // odd: write in progress
+//! fence(Release)                     // (W1) stamp=odd precedes data stores
+//! b.<fields>.store(.., Relaxed)      // the payload
+//! b.stamp.store(s + 2, Release)      // (W2) data stores precede stamp=even
+//! ```
+//!
+//! # Reader protocol
+//!
+//! ```text
+//! loop {
+//!   s1 = b.stamp.load(Acquire)       // (R1)
+//!   if s1 is odd { retry }
+//!   <fields> = b.<fields>.load(Relaxed)
+//!   fence(Acquire)                   // (R2) field loads precede the recheck
+//!   if b.stamp.load(Relaxed) == s1 { consistent — done }
+//! }
+//! ```
+//!
+//! # Why the orderings are sound
+//!
+//! This is the canonical C11 seqlock (Boehm, *Can seqlocks get along
+//! with programming language memory models?*, MSPC'12):
+//!
+//! * **(R1) Acquire ↔ (W2) Release** on the same stamp word: when a
+//!   reader's first load observes the even value a writer published
+//!   with (W2), every data store sequenced before (W2) is visible to
+//!   the reader's subsequent field loads. A fully-completed write is
+//!   therefore read coherently.
+//! * **(W1) release fence**: the odd-stamp store cannot be reordered
+//!   after the data stores that follow the fence. If a reader's field
+//!   loads observe *any* store of an in-progress write, the odd stamp
+//!   is already visible, so either (R1) sees it (odd → retry) or the
+//!   recheck after (R2) sees a changed stamp (→ retry).
+//! * **(R2) acquire fence**: the field loads cannot be reordered after
+//!   the recheck load. Without it the recheck could read the stamp
+//!   *before* the fields it is supposed to validate, accepting a torn
+//!   composite.
+//! * The stamp is a u64 advancing by 2 per write — reuse of a stamp
+//!   value (ABA) would need 2^63 writes between a reader's two loads.
+//! * Arena slots: the `OnceLock::set` is sequenced before the bucket's
+//!   `vidx` store inside the stamped section, so a reader that loaded a
+//!   consistent `vidx` observes the slot initialized (via the same
+//!   (R1)/(W2) pairing). `OnceLock::get() == None` is handled as one
+//!   more retry out of caution, not as a reachable state.
+//!
+//! Writers reading their own shard (version compares, eviction scans,
+//! rebuild gathers) hold the write mutex, so plain `Relaxed` loads
+//! suffice there — no other writer exists, and readers never store.
+//!
+//! The companion ThreadSanitizer CI job runs the `online_store` and
+//! `geo_fabric` suites under `-Zsanitizer=thread` as a standing
+//! detector for regressions in this argument.
+
+use std::sync::atomic::{fence, AtomicI64, AtomicU64, AtomicUsize, Ordering};
+use std::sync::{Arc, OnceLock};
+
+use crate::types::{EntityId, FeatureRecord, Timestamp};
+
+/// `vidx` sentinel: bucket has never held an entry. Readers stop
+/// probing here — writers never transition a bucket back to `EMPTY`
+/// (deletion uses [`TOMBSTONE`]), so a probe chain a concurrent reader
+/// is walking can never be cut short by a writer.
+pub(crate) const EMPTY: u64 = u64::MAX;
+/// `vidx` sentinel: entry deleted. Readers skip over it (the chain
+/// continues); writers may reuse it for a *new* key on insert.
+pub(crate) const TOMBSTONE: u64 = u64::MAX - 1;
+
+/// One open-addressing slot. All fields are individual atomics; the
+/// stamp makes their composite read atomic (module docs).
+#[derive(Debug)]
+struct Bucket {
+    /// Even = stable, odd = write in progress; +2 per completed write.
+    stamp: AtomicU64,
+    entity: AtomicU64,
+    event_ts: AtomicI64,
+    creation_ts: AtomicI64,
+    /// Processing-timeline write moment; TTL expiry is measured from
+    /// here (read-time filter + eviction).
+    written_at: AtomicI64,
+    /// [`EMPTY`], [`TOMBSTONE`], or an index into the value arena.
+    vidx: AtomicU64,
+}
+
+impl Bucket {
+    fn new() -> Bucket {
+        Bucket {
+            stamp: AtomicU64::new(0),
+            entity: AtomicU64::new(0),
+            event_ts: AtomicI64::new(0),
+            creation_ts: AtomicI64::new(0),
+            written_at: AtomicI64::new(0),
+            vidx: AtomicU64::new(EMPTY),
+        }
+    }
+}
+
+/// Writer-side bookkeeping for one shard, guarded by the shard's write
+/// mutex (owned by the caller — `online_store::SeqShard`). Readers
+/// never look at this.
+#[derive(Debug, Default)]
+pub(crate) struct WriteSide {
+    /// Next never-used arena slot.
+    pub arena_next: usize,
+    /// Occupied buckets: live entries **plus tombstones** (both lengthen
+    /// probe chains; only a rebuild reclaims tombstones).
+    pub used: usize,
+}
+
+/// A consistent composite read of one live bucket. `values` is the
+/// shared arena allocation — cloning the `Arc` is the only per-read
+/// refcount traffic.
+#[derive(Debug, Clone)]
+pub(crate) struct ReadHit {
+    pub event_ts: Timestamp,
+    pub creation_ts: Timestamp,
+    pub written_at: Timestamp,
+    pub values: Arc<[f32]>,
+}
+
+/// One consistent bucket observation.
+enum Slot {
+    Empty,
+    Tombstone,
+    Full { entity: EntityId, event_ts: Timestamp, creation_ts: Timestamp, written_at: Timestamp, vidx: u64 },
+}
+
+/// Outcome of a writer's Algorithm-2 apply.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub(crate) enum Applied {
+    /// Inserted or overrode (the record now owns the entity's slot).
+    Inserted,
+    /// Version `<=` existing — no-op.
+    Skipped,
+}
+
+/// Arena slots per bucket: overrides consume fresh slots without
+/// consuming buckets, so the arena is sized ahead of the bucket array.
+const ARENA_FACTOR: usize = 2;
+
+/// Fixed-capacity seqlock bucket array. Capacity decisions (growth) are
+/// the owner's job: writers must call [`SeqlockMap::has_room`] before a
+/// batch and rebuild the map into a larger one when it says no.
+#[derive(Debug)]
+pub(crate) struct SeqlockMap {
+    buckets: Box<[Bucket]>,
+    /// `buckets.len() - 1` (power-of-two sizing).
+    mask: usize,
+    /// Value arena; slots are claimed in order and immutable once set.
+    values: Box<[OnceLock<Arc<[f32]>>]>,
+    /// Resident entries (including TTL-expired-not-yet-evicted) —
+    /// readers' `len` without any lock.
+    live: AtomicUsize,
+}
+
+impl SeqlockMap {
+    /// A map with room for at least `expected` live entries plus the
+    /// same again in tombstones/overrides before a rebuild is needed.
+    pub fn with_room_for(expected: usize) -> SeqlockMap {
+        let cap = (expected.max(4) * 2).next_power_of_two();
+        SeqlockMap {
+            buckets: (0..cap).map(|_| Bucket::new()).collect(),
+            mask: cap - 1,
+            values: (0..cap * ARENA_FACTOR).map(|_| OnceLock::new()).collect(),
+            live: AtomicUsize::new(0),
+        }
+    }
+
+    pub fn live(&self) -> usize {
+        self.live.load(Ordering::Relaxed)
+    }
+
+    /// Max occupied buckets: keep ≥ 1/4 of the array `EMPTY` so probe
+    /// chains stay short and reader probes always terminate.
+    fn max_used(&self) -> usize {
+        let cap = self.buckets.len();
+        cap - cap / 4
+    }
+
+    /// Home bucket. The *high* hash bits index buckets: the caller
+    /// already spent the low bits on `hash % n_shards`, and reusing them
+    /// here would cluster every key of a shard into a fraction of its
+    /// buckets whenever the shard count shares factors with the
+    /// capacity.
+    fn home(&self, hash: u64) -> usize {
+        (hash >> 32) as usize & self.mask
+    }
+
+    /// Can a writer apply a batch of `incoming` records without
+    /// overrunning buckets or arena? Conservative: counts every record
+    /// as a fresh insert + fresh arena slot. Callers check this under
+    /// the write mutex before applying and trigger a rebuild on `false`.
+    pub fn has_room(&self, ws: &WriteSide, incoming: usize) -> bool {
+        ws.used + incoming <= self.max_used() && ws.arena_next + incoming <= self.values.len()
+    }
+
+    // ---- reader side (no locks, ever) --------------------------------
+
+    /// One consistent observation of bucket `i` (spins only while a
+    /// writer is mid-write on this very bucket).
+    fn load_bucket(&self, i: usize) -> Slot {
+        let b = &self.buckets[i];
+        loop {
+            let s1 = b.stamp.load(Ordering::Acquire); // (R1)
+            if s1 & 1 == 1 {
+                std::hint::spin_loop();
+                continue;
+            }
+            let vidx = b.vidx.load(Ordering::Relaxed);
+            let entity = b.entity.load(Ordering::Relaxed);
+            let event_ts = b.event_ts.load(Ordering::Relaxed);
+            let creation_ts = b.creation_ts.load(Ordering::Relaxed);
+            let written_at = b.written_at.load(Ordering::Relaxed);
+            fence(Ordering::Acquire); // (R2)
+            if b.stamp.load(Ordering::Relaxed) != s1 {
+                std::hint::spin_loop();
+                continue;
+            }
+            return match vidx {
+                EMPTY => Slot::Empty,
+                TOMBSTONE => Slot::Tombstone,
+                _ => Slot::Full { entity, event_ts, creation_ts, written_at, vidx },
+            };
+        }
+    }
+
+    /// Arena fetch for a consistently-observed `vidx`. `None` only under
+    /// the theoretical publish race the module docs rule out — treated
+    /// as "retry the bucket".
+    fn value(&self, vidx: u64) -> Option<Arc<[f32]>> {
+        self.values[vidx as usize].get().cloned()
+    }
+
+    /// Wait-free point read. `hash` is the caller's avalanched entity
+    /// hash (also used for shard routing).
+    pub fn read(&self, entity: EntityId, hash: u64) -> Option<ReadHit> {
+        let cap = self.buckets.len();
+        let mut i = self.home(hash);
+        for _ in 0..cap {
+            match self.load_bucket(i) {
+                Slot::Empty => return None,
+                Slot::Tombstone => {}
+                Slot::Full { entity: e, event_ts, creation_ts, written_at, vidx } => {
+                    if e == entity {
+                        match self.value(vidx) {
+                            Some(values) =>
+                                return Some(ReadHit { event_ts, creation_ts, written_at, values }),
+                            None => continue, // re-observe this bucket
+                        }
+                    }
+                }
+            }
+            i = (i + 1) & self.mask;
+        }
+        None
+    }
+
+    /// Visit every resident entry (including TTL-expired ones) with a
+    /// per-bucket-consistent observation. Concurrent writers make this a
+    /// *per-bucket* snapshot, not a map-wide one — callers that need a
+    /// quiescent view (rebuilds) exclude writers first.
+    pub fn for_each_resident(&self, mut f: impl FnMut(EntityId, ReadHit)) {
+        for i in 0..self.buckets.len() {
+            loop {
+                match self.load_bucket(i) {
+                    Slot::Full { entity, event_ts, creation_ts, written_at, vidx } => {
+                        match self.value(vidx) {
+                            Some(values) => {
+                                f(entity, ReadHit { event_ts, creation_ts, written_at, values });
+                                break;
+                            }
+                            None => continue,
+                        }
+                    }
+                    _ => break,
+                }
+            }
+        }
+    }
+
+    // ---- writer side (caller holds the shard write mutex) ------------
+
+    fn begin_write(b: &Bucket) -> u64 {
+        let s = b.stamp.load(Ordering::Relaxed);
+        debug_assert_eq!(s & 1, 0, "write mutex must serialize writers");
+        b.stamp.store(s.wrapping_add(1), Ordering::Relaxed);
+        fence(Ordering::Release); // (W1)
+        s
+    }
+
+    fn end_write(b: &Bucket, s: u64) {
+        b.stamp.store(s.wrapping_add(2), Ordering::Release); // (W2)
+    }
+
+    /// Claim a fresh arena slot for `values`.
+    fn alloc_value(&self, ws: &mut WriteSide, values: &[f32]) -> u64 {
+        let vi = ws.arena_next;
+        ws.arena_next += 1;
+        self.values[vi]
+            .set(Arc::from(values))
+            .expect("arena slots are claimed exactly once");
+        vi as u64
+    }
+
+    /// Algorithm 2 (online branch) for one record. The caller holds the
+    /// shard write mutex and has verified [`Self::has_room`] for the
+    /// batch this record belongs to.
+    pub fn apply(&self, ws: &mut WriteSide, hash: u64, r: &FeatureRecord, now: Timestamp) -> Applied {
+        let cap = self.buckets.len();
+        let mut i = self.home(hash);
+        let mut reusable: Option<usize> = None;
+        for _ in 0..cap {
+            let b = &self.buckets[i];
+            // Plain loads: fields only change under the mutex we hold.
+            let vidx = b.vidx.load(Ordering::Relaxed);
+            if vidx == EMPTY {
+                self.insert_at(ws, reusable.unwrap_or(i), r, now);
+                return Applied::Inserted;
+            }
+            if vidx == TOMBSTONE {
+                reusable.get_or_insert(i);
+            } else if b.entity.load(Ordering::Relaxed) == r.entity {
+                let existing = (b.event_ts.load(Ordering::Relaxed), b.creation_ts.load(Ordering::Relaxed));
+                if r.version() <= existing {
+                    return Applied::Skipped;
+                }
+                // Override in place: fresh arena slot, stamped swap.
+                let vi = self.alloc_value(ws, &r.values);
+                let s = Self::begin_write(b);
+                b.event_ts.store(r.event_ts, Ordering::Relaxed);
+                b.creation_ts.store(r.creation_ts, Ordering::Relaxed);
+                b.written_at.store(now, Ordering::Relaxed);
+                b.vidx.store(vi, Ordering::Relaxed);
+                Self::end_write(b, s);
+                return Applied::Inserted;
+            }
+            i = (i + 1) & self.mask;
+        }
+        unreachable!("has_room keeps ≥ cap/4 buckets EMPTY, so probes terminate");
+    }
+
+    fn insert_at(&self, ws: &mut WriteSide, i: usize, r: &FeatureRecord, now: Timestamp) {
+        let vi = self.alloc_value(ws, &r.values);
+        let b = &self.buckets[i];
+        if b.vidx.load(Ordering::Relaxed) == EMPTY {
+            ws.used += 1; // tombstone reuse keeps `used` flat
+        }
+        let s = Self::begin_write(b);
+        b.entity.store(r.entity, Ordering::Relaxed);
+        b.event_ts.store(r.event_ts, Ordering::Relaxed);
+        b.creation_ts.store(r.creation_ts, Ordering::Relaxed);
+        b.written_at.store(now, Ordering::Relaxed);
+        b.vidx.store(vi, Ordering::Relaxed);
+        Self::end_write(b, s);
+        self.live.fetch_add(1, Ordering::Relaxed);
+    }
+
+    /// Build-time insert of a gathered entry (rebuild / `scale_to`).
+    /// Caller guarantees unique entities and a map sized by
+    /// [`Self::with_room_for`]; the map is not yet published, so there
+    /// is no contention — the stamp protocol is kept for uniformity.
+    pub fn seed(
+        &self,
+        ws: &mut WriteSide,
+        entity: EntityId,
+        hash: u64,
+        hit: &ReadHit,
+    ) {
+        let vi = ws.arena_next;
+        ws.arena_next += 1;
+        self.values[vi]
+            .set(hit.values.clone())
+            .expect("arena slots are claimed exactly once");
+        let cap = self.buckets.len();
+        let mut i = self.home(hash);
+        for _ in 0..cap {
+            let b = &self.buckets[i];
+            if b.vidx.load(Ordering::Relaxed) == EMPTY {
+                ws.used += 1;
+                let s = Self::begin_write(b);
+                b.entity.store(entity, Ordering::Relaxed);
+                b.event_ts.store(hit.event_ts, Ordering::Relaxed);
+                b.creation_ts.store(hit.creation_ts, Ordering::Relaxed);
+                b.written_at.store(hit.written_at, Ordering::Relaxed);
+                b.vidx.store(vi as u64, Ordering::Relaxed);
+                Self::end_write(b, s);
+                self.live.fetch_add(1, Ordering::Relaxed);
+                return;
+            }
+            i = (i + 1) & self.mask;
+        }
+        unreachable!("with_room_for sized the rebuild target");
+    }
+
+    /// Tombstone every entry whose TTL elapsed. Returns entries
+    /// reclaimed. Arena slots are *not* reclaimed (rebuild-only); the
+    /// caller holds the write mutex.
+    pub fn tombstone_expired(&self, _ws: &mut WriteSide, ttl: i64, now: Timestamp) -> u64 {
+        let mut n = 0;
+        for b in self.buckets.iter() {
+            let vidx = b.vidx.load(Ordering::Relaxed);
+            if vidx == EMPTY || vidx == TOMBSTONE {
+                continue;
+            }
+            if now - b.written_at.load(Ordering::Relaxed) >= ttl {
+                let s = Self::begin_write(b);
+                b.vidx.store(TOMBSTONE, Ordering::Relaxed);
+                Self::end_write(b, s);
+                self.live.fetch_sub(1, Ordering::Relaxed);
+                n += 1;
+            }
+        }
+        n
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::online_store::hash_of;
+
+    fn rec(entity: u64, event: i64, created: i64, v: f32) -> FeatureRecord {
+        FeatureRecord::new(entity, event, created, vec![v])
+    }
+
+    #[test]
+    fn insert_read_override_skip() {
+        let m = SeqlockMap::with_room_for(8);
+        let mut ws = WriteSide::default();
+        assert!(m.read(1, hash_of(1)).is_none());
+        assert_eq!(m.apply(&mut ws, hash_of(1), &rec(1, 10, 20, 1.0), 100), Applied::Inserted);
+        let hit = m.read(1, hash_of(1)).unwrap();
+        assert_eq!((hit.event_ts, hit.creation_ts, hit.written_at), (10, 20, 100));
+        assert_eq!(&hit.values[..], &[1.0]);
+        // Stale version skips, fresher overrides.
+        assert_eq!(m.apply(&mut ws, hash_of(1), &rec(1, 9, 99, 9.0), 101), Applied::Skipped);
+        assert_eq!(m.apply(&mut ws, hash_of(1), &rec(1, 10, 30, 2.0), 102), Applied::Inserted);
+        assert_eq!(&m.read(1, hash_of(1)).unwrap().values[..], &[2.0]);
+        assert_eq!(m.live(), 1);
+    }
+
+    #[test]
+    fn tombstone_then_reuse_keeps_chains_walkable() {
+        let m = SeqlockMap::with_room_for(16);
+        let mut ws = WriteSide::default();
+        for e in 0..10u64 {
+            m.apply(&mut ws, hash_of(e), &rec(e, 1, 1, e as f32), 0);
+        }
+        assert_eq!(m.tombstone_expired(&mut ws, 10, 100), 10);
+        assert_eq!(m.live(), 0);
+        for e in 0..10u64 {
+            assert!(m.read(e, hash_of(e)).is_none(), "{e}");
+        }
+        // Reinsert through the tombstones.
+        for e in 0..10u64 {
+            m.apply(&mut ws, hash_of(e), &rec(e, 2, 2, -(e as f32)), 200);
+        }
+        for e in 0..10u64 {
+            assert_eq!(&m.read(e, hash_of(e)).unwrap().values[..], &[-(e as f32)]);
+        }
+        assert_eq!(m.live(), 10);
+    }
+
+    #[test]
+    fn has_room_is_conservative_and_resident_scan_sees_all() {
+        let m = SeqlockMap::with_room_for(4);
+        let mut ws = WriteSide::default();
+        let mut inserted = 0u64;
+        while m.has_room(&ws, 1) {
+            m.apply(&mut ws, hash_of(inserted), &rec(inserted, 1, 1, 0.0), 0);
+            inserted += 1;
+        }
+        assert!(inserted >= 4, "sized for at least the requested room");
+        let mut seen = Vec::new();
+        m.for_each_resident(|e, _| seen.push(e));
+        seen.sort_unstable();
+        assert_eq!(seen, (0..inserted).collect::<Vec<_>>());
+    }
+}

@@ -17,12 +17,14 @@
 //!    trip **once per batch** instead of once per key, and feeds
 //!    latency + hit/miss metrics into the SLA machinery.
 //!
-//! Underneath, `OnlineStore::get_many` groups the batch's keys by shard
-//! and takes each shard lock exactly once; point reads never take a
-//! store-global lock (see the `online_store` module docs for the
-//! snapshot/generation design). Together this makes batch size the
-//! lever that amortizes *both* store synchronization and simulated WAN
-//! cost — experiment E9 in `benches/online_retrieval.rs` measures it.
+//! Underneath, `OnlineStore` reads are wait-free with respect to
+//! writers — seqlock bucket probes, no reader-visible locks at all —
+//! and `get_many` amortizes the snapshot load and TTL resolution over
+//! the batch (see the `online_store` module docs for the
+//! seqlock/snapshot design). Together this makes batch size the lever
+//! that amortizes per-request overhead and simulated WAN cost —
+//! experiments E9a–E9f in `benches/online_retrieval.rs` measure it,
+//! E9f specifically the read-vs-write non-interference.
 //!
 //! # Overload behavior
 //!

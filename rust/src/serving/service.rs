@@ -5,7 +5,7 @@
 //! * [`OnlineServing::lookup`] — one point read, one routing decision.
 //! * [`OnlineServing::lookup_batch`] / [`OnlineServing::lookup_many`] —
 //!   the batched path: one routing decision and **one** WAN round trip
-//!   for the whole key set, served by the store's sharded `get_many`.
+//!   for the whole key set, served by the store's lock-free `get_many`.
 //!   This is what the [`super::batcher::MicroBatcher`] drains into.
 
 use std::sync::Arc;
@@ -77,8 +77,8 @@ impl OnlineServing {
 
     /// The batched lookup endpoint: resolve the route once, then serve
     /// the whole key set with one `CrossRegionAccess::lookup_many` (one
-    /// WAN round trip, per-shard-amortized store access). Records batch
-    /// latency and per-key hit/miss metrics.
+    /// WAN round trip, one snapshot load; the per-key probes are
+    /// lock-free). Records batch latency and per-key hit/miss metrics.
     pub fn lookup_batch(
         &self,
         table: &str,

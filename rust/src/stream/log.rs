@@ -142,7 +142,7 @@ impl<T: Clone> PartitionedLog<T> {
 }
 
 /// splitmix-style avalanche so textual keys with common prefixes spread
-/// across partitions (mirrors `online_store::shard_of`; also the
+/// across partitions (mirrors `online_store::hash_of`; also the
 /// replication fabric's table→partition router).
 pub(crate) fn hash_key(key: &str) -> u64 {
     let mut x = 0xcbf29ce484222325u64;

@@ -137,6 +137,52 @@ fn blocked_region_does_not_stall_another_regions_apply() {
 }
 
 #[test]
+fn parallel_pump_converges_fast_region_while_slow_region_is_blocked() {
+    // Sequential `pump` walks regions on one thread: with the slow
+    // region's cursor lock held it blocks before ever reaching the fast
+    // region, so the fast region's convergence time is hostage to the
+    // slow one. `pump_parallel` fans each region onto the pool — the
+    // fast region must fully converge while the slow one is still
+    // stuck, i.e. while `pump_parallel` as a whole has not returned.
+    let slow = Arc::new(OnlineStore::new(2));
+    let fast = Arc::new(OnlineStore::new(2));
+    let fabric = ReplicationFabric::new(
+        2,
+        vec![("slow".into(), slow.clone(), 0), ("fast".into(), fast.clone(), 0)],
+        None,
+    );
+    for i in 0..5u64 {
+        fabric.append("t", &[rec(i, i as i64, i as i64 + 1, 1.0)], 0);
+    }
+    let pump = fabric.while_region_locked("slow", || {
+        let f2 = fabric.clone();
+        let pump = std::thread::spawn(move || {
+            let pool = ThreadPool::new(2);
+            f2.pump_parallel(100, &pool)
+        });
+        let deadline = std::time::Instant::now() + Duration::from_secs(10);
+        while fabric.backlog("fast") > 0 && std::time::Instant::now() < deadline {
+            std::thread::sleep(Duration::from_millis(1));
+        }
+        assert_eq!(fabric.backlog("fast"), 0, "fast region must converge while slow is blocked");
+        for i in 0..5u64 {
+            assert!(fast.get("t", i, 100).is_some(), "entity {i} missing on fast replica");
+        }
+        assert_eq!(fabric.backlog("slow"), 5, "blocked region untouched");
+        pump
+    });
+    // Lock released: the slow region's task proceeds and the pump joins.
+    let applied = pump.join().unwrap();
+    assert_eq!(applied["fast"], 5);
+    assert_eq!(applied["slow"], 5, "slow region applies once its lock frees");
+    assert_eq!(fabric.backlog("slow"), 0);
+    for i in 0..5u64 {
+        assert!(slow.get("t", i, 100).is_some());
+    }
+    assert_eq!(fabric.truncate_applied(), 5);
+}
+
+#[test]
 fn read_your_writes_never_returns_pre_token_state() {
     let mut rng = Rng::new(29);
     let topology = Arc::new(GeoTopology::default_four_region());
