@@ -55,4 +55,12 @@ fn main() {
         .unwrap_or_else(|_| PathBuf::from("BENCH_load.json"));
     report.write_json(&out).expect("write BENCH_load.json");
     println!("wrote {} (seed {seed})", out.display());
+
+    // Per-phase metrics deltas, as their own artifact next to the main
+    // report (override with GEOFS_BENCH_METRICS_OUT).
+    let metrics_out = std::env::var("GEOFS_BENCH_METRICS_OUT")
+        .map(PathBuf::from)
+        .unwrap_or_else(|_| PathBuf::from("BENCH_load_metrics.json"));
+    report.write_metrics_json(&metrics_out).expect("write BENCH_load_metrics.json");
+    println!("wrote {}", metrics_out.display());
 }

@@ -73,6 +73,7 @@ fn deps(
         pool,
         fabric: None,
         checkpoints: None,
+        tracer: None,
     };
     (d, offline, online)
 }

@@ -23,6 +23,8 @@ use crate::metadata::assets::{EntitySpec, FeatureSetSpec, FeatureStoreSpec};
 use crate::metadata::catalog::Catalog;
 use crate::monitor::freshness::FreshnessTracker;
 use crate::monitor::metrics::{MetricKind, MetricsRegistry};
+use crate::monitor::names;
+use crate::monitor::trace::{CompletedTrace, TraceConfig, Tracer};
 use crate::offline_store::{CompactionDriver, OfflineStore};
 use crate::online_store::OnlineStore;
 use crate::query::offline::{OfflineQueryEngine, TrainingFrame};
@@ -59,6 +61,12 @@ pub struct OpenOptions {
     /// [`crate::serving::AdmissionController`] in front of every
     /// tenant-attributed online read.
     pub admission: Option<crate::serving::AdmissionConfig>,
+    /// Request-tracing policy. The default (`sample_every: 0`) keeps
+    /// every request untraced — the sampling check is a single field
+    /// compare, no atomics — while still letting operators flip on
+    /// 1-in-N sampling or the slow-op log without reopening the store's
+    /// serving topology.
+    pub trace: TraceConfig,
 }
 
 impl Default for OpenOptions {
@@ -70,6 +78,7 @@ impl Default for OpenOptions {
             geo_fenced: false,
             fault_rates: None,
             admission: None,
+            trace: TraceConfig::default(),
         }
     }
 }
@@ -89,6 +98,12 @@ pub struct FeatureStore {
     pub rbac: Arc<Rbac>,
     pub lineage: Arc<Lineage>,
     pub metrics: Arc<MetricsRegistry>,
+    /// Store-wide request tracer (policy from [`OpenOptions::trace`]):
+    /// sampled traces from the serving path, the PIT engine, stream
+    /// polls, and the background drivers all land in its rings —
+    /// drain via [`FeatureStore::recent_traces`] /
+    /// [`FeatureStore::slow_ops`].
+    pub tracer: Arc<Tracer>,
     pub freshness: Arc<FreshnessTracker>,
     pub interner: Arc<EntityInterner>,
     pub scheduler: Arc<Scheduler>,
@@ -162,6 +177,7 @@ impl FeatureStore {
             clock.clone(),
         ));
         let metrics = Arc::new(MetricsRegistry::new());
+        let tracer = Tracer::new(opts.trace.clone());
         let fabric = (opts.geo_replication && !opts.geo_fenced && config.regions.len() > 1)
             .then(|| {
                 let replicas = config
@@ -183,11 +199,12 @@ impl FeatureStore {
         // concurrently on the shared pool so a slow replica never
         // delays the others' convergence.
         let repl_driver = fabric.as_ref().map(|f| {
-            ReplicationDriver::spawn_with_pool(
+            ReplicationDriver::spawn_observed(
                 f.clone(),
                 clock.clone(),
                 std::time::Duration::from_millis(20),
                 pool.clone(),
+                Some(tracer.clone()),
             )
         });
         let scheduler =
@@ -195,10 +212,11 @@ impl FeatureStore {
         // The offline store's tier merges are background-only now (no
         // inline compaction on any writer), so the managed store always
         // runs the driver; `stop_compaction` opts out.
-        let compaction = CompactionDriver::spawn_with(
+        let compaction = CompactionDriver::spawn_observed(
             offline.clone(),
             std::time::Duration::from_millis(100),
             Some(metrics.clone()),
+            Some(tracer.clone()),
         );
         let routes = Arc::new(RouteTable::new());
         let admission = opts
@@ -207,14 +225,16 @@ impl FeatureStore {
             .map(|cfg| {
                 crate::serving::AdmissionController::new(cfg.clone(), Some(metrics.clone()))
             });
-        let serving = Arc::new(match &admission {
+        let mut serving = match &admission {
             Some(ctrl) => OnlineServing::with_admission(
                 ServingRouter::new(routes.clone()),
                 metrics.clone(),
                 ctrl.clone(),
             ),
             None => OnlineServing::new(ServingRouter::new(routes.clone()), metrics.clone()),
-        });
+        };
+        serving.tracer = Some(tracer.clone());
+        let serving = Arc::new(serving);
         Ok(Arc::new(FeatureStore {
             materializer: Arc::new(Materializer::new(engine, interner.clone())),
             pool,
@@ -224,6 +244,7 @@ impl FeatureStore {
             rbac: Arc::new(Rbac::new()),
             lineage: Arc::new(Lineage::new()),
             metrics,
+            tracer,
             freshness: Arc::new(FreshnessTracker::new()),
             interner,
             scheduler,
@@ -342,8 +363,8 @@ impl FeatureStore {
             if let Some(f) = &fabric {
                 f.append(&table, &records, now);
             }
-            metrics.inc(MetricKind::System, "materialized_records", records.len() as u64);
-            metrics.inc(MetricKind::System, "materialization_jobs", 1);
+            metrics.inc(MetricKind::System, names::MATERIALIZED_RECORDS, records.len() as u64);
+            metrics.inc(MetricKind::System, names::MATERIALIZATION_JOBS, 1);
             let _ = report; // per-sink stats are surfaced via metrics
             Ok(records.len() as u64)
         })
@@ -439,6 +460,7 @@ impl FeatureStore {
                 pool: Some(self.pool.clone()),
                 fabric: self.fabric.clone(),
                 checkpoints: Some(self.checkpoints.clone()),
+                tracer: Some(self.tracer.clone()),
             },
         )?;
         streams.insert(table.to_string(), ing);
@@ -549,10 +571,11 @@ impl FeatureStore {
         // Drop-then-spawn: dropping joins the old driver, so two
         // drivers never race the same store.
         g.take();
-        *g = Some(CompactionDriver::spawn_with(
+        *g = Some(CompactionDriver::spawn_observed(
             self.offline.clone(),
             period,
             Some(self.metrics.clone()),
+            Some(self.tracer.clone()),
         ));
     }
 
@@ -738,15 +761,42 @@ impl FeatureStore {
             .map(|(key, ts)| Observation { entity: self.interner.intern(key), ts: *ts })
             .collect();
         let specs: HashMap<String, FeatureSetSpec> = self.feature_set_specs();
+        let trace = self.tracer.maybe_trace("training_frame");
+        if let Some(t) = &trace {
+            t.event("request", format!("obs={} features={}", obs.len(), features.len()));
+        }
         // The engine streams the store's columnar segments and fans the
         // per-table joins out over the store's worker pool.
-        let engine = OfflineQueryEngine::with_pool(self.offline.clone(), self.pool.clone());
+        let mut engine = OfflineQueryEngine::with_pool(self.offline.clone(), self.pool.clone());
+        if let Some(t) = &trace {
+            engine = engine.with_trace(t.clone());
+        }
         let frame = engine.get_training_frame(&obs, features, &specs, cfg)?;
         if let Some(model) = model {
             self.lineage.record(model, features, consumer_region, self.clock.now());
         }
-        self.metrics.inc(MetricKind::System, "training_rows_served", frame.len() as u64);
+        self.metrics.inc(MetricKind::System, names::TRAINING_ROWS_SERVED, frame.len() as u64);
+        if let Some(t) = &trace {
+            t.event("result", format!("rows={}", frame.len()));
+            t.finish();
+        }
         Ok(frame)
+    }
+
+    // ---- observability (request tracing) -----------------------------------
+
+    /// Drain the store's recent completed traces (oldest first). Sampled
+    /// per [`OpenOptions::trace`]; empty when tracing is off.
+    pub fn recent_traces(&self) -> Vec<Arc<CompletedTrace>> {
+        self.tracer.recent()
+    }
+
+    /// Drain the slow-op log: every sampled request whose total duration
+    /// crossed [`TraceConfig::slow_threshold_us`], full span tree
+    /// included. Bounded ring — oldest entries are evicted, never
+    /// blocked on.
+    pub fn slow_ops(&self) -> Vec<Arc<CompletedTrace>> {
+        self.tracer.slow_ops()
     }
 
     /// Data-state introspection (§4.3): is the window materialized?

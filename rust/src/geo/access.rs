@@ -33,6 +33,7 @@ use std::sync::Arc;
 
 use super::replication::{ReplicationFabric, SessionToken};
 use super::topology::GeoTopology;
+use crate::monitor::trace::TraceContext;
 use crate::online_store::OnlineStore;
 use crate::types::{EntityId, FeatureRecord, Result, Timestamp};
 
@@ -237,11 +238,41 @@ impl CrossRegionAccess {
         now: Timestamp,
         consistency: &ReadConsistency,
     ) -> Result<RoutedBatch> {
+        self.lookup_many_traced(consumer_region, table, entities, now, consistency, None)
+    }
+
+    /// [`Self::lookup_many`] with request tracing: when the request was
+    /// sampled, records the routing decision (mechanism, consistency
+    /// policy, replica staleness, simulated wire cost) and a timed span
+    /// around the store read with its hit count.
+    pub fn lookup_many_traced(
+        &self,
+        consumer_region: &str,
+        table: &str,
+        entities: &[EntityId],
+        now: Timestamp,
+        consistency: &ReadConsistency,
+        trace: Option<&TraceContext>,
+    ) -> Result<RoutedBatch> {
         let (mechanism, store, wire_us, staleness_secs) =
             self.route_target(consumer_region, consistency, now)?;
+        if let Some(t) = trace {
+            t.event(
+                "route",
+                format!(
+                    "mech={mechanism:?} consistency={consistency:?} \
+                     staleness={staleness_secs}s wire_us={wire_us}"
+                ),
+            );
+        }
+        let g = trace.map(|t| t.span("store_read"));
         let t0 = std::time::Instant::now();
         let records = store.get_many(table, entities, now);
         let compute = t0.elapsed().as_micros() as u64;
+        if let Some(g) = &g {
+            let hits = records.iter().filter(|r| r.is_some()).count();
+            g.note(format!("keys={} hits={hits}", entities.len()));
+        }
         Ok(RoutedBatch { records, mechanism, latency_us: wire_us + compute, staleness_secs })
     }
 }

@@ -37,6 +37,8 @@ use std::sync::{Arc, Mutex};
 use std::time::Duration;
 
 use crate::monitor::metrics::{MetricKind, MetricsRegistry};
+use crate::monitor::names;
+use crate::monitor::trace::Tracer;
 use crate::online_store::OnlineStore;
 use crate::stream::log::PartitionedLog;
 use crate::types::{FeatureRecord, Timestamp};
@@ -326,7 +328,7 @@ impl ReplicationFabric {
         if let Some(m) = &self.metrics {
             m.set_gauge(
                 MetricKind::System,
-                "repl_apply_parallel",
+                names::REPL_APPLY_PARALLEL,
                 self.regions.len().min(pool.worker_count()).max(1) as f64,
             );
         }
@@ -340,12 +342,12 @@ impl ReplicationFabric {
             for r in &self.regions {
                 m.set_gauge(
                     MetricKind::System,
-                    &format!("repl_lag_secs_{}", r.name),
+                    &names::repl_lag_secs(&r.name),
                     self.staleness_secs(&r.name, now) as f64,
                 );
                 m.set_gauge(
                     MetricKind::System,
-                    &format!("repl_backlog_{}", r.name),
+                    &names::repl_backlog(&r.name),
                     self.backlog(&r.name) as f64,
                 );
             }
@@ -460,7 +462,7 @@ impl ReplicationDriver {
     /// Sequential-pump driver (no pool): regions apply one after
     /// another on the driver thread.
     pub fn spawn(fabric: Arc<ReplicationFabric>, clock: Clock, period: Duration) -> Self {
-        Self::spawn_inner(fabric, clock, period, None)
+        Self::spawn_inner(fabric, clock, period, None, None)
     }
 
     /// Fan-out driver: each tick pumps all regions concurrently on
@@ -472,7 +474,20 @@ impl ReplicationDriver {
         period: Duration,
         pool: Arc<crate::exec::ThreadPool>,
     ) -> Self {
-        Self::spawn_inner(fabric, clock, period, Some(pool))
+        Self::spawn_inner(fabric, clock, period, Some(pool), None)
+    }
+
+    /// [`Self::spawn_with_pool`] plus request tracing: each tick that
+    /// applied anything publishes a sampled trace with the per-region
+    /// apply counts.
+    pub fn spawn_observed(
+        fabric: Arc<ReplicationFabric>,
+        clock: Clock,
+        period: Duration,
+        pool: Arc<crate::exec::ThreadPool>,
+        tracer: Option<Arc<Tracer>>,
+    ) -> Self {
+        Self::spawn_inner(fabric, clock, period, Some(pool), tracer)
     }
 
     fn spawn_inner(
@@ -480,6 +495,7 @@ impl ReplicationDriver {
         clock: Clock,
         period: Duration,
         pool: Option<Arc<crate::exec::ThreadPool>>,
+        tracer: Option<Arc<Tracer>>,
     ) -> Self {
         let stop = Arc::new(AtomicBool::new(false));
         let applied = Arc::new(AtomicU64::new(0));
@@ -495,12 +511,29 @@ impl ReplicationDriver {
                     }
                     seen = wake2.wait(seen, period);
                     let now = clock.now();
-                    let n: u64 = match &pool {
-                        Some(pool) => fabric.pump_parallel(now, pool).values().sum(),
-                        None => fabric.pump(now).values().sum(),
+                    let trace = tracer.as_ref().and_then(|t| t.maybe_trace("replication_pump"));
+                    let per_region = {
+                        let g = trace.as_ref().map(|t| t.span("pump"));
+                        let per_region = match &pool {
+                            Some(pool) => fabric.pump_parallel(now, pool),
+                            None => fabric.pump(now),
+                        };
+                        if let Some(g) = &g {
+                            let mut parts: Vec<String> = per_region
+                                .iter()
+                                .map(|(r, n)| format!("{r}={n}"))
+                                .collect();
+                            parts.sort();
+                            g.note(format!("applied {}", parts.join(" ")));
+                        }
+                        per_region
                     };
+                    let n: u64 = per_region.values().sum();
                     applied2.fetch_add(n, Ordering::Relaxed);
                     fabric.truncate_applied();
+                    if let Some(t) = &trace {
+                        t.finish();
+                    }
                 }
             })
             .expect("spawn replication driver");

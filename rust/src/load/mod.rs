@@ -40,6 +40,8 @@ use std::time::{Duration, Instant};
 use crate::benchkit::{fmt_ns, fmt_rate, Table};
 use crate::config::Config;
 use crate::coordinator::{FeatureStore, OpenOptions};
+use crate::monitor::metrics::MetricsSnapshot;
+use crate::monitor::trace::TraceConfig;
 use crate::query::pit::PitConfig;
 use crate::query::spec::FeatureRef;
 use crate::serving::AdmissionConfig;
@@ -118,6 +120,10 @@ pub struct LoadConfig {
     /// Admission bound on the streamed table's unconsumed backlog.
     pub max_backlog_events: usize,
     pub admission: AdmissionConfig,
+    /// Request-tracing policy for the run (the standard plan samples
+    /// 1-in-64 so slow ops carry span trees without perturbing the
+    /// measured latencies).
+    pub trace: TraceConfig,
     pub phases: Vec<PhaseSpec>,
     pub dataset: ChurnWorkloadConfig,
 }
@@ -182,6 +188,7 @@ impl LoadConfig {
             event_step_secs: 5,
             max_backlog_events: 100_000,
             admission,
+            trace: TraceConfig { sample_every: 64, ..Default::default() },
             phases,
             dataset: ChurnWorkloadConfig::default(),
         }
@@ -243,6 +250,10 @@ pub struct PhaseReport {
     pub wall_secs: f64,
     /// `(class name, stats)` in [`CLASSES`] order.
     pub classes: Vec<(String, ClassReport)>,
+    /// What the store's metrics did *during this phase*: the registry
+    /// snapshot after minus the snapshot before (counters and latency
+    /// counts subtract; gauges keep their end-of-phase value).
+    pub metrics_delta: MetricsSnapshot,
 }
 
 impl PhaseReport {
@@ -257,6 +268,10 @@ pub struct LoadReport {
     pub seed: u64,
     pub fast: bool,
     pub phases: Vec<PhaseReport>,
+    /// Rendered span trees of every sampled request that crossed the
+    /// slow-op threshold during the run (drained from the store after
+    /// the final phase; oldest first, ring-bounded).
+    pub slow_ops: Vec<String>,
 }
 
 impl LoadReport {
@@ -279,6 +294,7 @@ impl LoadReport {
                     ("name", Json::str(p.name.clone())),
                     ("wall_ms", Json::num(p.wall_secs * 1e3)),
                     ("classes", Json::obj(classes)),
+                    ("metrics", p.metrics_delta.to_json()),
                 ])
             })
             .collect();
@@ -288,7 +304,35 @@ impl LoadReport {
             ("seed", Json::num(self.seed as f64)),
             ("fast", Json::Bool(self.fast)),
             ("phases", Json::Arr(phases)),
+            (
+                "slow_ops",
+                Json::Arr(self.slow_ops.iter().map(|s| Json::str(s.clone())).collect()),
+            ),
         ])
+    }
+
+    /// Just the per-phase metrics deltas (the CI artifact uploaded next
+    /// to `BENCH_load.json`): `{phase name: snapshot delta}`.
+    pub fn metrics_json(&self) -> Json {
+        Json::obj(vec![
+            ("schema", Json::num(1.0)),
+            ("bench", Json::str("load_harness_metrics")),
+            (
+                "phases",
+                Json::Obj(
+                    self.phases
+                        .iter()
+                        .map(|p| (p.name.clone(), p.metrics_delta.to_json()))
+                        .collect(),
+                ),
+            ),
+        ])
+    }
+
+    /// Write the per-phase metrics-delta artifact.
+    pub fn write_metrics_json(&self, path: &Path) -> Result<()> {
+        std::fs::write(path, format!("{}\n", self.metrics_json()))?;
+        Ok(())
     }
 
     /// Write `BENCH_load.json` (or wherever `path` points).
@@ -322,6 +366,12 @@ impl LoadReport {
             }
             t.print();
         }
+        if !self.slow_ops.is_empty() {
+            println!("E-LOAD slow ops ({} captured, showing up to 5):", self.slow_ops.len());
+            for op in self.slow_ops.iter().take(5) {
+                print!("{op}");
+            }
+        }
     }
 }
 
@@ -353,6 +403,7 @@ impl LoadHarness {
                 with_engine: false,
                 geo_replication: true,
                 admission: Some(cfg.admission.clone()),
+                trace: cfg.trace.clone(),
                 ..Default::default()
             },
         )?;
@@ -462,6 +513,7 @@ impl LoadHarness {
     }
 
     fn run_phase(&self, idx: usize, phase: &PhaseSpec) -> PhaseReport {
+        let before = self.fs.metrics.snapshot();
         let start = Instant::now();
         let merged = std::thread::scope(|s| {
             let handles: Vec<_> = (0..self.cfg.workers)
@@ -501,6 +553,7 @@ impl LoadHarness {
                 .zip(merged)
                 .map(|(&(name, _), c)| (name.to_string(), c))
                 .collect(),
+            metrics_delta: self.fs.metrics.snapshot().delta(&before),
         }
     }
 
@@ -531,10 +584,12 @@ impl LoadHarness {
             phases
         });
         self.fs.drain_stream(&self.workload.interactions_table)?;
+        let slow_ops = self.fs.slow_ops().iter().map(|t| t.render()).collect();
         Ok(LoadReport {
             seed: self.cfg.seed,
             fast: std::env::var("GEOFS_BENCH_FAST").is_ok(),
             phases,
+            slow_ops,
         })
     }
 }
@@ -607,6 +662,25 @@ mod tests {
         for field in ["p50_us", "p99_us", "p999_us", "shed_rate", "throughput_per_s"] {
             assert!(read.get(field).as_f64().is_some(), "missing {field}");
         }
+        // Per-phase metrics deltas are embedded: the steady phase serves
+        // batches, so its delta must show non-zero serving counters.
+        let counters = p0.get("metrics").get("counters");
+        assert!(
+            counters.get("serving_batches").as_f64().unwrap_or(0.0) > 0.0,
+            "steady-phase metrics delta missing serving_batches"
+        );
+        assert!(parsed.get("slow_ops").as_arr().is_some());
+        // The deltas really are per-phase, not cumulative: summed over
+        // phases they equal the final counter value.
+        let total: f64 = r
+            .phases
+            .iter()
+            .map(|p| *p.metrics_delta.counters.get("serving_batches").unwrap_or(&0) as f64)
+            .sum();
+        assert_eq!(total as u64, h.fs.metrics.counter("serving_batches"));
+        // And the standalone metrics artifact parses with every phase.
+        let mj = Json::parse(&r.metrics_json().to_string()).unwrap();
+        assert!(mj.get("phases").get("steady").get("counters").as_obj().is_some());
     }
 
     #[test]

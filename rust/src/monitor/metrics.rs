@@ -1,10 +1,35 @@
 //! Metrics registry: counters, gauges and latency histograms, tagged
 //! system vs custom (§3.1.2).
+//!
+//! Built for the hot path. Counters are striped `AtomicU64`s (one
+//! cache-padded stripe per thread slot, folded on read) and latency
+//! metrics are per-thread-striped atomic histograms — each serving
+//! thread records into its own `AtomicU64` bucket array mirroring
+//! `util::hist::Histogram`'s layout, and readers fold the stripes into
+//! one `Histogram` on demand. `inc` / `observe` through a pre-registered
+//! typed handle ([`Counter`], [`Gauge`], [`LatencyHandle`]) is a couple
+//! of relaxed atomic RMWs: no `Mutex`, no `RwLock`, no allocation.
+//!
+//! The string-keyed dynamic API (`inc(kind, name, by)` etc.) survives as
+//! a compat shim: the name index is an immutable `BTreeMap` snapshot
+//! behind an `AtomicPtr` (hand-rolled RCU), so the lookup is one atomic
+//! pointer load plus a map probe — also lock-free and allocation-free.
+//! Only first-touch registration takes the writer mutex: it clones the
+//! map, inserts, publishes the new snapshot, and parks the old one until
+//! `Drop` (readers may still be holding borrows into it).
+//!
+//! Read-side views: [`MetricsRegistry::render`] (human dashboard),
+//! [`MetricsRegistry::export`] (Prometheus text exposition), and
+//! [`MetricsRegistry::snapshot`] — a diffable [`MetricsSnapshot`] used by
+//! the load harness to embed per-phase metric deltas in `BENCH_load.json`.
 
+use std::cell::Cell;
 use std::collections::BTreeMap;
-use std::sync::Mutex;
+use std::sync::atomic::{AtomicPtr, AtomicU64, AtomicUsize, Ordering};
+use std::sync::{Arc, Mutex};
 
-use crate::util::hist::Histogram;
+use crate::util::hist::{Histogram, BUCKETS};
+use crate::util::json::Json;
 
 #[derive(Debug, Clone, Copy, PartialEq, Eq)]
 pub enum MetricKind {
@@ -14,92 +39,561 @@ pub enum MetricKind {
     Custom,
 }
 
-#[derive(Debug)]
-enum Metric {
-    Counter(u64),
-    Gauge(f64),
-    Latency(Histogram),
+impl MetricKind {
+    fn label(self) -> &'static str {
+        match self {
+            MetricKind::System => "system",
+            MetricKind::Custom => "custom",
+        }
+    }
 }
 
-/// Central metrics store. Cheap enough for the hot path (one mutex per
-/// registry; the serving layer keeps its own per-shard histograms and
-/// folds them in periodically).
-#[derive(Debug, Default)]
+// ---- thread striping -------------------------------------------------------
+
+/// Stripes per counter. Power of two so the slot fold is a mask.
+const COUNTER_STRIPES: usize = 8;
+/// Stripes per latency histogram. Each stripe is a full atomic bucket
+/// array (~32 KiB), so keep this small; four absorbs the contention that
+/// matters without bloating per-metric memory.
+const HIST_STRIPES: usize = 4;
+
+static NEXT_THREAD_SLOT: AtomicUsize = AtomicUsize::new(0);
+
+thread_local! {
+    static THREAD_SLOT: Cell<usize> = const { Cell::new(usize::MAX) };
+}
+
+/// Stable per-thread slot; assigned once per thread (one global
+/// `fetch_add`), then a plain thread-local read.
+#[inline]
+fn thread_slot() -> usize {
+    THREAD_SLOT.with(|s| {
+        let v = s.get();
+        if v != usize::MAX {
+            return v;
+        }
+        let v = NEXT_THREAD_SLOT.fetch_add(1, Ordering::Relaxed);
+        s.set(v);
+        v
+    })
+}
+
+#[repr(align(64))]
+struct PaddedU64(AtomicU64);
+
+// ---- metric cores ----------------------------------------------------------
+
+struct CounterCore {
+    stripes: [PaddedU64; COUNTER_STRIPES],
+}
+
+impl CounterCore {
+    fn new() -> Self {
+        CounterCore { stripes: std::array::from_fn(|_| PaddedU64(AtomicU64::new(0))) }
+    }
+
+    #[inline]
+    fn add(&self, by: u64) {
+        self.stripes[thread_slot() & (COUNTER_STRIPES - 1)].0.fetch_add(by, Ordering::Relaxed);
+    }
+
+    fn value(&self) -> u64 {
+        self.stripes.iter().map(|s| s.0.load(Ordering::Relaxed)).sum()
+    }
+}
+
+struct GaugeCore {
+    bits: AtomicU64,
+    /// 0 = never set; lets `gauge()` keep returning `None` for
+    /// pre-registered gauges nothing has written yet.
+    writes: AtomicU64,
+}
+
+impl GaugeCore {
+    fn new() -> Self {
+        GaugeCore { bits: AtomicU64::new(0), writes: AtomicU64::new(0) }
+    }
+
+    #[inline]
+    fn set(&self, v: f64) {
+        self.bits.store(v.to_bits(), Ordering::Relaxed);
+        self.writes.fetch_add(1, Ordering::Release);
+    }
+
+    fn get(&self) -> Option<f64> {
+        if self.writes.load(Ordering::Acquire) == 0 {
+            None
+        } else {
+            Some(f64::from_bits(self.bits.load(Ordering::Relaxed)))
+        }
+    }
+}
+
+/// One stripe of an atomic histogram: bucket counts in the exact
+/// `Histogram` layout plus the scalar accumulators `fold` needs.
+struct HistStripe {
+    counts: Box<[AtomicU64]>,
+    sum: AtomicU64, // nanoseconds; u64 holds ~584 years of summed ns
+    min: AtomicU64,
+    max: AtomicU64,
+}
+
+impl HistStripe {
+    fn new() -> Self {
+        HistStripe {
+            counts: (0..BUCKETS).map(|_| AtomicU64::new(0)).collect(),
+            sum: AtomicU64::new(0),
+            min: AtomicU64::new(u64::MAX),
+            max: AtomicU64::new(0),
+        }
+    }
+}
+
+struct LatencyCore {
+    stripes: Vec<HistStripe>,
+}
+
+impl LatencyCore {
+    fn new() -> Self {
+        LatencyCore { stripes: (0..HIST_STRIPES).map(|_| HistStripe::new()).collect() }
+    }
+
+    #[inline]
+    fn observe(&self, nanos: u64) {
+        let s = &self.stripes[thread_slot() % HIST_STRIPES];
+        s.counts[Histogram::index_of(nanos)].fetch_add(1, Ordering::Relaxed);
+        s.sum.fetch_add(nanos, Ordering::Relaxed);
+        s.min.fetch_min(nanos, Ordering::Relaxed);
+        s.max.fetch_max(nanos, Ordering::Relaxed);
+    }
+
+    /// Fold every stripe into one `Histogram` (read side only).
+    fn fold(&self) -> Histogram {
+        let mut counts = vec![0u64; BUCKETS];
+        let mut sum = 0u128;
+        let mut min = u64::MAX;
+        let mut max = 0u64;
+        for s in &self.stripes {
+            for (acc, c) in counts.iter_mut().zip(s.counts.iter()) {
+                *acc += c.load(Ordering::Relaxed);
+            }
+            sum += s.sum.load(Ordering::Relaxed) as u128;
+            min = min.min(s.min.load(Ordering::Relaxed));
+            max = max.max(s.max.load(Ordering::Relaxed));
+        }
+        Histogram::from_parts(counts, sum, min, max)
+    }
+}
+
+// ---- typed handles ---------------------------------------------------------
+
+/// Pre-registered counter handle: `inc` is one relaxed `fetch_add` on a
+/// thread-striped cell — no lock, no name lookup, no allocation.
+#[derive(Clone)]
+pub struct Counter {
+    core: Arc<CounterCore>,
+}
+
+impl Counter {
+    #[inline]
+    pub fn inc(&self, by: u64) {
+        self.core.add(by);
+    }
+
+    pub fn value(&self) -> u64 {
+        self.core.value()
+    }
+}
+
+/// Pre-registered gauge handle (last-writer-wins level).
+#[derive(Clone)]
+pub struct Gauge {
+    core: Arc<GaugeCore>,
+}
+
+impl Gauge {
+    #[inline]
+    pub fn set(&self, v: f64) {
+        self.core.set(v);
+    }
+
+    pub fn value(&self) -> Option<f64> {
+        self.core.get()
+    }
+}
+
+/// Pre-registered latency handle: `observe` records into the calling
+/// thread's histogram stripe — a handful of relaxed atomic RMWs.
+#[derive(Clone)]
+pub struct LatencyHandle {
+    core: Arc<LatencyCore>,
+}
+
+impl LatencyHandle {
+    #[inline]
+    pub fn observe(&self, nanos: u64) {
+        self.core.observe(nanos);
+    }
+
+    pub fn quantile(&self, q: f64) -> u64 {
+        self.core.fold().quantile(q)
+    }
+
+    /// Folded snapshot of all stripes.
+    pub fn histogram(&self) -> Histogram {
+        self.core.fold()
+    }
+}
+
+#[derive(Clone)]
+enum Slot {
+    Counter(Arc<CounterCore>),
+    Gauge(Arc<GaugeCore>),
+    Latency(Arc<LatencyCore>),
+}
+
+impl Slot {
+    fn type_name(&self) -> &'static str {
+        match self {
+            Slot::Counter(_) => "counter",
+            Slot::Gauge(_) => "gauge",
+            Slot::Latency(_) => "latency",
+        }
+    }
+}
+
+type Index = BTreeMap<String, (MetricKind, Slot)>;
+
+// ---- registry --------------------------------------------------------------
+
+/// Central metrics store. See the module docs for the concurrency
+/// design; the short version is that everything a request does is
+/// lock-free and only first-touch name registration serializes.
 pub struct MetricsRegistry {
-    metrics: Mutex<BTreeMap<String, (MetricKind, Metric)>>,
+    /// Immutable name-index snapshot (RCU). Readers load + probe;
+    /// never a lock on this path.
+    index: AtomicPtr<Index>,
+    /// Writer side: serializes registration and parks retired snapshots
+    /// until `Drop`, because readers may still hold borrows into them.
+    writer: Mutex<Vec<*mut Index>>,
+}
+
+// Safety: the raw pointers in `index`/`writer` refer to heap `Index`
+// maps that are immutable after publication (writers replace, never
+// mutate). The retired list is only touched under the writer mutex or
+// with `&mut self` in `Drop`, and the map contents (`Arc`-held cores of
+// atomics) are themselves `Send + Sync`.
+unsafe impl Send for MetricsRegistry {}
+unsafe impl Sync for MetricsRegistry {}
+
+impl Default for MetricsRegistry {
+    fn default() -> Self {
+        Self::new()
+    }
+}
+
+impl std::fmt::Debug for MetricsRegistry {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        write!(f, "MetricsRegistry({} metrics)", self.index_ref().len())
+    }
 }
 
 impl MetricsRegistry {
     pub fn new() -> Self {
-        Self::default()
+        MetricsRegistry {
+            index: AtomicPtr::new(Box::into_raw(Box::default())),
+            writer: Mutex::new(Vec::new()),
+        }
     }
 
+    /// Current index snapshot. Lock-free; valid for the lifetime of
+    /// `&self` because retired snapshots are only freed in `Drop`.
+    #[inline]
+    fn index_ref(&self) -> &Index {
+        // Safety: see the `Send`/`Sync` impls — published pointers stay
+        // live until the registry itself is dropped.
+        unsafe { &*self.index.load(Ordering::Acquire) }
+    }
+
+    /// Slow path: register `name` if absent, returning whatever slot the
+    /// name resolves to afterwards (which may be a pre-existing slot of
+    /// a different type — callers warn on mismatch).
+    fn register(&self, kind: MetricKind, name: &str, make: impl FnOnce() -> Slot) -> Slot {
+        let mut retired = self.writer.lock().unwrap();
+        // Re-check under the writer lock: another thread may have won.
+        let cur = self.index_ref();
+        if let Some((_, slot)) = cur.get(name) {
+            return slot.clone();
+        }
+        let slot = make();
+        let mut next = cur.clone();
+        next.insert(name.to_string(), (kind, slot.clone()));
+        let old = self.index.swap(Box::into_raw(Box::new(next)), Ordering::AcqRel);
+        retired.push(old);
+        slot
+    }
+
+    fn slot_for(&self, kind: MetricKind, name: &str, make: impl FnOnce() -> Slot) -> Slot {
+        // Fast path: lock-free probe of the published snapshot.
+        if let Some((_, slot)) = self.index_ref().get(name) {
+            return slot.clone();
+        }
+        self.register(kind, name, make)
+    }
+
+    // ---- typed handle registration ------------------------------------
+
+    /// Pre-register (or look up) a counter and return its hot-path
+    /// handle. On a type clash the existing metric is left untouched and
+    /// a detached handle is returned (observations go nowhere).
+    pub fn counter_handle(&self, kind: MetricKind, name: &str) -> Counter {
+        match self.slot_for(kind, name, || Slot::Counter(Arc::new(CounterCore::new()))) {
+            Slot::Counter(core) => Counter { core },
+            other => {
+                log::warn!("metric '{name}' is a {}, not a counter", other.type_name());
+                Counter { core: Arc::new(CounterCore::new()) }
+            }
+        }
+    }
+
+    /// Pre-register (or look up) a gauge handle.
+    pub fn gauge_handle(&self, kind: MetricKind, name: &str) -> Gauge {
+        match self.slot_for(kind, name, || Slot::Gauge(Arc::new(GaugeCore::new()))) {
+            Slot::Gauge(core) => Gauge { core },
+            other => {
+                log::warn!("metric '{name}' is a {}, not a gauge", other.type_name());
+                Gauge { core: Arc::new(GaugeCore::new()) }
+            }
+        }
+    }
+
+    /// Pre-register (or look up) a latency handle.
+    pub fn latency_handle(&self, kind: MetricKind, name: &str) -> LatencyHandle {
+        match self.slot_for(kind, name, || Slot::Latency(Arc::new(LatencyCore::new()))) {
+            Slot::Latency(core) => LatencyHandle { core },
+            other => {
+                log::warn!("metric '{name}' is a {}, not a latency", other.type_name());
+                LatencyHandle { core: Arc::new(LatencyCore::new()) }
+            }
+        }
+    }
+
+    // ---- string-keyed compat shim -------------------------------------
+
     pub fn inc(&self, kind: MetricKind, name: &str, by: u64) {
-        let mut g = self.metrics.lock().unwrap();
-        match g.entry(name.to_string()).or_insert((kind, Metric::Counter(0))) {
-            (_, Metric::Counter(c)) => *c += by,
+        match self.slot_for(kind, name, || Slot::Counter(Arc::new(CounterCore::new()))) {
+            Slot::Counter(c) => c.add(by),
             _ => log::warn!("metric '{name}' is not a counter"),
         }
     }
 
     pub fn set_gauge(&self, kind: MetricKind, name: &str, value: f64) {
-        let mut g = self.metrics.lock().unwrap();
-        g.insert(name.to_string(), (kind, Metric::Gauge(value)));
+        match self.slot_for(kind, name, || Slot::Gauge(Arc::new(GaugeCore::new()))) {
+            Slot::Gauge(g) => g.set(value),
+            // Refuse to clobber an existing counter/latency of the same
+            // name — consistent with `inc`/`observe_latency`.
+            _ => log::warn!("metric '{name}' is not a gauge"),
+        }
     }
 
     pub fn observe_latency(&self, kind: MetricKind, name: &str, nanos: u64) {
-        let mut g = self.metrics.lock().unwrap();
-        match g
-            .entry(name.to_string())
-            .or_insert((kind, Metric::Latency(Histogram::new())))
-        {
-            (_, Metric::Latency(h)) => h.record(nanos),
+        match self.slot_for(kind, name, || Slot::Latency(Arc::new(LatencyCore::new()))) {
+            Slot::Latency(h) => h.observe(nanos),
             _ => log::warn!("metric '{name}' is not a latency"),
         }
     }
 
+    // ---- readers -------------------------------------------------------
+
     pub fn counter(&self, name: &str) -> u64 {
-        match self.metrics.lock().unwrap().get(name) {
-            Some((_, Metric::Counter(c))) => *c,
+        match self.index_ref().get(name) {
+            Some((_, Slot::Counter(c))) => c.value(),
             _ => 0,
         }
     }
 
     pub fn gauge(&self, name: &str) -> Option<f64> {
-        match self.metrics.lock().unwrap().get(name) {
-            Some((_, Metric::Gauge(v))) => Some(*v),
+        match self.index_ref().get(name) {
+            Some((_, Slot::Gauge(g))) => g.get(),
             _ => None,
         }
     }
 
     pub fn latency_quantile(&self, name: &str, q: f64) -> Option<u64> {
-        match self.metrics.lock().unwrap().get(name) {
-            Some((_, Metric::Latency(h))) => Some(h.quantile(q)),
+        match self.index_ref().get(name) {
+            Some((_, Slot::Latency(h))) => Some(h.fold().quantile(q)),
             _ => None,
         }
     }
 
     /// Render all metrics of a kind (dashboard / `geofs metrics`).
     pub fn render(&self, kind: Option<MetricKind>) -> String {
-        let g = self.metrics.lock().unwrap();
         let mut out = String::new();
-        for (name, (k, m)) in g.iter() {
+        for (name, (k, slot)) in self.index_ref().iter() {
             if kind.is_some() && kind != Some(*k) {
                 continue;
             }
-            let tag = match k {
-                MetricKind::System => "system",
-                MetricKind::Custom => "custom",
-            };
-            match m {
-                Metric::Counter(c) => out.push_str(&format!("{name}{{{tag}}} = {c}\n")),
-                Metric::Gauge(v) => out.push_str(&format!("{name}{{{tag}}} = {v:.3}\n")),
-                Metric::Latency(h) => {
-                    out.push_str(&format!("{name}{{{tag}}} {}\n", h.summary(1_000.0, "µs")))
+            let tag = k.label();
+            match slot {
+                Slot::Counter(c) => out.push_str(&format!("{name}{{{tag}}} = {}\n", c.value())),
+                Slot::Gauge(g) => {
+                    let v = g.get().unwrap_or(0.0);
+                    out.push_str(&format!("{name}{{{tag}}} = {v:.3}\n"));
+                }
+                Slot::Latency(h) => out
+                    .push_str(&format!("{name}{{{tag}}} {}\n", h.fold().summary(1_000.0, "µs"))),
+            }
+        }
+        out
+    }
+
+    /// Prometheus text exposition: `# TYPE` line per metric, `kind`
+    /// label, quantile series + `_count`/`_sum` for latencies.
+    pub fn export(&self) -> String {
+        let mut out = String::new();
+        for (name, (k, slot)) in self.index_ref().iter() {
+            let kind = k.label();
+            match slot {
+                Slot::Counter(c) => {
+                    out.push_str(&format!("# TYPE {name} counter\n"));
+                    out.push_str(&format!("{name}{{kind=\"{kind}\"}} {}\n", c.value()));
+                }
+                Slot::Gauge(g) => {
+                    out.push_str(&format!("# TYPE {name} gauge\n"));
+                    out.push_str(&format!("{name}{{kind=\"{kind}\"}} {}\n", g.get().unwrap_or(0.0)));
+                }
+                Slot::Latency(l) => {
+                    let h = l.fold();
+                    out.push_str(&format!("# TYPE {name} summary\n"));
+                    for q in [0.5, 0.95, 0.99, 0.999] {
+                        out.push_str(&format!(
+                            "{name}{{kind=\"{kind}\",quantile=\"{q}\"}} {}\n",
+                            h.quantile(q)
+                        ));
+                    }
+                    out.push_str(&format!("{name}_count{{kind=\"{kind}\"}} {}\n", h.count()));
+                    out.push_str(&format!("{name}_sum{{kind=\"{kind}\"}} {}\n", h.sum()));
                 }
             }
         }
         out
+    }
+
+    /// Point-in-time snapshot of every metric, diffable via
+    /// [`MetricsSnapshot::delta`] and serializable via
+    /// [`MetricsSnapshot::to_json`].
+    pub fn snapshot(&self) -> MetricsSnapshot {
+        let mut snap = MetricsSnapshot::default();
+        for (name, (_, slot)) in self.index_ref().iter() {
+            match slot {
+                Slot::Counter(c) => {
+                    snap.counters.insert(name.clone(), c.value());
+                }
+                Slot::Gauge(g) => {
+                    if let Some(v) = g.get() {
+                        snap.gauges.insert(name.clone(), v);
+                    }
+                }
+                Slot::Latency(l) => {
+                    let h = l.fold();
+                    snap.latencies.insert(
+                        name.clone(),
+                        LatencySnapshot {
+                            count: h.count(),
+                            mean_ns: h.mean(),
+                            p50_ns: h.quantile(0.5),
+                            p99_ns: h.quantile(0.99),
+                            max_ns: h.max(),
+                        },
+                    );
+                }
+            }
+        }
+        snap
+    }
+}
+
+impl Drop for MetricsRegistry {
+    fn drop(&mut self) {
+        // Nobody can hold borrows anymore (`&mut self`): free the
+        // current snapshot and every retired one.
+        let retired = self.writer.get_mut().unwrap();
+        for p in retired.drain(..) {
+            // Safety: retired pointers were uniquely parked here.
+            unsafe { drop(Box::from_raw(p)) };
+        }
+        let cur = *self.index.get_mut();
+        // Safety: the published pointer is exclusively ours now.
+        unsafe { drop(Box::from_raw(cur)) };
+    }
+}
+
+// ---- snapshots -------------------------------------------------------------
+
+/// Latency digest inside a [`MetricsSnapshot`].
+#[derive(Debug, Clone, PartialEq)]
+pub struct LatencySnapshot {
+    pub count: u64,
+    pub mean_ns: f64,
+    pub p50_ns: u64,
+    pub p99_ns: u64,
+    pub max_ns: u64,
+}
+
+/// A diffable view of the whole registry at one instant. `delta`
+/// subtracts cumulative quantities (counter values, latency counts)
+/// while levels (gauges) and distribution digests keep the later
+/// snapshot's value — so a per-phase delta reads as "what this phase
+/// added, and where the levels ended up".
+#[derive(Debug, Clone, Default, PartialEq)]
+pub struct MetricsSnapshot {
+    pub counters: BTreeMap<String, u64>,
+    pub gauges: BTreeMap<String, f64>,
+    pub latencies: BTreeMap<String, LatencySnapshot>,
+}
+
+impl MetricsSnapshot {
+    /// `self - earlier` for cumulative quantities; see the type docs.
+    pub fn delta(&self, earlier: &MetricsSnapshot) -> MetricsSnapshot {
+        let mut out = self.clone();
+        for (name, v) in out.counters.iter_mut() {
+            *v = v.saturating_sub(earlier.counters.get(name).copied().unwrap_or(0));
+        }
+        for (name, l) in out.latencies.iter_mut() {
+            let before = earlier.latencies.get(name).map(|e| e.count).unwrap_or(0);
+            l.count = l.count.saturating_sub(before);
+        }
+        out
+    }
+
+    pub fn to_json(&self) -> Json {
+        let counters = self
+            .counters
+            .iter()
+            .map(|(k, v)| (k.clone(), Json::num(*v as f64)))
+            .collect();
+        let gauges = self.gauges.iter().map(|(k, v)| (k.clone(), Json::num(*v))).collect();
+        let latencies = self
+            .latencies
+            .iter()
+            .map(|(k, l)| {
+                (
+                    k.clone(),
+                    Json::obj(vec![
+                        ("count", Json::num(l.count as f64)),
+                        ("mean_ns", Json::num(l.mean_ns)),
+                        ("p50_ns", Json::num(l.p50_ns as f64)),
+                        ("p99_ns", Json::num(l.p99_ns as f64)),
+                        ("max_ns", Json::num(l.max_ns as f64)),
+                    ]),
+                )
+            })
+            .collect();
+        Json::obj(vec![
+            ("counters", Json::Obj(counters)),
+            ("gauges", Json::Obj(gauges)),
+            ("latencies", Json::Obj(latencies)),
+        ])
     }
 }
 
@@ -152,5 +646,113 @@ mod tests {
         m.inc(MetricKind::System, "x", 1);
         m.observe_latency(MetricKind::System, "x", 5); // wrong type: warn, no panic
         assert_eq!(m.counter("x"), 1);
+    }
+
+    #[test]
+    fn set_gauge_refuses_type_clash() {
+        let m = MetricsRegistry::new();
+        // Regression: set_gauge used to silently replace an existing
+        // counter/latency of the same name.
+        m.inc(MetricKind::System, "y", 7);
+        m.set_gauge(MetricKind::System, "y", 1.0); // wrong type: warn, refuse
+        assert_eq!(m.counter("y"), 7);
+        assert_eq!(m.gauge("y"), None);
+        m.observe_latency(MetricKind::System, "lat", 100);
+        m.set_gauge(MetricKind::System, "lat", 2.0);
+        assert_eq!(m.latency_quantile("lat", 0.5), Some(100));
+        // And the reverse: a gauge is not clobbered by inc.
+        m.set_gauge(MetricKind::System, "z", 2.0);
+        m.inc(MetricKind::System, "z", 1);
+        assert_eq!(m.gauge("z"), Some(2.0));
+        assert_eq!(m.counter("z"), 0);
+    }
+
+    #[test]
+    fn typed_handles_share_the_named_metric() {
+        let m = MetricsRegistry::new();
+        let c = m.counter_handle(MetricKind::System, "h_total");
+        c.inc(5);
+        m.inc(MetricKind::System, "h_total", 2); // shim hits the same core
+        assert_eq!(m.counter("h_total"), 7);
+        assert_eq!(c.value(), 7);
+
+        let g = m.gauge_handle(MetricKind::System, "h_gauge");
+        assert_eq!(m.gauge("h_gauge"), None); // registered but unset
+        g.set(3.5);
+        assert_eq!(m.gauge("h_gauge"), Some(3.5));
+
+        let l = m.latency_handle(MetricKind::System, "h_lat");
+        l.observe(1_000);
+        assert_eq!(m.latency_quantile("h_lat", 1.0), Some(1_000));
+        assert_eq!(l.histogram().count(), 1);
+    }
+
+    #[test]
+    fn multithread_conservation() {
+        const THREADS: u64 = 8;
+        const OPS: u64 = 10_000;
+        let m = Arc::new(MetricsRegistry::new());
+        let c = m.counter_handle(MetricKind::System, "ops");
+        let l = m.latency_handle(MetricKind::System, "lat_ns");
+        std::thread::scope(|s| {
+            for _ in 0..THREADS {
+                let c = c.clone();
+                let l = l.clone();
+                let m = m.clone();
+                s.spawn(move || {
+                    for i in 0..OPS {
+                        c.inc(1);
+                        l.observe(100 + (i % 100));
+                        // Hammer the string-keyed shim concurrently too:
+                        // its first touch races registration across
+                        // threads, the rest take the lock-free path.
+                        m.inc(MetricKind::System, "ops_shim", 1);
+                    }
+                });
+            }
+        });
+        assert_eq!(m.counter("ops"), THREADS * OPS);
+        assert_eq!(m.counter("ops_shim"), THREADS * OPS);
+        assert_eq!(l.histogram().count(), THREADS * OPS);
+        let h = l.histogram();
+        assert_eq!(h.min(), 100);
+        assert_eq!(h.max(), 199);
+    }
+
+    #[test]
+    fn export_prometheus_text() {
+        let m = MetricsRegistry::new();
+        m.inc(MetricKind::System, "reqs_total", 3);
+        m.set_gauge(MetricKind::Custom, "fill", 0.5);
+        m.observe_latency(MetricKind::System, "lat_ns", 1_000);
+        let text = m.export();
+        assert!(text.contains("# TYPE reqs_total counter"), "{text}");
+        assert!(text.contains("reqs_total{kind=\"system\"} 3"), "{text}");
+        assert!(text.contains("# TYPE fill gauge"), "{text}");
+        assert!(text.contains("fill{kind=\"custom\"} 0.5"), "{text}");
+        assert!(text.contains("# TYPE lat_ns summary"), "{text}");
+        assert!(text.contains("lat_ns_count{kind=\"system\"} 1"), "{text}");
+        assert!(text.contains("lat_ns_sum{kind=\"system\"} 1000"), "{text}");
+    }
+
+    #[test]
+    fn snapshot_delta_and_json() {
+        let m = MetricsRegistry::new();
+        m.inc(MetricKind::System, "c", 5);
+        m.observe_latency(MetricKind::System, "l", 100);
+        let before = m.snapshot();
+        m.inc(MetricKind::System, "c", 2);
+        m.set_gauge(MetricKind::System, "g", 9.0);
+        m.observe_latency(MetricKind::System, "l", 200);
+        let after = m.snapshot();
+        let d = after.delta(&before);
+        assert_eq!(d.counters["c"], 2);
+        assert_eq!(d.gauges["g"], 9.0);
+        assert_eq!(d.latencies["l"].count, 1);
+        let js = d.to_json().to_string();
+        // Round-trips through the in-tree JSON parser.
+        let parsed = Json::parse(&js).unwrap();
+        assert_eq!(parsed.get("counters").get("c").as_i64(), Some(2));
+        assert_eq!(parsed.get("latencies").get("l").get("count").as_i64(), Some(1));
     }
 }

@@ -5,11 +5,30 @@
 //! defined)**, as the paper specifies; system metrics back the SLA
 //! machinery, custom metrics surface the customer's feature-engineering
 //! insight.
+//!
+//! Layout:
+//!
+//! * [`metrics`] — the lock-free metrics core: striped-atomic counters,
+//!   per-thread-striped histograms, typed hot-path handles, a
+//!   string-keyed compat shim, Prometheus `export()`, and the diffable
+//!   [`metrics::MetricsSnapshot`] the load harness embeds per phase in
+//!   `BENCH_load.json`.
+//! * [`names`] — the canonical metric-name vocabulary shared by every
+//!   driver, plus builders for dynamic-suffix names.
+//! * [`trace`] — sampled end-to-end request tracing: 1-in-N
+//!   [`trace::TraceContext`] span trees (zero atomics when unsampled)
+//!   collected into bounded lock-free rings, with a slow-op ring
+//!   surfaced as `FeatureStore::slow_ops()`.
+//! * [`freshness`] / [`sweeper`] — the staleness SLA tracker and the TTL
+//!   sweeper that feeds it.
 
 pub mod freshness;
 pub mod metrics;
+pub mod names;
 pub mod sweeper;
+pub mod trace;
 
 pub use freshness::FreshnessTracker;
-pub use metrics::{MetricKind, MetricsRegistry};
+pub use metrics::{Counter, Gauge, LatencyHandle, MetricKind, MetricsRegistry, MetricsSnapshot};
 pub use sweeper::{sweep_once, SweepReport, TtlSweeper};
+pub use trace::{CompletedTrace, TraceConfig, TraceContext, Tracer};

@@ -1,0 +1,123 @@
+//! Canonical metric names.
+//!
+//! Every system metric the drivers publish lives here, so call sites
+//! (`geo/replication.rs`, `serving/admission.rs`, `stream/mod.rs`,
+//! `offline_store/compact.rs`, `monitor/sweeper.rs`, the coordinator and
+//! the serving front end) share one vocabulary and the export
+//! completeness test (`tests/observability.rs`) can assert that the
+//! Prometheus `export()` view covers all of them. Names with a dynamic
+//! suffix (per-region lag, per-tier merges, per-mechanism latency) get a
+//! builder function instead of a constant.
+
+// ---- coordinator -----------------------------------------------------------
+
+/// Records written into the online/offline stores by materialization jobs.
+pub const MATERIALIZED_RECORDS: &str = "materialized_records";
+/// Materialization job executions.
+pub const MATERIALIZATION_JOBS: &str = "materialization_jobs";
+/// Rows returned by `get_training_frame` (offline PIT reads).
+pub const TRAINING_ROWS_SERVED: &str = "training_rows_served";
+
+// ---- geo replication -------------------------------------------------------
+
+/// Worker count the last parallel replication pump fanned out over.
+pub const REPL_APPLY_PARALLEL: &str = "repl_apply_parallel";
+
+/// Replica staleness (seconds behind the durable log) for one region.
+pub fn repl_lag_secs(region: &str) -> String {
+    format!("repl_lag_secs_{region}")
+}
+
+/// Unapplied durable-log records for one region.
+pub fn repl_backlog(region: &str) -> String {
+    format!("repl_backlog_{region}")
+}
+
+// ---- offline compaction ----------------------------------------------------
+
+/// Segment merges performed by the compaction driver, all tiers.
+pub const COMPACTION_MERGES_TOTAL: &str = "compaction_merges_total";
+/// Segments still eligible for compaction after the last drain.
+pub const COMPACTION_BACKLOG: &str = "compaction_backlog";
+
+/// Merges performed at one size tier.
+pub fn compaction_merges_tier(tier: usize) -> String {
+    format!("compaction_merges_tier{tier}")
+}
+
+// ---- TTL sweeper / freshness ----------------------------------------------
+
+/// Online records evicted by TTL sweeps.
+pub const TTL_EVICTED_TOTAL: &str = "ttl_evicted_total";
+/// Tables currently violating their freshness SLA.
+pub const FRESHNESS_SLA_VIOLATIONS: &str = "freshness_sla_violations";
+/// Timestamp (epoch secs) of the last completed TTL sweep.
+pub const TTL_LAST_SWEEP_AT: &str = "ttl_last_sweep_at";
+
+// ---- admission -------------------------------------------------------------
+
+/// Requests currently holding an admission permit.
+pub const ADMISSION_INFLIGHT: &str = "admission_inflight";
+/// Requests admitted through the gate.
+pub const ADMISSION_ADMITTED: &str = "admission_admitted";
+/// Requests shed by the gate.
+pub const ADMISSION_SHED: &str = "admission_shed";
+
+// ---- serving ---------------------------------------------------------------
+
+/// Point/batch lookups that found a record (per key).
+pub const SERVING_HITS: &str = "serving_hits";
+/// Point/batch lookups that missed (per key).
+pub const SERVING_MISSES: &str = "serving_misses";
+/// Batched lookups served.
+pub const SERVING_BATCHES: &str = "serving_batches";
+
+/// Point-lookup latency histogram for one access mechanism
+/// (`local` / `xregion` / `replica`). Values are nanoseconds.
+pub fn serving_latency_us(mech: &str) -> String {
+    format!("serving_latency_us_{mech}")
+}
+
+/// Batch-lookup latency histogram for one access mechanism.
+pub fn serving_batch_latency_us(mech: &str) -> String {
+    format!("serving_batch_latency_us_{mech}")
+}
+
+// ---- streaming ingestion ---------------------------------------------------
+
+/// Events dropped by stream backpressure shedding.
+pub const STREAM_SHED_EVENTS: &str = "stream_shed_events";
+/// Events consumed from the stream log.
+pub const STREAM_EVENTS_CONSUMED: &str = "stream_events_consumed";
+/// Feature records emitted by stream materialization.
+pub const STREAM_RECORDS_EMITTED: &str = "stream_records_emitted";
+/// Max-min watermark skew across partitions (seconds).
+pub const STREAM_WATERMARK_SKEW_SECS: &str = "stream_watermark_skew_secs";
+/// Lag from the slowest partition watermark to the clock (seconds).
+pub const STREAM_WATERMARK_LAG_SECS: &str = "stream_watermark_lag_secs";
+
+/// Every constant-named metric above, for completeness assertions.
+/// (Dynamic-suffix names are covered by calling their builders with the
+/// suffixes a given deployment actually uses.)
+pub const ALL_STATIC: &[&str] = &[
+    MATERIALIZED_RECORDS,
+    MATERIALIZATION_JOBS,
+    TRAINING_ROWS_SERVED,
+    REPL_APPLY_PARALLEL,
+    COMPACTION_MERGES_TOTAL,
+    COMPACTION_BACKLOG,
+    TTL_EVICTED_TOTAL,
+    FRESHNESS_SLA_VIOLATIONS,
+    TTL_LAST_SWEEP_AT,
+    ADMISSION_INFLIGHT,
+    ADMISSION_ADMITTED,
+    ADMISSION_SHED,
+    SERVING_HITS,
+    SERVING_MISSES,
+    SERVING_BATCHES,
+    STREAM_SHED_EVENTS,
+    STREAM_EVENTS_CONSUMED,
+    STREAM_RECORDS_EMITTED,
+    STREAM_WATERMARK_SKEW_SECS,
+    STREAM_WATERMARK_LAG_SECS,
+];

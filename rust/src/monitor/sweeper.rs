@@ -19,6 +19,7 @@ use std::time::Duration;
 
 use crate::monitor::freshness::FreshnessTracker;
 use crate::monitor::metrics::{MetricKind, MetricsRegistry};
+use crate::monitor::names;
 use crate::online_store::OnlineStore;
 use crate::types::Timestamp;
 use crate::util::Clock;
@@ -42,11 +43,11 @@ pub fn sweep_once(
 ) -> SweepReport {
     let evicted = online.evict_expired(now);
     if evicted > 0 {
-        metrics.inc(MetricKind::System, "ttl_evicted_total", evicted);
+        metrics.inc(MetricKind::System, names::TTL_EVICTED_TOTAL, evicted);
     }
     let violations = freshness.violations(now);
-    metrics.set_gauge(MetricKind::System, "freshness_sla_violations", violations.len() as f64);
-    metrics.set_gauge(MetricKind::System, "ttl_last_sweep_at", now as f64);
+    metrics.set_gauge(MetricKind::System, names::FRESHNESS_SLA_VIOLATIONS, violations.len() as f64);
+    metrics.set_gauge(MetricKind::System, names::TTL_LAST_SWEEP_AT, now as f64);
     SweepReport { evicted, sla_violations: violations.len() }
 }
 

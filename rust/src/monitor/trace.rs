@@ -1,0 +1,404 @@
+//! Sampled end-to-end request tracing with a slow-op log.
+//!
+//! A [`Tracer`] makes a 1-in-N sampling decision per request
+//! ([`Tracer::maybe_trace`]). The decision is a per-thread tick — an
+//! unsampled request touches **zero atomics** and allocates nothing, so
+//! leaving tracing wired in (even switched off) costs a branch on the
+//! serving hot path. A sampled request gets a [`TraceContext`]: a small
+//! span tree the instrumented layers append to as the request flows
+//! through routing, admission, store reads, the PIT join, stream polls
+//! and the background drivers. The context itself uses a `Mutex` — that
+//! is fine, it only exists on the sampled path.
+//!
+//! Completed traces land in a bounded lock-free ring (old entries are
+//! evicted by overwrite); traces whose total latency crosses
+//! `slow_threshold_us` additionally land in a second ring surfaced as
+//! `FeatureStore::slow_ops()` and rendered by the load-harness report.
+
+use std::cell::Cell;
+use std::sync::atomic::{AtomicPtr, AtomicU64, AtomicUsize, Ordering};
+use std::sync::{Arc, Mutex};
+use std::time::Instant;
+
+/// Tracing knobs (wired through `coordinator::OpenOptions`).
+#[derive(Debug, Clone)]
+pub struct TraceConfig {
+    /// Sample 1 request in N per thread. `0` disables tracing entirely,
+    /// `1` traces every request.
+    pub sample_every: u32,
+    /// Completed traces at or over this total duration also land in the
+    /// slow-op ring.
+    pub slow_threshold_us: u64,
+    /// Capacity of the completed-trace and slow-op rings.
+    pub ring_capacity: usize,
+}
+
+impl Default for TraceConfig {
+    fn default() -> Self {
+        TraceConfig { sample_every: 0, slow_threshold_us: 50_000, ring_capacity: 64 }
+    }
+}
+
+static NEXT_TRACER_ID: AtomicU64 = AtomicU64::new(1);
+
+thread_local! {
+    /// (tracer id, tick) — a single-entry per-thread cache. Sampling is
+    /// deterministic per (thread, tracer): the first request on a thread
+    /// is tick 1, and every `sample_every`-th tick samples. One tracer
+    /// per process is the normal shape (the store's); a thread
+    /// alternating between tracers resets the tick, which only ever
+    /// over-samples.
+    static SAMPLE_TICK: Cell<(u64, u64)> = const { Cell::new((0, 0)) };
+}
+
+/// Process-wide trace collector. Cheap to share (`Arc`) and cheap to
+/// consult — see the module docs for the sampling cost model.
+pub struct Tracer {
+    id: u64,
+    cfg: TraceConfig,
+    seq: AtomicU64,
+    completed: TraceRing,
+    slow: TraceRing,
+}
+
+impl Tracer {
+    pub fn new(cfg: TraceConfig) -> Arc<Tracer> {
+        let cap = cfg.ring_capacity.max(1);
+        Arc::new(Tracer {
+            id: NEXT_TRACER_ID.fetch_add(1, Ordering::Relaxed),
+            seq: AtomicU64::new(0),
+            completed: TraceRing::new(cap),
+            slow: TraceRing::new(cap),
+            cfg,
+        })
+    }
+
+    /// A tracer that never samples (the default when nothing is wired).
+    pub fn disabled() -> Arc<Tracer> {
+        Self::new(TraceConfig::default())
+    }
+
+    pub fn config(&self) -> &TraceConfig {
+        &self.cfg
+    }
+
+    /// The per-request sampling decision. Off (`sample_every == 0`) is a
+    /// single field compare; an unsampled request additionally bumps one
+    /// thread-local tick. Neither touches an atomic or allocates.
+    pub fn maybe_trace(self: &Arc<Self>, op: &str) -> Option<Arc<TraceContext>> {
+        let n = self.cfg.sample_every;
+        if n == 0 {
+            return None;
+        }
+        if n > 1 {
+            let sampled = SAMPLE_TICK.with(|c| {
+                let (id, tick) = c.get();
+                let tick = if id == self.id { tick.wrapping_add(1) } else { 1 };
+                c.set((self.id, tick));
+                tick % n as u64 == 0
+            });
+            if !sampled {
+                return None;
+            }
+        }
+        Some(Arc::new(TraceContext {
+            op: op.to_string(),
+            seq: self.seq.fetch_add(1, Ordering::Relaxed),
+            started: Instant::now(),
+            inner: Mutex::new(TraceInner { spans: Vec::new(), stack: Vec::new(), finished: false }),
+            tracer: self.clone(),
+        }))
+    }
+
+    /// Drain the completed-trace ring (oldest first).
+    pub fn recent(&self) -> Vec<Arc<CompletedTrace>> {
+        self.completed.drain()
+    }
+
+    /// Drain the slow-op ring (oldest first).
+    pub fn slow_ops(&self) -> Vec<Arc<CompletedTrace>> {
+        self.slow.drain()
+    }
+}
+
+/// One span in a trace: `dur_us == 0` entries are point events.
+#[derive(Debug, Clone)]
+pub struct Span {
+    pub name: String,
+    pub detail: String,
+    /// Microseconds since the trace started.
+    pub start_us: u64,
+    pub dur_us: u64,
+    /// Nesting depth under the request root.
+    pub depth: u32,
+}
+
+struct TraceInner {
+    spans: Vec<Span>,
+    /// Indices of currently-open spans (for depth assignment).
+    stack: Vec<usize>,
+    finished: bool,
+}
+
+/// A sampled in-flight request. Share it (`Arc`) with fan-out workers;
+/// they append point events with [`TraceContext::event`].
+pub struct TraceContext {
+    op: String,
+    seq: u64,
+    started: Instant,
+    inner: Mutex<TraceInner>,
+    tracer: Arc<Tracer>,
+}
+
+impl TraceContext {
+    fn now_us(&self) -> u64 {
+        self.started.elapsed().as_micros() as u64
+    }
+
+    /// Open a timed span; it closes (and records its duration) when the
+    /// returned guard drops.
+    pub fn span(&self, name: &str) -> SpanGuard<'_> {
+        let start_us = self.now_us();
+        let mut g = self.inner.lock().unwrap();
+        let depth = g.stack.len() as u32;
+        let idx = g.spans.len();
+        g.spans.push(Span {
+            name: name.to_string(),
+            detail: String::new(),
+            start_us,
+            dur_us: 0,
+            depth,
+        });
+        g.stack.push(idx);
+        SpanGuard { ctx: self, idx }
+    }
+
+    /// Record a point event (zero duration) at the current depth. Safe
+    /// to call from worker threads holding a clone of the context.
+    pub fn event(&self, name: &str, detail: String) {
+        let start_us = self.now_us();
+        let mut g = self.inner.lock().unwrap();
+        let depth = g.stack.len() as u32;
+        g.spans.push(Span { name: name.to_string(), detail, start_us, dur_us: 0, depth });
+    }
+
+    /// Close the trace: freeze the span tree, stamp the total latency,
+    /// and publish into the completed ring (and the slow-op ring if over
+    /// threshold). Idempotent; later calls are no-ops.
+    pub fn finish(&self) {
+        let total_us = self.now_us();
+        let spans = {
+            let mut g = self.inner.lock().unwrap();
+            if g.finished {
+                return;
+            }
+            g.finished = true;
+            g.stack.clear();
+            std::mem::take(&mut g.spans)
+        };
+        let done =
+            Arc::new(CompletedTrace { op: self.op.clone(), seq: self.seq, total_us, spans });
+        if total_us >= self.tracer.cfg.slow_threshold_us {
+            self.tracer.slow.push(done.clone());
+        }
+        self.tracer.completed.push(done);
+    }
+}
+
+/// RAII guard for a timed span.
+pub struct SpanGuard<'a> {
+    ctx: &'a TraceContext,
+    idx: usize,
+}
+
+impl SpanGuard<'_> {
+    /// Attach/replace the span's detail string.
+    pub fn note(&self, detail: String) {
+        let mut g = self.ctx.inner.lock().unwrap();
+        let idx = self.idx;
+        if let Some(s) = g.spans.get_mut(idx) {
+            s.detail = detail;
+        }
+    }
+}
+
+impl Drop for SpanGuard<'_> {
+    fn drop(&mut self) {
+        let end = self.ctx.now_us();
+        let mut g = self.ctx.inner.lock().unwrap();
+        if let Some(pos) = g.stack.iter().rposition(|&i| i == self.idx) {
+            g.stack.remove(pos);
+        }
+        if let Some(s) = g.spans.get_mut(self.idx) {
+            s.dur_us = end.saturating_sub(s.start_us);
+        }
+    }
+}
+
+/// A finished trace: the full span tree plus total latency.
+#[derive(Debug)]
+pub struct CompletedTrace {
+    pub op: String,
+    pub seq: u64,
+    pub total_us: u64,
+    pub spans: Vec<Span>,
+}
+
+impl CompletedTrace {
+    /// Human-readable indented span tree, one line per span.
+    pub fn render(&self) -> String {
+        let mut out = format!("[{}#{}] total={}µs\n", self.op, self.seq, self.total_us);
+        for s in &self.spans {
+            let indent = "  ".repeat(s.depth as usize + 1);
+            out.push_str(&format!(
+                "{indent}{} +{}µs ({}µs) {}\n",
+                s.name, s.start_us, s.dur_us, s.detail
+            ));
+        }
+        out
+    }
+}
+
+/// Bounded lock-free MPMC ring of completed traces. A writer claims a
+/// slot by bumping the wrapping cursor and `swap`s its trace in; the
+/// displaced occupant (if any) is dropped by that writer — that is the
+/// eviction policy. `drain` swaps every slot empty. A slot pointer is
+/// only ever dereferenced by whoever `swap`ed it out, which transfers
+/// exclusive ownership, so there is no use-after-free or ABA hazard.
+struct TraceRing {
+    slots: Vec<AtomicPtr<CompletedTrace>>,
+    cursor: AtomicUsize,
+}
+
+impl TraceRing {
+    fn new(cap: usize) -> TraceRing {
+        TraceRing {
+            slots: (0..cap).map(|_| AtomicPtr::new(std::ptr::null_mut())).collect(),
+            cursor: AtomicUsize::new(0),
+        }
+    }
+
+    fn push(&self, t: Arc<CompletedTrace>) {
+        let i = self.cursor.fetch_add(1, Ordering::Relaxed) % self.slots.len();
+        let old = self.slots[i].swap(Arc::into_raw(t).cast_mut(), Ordering::AcqRel);
+        if !old.is_null() {
+            // Safety: the swap handed us exclusive ownership of `old`.
+            unsafe { drop(Arc::from_raw(old)) };
+        }
+    }
+
+    /// Destructive read of every occupied slot, oldest first.
+    fn drain(&self) -> Vec<Arc<CompletedTrace>> {
+        let mut out: Vec<Arc<CompletedTrace>> = Vec::new();
+        for s in &self.slots {
+            let p = s.swap(std::ptr::null_mut(), Ordering::AcqRel);
+            if !p.is_null() {
+                // Safety: as in `push` — the swap transferred ownership.
+                out.push(unsafe { Arc::from_raw(p) });
+            }
+        }
+        out.sort_by_key(|t| t.seq);
+        out
+    }
+}
+
+impl Drop for TraceRing {
+    fn drop(&mut self) {
+        let _ = self.drain();
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn trace(seq: u64) -> Arc<CompletedTrace> {
+        Arc::new(CompletedTrace { op: "x".into(), seq, total_us: 0, spans: Vec::new() })
+    }
+
+    #[test]
+    fn ring_bounded_with_oldest_evicted_first() {
+        let ring = TraceRing::new(4);
+        for i in 0..6 {
+            ring.push(trace(i));
+        }
+        // Capacity 4, 6 pushes: seq 0 and 1 were overwritten (oldest
+        // first); the survivors drain in order.
+        let seqs: Vec<u64> = ring.drain().iter().map(|t| t.seq).collect();
+        assert_eq!(seqs, vec![2, 3, 4, 5]);
+        assert!(ring.drain().is_empty());
+    }
+
+    #[test]
+    fn sampling_is_deterministic_per_thread() {
+        let t = Tracer::new(TraceConfig {
+            sample_every: 4,
+            slow_threshold_us: u64::MAX,
+            ring_capacity: 64,
+        });
+        let mut sampled = Vec::new();
+        for i in 0..16 {
+            if let Some(tc) = t.maybe_trace("op") {
+                sampled.push(i);
+                tc.finish();
+            }
+        }
+        // A fresh tracer always starts this thread's tick at 1, so
+        // exactly every 4th request samples: indices 3, 7, 11, 15.
+        assert_eq!(sampled, vec![3, 7, 11, 15]);
+        assert_eq!(t.recent().len(), 4);
+    }
+
+    #[test]
+    fn off_and_always_modes() {
+        let off = Tracer::new(TraceConfig { sample_every: 0, ..Default::default() });
+        assert!(off.maybe_trace("op").is_none());
+        let always = Tracer::new(TraceConfig {
+            sample_every: 1,
+            slow_threshold_us: u64::MAX,
+            ring_capacity: 8,
+        });
+        assert!(always.maybe_trace("op").is_some());
+        assert!(always.maybe_trace("op").is_some());
+    }
+
+    #[test]
+    fn slow_ops_capture_full_span_tree() {
+        let t = Tracer::new(TraceConfig {
+            sample_every: 1,
+            slow_threshold_us: 0, // everything is "slow"
+            ring_capacity: 8,
+        });
+        let tc = t.maybe_trace("online_read").unwrap();
+        {
+            let g = tc.span("route");
+            g.note("mech=local staleness=0s".into());
+            tc.event("store_read", "keys=3 hits=2".into());
+        }
+        tc.finish();
+        tc.finish(); // idempotent
+        let slow = t.slow_ops();
+        assert_eq!(slow.len(), 1);
+        assert_eq!(slow[0].spans.len(), 2);
+        assert_eq!(slow[0].spans[0].depth, 0);
+        assert_eq!(slow[0].spans[1].depth, 1); // event nested under the open span
+        let r = slow[0].render();
+        assert!(r.contains("route") && r.contains("mech=local") && r.contains("keys=3"), "{r}");
+        // finish() also placed it in the completed ring exactly once.
+        assert_eq!(t.recent().len(), 1);
+    }
+
+    #[test]
+    fn unsampled_requests_record_nothing() {
+        let t = Tracer::new(TraceConfig {
+            sample_every: 1000,
+            slow_threshold_us: 0,
+            ring_capacity: 8,
+        });
+        for _ in 0..10 {
+            assert!(t.maybe_trace("op").is_none());
+        }
+        assert!(t.recent().is_empty());
+        assert!(t.slow_ops().is_empty());
+    }
+}

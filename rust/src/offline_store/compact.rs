@@ -44,6 +44,8 @@ use std::time::Duration;
 use super::columnar::Segment;
 use super::OfflineStore;
 use crate::monitor::metrics::{MetricKind, MetricsRegistry};
+use crate::monitor::names;
+use crate::monitor::trace::Tracer;
 use crate::util::wake::Wake;
 
 /// Size tier of a segment: the smallest `t` with
@@ -134,6 +136,18 @@ impl CompactionDriver {
         period: Duration,
         metrics: Option<Arc<MetricsRegistry>>,
     ) -> CompactionDriver {
+        Self::spawn_observed(store, period, metrics, None)
+    }
+
+    /// [`CompactionDriver::spawn_with`] plus request tracing: each wake
+    /// round that merged anything publishes a sampled trace of the tiers
+    /// folded and the backlog left behind.
+    pub fn spawn_observed(
+        store: Arc<OfflineStore>,
+        period: Duration,
+        metrics: Option<Arc<MetricsRegistry>>,
+        tracer: Option<Arc<Tracer>>,
+    ) -> CompactionDriver {
         let stop = Arc::new(AtomicBool::new(false));
         let merges = Arc::new(AtomicU64::new(0));
         let wake = store.compaction_wake();
@@ -149,35 +163,48 @@ impl CompactionDriver {
                         return;
                     }
                     seen = wake2.wait(seen, period);
+                    let trace = tracer.as_ref().and_then(|t| t.maybe_trace("compaction_tick"));
+                    let mut round_merges = 0u64;
                     loop {
                         let tiers = store.compact_tick_tiers();
                         merges2.fetch_add(tiers.len() as u64, Ordering::Relaxed);
+                        round_merges += tiers.len() as u64;
                         if let Some(m) = &metrics {
                             if !tiers.is_empty() {
                                 m.inc(
                                     MetricKind::System,
-                                    "compaction_merges_total",
+                                    names::COMPACTION_MERGES_TOTAL,
                                     tiers.len() as u64,
                                 );
                                 for t in &tiers {
                                     m.inc(
                                         MetricKind::System,
-                                        &format!("compaction_merges_tier{t}"),
+                                        &names::compaction_merges_tier(*t as usize),
                                         1,
                                     );
                                 }
+                            }
+                        }
+                        if let Some(t) = &trace {
+                            if !tiers.is_empty() {
+                                t.event("merge", format!("tiers={tiers:?}"));
                             }
                         }
                         if tiers.is_empty() || stop2.load(Ordering::Acquire) {
                             break;
                         }
                     }
+                    let backlog = store.compaction_backlog();
                     if let Some(m) = &metrics {
                         m.set_gauge(
                             MetricKind::System,
-                            "compaction_backlog",
-                            store.compaction_backlog() as f64,
+                            names::COMPACTION_BACKLOG,
+                            backlog as f64,
                         );
+                    }
+                    if let Some(t) = &trace {
+                        t.event("drained", format!("merges={round_merges} backlog={backlog}"));
+                        t.finish();
                     }
                 }
             })

@@ -41,6 +41,7 @@ use super::pit::{Observation, PitConfig};
 use super::spec::FeatureRef;
 use crate::exec::ThreadPool;
 use crate::metadata::assets::FeatureSetSpec;
+use crate::monitor::trace::TraceContext;
 use crate::offline_store::{OfflineStore, Segment, SegmentCursor};
 use crate::types::{EntityId, FeatureWindow, FsError, Result, Timestamp};
 
@@ -116,6 +117,20 @@ fn pit_pick(rows: &[Candidate], ts: Timestamp, cfg: PitConfig) -> Option<usize> 
     super::pit::pit_walk(rows, |r| (r.0, r.1), ts, cfg)
 }
 
+/// Per-task pruning tallies for the sampled `join_task` trace event:
+/// how many per-entity segment probes each pruning stage cut off before
+/// any block was decoded, and how many candidate rows survived into the
+/// k-way merge.
+#[derive(Default)]
+struct JoinStats {
+    /// Probes rejected by the segment's entity bloom filter.
+    bloom_pruned: u64,
+    /// Probes rejected by the segment's event-window zone bounds.
+    window_pruned: u64,
+    /// Candidate rows k-way-merged across all entities of the span.
+    rows_merged: u64,
+}
+
 /// Gather `entity`'s rows (within `window`) from every segment and
 /// k-way-merge the presorted runs into `out`, sorted by
 /// `(event_ts, creation_ts)`. `positions` are per-segment forward-only
@@ -131,13 +146,19 @@ fn collect_candidates(
     window: FeatureWindow,
     heads: &mut Vec<(usize, usize, usize)>,
     out: &mut Vec<Candidate>,
+    stats: &mut JoinStats,
 ) {
     out.clear();
     // (segment, next row, run end) per segment holding in-window rows;
     // caller-owned scratch so the per-entity loop never allocates.
     heads.clear();
     for (si, seg) in segs.iter().enumerate() {
-        if !seg.may_contain_entity(entity) || !seg.overlaps_event_window(window) {
+        if !seg.may_contain_entity(entity) {
+            stats.bloom_pruned += 1;
+            continue;
+        }
+        if !seg.overlaps_event_window(window) {
+            stats.window_pruned += 1;
             continue;
         }
         let (lo, hi) = readers[si].entity_run(entity, positions[si]);
@@ -152,6 +173,7 @@ fn collect_candidates(
             let (_, ev, cr) = readers[si].key(i);
             out.push((ev, cr, si as u32, i as u32));
         }
+        stats.rows_merged += out.len() as u64;
         return;
     }
     while !heads.is_empty() {
@@ -177,6 +199,7 @@ fn collect_candidates(
             heads.swap_remove(b);
         }
     }
+    stats.rows_merged += out.len() as u64;
 }
 
 /// One unit of fanned-out join work: a contiguous span of the sorted
@@ -193,6 +216,11 @@ struct JoinTask {
     cols: Arc<Vec<usize>>,
     window: FeatureWindow,
     cfg: PitConfig,
+    /// Table this task joins against (trace labels only).
+    table: Arc<String>,
+    /// Sampled request trace this query runs under: each task reports
+    /// its segment/pruning/merge tallies as one `join_task` event.
+    trace: Option<Arc<TraceContext>>,
 }
 
 impl JoinTask {
@@ -208,6 +236,7 @@ impl JoinTask {
         let mut positions = vec![0usize; self.segs.len()];
         let mut heads: Vec<(usize, usize, usize)> = Vec::new();
         let mut cand: Vec<Candidate> = Vec::new();
+        let mut stats = JoinStats::default();
         let mut pos = 0;
         while pos < span.len() {
             let entity = self.obs[span[pos] as usize].entity;
@@ -223,6 +252,7 @@ impl JoinTask {
                 self.window,
                 &mut heads,
                 &mut cand,
+                &mut stats,
             );
             if !cand.is_empty() {
                 for k in pos..end {
@@ -237,6 +267,21 @@ impl JoinTask {
                 }
             }
             pos = end;
+        }
+        if let Some(t) = &self.trace {
+            t.event(
+                "join_task",
+                format!(
+                    "table={} span={} segments={} bloom_pruned={} window_pruned={} \
+                     rows_merged={}",
+                    self.table,
+                    span.len(),
+                    self.segs.len(),
+                    stats.bloom_pruned,
+                    stats.window_pruned,
+                    stats.rows_merged,
+                ),
+            );
         }
         out
     }
@@ -273,18 +318,28 @@ fn chunk_spine(obs: &[Observation], order: &[u32], workers: usize) -> Vec<(usize
 pub struct OfflineQueryEngine {
     store: Arc<OfflineStore>,
     pool: Option<Arc<ThreadPool>>,
+    trace: Option<Arc<TraceContext>>,
 }
 
 impl OfflineQueryEngine {
     pub fn new(store: Arc<OfflineStore>) -> Self {
-        OfflineQueryEngine { store, pool: None }
+        OfflineQueryEngine { store, pool: None, trace: None }
     }
 
     /// Engine that runs per-table / per-entity-chunk joins on `pool`.
     /// Must not be invoked *from* a task already running on that pool
     /// (the blocking joins could starve the queue).
     pub fn with_pool(store: Arc<OfflineStore>, pool: Arc<ThreadPool>) -> Self {
-        OfflineQueryEngine { store, pool: Some(pool) }
+        OfflineQueryEngine { store, pool: Some(pool), trace: None }
+    }
+
+    /// Attach a sampled request trace: every fanned-out join task will
+    /// report its segment/pruning/merge tallies into it (one `join_task`
+    /// event per table × entity-chunk), so a slow training-frame trace
+    /// shows *where* the scan work went.
+    pub fn with_trace(mut self, trace: Arc<TraceContext>) -> Self {
+        self.trace = Some(trace);
+        self
     }
 
     /// PIT-join `observations` against `features`. Each feature ref must
@@ -360,6 +415,18 @@ impl OfflineQueryEngine {
             let segs = Arc::new(segs);
             let schema_cols = Arc::new(cols.iter().map(|&(_, ci)| ci).collect::<Vec<_>>());
             let frame_cols: Vec<usize> = cols.iter().map(|&(c, _)| c).collect();
+            if let Some(t) = &self.trace {
+                t.event(
+                    "table_scan",
+                    format!(
+                        "table={table} segments={} window=[{},{})",
+                        segs.len(),
+                        window.start,
+                        window.end
+                    ),
+                );
+            }
+            let table_arc = Arc::new(table.clone());
             for &(lo, hi) in &chunks {
                 tasks.push(JoinTask {
                     segs: segs.clone(),
@@ -370,6 +437,8 @@ impl OfflineQueryEngine {
                     cols: schema_cols.clone(),
                     window,
                     cfg,
+                    table: table_arc.clone(),
+                    trace: self.trace.clone(),
                 });
                 metas.push((lo, hi, frame_cols.clone()));
             }

@@ -33,6 +33,7 @@ use std::sync::atomic::{AtomicU64, AtomicUsize, Ordering};
 use std::sync::{Arc, Mutex};
 
 use crate::monitor::metrics::{MetricKind, MetricsRegistry};
+use crate::monitor::names;
 use crate::types::{FsError, Result};
 
 /// Continuous-refill token bucket: `rate_per_sec` sustained, `burst`
@@ -127,7 +128,7 @@ impl Drop for Permit {
     fn drop(&mut self) {
         let now = self.inflight.fetch_sub(1, Ordering::AcqRel) - 1;
         if let Some(m) = &self.metrics {
-            m.set_gauge(MetricKind::System, "admission_inflight", now as f64);
+            m.set_gauge(MetricKind::System, names::ADMISSION_INFLIGHT, now as f64);
         }
     }
 }
@@ -220,8 +221,8 @@ impl AdmissionController {
         }
         self.admitted.fetch_add(1, Ordering::Relaxed);
         if let Some(m) = &self.metrics {
-            m.inc(MetricKind::System, "admission_admitted", 1);
-            m.set_gauge(MetricKind::System, "admission_inflight", (depth + 1) as f64);
+            m.inc(MetricKind::System, names::ADMISSION_ADMITTED, 1);
+            m.set_gauge(MetricKind::System, names::ADMISSION_INFLIGHT, (depth + 1) as f64);
         }
         Ok(Permit { inflight: self.inflight.clone(), metrics: self.metrics.clone() })
     }
@@ -229,7 +230,7 @@ impl AdmissionController {
     fn shed(&self, resource: &str, reason: String) -> FsError {
         self.shed.fetch_add(1, Ordering::Relaxed);
         if let Some(m) = &self.metrics {
-            m.inc(MetricKind::System, "admission_shed", 1);
+            m.inc(MetricKind::System, names::ADMISSION_SHED, 1);
         }
         FsError::Overloaded { resource: resource.to_string(), reason }
     }

@@ -14,8 +14,13 @@ use super::admission::AdmissionController;
 use super::batcher::wall_us;
 use super::router::ServingRouter;
 use crate::geo::access::{AccessMechanism, ReadConsistency, RoutedBatch, RoutedLookup};
-use crate::monitor::metrics::{MetricKind, MetricsRegistry};
+use crate::monitor::metrics::{Counter, LatencyHandle, MetricKind, MetricsRegistry};
+use crate::monitor::names;
+use crate::monitor::trace::{TraceContext, Tracer};
 use crate::types::{EntityId, Result, Timestamp};
+
+const MECHS: [AccessMechanism; 3] =
+    [AccessMechanism::Local, AccessMechanism::CrossRegion, AccessMechanism::Replica];
 
 fn mech_label(m: AccessMechanism) -> &'static str {
     match m {
@@ -25,17 +30,63 @@ fn mech_label(m: AccessMechanism) -> &'static str {
     }
 }
 
+fn mech_idx(m: AccessMechanism) -> usize {
+    match m {
+        AccessMechanism::Local => 0,
+        AccessMechanism::CrossRegion => 1,
+        AccessMechanism::Replica => 2,
+    }
+}
+
+/// Hot-path metric handles, pre-registered at construction so a lookup
+/// records its latency and hit/miss outcome with a few relaxed atomic
+/// RMWs — no name lookup, no lock, no allocation. Pre-registration also
+/// means every serving series exists in `export()` from the first
+/// scrape, whether or not its mechanism has been exercised yet.
+struct ServingMetrics {
+    hits: Counter,
+    misses: Counter,
+    batches: Counter,
+    /// Point-lookup latency per access mechanism, indexed by `mech_idx`.
+    latency: [LatencyHandle; 3],
+    /// Batch-lookup latency per access mechanism, indexed by `mech_idx`.
+    batch_latency: [LatencyHandle; 3],
+}
+
+impl ServingMetrics {
+    fn new(m: &MetricsRegistry) -> Self {
+        ServingMetrics {
+            hits: m.counter_handle(MetricKind::System, names::SERVING_HITS),
+            misses: m.counter_handle(MetricKind::System, names::SERVING_MISSES),
+            batches: m.counter_handle(MetricKind::System, names::SERVING_BATCHES),
+            latency: MECHS.map(|mech| {
+                m.latency_handle(MetricKind::System, &names::serving_latency_us(mech_label(mech)))
+            }),
+            batch_latency: MECHS.map(|mech| {
+                m.latency_handle(
+                    MetricKind::System,
+                    &names::serving_batch_latency_us(mech_label(mech)),
+                )
+            }),
+        }
+    }
+}
+
 /// Serving facade used by the coordinator and the benches.
 pub struct OnlineServing {
     pub router: ServingRouter,
     pub metrics: Arc<MetricsRegistry>,
     /// Admission gate for tenant-attributed reads; `None` = fully open.
     pub admission: Option<Arc<AdmissionController>>,
+    /// Request tracer for the admitted batch path; `None` = untraced.
+    pub tracer: Option<Arc<Tracer>>,
+    stats: ServingMetrics,
 }
 
 impl OnlineServing {
     pub fn new(router: ServingRouter, metrics: Arc<MetricsRegistry>) -> Self {
-        OnlineServing { router, metrics, admission: None }
+        let stats = ServingMetrics::new(&metrics);
+        OnlineServing { router, metrics, admission: None, tracer: None, stats }
     }
 
     /// A serving front end with an admission gate in front of the
@@ -45,7 +96,8 @@ impl OnlineServing {
         metrics: Arc<MetricsRegistry>,
         admission: Arc<AdmissionController>,
     ) -> Self {
-        OnlineServing { router, metrics, admission: Some(admission) }
+        let stats = ServingMetrics::new(&metrics);
+        OnlineServing { router, metrics, admission: Some(admission), tracer: None, stats }
     }
 
     /// One online feature lookup from `consumer_region` under a
@@ -61,17 +113,13 @@ impl OnlineServing {
     ) -> Result<RoutedLookup> {
         let access = self.router.resolve(table, consumer_region)?;
         let out = access.lookup(consumer_region, table, entity, now, consistency)?;
-        let mech = mech_label(out.mechanism);
-        self.metrics.observe_latency(
-            MetricKind::System,
-            &format!("serving_latency_us_{mech}"),
-            out.latency_us * 1_000, // store ns in the histogram
-        );
-        self.metrics.inc(
-            MetricKind::System,
-            if out.record.is_some() { "serving_hits" } else { "serving_misses" },
-            1,
-        );
+        // store ns in the histogram
+        self.stats.latency[mech_idx(out.mechanism)].observe(out.latency_us * 1_000);
+        if out.record.is_some() {
+            self.stats.hits.inc(1);
+        } else {
+            self.stats.misses.inc(1);
+        }
         Ok(out)
     }
 
@@ -87,22 +135,27 @@ impl OnlineServing {
         now: Timestamp,
         consistency: &ReadConsistency,
     ) -> Result<RoutedBatch> {
+        self.lookup_batch_traced(table, entities, consumer_region, now, consistency, None)
+    }
+
+    fn lookup_batch_traced(
+        &self,
+        table: &str,
+        entities: &[EntityId],
+        consumer_region: &str,
+        now: Timestamp,
+        consistency: &ReadConsistency,
+        trace: Option<&TraceContext>,
+    ) -> Result<RoutedBatch> {
         let access = self.router.resolve(table, consumer_region)?;
-        let out = access.lookup_many(consumer_region, table, entities, now, consistency)?;
-        let mech = mech_label(out.mechanism);
-        self.metrics.observe_latency(
-            MetricKind::System,
-            &format!("serving_batch_latency_us_{mech}"),
-            out.latency_us * 1_000, // store ns in the histogram
-        );
+        let out =
+            access.lookup_many_traced(consumer_region, table, entities, now, consistency, trace)?;
+        // store ns in the histogram
+        self.stats.batch_latency[mech_idx(out.mechanism)].observe(out.latency_us * 1_000);
         let hits = out.records.iter().filter(|r| r.is_some()).count() as u64;
-        self.metrics.inc(MetricKind::System, "serving_hits", hits);
-        self.metrics.inc(
-            MetricKind::System,
-            "serving_misses",
-            out.records.len() as u64 - hits,
-        );
-        self.metrics.inc(MetricKind::System, "serving_batches", 1);
+        self.stats.hits.inc(hits);
+        self.stats.misses.inc(out.records.len() as u64 - hits);
+        self.stats.batches.inc(1);
         Ok(out)
     }
 
@@ -112,6 +165,11 @@ impl OnlineServing {
     /// so the in-flight bound tracks requests actually being served.
     /// Sheds with a typed `Overloaded` error; with no admission
     /// controller configured it is exactly [`Self::lookup_batch`].
+    ///
+    /// This is the traced entry point: when a [`Tracer`] is wired and
+    /// samples the request, the admission wait, the routing decision
+    /// (with chosen consistency/staleness) and the store fan-out all
+    /// land in one span tree.
     pub fn lookup_batch_admitted(
         &self,
         tenant: &str,
@@ -121,11 +179,48 @@ impl OnlineServing {
         now: Timestamp,
         consistency: &ReadConsistency,
     ) -> Result<RoutedBatch> {
+        let trace = self.tracer.as_ref().and_then(|t| t.maybe_trace("online_read"));
+        if let Some(t) = &trace {
+            t.event(
+                "request",
+                format!(
+                    "tenant={tenant} table={table} keys={} region={consumer_region}",
+                    entities.len()
+                ),
+            );
+        }
         let _permit = match &self.admission {
-            Some(ctrl) => Some(ctrl.admit(tenant, table, entities.len() as f64, wall_us())?),
+            Some(ctrl) => {
+                let g = trace.as_ref().map(|t| t.span("admission"));
+                match ctrl.admit(tenant, table, entities.len() as f64, wall_us()) {
+                    Ok(p) => {
+                        drop(g);
+                        Some(p)
+                    }
+                    Err(e) => {
+                        drop(g);
+                        if let Some(t) = &trace {
+                            t.event("shed", format!("{e}"));
+                            t.finish();
+                        }
+                        return Err(e);
+                    }
+                }
+            }
             None => None,
         };
-        self.lookup_batch(table, entities, consumer_region, now, consistency)
+        let out = self.lookup_batch_traced(
+            table,
+            entities,
+            consumer_region,
+            now,
+            consistency,
+            trace.as_deref(),
+        );
+        if let Some(t) = &trace {
+            t.finish();
+        }
+        out
     }
 
     /// Batched lookup of many entities (bulk inference). Returns
@@ -244,6 +339,28 @@ mod tests {
         s.lookup_batch_admitted("bob", "t", &[1], "eastus", 100, &c).unwrap();
         // No admission controller → same call is fully open.
         open.lookup_batch_admitted("alice", "t", &[1], "eastus", 100, &c).unwrap();
+    }
+
+    #[test]
+    fn admitted_path_emits_traces() {
+        use crate::monitor::trace::{TraceConfig, Tracer};
+        let (mut s, _) = serving();
+        let tracer = Tracer::new(TraceConfig {
+            sample_every: 1,
+            slow_threshold_us: 0, // everything lands in the slow ring
+            ring_capacity: 8,
+        });
+        s.tracer = Some(tracer.clone());
+        s.lookup_batch_admitted("t1", "t", &[1, 2], "eastus", 100, &ReadConsistency::default())
+            .unwrap();
+        let slow = tracer.slow_ops();
+        assert_eq!(slow.len(), 1);
+        let r = slow[0].render();
+        assert!(r.contains("request"), "{r}");
+        assert!(r.contains("route") && r.contains("mech=Local"), "{r}");
+        assert!(r.contains("store_read") && r.contains("keys=2 hits=1"), "{r}");
+        // The same trace also sits in the completed ring.
+        assert_eq!(tracer.recent().len(), 1);
     }
 
     #[test]

@@ -96,6 +96,8 @@ use crate::materialize::Materializer;
 use crate::metadata::assets::FeatureSetSpec;
 use crate::monitor::freshness::FreshnessTracker;
 use crate::monitor::metrics::{MetricKind, MetricsRegistry};
+use crate::monitor::names;
+use crate::monitor::trace::Tracer;
 use crate::offline_store::OfflineStore;
 use crate::online_store::OnlineStore;
 use crate::serving::batcher::{wall_us, BatcherConfig, FlushDriver, WriteBatcher};
@@ -172,6 +174,9 @@ pub struct StreamDeps {
     /// everything (the pre-retention behavior; also what keeps ad-hoc
     /// test engines trivially replayable).
     pub checkpoints: Option<Arc<CheckpointStore>>,
+    /// Request tracer: sampled `poll_partition` rounds record their
+    /// absorb/materialize/dual-write breakdown. `None` = untraced.
+    pub tracer: Option<Arc<Tracer>>,
 }
 
 /// One poll round's aggregate outcome.
@@ -367,7 +372,7 @@ impl StreamIngestor {
         if backlog.saturating_add(events.len() as u64) > self.cfg.max_backlog_events as u64 {
             self.deps.metrics.inc(
                 MetricKind::System,
-                "stream_shed_events",
+                names::STREAM_SHED_EVENTS,
                 events.len() as u64,
             );
             return Err(FsError::Overloaded {
@@ -410,6 +415,8 @@ impl StreamIngestor {
     /// One partition's round: poll new log entries, absorb, execute the
     /// pipeline's emit/repair plans through Algorithm 1, dual-write.
     fn poll_partition(&self, p: usize) -> Result<PartRound> {
+        let trace =
+            self.deps.tracer.as_ref().and_then(|t| t.maybe_trace("stream_poll_partition"));
         let mut st = self.parts[p].lock().unwrap();
         let entries = self.log.read_from(p, st.next_offset, usize::MAX);
         for (off, ev) in &entries {
@@ -417,6 +424,12 @@ impl StreamIngestor {
             st.next_offset = off + 1;
         }
         let plans = st.pipeline.plans();
+        if let Some(t) = &trace {
+            t.event(
+                "absorb",
+                format!("partition={p} entries={} plans={}", entries.len(), plans.len()),
+            );
+        }
         let proc_now = self.deps.clock.now();
         // Monotone per-partition creation stamp: a repair in the same
         // logical second as the original emission must still produce a
@@ -426,6 +439,7 @@ impl StreamIngestor {
             st.last_creation = now;
         }
         let mut records_out = 0u64;
+        let mat_span = trace.as_ref().map(|t| t.span("materialize"));
         for plan in plans {
             for window in plan.window.split(self.spec.granularity, self.cfg.max_bins_per_emit) {
                 let source = BufferSource::new(st.pipeline.buffer(), plan.keys.as_deref());
@@ -453,6 +467,13 @@ impl StreamIngestor {
                     fabric.append_shared(&self.table, shared, proc_now);
                 }
             }
+        }
+        if let Some(g) = &mat_span {
+            g.note(format!("records={records_out}"));
+        }
+        drop(mat_span);
+        if let Some(t) = &trace {
+            t.finish();
         }
         Ok(PartRound {
             consumed: entries.len() as u64,
@@ -494,7 +515,7 @@ impl StreamIngestor {
             stats.watermark_skew_secs = (hi - lo).max(0);
             self.deps.metrics.set_gauge(
                 MetricKind::System,
-                "stream_watermark_skew_secs",
+                names::STREAM_WATERMARK_SKEW_SECS,
                 stats.watermark_skew_secs as f64,
             );
         }
@@ -517,12 +538,16 @@ impl StreamIngestor {
             self.deps.freshness.advance(&self.table, wm);
             self.deps.metrics.set_gauge(
                 MetricKind::System,
-                "stream_watermark_lag_secs",
+                names::STREAM_WATERMARK_LAG_SECS,
                 (now - wm).max(0) as f64,
             );
         }
-        self.deps.metrics.inc(MetricKind::System, "stream_events_consumed", stats.consumed);
-        self.deps.metrics.inc(MetricKind::System, "stream_records_emitted", stats.records_emitted);
+        self.deps.metrics.inc(MetricKind::System, names::STREAM_EVENTS_CONSUMED, stats.consumed);
+        self.deps.metrics.inc(
+            MetricKind::System,
+            names::STREAM_RECORDS_EMITTED,
+            stats.records_emitted,
+        );
         Ok(stats)
     }
 
@@ -698,6 +723,7 @@ mod tests {
             pool: None,
             fabric: None,
             checkpoints: None,
+            tracer: None,
         }
     }
 

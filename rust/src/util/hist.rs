@@ -8,6 +8,11 @@
 const SUB_BITS: u32 = 6; // 64 linear sub-buckets per octave
 const SUB: usize = 1 << SUB_BITS;
 
+/// Total bucket count — exposed so the lock-free metrics core can keep
+/// per-thread-striped `AtomicU64` bucket arrays that mirror this layout
+/// and fold them back into a `Histogram` for reads.
+pub(crate) const BUCKETS: usize = 64 * SUB;
+
 #[derive(Debug, Clone)]
 pub struct Histogram {
     counts: Vec<u64>,
@@ -52,12 +57,39 @@ impl Histogram {
         (1u64 << msb) | ((sub as u64) << (msb - SUB_BITS))
     }
 
+    /// Bucket index for value `v` — the same mapping `record` uses,
+    /// exposed for the atomic mirror in `monitor/metrics.rs`.
+    #[inline]
+    pub(crate) fn index_of(v: u64) -> usize {
+        Self::index(v)
+    }
+
+    /// Rebuild a histogram from raw bucket counts (the fold step of the
+    /// striped atomic histograms). `counts` must use the `index_of`
+    /// layout and have exactly [`BUCKETS`] entries.
+    pub(crate) fn from_parts(counts: Vec<u64>, sum: u128, min: u64, max: u64) -> Histogram {
+        debug_assert_eq!(counts.len(), BUCKETS);
+        let total: u64 = counts.iter().sum();
+        Histogram {
+            counts,
+            total,
+            sum,
+            min: if total == 0 { u64::MAX } else { min },
+            max,
+        }
+    }
+
     pub fn record(&mut self, v: u64) {
         self.counts[Self::index(v)] += 1;
         self.total += 1;
         self.sum += v as u128;
         self.min = self.min.min(v);
         self.max = self.max.max(v);
+    }
+
+    /// Exact sum of all recorded values (for Prometheus `_sum` export).
+    pub fn sum(&self) -> u128 {
+        self.sum
     }
 
     pub fn count(&self) -> u64 {

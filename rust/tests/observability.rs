@@ -1,0 +1,223 @@
+//! Export-completeness + end-to-end observability integration test
+//! (PR 8). One coordinator-driven workload exercises every subsystem
+//! that publishes metrics — materialization, streaming (including a
+//! backpressure shed), online serving (hits, misses, admission shed),
+//! the PIT query engine, geo-replication, compaction, and the TTL
+//! sweeper — then asserts that the Prometheus `export()` view covers
+//! every name in [`names::ALL_STATIC`] plus the dynamic-suffix series
+//! this deployment publishes. A metric registers on first touch, so a
+//! name missing from the export means a driver stopped publishing (or
+//! drifted off the canonical vocabulary in `monitor/names.rs`).
+//!
+//! The store runs with always-on tracing and a zero slow-op threshold,
+//! so the same run also proves the `FeatureStore::slow_ops()` /
+//! `recent_traces()` surface captures rendered span trees.
+
+use std::time::{Duration, Instant};
+
+use geofs::config::Config;
+use geofs::coordinator::{FeatureStore, OpenOptions};
+use geofs::monitor::names;
+use geofs::monitor::sweeper::sweep_once;
+use geofs::monitor::trace::TraceConfig;
+use geofs::query::pit::PitConfig;
+use geofs::serving::AdmissionConfig;
+use geofs::sim::workload::{ChurnWorkload, ChurnWorkloadConfig};
+use geofs::stream::{StreamConfig, StreamEvent};
+use geofs::types::time::DAY;
+use geofs::types::{FeatureRecord, FsError, Timestamp};
+
+/// Poll `cond` until it holds or `deadline` passes (background drivers
+/// run on wall-clock periods; every wait here is bounded).
+fn wait_until(deadline: Duration, mut cond: impl FnMut() -> bool) -> bool {
+    let end = Instant::now() + deadline;
+    while Instant::now() < end {
+        if cond() {
+            return true;
+        }
+        std::thread::sleep(Duration::from_millis(5));
+    }
+    cond()
+}
+
+#[test]
+fn export_covers_every_published_metric() {
+    let days: i64 = 3;
+    let fs = FeatureStore::open(
+        Config::default_geo(),
+        OpenOptions {
+            with_engine: false,
+            geo_replication: true,
+            // Finite tenant budget with a trickle refill: the first
+            // few batches are admitted, then the gate sheds.
+            admission: Some(AdmissionConfig {
+                tenant_rate: 0.001,
+                tenant_burst: 64.0,
+                max_inflight: 256,
+                ..Default::default()
+            }),
+            // Trace everything and call everything slow, so the run
+            // also proves the slow-op surface end to end.
+            trace: TraceConfig { sample_every: 1, slow_threshold_us: 0, ring_capacity: 64 },
+            ..Default::default()
+        },
+    )
+    .unwrap();
+    let w = ChurnWorkload::install(
+        &fs,
+        ChurnWorkloadConfig { customers: 16, days, ..Default::default() },
+    )
+    .unwrap();
+    let history_end = days * DAY;
+    fs.clock.set(history_end);
+
+    // -- batch materialization → materialized_records / materialization_jobs.
+    fs.materialize_tick(&w.txn_table).unwrap();
+
+    // -- streaming: a tiny backlog bound so one oversized burst sheds
+    //    (stream_shed_events), then a drained flow for the consumption
+    //    counters and watermark gauges. One partition keeps the
+    //    watermark (and therefore the skew/lag gauges) deterministic.
+    fs.start_stream(
+        &w.interactions_table,
+        StreamConfig { partitions: 1, max_backlog_events: 8, ..Default::default() },
+    )
+    .unwrap();
+    let ev = |seq: u64, hour: i64| {
+        StreamEvent::new(seq, format!("cust_{:05}", seq % 16), history_end + hour * 3_600, 1.0)
+    };
+    let first: Vec<StreamEvent> = (0..6).map(|i| ev(i, i as i64)).collect();
+    assert_eq!(fs.stream_ingest(&w.interactions_table, &first).unwrap(), 6);
+    let burst: Vec<StreamEvent> = (6..16).map(|i| ev(i, i as i64)).collect();
+    let shed = fs.stream_ingest(&w.interactions_table, &burst);
+    assert!(
+        matches!(shed, Err(FsError::Overloaded { .. })),
+        "oversized burst past max_backlog_events must shed, got {shed:?}"
+    );
+    assert!(fs.metrics.counter(names::STREAM_SHED_EVENTS) > 0);
+    fs.clock.set(history_end + 16 * 3_600);
+    fs.drain_stream(&w.interactions_table).unwrap();
+    assert!(
+        fs.metrics.gauge(names::STREAM_WATERMARK_LAG_SECS).is_some(),
+        "drained stream must publish its watermark lag"
+    );
+
+    // -- online serving: hits on the materialized daily table, misses on
+    //    keys the hourly table never saw (interned but absent), and —
+    //    once the 64-key tenant burst is spent — admission sheds.
+    let home = fs.config.home_region().to_string();
+    let keys: Vec<String> = (0..8).map(|i| format!("cust_{i:05}")).collect();
+    let hit_reqs: Vec<(&str, &str)> =
+        keys.iter().map(|k| (w.txn_table.as_str(), k.as_str())).collect();
+    let hits = fs.get_online_many_mixed(&w.principal, &hit_reqs, &home).unwrap();
+    assert!(hits.iter().any(|l| l.record.is_some()), "materialized reads must hit");
+    let miss_keys: Vec<String> = (8..16).map(|i| format!("cust_{i:05}")).collect();
+    let miss_reqs: Vec<(&str, &str)> =
+        miss_keys.iter().map(|k| (w.interactions_table.as_str(), k.as_str())).collect();
+    fs.get_online_many_mixed(&w.principal, &miss_reqs, &home).unwrap();
+    assert!(fs.metrics.counter(names::SERVING_HITS) > 0);
+    assert!(fs.metrics.counter(names::SERVING_MISSES) > 0);
+
+    // -- offline PIT query → training_rows_served (before the admission
+    //    budget is exhausted below).
+    let obs: Vec<(String, Timestamp)> = w
+        .observation_spine(16)
+        .into_iter()
+        .map(|(k, ts, _label)| (k, ts))
+        .collect();
+    fs.get_training_frame(
+        &w.principal,
+        None,
+        &obs,
+        &w.model_features(),
+        PitConfig::default(),
+        &home,
+    )
+    .unwrap();
+
+    // -- admission overload: keep offering batches until the tenant
+    //    bucket is dry (burst 64 keys, refill ~0) → admission_shed.
+    let mut shed_seen = false;
+    for _ in 0..40 {
+        if fs.get_online_many_mixed(&w.principal, &hit_reqs, &home).is_err() {
+            shed_seen = true;
+            break;
+        }
+    }
+    assert!(shed_seen, "tenant bucket must run dry and shed");
+    assert!(fs.metrics.counter(names::ADMISSION_SHED) > 0);
+
+    // -- geo-replication: one deterministic pump refreshes the
+    //    per-region lag/backlog gauges; the background driver's
+    //    pump_parallel sets the fan-out gauge on its own tick.
+    fs.pump_replication();
+    assert!(
+        wait_until(Duration::from_secs(10), || {
+            fs.metrics.gauge(names::REPL_APPLY_PARALLEL).is_some()
+        }),
+        "background replication driver never reported its parallel fan-out"
+    );
+
+    // -- compaction: six spill-sized merges seed six tier-0 segments
+    //    (spill threshold 1024, fanin 4), then the background driver
+    //    folds them and bumps the merge counters.
+    for seg in 0..6i64 {
+        let recs: Vec<FeatureRecord> = (0..1024)
+            .map(|i| {
+                let ts = seg * 100_000 + i;
+                FeatureRecord::new((i % 64) as u64, ts, ts + 1, vec![seg as f32])
+            })
+            .collect();
+        fs.offline.merge("obs_compact_seed", &recs);
+    }
+    assert!(
+        wait_until(Duration::from_secs(10), || {
+            fs.metrics.counter(names::COMPACTION_MERGES_TOTAL) > 0
+        }),
+        "background compaction driver never merged the seeded tier-0 segments"
+    );
+
+    // -- TTL sweep: expire the daily table's online rows and run one
+    //    deterministic cycle → ttl_evicted_total + the sweep gauges.
+    fs.online.set_ttl(&w.txn_table, 60);
+    fs.clock.advance(DAY);
+    let report = sweep_once(&fs.online, &fs.freshness, &fs.metrics, fs.clock.now());
+    assert!(report.evicted > 0, "expired online rows must be reclaimed");
+
+    // -- the point of the test: every canonical name is in the export.
+    let export = fs.metrics.export();
+    for name in names::ALL_STATIC {
+        assert!(
+            export.contains(&format!("# TYPE {name} ")),
+            "canonical metric '{name}' missing from export():\n{export}"
+        );
+    }
+    // Dynamic-suffix series this deployment publishes: per-replica
+    // replication gauges, the tier-0 merge counter, and the serving
+    // latency summaries (pre-registered for every access mechanism).
+    let mut dynamic: Vec<String> = fs
+        .config
+        .regions
+        .iter()
+        .filter(|r| **r != home)
+        .flat_map(|r| [names::repl_lag_secs(r), names::repl_backlog(r)])
+        .collect();
+    dynamic.push(names::compaction_merges_tier(0));
+    for mech in ["local", "xregion", "replica"] {
+        dynamic.push(names::serving_latency_us(mech));
+        dynamic.push(names::serving_batch_latency_us(mech));
+    }
+    for name in &dynamic {
+        assert!(
+            export.contains(&format!("# TYPE {name} ")),
+            "dynamic-suffix metric '{name}' missing from export():\n{export}"
+        );
+    }
+
+    // -- slow-op surface: always-on tracing with a zero threshold means
+    //    the rings hold completed span trees for the work above.
+    let slow = fs.slow_ops();
+    assert!(!slow.is_empty(), "zero-threshold tracing captured no slow ops");
+    assert!(slow.iter().all(|t| !t.render().is_empty()));
+    assert!(slow.len() <= 64, "slow-op ring must stay bounded");
+}

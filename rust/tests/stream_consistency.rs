@@ -249,6 +249,7 @@ fn standalone_deps(clock: Clock) -> StreamDeps {
         pool: None,
         fabric: None,
         checkpoints: None,
+        tracer: None,
     }
 }
 
@@ -316,6 +317,7 @@ fn crash_resume_from_checkpoint_is_exactly_once() {
         pool: None,
         fabric: None,
         checkpoints: None,
+        tracer: None,
     };
     let engine2 = StreamIngestor::with_log(spec(3), cfg, deps2, log.clone()).unwrap();
     engine2.restore_from(&CheckpointStore::load(&path).unwrap()).unwrap();
