@@ -1,0 +1,199 @@
+//! Experiment E-DUR: the price of durability and the speed of recovery.
+//!
+//! Three claims from the crash-safe durability layer (ISSUE 9):
+//!
+//! * **append overhead** — a durable WAL append with per-frame fsync
+//!   (the ack point) vs fsync-off vs the RAM-only partitioned log the
+//!   read path is built on. The fsync number is the real cost of the
+//!   "acked ⇒ survives a crash" guarantee.
+//! * **recovery is tail-proportional** — reopening a store replays the
+//!   newest valid manifest plus the WAL tail above the checkpointed
+//!   floors; time scales with the tail since the last checkpoint, not
+//!   with total history (never a full segment dump).
+//! * **checkpoint commit is cheap** — publishing a manifest generation
+//!   is one temp-file write + atomic rename, independent of how much
+//!   data the store holds.
+//!
+//! Writes machine-readable results to `BENCH_dur.json` (override the
+//! path with `GEOFS_BENCH_DUR_OUT`); `GEOFS_BENCH_FAST=1` shrinks the
+//! workload for CI smoke runs.
+
+use std::path::{Path, PathBuf};
+use std::sync::Arc;
+
+use geofs::benchkit::{fmt_ns, fmt_rate, Bencher, Measurement, Table};
+use geofs::storage::{DurableLogOptions, DurableStore, RealFs};
+use geofs::stream::{PartitionedLog, StreamEvent};
+use geofs::testkit::TempDir;
+use geofs::util::json::Json;
+
+fn ev(seq: u64) -> StreamEvent {
+    StreamEvent::new(seq, format!("cust_{:04}", seq % 512), seq as i64, seq as f32)
+}
+
+fn open_store(dir: &Path) -> Arc<DurableStore> {
+    DurableStore::open(Arc::new(RealFs), dir, 0).unwrap()
+}
+
+fn wal_opts(fsync: bool) -> DurableLogOptions {
+    DurableLogOptions {
+        fragment_max_bytes: 64 << 10,
+        fsync_every_append: fsync,
+        ..Default::default()
+    }
+}
+
+/// Append `total` records, then (if `tail < total`) advance the
+/// consumer floor so only the last `tail` records remain above the
+/// checkpoint — the slice recovery must actually replay. Two extra
+/// checkpoint generations age the pre-truncation manifest out of the
+/// GC live set so the reclaimed fragments are really gone.
+fn build_tail(dir: &Path, total: u64, tail: u64) {
+    let store = open_store(dir);
+    let log = store.open_log::<StreamEvent>("bench", 1, wal_opts(false)).unwrap();
+    for i in 0..total {
+        log.append(0, ev(i)).unwrap();
+    }
+    if tail < total {
+        log.truncate_below(0, total - tail);
+        store.commit_checkpoint(0, |_| {}).unwrap();
+        store.commit_checkpoint(1, |_| {}).unwrap();
+        store.gc().unwrap();
+        store.gc().unwrap();
+    }
+}
+
+/// One full recovery: root the newest manifest, replay the WAL tail.
+fn recover(dir: &Path) -> u64 {
+    let store = open_store(dir);
+    let log = store.open_log::<StreamEvent>("bench", 1, wal_opts(false)).unwrap();
+    log.mem().high_water(0)
+}
+
+fn m_json(m: &Measurement) -> Json {
+    Json::obj(vec![
+        ("name", Json::str(m.name.as_str())),
+        ("iters", Json::num(m.iters as f64)),
+        ("mean_ns", Json::num(m.mean_ns())),
+        ("p50_ns", Json::num(m.p50_ns() as f64)),
+        ("p99_ns", Json::num(m.p99_ns() as f64)),
+        ("throughput_per_s", Json::num(m.throughput())),
+    ])
+}
+
+fn main() {
+    let fast = std::env::var("GEOFS_BENCH_FAST").is_ok();
+    let (total, tail) = if fast { (2_000u64, 256u64) } else { (16_000u64, 1_024u64) };
+    let b = Bencher::new();
+
+    // --- append: RAM baseline vs WAL without fsync vs WAL with fsync.
+    let ram = PartitionedLog::<StreamEvent>::new(1);
+    let mut seq_ram = 0u64;
+    let m_ram = b.run("append ram baseline", 1.0, || {
+        seq_ram += 1;
+        ram.append(0, ev(seq_ram))
+    });
+
+    let dir_nosync = TempDir::new("bench-dur-nosync");
+    let store_nosync = open_store(dir_nosync.path());
+    let log_nosync = store_nosync.open_log::<StreamEvent>("bench", 1, wal_opts(false)).unwrap();
+    let mut seq_ns = 0u64;
+    let m_nosync = b.run("append wal fsync=off", 1.0, || {
+        seq_ns += 1;
+        log_nosync.append(0, ev(seq_ns)).unwrap()
+    });
+
+    let dir_sync = TempDir::new("bench-dur-sync");
+    let store_sync = open_store(dir_sync.path());
+    let log_sync = store_sync.open_log::<StreamEvent>("bench", 1, wal_opts(true)).unwrap();
+    let mut seq_s = 0u64;
+    let m_sync = b.run("append wal fsync=on (ack)", 1.0, || {
+        seq_s += 1;
+        log_sync.append(0, ev(seq_s)).unwrap()
+    });
+
+    // --- recovery: full tail vs checkpoint-truncated tail over the
+    // same total history. The first reopen seals the crashed active
+    // fragment (one manifest commit); warmup absorbs it and every
+    // later iteration is the pure read path.
+    let dir_full = TempDir::new("bench-dur-rec-full");
+    build_tail(dir_full.path(), total, total);
+    assert_eq!(recover(dir_full.path()), total);
+    let m_rec_full = b.run(
+        &format!("recover tail={total}"),
+        total as f64,
+        || recover(dir_full.path()),
+    );
+
+    let dir_tail = TempDir::new("bench-dur-rec-tail");
+    build_tail(dir_tail.path(), total, tail);
+    assert_eq!(recover(dir_tail.path()), total);
+    let m_rec_tail = b.run(
+        &format!("recover tail={tail} (post-ckpt)"),
+        tail as f64,
+        || recover(dir_tail.path()),
+    );
+
+    // --- checkpoint commit on the store that just absorbed the
+    // fsync=off append workload (realistically sized manifest).
+    let mut ckpt_now = 10i64;
+    let m_ckpt = b.run("checkpoint commit", 1.0, || {
+        ckpt_now += 1;
+        store_nosync.commit_checkpoint(ckpt_now, |_| {}).unwrap()
+    });
+
+    let mut t = Table::new(
+        "E-DUR — durable WAL append, recovery, checkpoint commit",
+        Table::LATENCY_HEADERS,
+    );
+    t.latency_row(&m_ram);
+    t.latency_row(&m_nosync);
+    t.latency_row(&m_sync);
+    t.latency_row(&m_rec_full);
+    t.latency_row(&m_rec_tail);
+    t.latency_row(&m_ckpt);
+    t.print();
+
+    let fsync_penalty = m_sync.mean_ns() / m_ram.mean_ns().max(1.0);
+    let tail_speedup = m_rec_full.mean_ns() / m_rec_tail.mean_ns().max(1.0);
+    println!(
+        "\nack cost: fsync append {} vs ram {} (×{:.0}); fsync=off {} keeps the format, drops the guarantee",
+        fmt_ns(m_sync.mean_ns()),
+        fmt_ns(m_ram.mean_ns()),
+        fsync_penalty,
+        fmt_ns(m_nosync.mean_ns()),
+    );
+    println!(
+        "recovery: full history ({total} recs) {}, post-checkpoint tail ({tail} recs) {} — ×{:.1} faster, replay rate {}",
+        fmt_ns(m_rec_full.mean_ns()),
+        fmt_ns(m_rec_tail.mean_ns()),
+        tail_speedup,
+        fmt_rate(m_rec_full.throughput()),
+    );
+    println!("checkpoint commit: {} per generation", fmt_ns(m_ckpt.mean_ns()));
+
+    let doc = Json::obj(vec![
+        ("experiment", Json::str("E-DUR")),
+        ("fast", Json::num(u8::from(fast))),
+        ("total_records", Json::num(total as f64)),
+        ("tail_records", Json::num(tail as f64)),
+        ("fsync_penalty_x", Json::num(fsync_penalty)),
+        ("tail_recovery_speedup_x", Json::num(tail_speedup)),
+        (
+            "measurements",
+            Json::Arr(vec![
+                m_json(&m_ram),
+                m_json(&m_nosync),
+                m_json(&m_sync),
+                m_json(&m_rec_full),
+                m_json(&m_rec_tail),
+                m_json(&m_ckpt),
+            ]),
+        ),
+    ]);
+    let out = std::env::var("GEOFS_BENCH_DUR_OUT")
+        .map(PathBuf::from)
+        .unwrap_or_else(|_| PathBuf::from("BENCH_dur.json"));
+    std::fs::write(&out, doc.to_string()).expect("write BENCH_dur.json");
+    println!("wrote {}", out.display());
+}

@@ -41,7 +41,7 @@ fn main() {
             .collect(),
         None,
     );
-    fabric.append("t", &recs, 2_000);
+    fabric.append("t", &recs, 2_000).unwrap();
     fabric.pump(2_000 + lag);
 
     let cross_only = CrossRegionAccess {
@@ -101,7 +101,7 @@ fn main() {
     let covered_token = fabric.token(); // the already-applied prefix
     home.merge("t", &[FeatureRecord::new(7, 3_000, 5_000, vec![777.0])], 5_000);
     let fresh_token =
-        fabric.append("t", &[FeatureRecord::new(7, 3_000, 5_000, vec![777.0])], 5_000);
+        fabric.append("t", &[FeatureRecord::new(7, 3_000, 5_000, vec![777.0])], 5_000).unwrap();
     let now = 5_030;
     let keys: Vec<u64> = (0..256).collect();
     let policies: Vec<(&str, ReadConsistency)> = vec![
@@ -174,7 +174,7 @@ fn main() {
                         FeatureRecord::new(e, b as i64, b as i64 + 1, vec![i as f32])
                     })
                     .collect();
-                f.append(&format!("t{}", b % 4), &recs, 0);
+                f.append(&format!("t{}", b % 4), &recs, 0).unwrap();
             }
             let applied: u64 = f.pump(1_000).values().sum();
             f.truncate_applied();

@@ -94,7 +94,7 @@ fn run_stream(
         d,
     )
     .unwrap();
-    ing.ingest(events);
+    ing.ingest(events).unwrap();
     let stats = ing.drain().unwrap();
     (online, stats.watermark)
 }
@@ -205,7 +205,7 @@ fn main() {
             .collect();
         seq += batch_size + 1;
         cursor_hour += 1;
-        ing.ingest(&batch);
+        ing.ingest(&batch).unwrap();
         ing.drain().unwrap();
         std::hint::black_box(online.len());
     });

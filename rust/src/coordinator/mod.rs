@@ -13,7 +13,7 @@ use std::sync::{Arc, RwLock};
 use crate::config::Config;
 use crate::exec::ThreadPool;
 use crate::geo::access::{CrossRegionAccess, ReadConsistency};
-use crate::geo::replication::{ReplicationDriver, ReplicationFabric, SessionToken};
+use crate::geo::replication::{ReplBatch, ReplicationDriver, ReplicationFabric, SessionToken};
 use crate::geo::topology::GeoTopology;
 use crate::governance::rbac::{Action, Principal, Rbac};
 use crate::lineage::Lineage;
@@ -25,7 +25,7 @@ use crate::monitor::freshness::FreshnessTracker;
 use crate::monitor::metrics::{MetricKind, MetricsRegistry};
 use crate::monitor::names;
 use crate::monitor::trace::{CompletedTrace, TraceConfig, Tracer};
-use crate::offline_store::{CompactionDriver, OfflineStore};
+use crate::offline_store::{persist_segment_to, CompactionDriver, OfflineStore, Segment, StoreConfig};
 use crate::online_store::OnlineStore;
 use crate::query::offline::{OfflineQueryEngine, TrainingFrame};
 use crate::query::pit::{Observation, PitConfig};
@@ -36,11 +36,73 @@ use crate::scheduler::{JobOutcome, SchedulePolicy, Scheduler};
 use crate::serving::router::{RouteTable, ServingRouter};
 use crate::serving::service::OnlineServing;
 use crate::source::SourceConnector;
+use crate::storage::{
+    DurableLog, DurableLogOptions, DurableStore, GcDriver, SegmentRef, Vfs,
+};
 use crate::stream::{
-    CheckpointStore, StreamConfig, StreamDeps, StreamEvent, StreamIngestor, StreamStats,
+    CheckpointStore, EventLog, StreamConfig, StreamDeps, StreamEvent, StreamIngestor, StreamStats,
 };
 use crate::types::{EntityId, EntityInterner, FeatureWindow, FsError, Result, Timestamp};
+use crate::util::backoff::{retry, Backoff};
+use crate::util::json::Json;
 use crate::util::Clock;
+
+/// Where and how the store persists its write-ahead state. `None` in
+/// [`OpenOptions::durability`] keeps the store RAM-only (the
+/// pre-durability behavior — tests and benches that don't measure
+/// crash-safety stay fast and filesystem-free).
+#[derive(Clone)]
+pub struct DurabilityOptions {
+    /// Store directory: the manifest chain, WAL fragments and
+    /// checkpointed `.gfseg` segments all live flat in here.
+    pub dir: PathBuf,
+    /// Filesystem seam — torture tests thread
+    /// [`crate::testkit::faultfs::FaultFs`] through this.
+    pub fs: Arc<dyn Vfs>,
+    /// Roll the active WAL fragment once it exceeds this size.
+    pub fragment_max_bytes: u64,
+    /// fsync every appended frame (the durability ack point). Turning
+    /// it off trades the ack guarantee for throughput (E-DUR measures
+    /// both sides).
+    pub fsync_every_append: bool,
+    /// Background snapshot-GC period; `None` leaves collection to
+    /// explicit [`FeatureStore::gc_storage`] calls (deterministic
+    /// tests drive passes by hand).
+    pub gc_period: Option<std::time::Duration>,
+}
+
+impl DurabilityOptions {
+    /// Durability at `dir` over the real filesystem, default knobs.
+    pub fn at(dir: impl Into<PathBuf>) -> DurabilityOptions {
+        let defaults = DurableLogOptions::default();
+        DurabilityOptions {
+            dir: dir.into(),
+            fs: Arc::new(crate::storage::RealFs),
+            fragment_max_bytes: defaults.fragment_max_bytes,
+            fsync_every_append: defaults.fsync_every_append,
+            gc_period: None,
+        }
+    }
+
+    fn log_opts(&self) -> DurableLogOptions {
+        DurableLogOptions {
+            fragment_max_bytes: self.fragment_max_bytes,
+            fsync_every_append: self.fsync_every_append,
+            ..Default::default()
+        }
+    }
+}
+
+impl std::fmt::Debug for DurabilityOptions {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        f.debug_struct("DurabilityOptions")
+            .field("dir", &self.dir)
+            .field("fragment_max_bytes", &self.fragment_max_bytes)
+            .field("fsync_every_append", &self.fsync_every_append)
+            .field("gc_period", &self.gc_period)
+            .finish_non_exhaustive()
+    }
+}
 
 /// Options controlling how the store is opened.
 #[derive(Debug, Clone)]
@@ -67,6 +129,13 @@ pub struct OpenOptions {
     /// 1-in-N sampling or the slow-op log without reopening the store's
     /// serving topology.
     pub trace: TraceConfig,
+    /// Durable storage root (manifest-addressed WAL + snapshot GC).
+    /// When set, the replication fabric and every stream log become
+    /// write-ahead durable, [`FeatureStore::open`] recovers state from
+    /// the newest valid manifest, and
+    /// [`FeatureStore::checkpoint_durable`] replaces full-dump
+    /// checkpointing.
+    pub durability: Option<DurabilityOptions>,
 }
 
 impl Default for OpenOptions {
@@ -79,6 +148,7 @@ impl Default for OpenOptions {
             fault_rates: None,
             admission: None,
             trace: TraceConfig::default(),
+            durability: None,
         }
     }
 }
@@ -125,6 +195,10 @@ pub struct FeatureStore {
     /// [`FeatureStore::checkpoint_stream`]), which lets their source
     /// logs truncate without caller-side plumbing.
     pub checkpoints: Arc<CheckpointStore>,
+    /// The durable storage root when opened with
+    /// [`OpenOptions::durability`]: manifest chain, WAL fragments and
+    /// checkpointed segments. `None` = RAM-only store.
+    pub durable: Option<Arc<DurableStore>>,
     /// Shared worker pool: scheduler jobs and the offline query engine's
     /// per-table / per-chunk PIT joins run here.
     pool: Arc<ThreadPool>,
@@ -140,6 +214,15 @@ pub struct FeatureStore {
     /// all tier merges so no writer (batch jobs, the stream dual-write)
     /// ever folds segments inline.
     compaction: RwLock<Option<CompactionDriver>>,
+    /// Durable stream logs by table, kept across engine stop/start so
+    /// a restarted stream re-attaches to its WAL instead of opening a
+    /// second writer over the same fragment files.
+    stream_logs: RwLock<HashMap<String, Arc<DurableLog<StreamEvent>>>>,
+    /// The durability knobs the store was opened with (stream logs
+    /// opened later need them).
+    durability: Option<DurabilityOptions>,
+    /// Background snapshot-GC thread, when configured.
+    gc_driver: Option<GcDriver>,
     /// Background replication delivery thread (geo-replication only):
     /// woken by every fabric append, ticking for lag visibility. Lives
     /// for the store's lifetime.
@@ -163,7 +246,27 @@ impl FeatureStore {
             None
         };
         let engine = compute.as_ref().map(|c| c.handle());
-        let offline = Arc::new(OfflineStore::new());
+        // Durable root first: the recovered manifest feeds the offline
+        // store, the fabric and the checkpoint/coverage restores below.
+        let durable = match &opts.durability {
+            Some(d) => Some(DurableStore::open(d.fs.clone(), &d.dir, clock.now())?),
+            None => None,
+        };
+        let manifest = durable.as_ref().map(|s| s.manifest());
+        // With durability the offline store restores from the
+        // manifest's checkpointed segment set — never a directory scan,
+        // which would resurrect unreferenced segments awaiting GC.
+        let offline = match (&manifest, &opts.durability) {
+            (Some(m), Some(d)) if !m.segments.is_empty() => {
+                let files: Vec<(String, PathBuf)> = m
+                    .segments
+                    .iter()
+                    .map(|s| (s.table.clone(), d.dir.join(&s.file)))
+                    .collect();
+                Arc::new(OfflineStore::load_files(&files, StoreConfig::default())?)
+            }
+            _ => Arc::new(OfflineStore::new()),
+        };
         let online = Arc::new(OnlineStore::new(config.online_shards));
         let faults = match opts.fault_rates {
             Some((seed, off_p, on_p)) => FaultInjector::with_rates(seed, off_p, on_p),
@@ -178,22 +281,46 @@ impl FeatureStore {
         ));
         let metrics = Arc::new(MetricsRegistry::new());
         let tracer = Tracer::new(opts.trace.clone());
-        let fabric = (opts.geo_replication && !opts.geo_fenced && config.regions.len() > 1)
-            .then(|| {
-                let replicas = config
-                    .regions
-                    .iter()
-                    .filter(|r| *r != config.home_region())
-                    .map(|r| {
-                        (
-                            r.clone(),
-                            Arc::new(OnlineStore::new(config.online_shards)),
-                            config.replication_lag_secs,
-                        )
-                    })
-                    .collect();
-                ReplicationFabric::new(4, replicas, Some(metrics.clone()))
-            });
+        let fabric = if opts.geo_replication && !opts.geo_fenced && config.regions.len() > 1 {
+            let replicas: Vec<_> = config
+                .regions
+                .iter()
+                .filter(|r| *r != config.home_region())
+                .map(|r| {
+                    (
+                        r.clone(),
+                        Arc::new(OnlineStore::new(config.online_shards)),
+                        config.replication_lag_secs,
+                    )
+                })
+                .collect();
+            let f = match (&durable, &opts.durability) {
+                (Some(store), Some(d)) => {
+                    let log = store.open_log::<ReplBatch>("fabric", 4, d.log_opts())?;
+                    let f = ReplicationFabric::new_durable(log, replicas, Some(metrics.clone()));
+                    if let Some(m) = &manifest {
+                        // Recovered positions: per-region apply cursors
+                        // and the checkpoint floor. The WAL tail above
+                        // the cursors replays through the normal pump;
+                        // state below them is in the checkpointed
+                        // segments, which reach fresh replica stores
+                        // via per-table `bootstrap_online_from_offline`
+                        // (idempotent merges absorb the overlap).
+                        for (region, cursors) in &m.cursors {
+                            f.set_cursors(region, cursors);
+                        }
+                        if let Some(floor) = &m.checkpoint_floor {
+                            f.set_checkpoint_floor(floor.clone());
+                        }
+                    }
+                    f
+                }
+                _ => ReplicationFabric::new(4, replicas, Some(metrics.clone())),
+            };
+            Some(f)
+        } else {
+            None
+        };
         // Background delivery: woken on every append, ticking so lagged
         // batches become visible as the clock advances. Regions apply
         // concurrently on the shared pool so a slow replica never
@@ -209,6 +336,24 @@ impl FeatureStore {
         });
         let scheduler =
             Arc::new(Scheduler::new(pool.clone(), clock.clone(), config.retry.clone()));
+        let checkpoints = Arc::new(CheckpointStore::new());
+        if let Some(m) = &manifest {
+            // Coverage + consumer cursors recorded by the last durable
+            // checkpoint. Work done after that commit is deliberately
+            // absent: the scheduler re-runs those windows and the
+            // stream engines re-poll those offsets — at-least-once into
+            // idempotent sinks.
+            scheduler.restore(&m.coverage);
+            if !matches!(m.consumer_checkpoints, Json::Null) {
+                checkpoints.restore_entries(&m.consumer_checkpoints)?;
+            }
+        }
+        let gc_driver = match (&durable, &opts.durability) {
+            (Some(store), Some(d)) => {
+                d.gc_period.map(|period| GcDriver::spawn(store.clone(), period))
+            }
+            _ => None,
+        };
         // The offline store's tier merges are background-only now (no
         // inline compaction on any writer), so the managed store always
         // runs the driver; `stop_compaction` opts out.
@@ -255,12 +400,16 @@ impl FeatureStore {
             admission,
             fabric,
             merger,
-            checkpoints: Arc::new(CheckpointStore::new()),
+            checkpoints,
+            durable,
             routes,
             registrations: RwLock::new(HashMap::new()),
             streams: RwLock::new(HashMap::new()),
             ttl_sweeper: RwLock::new(None),
             compaction: RwLock::new(Some(compaction)),
+            stream_logs: RwLock::new(HashMap::new()),
+            durability: opts.durability.clone(),
+            gc_driver,
             _repl_driver: repl_driver,
             _compute: compute,
             geo_fenced: opts.geo_fenced,
@@ -361,7 +510,11 @@ impl FeatureStore {
             let records = materializer.calculate(&spec, source.as_ref(), window, now, now)?;
             let report = merger.merge(&table, &records, &spec.materialization, now)?;
             if let Some(f) = &fabric {
-                f.append(&table, &records, now);
+                // Durable appends can hit transient I/O; replica merges
+                // are idempotent, so a retried (possibly duplicated)
+                // append is safe. A persistent failure fails the job —
+                // the scheduler re-runs the window.
+                retry(&Backoff::default(), || f.append(&table, &records, now))?;
             }
             metrics.inc(MetricKind::System, names::MATERIALIZED_RECORDS, records.len() as u64);
             metrics.inc(MetricKind::System, names::MATERIALIZATION_JOBS, 1);
@@ -447,22 +600,55 @@ impl FeatureStore {
         if streams.contains_key(table) {
             return Err(FsError::InvalidArg(format!("'{table}' is already streaming")));
         }
-        let ing = StreamIngestor::new(
-            reg.spec.clone(),
-            cfg,
-            StreamDeps {
-                materializer: self.materializer.clone(),
-                offline: self.offline.clone(),
-                online: self.online.clone(),
-                freshness: self.freshness.clone(),
-                metrics: self.metrics.clone(),
-                clock: self.clock.clone(),
-                pool: Some(self.pool.clone()),
-                fabric: self.fabric.clone(),
-                checkpoints: Some(self.checkpoints.clone()),
-                tracer: Some(self.tracer.clone()),
-            },
-        )?;
+        let deps = StreamDeps {
+            materializer: self.materializer.clone(),
+            offline: self.offline.clone(),
+            online: self.online.clone(),
+            freshness: self.freshness.clone(),
+            metrics: self.metrics.clone(),
+            clock: self.clock.clone(),
+            pool: Some(self.pool.clone()),
+            fabric: self.fabric.clone(),
+            checkpoints: Some(self.checkpoints.clone()),
+            tracer: Some(self.tracer.clone()),
+        };
+        let ing = match (&self.durable, &self.durability) {
+            (Some(store), Some(d)) => {
+                if cfg.partitions == 0 {
+                    return Err(FsError::InvalidArg("stream partitions must be > 0".into()));
+                }
+                // One WAL per table, cached across engine stop/start so
+                // a restarted stream re-attaches instead of opening a
+                // second writer over the same fragment files.
+                let log = {
+                    let mut logs = self.stream_logs.write().unwrap();
+                    match logs.get(table) {
+                        Some(l) => l.clone(),
+                        None => {
+                            let l = store.open_log::<StreamEvent>(
+                                &format!("stream/{table}"),
+                                cfg.partitions,
+                                d.log_opts(),
+                            )?;
+                            logs.insert(table.to_string(), l.clone());
+                            l
+                        }
+                    }
+                };
+                let ing = StreamIngestor::with_log(
+                    reg.spec.clone(),
+                    cfg,
+                    deps,
+                    Arc::new(EventLog::durable(log)),
+                )?;
+                // Resume from recovered consumer checkpoints (no-op on
+                // a fresh store): replay starts above the committed
+                // offsets, not at the log head.
+                ing.restore_from(&self.checkpoints)?;
+                ing
+            }
+            _ => StreamIngestor::new(reg.spec.clone(), cfg, deps)?,
+        };
         streams.insert(table.to_string(), ing);
         Ok(())
     }
@@ -806,7 +992,10 @@ impl FeatureStore {
 
     // ---- bootstrap (§4.5.5) --------------------------------------------------
 
-    pub fn bootstrap_online_from_offline(&self, table: &str) -> crate::offline_store::MergeStats {
+    pub fn bootstrap_online_from_offline(
+        &self,
+        table: &str,
+    ) -> Result<crate::offline_store::MergeStats> {
         let now = self.clock.now();
         // One gather feeds both the home merge (the §4.5.5 bootstrap,
         // same rule as `materialize::bootstrap_offline_to_online`) and
@@ -816,9 +1005,12 @@ impl FeatureStore {
         let latest = self.offline.latest_per_entity(table);
         let stats = self.online.merge(table, &latest, now);
         if let Some(f) = &self.fabric {
-            f.append(table, &latest, now);
+            // Transient durability hiccups are retried; a persistent
+            // failure surfaces — the home merge above already landed,
+            // but the caller must not assume replicas saw the snapshot.
+            retry(&Backoff::default(), || f.append(table, &latest, now))?;
         }
-        stats
+        Ok(stats)
     }
 
     pub fn bootstrap_offline_from_online(&self, table: &str) -> crate::offline_store::MergeStats {
@@ -850,6 +1042,96 @@ impl FeatureStore {
             f.record_checkpoint();
         }
         Ok(cp)
+    }
+
+    // ---- durable checkpoint / storage GC (manifest-addressed WAL) ----------
+
+    /// Commit one durable-checkpoint manifest generation, atomically
+    /// recording: a fresh compacted `.gfseg` snapshot per offline
+    /// table, per-region replication cursors plus the fabric floor,
+    /// every stream consumer's committed offsets, and the scheduler's
+    /// materialization coverage. Recovery is this manifest + WAL tail
+    /// replay — never a full segment dump.
+    ///
+    /// Crash-safe ordering: the floor is captured *without* touching
+    /// the fabric, segments are written first (a crash strands
+    /// unreferenced files — GC food, never recovery roots), the
+    /// manifest commit is the atomic point, and only after it lands
+    /// does the fabric's truncation floor advance. A failure anywhere
+    /// leaves the previous checkpoint fully intact. Returns the
+    /// committed generation.
+    pub fn checkpoint_durable(&self) -> Result<u64> {
+        let store = self
+            .durable
+            .as_ref()
+            .ok_or_else(|| FsError::InvalidArg("store was opened without durability".into()))?;
+        let now = self.clock.now();
+        // Commit stream progress first so the manifest's consumer
+        // checkpoints cover everything polled so far.
+        for ing in self.streams.read().unwrap().values() {
+            ing.checkpoint_to(&self.checkpoints);
+        }
+        // Captured, not recorded: if anything below fails, the fabric
+        // keeps retaining from the old floor — nothing is reclaimed
+        // against a checkpoint that never committed.
+        let floor = self.fabric.as_ref().map(|f| f.token().offsets().to_vec());
+        let mut segments = Vec::new();
+        for name in self.offline.tables() {
+            let segs = self.offline.snapshot(&name);
+            let id = store.alloc_snapshot_id();
+            let file = DurableStore::segment_file_name(id, &name);
+            let path = store.dir().join(&file);
+            let policy = Backoff::default();
+            match segs.len() {
+                0 => retry(&policy, || {
+                    persist_segment_to(store.fs().as_ref(), &path, &Segment::from_unsorted(Vec::new()))
+                })?,
+                1 => retry(&policy, || persist_segment_to(store.fs().as_ref(), &path, &segs[0]))?,
+                _ => {
+                    let refs: Vec<&Segment> = segs.iter().map(|s| s.as_ref()).collect();
+                    let merged = Segment::merge(&refs);
+                    retry(&policy, || persist_segment_to(store.fs().as_ref(), &path, &merged))?;
+                }
+            }
+            segments.push(SegmentRef { file, table: name });
+        }
+        let cursors = match &self.fabric {
+            Some(f) => f.regions().into_iter().map(|r| { let c = f.cursors(&r); (r, c) }).collect(),
+            None => Default::default(),
+        };
+        let gen = store.commit_checkpoint(now, |m| {
+            m.segments = segments;
+            m.cursors = cursors;
+            m.checkpoint_floor = floor.clone();
+            m.consumer_checkpoints = self.checkpoints.snapshot_entries();
+            m.coverage = self.scheduler.checkpoint();
+        })?;
+        // The atomic point has passed: retention may now advance.
+        if let (Some(f), Some(floor)) = (&self.fabric, floor) {
+            f.set_checkpoint_floor(floor);
+        }
+        if let Some(gc) = &self.gc_driver {
+            gc.ping(); // a pile of references just dropped
+        }
+        Ok(gen)
+    }
+
+    /// One storage-GC pass (mark or sweep — two passes reap an orphan;
+    /// see `storage::gc`). No-op without durability.
+    pub fn gc_storage(&self) -> Result<crate::storage::GcStats> {
+        match &self.durable {
+            Some(s) => s.gc(),
+            None => Ok(crate::storage::GcStats::default()),
+        }
+    }
+
+    /// Recovered-state audit document (what the manifest pins vs. what
+    /// is on disk) — the torture harness uploads this as a CI artifact.
+    pub fn storage_audit(&self) -> Result<Json> {
+        self.durable
+            .as_ref()
+            .ok_or_else(|| FsError::InvalidArg("store was opened without durability".into()))?
+            .audit()
     }
 
     /// Current freshness of a table.
@@ -1217,7 +1499,7 @@ mod tests {
         // move offline data across (simulating late-enabled online store)
         let rows = fs.offline.scan(&table, FeatureWindow::new(0, 10 * DAY));
         fresh.offline.merge(&table, &rows);
-        let stats = fresh.bootstrap_online_from_offline(&table);
+        let stats = fresh.bootstrap_online_from_offline(&table).unwrap();
         assert!(stats.inserted > 0);
         let back = fresh.bootstrap_offline_from_online(&table);
         assert_eq!(back.inserted, 0); // already complete

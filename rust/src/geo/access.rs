@@ -297,7 +297,7 @@ mod tests {
         let fabric = with_replica.then(|| {
             let eu = Arc::new(OnlineStore::new(2));
             let f = ReplicationFabric::new(2, vec![("westeurope".into(), eu, 30)], None);
-            f.append("t", &[rec(1, 100, 150, 42.0)], 150);
+            f.append("t", &[rec(1, 100, 150, 42.0)], 150).unwrap();
             f.pump(1_000); // caught up
             f
         });
@@ -344,7 +344,7 @@ mod tests {
         // reports staleness.
         let fabric = a.fabric.as_ref().unwrap();
         a.home_store.merge("t", &[rec(1, 200, 250, 99.0)], 1_500);
-        fabric.append("t", &[rec(1, 200, 250, 99.0)], 1_500);
+        fabric.append("t", &[rec(1, 200, 250, 99.0)], 1_500).unwrap();
         let out = a.lookup("westeurope", "t", 1, 1_510, &eventual()).unwrap();
         assert_eq!(out.record.unwrap().values[0], 42.0); // stale value
         assert_eq!(out.staleness_secs, 10);
@@ -368,7 +368,7 @@ mod tests {
         let fabric = a.fabric.as_ref().unwrap().clone();
         // A write at t=1500 not yet applied: staleness grows with now.
         home.merge("t", &[rec(1, 200, 250, 99.0)], 1_500);
-        fabric.append("t", &[rec(1, 200, 250, 99.0)], 1_500);
+        fabric.append("t", &[rec(1, 200, 250, 99.0)], 1_500).unwrap();
         // Within the bound: replica serves (stale data is acceptable).
         let out = a
             .lookup("westeurope", "t", 1, 1_510, &ReadConsistency::BoundedStaleness(60))
@@ -395,7 +395,7 @@ mod tests {
         let (a, home) = setup(false, true);
         let fabric = a.fabric.as_ref().unwrap().clone();
         home.merge("t", &[rec(1, 200, 250, 99.0)], 1_500);
-        let token = fabric.append("t", &[rec(1, 200, 250, 99.0)], 1_500);
+        let token = fabric.append("t", &[rec(1, 200, 250, 99.0)], 1_500).unwrap();
         // Replica does not cover the token yet: read crosses to home and
         // sees the session's own write.
         let rw = ReadConsistency::ReadYourWrites(token.clone());

@@ -18,6 +18,13 @@
 //! replica store (which already holds the applied prefix) is promoted
 //! in place, and a fresh fabric over the surviving regions starts with
 //! its own running [`ReplicationDriver`].
+//!
+//! **Restarting the *same* region** (process crash, not region loss) no
+//! longer needs a [`RegionCheckpoint`] at all: a store opened with
+//! [`crate::coordinator::OpenOptions::durability`] recovers from its
+//! manifest-addressed WAL — newest valid manifest + fragment tail
+//! replay above the recorded cursors (see [`crate::storage`]). The
+//! full-dump checkpoint here remains the cross-region hand-off format.
 
 use std::path::PathBuf;
 use std::sync::Arc;
@@ -30,6 +37,7 @@ use crate::offline_store::{CompactionDriver, OfflineStore};
 use crate::online_store::OnlineStore;
 use crate::scheduler::Scheduler;
 use crate::types::{FeatureWindow, FsError, Result, Timestamp};
+use crate::util::backoff::{retry, Backoff};
 use crate::util::Clock;
 
 /// Everything a promoted standby runs with after [`FailoverManager::failover`]:
@@ -202,7 +210,14 @@ impl FailoverManager {
                             replayed += batch.records.len() as u64;
                         }
                         if let Some(nf) = &new_fabric {
-                            nf.append_shared(&batch.table, batch.records, now);
+                            // The new fabric is RAM-backed here, but the
+                            // append surface is fallible (durable
+                            // backings exist): transient errors retry,
+                            // persistent ones abort the failover before
+                            // promotion claims convergence.
+                            retry(&Backoff::default(), || {
+                                nf.append_shared(&batch.table, batch.records.clone(), now)
+                            })?;
                         }
                         cur = off + 1;
                     }
@@ -306,9 +321,11 @@ mod tests {
         let westus = Arc::new(OnlineStore::new(2));
         let fabric =
             ReplicationFabric::new(2, vec![("westus".into(), westus.clone(), 10)], None);
-        fabric.append("t:1", &[FeatureRecord::new(1, 200, 250, vec![2.0])], 600);
+        fabric.append("t:1", &[FeatureRecord::new(1, 200, 250, vec![2.0])], 600).unwrap();
         fabric.pump(700); // applied to the replica
-        fabric.append("t:1", &[FeatureRecord::new(2, 300, 350, vec![3.0])], 800); // unreplicated
+        fabric
+            .append("t:1", &[FeatureRecord::new(2, 300, 350, vec![3.0])], 800)
+            .unwrap(); // unreplicated
 
         topology.set_down("eastus", true);
         let promoted = fm

@@ -40,8 +40,9 @@ use crate::monitor::metrics::{MetricKind, MetricsRegistry};
 use crate::monitor::names;
 use crate::monitor::trace::Tracer;
 use crate::online_store::OnlineStore;
+use crate::storage::DurableLog;
 use crate::stream::log::PartitionedLog;
-use crate::types::{FeatureRecord, Timestamp};
+use crate::types::{FeatureRecord, Result, Timestamp};
 use crate::util::wake::Wake;
 use crate::util::Clock;
 
@@ -92,10 +93,27 @@ struct RegionState {
     cursors: Mutex<Vec<u64>>,
 }
 
+/// The fabric log's bytes: plain RAM (the original in-process plane) or
+/// a crash-safe WAL whose in-RAM mirror serves every read — pumps and
+/// tails never touch disk, only appends pay for the fsync ack.
+enum Backing {
+    Mem(PartitionedLog<ReplBatch>),
+    Durable(Arc<DurableLog<ReplBatch>>),
+}
+
+impl Backing {
+    fn view(&self) -> &PartitionedLog<ReplBatch> {
+        match self {
+            Backing::Mem(log) => log,
+            Backing::Durable(log) => log.mem(),
+        }
+    }
+}
+
 /// The single replication plane: every home merge appends here, every
 /// replica region tails it with its own cursors.
 pub struct ReplicationFabric {
-    log: PartitionedLog<ReplBatch>,
+    backing: Backing,
     regions: Vec<RegionState>,
     wake: Arc<Wake>,
     metrics: Option<Arc<MetricsRegistry>>,
@@ -123,6 +141,29 @@ impl ReplicationFabric {
         metrics: Option<Arc<MetricsRegistry>>,
     ) -> Arc<ReplicationFabric> {
         let partitions = partitions.max(1);
+        Self::build(Backing::Mem(PartitionedLog::new(partitions)), partitions, replicas, metrics)
+    }
+
+    /// Build a fabric over a recovered durable log: the log's replayed
+    /// mirror is the fabric history, so acked pre-crash appends are
+    /// immediately replayable. Callers restore per-region cursors and
+    /// the checkpoint floor from the manifest afterwards
+    /// ([`Self::set_cursors`], [`Self::set_checkpoint_floor`]).
+    pub fn new_durable(
+        log: Arc<DurableLog<ReplBatch>>,
+        replicas: Vec<(String, Arc<OnlineStore>, i64)>,
+        metrics: Option<Arc<MetricsRegistry>>,
+    ) -> Arc<ReplicationFabric> {
+        let partitions = log.partitions();
+        Self::build(Backing::Durable(log), partitions, replicas, metrics)
+    }
+
+    fn build(
+        backing: Backing,
+        partitions: usize,
+        replicas: Vec<(String, Arc<OnlineStore>, i64)>,
+        metrics: Option<Arc<MetricsRegistry>>,
+    ) -> Arc<ReplicationFabric> {
         let regions = replicas
             .into_iter()
             .map(|(name, store, lag_secs)| RegionState {
@@ -133,7 +174,7 @@ impl ReplicationFabric {
             })
             .collect();
         Arc::new(ReplicationFabric {
-            log: PartitionedLog::new(partitions),
+            backing,
             regions,
             wake: Arc::new(Wake::default()),
             metrics,
@@ -141,8 +182,13 @@ impl ReplicationFabric {
         })
     }
 
+    /// The read view of the fabric log (always RAM).
+    fn log(&self) -> &PartitionedLog<ReplBatch> {
+        self.backing.view()
+    }
+
     pub fn partitions(&self) -> usize {
-        self.log.partitions()
+        self.log().partitions()
     }
 
     pub fn regions(&self) -> Vec<String> {
@@ -178,15 +224,23 @@ impl ReplicationFabric {
     /// The log partition a table's batches route to (stable hash, so a
     /// table's batches form one ordered sub-log).
     fn partition_of(&self, table: &str) -> usize {
-        (crate::stream::log::hash_key(table) % self.log.partitions() as u64) as usize
+        (crate::stream::log::hash_key(table) % self.log().partitions() as u64) as usize
     }
 
     /// Append one home-region merge to the fabric (copies the records
     /// into one shared `Arc`). Wakes the driver. Returns the session
-    /// token covering this write.
-    pub fn append(&self, table: &str, records: &[FeatureRecord], now: Timestamp) -> SessionToken {
+    /// token covering this write. On a durable backing the batch is
+    /// fsync-acked before this returns; an `Err` means the batch is
+    /// **not** acked (transient errors are retryable — replica merges
+    /// are idempotent, so a duplicate replay is harmless).
+    pub fn append(
+        &self,
+        table: &str,
+        records: &[FeatureRecord],
+        now: Timestamp,
+    ) -> Result<SessionToken> {
         if records.is_empty() {
-            return SessionToken::default();
+            return Ok(SessionToken::default());
         }
         self.append_shared(table, records.into(), now)
     }
@@ -198,26 +252,27 @@ impl ReplicationFabric {
         table: &str,
         records: Arc<[FeatureRecord]>,
         now: Timestamp,
-    ) -> SessionToken {
+    ) -> Result<SessionToken> {
         if records.is_empty() {
-            return SessionToken::default();
+            return Ok(SessionToken::default());
         }
-        let mut token = SessionToken { offsets: vec![0; self.log.partitions()] };
+        let mut token = SessionToken { offsets: vec![0; self.log().partitions()] };
         let p = self.partition_of(table);
-        let off = self.log.append(
-            p,
-            ReplBatch { table: table.to_string(), records, appended_at: now },
-        );
+        let batch = ReplBatch { table: table.to_string(), records, appended_at: now };
+        let off = match &self.backing {
+            Backing::Mem(log) => log.append(p, batch),
+            Backing::Durable(log) => log.append(p, batch)?,
+        };
         token.offsets[p] = off + 1;
         self.wake.ping();
-        token
+        Ok(token)
     }
 
     /// A token covering **everything appended so far** (per-partition
     /// high-water marks) — what a session grabs after a batch of writes.
     pub fn token(&self) -> SessionToken {
         SessionToken {
-            offsets: (0..self.log.partitions()).map(|p| self.log.high_water(p)).collect(),
+            offsets: (0..self.log().partitions()).map(|p| self.log().high_water(p)).collect(),
         }
     }
 
@@ -237,7 +292,7 @@ impl ReplicationFabric {
     pub fn cursors(&self, region: &str) -> Vec<u64> {
         match self.region(region) {
             Some(r) => r.cursors.lock().unwrap().clone(),
-            None => vec![0; self.log.partitions()],
+            None => vec![0; self.log().partitions()],
         }
     }
 
@@ -249,12 +304,12 @@ impl ReplicationFabric {
         let Some(r) = self.region(region) else { return 0 };
         let mut cursors = r.cursors.lock().unwrap();
         let mut n = 0u64;
-        for p in 0..self.log.partitions() {
+        for p in 0..self.log().partitions() {
             // A cursor below the truncated base resumes at the base:
             // those entries were applied by every region already.
-            cursors[p] = cursors[p].max(self.log.base_offset(p));
+            cursors[p] = cursors[p].max(self.log().base_offset(p));
             loop {
-                let entries = self.log.read_from(p, cursors[p], TAIL_CHUNK);
+                let entries = self.log().read_from(p, cursors[p], TAIL_CHUNK);
                 if entries.is_empty() {
                     break;
                 }
@@ -362,7 +417,7 @@ impl ReplicationFabric {
     /// newer checkpoint advances the floor.
     pub fn record_checkpoint(&self) -> Vec<u64> {
         let floor: Vec<u64> =
-            (0..self.log.partitions()).map(|p| self.log.high_water(p)).collect();
+            (0..self.log().partitions()).map(|p| self.log().high_water(p)).collect();
         *self.checkpoint_floor.lock().unwrap() = Some(floor.clone());
         floor
     }
@@ -370,6 +425,36 @@ impl ReplicationFabric {
     /// The last recorded checkpoint floor, if any (test/metrics hook).
     pub fn checkpoint_floor(&self) -> Option<Vec<u64>> {
         self.checkpoint_floor.lock().unwrap().clone()
+    }
+
+    /// Install a checkpoint floor captured earlier (durable-checkpoint
+    /// protocol: the floor is captured *before* the manifest commit but
+    /// installed only after the commit succeeds, so a failed commit
+    /// never licenses truncation; also the manifest-recovery restore
+    /// path). Floors only advance — a stale restore cannot regress one.
+    pub fn set_checkpoint_floor(&self, floor: Vec<u64>) {
+        let mut guard = self.checkpoint_floor.lock().unwrap();
+        match guard.as_mut() {
+            Some(cur) => {
+                for (c, f) in cur.iter_mut().zip(&floor) {
+                    *c = (*c).max(*f);
+                }
+            }
+            None => *guard = Some(floor),
+        }
+    }
+
+    /// Restore `region`'s apply cursors (manifest recovery: replay
+    /// resumes exactly above what the pre-crash store had applied).
+    /// Cursors only advance, and never past the log high-water mark.
+    pub fn set_cursors(&self, region: &str, cursors: &[u64]) {
+        let Some(r) = self.region(region) else { return };
+        let mut cur = r.cursors.lock().unwrap();
+        for (p, c) in cur.iter_mut().enumerate() {
+            if let Some(&want) = cursors.get(p) {
+                *c = (*c).max(want.min(self.log().high_water(p)));
+            }
+        }
     }
 
     /// Truncate the log below the minimum applied cursor across all
@@ -390,12 +475,12 @@ impl ReplicationFabric {
             self.regions.iter().map(|r| r.cursors.lock().unwrap().clone()).collect();
         let floor = self.checkpoint_floor.lock().unwrap().clone();
         let mut reclaimed = 0;
-        for p in 0..self.log.partitions() {
+        for p in 0..self.log().partitions() {
             let mut min = per_region.iter().map(|c| c[p]).min().unwrap_or(0);
             if let Some(fl) = &floor {
                 min = min.min(fl[p]);
             }
-            reclaimed += self.log.truncate_below(p, min);
+            reclaimed += self.log().truncate_below(p, min);
         }
         reclaimed
     }
@@ -404,8 +489,8 @@ impl ReplicationFabric {
     pub fn backlog(&self, region: &str) -> usize {
         let Some(r) = self.region(region) else { return 0 };
         let cursors = r.cursors.lock().unwrap();
-        (0..self.log.partitions())
-            .map(|p| (self.log.high_water(p).saturating_sub(cursors[p])) as usize)
+        (0..self.log().partitions())
+            .map(|p| (self.log().high_water(p).saturating_sub(cursors[p])) as usize)
             .sum()
     }
 
@@ -417,7 +502,7 @@ impl ReplicationFabric {
         let cursors = r.cursors.lock().unwrap().clone();
         let mut worst = 0i64;
         for (p, &cur) in cursors.iter().enumerate() {
-            if let Some((_, batch)) = self.log.read_from(p, cur, 1).into_iter().next() {
+            if let Some((_, batch)) = self.log().read_from(p, cur, 1).into_iter().next() {
                 worst = worst.max((now - batch.appended_at).max(0));
             }
         }
@@ -427,12 +512,12 @@ impl ReplicationFabric {
     /// Read the retained log tail of one partition from `offset`
     /// (failover replay; bounded chunks are the caller's loop).
     pub fn read_tail(&self, partition: usize, offset: u64, max: usize) -> Vec<(u64, ReplBatch)> {
-        self.log.read_from(partition, offset, max)
+        self.log().read_from(partition, offset, max)
     }
 
     /// Retained log entries across all partitions.
     pub fn log_len(&self) -> usize {
-        self.log.len()
+        self.log().len()
     }
 
     /// Test hook: run `f` while holding `region`'s cursor lock. Pins the
@@ -573,7 +658,7 @@ mod tests {
     #[test]
     fn records_visible_after_lag() {
         let (f, store) = fabric(60);
-        f.append("t", &[rec(1, 100, 150, 1.0)], 1_000);
+        f.append("t", &[rec(1, 100, 150, 1.0)], 1_000).unwrap();
         f.pump(1_030);
         assert!(store.get("t", 1, 1_030).is_none(), "not visible before lag");
         assert_eq!(f.backlog("westeurope"), 1);
@@ -586,8 +671,8 @@ mod tests {
     fn staleness_measures_oldest_pending() {
         let (f, _) = fabric(120);
         assert_eq!(f.staleness_secs("westeurope", 0), 0);
-        f.append("t", &[rec(1, 1, 2, 1.0)], 1_000);
-        f.append("t", &[rec(2, 1, 2, 1.0)], 1_050);
+        f.append("t", &[rec(1, 1, 2, 1.0)], 1_000).unwrap();
+        f.append("t", &[rec(2, 1, 2, 1.0)], 1_050).unwrap();
         assert_eq!(f.staleness_secs("westeurope", 1_080), 80);
         f.pump(1_120); // first batch applies
         assert_eq!(f.staleness_secs("westeurope", 1_130), 80); // second pending, appended 1050
@@ -600,9 +685,9 @@ mod tests {
         // Batches applied in log order converge the replica to the home
         // state even when a late-arriving record was merged in between.
         let (f, store) = fabric(10);
-        f.append("t", &[rec(1, 100, 110, 1.0)], 0);
-        f.append("t", &[rec(1, 100, 300, 2.0)], 5); // recompute
-        f.append("t", &[rec(1, 90, 400, 0.5)], 6); // older event: no-op
+        f.append("t", &[rec(1, 100, 110, 1.0)], 0).unwrap();
+        f.append("t", &[rec(1, 100, 300, 2.0)], 5).unwrap(); // recompute
+        f.append("t", &[rec(1, 90, 400, 0.5)], 6).unwrap(); // older event: no-op
         f.pump(1_000);
         let got = store.get("t", 1, 1_000).unwrap();
         assert_eq!(got.version(), (100, 300));
@@ -618,9 +703,9 @@ mod tests {
             vec![("westeurope".into(), eu.clone(), 30), ("southeastasia".into(), asia.clone(), 90)],
             None,
         );
-        f.append("t", &[rec(1, 100, 110, 1.0)], 1_000);
-        f.append("t", &[rec(1, 100, 300, 2.0)], 1_005); // recompute
-        f.append("u", &[rec(2, 5, 6, 3.0)], 1_010);
+        f.append("t", &[rec(1, 100, 110, 1.0)], 1_000).unwrap();
+        f.append("t", &[rec(1, 100, 300, 2.0)], 1_005).unwrap(); // recompute
+        f.append("u", &[rec(2, 5, 6, 3.0)], 1_010).unwrap();
         // Before any lag elapses: nothing applied anywhere.
         let applied = f.pump(1_020);
         assert_eq!(applied["westeurope"], 0);
@@ -650,9 +735,9 @@ mod tests {
         // Apply order is log order: a visible entry behind an unripe one
         // must wait (prefix semantics, like a real log tail).
         let (f, store) = fabric(10);
-        f.append("t", &[rec(1, 100, 110, 1.0)], 1_000);
-        f.append("t", &[rec(2, 100, 110, 2.0)], 5_000);
-        f.append("t", &[rec(3, 100, 110, 3.0)], 1_001); // appended_at regressed
+        f.append("t", &[rec(1, 100, 110, 1.0)], 1_000).unwrap();
+        f.append("t", &[rec(2, 100, 110, 2.0)], 5_000).unwrap();
+        f.append("t", &[rec(3, 100, 110, 3.0)], 1_001).unwrap(); // appended_at regressed
         assert_eq!(f.pump(1_050)["westeurope"], 1);
         assert!(store.get("t", 3, 1_050).is_none(), "entry behind unripe prefix must wait");
         f.pump(5_010);
@@ -666,14 +751,14 @@ mod tests {
         let (f, _) = fabric(0);
         let empty = f.token();
         assert!(f.covers("westeurope", &empty), "empty token is always covered");
-        let tok = f.append("t", &[rec(1, 1, 2, 1.0)], 100);
+        let tok = f.append("t", &[rec(1, 1, 2, 1.0)], 100).unwrap();
         assert!(!f.covers("westeurope", &tok));
         assert!(!f.covers("nowhere", &tok), "unknown region never covers");
         f.pump(100);
         assert!(f.covers("westeurope", &tok));
         // join folds positions per partition.
         let mut joined = tok.clone();
-        let tok2 = f.append("t", &[rec(2, 1, 2, 1.0)], 101);
+        let tok2 = f.append("t", &[rec(2, 1, 2, 1.0)], 101).unwrap();
         joined.join(&tok2);
         assert!(!f.covers("westeurope", &joined));
         f.pump(101);
@@ -687,7 +772,7 @@ mod tests {
         let f = ReplicationFabric::new(2, vec![("eu".into(), eu.clone(), 30)], None);
         let clock = Clock::fixed(1_000);
         let driver = ReplicationDriver::spawn(f.clone(), clock.clone(), Duration::from_millis(2));
-        f.append("t", &[rec(1, 10, 20, 7.0)], 1_000);
+        f.append("t", &[rec(1, 10, 20, 7.0)], 1_000).unwrap();
         // Lag not elapsed: the driver must hold the batch back.
         std::thread::sleep(Duration::from_millis(20));
         assert!(eu.get("t", 1, 1_000).is_none());
@@ -711,13 +796,13 @@ mod tests {
     #[test]
     fn checkpoint_floor_gates_truncation() {
         let (f, _store) = fabric(0);
-        f.append("t", &[rec(1, 1, 2, 1.0)], 100);
+        f.append("t", &[rec(1, 1, 2, 1.0)], 100).unwrap();
         f.pump(100);
         // Checkpoint here: everything so far is durable offline.
         let floor = f.record_checkpoint();
         assert_eq!(f.checkpoint_floor(), Some(floor));
         // A post-checkpoint entry applies everywhere...
-        f.append("t", &[rec(2, 1, 2, 2.0)], 101);
+        f.append("t", &[rec(2, 1, 2, 2.0)], 101).unwrap();
         f.pump(101);
         assert_eq!(f.backlog("westeurope"), 0);
         // ...but only the pre-checkpoint prefix is reclaimable: the new
@@ -744,7 +829,7 @@ mod tests {
         );
         let pool = crate::exec::ThreadPool::new(4);
         for e in 0..32u64 {
-            f.append("t", &[rec(e, 1, 2, e as f32)], 100);
+            f.append("t", &[rec(e, 1, 2, e as f32)], 100).unwrap();
         }
         let applied = f.pump_parallel(200, &pool);
         assert_eq!(applied["eu"], 32);
@@ -768,7 +853,7 @@ mod tests {
             vec![("eu".into(), eu, 60)],
             Some(metrics.clone()),
         );
-        f.append("t", &[rec(1, 1, 2, 1.0)], 1_000);
+        f.append("t", &[rec(1, 1, 2, 1.0)], 1_000).unwrap();
         f.pump(1_010);
         assert_eq!(metrics.gauge("repl_lag_secs_eu"), Some(10.0));
         assert_eq!(metrics.gauge("repl_backlog_eu"), Some(1.0));

@@ -43,6 +43,7 @@ pub mod offline_store;
 pub mod online_store;
 pub mod runtime;
 pub mod source;
+pub mod storage;
 pub mod stream;
 
 pub use types::{FsError, Result};

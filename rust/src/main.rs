@@ -215,7 +215,7 @@ fn cmd_bootstrap(args: &Args) -> anyhow::Result<()> {
     materialize_history(&fs, &w, args.i64("days", 7))?;
     let direction = args.str("direction").unwrap_or("offline-to-online");
     let stats = match direction {
-        "offline-to-online" => fs.bootstrap_online_from_offline(&w.txn_table),
+        "offline-to-online" => fs.bootstrap_online_from_offline(&w.txn_table)?,
         "online-to-offline" => fs.bootstrap_offline_from_online(&w.txn_table),
         other => anyhow::bail!("unknown --direction '{other}'"),
     };

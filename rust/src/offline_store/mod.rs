@@ -68,7 +68,8 @@ pub use bloom::{Bloom, BLOOM_BITS_PER_KEY};
 pub use columnar::{RowView, Segment, SegmentCursor, ZoneStats, BLOCK_ROWS, CREATION_BUCKETS};
 pub use compact::CompactionDriver;
 pub use segment::{
-    load_segment, load_segment_with, load_table, persist_segment, persist_segment_v2, persist_table,
+    load_segment, load_segment_with, load_table, persist_segment, persist_segment_to,
+    persist_segment_v2, persist_table,
 };
 
 /// Delta rows that trigger a spill into a sorted segment.
@@ -697,6 +698,31 @@ impl OfflineStore {
         }
         Ok(store)
     }
+
+    /// Load an explicit `(table, segment-file)` set — the durable-store
+    /// recovery path, where the *manifest* (not a directory scan) names
+    /// which `.gfseg` files are live. A directory may legitimately hold
+    /// unreferenced segments awaiting GC; scanning it would resurrect
+    /// them.
+    pub fn load_files(files: &[(String, std::path::PathBuf)], cfg: StoreConfig) -> Result<OfflineStore> {
+        let store = OfflineStore::with_config(cfg);
+        for (name, path) in files {
+            let seg = segment::load_segment_with(path, store.cfg.bloom_bits_per_key)?;
+            let rows = seg.len() as u64;
+            let inner = TableInner {
+                segments: if seg.is_empty() { Vec::new() } else { vec![Arc::new(seg)] },
+                delta: Vec::new(),
+                delta_keys: HashSet::new(),
+                rows,
+            };
+            store
+                .tables
+                .write()
+                .unwrap()
+                .insert(name.clone(), Arc::new(Table { inner: RwLock::new(inner) }));
+        }
+        Ok(store)
+    }
 }
 
 #[cfg(test)]
@@ -1064,6 +1090,26 @@ mod tests {
         // no rebuilt key set needed).
         let m = loaded.merge("alpha", &[rec(1, 100, 150, 1.5)]);
         assert_eq!(m, MergeStats { inserted: 0, skipped: 1 });
+    }
+
+    #[test]
+    fn load_files_restores_only_named_segments() {
+        let dir = TempDir::new("off-files");
+        let s = OfflineStore::with_spill_threshold(2);
+        s.merge("alpha", &[rec(1, 100, 150, 1.5), rec(2, 200, 250, -2.5)]);
+        s.merge("beta", &[rec(3, 300, 350, 0.25)]);
+        s.persist(dir.path()).unwrap();
+
+        // Only alpha is named by the (simulated) manifest; beta's file
+        // still on disk is an unreferenced orphan and must stay dead.
+        let files = vec![("alpha".to_string(), dir.path().join("alpha.gfseg"))];
+        let loaded = OfflineStore::load_files(&files, StoreConfig::default()).unwrap();
+        assert_eq!(loaded.tables(), vec!["alpha".to_string()]);
+        assert_eq!(loaded.row_count("alpha"), 2);
+        assert_eq!(loaded.row_count("beta"), 0);
+        // A missing named file is an error, not an empty table.
+        let bad = vec![("ghost".to_string(), dir.path().join("ghost.gfseg"))];
+        assert!(OfflineStore::load_files(&bad, StoreConfig::default()).is_err());
     }
 
     #[test]

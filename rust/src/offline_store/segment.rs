@@ -36,7 +36,7 @@
 //! bit-level corruption, and the load-time validation decode rejects
 //! shape and sort-order violations.
 
-use std::io::{Read, Write};
+use std::io::Read;
 use std::path::Path;
 
 use super::bloom::BLOOM_BITS_PER_KEY;
@@ -60,24 +60,40 @@ fn checksum(bytes: &[u8]) -> u64 {
     h
 }
 
-fn write_file(path: &Path, magic: &[u8; 8], payload: &[u8]) -> Result<()> {
+fn write_file_to(
+    fs: &dyn crate::storage::Vfs,
+    path: &Path,
+    magic: &[u8; 8],
+    payload: &[u8],
+) -> Result<()> {
     let sum = checksum(payload);
-    // Temp file + rename: a crashed writer never leaves a torn segment
-    // under the real name.
-    let tmp = path.with_extension("tmp");
-    {
-        let mut f = std::fs::File::create(&tmp)?;
-        f.write_all(magic)?;
-        f.write_all(payload)?;
-        f.write_all(&sum.to_le_bytes())?;
-        f.sync_all()?;
-    }
-    std::fs::rename(&tmp, path)?;
-    Ok(())
+    // Temp file + fsync + rename + parent-dir fsync via the shared
+    // storage-layer helper: a crashed writer never leaves a torn
+    // segment under the real name, and the rename itself is durable.
+    crate::storage::vfs::atomic_write_parts(fs, path, &[magic, payload, &sum.to_le_bytes()])
+}
+
+fn write_file(path: &Path, magic: &[u8; 8], payload: &[u8]) -> Result<()> {
+    write_file_to(&crate::storage::RealFs, path, magic, payload)
+}
+
+/// [`persist_segment`] through an explicit filesystem seam — the
+/// durable checkpoint path writes segments here so fault injection
+/// covers them like every other storage-layer write.
+pub fn persist_segment_to(
+    fs: &dyn crate::storage::Vfs,
+    path: &Path,
+    seg: &Segment,
+) -> Result<()> {
+    write_file_to(fs, path, MAGIC_V3, &encode_segment_v3(seg))
 }
 
 /// Persist one sorted columnar segment in the v3 compressed format.
 pub fn persist_segment(path: &Path, seg: &Segment) -> Result<()> {
+    write_file(path, MAGIC_V3, &encode_segment_v3(seg))
+}
+
+fn encode_segment_v3(seg: &Segment) -> Vec<u8> {
     let (blocks, keys, plane) = seg.encoded_parts();
     let mut payload = Vec::with_capacity(8 + blocks.len() * 28 + keys.len() + plane.size_bytes());
     payload.extend_from_slice(&(seg.len() as u32).to_le_bytes());
@@ -120,7 +136,7 @@ pub fn persist_segment(path: &Path, seg: &Segment) -> Result<()> {
             }
         }
     }
-    write_file(path, MAGIC_V3, &payload)
+    payload
 }
 
 /// Legacy v2 writer (raw whole columns). Kept so the v2→v3 read

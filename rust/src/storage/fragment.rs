@@ -1,0 +1,276 @@
+//! Size-bounded, checksummed WAL fragment files.
+//!
+//! A fragment is one append-only run of a log partition:
+//!
+//! ```text
+//! header  : magic "GFRAG1\0\0" (8) | partition u32 | base u64
+//! frame*  : len u32 | fnv1a(payload) u64 | payload
+//! ```
+//!
+//! Record offset = `base + frame index`, so fragments compose into the
+//! partition's dense offset space without any per-record offset field.
+//! Appends are framed individually and (optionally) fsynced — the fsync
+//! is the **ack point**: a record is durable iff its frame hit stable
+//! storage before the crash.
+//!
+//! Reading distinguishes two cases (see `storage` module docs):
+//!
+//! * **Sealed** fragments carry an authoritative frame `count` in the
+//!   manifest. Exactly that many valid frames must decode; anything
+//!   less is corruption (fail closed, typed [`FsError::Corrupt`]).
+//!   Trailing junk past `count` frames is ignored — it is the torn tail
+//!   of the crash that sealed the fragment.
+//! * The **active** (unsealed) fragment may legitimately end in a torn
+//!   frame (crash mid-append past the last ack). Reading stops at the
+//!   first short/invalid frame and returns the valid prefix.
+
+use std::path::Path;
+
+use super::vfs::{corrupt, fnv1a, Vfs, VfsFile};
+use crate::types::Result;
+
+pub const FRAG_MAGIC: &[u8; 8] = b"GFRAG1\0\0";
+const HEADER_LEN: usize = 8 + 4 + 8;
+const FRAME_HEADER_LEN: usize = 4 + 8;
+/// Guard against decoding an implausible length from torn bytes.
+const MAX_FRAME_LEN: usize = 64 << 20;
+
+/// One fragment's identity as recorded in the manifest.
+#[derive(Debug, Clone, PartialEq, Eq)]
+pub struct FragmentMeta {
+    /// File name (relative to the store directory).
+    pub file: String,
+    pub partition: usize,
+    /// Offset of the fragment's first record.
+    pub base: u64,
+    /// Sealed fragments never receive another append; `count` is then
+    /// the authoritative number of frames.
+    pub sealed: bool,
+    pub count: u64,
+}
+
+/// Append-side handle for the active fragment of one partition.
+pub struct FragmentWriter {
+    file: Box<dyn VfsFile>,
+    /// Bytes written so far (header + frames) — drives size-bounded rolls.
+    pub bytes: u64,
+    /// Frames written so far.
+    pub count: u64,
+}
+
+impl FragmentWriter {
+    /// Create the fragment file: write + fsync the header, then fsync
+    /// the parent directory so the file itself survives a crash. The
+    /// caller commits a manifest referencing the fragment **before**
+    /// appending any record to it — a crash in between leaves only an
+    /// unreferenced, record-free file for GC.
+    pub fn create(fs: &dyn Vfs, path: &Path, partition: usize, base: u64) -> Result<FragmentWriter> {
+        let mut file = fs.create(path)?;
+        let mut hdr = Vec::with_capacity(HEADER_LEN);
+        hdr.extend_from_slice(FRAG_MAGIC);
+        hdr.extend_from_slice(&(partition as u32).to_le_bytes());
+        hdr.extend_from_slice(&base.to_le_bytes());
+        file.append(&hdr)?;
+        file.sync()?;
+        if let Some(parent) = path.parent() {
+            fs.sync_dir(parent)?;
+        }
+        Ok(FragmentWriter { file, bytes: HEADER_LEN as u64, count: 0 })
+    }
+
+    /// Append one framed payload; with `fsync`, the record is acked
+    /// durable on return.
+    pub fn append(&mut self, payload: &[u8], fsync: bool) -> Result<()> {
+        let mut frame = Vec::with_capacity(FRAME_HEADER_LEN + payload.len());
+        frame.extend_from_slice(&(payload.len() as u32).to_le_bytes());
+        frame.extend_from_slice(&fnv1a(payload).to_le_bytes());
+        frame.extend_from_slice(payload);
+        self.file.append(&frame)?;
+        if fsync {
+            self.file.sync()?;
+        }
+        self.bytes += frame.len() as u64;
+        self.count += 1;
+        Ok(())
+    }
+
+    pub fn sync(&mut self) -> Result<()> {
+        self.file.sync()
+    }
+}
+
+/// A fragment's decoded contents.
+#[derive(Debug)]
+pub struct FragmentData {
+    pub partition: usize,
+    pub base: u64,
+    pub payloads: Vec<Vec<u8>>,
+}
+
+/// Read a fragment. `sealed_count: Some(n)` enforces exactly `n` valid
+/// frames (corruption inside a sealed fragment fails closed);
+/// `None` reads the valid prefix of an active fragment, tolerating a
+/// torn tail.
+pub fn read_fragment(
+    fs: &dyn Vfs,
+    path: &Path,
+    sealed_count: Option<u64>,
+) -> Result<FragmentData> {
+    let bytes = fs.read(path)?;
+    if bytes.len() < HEADER_LEN {
+        return Err(corrupt(format!("fragment {path:?}: short header")));
+    }
+    if &bytes[..8] != FRAG_MAGIC {
+        return Err(corrupt(format!("fragment {path:?}: bad magic")));
+    }
+    let partition = u32::from_le_bytes(bytes[8..12].try_into().unwrap()) as usize;
+    let base = u64::from_le_bytes(bytes[12..20].try_into().unwrap());
+    let mut payloads = Vec::new();
+    let mut pos = HEADER_LEN;
+    loop {
+        if let Some(n) = sealed_count {
+            if payloads.len() as u64 == n {
+                break; // trailing junk past the sealed count is ignored
+            }
+        }
+        if pos == bytes.len() {
+            break; // clean EOF
+        }
+        match decode_frame(&bytes[pos..]) {
+            Some((payload, consumed)) => {
+                payloads.push(payload);
+                pos += consumed;
+            }
+            None => {
+                if sealed_count.is_some() {
+                    return Err(corrupt(format!(
+                        "fragment {path:?}: torn frame {} inside sealed fragment",
+                        payloads.len()
+                    )));
+                }
+                break; // active fragment: torn tail, keep the valid prefix
+            }
+        }
+    }
+    if let Some(n) = sealed_count {
+        if (payloads.len() as u64) < n {
+            return Err(corrupt(format!(
+                "fragment {path:?}: sealed count {n} but only {} valid frames",
+                payloads.len()
+            )));
+        }
+    }
+    Ok(FragmentData { partition, base, payloads })
+}
+
+/// Decode one frame from `bytes`; `None` if short or checksum-mismatched.
+fn decode_frame(bytes: &[u8]) -> Option<(Vec<u8>, usize)> {
+    if bytes.len() < FRAME_HEADER_LEN {
+        return None;
+    }
+    let len = u32::from_le_bytes(bytes[0..4].try_into().unwrap()) as usize;
+    if len > MAX_FRAME_LEN || bytes.len() < FRAME_HEADER_LEN + len {
+        return None;
+    }
+    let sum = u64::from_le_bytes(bytes[4..12].try_into().unwrap());
+    let payload = &bytes[FRAME_HEADER_LEN..FRAME_HEADER_LEN + len];
+    if fnv1a(payload) != sum {
+        return None;
+    }
+    Some((payload.to_vec(), FRAME_HEADER_LEN + len))
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::storage::vfs::RealFs;
+    use crate::testkit::TempDir;
+    use crate::types::FsError;
+
+    fn write_frames(path: &Path, base: u64, payloads: &[&[u8]]) {
+        let mut w = FragmentWriter::create(&RealFs, path, 1, base).unwrap();
+        for p in payloads {
+            w.append(p, false).unwrap();
+        }
+        w.sync().unwrap();
+    }
+
+    #[test]
+    fn roundtrip_and_offsets() {
+        let dir = TempDir::new("frag");
+        let path = dir.file("a.frag");
+        write_frames(&path, 40, &[b"alpha", b"", b"gamma"]);
+        let d = read_fragment(&RealFs, &path, Some(3)).unwrap();
+        assert_eq!(d.partition, 1);
+        assert_eq!(d.base, 40);
+        assert_eq!(d.payloads, vec![b"alpha".to_vec(), b"".to_vec(), b"gamma".to_vec()]);
+    }
+
+    #[test]
+    fn active_fragment_tolerates_torn_tail() {
+        let dir = TempDir::new("frag-torn");
+        let path = dir.file("a.frag");
+        write_frames(&path, 0, &[b"one", b"two"]);
+        let full = std::fs::read(&path).unwrap();
+        // Truncate at every byte boundary inside the second frame: the
+        // valid prefix (one frame) must always be recovered.
+        let second_frame_start = HEADER_LEN + FRAME_HEADER_LEN + 3;
+        for cut in second_frame_start..full.len() {
+            std::fs::write(&path, &full[..cut]).unwrap();
+            let d = read_fragment(&RealFs, &path, None).unwrap();
+            assert_eq!(d.payloads, vec![b"one".to_vec()], "cut at {cut}");
+        }
+    }
+
+    #[test]
+    fn sealed_fragment_fails_closed_on_missing_frames() {
+        let dir = TempDir::new("frag-sealed");
+        let path = dir.file("a.frag");
+        write_frames(&path, 0, &[b"one", b"two"]);
+        let full = std::fs::read(&path).unwrap();
+        std::fs::write(&path, &full[..full.len() - 1]).unwrap();
+        let err = read_fragment(&RealFs, &path, Some(2)).unwrap_err();
+        assert!(matches!(err, FsError::Corrupt(_)), "{err}");
+        // But the sealed count also *bounds* the read: junk past the
+        // count is the sealing crash's torn tail and is ignored.
+        std::fs::write(&path, [&full[..], &b"junkjunkjunk"[..]].concat()).unwrap();
+        let d = read_fragment(&RealFs, &path, Some(2)).unwrap();
+        assert_eq!(d.payloads.len(), 2);
+    }
+
+    #[test]
+    fn bit_flips_are_detected() {
+        let dir = TempDir::new("frag-flip");
+        let path = dir.file("a.frag");
+        write_frames(&path, 0, &[b"payload-bytes"]);
+        let full = std::fs::read(&path).unwrap();
+        // Flip a payload byte: checksum must catch it in sealed mode,
+        // and active mode must not serve the torn record.
+        let mut bad = full.clone();
+        let idx = HEADER_LEN + FRAME_HEADER_LEN + 4;
+        bad[idx] ^= 0x40;
+        std::fs::write(&path, &bad).unwrap();
+        assert!(read_fragment(&RealFs, &path, Some(1)).is_err());
+        let d = read_fragment(&RealFs, &path, None).unwrap();
+        assert!(d.payloads.is_empty(), "torn record must never be served");
+        // Bad magic fails closed either way.
+        let mut bad = full;
+        bad[0] ^= 0xff;
+        std::fs::write(&path, &bad).unwrap();
+        assert!(matches!(read_fragment(&RealFs, &path, None), Err(FsError::Corrupt(_))));
+    }
+
+    #[test]
+    fn implausible_length_is_rejected_not_alloc() {
+        let dir = TempDir::new("frag-len");
+        let path = dir.file("a.frag");
+        write_frames(&path, 0, &[]);
+        let mut bytes = std::fs::read(&path).unwrap();
+        bytes.extend_from_slice(&u32::MAX.to_le_bytes());
+        bytes.extend_from_slice(&0u64.to_le_bytes());
+        std::fs::write(&path, &bytes).unwrap();
+        let d = read_fragment(&RealFs, &path, None).unwrap();
+        assert!(d.payloads.is_empty());
+        assert!(read_fragment(&RealFs, &path, Some(1)).is_err());
+    }
+}

@@ -1,0 +1,144 @@
+//! Snapshot GC: delete files no live manifest generation references.
+//!
+//! **Live set.** The files referenced by the two newest valid manifest
+//! generations, plus those two manifest files themselves. Keeping the
+//! previous generation pinned means a crash *during* a commit — after
+//! the new manifest's data files exist but before anything references
+//! them — can never race GC into deleting the only valid root.
+//!
+//! **Two-pass deletion.** A freshly created fragment or segment is
+//! briefly unreferenced: it exists on disk before the manifest commit
+//! that adds it lands. A single list-then-delete sweep could reap it in
+//! that window. GC therefore only *marks* an unreferenced file on the
+//! pass that first sees it and deletes it on a later pass **if it is
+//! still unreferenced** — any file that was in the middle of being
+//! committed has either made it into the manifest by then (kept) or its
+//! writer crashed (a true orphan, safe to reap). `.tmp` files are
+//! excluded entirely: they are swept at open time, when no writer can
+//! be mid-rename.
+
+use std::collections::HashSet;
+use std::sync::atomic::{AtomicBool, AtomicU64, Ordering};
+use std::sync::Arc;
+use std::time::Duration;
+
+use super::DurableStore;
+use crate::types::Result;
+use crate::util::backoff::{retry, Backoff};
+use crate::util::wake::Wake;
+
+/// One GC pass's outcome.
+#[derive(Debug, Clone, Copy, PartialEq, Eq, Default)]
+pub struct GcStats {
+    /// Files deleted this pass (marked unreferenced on an earlier pass).
+    pub removed: usize,
+    /// Files newly marked; deletion candidates for the next pass.
+    pub pending: usize,
+    /// Files pinned by the live manifest generations.
+    pub live: usize,
+}
+
+/// One mark-or-sweep pass over the store directory (see module docs).
+pub fn collect(store: &DurableStore) -> Result<GcStats> {
+    let live = store.manifests().live_files();
+    let listed = store.fs().list(store.dir())?;
+    let mut pending = store.gc_pending().lock().unwrap();
+    let mut next_pending: HashSet<String> = HashSet::new();
+    let mut stats = GcStats::default();
+    for path in listed {
+        let Some(name) = path.file_name().and_then(|n| n.to_str()).map(str::to_string) else {
+            continue;
+        };
+        if name.ends_with(".tmp") {
+            continue; // open-time sweep territory, not ours
+        }
+        if live.contains(&name) {
+            stats.live += 1;
+            continue;
+        }
+        if pending.contains(&name) {
+            match store.fs().remove(&path) {
+                Ok(()) => stats.removed += 1,
+                Err(e) => {
+                    log::warn!("gc: removing {name} failed ({e}); will retry");
+                    next_pending.insert(name);
+                }
+            }
+        } else {
+            next_pending.insert(name);
+        }
+    }
+    stats.pending = next_pending.len();
+    *pending = next_pending;
+    Ok(stats)
+}
+
+/// Background GC thread: periodic passes (plus on-demand pings),
+/// transient I/O errors retried with bounded backoff, persistent
+/// errors logged — never fatal to the driver. Dropping stops it.
+pub struct GcDriver {
+    stop: Arc<AtomicBool>,
+    wake: Arc<Wake>,
+    removed: Arc<AtomicU64>,
+    handle: Option<std::thread::JoinHandle<()>>,
+}
+
+impl GcDriver {
+    pub fn spawn(store: Arc<DurableStore>, period: Duration) -> GcDriver {
+        Self::spawn_with_backoff(store, period, Backoff::default())
+    }
+
+    pub fn spawn_with_backoff(
+        store: Arc<DurableStore>,
+        period: Duration,
+        policy: Backoff,
+    ) -> GcDriver {
+        let stop = Arc::new(AtomicBool::new(false));
+        let wake = Arc::new(Wake::default());
+        let removed = Arc::new(AtomicU64::new(0));
+        let (stop2, wake2, removed2) = (stop.clone(), wake.clone(), removed.clone());
+        let handle = std::thread::Builder::new()
+            .name("geofs-storage-gc".into())
+            .spawn(move || {
+                let mut seen = 0u64;
+                loop {
+                    if stop2.load(Ordering::Acquire) {
+                        return;
+                    }
+                    seen = wake2.wait(seen, period);
+                    if stop2.load(Ordering::Acquire) {
+                        return;
+                    }
+                    match retry(&policy, || collect(&store)) {
+                        Ok(stats) => {
+                            removed2.fetch_add(stats.removed as u64, Ordering::Relaxed);
+                        }
+                        Err(e) => log::warn!("gc pass failed: {e}"),
+                    }
+                }
+            })
+            .expect("spawn storage gc driver");
+        GcDriver { stop, wake, removed, handle: Some(handle) }
+    }
+
+    /// Nudge the driver to run a pass now (e.g. right after a checkpoint
+    /// dropped a pile of references).
+    pub fn ping(&self) {
+        self.wake.ping();
+    }
+
+    /// Files deleted since spawn (test/metrics hook).
+    pub fn removed(&self) -> u64 {
+        self.removed.load(Ordering::Relaxed)
+    }
+}
+
+impl Drop for GcDriver {
+    fn drop(&mut self) {
+        self.stop.store(true, Ordering::Release);
+        self.wake.ping();
+        if let Some(h) = self.handle.take() {
+            let _ = h.join();
+        }
+    }
+}

@@ -1,0 +1,573 @@
+//! Generation-numbered manifests: the durable root of the store.
+//!
+//! A manifest is one checksummed JSON document naming every file and
+//! position the store needs to recover:
+//!
+//! ```text
+//! MANIFEST.<gen>  :=  magic "GFMAN1\0\0" | json payload | fnv1a(payload) u64
+//! json            :=  { generation, created_at,
+//!                       logs:   { name → { partitions, bases[], fragments[] } },
+//!                       segments: [ { file, table } ],
+//!                       cursors:  { region → [u64] },
+//!                       checkpoint_floor: null | [u64],
+//!                       consumer_checkpoints: <CheckpointStore entries>,
+//!                       coverage: [ { table, windows: [{start,end}] } ] }
+//! ```
+//!
+//! Manifests are immutable once written: every commit writes a **new**
+//! generation via the shared temp-file + rename idiom and leaves the
+//! previous generation on disk as the fallback root. Recovery loads the
+//! newest generation whose checksum verifies; a torn or bit-flipped
+//! newest manifest falls back to the previous one, and only if *every*
+//! present manifest fails validation does open fail closed with
+//! [`FsError::Corrupt`] — the store never guesses at state.
+
+use std::collections::BTreeMap;
+use std::path::{Path, PathBuf};
+use std::sync::{Arc, Mutex};
+
+use super::fragment::FragmentMeta;
+use super::vfs::{atomic_write_parts, corrupt, fnv1a, Vfs};
+use crate::types::window::FeatureWindow;
+use crate::types::Result;
+use crate::util::json::Json;
+
+pub const MANIFEST_MAGIC: &[u8; 8] = b"GFMAN1\0\0";
+pub const MANIFEST_PREFIX: &str = "MANIFEST.";
+
+/// One durable log's section of the manifest.
+#[derive(Debug, Clone, Default)]
+pub struct LogManifest {
+    pub partitions: usize,
+    /// Per-partition truncation floor: offsets below are reclaimed.
+    pub bases: Vec<u64>,
+    pub fragments: Vec<FragmentMeta>,
+}
+
+/// One persisted offline segment.
+#[derive(Debug, Clone, PartialEq, Eq)]
+pub struct SegmentRef {
+    pub file: String,
+    pub table: String,
+}
+
+/// The full recovery root (see module docs for the format).
+#[derive(Debug, Clone)]
+pub struct Manifest {
+    pub generation: u64,
+    pub created_at: i64,
+    pub logs: BTreeMap<String, LogManifest>,
+    pub segments: Vec<SegmentRef>,
+    pub cursors: BTreeMap<String, Vec<u64>>,
+    pub checkpoint_floor: Option<Vec<u64>>,
+    /// Stream consumer checkpoints, in `CheckpointStore`'s entry shape.
+    pub consumer_checkpoints: Json,
+    /// Scheduler materialization coverage at checkpoint time.
+    pub coverage: Vec<(String, Vec<FeatureWindow>)>,
+}
+
+impl Manifest {
+    pub fn empty(now: i64) -> Manifest {
+        Manifest {
+            generation: 0,
+            created_at: now,
+            logs: BTreeMap::new(),
+            segments: Vec::new(),
+            cursors: BTreeMap::new(),
+            checkpoint_floor: None,
+            consumer_checkpoints: Json::Null,
+            coverage: Vec::new(),
+        }
+    }
+
+    /// Every data file this manifest references (names relative to the
+    /// store directory) — the GC live set contribution.
+    pub fn referenced_files(&self) -> Vec<String> {
+        let mut out: Vec<String> = Vec::new();
+        for lm in self.logs.values() {
+            out.extend(lm.fragments.iter().map(|f| f.file.clone()));
+        }
+        out.extend(self.segments.iter().map(|s| s.file.clone()));
+        out
+    }
+
+    fn to_json(&self) -> Json {
+        let logs = Json::Obj(
+            self.logs
+                .iter()
+                .map(|(name, lm)| {
+                    (
+                        name.clone(),
+                        Json::obj(vec![
+                            ("partitions", Json::num(lm.partitions as f64)),
+                            (
+                                "bases",
+                                Json::Arr(lm.bases.iter().map(|&b| Json::num(b as f64)).collect()),
+                            ),
+                            (
+                                "fragments",
+                                Json::Arr(
+                                    lm.fragments
+                                        .iter()
+                                        .map(|f| {
+                                            Json::obj(vec![
+                                                ("file", Json::str(&f.file)),
+                                                ("partition", Json::num(f.partition as f64)),
+                                                ("base", Json::num(f.base as f64)),
+                                                ("sealed", Json::Bool(f.sealed)),
+                                                ("count", Json::num(f.count as f64)),
+                                            ])
+                                        })
+                                        .collect(),
+                                ),
+                            ),
+                        ]),
+                    )
+                })
+                .collect(),
+        );
+        let segments = Json::Arr(
+            self.segments
+                .iter()
+                .map(|s| {
+                    Json::obj(vec![("file", Json::str(&s.file)), ("table", Json::str(&s.table))])
+                })
+                .collect(),
+        );
+        let cursors = Json::Obj(
+            self.cursors
+                .iter()
+                .map(|(region, cs)| {
+                    (
+                        region.clone(),
+                        Json::Arr(cs.iter().map(|&c| Json::num(c as f64)).collect()),
+                    )
+                })
+                .collect(),
+        );
+        let floor = match &self.checkpoint_floor {
+            None => Json::Null,
+            Some(fl) => Json::Arr(fl.iter().map(|&c| Json::num(c as f64)).collect()),
+        };
+        let coverage = Json::Arr(
+            self.coverage
+                .iter()
+                .map(|(table, windows)| {
+                    Json::obj(vec![
+                        ("table", Json::str(table)),
+                        (
+                            "windows",
+                            Json::Arr(
+                                windows
+                                    .iter()
+                                    .map(|w| {
+                                        Json::obj(vec![
+                                            ("start", Json::num(w.start as f64)),
+                                            ("end", Json::num(w.end as f64)),
+                                        ])
+                                    })
+                                    .collect(),
+                            ),
+                        ),
+                    ])
+                })
+                .collect(),
+        );
+        Json::obj(vec![
+            ("generation", Json::num(self.generation as f64)),
+            ("created_at", Json::num(self.created_at as f64)),
+            ("logs", logs),
+            ("segments", segments),
+            ("cursors", cursors),
+            ("checkpoint_floor", floor),
+            ("consumer_checkpoints", self.consumer_checkpoints.clone()),
+            ("coverage", coverage),
+        ])
+    }
+
+    fn from_json(v: &Json) -> Result<Manifest> {
+        let generation = as_u64(v.get("generation"))
+            .ok_or_else(|| corrupt("manifest missing 'generation'"))?;
+        let created_at =
+            v.get("created_at").as_i64().ok_or_else(|| corrupt("manifest missing 'created_at'"))?;
+        let mut logs = BTreeMap::new();
+        if let Some(obj) = v.get("logs").as_obj() {
+            for (name, lv) in obj {
+                let partitions = lv
+                    .get("partitions")
+                    .as_usize()
+                    .ok_or_else(|| corrupt(format!("log '{name}': bad 'partitions'")))?;
+                let bases = u64_array(lv.get("bases"))
+                    .ok_or_else(|| corrupt(format!("log '{name}': bad 'bases'")))?;
+                let mut fragments = Vec::new();
+                for fv in lv.get("fragments").as_arr().unwrap_or(&[]) {
+                    fragments.push(FragmentMeta {
+                        file: fv
+                            .get("file")
+                            .as_str()
+                            .ok_or_else(|| corrupt("fragment missing 'file'"))?
+                            .to_string(),
+                        partition: fv
+                            .get("partition")
+                            .as_usize()
+                            .ok_or_else(|| corrupt("fragment missing 'partition'"))?,
+                        base: as_u64(fv.get("base"))
+                            .ok_or_else(|| corrupt("fragment missing 'base'"))?,
+                        sealed: fv.get("sealed").as_bool().unwrap_or(false),
+                        count: as_u64(fv.get("count")).unwrap_or(0),
+                    });
+                }
+                logs.insert(name.clone(), LogManifest { partitions, bases, fragments });
+            }
+        }
+        let mut segments = Vec::new();
+        for sv in v.get("segments").as_arr().unwrap_or(&[]) {
+            segments.push(SegmentRef {
+                file: sv
+                    .get("file")
+                    .as_str()
+                    .ok_or_else(|| corrupt("segment missing 'file'"))?
+                    .to_string(),
+                table: sv
+                    .get("table")
+                    .as_str()
+                    .ok_or_else(|| corrupt("segment missing 'table'"))?
+                    .to_string(),
+            });
+        }
+        let mut cursors = BTreeMap::new();
+        if let Some(obj) = v.get("cursors").as_obj() {
+            for (region, cv) in obj {
+                let cs = u64_array(cv)
+                    .ok_or_else(|| corrupt(format!("cursors for '{region}' malformed")))?;
+                cursors.insert(region.clone(), cs);
+            }
+        }
+        let checkpoint_floor = match v.get("checkpoint_floor") {
+            Json::Null => None,
+            other => {
+                Some(u64_array(other).ok_or_else(|| corrupt("bad 'checkpoint_floor'"))?)
+            }
+        };
+        let mut coverage = Vec::new();
+        for cv in v.get("coverage").as_arr().unwrap_or(&[]) {
+            let table = cv
+                .get("table")
+                .as_str()
+                .ok_or_else(|| corrupt("coverage entry missing 'table'"))?
+                .to_string();
+            let mut windows = Vec::new();
+            for wv in cv.get("windows").as_arr().unwrap_or(&[]) {
+                let (start, end) = match (wv.get("start").as_i64(), wv.get("end").as_i64()) {
+                    (Some(s), Some(e)) => (s, e),
+                    _ => return Err(corrupt("coverage window missing bounds")),
+                };
+                windows.push(FeatureWindow::new(start, end));
+            }
+            coverage.push((table, windows));
+        }
+        Ok(Manifest {
+            generation,
+            created_at,
+            logs,
+            segments,
+            cursors,
+            checkpoint_floor,
+            consumer_checkpoints: v.get("consumer_checkpoints").clone(),
+            coverage,
+        })
+    }
+}
+
+fn as_u64(v: &Json) -> Option<u64> {
+    v.as_f64().and_then(|f| if f >= 0.0 { Some(f as u64) } else { None })
+}
+
+fn u64_array(v: &Json) -> Option<Vec<u64>> {
+    v.as_arr().map(|a| a.iter().filter_map(as_u64).collect::<Vec<u64>>()).and_then(|out| {
+        (out.len() == v.as_arr().map(|a| a.len()).unwrap_or(0)).then_some(out)
+    })
+}
+
+/// The on-disk file name of one manifest generation (zero-padded so a
+/// lexicographic directory sort is a generation sort).
+pub fn manifest_file_name(generation: u64) -> String {
+    format!("{MANIFEST_PREFIX}{generation:010}")
+}
+
+fn parse_generation(name: &str) -> Option<u64> {
+    name.strip_prefix(MANIFEST_PREFIX)?.parse().ok()
+}
+
+/// Serialize + checksum + atomically write one manifest generation.
+fn write_manifest(fs: &dyn Vfs, dir: &Path, m: &Manifest) -> Result<()> {
+    let payload = m.to_json().to_string().into_bytes();
+    let sum = fnv1a(&payload).to_le_bytes();
+    atomic_write_parts(fs, &dir.join(manifest_file_name(m.generation)), &[
+        MANIFEST_MAGIC,
+        &payload,
+        &sum,
+    ])
+}
+
+/// Read + validate one manifest file (magic, checksum, decode).
+pub fn load_manifest_file(fs: &dyn Vfs, path: &Path) -> Result<Manifest> {
+    let bytes = fs.read(path)?;
+    if bytes.len() < 8 + 8 {
+        return Err(corrupt(format!("manifest {path:?}: truncated")));
+    }
+    if &bytes[..8] != MANIFEST_MAGIC {
+        return Err(corrupt(format!("manifest {path:?}: bad magic")));
+    }
+    let payload = &bytes[8..bytes.len() - 8];
+    let sum = u64::from_le_bytes(bytes[bytes.len() - 8..].try_into().unwrap());
+    if fnv1a(payload) != sum {
+        return Err(corrupt(format!("manifest {path:?}: checksum mismatch")));
+    }
+    let text = std::str::from_utf8(payload)
+        .map_err(|_| corrupt(format!("manifest {path:?}: invalid utf-8")))?;
+    let v = Json::parse(text).map_err(|e| corrupt(format!("manifest {path:?}: {e}")))?;
+    Manifest::from_json(&v)
+}
+
+struct StoreState {
+    current: Manifest,
+    /// The generation committed immediately before `current` — still in
+    /// the GC live set so a crash mid-commit always leaves a valid root.
+    prev: Option<Manifest>,
+}
+
+/// Serialized access to the manifest chain: one committer at a time,
+/// every commit a new generation.
+pub struct ManifestStore {
+    fs: Arc<dyn Vfs>,
+    dir: PathBuf,
+    state: Mutex<StoreState>,
+}
+
+impl ManifestStore {
+    /// Open the store directory: load the newest valid manifest
+    /// generation, falling back across invalid ones; a directory with
+    /// manifests but no valid one fails closed. A fresh directory
+    /// commits generation 0 so GC always has a live root.
+    pub fn open(fs: Arc<dyn Vfs>, dir: &Path, now: i64) -> Result<ManifestStore> {
+        fs.create_dir_all(dir)?;
+        let mut gens: Vec<u64> = fs
+            .list(dir)?
+            .into_iter()
+            .filter_map(|p| {
+                p.file_name().and_then(|n| n.to_str()).and_then(parse_generation)
+            })
+            .collect();
+        gens.sort_unstable_by(|a, b| b.cmp(a));
+        let mut current = None;
+        let mut prev = None;
+        let mut last_err = None;
+        for &gen in &gens {
+            match load_manifest_file(fs.as_ref(), &dir.join(manifest_file_name(gen))) {
+                Ok(m) if current.is_none() => current = Some(m),
+                Ok(m) => {
+                    prev = Some(m);
+                    break;
+                }
+                Err(e) => {
+                    log::warn!("skipping invalid manifest generation {gen}: {e}");
+                    last_err = Some(e);
+                }
+            }
+        }
+        let current = match current {
+            Some(m) => m,
+            None if gens.is_empty() => {
+                let m = Manifest::empty(now);
+                write_manifest(fs.as_ref(), dir, &m)?;
+                m
+            }
+            None => {
+                return Err(last_err
+                    .unwrap_or_else(|| corrupt("manifest directory has no valid manifest")))
+            }
+        };
+        Ok(ManifestStore {
+            fs,
+            dir: dir.to_path_buf(),
+            state: Mutex::new(StoreState { current, prev }),
+        })
+    }
+
+    pub fn dir(&self) -> &Path {
+        &self.dir
+    }
+
+    /// Snapshot of the committed manifest.
+    pub fn current(&self) -> Manifest {
+        self.state.lock().unwrap().current.clone()
+    }
+
+    pub fn generation(&self) -> u64 {
+        self.state.lock().unwrap().current.generation
+    }
+
+    /// Commit a new generation: clone the current manifest, apply `f`,
+    /// bump the generation, atomically write the new file. On write
+    /// failure the in-memory state is unchanged (the old generation
+    /// remains the root). Returns the committed generation.
+    pub fn update(&self, f: impl FnOnce(&mut Manifest)) -> Result<u64> {
+        let mut st = self.state.lock().unwrap();
+        let mut next = st.current.clone();
+        f(&mut next);
+        next.generation = st.current.generation + 1;
+        write_manifest(self.fs.as_ref(), &self.dir, &next)?;
+        let gen = next.generation;
+        st.prev = Some(std::mem::replace(&mut st.current, next));
+        Ok(gen)
+    }
+
+    /// Every file name the live manifest chain pins: data files of the
+    /// two newest generations plus those manifest files themselves.
+    pub fn live_files(&self) -> std::collections::HashSet<String> {
+        let st = self.state.lock().unwrap();
+        let mut live: std::collections::HashSet<String> =
+            st.current.referenced_files().into_iter().collect();
+        live.insert(manifest_file_name(st.current.generation));
+        if let Some(prev) = &st.prev {
+            live.extend(prev.referenced_files());
+            live.insert(manifest_file_name(prev.generation));
+        }
+        live
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::storage::vfs::RealFs;
+    use crate::testkit::TempDir;
+    use crate::types::FsError;
+
+    fn open(dir: &Path) -> ManifestStore {
+        ManifestStore::open(Arc::new(RealFs), dir, 100).unwrap()
+    }
+
+    #[test]
+    fn fresh_dir_commits_generation_zero() {
+        let dir = TempDir::new("man");
+        let ms = open(dir.path());
+        assert_eq!(ms.generation(), 0);
+        assert!(dir.file("MANIFEST.0000000000").exists());
+        // Reopen finds it.
+        let ms2 = open(dir.path());
+        assert_eq!(ms2.generation(), 0);
+        assert_eq!(ms2.current().created_at, 100);
+    }
+
+    #[test]
+    fn update_roundtrips_all_fields() {
+        let dir = TempDir::new("man-rt");
+        let ms = open(dir.path());
+        let gen = ms
+            .update(|m| {
+                m.created_at = 500;
+                m.logs.insert(
+                    "fabric".into(),
+                    LogManifest {
+                        partitions: 2,
+                        bases: vec![3, 0],
+                        fragments: vec![FragmentMeta {
+                            file: "fabric-p0-3.frag".into(),
+                            partition: 0,
+                            base: 3,
+                            sealed: true,
+                            count: 9,
+                        }],
+                    },
+                );
+                m.segments.push(SegmentRef { file: "seg-s1-t.gfseg".into(), table: "t".into() });
+                m.cursors.insert("eu".into(), vec![7, 1]);
+                m.checkpoint_floor = Some(vec![8, 2]);
+                m.consumer_checkpoints = Json::obj(vec![("checkpoints", Json::Arr(vec![]))]);
+                m.coverage.push(("t".into(), vec![FeatureWindow::new(0, 3_600)]));
+            })
+            .unwrap();
+        assert_eq!(gen, 1);
+        let re = open(dir.path()).current();
+        assert_eq!(re.generation, 1);
+        assert_eq!(re.created_at, 500);
+        let lm = &re.logs["fabric"];
+        assert_eq!((lm.partitions, lm.bases.clone()), (2, vec![3, 0]));
+        assert_eq!(lm.fragments[0].file, "fabric-p0-3.frag");
+        assert!(lm.fragments[0].sealed);
+        assert_eq!(lm.fragments[0].count, 9);
+        assert_eq!(re.segments[0], SegmentRef { file: "seg-s1-t.gfseg".into(), table: "t".into() });
+        assert_eq!(re.cursors["eu"], vec![7, 1]);
+        assert_eq!(re.checkpoint_floor, Some(vec![8, 2]));
+        assert_eq!(re.coverage, vec![("t".to_string(), vec![FeatureWindow::new(0, 3_600)])]);
+        assert_ne!(re.consumer_checkpoints, Json::Null);
+    }
+
+    #[test]
+    fn corrupt_newest_falls_back_to_previous_generation() {
+        let dir = TempDir::new("man-fall");
+        let ms = open(dir.path());
+        ms.update(|m| m.created_at = 1).unwrap();
+        ms.update(|m| m.created_at = 2).unwrap();
+        // Bit-flip the newest manifest: recovery must land on gen 1.
+        let newest = dir.file(&manifest_file_name(2));
+        let mut bytes = std::fs::read(&newest).unwrap();
+        let mid = bytes.len() / 2;
+        bytes[mid] ^= 0x01;
+        std::fs::write(&newest, &bytes).unwrap();
+        let re = open(dir.path());
+        assert_eq!(re.generation(), 1);
+        assert_eq!(re.current().created_at, 1);
+        // The next commit supersedes the corrupt generation.
+        assert_eq!(re.update(|_| {}).unwrap(), 2);
+        assert_eq!(open(dir.path()).current().created_at, 1);
+    }
+
+    #[test]
+    fn all_invalid_manifests_fail_closed() {
+        let dir = TempDir::new("man-closed");
+        open(dir.path());
+        // Corrupt the only manifest at every byte: open must never
+        // fabricate a fresh store over a directory that *had* state.
+        let path = dir.file(&manifest_file_name(0));
+        let orig = std::fs::read(&path).unwrap();
+        for idx in [0usize, 8, orig.len() / 2, orig.len() - 1] {
+            let mut bytes = orig.clone();
+            bytes[idx] ^= 0xff;
+            std::fs::write(&path, &bytes).unwrap();
+            let err = ManifestStore::open(Arc::new(RealFs), dir.path(), 0).unwrap_err();
+            assert!(matches!(err, FsError::Corrupt(_)), "byte {idx}: {err}");
+        }
+        // Truncation at every boundary also fails closed.
+        for cut in 0..orig.len() {
+            std::fs::write(&path, &orig[..cut]).unwrap();
+            assert!(
+                ManifestStore::open(Arc::new(RealFs), dir.path(), 0).is_err(),
+                "cut at {cut} must not load"
+            );
+        }
+    }
+
+    #[test]
+    fn live_files_pin_two_generations() {
+        let dir = TempDir::new("man-live");
+        let ms = open(dir.path());
+        ms.update(|m| {
+            m.segments.push(SegmentRef { file: "old.gfseg".into(), table: "t".into() })
+        })
+        .unwrap();
+        ms.update(|m| {
+            m.segments.clear();
+            m.segments.push(SegmentRef { file: "new.gfseg".into(), table: "t".into() });
+        })
+        .unwrap();
+        let live = ms.live_files();
+        assert!(live.contains("new.gfseg"));
+        assert!(live.contains("old.gfseg"), "previous generation still pinned");
+        assert!(live.contains(&manifest_file_name(2)));
+        assert!(live.contains(&manifest_file_name(1)));
+        assert!(!live.contains(&manifest_file_name(0)));
+    }
+}

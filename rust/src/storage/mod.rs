@@ -1,0 +1,374 @@
+//! Manifest-addressed durable storage: crash-safe WAL fragments,
+//! generation-numbered manifests, and snapshot GC.
+//!
+//! This layer gives the feature store's two RAM-resident logs — the
+//! geo-replication fabric's `PartitionedLog<ReplBatch>` and the stream
+//! `EventLog` — a write-ahead durable form, and replaces "checkpoint =
+//! full segment dump" with *manifest + tail replay* recovery. It is
+//! organized wal3-style: bytes in checksummed, size-bounded **fragment**
+//! files; truth in an atomically-replaced **manifest** chain; space
+//! reclaimed by a mark-then-sweep **GC** that only trusts the manifest.
+//!
+//! # Manifest format
+//!
+//! `MANIFEST.<generation>` (10-digit, zero-padded) is a checksummed JSON
+//! document (`magic | payload | fnv1a(payload)`) recording, atomically:
+//!
+//! * **fragment set** — per durable log: partition count, per-partition
+//!   truncation `bases`, and every fragment file with `{file, partition,
+//!   base, sealed, count}`. Sealed fragments carry an authoritative
+//!   frame count; the at-most-one unsealed fragment per partition is the
+//!   active tail.
+//! * **segment set** — the `.gfseg` offline-store segments of the last
+//!   checkpoint, `{file, table}` each.
+//! * **cursor positions** — per-region replication apply cursors, the
+//!   fabric checkpoint floor, the stream consumers' checkpoint entries,
+//!   and the scheduler's materialization coverage.
+//!
+//! Manifests are never modified in place: each commit writes generation
+//! `g+1` via the shared temp-file + rename + fsync-parent idiom
+//! ([`vfs::atomic_write_parts`]) and leaves generation `g` as fallback.
+//!
+//! # Recovery protocol
+//!
+//! 1. **Root.** Load the newest `MANIFEST.*` whose magic + checksum +
+//!    decode all verify; fall back generation by generation. Manifests
+//!    present but none valid ⇒ fail closed ([`crate::FsError::Corrupt`])
+//!    — the store never silently restarts empty over corrupted state.
+//! 2. **Log replay.** Per partition, read fragments in base order
+//!    (continuity checked). Sealed fragments must yield exactly `count`
+//!    frames — a torn frame inside one is corruption, fail closed. The
+//!    active fragment may end torn (crash past the last acked fsync):
+//!    its valid prefix is recovered and it is immediately re-sealed at
+//!    that count, so torn bytes are never re-read as data. Offsets below
+//!    the manifest `bases` were truncated pre-crash and are skipped.
+//! 3. **Positions.** Replica cursors, the checkpoint floor, consumer
+//!    checkpoints and scheduler coverage come straight from the
+//!    manifest; the serving tail is re-derived by replaying the log
+//!    above those cursors — no full segment dump is ever needed.
+//!
+//! The ack invariant: a record is *acked* once its frame is fsynced.
+//! Every acked record is either in a sealed fragment (count covers it)
+//! or in the active fragment's valid prefix — recovery returns all of
+//! them, and nothing below the ack point is lost. Records past the last
+//! ack may or may not survive (at-least-once); downstream sinks are
+//! idempotent.
+//!
+//! # GC safety argument
+//!
+//! GC deletes a file only if **(a)** it is referenced by neither of the
+//! two newest valid manifest generations (nor is one of those manifest
+//! files), and **(b)** it was already unreferenced on a *previous* GC
+//! pass (two-pass mark/sweep, [`gc`]). (a) protects the fallback root:
+//! even a crash between "write new manifest" and "first reference
+//! settles" leaves a pinned previous generation. (b) closes the
+//! create-before-commit window: a fragment or segment file exists
+//! briefly before the manifest commit that references it, but by the
+//! *next* GC pass that commit has either landed (file is live) or its
+//! writer crashed (file is a true orphan — it holds no acked data,
+//! because appends only begin after the commit). `.tmp` files are swept
+//! only at open time, when no writer can be mid-rename.
+
+pub mod fragment;
+pub mod gc;
+pub mod manifest;
+pub mod vfs;
+pub mod wal;
+
+use std::collections::HashSet;
+use std::path::{Path, PathBuf};
+use std::sync::atomic::{AtomicU64, Ordering};
+use std::sync::{Arc, Mutex};
+
+use crate::types::Result;
+use crate::util::json::Json;
+
+pub use gc::{GcDriver, GcStats};
+pub use manifest::{Manifest, ManifestStore, SegmentRef};
+pub use vfs::{atomic_write, RealFs, Vfs};
+pub use wal::{DurableLog, DurableLogOptions, LogRecord, LogSection};
+
+/// One durable store directory: the manifest chain plus every fragment
+/// and segment file, with a registry of open logs so checkpoint commits
+/// capture fresh per-log state.
+pub struct DurableStore {
+    fs: Arc<dyn Vfs>,
+    dir: PathBuf,
+    manifests: Arc<ManifestStore>,
+    sections: Mutex<Vec<Arc<dyn LogSection>>>,
+    /// GC mark set (files seen unreferenced once; see [`gc`]).
+    gc_pending: Mutex<HashSet<String>>,
+    next_snapshot: AtomicU64,
+}
+
+impl DurableStore {
+    /// Open (or create) a durable store at `dir`: sweep stranded `.tmp`
+    /// files (no writer is live at open), then load the manifest chain.
+    pub fn open(fs: Arc<dyn Vfs>, dir: &Path, now: i64) -> Result<Arc<DurableStore>> {
+        fs.create_dir_all(dir)?;
+        for path in fs.list(dir)? {
+            if path.extension().and_then(|e| e.to_str()) == Some("tmp") {
+                let _ = fs.remove(&path);
+            }
+        }
+        let manifests = Arc::new(ManifestStore::open(fs.clone(), dir, now)?);
+        // Seed the snapshot-id allocator past anything on disk *or* in
+        // the manifest, so a crashed checkpoint's orphan segment is
+        // never overwritten before GC reaps it.
+        let mut next = 1;
+        for s in &manifests.current().segments {
+            if let Some(id) = parse_snapshot_id(&s.file) {
+                next = next.max(id + 1);
+            }
+        }
+        for path in fs.list(dir)? {
+            if let Some(id) =
+                path.file_name().and_then(|n| n.to_str()).and_then(parse_snapshot_id)
+            {
+                next = next.max(id + 1);
+            }
+        }
+        Ok(Arc::new(DurableStore {
+            fs,
+            dir: dir.to_path_buf(),
+            manifests,
+            sections: Mutex::new(Vec::new()),
+            gc_pending: Mutex::new(HashSet::new()),
+            next_snapshot: AtomicU64::new(next),
+        }))
+    }
+
+    pub fn fs(&self) -> &Arc<dyn Vfs> {
+        &self.fs
+    }
+
+    pub fn dir(&self) -> &Path {
+        &self.dir
+    }
+
+    pub fn manifests(&self) -> &Arc<ManifestStore> {
+        &self.manifests
+    }
+
+    /// Snapshot of the committed manifest.
+    pub fn manifest(&self) -> Manifest {
+        self.manifests.current()
+    }
+
+    pub(crate) fn gc_pending(&self) -> &Mutex<HashSet<String>> {
+        &self.gc_pending
+    }
+
+    /// Open a durable log in this store and register it so checkpoint
+    /// commits refresh its manifest section.
+    pub fn open_log<T: LogRecord>(
+        self: &Arc<Self>,
+        name: &str,
+        partitions: usize,
+        opts: DurableLogOptions,
+    ) -> Result<Arc<DurableLog<T>>> {
+        let log =
+            DurableLog::open(name, partitions, self.fs.clone(), self.manifests.clone(), opts)?;
+        self.sections.lock().unwrap().push(log.clone());
+        Ok(log)
+    }
+
+    /// Allocate a fresh checkpoint-snapshot id (monotone across
+    /// restarts and crashed checkpoints).
+    pub fn alloc_snapshot_id(&self) -> u64 {
+        self.next_snapshot.fetch_add(1, Ordering::Relaxed)
+    }
+
+    /// File name for a checkpointed offline segment.
+    pub fn segment_file_name(id: u64, table: &str) -> String {
+        let safe: String =
+            table.chars().map(|c| if c.is_ascii_alphanumeric() { c } else { '_' }).collect();
+        format!("seg-s{id:06}-{safe}.gfseg")
+    }
+
+    /// Commit a checkpoint manifest generation: every registered log's
+    /// section is refreshed (fresh truncation bases, dead fragments
+    /// dropped), then `f` records the checkpoint payload (segments,
+    /// cursors, floor, consumer checkpoints, coverage). Returns the
+    /// committed generation.
+    pub fn commit_checkpoint(
+        &self,
+        now: i64,
+        f: impl FnOnce(&mut Manifest),
+    ) -> Result<u64> {
+        let sections: Vec<Arc<dyn LogSection>> = self.sections.lock().unwrap().clone();
+        self.manifests.update(|m| {
+            for s in &sections {
+                s.refresh(m);
+            }
+            m.created_at = now;
+            f(m);
+        })
+    }
+
+    /// One GC pass (see [`gc::collect`]).
+    pub fn gc(&self) -> Result<GcStats> {
+        gc::collect(self)
+    }
+
+    /// Recovered-state audit: what the manifest pins vs. what is on
+    /// disk. Uploaded as a CI artifact by the torture harness.
+    pub fn audit(&self) -> Result<Json> {
+        let m = self.manifest();
+        let live = self.manifests.live_files();
+        let mut on_disk: Vec<String> = self
+            .fs
+            .list(&self.dir)?
+            .into_iter()
+            .filter_map(|p| p.file_name().and_then(|n| n.to_str()).map(str::to_string))
+            .collect();
+        on_disk.sort();
+        let orphans: Vec<Json> = on_disk
+            .iter()
+            .filter(|n| !live.contains(*n) && !n.ends_with(".tmp"))
+            .map(|n| Json::str(n.clone()))
+            .collect();
+        let logs = Json::Obj(
+            m.logs
+                .iter()
+                .map(|(name, lm)| {
+                    (
+                        name.clone(),
+                        Json::obj(vec![
+                            ("partitions", Json::num(lm.partitions as f64)),
+                            (
+                                "bases",
+                                Json::Arr(
+                                    lm.bases.iter().map(|&b| Json::num(b as f64)).collect(),
+                                ),
+                            ),
+                            ("fragments", Json::num(lm.fragments.len() as f64)),
+                            (
+                                "sealed",
+                                Json::num(
+                                    lm.fragments.iter().filter(|f| f.sealed).count() as f64,
+                                ),
+                            ),
+                        ]),
+                    )
+                })
+                .collect(),
+        );
+        Ok(Json::obj(vec![
+            ("generation", Json::num(m.generation as f64)),
+            ("created_at", Json::num(m.created_at as f64)),
+            ("logs", logs),
+            ("segments", Json::num(m.segments.len() as f64)),
+            ("files_on_disk", Json::num(on_disk.len() as f64)),
+            ("live_files", Json::num(live.len() as f64)),
+            ("orphans", Json::Arr(orphans)),
+        ]))
+    }
+}
+
+fn parse_snapshot_id(file: &str) -> Option<u64> {
+    let rest = file.strip_prefix("seg-s")?;
+    let digits: String = rest.chars().take_while(|c| c.is_ascii_digit()).collect();
+    digits.parse().ok()
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::stream::log::StreamEvent;
+    use crate::testkit::TempDir;
+
+    fn open(dir: &Path) -> Arc<DurableStore> {
+        DurableStore::open(Arc::new(RealFs), dir, 0).unwrap()
+    }
+
+    #[test]
+    fn open_sweeps_tmp_files() {
+        let dir = TempDir::new("store-tmp");
+        std::fs::write(dir.file("x.frag.tmp"), b"stranded").unwrap();
+        let store = open(dir.path());
+        assert!(!dir.file("x.frag.tmp").exists());
+        assert_eq!(store.manifest().generation, 0);
+    }
+
+    #[test]
+    fn snapshot_ids_are_monotone_across_restarts_and_orphans() {
+        let dir = TempDir::new("store-snap");
+        let store = open(dir.path());
+        let a = store.alloc_snapshot_id();
+        let b = store.alloc_snapshot_id();
+        assert!(b > a);
+        // An orphan segment from a crashed checkpoint advances the seed.
+        std::fs::write(dir.file(&DurableStore::segment_file_name(17, "t")), b"x").unwrap();
+        let store2 = open(dir.path());
+        assert!(store2.alloc_snapshot_id() > 17);
+    }
+
+    #[test]
+    fn two_pass_gc_reaps_orphans_but_spares_live_and_fresh_files() {
+        let dir = TempDir::new("store-gc");
+        let store = open(dir.path());
+        let log = store
+            .open_log::<StreamEvent>("l", 1, DurableLogOptions::default())
+            .unwrap();
+        log.append(0, StreamEvent::new(0, "k", 0, 1.0)).unwrap();
+        // An orphan fragment (crashed pre-commit) and an orphan segment.
+        std::fs::write(dir.file("l-p0-999999999999.frag"), b"orphan").unwrap();
+        std::fs::write(dir.file("seg-s000099-dead.gfseg"), b"orphan").unwrap();
+        let first = store.gc().unwrap();
+        assert_eq!(first.removed, 0, "first sight only marks");
+        assert!(first.pending >= 2, "{first:?}");
+        let second = store.gc().unwrap();
+        assert!(second.removed >= 2, "still-unreferenced files reaped: {second:?}");
+        assert!(!dir.file("l-p0-999999999999.frag").exists());
+        assert!(!dir.file("seg-s000099-dead.gfseg").exists());
+        // The live fragment and manifest chain survive.
+        assert!(dir.file("l-p0-000000000000.frag").exists());
+        let third = store.gc().unwrap();
+        assert_eq!(third.removed, 0);
+        // Old manifest generations beyond the two newest get reaped too.
+        for i in 0..4 {
+            store.commit_checkpoint(i, |_| {}).unwrap();
+        }
+        store.gc().unwrap();
+        let reaped = store.gc().unwrap();
+        assert!(reaped.removed > 0, "stale manifest generations are garbage");
+        let gen = store.manifest().generation;
+        assert!(dir.file(&manifest::manifest_file_name(gen)).exists());
+        assert!(dir.file(&manifest::manifest_file_name(gen - 1)).exists());
+    }
+
+    #[test]
+    fn commit_checkpoint_refreshes_registered_logs() {
+        let dir = TempDir::new("store-ckpt");
+        let store = open(dir.path());
+        let log = store
+            .open_log::<StreamEvent>("l", 1, DurableLogOptions::default())
+            .unwrap();
+        for i in 0..5u64 {
+            log.append(0, StreamEvent::new(i, "k", 0, 0.0)).unwrap();
+        }
+        log.truncate_below(0, 3);
+        let gen = store
+            .commit_checkpoint(42, |m| {
+                m.cursors.insert("eu".into(), vec![3]);
+            })
+            .unwrap();
+        let m = store.manifest();
+        assert_eq!(m.generation, gen);
+        assert_eq!(m.created_at, 42);
+        assert_eq!(m.logs["l"].bases, vec![3], "checkpoint pulls fresh truncation floors");
+        assert_eq!(m.cursors["eu"], vec![3]);
+    }
+
+    #[test]
+    fn audit_reports_orphans_and_generation() {
+        let dir = TempDir::new("store-audit");
+        let store = open(dir.path());
+        std::fs::write(dir.file("stray.gfseg"), b"x").unwrap();
+        let a = store.audit().unwrap();
+        assert_eq!(a.get("generation").as_i64(), Some(0));
+        let orphans = a.get("orphans").as_arr().unwrap();
+        assert!(orphans.iter().any(|o| o.as_str() == Some("stray.gfseg")), "{a}");
+    }
+}

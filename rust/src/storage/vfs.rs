@@ -1,0 +1,220 @@
+//! Filesystem seam under the durable storage layer.
+//!
+//! Every byte the storage layer persists flows through the [`Vfs`]
+//! trait instead of `std::fs`, so the fault-injection filesystem
+//! (`testkit::faultfs`) can sit *underneath* the fragment writers, the
+//! manifest store and the atomic-write helper — torn writes, transient
+//! I/O errors and crash points then exercise exactly the code paths
+//! production runs, not a parallel test-only implementation.
+//!
+//! [`atomic_write_parts`] is the one shared implementation of the
+//! temp-file + rename idiom: write to `<name>.tmp`, fsync the file,
+//! rename over the target, fsync the parent directory (the rename
+//! itself is not durable until the directory entry is). Both the
+//! offline segment writer (`offline_store::segment`) and the stream
+//! checkpoint store (`stream::consumer`) call through here so a fix to
+//! the durability protocol lands everywhere at once.
+
+use std::fs;
+use std::io::Write;
+use std::path::{Path, PathBuf};
+
+use crate::types::{FsError, Result};
+
+/// An open writable file handle. Append-only: the storage layer never
+/// seeks — fragments and manifests are written front to back.
+pub trait VfsFile: Send {
+    fn append(&mut self, buf: &[u8]) -> Result<()>;
+    /// Flush to stable storage (fsync). The ack point for durability.
+    fn sync(&mut self) -> Result<()>;
+}
+
+/// Minimal filesystem surface the storage layer needs. Object-safe so a
+/// store can hold `Arc<dyn Vfs>` and tests can swap in a fault injector.
+pub trait Vfs: Send + Sync {
+    /// Create (truncate) a file for writing.
+    fn create(&self, path: &Path) -> Result<Box<dyn VfsFile>>;
+    /// Open an existing file for appending.
+    fn open_append(&self, path: &Path) -> Result<Box<dyn VfsFile>>;
+    /// Read a whole file.
+    fn read(&self, path: &Path) -> Result<Vec<u8>>;
+    /// Atomically rename `from` to `to` (same directory).
+    fn rename(&self, from: &Path, to: &Path) -> Result<()>;
+    /// Delete a file.
+    fn remove(&self, path: &Path) -> Result<()>;
+    /// List regular files in a directory (full paths, unsorted).
+    fn list(&self, dir: &Path) -> Result<Vec<PathBuf>>;
+    /// fsync a directory (makes renames/creates in it durable).
+    fn sync_dir(&self, dir: &Path) -> Result<()>;
+    fn exists(&self, path: &Path) -> bool;
+    fn create_dir_all(&self, dir: &Path) -> Result<()>;
+}
+
+/// The production [`Vfs`]: thin passthrough to `std::fs`.
+#[derive(Debug, Default, Clone, Copy)]
+pub struct RealFs;
+
+struct RealFile(fs::File);
+
+impl VfsFile for RealFile {
+    fn append(&mut self, buf: &[u8]) -> Result<()> {
+        self.0.write_all(buf)?;
+        Ok(())
+    }
+    fn sync(&mut self) -> Result<()> {
+        self.0.sync_all()?;
+        Ok(())
+    }
+}
+
+impl Vfs for RealFs {
+    fn create(&self, path: &Path) -> Result<Box<dyn VfsFile>> {
+        Ok(Box::new(RealFile(fs::File::create(path)?)))
+    }
+    fn open_append(&self, path: &Path) -> Result<Box<dyn VfsFile>> {
+        Ok(Box::new(RealFile(fs::OpenOptions::new().append(true).open(path)?)))
+    }
+    fn read(&self, path: &Path) -> Result<Vec<u8>> {
+        Ok(fs::read(path)?)
+    }
+    fn rename(&self, from: &Path, to: &Path) -> Result<()> {
+        fs::rename(from, to)?;
+        Ok(())
+    }
+    fn remove(&self, path: &Path) -> Result<()> {
+        fs::remove_file(path)?;
+        Ok(())
+    }
+    fn list(&self, dir: &Path) -> Result<Vec<PathBuf>> {
+        let mut out = Vec::new();
+        for entry in fs::read_dir(dir)? {
+            let path = entry?.path();
+            if path.is_file() {
+                out.push(path);
+            }
+        }
+        Ok(out)
+    }
+    fn sync_dir(&self, dir: &Path) -> Result<()> {
+        // Directory fsync: open the directory and sync it. On platforms
+        // where directories cannot be opened for sync this degrades to a
+        // no-op rather than failing the write path.
+        if let Ok(d) = fs::File::open(dir) {
+            d.sync_all()?;
+        }
+        Ok(())
+    }
+    fn exists(&self, path: &Path) -> bool {
+        path.exists()
+    }
+    fn create_dir_all(&self, dir: &Path) -> Result<()> {
+        fs::create_dir_all(dir)?;
+        Ok(())
+    }
+}
+
+/// The sibling temp path a crash may strand: `<file_name>.tmp` in the
+/// same directory (appended, not substituted, so `MANIFEST.0000000007`
+/// and `MANIFEST.0000000008` never collide on one temp name).
+pub fn tmp_path(path: &Path) -> PathBuf {
+    let mut name = path.file_name().map(|n| n.to_os_string()).unwrap_or_default();
+    name.push(".tmp");
+    path.with_file_name(name)
+}
+
+/// Atomically replace `path` with the concatenation of `parts`:
+/// temp file → write → fsync file → rename → fsync parent directory.
+/// A crash at any point leaves either the old file intact or the new
+/// file complete — never a torn target. Strands at most one `.tmp`
+/// sibling, which the storage layer's open-time sweep removes.
+pub fn atomic_write_parts(fs: &dyn Vfs, path: &Path, parts: &[&[u8]]) -> Result<()> {
+    let tmp = tmp_path(path);
+    let mut f = fs.create(&tmp)?;
+    for part in parts {
+        f.append(part)?;
+    }
+    f.sync()?;
+    drop(f);
+    fs.rename(&tmp, path)?;
+    if let Some(parent) = path.parent() {
+        fs.sync_dir(parent)?;
+    }
+    Ok(())
+}
+
+/// [`atomic_write_parts`] over the real filesystem — the shared
+/// temp-file + rename entry point for callers outside the storage
+/// layer (offline segments, stream checkpoint files).
+pub fn atomic_write(path: &Path, parts: &[&[u8]]) -> Result<()> {
+    atomic_write_parts(&RealFs, path, parts)
+}
+
+/// FNV-1a over a byte slice — the same checksum the offline segment
+/// format uses, shared by fragment frames and manifest payloads.
+pub fn fnv1a(bytes: &[u8]) -> u64 {
+    let mut h = 0xcbf29ce484222325u64;
+    for b in bytes {
+        h ^= *b as u64;
+        h = h.wrapping_mul(0x100000001b3);
+    }
+    h
+}
+
+/// Typed corruption error with a uniform prefix (tests assert on it).
+pub(crate) fn corrupt(msg: impl Into<String>) -> FsError {
+    FsError::Corrupt(msg.into())
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::testkit::TempDir;
+
+    #[test]
+    fn atomic_write_replaces_and_cleans_tmp() {
+        let dir = TempDir::new("vfs");
+        let path = dir.file("target.bin");
+        atomic_write(&path, &[b"hello ", b"world"]).unwrap();
+        assert_eq!(std::fs::read(&path).unwrap(), b"hello world");
+        assert!(!tmp_path(&path).exists(), "tmp must be renamed away");
+        // Overwrite goes through the same protocol.
+        atomic_write(&path, &[b"v2"]).unwrap();
+        assert_eq!(std::fs::read(&path).unwrap(), b"v2");
+    }
+
+    #[test]
+    fn tmp_path_appends_suffix() {
+        let p = Path::new("/x/MANIFEST.0000000007");
+        assert_eq!(tmp_path(p), Path::new("/x/MANIFEST.0000000007.tmp"));
+        // Distinct targets never share a temp name (unlike with_extension).
+        assert_ne!(tmp_path(Path::new("/x/MANIFEST.0000000008")), tmp_path(p));
+    }
+
+    #[test]
+    fn realfs_roundtrip_and_list() {
+        let dir = TempDir::new("vfs-real");
+        let fs = RealFs;
+        let p = dir.file("a.frag");
+        let mut f = fs.create(&p).unwrap();
+        f.append(b"abc").unwrap();
+        f.sync().unwrap();
+        drop(f);
+        let mut f = fs.open_append(&p).unwrap();
+        f.append(b"def").unwrap();
+        f.sync().unwrap();
+        drop(f);
+        assert_eq!(fs.read(&p).unwrap(), b"abcdef");
+        assert!(fs.exists(&p));
+        let listed = fs.list(dir.path()).unwrap();
+        assert_eq!(listed, vec![p.clone()]);
+        fs.remove(&p).unwrap();
+        assert!(!fs.exists(&p));
+    }
+
+    #[test]
+    fn fnv1a_matches_reference() {
+        // Same constants as the offline segment checksum.
+        assert_eq!(fnv1a(b""), 0xcbf29ce484222325);
+        assert_ne!(fnv1a(b"a"), fnv1a(b"b"));
+    }
+}

@@ -134,8 +134,11 @@ impl CheckpointStore {
         self.len() == 0
     }
 
-    /// Persist all checkpoints to one JSON file.
-    pub fn persist(&self, path: &Path) -> Result<()> {
+    /// All checkpoints as the JSON document persisted to disk. Shared
+    /// by [`CheckpointStore::persist`] and the durable-store manifest,
+    /// which embeds the same document so one recovery path restores
+    /// consumer cursors regardless of where they were recorded.
+    pub fn snapshot_entries(&self) -> Json {
         let g = self.inner.lock().unwrap();
         let entries: Vec<Json> = g
             .iter()
@@ -150,22 +153,19 @@ impl CheckpointStore {
                 ])
             })
             .collect();
-        let doc = Json::obj(vec![("checkpoints", Json::Arr(entries))]);
-        std::fs::write(path, doc.to_string())?;
-        Ok(())
+        Json::obj(vec![("checkpoints", Json::Arr(entries))])
     }
 
-    /// Load a store persisted by [`CheckpointStore::persist`].
-    pub fn load(path: &Path) -> Result<CheckpointStore> {
-        let text = std::fs::read_to_string(path)?;
-        let doc = Json::parse(&text)
-            .map_err(|e| FsError::Other(format!("bad checkpoint file {path:?}: {e}")))?;
-        let store = CheckpointStore::new();
+    /// Merge entries produced by [`CheckpointStore::snapshot_entries`]
+    /// into this store. Offsets only move forward: restoring an older
+    /// snapshot over fresher in-memory progress must not rewind a
+    /// cursor below work already applied.
+    pub fn restore_entries(&self, doc: &Json) -> Result<()> {
         let entries = doc
             .get("checkpoints")
             .as_arr()
-            .ok_or_else(|| FsError::Other("checkpoint file missing 'checkpoints'".into()))?;
-        let mut g = store.inner.lock().unwrap();
+            .ok_or_else(|| FsError::Other("checkpoint document missing 'checkpoints'".into()))?;
+        let mut g = self.inner.lock().unwrap();
         for e in entries {
             let key = e
                 .get("slot")
@@ -187,9 +187,31 @@ impl CheckpointStore {
             } else {
                 None
             };
-            g.insert(key, PartitionCheckpoint { offset, finalized_until, last_creation });
+            let ck = PartitionCheckpoint { offset, finalized_until, last_creation };
+            match g.get(&key) {
+                Some(existing) if existing.offset >= ck.offset => {}
+                _ => {
+                    g.insert(key, ck);
+                }
+            }
         }
-        drop(g);
+        Ok(())
+    }
+
+    /// Persist all checkpoints to one JSON file (atomic replace: temp
+    /// file + fsync + rename, so a crash never leaves a torn file).
+    pub fn persist(&self, path: &Path) -> Result<()> {
+        let doc = self.snapshot_entries();
+        crate::storage::vfs::atomic_write(path, &[doc.to_string().as_bytes()])
+    }
+
+    /// Load a store persisted by [`CheckpointStore::persist`].
+    pub fn load(path: &Path) -> Result<CheckpointStore> {
+        let text = std::fs::read_to_string(path)?;
+        let doc = Json::parse(&text)
+            .map_err(|e| FsError::Other(format!("bad checkpoint file {path:?}: {e}")))?;
+        let store = CheckpointStore::new();
+        store.restore_entries(&doc)?;
         Ok(store)
     }
 }
@@ -262,6 +284,23 @@ mod tests {
         assert_eq!(loaded.len(), 2);
         assert_eq!(loaded.get("g", "txn:1", 0), Some(ck(123, Some(-7_200), Some(99))));
         assert_eq!(loaded.get("g", "txn:1", 3), Some(ck(0, None, None)));
+    }
+
+    #[test]
+    fn restore_entries_never_rewinds_offsets() {
+        let s = CheckpointStore::new();
+        s.commit("g", "t", 0, ck(10, None, None));
+        let snap = s.snapshot_entries();
+        // Progress past the snapshot, then restore the stale snapshot:
+        // the fresher cursor must survive.
+        s.commit("g", "t", 0, ck(20, Some(5), None));
+        s.restore_entries(&snap).unwrap();
+        assert_eq!(s.get("g", "t", 0).unwrap().offset, 20);
+        // Slots absent in memory do land from the snapshot.
+        let other = CheckpointStore::new();
+        other.commit("g", "t", 1, ck(3, None, None));
+        s.restore_entries(&other.snapshot_entries()).unwrap();
+        assert_eq!(s.get("g", "t", 1).unwrap().offset, 3);
     }
 
     #[test]

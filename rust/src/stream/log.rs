@@ -24,9 +24,10 @@
 //! cursor pointing below the base simply resumes at the base.
 
 use std::sync::atomic::{AtomicU64, Ordering};
-use std::sync::RwLock;
+use std::sync::{Arc, RwLock};
 
-use crate::types::Timestamp;
+use crate::storage::DurableLog;
+use crate::types::{Result, Timestamp};
 
 /// One raw stream event, as appended by a source.
 ///
@@ -131,6 +132,16 @@ impl<T: Clone> PartitionedLog<T> {
         drop_n as u64
     }
 
+    /// Overwrite one partition's retained state wholesale — the WAL
+    /// recovery path (`storage::wal`) rebuilding the in-RAM mirror from
+    /// replayed fragments. Not for steady-state use.
+    #[doc(hidden)]
+    pub fn restore_partition(&self, partition: usize, base: u64, items: Vec<T>) {
+        let mut p = self.parts[partition].write().unwrap();
+        p.base = base;
+        p.items = items;
+    }
+
     /// Retained items across all partitions (truncated items excluded).
     pub fn len(&self) -> usize {
         self.parts.iter().map(|p| p.read().unwrap().items.len()).sum()
@@ -155,66 +166,118 @@ pub(crate) fn hash_key(key: &str) -> u64 {
     x ^ (x >> 31)
 }
 
+/// The log bytes behind an [`EventLog`]: plain RAM (the original
+/// in-process broker) or a crash-safe WAL whose in-RAM mirror serves
+/// every read (reads never touch disk; only appends pay for fsync).
+enum Backing {
+    Mem(PartitionedLog<StreamEvent>),
+    Durable(Arc<DurableLog<StreamEvent>>),
+}
+
+impl std::fmt::Debug for Backing {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        match self {
+            Backing::Mem(log) => write!(f, "Mem({} partitions)", log.partitions()),
+            Backing::Durable(log) => write!(f, "Durable({:?})", log.name()),
+        }
+    }
+}
+
 /// The streaming source log: key-routed [`StreamEvent`] partitions plus
 /// a convenience sequence generator for producers that do not manage
 /// their own event identities.
 #[derive(Debug)]
 pub struct EventLog {
-    log: PartitionedLog<StreamEvent>,
+    backing: Backing,
     next_seq: AtomicU64,
 }
 
 impl EventLog {
     pub fn new(partitions: usize) -> Self {
-        EventLog { log: PartitionedLog::new(partitions), next_seq: AtomicU64::new(0) }
+        EventLog {
+            backing: Backing::Mem(PartitionedLog::new(partitions)),
+            next_seq: AtomicU64::new(0),
+        }
+    }
+
+    /// Wrap a recovered durable log. The seq generator resumes past the
+    /// largest replayed seq so log-assigned identities stay unique
+    /// across restarts.
+    pub fn durable(log: Arc<DurableLog<StreamEvent>>) -> Self {
+        let mut next = 0;
+        for p in 0..log.partitions() {
+            for (_, ev) in log.mem().read_from(p, 0, usize::MAX) {
+                next = next.max(ev.seq + 1);
+            }
+        }
+        EventLog { backing: Backing::Durable(log), next_seq: AtomicU64::new(next) }
+    }
+
+    /// The read view (always RAM: the durable backing's mirror).
+    fn view(&self) -> &PartitionedLog<StreamEvent> {
+        match &self.backing {
+            Backing::Mem(log) => log,
+            Backing::Durable(log) => log.mem(),
+        }
     }
 
     pub fn partitions(&self) -> usize {
-        self.log.partitions()
+        self.view().partitions()
     }
 
     /// The partition all events of `key` route to.
     pub fn partition_of(&self, key: &str) -> usize {
-        (hash_key(key) % self.log.partitions() as u64) as usize
+        (hash_key(key) % self.partitions() as u64) as usize
     }
 
-    /// Append one event; returns `(partition, offset)`.
-    pub fn append(&self, event: StreamEvent) -> (usize, u64) {
+    /// Append one event; returns `(partition, offset)`. On a durable
+    /// backing the event is fsync-acked before this returns; an `Err`
+    /// means the event is **not** acked (transient errors are safe to
+    /// retry with the same `seq` — dedupe absorbs the replay).
+    pub fn append(&self, event: StreamEvent) -> Result<(usize, u64)> {
         let p = self.partition_of(&event.key);
-        let off = self.log.append(p, event);
-        (p, off)
+        let off = match &self.backing {
+            Backing::Mem(log) => log.append(p, event),
+            Backing::Durable(log) => log.append(p, event)?,
+        };
+        Ok((p, off))
     }
 
     /// Producer convenience: append with a log-assigned fresh `seq`
     /// (callers that replay/retry must assign their own seqs instead).
-    pub fn emit(&self, key: &str, ts: Timestamp, value: f32) -> (usize, u64) {
+    pub fn emit(&self, key: &str, ts: Timestamp, value: f32) -> Result<(usize, u64)> {
         let seq = self.next_seq.fetch_add(1, Ordering::Relaxed);
         self.append(StreamEvent::new(seq, key, ts, value))
     }
 
     pub fn high_water(&self, partition: usize) -> u64 {
-        self.log.high_water(partition)
+        self.view().high_water(partition)
     }
 
     pub fn base_offset(&self, partition: usize) -> u64 {
-        self.log.base_offset(partition)
+        self.view().base_offset(partition)
     }
 
     pub fn read_from(&self, partition: usize, offset: u64, max: usize) -> Vec<(u64, StreamEvent)> {
-        self.log.read_from(partition, offset, max)
+        self.view().read_from(partition, offset, max)
     }
 
     /// Reclaim events below `offset` (see [`PartitionedLog::truncate_below`]).
+    /// On a durable backing this is RAM-only bookkeeping: the manifest
+    /// floor advances lazily at the next checkpoint commit.
     pub fn truncate_below(&self, partition: usize, offset: u64) -> u64 {
-        self.log.truncate_below(partition, offset)
+        match &self.backing {
+            Backing::Mem(log) => log.truncate_below(partition, offset),
+            Backing::Durable(log) => log.truncate_below(partition, offset),
+        }
     }
 
     pub fn len(&self) -> usize {
-        self.log.len()
+        self.view().len()
     }
 
     pub fn is_empty(&self) -> bool {
-        self.log.is_empty()
+        self.view().is_empty()
     }
 }
 
@@ -276,7 +339,7 @@ mod tests {
     fn key_routing_is_stable_and_order_preserving() {
         let log = EventLog::new(4);
         for i in 0..20 {
-            log.append(StreamEvent::new(i, "cust_7", i as i64, 0.0));
+            log.append(StreamEvent::new(i, "cust_7", i as i64, 0.0)).unwrap();
         }
         let p = log.partition_of("cust_7");
         // All in one partition, in append order.
@@ -289,7 +352,7 @@ mod tests {
     fn keys_spread_across_partitions() {
         let log = EventLog::new(8);
         for i in 0..256 {
-            log.emit(&format!("cust_{i:05}"), 0, 0.0);
+            log.emit(&format!("cust_{i:05}"), 0, 0.0).unwrap();
         }
         let occupied = (0..8).filter(|&p| log.high_water(p) > 0).count();
         assert!(occupied >= 6, "keys should spread over partitions, got {occupied}/8");
@@ -297,10 +360,36 @@ mod tests {
     }
 
     #[test]
+    fn durable_backing_resumes_seqs_and_offsets_across_reopen() {
+        use crate::storage::{DurableLogOptions, DurableStore, RealFs};
+        use crate::testkit::TempDir;
+        let dir = TempDir::new("eventlog-durable");
+        let reopen = || {
+            let store = DurableStore::open(Arc::new(RealFs), dir.path(), 0).unwrap();
+            let wal = store
+                .open_log::<StreamEvent>("stream/t", 2, DurableLogOptions::default())
+                .unwrap();
+            EventLog::durable(wal)
+        };
+        let log = reopen();
+        log.emit("a", 1, 1.0).unwrap();
+        log.emit("b", 2, 2.0).unwrap();
+        let log2 = reopen();
+        assert_eq!(log2.len(), 2, "replayed events are readable");
+        let (_, _) = log2.emit("c", 3, 3.0).unwrap();
+        let mut seqs: Vec<u64> = (0..2)
+            .flat_map(|p| log2.read_from(p, 0, usize::MAX))
+            .map(|(_, e)| e.seq)
+            .collect();
+        seqs.sort_unstable();
+        assert_eq!(seqs, vec![0, 1, 2], "seq generator resumes past replayed ids");
+    }
+
+    #[test]
     fn emit_assigns_fresh_seqs() {
         let log = EventLog::new(2);
-        log.emit("a", 1, 0.0);
-        log.emit("b", 2, 0.0);
+        log.emit("a", 1, 0.0).unwrap();
+        log.emit("b", 2, 0.0).unwrap();
         let mut seqs: Vec<u64> = (0..2)
             .flat_map(|p| log.read_from(p, 0, usize::MAX))
             .map(|(_, e)| e.seq)

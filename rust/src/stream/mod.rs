@@ -102,6 +102,8 @@ use crate::offline_store::OfflineStore;
 use crate::online_store::OnlineStore;
 use crate::serving::batcher::{wall_us, BatcherConfig, FlushDriver, WriteBatcher};
 use crate::types::{FsError, Result, Timestamp};
+use crate::util::backoff::{retry, Backoff};
+use crate::util::wake::Wake;
 use crate::util::Clock;
 
 /// Streaming engine configuration (per feature set).
@@ -251,6 +253,9 @@ pub struct StreamIngestor {
     parts: Vec<Mutex<PartState>>,
     writer: Arc<WriteBatcher>,
     deps: StreamDeps,
+    /// Pinged by every poll that consumed events — the backlog-drain
+    /// signal [`StreamIngestor::ingest_blocking`] parks on.
+    drained: Wake,
     _writer_driver: Option<FlushDriver>,
 }
 
@@ -330,6 +335,7 @@ impl StreamIngestor {
             parts,
             writer,
             deps,
+            drained: Wake::default(),
             _writer_driver: writer_driver,
         }))
     }
@@ -351,14 +357,17 @@ impl StreamIngestor {
     }
 
     /// Append events (key-routed to partitions). Returns the count.
-    /// Never rejects — producers that must not lose events use this and
+    /// Never sheds — producers that must not lose events use this and
     /// absorb the backlog; front ends facing untrusted producers use
-    /// [`Self::try_ingest`].
-    pub fn ingest(&self, events: &[StreamEvent]) -> u64 {
+    /// [`Self::try_ingest`] or [`Self::ingest_blocking`]. On a durable
+    /// log an `Err` means the failing event (and the rest of the batch)
+    /// is **not** acked; re-ingesting the same batch is safe — seq
+    /// dedupe absorbs the already-acked prefix.
+    pub fn ingest(&self, events: &[StreamEvent]) -> Result<u64> {
         for ev in events {
-            self.log.append(ev.clone());
+            self.log.append(ev.clone())?;
         }
-        events.len() as u64
+        Ok(events.len() as u64)
     }
 
     /// Admission-controlled ingest: sheds the whole batch with a typed
@@ -384,7 +393,46 @@ impl StreamIngestor {
                 ),
             });
         }
-        Ok(self.ingest(events))
+        self.ingest(events)
+    }
+
+    /// Backpressuring ingest: where [`Self::try_ingest`] sheds on a full
+    /// backlog, this **waits** for the poll loop to drain headroom —
+    /// parked on a condvar pinged by every consuming poll, so producers
+    /// slow to consumer speed instead of failing or spinning. Gives up
+    /// with a typed `Overloaded` once `timeout` elapses without enough
+    /// headroom (deadline-capped: a stalled poll loop cannot wedge
+    /// producers forever).
+    pub fn ingest_blocking(
+        &self,
+        events: &[StreamEvent],
+        timeout: std::time::Duration,
+    ) -> Result<u64> {
+        let cap = self.cfg.max_backlog_events as u64;
+        let deadline = std::time::Instant::now() + timeout;
+        let mut seen = 0u64;
+        loop {
+            let backlog = self.backlog();
+            if backlog.saturating_add(events.len() as u64) <= cap {
+                return self.ingest(events);
+            }
+            let now = std::time::Instant::now();
+            if now >= deadline {
+                self.deps.metrics.inc(
+                    MetricKind::System,
+                    names::STREAM_SHED_EVENTS,
+                    events.len() as u64,
+                );
+                return Err(FsError::Overloaded {
+                    resource: format!("stream '{}'", self.table),
+                    reason: format!(
+                        "backlog {backlog} + {} > {cap} after waiting {timeout:?}",
+                        events.len()
+                    ),
+                });
+            }
+            seen = self.drained.wait(seen, deadline - now);
+        }
     }
 
     /// Ingested-but-unconsumed events across partitions (the admission
@@ -464,7 +512,13 @@ impl StreamIngestor {
                     // creation stamp — a bumped stamp would push
                     // visibility past the lag and, because fabric tailing
                     // is prefix-ordered, block later honest entries too.
-                    fabric.append_shared(&self.table, shared, proc_now);
+                    // Transient durable-append errors retry with bounded
+                    // backoff (replica merges are idempotent, so a
+                    // duplicate replay of a half-acked attempt is safe);
+                    // persistent failure aborts the round.
+                    retry(&Backoff::default(), || {
+                        fabric.append_shared(&self.table, shared.clone(), proc_now)
+                    })?;
                 }
             }
         }
@@ -523,6 +577,10 @@ impl StreamIngestor {
         // durably committed, clamped to the repair-retention floor.
         if let Some(ck) = self.deps.checkpoints.clone() {
             stats.truncated = self.truncate_log(&ck);
+        }
+        if stats.consumed > 0 {
+            // Backlog shrank: unblock ingest_blocking waiters.
+            self.drained.ping();
         }
 
         let now = self.deps.clock.now();
@@ -740,7 +798,7 @@ mod tests {
             deps(clock),
         )
         .unwrap();
-        ing.ingest(&[ev(0, "a", 30 * 60, 5.0), ev(1, "a", HOUR + 10, 7.0)]);
+        ing.ingest(&[ev(0, "a", 30 * 60, 5.0), ev(1, "a", HOUR + 10, 7.0)]).unwrap();
         let s = ing.poll().unwrap();
         assert_eq!(s.consumed, 2);
         // Watermark (lateness 0) = 1h10s → bin [0,1h) final; record at
@@ -795,6 +853,36 @@ mod tests {
     }
 
     #[test]
+    fn ingest_blocking_waits_for_drain_and_deadline_caps() {
+        use std::time::Duration;
+        let clock = Clock::fixed(10 * HOUR);
+        let ing = StreamIngestor::new(
+            spec(1),
+            StreamConfig { partitions: 1, max_backlog_events: 2, ..Default::default() },
+            deps(clock),
+        )
+        .unwrap();
+        ing.ingest(&[ev(0, "a", 10, 1.0), ev(1, "a", 20, 1.0)]).unwrap();
+        // Backlog full and nobody consuming: the deadline caps the wait.
+        match ing.ingest_blocking(&[ev(2, "a", 30, 1.0)], Duration::from_millis(10)) {
+            Err(FsError::Overloaded { .. }) => {}
+            other => panic!("expected deadline-capped Overloaded, got {other:?}"),
+        }
+        assert_eq!(ing.deps.metrics.counter("stream_shed_events"), 1);
+        // A concurrent poll drains the backlog and unblocks the producer
+        // well before the generous deadline.
+        let consumer = ing.clone();
+        let h = std::thread::spawn(move || {
+            std::thread::sleep(Duration::from_millis(30));
+            consumer.poll().unwrap();
+        });
+        let n = ing.ingest_blocking(&[ev(2, "a", 30, 1.0)], Duration::from_secs(30)).unwrap();
+        assert_eq!(n, 1);
+        h.join().unwrap();
+        assert_eq!(ing.deps.metrics.counter("stream_shed_events"), 1, "no shed on success");
+    }
+
+    #[test]
     fn duplicate_and_out_of_order_delivery_converges() {
         let clock = Clock::fixed(100 * HOUR);
         let ing = StreamIngestor::new(
@@ -816,7 +904,7 @@ mod tests {
             ev(7, "a", 10 * HOUR, 0.0),
             ev(8, "b", 10 * HOUR, 0.0),
         ];
-        ing.ingest(&events);
+        ing.ingest(&events).unwrap();
         let s = ing.drain().unwrap();
         assert_eq!(s.pipeline.duplicates, 2);
         let table = ing.table().to_string();
@@ -841,7 +929,7 @@ mod tests {
             deps(clock.clone()),
         )
         .unwrap();
-        ing.ingest(&[ev(0, "a", 30, 1.0), ev(1, "a", 5 * HOUR, 0.5)]);
+        ing.ingest(&[ev(0, "a", 30, 1.0), ev(1, "a", 5 * HOUR, 0.5)]).unwrap();
         ing.drain().unwrap();
         let table = ing.table().to_string();
         let a = ing.deps.materializer.interner().lookup("a").unwrap();
@@ -851,7 +939,7 @@ mod tests {
         assert_eq!((before.event_ts, before.values[0]), (2 * HOUR, 1.0));
         // Late event for the already-final first bin.
         clock.set(51 * HOUR);
-        ing.ingest(&[ev(2, "a", 40, 10.0)]);
+        ing.ingest(&[ev(2, "a", 40, 10.0)]).unwrap();
         let s = ing.drain().unwrap();
         assert_eq!(s.pipeline.late, 1);
         // Online: the repair re-emits bins [0,2h); the event-2h version
@@ -894,8 +982,8 @@ mod tests {
                 )
             })
             .collect();
-        seq.ingest(&events);
-        par.ingest(&events);
+        seq.ingest(&events).unwrap();
+        par.ingest(&events).unwrap();
         seq.drain().unwrap();
         par.drain().unwrap();
         let table = seq.table().to_string();
@@ -925,7 +1013,7 @@ mod tests {
         let mut d = deps(clock.clone());
         d.fabric = Some(fabric.clone());
         let ing = StreamIngestor::new(spec(1), StreamConfig::default(), d).unwrap();
-        ing.ingest(&[ev(0, "a", 10, 4.0), ev(1, "a", HOUR + 5, 1.0)]);
+        ing.ingest(&[ev(0, "a", 10, 4.0), ev(1, "a", HOUR + 5, 1.0)]).unwrap();
         ing.drain().unwrap();
         let table = ing.table().to_string();
         let a = ing.deps.materializer.interner().lookup("a").unwrap();
@@ -969,7 +1057,7 @@ mod tests {
         // Partition of `a` runs 9 hours ahead of `b`'s: the table
         // watermark (min) sits at 1h while the skew gauge exposes the
         // laggard long before freshness notices.
-        ing.ingest(&[ev(0, &a, 10 * HOUR, 1.0), ev(1, &b, HOUR, 1.0)]);
+        ing.ingest(&[ev(0, &a, 10 * HOUR, 1.0), ev(1, &b, HOUR, 1.0)]).unwrap();
         let s = ing.poll().unwrap();
         assert_eq!(s.watermark, Some(HOUR));
         assert_eq!(s.watermark_skew_secs, 9 * HOUR);
@@ -978,7 +1066,7 @@ mod tests {
             Some((9 * HOUR) as f64)
         );
         // The stuck partition catches up → skew collapses.
-        ing.ingest(&[ev(2, &b, 10 * HOUR, 1.0)]);
+        ing.ingest(&[ev(2, &b, 10 * HOUR, 1.0)]).unwrap();
         let s = ing.poll().unwrap();
         assert_eq!(s.watermark_skew_secs, 0);
         assert_eq!(ing.deps.metrics.gauge("stream_watermark_skew_secs"), Some(0.0));
@@ -998,7 +1086,7 @@ mod tests {
         let ing = StreamIngestor::new(spec(1), cfg.clone(), d).unwrap();
         let events: Vec<StreamEvent> =
             (0..20).map(|i| ev(i, "a", i as i64 * HOUR + 30 * 60, 1.0)).collect();
-        ing.ingest(&events);
+        ing.ingest(&events).unwrap();
         ing.drain().unwrap();
         // No checkpoint committed yet → nothing truncated.
         assert_eq!(ing.log().base_offset(0), 0);
@@ -1022,7 +1110,7 @@ mod tests {
         };
         let ing2 = StreamIngestor::with_log(spec(1), cfg, d2, ing.log().clone()).unwrap();
         ing2.restore_from(&store).unwrap();
-        ing2.ingest(&[ev(50, "a", 20 * HOUR + 10, 2.0)]);
+        ing2.ingest(&[ev(50, "a", 20 * HOUR + 10, 2.0)]).unwrap();
         let s2 = ing2.drain().unwrap();
         assert!(s2.records_emitted > 0, "resumed engine must emit the newly-final bin");
         let table = ing2.table().to_string();

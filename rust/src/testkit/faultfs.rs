@@ -1,0 +1,271 @@
+//! Fault-injecting [`Vfs`] for durability torture tests.
+//!
+//! Wraps the real filesystem and injects three failure modes beneath
+//! the storage layer, all seeded and deterministic:
+//!
+//! * **Crash points** — after `fail_after_ops` filesystem operations,
+//!   the "process" crashes: the op in flight fails, and every later op
+//!   fails too (`FsError::InjectedFault("crashed")`). A crashing write
+//!   may first persist a random *prefix* of its buffer (a torn write),
+//!   exactly what a power cut does to an in-flight page.
+//! * **Torn writes** — independently of crashes, a write may persist a
+//!   prefix and fail, with probability `torn_write_rate`.
+//! * **Transient errors** — any op may fail with probability
+//!   `transient_error_rate` without crashing; a retry (e.g. via
+//!   `util::backoff`) then succeeds. These pin the drivers'
+//!   retry-on-transient behavior.
+//!
+//! Recovery tests reopen the directory with a plain `RealFs`: the
+//! crash leaves real on-disk state behind, and recovery must cope with
+//! whatever prefix survived.
+
+use std::path::{Path, PathBuf};
+use std::sync::atomic::{AtomicBool, AtomicU64, Ordering};
+use std::sync::{Arc, Mutex};
+
+use crate::storage::vfs::{RealFs, Vfs, VfsFile};
+use crate::types::{FsError, Result};
+use crate::util::rng::Rng;
+
+/// Injection knobs (all off by default).
+#[derive(Debug, Clone)]
+pub struct FaultConfig {
+    pub seed: u64,
+    /// Crash after this many successful filesystem ops (`None` = never).
+    pub fail_after_ops: Option<u64>,
+    /// Per-op probability of a transient (retryable) failure.
+    pub transient_error_rate: f64,
+    /// Per-write probability of persisting only a prefix and failing.
+    pub torn_write_rate: f64,
+}
+
+impl Default for FaultConfig {
+    fn default() -> Self {
+        FaultConfig {
+            seed: 0,
+            fail_after_ops: None,
+            transient_error_rate: 0.0,
+            torn_write_rate: 0.0,
+        }
+    }
+}
+
+struct FaultState {
+    cfg: FaultConfig,
+    ops: AtomicU64,
+    crashed: AtomicBool,
+    rng: Mutex<Rng>,
+}
+
+impl FaultState {
+    /// Account one op; decide its fate. `Ok(())` means proceed normally.
+    fn gate(&self) -> Result<()> {
+        if self.crashed.load(Ordering::Acquire) {
+            return Err(FsError::InjectedFault("crashed".into()));
+        }
+        let n = self.ops.fetch_add(1, Ordering::Relaxed) + 1;
+        if let Some(limit) = self.cfg.fail_after_ops {
+            if n > limit {
+                self.crashed.store(true, Ordering::Release);
+                return Err(FsError::InjectedFault("crashed".into()));
+            }
+        }
+        if self.cfg.transient_error_rate > 0.0
+            && self.rng.lock().unwrap().bool(self.cfg.transient_error_rate)
+        {
+            return Err(FsError::InjectedFault("transient io error".into()));
+        }
+        Ok(())
+    }
+
+    /// For a failing write: how many bytes of `len` still hit the disk.
+    fn torn_prefix(&self, len: usize) -> usize {
+        self.rng.lock().unwrap().below(len as u64 + 1) as usize
+    }
+}
+
+/// Seeded fault-injecting filesystem (see module docs).
+pub struct FaultFs {
+    inner: RealFs,
+    st: Arc<FaultState>,
+}
+
+impl FaultFs {
+    pub fn new(cfg: FaultConfig) -> Arc<FaultFs> {
+        let rng = Rng::new(cfg.seed);
+        Arc::new(FaultFs {
+            inner: RealFs,
+            st: Arc::new(FaultState {
+                cfg,
+                ops: AtomicU64::new(0),
+                crashed: AtomicBool::new(false),
+                rng: Mutex::new(rng),
+            }),
+        })
+    }
+
+    /// Has the injected crash point been hit?
+    pub fn crashed(&self) -> bool {
+        self.st.crashed.load(Ordering::Acquire)
+    }
+
+    /// Filesystem ops performed so far (for sizing crash-point sweeps).
+    pub fn ops(&self) -> u64 {
+        self.st.ops.load(Ordering::Relaxed)
+    }
+}
+
+struct FaultFile {
+    inner: Box<dyn VfsFile>,
+    st: Arc<FaultState>,
+}
+
+impl VfsFile for FaultFile {
+    fn append(&mut self, buf: &[u8]) -> Result<()> {
+        match self.st.gate() {
+            Ok(()) => {
+                // An un-crashed op may still tear independently.
+                if self.st.cfg.torn_write_rate > 0.0
+                    && self.st.rng.lock().unwrap().bool(self.st.cfg.torn_write_rate)
+                {
+                    let keep = self.st.torn_prefix(buf.len());
+                    let _ = self.inner.append(&buf[..keep]);
+                    return Err(FsError::InjectedFault("torn write".into()));
+                }
+                self.inner.append(buf)
+            }
+            Err(e) => {
+                // A crashing write may leave a torn prefix on disk first.
+                if matches!(&e, FsError::InjectedFault(s) if s == "crashed") {
+                    let keep = self.st.torn_prefix(buf.len());
+                    if keep > 0 {
+                        let _ = self.inner.append(&buf[..keep]);
+                        let _ = self.inner.sync();
+                    }
+                }
+                Err(e)
+            }
+        }
+    }
+
+    fn sync(&mut self) -> Result<()> {
+        self.st.gate()?;
+        self.inner.sync()
+    }
+}
+
+impl Vfs for FaultFs {
+    fn create(&self, path: &Path) -> Result<Box<dyn VfsFile>> {
+        self.st.gate()?;
+        let inner = self.inner.create(path)?;
+        Ok(Box::new(FaultFile { inner, st: self.st.clone() }))
+    }
+    fn open_append(&self, path: &Path) -> Result<Box<dyn VfsFile>> {
+        self.st.gate()?;
+        let inner = self.inner.open_append(path)?;
+        Ok(Box::new(FaultFile { inner, st: self.st.clone() }))
+    }
+    fn read(&self, path: &Path) -> Result<Vec<u8>> {
+        self.st.gate()?;
+        self.inner.read(path)
+    }
+    fn rename(&self, from: &Path, to: &Path) -> Result<()> {
+        // A crashing rename simply does not happen (rename is atomic).
+        self.st.gate()?;
+        self.inner.rename(from, to)
+    }
+    fn remove(&self, path: &Path) -> Result<()> {
+        self.st.gate()?;
+        self.inner.remove(path)
+    }
+    fn list(&self, dir: &Path) -> Result<Vec<PathBuf>> {
+        self.st.gate()?;
+        self.inner.list(dir)
+    }
+    fn sync_dir(&self, dir: &Path) -> Result<()> {
+        self.st.gate()?;
+        self.inner.sync_dir(dir)
+    }
+    fn exists(&self, path: &Path) -> bool {
+        // Existence probes don't mutate state; no fault accounting, so
+        // crash-point sweeps step over write ops, not read probes.
+        self.inner.exists(path)
+    }
+    fn create_dir_all(&self, dir: &Path) -> Result<()> {
+        self.st.gate()?;
+        self.inner.create_dir_all(dir)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::testkit::TempDir;
+
+    #[test]
+    fn crash_point_fails_everything_after() {
+        let dir = TempDir::new("faultfs");
+        let fs = FaultFs::new(FaultConfig { seed: 1, fail_after_ops: Some(2), ..Default::default() });
+        let mut f = fs.create(&dir.file("a")).unwrap(); // op 1
+        f.append(b"ok").unwrap(); // op 2
+        assert!(f.append(b"boom").is_err(), "op past the crash point fails");
+        assert!(fs.crashed());
+        assert!(fs.read(&dir.file("a")).is_err(), "crashed fs stays down");
+        // The prefix written before the crash is real on-disk state.
+        let bytes = std::fs::read(dir.file("a")).unwrap();
+        assert!(bytes.starts_with(b"ok"), "pre-crash write survives: {bytes:?}");
+    }
+
+    #[test]
+    fn transient_errors_are_retryable() {
+        let dir = TempDir::new("faultfs-tr");
+        let fs = FaultFs::new(FaultConfig {
+            seed: 7,
+            transient_error_rate: 0.5,
+            ..Default::default()
+        });
+        let path = dir.file("b");
+        let out = crate::util::backoff::retry(&crate::util::backoff::Backoff::immediate(64), || {
+            let mut f = fs.create(&path)?;
+            f.append(b"payload")?;
+            f.sync()?;
+            Ok(())
+        });
+        out.unwrap();
+        assert!(!fs.crashed(), "transient errors never crash the fs");
+        assert_eq!(std::fs::read(&path).unwrap(), b"payload");
+    }
+
+    #[test]
+    fn torn_write_persists_a_strict_prefix() {
+        let dir = TempDir::new("faultfs-torn");
+        // torn_write_rate = 1: every append tears.
+        let fs = FaultFs::new(FaultConfig { seed: 3, torn_write_rate: 1.0, ..Default::default() });
+        let path = dir.file("c");
+        let mut f = fs.create(&path).unwrap();
+        assert!(f.append(b"0123456789").is_err());
+        let bytes = std::fs::read(&path).unwrap();
+        assert!(bytes.len() <= 10, "at most the buffer persists");
+        assert_eq!(&bytes[..], &b"0123456789"[..bytes.len()], "persisted bytes are a prefix");
+    }
+
+    #[test]
+    fn deterministic_for_seed() {
+        // Same seed + same op sequence → same failure schedule.
+        let run = |seed: u64| {
+            let dir = TempDir::new("faultfs-det");
+            let fs =
+                FaultFs::new(FaultConfig { seed, transient_error_rate: 0.3, ..Default::default() });
+            (0..32)
+                .map(|i| {
+                    let r = fs
+                        .create(&dir.file(&format!("f{i}")))
+                        .and_then(|mut f| f.append(b"x"));
+                    r.is_ok()
+                })
+                .collect::<Vec<bool>>()
+        };
+        assert_eq!(run(11), run(11));
+        assert_ne!(run(11), run(12), "different seeds give different schedules");
+    }
+}

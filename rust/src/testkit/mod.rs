@@ -1,6 +1,7 @@
 //! Test support: a small property-testing framework (proptest is not
 //! available offline), an RAII temp-dir guard, and shared fixtures.
 
+pub mod faultfs;
 pub mod prop;
 
 pub use prop::{forall, Gen};

@@ -24,6 +24,11 @@ pub enum FsError {
     Dsl(String),
     InjectedFault(String),
     Overloaded { resource: String, reason: String },
+    /// On-disk state failed validation (bad magic, checksum mismatch,
+    /// torn record in a sealed fragment). Never transient: retrying the
+    /// read returns the same bytes — recovery must fall back to an older
+    /// manifest generation or fail closed.
+    Corrupt(String),
     Other(String),
 }
 
@@ -54,6 +59,7 @@ impl fmt::Display for FsError {
             FsError::Overloaded { resource, reason } => {
                 write!(f, "overloaded: {resource} shed request ({reason})")
             }
+            FsError::Corrupt(s) => write!(f, "corrupt store state: {s}"),
             FsError::Other(s) => write!(f, "{s}"),
         }
     }
@@ -103,6 +109,14 @@ mod tests {
         // Shed load must bounce to the caller's backoff, never a hot retry.
         assert!(!FsError::Overloaded { resource: "serving".into(), reason: "q".into() }
             .is_transient());
+        // Corruption is deterministic: a retry reads the same bad bytes.
+        assert!(!FsError::Corrupt("checksum mismatch".into()).is_transient());
+    }
+
+    #[test]
+    fn corrupt_renders_prefix() {
+        let e = FsError::Corrupt("fragment frame 3 checksum".into());
+        assert!(e.to_string().starts_with("corrupt store state:"), "{e}");
     }
 
     #[test]

@@ -1,0 +1,114 @@
+//! Bounded retry with exponential backoff for transient I/O errors.
+//!
+//! The durable storage layer runs over real disks (and, in tests, a
+//! fault-injecting filesystem), so drivers must treat a transient error
+//! — `FsError::is_transient()` — as retryable rather than fatal: a GC
+//! pass that hits one flaky unlink should not kill the driver thread,
+//! and a fragment-roll manifest commit should ride out a momentary I/O
+//! hiccup instead of leaving an oversized active fragment forever.
+//!
+//! This is deliberately distinct from `exec::retry`'s virtual-clock
+//! scheduler retries: storage retries happen on real driver threads
+//! against a real filesystem, so they sleep real wall-clock time.
+//! Non-transient errors (corruption, invalid argument, overload) are
+//! returned immediately — retrying them re-reads the same bad state.
+
+use std::time::Duration;
+
+use crate::types::Result;
+
+/// Retry policy: at most `max_attempts` tries, sleeping `base`
+/// (doubling up to `max`) between them.
+#[derive(Debug, Clone)]
+pub struct Backoff {
+    pub max_attempts: u32,
+    pub base: Duration,
+    pub max: Duration,
+}
+
+impl Default for Backoff {
+    fn default() -> Self {
+        Backoff {
+            max_attempts: 5,
+            base: Duration::from_millis(10),
+            max: Duration::from_millis(500),
+        }
+    }
+}
+
+impl Backoff {
+    /// A policy that never sleeps (unit tests: deterministic, fast).
+    pub fn immediate(max_attempts: u32) -> Backoff {
+        Backoff { max_attempts, base: Duration::ZERO, max: Duration::ZERO }
+    }
+}
+
+/// Run `op`, retrying transient failures per `policy`. Returns the
+/// first success, the first non-transient error, or the last transient
+/// error once attempts are exhausted.
+pub fn retry<T>(policy: &Backoff, mut op: impl FnMut() -> Result<T>) -> Result<T> {
+    let mut delay = policy.base;
+    let mut attempt = 0u32;
+    loop {
+        attempt += 1;
+        match op() {
+            Ok(v) => return Ok(v),
+            Err(e) if e.is_transient() && attempt < policy.max_attempts.max(1) => {
+                if !delay.is_zero() {
+                    std::thread::sleep(delay);
+                }
+                delay = delay.saturating_mul(2).min(policy.max);
+            }
+            Err(e) => return Err(e),
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::types::FsError;
+    use std::sync::atomic::{AtomicU32, Ordering};
+
+    #[test]
+    fn succeeds_after_transient_failures() {
+        let calls = AtomicU32::new(0);
+        let out = retry(&Backoff::immediate(5), || {
+            if calls.fetch_add(1, Ordering::Relaxed) < 3 {
+                Err(FsError::InjectedFault("flaky".into()))
+            } else {
+                Ok(42)
+            }
+        });
+        assert_eq!(out.unwrap(), 42);
+        assert_eq!(calls.load(Ordering::Relaxed), 4);
+    }
+
+    #[test]
+    fn exhausts_attempts_on_persistent_transient_error() {
+        let calls = AtomicU32::new(0);
+        let out: Result<()> = retry(&Backoff::immediate(3), || {
+            calls.fetch_add(1, Ordering::Relaxed);
+            Err(FsError::InjectedFault("down".into()))
+        });
+        assert!(matches!(out, Err(FsError::InjectedFault(_))));
+        assert_eq!(calls.load(Ordering::Relaxed), 3, "bounded, not infinite");
+    }
+
+    #[test]
+    fn non_transient_errors_return_immediately() {
+        let calls = AtomicU32::new(0);
+        let out: Result<()> = retry(&Backoff::immediate(5), || {
+            calls.fetch_add(1, Ordering::Relaxed);
+            Err(FsError::Corrupt("bad magic".into()))
+        });
+        assert!(matches!(out, Err(FsError::Corrupt(_))));
+        assert_eq!(calls.load(Ordering::Relaxed), 1, "corruption is not retried");
+    }
+
+    #[test]
+    fn first_success_short_circuits() {
+        let out = retry(&Backoff::immediate(5), || Ok(7));
+        assert_eq!(out.unwrap(), 7);
+    }
+}

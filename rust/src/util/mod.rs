@@ -5,6 +5,7 @@
 //! hdrhistogram, env_logger) are replaced by these small in-tree
 //! implementations (see DESIGN.md §5).
 
+pub mod backoff;
 pub mod hist;
 pub mod json;
 pub mod rng;

@@ -77,10 +77,10 @@ fn driver_applied_replicas_converge_to_home_state() {
             })
             .collect();
         home.merge(table, &recs, now);
-        fabric.append(table, &recs, now);
+        fabric.append(table, &recs, now).unwrap();
         if rng.below(4) == 0 {
             // At-least-once delivery: the same batch appended twice.
-            fabric.append(table, &recs, now);
+            fabric.append(table, &recs, now).unwrap();
         }
         clock.set(now);
     }
@@ -118,7 +118,7 @@ fn blocked_region_does_not_stall_another_regions_apply() {
         None,
     );
     for i in 0..5 {
-        fabric.append("t", &[rec(i, i as i64, i as i64 + 1, 1.0)], 0);
+        fabric.append("t", &[rec(i, i as i64, i as i64 + 1, 1.0)], 0).unwrap();
     }
     // Hold the slow region's cursor lock (a region stuck mid-merge) and
     // apply the fast region from under it. The pre-fabric LogTailer held
@@ -152,7 +152,7 @@ fn parallel_pump_converges_fast_region_while_slow_region_is_blocked() {
         None,
     );
     for i in 0..5u64 {
-        fabric.append("t", &[rec(i, i as i64, i as i64 + 1, 1.0)], 0);
+        fabric.append("t", &[rec(i, i as i64, i as i64 + 1, 1.0)], 0).unwrap();
     }
     let pump = fabric.while_region_locked("slow", || {
         let f2 = fabric.clone();
@@ -204,7 +204,7 @@ fn read_your_writes_never_returns_pre_token_state() {
         // is always the most recent write.
         let r = rec(e, i, i + 1, i as f32);
         home.merge("t", &[r.clone()], now);
-        let token = fabric.append("t", &[r], now);
+        let token = fabric.append("t", &[r], now).unwrap();
         // Arbitrary pump interleavings: sometimes nothing, sometimes a
         // partial prefix, sometimes fully caught up.
         if rng.below(3) == 0 {
@@ -353,7 +353,7 @@ fn failover_under_replication_loses_no_acked_write() {
             vec![rec(i as u64 % 7, i * 10, i * 10 + 1, i as f32), rec((i as u64 + 3) % 7, i * 10 + 2, i * 10 + 3, -i as f32)];
         offline.merge(table, &batch);
         home.merge(table, &batch, i);
-        fabric.append(table, &batch, i);
+        fabric.append(table, &batch, i).unwrap();
         acked.extend(batch);
         if i == 15 {
             // The periodic HA checkpoint — 24 batches post-date it.
@@ -407,7 +407,7 @@ fn failover_under_replication_loses_no_acked_write() {
     // onward to the survivor and the staleness gauges drain to zero.
     let nf = promoted.fabric.as_ref().unwrap();
     assert_eq!(nf.regions(), vec!["westeurope"]);
-    nf.append(table, &[rec(99, 1_000, 1_001, 42.0)], clock.now());
+    nf.append(table, &[rec(99, 1_000, 1_001, 42.0)], clock.now()).unwrap();
     clock.advance(60); // past the survivor's lag
     let deadline = std::time::Instant::now() + Duration::from_secs(10);
     while (nf.backlog("westeurope") > 0
@@ -465,7 +465,7 @@ fn truncation_respects_checkpoint_floor_across_crash_restore() {
     let a = vec![rec(1, 10, 11, 1.0), rec(2, 12, 13, 2.0)];
     offline.merge(table, &a);
     home.merge(table, &a, 10);
-    fabric.append(table, &a, 10);
+    fabric.append(table, &a, 10).unwrap();
     fabric.pump(20);
     let cp = fm.checkpoint("eastus", &sched(20), &offline, dir.path().to_path_buf(), 20).unwrap();
     fabric.record_checkpoint();
@@ -474,7 +474,7 @@ fn truncation_respects_checkpoint_floor_across_crash_restore() {
     let b = vec![rec(7, 30, 31, 7.5)];
     offline.merge(table, &b);
     home.merge(table, &b, 30);
-    fabric.append(table, &b, 30);
+    fabric.append(table, &b, 30).unwrap();
     fabric.pump(40);
     assert_eq!(fabric.backlog("westus"), 0, "B fully applied before truncation");
 

@@ -266,7 +266,7 @@ fn crash_resume_from_checkpoint_is_exactly_once() {
     let ref_deps = standalone_deps(ref_clock.clone());
     let (ref_offline, ref_online) = (ref_deps.offline.clone(), ref_deps.online.clone());
     let reference = StreamIngestor::new(spec(3), cfg.clone(), ref_deps).unwrap();
-    reference.ingest(&events);
+    reference.ingest(&events).unwrap();
     ref_clock.set(44 * HOUR);
     reference.drain().unwrap();
 
@@ -285,7 +285,7 @@ fn crash_resume_from_checkpoint_is_exactly_once() {
     let log = engine1.log().clone();
 
     let (half, rest) = events.split_at(events.len() / 2);
-    engine1.ingest(half);
+    engine1.ingest(half).unwrap();
     engine1.poll().unwrap();
     // Commit a checkpoint (flush barrier), then do MORE uncommitted work
     // before the crash — that work must be replayed on resume, neither
@@ -298,7 +298,7 @@ fn crash_resume_from_checkpoint_is_exactly_once() {
     let path = dir.file("offsets.json");
     ckpt.persist(&path).unwrap();
     let (uncommitted, after_crash) = rest.split_at(rest.len() / 2);
-    engine1.ingest(uncommitted);
+    engine1.ingest(uncommitted).unwrap();
     clock.set(41 * HOUR);
     engine1.poll().unwrap();
     drop(engine1); // crash: in-memory pipeline state gone; log + sinks survive
@@ -324,7 +324,7 @@ fn crash_resume_from_checkpoint_is_exactly_once() {
     // The checkpoint really skips committed work: consumers resume at
     // the committed offsets, not 0.
     assert!(committed_total > 0, "first half must have committed something");
-    engine2.ingest(after_crash);
+    engine2.ingest(after_crash).unwrap();
     clock.set(44 * HOUR);
     engine2.drain().unwrap();
 
@@ -404,7 +404,7 @@ fn watermark_never_leaks_unfinalized_data() {
     let events = gen_events(&mut rng, 200, 5, 30);
     let mut late_seen = 0;
     for chunk in events.chunks(17) {
-        ing.ingest(chunk);
+        ing.ingest(chunk).unwrap();
         let stats = ing.poll().unwrap();
         late_seen = stats.pipeline.late;
         if let Some(wm) = stats.watermark {
