@@ -1,11 +1,18 @@
 //! Experiment E-DUR: the price of durability and the speed of recovery.
 //!
-//! Three claims from the crash-safe durability layer (ISSUE 9):
+//! Four claims from the crash-safe durability layer (ISSUE 9 + 10):
 //!
 //! * **append overhead** — a durable WAL append with per-frame fsync
 //!   (the ack point) vs fsync-off vs the RAM-only partitioned log the
 //!   read path is built on. The fsync number is the real cost of the
 //!   "acked ⇒ survives a crash" guarantee.
+//! * **group commit amortizes the ack** — an appender-concurrency ×
+//!   sync-policy grid (1/4/16 threads × PerAppend / GroupCommit{0} /
+//!   GroupCommit{500µs}) reports throughput, ack p50/p99, and the mean
+//!   group size (appends per completed sync). Under contention the
+//!   leader/follower protocol turns N per-frame fsyncs into one
+//!   covering sync without weakening the ack: every cell ends with a
+//!   recovery-equivalence guard proving all acked records reopen.
 //! * **recovery is tail-proportional** — reopening a store replays the
 //!   newest valid manifest plus the WAL tail above the checkpointed
 //!   floors; time scales with the tail since the last checkpoint, not
@@ -20,9 +27,12 @@
 
 use std::path::{Path, PathBuf};
 use std::sync::Arc;
+use std::time::Instant;
 
 use geofs::benchkit::{fmt_ns, fmt_rate, Bencher, Measurement, Table};
-use geofs::storage::{DurableLogOptions, DurableStore, RealFs};
+use geofs::monitor::metrics::MetricsRegistry;
+use geofs::monitor::names;
+use geofs::storage::{DurableLogOptions, DurableStore, RealFs, SyncPolicy};
 use geofs::stream::{PartitionedLog, StreamEvent};
 use geofs::testkit::TempDir;
 use geofs::util::json::Json;
@@ -35,12 +45,8 @@ fn open_store(dir: &Path) -> Arc<DurableStore> {
     DurableStore::open(Arc::new(RealFs), dir, 0).unwrap()
 }
 
-fn wal_opts(fsync: bool) -> DurableLogOptions {
-    DurableLogOptions {
-        fragment_max_bytes: 64 << 10,
-        fsync_every_append: fsync,
-        ..Default::default()
-    }
+fn wal_opts(sync: SyncPolicy) -> DurableLogOptions {
+    DurableLogOptions { fragment_max_bytes: 64 << 10, sync, ..Default::default() }
 }
 
 /// Append `total` records, then (if `tail < total`) advance the
@@ -50,7 +56,7 @@ fn wal_opts(fsync: bool) -> DurableLogOptions {
 /// GC live set so the reclaimed fragments are really gone.
 fn build_tail(dir: &Path, total: u64, tail: u64) {
     let store = open_store(dir);
-    let log = store.open_log::<StreamEvent>("bench", 1, wal_opts(false)).unwrap();
+    let log = store.open_log::<StreamEvent>("bench", 1, wal_opts(SyncPolicy::OsManaged)).unwrap();
     for i in 0..total {
         log.append(0, ev(i)).unwrap();
     }
@@ -66,8 +72,91 @@ fn build_tail(dir: &Path, total: u64, tail: u64) {
 /// One full recovery: root the newest manifest, replay the WAL tail.
 fn recover(dir: &Path) -> u64 {
     let store = open_store(dir);
-    let log = store.open_log::<StreamEvent>("bench", 1, wal_opts(false)).unwrap();
+    let log = store.open_log::<StreamEvent>("bench", 1, wal_opts(SyncPolicy::OsManaged)).unwrap();
     log.mem().high_water(0)
+}
+
+/// One cell of the appender-concurrency × sync-policy grid: `threads`
+/// appenders over one fresh single-partition durable log, each timing
+/// its own acks. Group size comes from the WAL's own `wal_sync_total`
+/// counter (appends ÷ completed syncs). Ends with the
+/// recovery-equivalence guard: a clean reopen must surface every acked
+/// record, whichever policy produced it.
+struct GridCell {
+    threads: usize,
+    policy: &'static str,
+    total: u64,
+    syncs: u64,
+    wall_s: f64,
+    ack_p50_ns: u64,
+    ack_p99_ns: u64,
+}
+
+impl GridCell {
+    fn throughput(&self) -> f64 {
+        self.total as f64 / self.wall_s.max(1e-9)
+    }
+
+    fn mean_group(&self) -> f64 {
+        self.total as f64 / self.syncs.max(1) as f64
+    }
+}
+
+fn run_grid_cell(
+    threads: usize,
+    policy: SyncPolicy,
+    policy_label: &'static str,
+    per_thread: u64,
+) -> GridCell {
+    let dir = TempDir::new("bench-dur-grid");
+    let metrics = Arc::new(MetricsRegistry::new());
+    let store = open_store(dir.path());
+    let mut opts = wal_opts(policy);
+    opts.metrics = Some(metrics.clone());
+    let log = store.open_log::<StreamEvent>("bench", 1, opts).unwrap();
+
+    let start = Instant::now();
+    let mut lats: Vec<u64> = std::thread::scope(|s| {
+        let handles: Vec<_> = (0..threads)
+            .map(|t| {
+                let log = &log;
+                s.spawn(move || {
+                    let mut lats = Vec::with_capacity(per_thread as usize);
+                    for i in 0..per_thread {
+                        let seq = t as u64 * 1_000_000 + i;
+                        let t0 = Instant::now();
+                        log.append(0, ev(seq)).unwrap();
+                        lats.push(t0.elapsed().as_nanos() as u64);
+                    }
+                    lats
+                })
+            })
+            .collect();
+        handles.into_iter().flat_map(|h| h.join().unwrap()).collect()
+    });
+    let wall_s = start.elapsed().as_secs_f64();
+    lats.sort_unstable();
+    let total = lats.len() as u64;
+    let q = |f: f64| lats[((lats.len() - 1) as f64 * f) as usize];
+    let cell = GridCell {
+        threads,
+        policy: policy_label,
+        total,
+        syncs: metrics.counter(names::WAL_SYNC_TOTAL),
+        wall_s,
+        ack_p50_ns: q(0.50),
+        ack_p99_ns: q(0.99),
+    };
+
+    drop(log);
+    drop(store);
+    assert_eq!(
+        recover(dir.path()),
+        total,
+        "recovery-equivalence: every acked append must survive a clean reopen \
+         ({threads} threads, {policy_label})"
+    );
+    cell
 }
 
 fn m_json(m: &Measurement) -> Json {
@@ -96,7 +185,8 @@ fn main() {
 
     let dir_nosync = TempDir::new("bench-dur-nosync");
     let store_nosync = open_store(dir_nosync.path());
-    let log_nosync = store_nosync.open_log::<StreamEvent>("bench", 1, wal_opts(false)).unwrap();
+    let log_nosync =
+        store_nosync.open_log::<StreamEvent>("bench", 1, wal_opts(SyncPolicy::OsManaged)).unwrap();
     let mut seq_ns = 0u64;
     let m_nosync = b.run("append wal fsync=off", 1.0, || {
         seq_ns += 1;
@@ -105,12 +195,34 @@ fn main() {
 
     let dir_sync = TempDir::new("bench-dur-sync");
     let store_sync = open_store(dir_sync.path());
-    let log_sync = store_sync.open_log::<StreamEvent>("bench", 1, wal_opts(true)).unwrap();
+    let log_sync =
+        store_sync.open_log::<StreamEvent>("bench", 1, wal_opts(SyncPolicy::PerAppend)).unwrap();
     let mut seq_s = 0u64;
     let m_sync = b.run("append wal fsync=on (ack)", 1.0, || {
         seq_s += 1;
         log_sync.append(0, ev(seq_s)).unwrap()
     });
+
+    // --- appender-concurrency × sync-policy grid: how far group
+    // commit amortizes the per-ack fsync as contention grows. Each
+    // cell is a fresh store; GroupCommit{0} coalesces only what piles
+    // up naturally behind the leader, GroupCommit{500µs} lets the
+    // leader wait out stragglers for bigger groups at higher ack p50.
+    let per_thread = if fast { 64u64 } else { 512u64 };
+    let policies: [(SyncPolicy, &str); 3] = [
+        (SyncPolicy::PerAppend, "per_append"),
+        (SyncPolicy::GroupCommit { max_delay_us: 0, max_batch: 0 }, "group_commit(delay=0)"),
+        (
+            SyncPolicy::GroupCommit { max_delay_us: 500, max_batch: 64 },
+            "group_commit(delay=500us)",
+        ),
+    ];
+    let mut grid: Vec<GridCell> = Vec::new();
+    for threads in [1usize, 4, 16] {
+        for (policy, label) in policies {
+            grid.push(run_grid_cell(threads, policy, label, per_thread));
+        }
+    }
 
     // --- recovery: full tail vs checkpoint-truncated tail over the
     // same total history. The first reopen seals the crashed active
@@ -154,6 +266,23 @@ fn main() {
     t.latency_row(&m_ckpt);
     t.print();
 
+    let mut g = Table::new(
+        "E-DUR grid — appender threads × sync policy (per-thread appends × acks)",
+        &["threads", "policy", "throughput", "ack p50", "ack p99", "mean group", "syncs"],
+    );
+    for c in &grid {
+        g.row(&[
+            c.threads.to_string(),
+            c.policy.to_string(),
+            fmt_rate(c.throughput()),
+            fmt_ns(c.ack_p50_ns as f64),
+            fmt_ns(c.ack_p99_ns as f64),
+            format!("{:.1}", c.mean_group()),
+            c.syncs.to_string(),
+        ]);
+    }
+    g.print();
+
     let fsync_penalty = m_sync.mean_ns() / m_ram.mean_ns().max(1.0);
     let tail_speedup = m_rec_full.mean_ns() / m_rec_tail.mean_ns().max(1.0);
     println!(
@@ -172,6 +301,35 @@ fn main() {
     );
     println!("checkpoint commit: {} per generation", fmt_ns(m_ckpt.mean_ns()));
 
+    // Headline amortization: group commit vs per-append fsync at the
+    // highest contention level in the grid.
+    let cell = |threads: usize, policy: &str| {
+        grid.iter().find(|c| c.threads == threads && c.policy == policy).unwrap()
+    };
+    let gc16 = cell(16, "group_commit(delay=0)");
+    let pa16 = cell(16, "per_append");
+    let coalesce_x = gc16.throughput() / pa16.throughput().max(1e-9);
+    println!(
+        "group commit @16 threads: {} vs per-append {} (×{:.1}), mean group {:.1} frames/sync",
+        fmt_rate(gc16.throughput()),
+        fmt_rate(pa16.throughput()),
+        coalesce_x,
+        gc16.mean_group(),
+    );
+
+    let g_json = |c: &GridCell| {
+        Json::obj(vec![
+            ("threads", Json::num(c.threads as f64)),
+            ("policy", Json::str(c.policy)),
+            ("appends", Json::num(c.total as f64)),
+            ("throughput_per_s", Json::num(c.throughput())),
+            ("ack_p50_ns", Json::num(c.ack_p50_ns as f64)),
+            ("ack_p99_ns", Json::num(c.ack_p99_ns as f64)),
+            ("syncs", Json::num(c.syncs as f64)),
+            ("mean_group_size", Json::num(c.mean_group())),
+        ])
+    };
+
     let doc = Json::obj(vec![
         ("experiment", Json::str("E-DUR")),
         ("fast", Json::num(u8::from(fast))),
@@ -179,6 +337,8 @@ fn main() {
         ("tail_records", Json::num(tail as f64)),
         ("fsync_penalty_x", Json::num(fsync_penalty)),
         ("tail_recovery_speedup_x", Json::num(tail_speedup)),
+        ("group_commit_coalesce_x", Json::num(coalesce_x)),
+        ("grid", Json::Arr(grid.iter().map(g_json).collect())),
         (
             "measurements",
             Json::Arr(vec![

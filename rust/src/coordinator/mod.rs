@@ -37,7 +37,7 @@ use crate::serving::router::{RouteTable, ServingRouter};
 use crate::serving::service::OnlineServing;
 use crate::source::SourceConnector;
 use crate::storage::{
-    DurableLog, DurableLogOptions, DurableStore, GcDriver, SegmentRef, Vfs,
+    DurableLog, DurableLogOptions, DurableStore, GcDriver, SegmentRef, SyncPolicy, Vfs,
 };
 use crate::stream::{
     CheckpointStore, EventLog, StreamConfig, StreamDeps, StreamEvent, StreamIngestor, StreamStats,
@@ -61,10 +61,11 @@ pub struct DurabilityOptions {
     pub fs: Arc<dyn Vfs>,
     /// Roll the active WAL fragment once it exceeds this size.
     pub fragment_max_bytes: u64,
-    /// fsync every appended frame (the durability ack point). Turning
-    /// it off trades the ack guarantee for throughput (E-DUR measures
-    /// both sides).
-    pub fsync_every_append: bool,
+    /// The WAL ack protocol: per-frame fsync (default), group commit
+    /// (one fsync covers a whole staged batch — amortized ack, same
+    /// guarantee), or OS-managed flushing (no guarantee). E-DUR
+    /// measures the trade.
+    pub sync: SyncPolicy,
     /// Background snapshot-GC period; `None` leaves collection to
     /// explicit [`FeatureStore::gc_storage`] calls (deterministic
     /// tests drive passes by hand).
@@ -79,7 +80,7 @@ impl DurabilityOptions {
             dir: dir.into(),
             fs: Arc::new(crate::storage::RealFs),
             fragment_max_bytes: defaults.fragment_max_bytes,
-            fsync_every_append: defaults.fsync_every_append,
+            sync: defaults.sync,
             gc_period: None,
         }
     }
@@ -87,7 +88,7 @@ impl DurabilityOptions {
     fn log_opts(&self) -> DurableLogOptions {
         DurableLogOptions {
             fragment_max_bytes: self.fragment_max_bytes,
-            fsync_every_append: self.fsync_every_append,
+            sync: self.sync,
             ..Default::default()
         }
     }
@@ -98,7 +99,7 @@ impl std::fmt::Debug for DurabilityOptions {
         f.debug_struct("DurabilityOptions")
             .field("dir", &self.dir)
             .field("fragment_max_bytes", &self.fragment_max_bytes)
-            .field("fsync_every_append", &self.fsync_every_append)
+            .field("sync", &self.sync)
             .field("gc_period", &self.gc_period)
             .finish_non_exhaustive()
     }
@@ -296,7 +297,10 @@ impl FeatureStore {
                 .collect();
             let f = match (&durable, &opts.durability) {
                 (Some(store), Some(d)) => {
-                    let log = store.open_log::<ReplBatch>("fabric", 4, d.log_opts())?;
+                    let mut lo = d.log_opts();
+                    lo.metrics = Some(metrics.clone());
+                    lo.recovery_pool = Some(pool.clone());
+                    let log = store.open_log::<ReplBatch>("fabric", 4, lo)?;
                     let f = ReplicationFabric::new_durable(log, replicas, Some(metrics.clone()));
                     if let Some(m) = &manifest {
                         // Recovered positions: per-region apply cursors
@@ -625,10 +629,13 @@ impl FeatureStore {
                     match logs.get(table) {
                         Some(l) => l.clone(),
                         None => {
+                            let mut lo = d.log_opts();
+                            lo.metrics = Some(self.metrics.clone());
+                            lo.recovery_pool = Some(self.pool.clone());
                             let l = store.open_log::<StreamEvent>(
                                 &format!("stream/{table}"),
                                 cfg.partitions,
-                                d.log_opts(),
+                                lo,
                             )?;
                             logs.insert(table.to_string(), l.clone());
                             l

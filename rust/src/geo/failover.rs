@@ -31,6 +31,7 @@ use std::sync::Arc;
 
 use super::replication::{ReplicationDriver, ReplicationFabric};
 use super::topology::GeoTopology;
+use crate::exec::ThreadPool;
 use crate::materialize::bootstrap_offline_to_online;
 use crate::monitor::metrics::MetricsRegistry;
 use crate::offline_store::{CompactionDriver, OfflineStore};
@@ -118,6 +119,7 @@ impl FailoverManager {
             None,
             Clock::fixed(now),
             None,
+            None,
         )
     }
 
@@ -135,6 +137,13 @@ impl FailoverManager {
     /// gauging through `metrics`), and the retained log is forwarded
     /// into it so survivors whose cursors trailed the promoted region's
     /// also converge on every acked write.
+    ///
+    /// With a `pool`, the per-partition log replay fans out across it —
+    /// the replay is the dominant cost of a failover on a deep log, and
+    /// partitions are independent (replay order matters only *within*
+    /// one; all three sinks absorb cross-partition interleavings
+    /// idempotently, which is exactly what
+    /// `parallel_fabric_replay_is_equivalent_to_sequential` pins).
     #[allow(clippy::too_many_arguments)]
     pub fn failover_with(
         &self,
@@ -145,6 +154,7 @@ impl FailoverManager {
         fabric: Option<&Arc<ReplicationFabric>>,
         clock: Clock,
         metrics: Option<Arc<MetricsRegistry>>,
+        pool: Option<&Arc<ThreadPool>>,
     ) -> Result<PromotedRegion> {
         if self.topology.is_up(&checkpoint.region) {
             log::warn!("failover requested while '{}' is up", checkpoint.region);
@@ -196,32 +206,46 @@ impl FailoverManager {
         let mut replayed = 0u64;
         if let Some(f) = fabric {
             let cursors = f.cursors(&standby);
-            for p in 0..f.partitions() {
-                let mut cur = 0u64;
-                loop {
-                    let entries = f.read_tail(p, cur, 256);
-                    if entries.is_empty() {
-                        break;
-                    }
-                    for (off, batch) in entries {
-                        offline.merge(&batch.table, &batch.records);
-                        if off >= cursors[p] {
-                            online.merge(&batch.table, &batch.records, now);
-                            replayed += batch.records.len() as u64;
-                        }
-                        if let Some(nf) = &new_fabric {
-                            // The new fabric is RAM-backed here, but the
-                            // append surface is fallible (durable
-                            // backings exist): transient errors retry,
-                            // persistent ones abort the failover before
-                            // promotion claims convergence.
-                            retry(&Backoff::default(), || {
-                                nf.append_shared(&batch.table, batch.records.clone(), now)
-                            })?;
-                        }
-                        cur = off + 1;
-                    }
+            let counts: Vec<Result<u64>> = match pool {
+                Some(pool) if f.partitions() > 1 => {
+                    let handles: Vec<_> = (0..f.partitions())
+                        .map(|p| {
+                            let f = f.clone();
+                            let offline = offline.clone();
+                            let online = online.clone();
+                            let nf = new_fabric.clone();
+                            let cursor = cursors[p];
+                            pool.submit(move || {
+                                replay_fabric_partition(
+                                    &f,
+                                    p,
+                                    cursor,
+                                    &offline,
+                                    &online,
+                                    nf.as_ref(),
+                                    now,
+                                )
+                            })
+                        })
+                        .collect();
+                    handles.into_iter().map(|h| h.join()).collect()
                 }
+                _ => (0..f.partitions())
+                    .map(|p| {
+                        replay_fabric_partition(
+                            f,
+                            p,
+                            cursors[p],
+                            &offline,
+                            &online,
+                            new_fabric.as_ref(),
+                            now,
+                        )
+                    })
+                    .collect(),
+            };
+            for c in counts {
+                replayed += c?;
             }
         }
         log::info!(
@@ -246,10 +270,54 @@ impl FailoverManager {
     }
 }
 
+/// Replay one retained-fabric partition (step 5 of
+/// [`FailoverManager::failover_with`]): the full history into the
+/// offline store, the tail at or above `cursor` into the promoted
+/// online store, everything forwarded into the new fabric. Returns the
+/// record count merged online. Partitions never share entries, so
+/// running this for different partitions concurrently is safe — order
+/// matters only within one partition, and every sink absorbs
+/// cross-partition interleavings idempotently.
+fn replay_fabric_partition(
+    f: &ReplicationFabric,
+    p: usize,
+    cursor: u64,
+    offline: &OfflineStore,
+    online: &OnlineStore,
+    new_fabric: Option<&Arc<ReplicationFabric>>,
+    now: Timestamp,
+) -> Result<u64> {
+    let mut replayed = 0u64;
+    let mut cur = 0u64;
+    loop {
+        let entries = f.read_tail(p, cur, 256);
+        if entries.is_empty() {
+            return Ok(replayed);
+        }
+        for (off, batch) in entries {
+            offline.merge(&batch.table, &batch.records);
+            if off >= cursor {
+                online.merge(&batch.table, &batch.records, now);
+                replayed += batch.records.len() as u64;
+            }
+            if let Some(nf) = new_fabric {
+                // The new fabric is RAM-backed here, but the append
+                // surface is fallible (durable backings exist):
+                // transient errors retry, persistent ones abort the
+                // failover before promotion claims convergence.
+                retry(&Backoff::default(), || {
+                    nf.append_shared(&batch.table, batch.records.clone(), now)
+                })?;
+            }
+            cur = off + 1;
+        }
+    }
+}
+
 #[cfg(test)]
 mod tests {
     use super::*;
-    use crate::exec::{RetryPolicy, ThreadPool};
+    use crate::exec::RetryPolicy;
     use crate::testkit::TempDir;
     use crate::types::FeatureRecord;
     use crate::util::Clock;
@@ -329,7 +397,7 @@ mod tests {
 
         topology.set_down("eastus", true);
         let promoted = fm
-            .failover_with(&cp, &scheduler(), 4, 900, Some(&fabric), Clock::fixed(900), None)
+            .failover_with(&cp, &scheduler(), 4, 900, Some(&fabric), Clock::fixed(900), None, None)
             .unwrap();
         assert_eq!(promoted.region, "westus");
         // The promoted online store is the replica itself, now holding
@@ -346,6 +414,82 @@ mod tests {
         assert!(nf.regions().is_empty());
         assert_eq!(nf.log_len(), 2, "retained entries forwarded into the new fabric");
         assert!(promoted.replication.is_some());
+    }
+
+    /// Satellite pin for the parallel replay: two identically-built
+    /// fixtures, one replayed sequentially and one fanned out over the
+    /// shared pool, must converge to the same promoted state — same
+    /// offline rows, same Eq. 2 online winners, same forwarded log
+    /// depth. (Cross-partition *order* may differ; final state may not.)
+    #[test]
+    fn parallel_fabric_replay_is_equivalent_to_sequential() {
+        let fixture = || {
+            let topology = Arc::new(GeoTopology::default_four_region());
+            let fm = FailoverManager::new(topology.clone());
+            let offline = OfflineStore::new();
+            offline.merge("t:1", &[FeatureRecord::new(1, 100, 150, vec![1.0])]);
+            let dir = TempDir::new("fo-eq");
+            let cp = fm
+                .checkpoint("eastus", &scheduler(), &offline, dir.path().to_path_buf(), 500)
+                .unwrap();
+            // Batches spread over tables (→ fabric partitions) with an
+            // applied prefix and an unreplicated tail.
+            let westus = Arc::new(OnlineStore::new(2));
+            let fabric =
+                ReplicationFabric::new(4, vec![("westus".into(), westus, 10)], None);
+            for i in 0..24u64 {
+                let table = format!("t:{}", i % 5);
+                let rec =
+                    FeatureRecord::new(i % 7, 100 + i as i64, 200 + i as i64, vec![i as f32]);
+                fabric.append(&table, &[rec], 600).unwrap();
+                if i == 11 {
+                    fabric.pump(700);
+                }
+            }
+            topology.set_down("eastus", true);
+            (fm, cp, fabric, dir)
+        };
+        let (fm_s, cp_s, fab_s, _dir_s) = fixture();
+        let seq = fm_s
+            .failover_with(&cp_s, &scheduler(), 4, 900, Some(&fab_s), Clock::fixed(900), None, None)
+            .unwrap();
+        let (fm_p, cp_p, fab_p, _dir_p) = fixture();
+        let pool = Arc::new(ThreadPool::new(3));
+        let par = fm_p
+            .failover_with(
+                &cp_p,
+                &scheduler(),
+                4,
+                900,
+                Some(&fab_p),
+                Clock::fixed(900),
+                None,
+                Some(&pool),
+            )
+            .unwrap();
+        assert_eq!(par.region, seq.region);
+        for t in 0..5 {
+            let table = format!("t:{t}");
+            assert_eq!(
+                par.offline.row_count(&table),
+                seq.offline.row_count(&table),
+                "offline rows diverge for {table}"
+            );
+            for e in 0..7u64 {
+                let a = seq.online.get(&table, e, 2_000);
+                let b = par.online.get(&table, e, 2_000);
+                assert_eq!(
+                    b.as_ref().map(|r| (r.version(), r.values.to_vec())),
+                    a.as_ref().map(|r| (r.version(), r.values.to_vec())),
+                    "online state diverges for {table} entity {e}"
+                );
+            }
+        }
+        assert_eq!(
+            par.fabric.as_ref().unwrap().log_len(),
+            seq.fabric.as_ref().unwrap().log_len(),
+            "forwarded log depth diverges"
+        );
     }
 
     #[test]

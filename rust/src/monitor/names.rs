@@ -96,6 +96,17 @@ pub const STREAM_WATERMARK_SKEW_SECS: &str = "stream_watermark_skew_secs";
 /// Lag from the slowest partition watermark to the clock (seconds).
 pub const STREAM_WATERMARK_LAG_SECS: &str = "stream_watermark_lag_secs";
 
+// -- durable WAL (storage::wal) --
+
+/// Completed fsyncs issued by the WAL append path (all policies).
+pub const WAL_SYNC_TOTAL: &str = "wal_sync_total";
+/// Frames covered per completed WAL sync — the group-commit
+/// amortization factor (1 under `PerAppend`'s single appends).
+pub const WAL_GROUP_SIZE: &str = "wal_group_size";
+/// Appender-observed wait from staging a frame to its covering sync
+/// completing, in microseconds (group commit only).
+pub const WAL_ACK_WAIT_US: &str = "wal_ack_wait_us";
+
 /// Every constant-named metric above, for completeness assertions.
 /// (Dynamic-suffix names are covered by calling their builders with the
 /// suffixes a given deployment actually uses.)
@@ -120,4 +131,7 @@ pub const ALL_STATIC: &[&str] = &[
     STREAM_RECORDS_EMITTED,
     STREAM_WATERMARK_SKEW_SECS,
     STREAM_WATERMARK_LAG_SECS,
+    WAL_SYNC_TOTAL,
+    WAL_GROUP_SIZE,
+    WAL_ACK_WAIT_US,
 ];

@@ -9,9 +9,13 @@
 //!
 //! Record offset = `base + frame index`, so fragments compose into the
 //! partition's dense offset space without any per-record offset field.
-//! Appends are framed individually and (optionally) fsynced — the fsync
-//! is the **ack point**: a record is durable iff its frame hit stable
-//! storage before the crash.
+//! Frames are checksummed individually but may land in one buffered
+//! write ([`FragmentWriter::append_framed`] — the group-commit path
+//! writes a whole staged batch at once); the fsync is the **ack
+//! point**: a record is durable iff a completed sync covers its frame.
+//! Frames written but not yet covered by a sync are *staged*, not
+//! acked — a failed sync seals the fragment at the covered count so a
+//! staged-only frame can never be recovered as acked.
 //!
 //! Reading distinguishes two cases (see `storage` module docs):
 //!
@@ -82,21 +86,35 @@ impl FragmentWriter {
     /// durable on return.
     pub fn append(&mut self, payload: &[u8], fsync: bool) -> Result<()> {
         let mut frame = Vec::with_capacity(FRAME_HEADER_LEN + payload.len());
-        frame.extend_from_slice(&(payload.len() as u32).to_le_bytes());
-        frame.extend_from_slice(&fnv1a(payload).to_le_bytes());
-        frame.extend_from_slice(payload);
-        self.file.append(&frame)?;
+        encode_frame(&mut frame, payload);
+        self.append_framed(&frame, 1, fsync)
+    }
+
+    /// Append `frames` pre-framed payloads (built with [`encode_frame`])
+    /// in **one** buffered write; with `fsync`, one sync then covers the
+    /// whole batch — the group-commit amortization in a single call.
+    pub fn append_framed(&mut self, buf: &[u8], frames: u64, fsync: bool) -> Result<()> {
+        self.file.append(buf)?;
         if fsync {
             self.file.sync()?;
         }
-        self.bytes += frame.len() as u64;
-        self.count += 1;
+        self.bytes += buf.len() as u64;
+        self.count += frames;
         Ok(())
     }
 
     pub fn sync(&mut self) -> Result<()> {
         self.file.sync()
     }
+}
+
+/// Frame one payload (`len u32 | fnv1a u64 | payload`) into `out`.
+/// Appenders encode off the write path, so the group-commit leader only
+/// concatenates pre-built frames.
+pub fn encode_frame(out: &mut Vec<u8>, payload: &[u8]) {
+    out.extend_from_slice(&(payload.len() as u32).to_le_bytes());
+    out.extend_from_slice(&fnv1a(payload).to_le_bytes());
+    out.extend_from_slice(payload);
 }
 
 /// A fragment's decoded contents.

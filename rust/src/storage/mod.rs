@@ -47,12 +47,20 @@
 //!    manifest; the serving tail is re-derived by replaying the log
 //!    above those cursors — no full segment dump is ever needed.
 //!
-//! The ack invariant: a record is *acked* once its frame is fsynced.
-//! Every acked record is either in a sealed fragment (count covers it)
-//! or in the active fragment's valid prefix — recovery returns all of
-//! them, and nothing below the ack point is lost. Records past the last
-//! ack may or may not survive (at-least-once); downstream sinks are
-//! idempotent.
+//! The ack invariant: a record is *acked* once **a completed sync
+//! covers its frame**. Under [`wal::SyncPolicy::PerAppend`] that sync
+//! is the appender's own per-frame fsync; under
+//! [`wal::SyncPolicy::GroupCommit`] one leader-issued fsync covers a
+//! whole staged batch — the frames share a single buffered write and
+//! the waiters are woken only once the covering sync completes, so the
+//! guarantee is identical and only the sync *rate* changes. Frames
+//! written but not yet covered are *staged*, not acked: a failed sync
+//! seals the fragment at the last covered count, so a staged-only
+//! frame can never be recovered as acked. Every acked record is either
+//! in a sealed fragment (count covers it) or in the active fragment's
+//! valid prefix — recovery returns all of them, and nothing below the
+//! ack point is lost. Records past the last ack may or may not survive
+//! (at-least-once); downstream sinks are idempotent.
 //!
 //! # GC safety argument
 //!
@@ -86,7 +94,7 @@ use crate::util::json::Json;
 pub use gc::{GcDriver, GcStats};
 pub use manifest::{Manifest, ManifestStore, SegmentRef};
 pub use vfs::{atomic_write, RealFs, Vfs};
-pub use wal::{DurableLog, DurableLogOptions, LogRecord, LogSection};
+pub use wal::{DurableLog, DurableLogOptions, LogRecord, LogSection, SyncPolicy};
 
 /// One durable store directory: the manifest chain plus every fragment
 /// and segment file, with a registry of open logs so checkpoint commits

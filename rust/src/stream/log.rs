@@ -250,6 +250,36 @@ impl EventLog {
         self.append(StreamEvent::new(seq, key, ts, value))
     }
 
+    /// Append a batch of events, amortizing the durability ack: events
+    /// are grouped by their routed partition (input order preserved
+    /// within each partition — the only order the log defines) and each
+    /// partition's run goes down as one [`DurableLog::append_many`], so
+    /// a whole ingest call shares a handful of syncs instead of paying
+    /// one per event. On `Err`, events of partitions already flushed
+    /// are acked and the rest are not — the same at-least-once retry
+    /// contract as per-event appends (seq dedupe absorbs replays).
+    pub fn append_many(&self, events: &[StreamEvent]) -> Result<u64> {
+        match &self.backing {
+            Backing::Mem(log) => {
+                for ev in events {
+                    log.append(self.partition_of(&ev.key), ev.clone());
+                }
+            }
+            Backing::Durable(log) => {
+                let mut by_part: Vec<Vec<StreamEvent>> = vec![Vec::new(); self.partitions()];
+                for ev in events {
+                    by_part[self.partition_of(&ev.key)].push(ev.clone());
+                }
+                for (p, batch) in by_part.into_iter().enumerate() {
+                    if !batch.is_empty() {
+                        log.append_many(p, &batch)?;
+                    }
+                }
+            }
+        }
+        Ok(events.len() as u64)
+    }
+
     pub fn high_water(&self, partition: usize) -> u64 {
         self.view().high_water(partition)
     }

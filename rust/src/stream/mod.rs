@@ -359,15 +359,14 @@ impl StreamIngestor {
     /// Append events (key-routed to partitions). Returns the count.
     /// Never sheds — producers that must not lose events use this and
     /// absorb the backlog; front ends facing untrusted producers use
-    /// [`Self::try_ingest`] or [`Self::ingest_blocking`]. On a durable
-    /// log an `Err` means the failing event (and the rest of the batch)
-    /// is **not** acked; re-ingesting the same batch is safe — seq
-    /// dedupe absorbs the already-acked prefix.
+    /// [`Self::try_ingest`] or [`Self::ingest_blocking`]. The batch
+    /// goes down via [`EventLog::append_many`], so on a durable log one
+    /// ingest call shares a sync per touched partition instead of
+    /// paying one per event. An `Err` means at least the failing
+    /// event's partition run is **not** acked; re-ingesting the same
+    /// batch is safe — seq dedupe absorbs the already-acked part.
     pub fn ingest(&self, events: &[StreamEvent]) -> Result<u64> {
-        for ev in events {
-            self.log.append(ev.clone())?;
-        }
-        Ok(events.len() as u64)
+        self.log.append_many(events)
     }
 
     /// Admission-controlled ingest: sheds the whole batch with a typed

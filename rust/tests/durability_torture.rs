@@ -21,6 +21,9 @@
 //!
 //! * `GEOFS_TORTURE_SEED`   — base seed for the crash schedules.
 //! * `GEOFS_TORTURE_POINTS` — crash points per sweep.
+//! * `GEOFS_TORTURE_SYNC`   — WAL sync policy for the sweeps
+//!   (`per_append` default, `group_commit` for the amortized ack
+//!   path); CI runs every seed under both.
 //! * `GEOFS_TORTURE_AUDIT`  — directory to write recovered-state audit
 //!   JSON documents into (uploaded as a CI artifact).
 
@@ -31,7 +34,7 @@ use std::sync::Arc;
 use geofs::config::Config;
 use geofs::coordinator::{DurabilityOptions, FeatureStore, OpenOptions};
 use geofs::metadata::assets::{EntitySpec, FeatureSetSpec, SourceSpec};
-use geofs::storage::{DurableLogOptions, DurableStore, RealFs, Vfs};
+use geofs::storage::{DurableLogOptions, DurableStore, RealFs, SyncPolicy, Vfs};
 use geofs::stream::{StreamConfig, StreamEvent};
 use geofs::testkit::faultfs::{FaultConfig, FaultFs};
 use geofs::testkit::{FixedSource, TempDir};
@@ -43,6 +46,17 @@ use geofs::util::rng::Rng;
 
 fn env_u64(name: &str, default: u64) -> u64 {
     std::env::var(name).ok().and_then(|v| v.parse().ok()).unwrap_or(default)
+}
+
+/// WAL sync policy for the sweeps, from `GEOFS_TORTURE_SYNC`. The crash
+/// contract is policy-independent (acked ⊆ recovered, nothing torn or
+/// invented), so the same sweeps run under both ack protocols; CI's
+/// crash-torture matrix crosses every seed with both values.
+fn torture_sync_policy() -> SyncPolicy {
+    match std::env::var("GEOFS_TORTURE_SYNC").as_deref() {
+        Ok("group_commit") => SyncPolicy::GroupCommit { max_delay_us: 0, max_batch: 8 },
+        _ => SyncPolicy::PerAppend,
+    }
 }
 
 /// Write an audit document into `$GEOFS_TORTURE_AUDIT/<file>` when the
@@ -70,7 +84,12 @@ fn sev(seq: u64) -> StreamEvent {
 /// the injected crash kills the filesystem. Returns the acked appends
 /// `(partition, offset, seq)` and the per-partition truncation floors
 /// the driver explicitly requested.
-fn drive_storage(vfs: Arc<dyn Vfs>, dir: &Path, events: u64) -> (Vec<(usize, u64, u64)>, [u64; 2]) {
+fn drive_storage(
+    vfs: Arc<dyn Vfs>,
+    dir: &Path,
+    events: u64,
+    sync: SyncPolicy,
+) -> (Vec<(usize, u64, u64)>, [u64; 2]) {
     let mut acked = Vec::new();
     let mut floors = [0u64; 2];
     let store = match DurableStore::open(vfs, dir, 0) {
@@ -80,7 +99,7 @@ fn drive_storage(vfs: Arc<dyn Vfs>, dir: &Path, events: u64) -> (Vec<(usize, u64
     let log = match store.open_log::<StreamEvent>(
         "torture",
         2,
-        DurableLogOptions { fragment_max_bytes: 256, ..Default::default() },
+        DurableLogOptions { fragment_max_bytes: 256, sync, ..Default::default() },
     ) {
         Ok(l) => l,
         Err(_) => return (acked, floors),
@@ -155,11 +174,12 @@ fn verify_storage_recovery(dir: &Path, acked: &[(usize, u64, u64)], floors: &[u6
 fn crash_point_sweep_recovers_every_acked_write() {
     let base_seed = env_u64("GEOFS_TORTURE_SEED", 42);
     let points = env_u64("GEOFS_TORTURE_POINTS", 20);
+    let sync = torture_sync_policy();
     // Size the op space with an uncrashed run of the same workload.
     let total_ops = {
         let dir = TempDir::new("torture-dry");
         let fault = FaultFs::new(FaultConfig { seed: base_seed, ..Default::default() });
-        let (acked, _) = drive_storage(fault.clone(), dir.path(), EVENTS);
+        let (acked, _) = drive_storage(fault.clone(), dir.path(), EVENTS, sync);
         assert_eq!(acked.len() as u64, EVENTS, "dry run must ack everything");
         fault.ops()
     };
@@ -174,7 +194,7 @@ fn crash_point_sweep_recovers_every_acked_write() {
             fail_after_ops: Some(crash_at),
             ..Default::default()
         });
-        let (acked, floors) = drive_storage(fault.clone(), dir.path(), EVENTS);
+        let (acked, floors) = drive_storage(fault.clone(), dir.path(), EVENTS, sync);
         last_audit = verify_storage_recovery(dir.path(), &acked, &floors);
         runs.push(Json::obj(vec![
             ("crash_after_ops", Json::num(crash_at as f64)),
@@ -191,6 +211,123 @@ fn crash_point_sweep_recovers_every_acked_write() {
             ("last_recovery_audit", last_audit),
         ]),
     );
+}
+
+/// Group-commit boundary sweep: under `GroupCommit` a staged batch goes
+/// down as one buffered write followed by one covering fsync — two
+/// distinct filesystem ops. Crashing at *every* op in the workload's
+/// opening window (plus sampled points across the rest of the op space)
+/// deterministically lands crashes between the batched write and its
+/// sync — the driver saw no ack, so a staged frame recovered there must
+/// be byte-exact or absent, never invented — and directly after the
+/// sync, before the waiters' wakeup — durable but unacked, which
+/// at-least-once allows recovery to serve as long as it is the real
+/// record. Runs under `GroupCommit` regardless of `GEOFS_TORTURE_SYNC`,
+/// so the amortized path is always crash-tested.
+#[test]
+fn group_commit_crash_sweep_covers_write_sync_boundary() {
+    let base_seed = env_u64("GEOFS_TORTURE_SEED", 42) ^ 0x06c0_0517;
+    let sync = SyncPolicy::GroupCommit { max_delay_us: 0, max_batch: 8 };
+    const GC_EVENTS: u64 = 32;
+    let total_ops = {
+        let dir = TempDir::new("torture-gc-dry");
+        let fault = FaultFs::new(FaultConfig { seed: base_seed, ..Default::default() });
+        let (acked, _) = drive_storage(fault.clone(), dir.path(), GC_EVENTS, sync);
+        assert_eq!(acked.len() as u64, GC_EVENTS, "dry run must ack everything");
+        fault.ops()
+    };
+    // Exhaustive over the opening window (fragment create + manifest
+    // commit + the first several write→fsync pairs), sampled beyond it.
+    let mut points: Vec<u64> = (1..=total_ops.min(40)).collect();
+    let mut rng = Rng::new(base_seed);
+    for _ in 0..env_u64("GEOFS_TORTURE_POINTS", 20).min(24) {
+        points.push(1 + rng.below(total_ops));
+    }
+    for (k, crash_at) in points.into_iter().enumerate() {
+        let dir = TempDir::new("torture-gc-crash");
+        let fault = FaultFs::new(FaultConfig {
+            seed: base_seed.wrapping_add(k as u64 + 1),
+            fail_after_ops: Some(crash_at),
+            ..Default::default()
+        });
+        let (acked, floors) = drive_storage(fault.clone(), dir.path(), GC_EVENTS, sync);
+        verify_storage_recovery(dir.path(), &acked, &floors);
+    }
+}
+
+/// Concurrent group-commit appenders racing a crash: each thread keeps
+/// its own acked `(offset, seq)` list, and recovery must serve every
+/// one of them byte-exact at that offset — a waiter woken before its
+/// covering sync completed would surface here as a lost ack.
+#[test]
+fn group_commit_concurrent_appenders_crash_recovers_every_ack() {
+    let base_seed = env_u64("GEOFS_TORTURE_SEED", 42) ^ 0x0acc_ed00;
+    const THREADS: usize = 4;
+    const PER_THREAD: u64 = 24;
+    let opts = || DurableLogOptions {
+        fragment_max_bytes: 256,
+        sync: SyncPolicy::GroupCommit { max_delay_us: 200, max_batch: 0 },
+        ..Default::default()
+    };
+    let drive = |vfs: Arc<dyn Vfs>, dir: &Path| -> Vec<(u64, u64)> {
+        let Ok(store) = DurableStore::open(vfs, dir, 0) else { return Vec::new() };
+        let Ok(log) = store.open_log::<StreamEvent>("torture", 1, opts()) else {
+            return Vec::new();
+        };
+        let handles: Vec<_> = (0..THREADS)
+            .map(|t| {
+                let log = log.clone();
+                std::thread::spawn(move || {
+                    let mut acked = Vec::new();
+                    for i in 0..PER_THREAD {
+                        let seq = (t as u64) * 1000 + i;
+                        match log.append(0, sev(seq)) {
+                            Ok(off) => acked.push((off, seq)),
+                            Err(_) => break,
+                        }
+                    }
+                    acked
+                })
+            })
+            .collect();
+        handles.into_iter().flat_map(|h| h.join().unwrap()).collect()
+    };
+    // Size the op space with an uncrashed concurrent run.
+    let total_ops = {
+        let dir = TempDir::new("torture-gcc-dry");
+        let fault = FaultFs::new(FaultConfig { seed: base_seed, ..Default::default() });
+        let acked = drive(fault.clone(), dir.path());
+        assert_eq!(acked.len(), THREADS * PER_THREAD as usize, "dry run must ack everything");
+        fault.ops()
+    };
+    let mut rng = Rng::new(base_seed);
+    for k in 0..6u64 {
+        let crash_at = 1 + rng.below(total_ops);
+        let dir = TempDir::new("torture-gcc");
+        let fault = FaultFs::new(FaultConfig {
+            seed: base_seed.wrapping_add(k + 1),
+            fail_after_ops: Some(crash_at),
+            ..Default::default()
+        });
+        let acked = drive(fault.clone(), dir.path());
+        let store = DurableStore::open(Arc::new(RealFs), dir.path(), 1)
+            .expect("recovery after a crash must succeed");
+        let log = store
+            .open_log::<StreamEvent>("torture", 1, DurableLogOptions::default())
+            .expect("crash recovery must never fail closed");
+        let mut by_off = HashMap::new();
+        for (off, e) in log.mem().read_from(0, 0, usize::MAX) {
+            assert_eq!(e, sev(e.seq), "recovered record is not an appended one");
+            by_off.insert(off, e.seq);
+        }
+        for (off, seq) in &acked {
+            assert_eq!(
+                by_off.get(off),
+                Some(seq),
+                "acked concurrent write lost or misplaced: off {off} seq {seq}"
+            );
+        }
+    }
 }
 
 // ------------------------------------------- corruption (not crashes)
@@ -351,7 +488,7 @@ fn coord_fixture(vfs: Arc<dyn Vfs>, dir: &Path) -> Result<(Arc<FeatureStore>, St
         dir: dir.to_path_buf(),
         fs: vfs,
         fragment_max_bytes: 512,
-        fsync_every_append: true,
+        sync: torture_sync_policy(),
         gc_period: None,
     };
     let fs = FeatureStore::open(

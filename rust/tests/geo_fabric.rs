@@ -369,6 +369,10 @@ fn failover_under_replication_loses_no_acked_write() {
     topology.set_down("eastus", true);
 
     let clock = Clock::fixed(100);
+    // Replay fanned out over the shared pool — the stress path runs the
+    // parallel replay end to end (equivalence vs sequential is pinned
+    // separately in geo::failover's unit tests).
+    let replay_pool = Arc::new(ThreadPool::new(3));
     let promoted = fm
         .failover_with(
             cp.as_ref().unwrap(),
@@ -378,6 +382,7 @@ fn failover_under_replication_loses_no_acked_write() {
             Some(&fabric),
             clock.clone(),
             Some(metrics.clone()),
+            Some(&replay_pool),
         )
         .unwrap();
     assert_eq!(promoted.region, "westus");
@@ -488,7 +493,7 @@ fn truncation_respects_checkpoint_floor_across_crash_restore() {
     topology.set_down("eastus", true);
     let clock = Clock::fixed(100);
     let promoted = fm
-        .failover_with(&cp, &sched(100), 2, 100, Some(&fabric), clock, Some(metrics.clone()))
+        .failover_with(&cp, &sched(100), 2, 100, Some(&fabric), clock, Some(metrics.clone()), None)
         .unwrap();
     assert_eq!(promoted.region, "westus");
     let got = promoted.online.get(table, 7, 1_000).expect("post-checkpoint write survives crash");

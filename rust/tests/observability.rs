@@ -16,7 +16,8 @@
 use std::time::{Duration, Instant};
 
 use geofs::config::Config;
-use geofs::coordinator::{FeatureStore, OpenOptions};
+use geofs::coordinator::{DurabilityOptions, FeatureStore, OpenOptions};
+use geofs::testkit::TempDir;
 use geofs::monitor::names;
 use geofs::monitor::sweeper::sweep_once;
 use geofs::monitor::trace::TraceConfig;
@@ -43,11 +44,15 @@ fn wait_until(deadline: Duration, mut cond: impl FnMut() -> bool) -> bool {
 #[test]
 fn export_covers_every_published_metric() {
     let days: i64 = 3;
+    let dir = TempDir::new("obs-durable");
     let fs = FeatureStore::open(
         Config::default_geo(),
         OpenOptions {
             with_engine: false,
             geo_replication: true,
+            // Durability on, so the WAL series (wal_sync_total,
+            // wal_group_size, wal_ack_wait_us) register and export.
+            durability: Some(DurabilityOptions::at(dir.path())),
             // Finite tenant budget with a trickle refill: the first
             // few batches are admitted, then the gate sheds.
             admission: Some(AdmissionConfig {
